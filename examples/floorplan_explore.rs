@@ -1,0 +1,64 @@
+//! Floorplan exploration (§4.2 / Figure 12): sweep the per-slot
+//! utilization ceiling on the LLaMA2 design and print the congestion /
+//! wirelength / frequency trade-off — the paper's "standalone RIR plugin
+//! in 207 lines of Python", as a library call here.
+//!
+//! ```sh
+//! cargo run --release --example floorplan_explore [-- device]
+//! ```
+
+use rsir::coordinator::explore;
+use rsir::coordinator::flow::FlowConfig;
+use rsir::device::builtin;
+use rsir::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let device = std::env::args().nth(1).unwrap_or_else(|| "vhk158".into());
+    let dev = builtin::by_name(&device)?;
+    let g = rsir::designs::llama2::generate(&Default::default())?;
+    let cfg = FlowConfig {
+        sa_refine: true,
+        ..Default::default()
+    };
+    println!("exploring {} floorplans of llama2 on {device}...", explore::default_limits().len());
+    let rows = explore::explore(&g.design, &dev, &explore::default_limits(), &cfg)?;
+
+    let mut t = Table::new(&["util_limit", "max_slot_util", "wirelength", "Fmax (MHz)"]);
+    for r in &rows {
+        t.row(&[
+            format!("{:.2}", r.util_limit),
+            if r.max_slot_util.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.2}", r.max_slot_util)
+            },
+            if r.wirelength.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.0}", r.wirelength)
+            },
+            if r.routable {
+                format!("{:.0}", r.fmax_mhz)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+    let corr = explore::tradeoff_correlation(&rows);
+    println!(
+        "util_limit vs wirelength correlation: {corr:.2} \
+         (negative = packing tighter shortens wires, the Fig 12 trade-off)"
+    );
+    let best = rows
+        .iter()
+        .filter(|r| r.routable)
+        .max_by(|a, b| a.fmax_mhz.partial_cmp(&b.fmax_mhz).unwrap());
+    if let Some(b) = best {
+        println!(
+            "best floorplan: util_limit {:.2} -> {:.0} MHz",
+            b.util_limit, b.fmax_mhz
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Parallel synthesis (§4.3 / Figure 13): floorplan a CNN systolic array,
+//! then synthesize the slot groups in parallel and compare wall time
+//! against the monolithic flow.
+//!
+//! ```sh
+//! cargo run --release --example parallel_synth [-- 13x8]
+//! ```
+
+use rsir::coordinator::flow::{run_hlps, FlowConfig};
+use rsir::coordinator::parallel_synth;
+use rsir::designs::cnn::{self, CnnConfig};
+use rsir::device::builtin;
+use rsir::eda::SynthTimeModel;
+
+fn main() -> anyhow::Result<()> {
+    let dims = std::env::args().nth(1).unwrap_or_else(|| "13x8".into());
+    let (r, c) = dims.split_once('x').expect("dims like 13x8");
+    let cfg = CnnConfig {
+        rows: r.parse()?,
+        cols: c.parse()?,
+    };
+    let dev = builtin::by_name("u250")?;
+    println!("floorplanning cnn_{dims} on u250...");
+    let g = cnn::generate(&cfg)?;
+    let mut design = g.design;
+    run_hlps(
+        &mut design,
+        &dev,
+        &FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        },
+    )?;
+
+    // The modeled scenario assumes an 8-job vendor farm (the paper ran
+    // slot syntheses concurrently); the measured numbers use however many
+    // cores this host actually has.
+    let workers = 8usize.max(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    let rep = parallel_synth::run(&design, &dev, workers, &SynthTimeModel::default())?;
+    println!("slot groups: {}", rep.groups.len());
+    for (i, gres) in rep.groups.iter().enumerate() {
+        println!("  group {i}: {:.0} kLUT, {:.0} DSP", gres.lut / 1000.0, gres.dsp);
+    }
+    println!(
+        "modeled vendor wall time: monolithic {:.0} s, parallel {:.0} s -> {:.2}x speedup (paper avg: 2.49x)",
+        rep.modeled_monolithic_s, rep.modeled_parallel_s, rep.modeled_speedup
+    );
+    println!(
+        "measured surrogate-synthesis wall time: sequential {:?}, {}-thread parallel {:?}",
+        rep.measured_sequential, rep.workers, rep.measured_parallel
+    );
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Quickstart: import a small mixed Verilog design, run the full HLPS
+//! flow on an Alveo U280, and print before/after frequency.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use rsir::coordinator::flow::{run_hlps, FlowConfig};
+use rsir::device::builtin;
+use rsir::ir::core::{Interface, Resources};
+use rsir::plugins;
+
+fn main() -> anyhow::Result<()> {
+    // A producer -> consumer design, written as plain Verilog.
+    // Interfaces come from pragma comments; resources are set explicitly
+    // (standing in for an HLS report).
+    let producer = r#"
+module Producer (
+  input  wire ap_clk, input wire ap_rst_n,
+  output wire [63:0] o, output wire o_vld, input wire o_rdy
+);
+// pragma clock port=ap_clk
+// pragma reset port=ap_rst_n active=low
+// pragma handshake pattern=o{role} role.valid=_vld role.ready=_rdy role.data=.*
+  reg [63:0] counter;
+  always @(posedge ap_clk) if (o_rdy) counter <= counter + 1;
+  assign o = counter;
+  assign o_vld = 1'b1;
+endmodule
+"#;
+    let consumer = r#"
+module Consumer (
+  input  wire ap_clk, input wire ap_rst_n,
+  input  wire [63:0] i, input wire i_vld, output wire i_rdy
+);
+// pragma clock port=ap_clk
+// pragma reset port=ap_rst_n active=low
+// pragma handshake pattern=i{role} role.valid=_vld role.ready=_rdy role.data=.*
+  reg [63:0] acc;
+  always @(posedge ap_clk) if (i_vld) acc <= acc + i;
+  assign i_rdy = 1'b1;
+endmodule
+"#;
+    let filter = r#"
+module Filter (
+  input  wire ap_clk, input wire ap_rst_n,
+  input  wire [63:0] i, input wire i_vld, output wire i_rdy,
+  output wire [63:0] o, output wire o_vld, input wire o_rdy
+);
+// pragma clock port=ap_clk
+// pragma reset port=ap_rst_n active=low
+// pragma handshake pattern=i{role} role.valid=_vld role.ready=_rdy role.data=.*
+// pragma handshake pattern=o{role} role.valid=_vld role.ready=_rdy role.data=.*
+  assign o = i ^ 64'hA5A5;
+  assign o_vld = i_vld;
+  assign i_rdy = o_rdy;
+endmodule
+"#;
+    let top = r#"
+module QuickTop (input wire ap_clk, input wire ap_rst_n);
+  wire [63:0] d; wire d_v; wire d_r;
+  wire [63:0] e; wire e_v; wire e_r;
+  Producer p (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+              .o(d), .o_vld(d_v), .o_rdy(d_r));
+  Filter f (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+            .i(d), .i_vld(d_v), .i_rdy(d_r),
+            .o(e), .o_vld(e_v), .o_rdy(e_r));
+  Consumer c (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+              .i(e), .i_vld(e_v), .i_rdy(e_r));
+endmodule
+"#;
+
+    // 1. Import (pragmas are applied automatically).
+    let mut design = plugins::import_design("QuickTop", &[producer, filter, consumer, top])?;
+    design.module_mut("QuickTop").unwrap().interfaces.extend([
+        Interface::Clock {
+            port: "ap_clk".into(),
+        },
+        Interface::Reset {
+            port: "ap_rst_n".into(),
+            active_high: false,
+        },
+    ]);
+    // Pretend these are large kernels so the floorplanner has work to do.
+    for (m, lut) in [
+        ("Producer", 150_000.0),
+        ("Filter", 150_000.0),
+        ("Consumer", 150_000.0),
+    ] {
+        rsir::ir::builder::set_module_resources(
+            design.module_mut(m).unwrap(),
+            Resources::new(lut, lut, 64.0, 256.0, 16.0),
+        );
+        let mut t = rsir::util::json::JsonObj::new();
+        t.insert("internal_ns", rsir::util::json::Json::num(3.0));
+        design
+            .module_mut(m)
+            .unwrap()
+            .metadata
+            .insert("timing", rsir::util::json::Json::Obj(t));
+    }
+
+    // 2. Run the four-stage HLPS flow.
+    let dev = builtin::by_name("u280")?;
+    let report = run_hlps(&mut design, &dev, &FlowConfig::default())?;
+
+    // 3. Results.
+    match report.baseline_fmax() {
+        Some(f) => println!("baseline (vendor-only):   {f:.0} MHz"),
+        None => println!("baseline (vendor-only):   unroutable"),
+    }
+    println!(
+        "RapidStream IR optimized: {:.0} MHz  ({} partitions, {} relay stations)",
+        report.optimized.fmax_mhz(),
+        report.partitions,
+        report.relay_stations
+    );
+
+    // 4. Export the optimized design (Verilog + XDC floorplan).
+    let bundle = plugins::export(&design)?;
+    let out = std::path::Path::new("target/quickstart_out");
+    bundle.write_to_dir(out)?;
+    println!("exported {} files to {}", bundle.files.len(), out.display());
+    Ok(())
+}

@@ -1,0 +1,69 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT `lowered.compile()`/`.serialize()`) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+One artifact per (B, M, S) shape bucket; the Rust evaluator pads the
+problem into the nearest bucket (padding is cost-neutral by
+construction: zero connectivity rows, zero resources, slot-0 one-hot).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (batch, units, slots): S=8 covers every built-in device (6-slot boards
+# pad to 8); M buckets cover CNN-13x12-scale problems after coarsening.
+BUCKETS = [
+    (256, 32, 8),
+    (256, 64, 8),
+    (256, 128, 8),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(b, m, s):
+    fn = lambda *args: model.score(*args, interpret=True)
+    return jax.jit(fn).lower(*model.example_args(b, m, s))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"kernel": "floorplan_cost", "buckets": []}
+    for b, m, s in BUCKETS:
+        text = to_hlo_text(lower_bucket(b, m, s))
+        name = f"floorplan_cost_b{b}_m{m}_s{s}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append(
+            {"file": name, "batch": b, "units": m, "slots": s, "kinds": 5}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: batched floorplan-candidate cost evaluation.
+
+The compute hot-spot of RapidStream IR's floorplan exploration: the
+simulated-annealing explorer proposes hundreds of candidate module→slot
+assignments per step and needs them all scored. Per candidate the score
+is two MXU matmul chains:
+
+    wirelength = 0.5 * sum((C @ A) * (A @ D))      # C: M*M, A: M*S, D: S*S
+    usage      = A^T @ R                           # S*K resource histogram
+    cost       = wirelength + lam * sum(relu(usage - caps)^2)
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the grid walks the batch
+dimension; each grid step holds one (BT, M, S) tile of assignments plus
+the shared C/D/R/caps operands in VMEM. The shared operands use constant
+index maps, so Mosaic keeps them resident across grid steps while the
+assignment tiles stream HBM->VMEM (double-buffered by the pipeline).
+`interpret=True` is REQUIRED on this image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_KINDS = 5
+# Batch-tile: 64 candidates per grid step keeps worst-case VMEM (M=128,
+# S=8) around 2 MiB while still feeding the MXU wide batched matmuls.
+DEFAULT_BLOCK_B = 64
+
+
+def _kernel(a_ref, c_ref, d_ref, r_ref, caps_ref, lam_ref, o_ref):
+    a = a_ref[...]          # (BT, M, S)
+    c = c_ref[...]          # (M, M)
+    d = d_ref[...]          # (S, S)
+    r = r_ref[...]          # (M, K)
+    caps = caps_ref[...]    # (S, K)
+    lam = lam_ref[0]
+
+    # (M,M) x (BT,M,S) -> (BT,M,S): one batched MXU contraction.
+    ca = jax.lax.dot_general(
+        c, a, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (M, BT, S)
+    ca = jnp.transpose(ca, (1, 0, 2))
+    # (BT,M,S) x (S,S) -> (BT,M,S)
+    ad = jax.lax.dot_general(
+        a, d, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    wirelength = 0.5 * jnp.sum(ca * ad, axis=(1, 2))
+
+    # usage[b,s,k] = sum_m a[b,m,s] * r[m,k]
+    usage = jax.lax.dot_general(
+        a, r, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (BT, S, K)
+    over = jnp.maximum(usage - caps[None, :, :], 0.0)
+    penalty = jnp.sum(over * over, axis=(1, 2))
+
+    o_ref[...] = wirelength + lam * penalty
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def floorplan_cost(a, c, d, r, caps, lam, *, block_b=DEFAULT_BLOCK_B, interpret=True):
+    """Batched floorplan cost via a Pallas kernel.
+
+    Shapes: a f32[B,M,S], c f32[M,M], d f32[S,S], r f32[M,K],
+    caps f32[S,K], lam f32[1] -> f32[B]. B must divide by block_b.
+    """
+    b, m, s = a.shape
+    k = r.shape[1]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, m, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((s, k), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(a, c, d, r, caps, lam)
+
+
+def vmem_bytes(block_b, m, s, k=NUM_KINDS):
+    """Estimated VMEM footprint of one grid step (f32), for the §Perf
+    roofline discussion in DESIGN.md/EXPERIMENTS.md."""
+    tile_a = block_b * m * s
+    shared = m * m + s * s + m * k + s * k + 1
+    scratch = 2 * block_b * m * s + block_b * s * k + block_b
+    return 4 * (tile_a + shared + scratch)

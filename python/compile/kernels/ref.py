@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the floorplan-cost kernel.
+
+This is the CORE correctness reference: the Pallas kernel
+(`floorplan_cost.py`), this module, and the Rust CPU oracle
+(`rust/src/floorplan/cost.rs`) all implement the identical contract:
+
+    inputs  A    [B, M, S]  one-hot assignment batch (f32)
+            C    [M, M]     symmetric connectivity, zero diagonal
+            D    [S, S]     slot distance (manhattan + die_w * crossings)
+            R    [M, K]     unit resources, K = 5
+            caps [S, K]     slot capacity * util_limit
+            lam  [1]        overflow penalty weight
+    output  cost [B] = 0.5 * sum((C@A) * (A@D), axis=(1,2))
+                       + lam * sum(relu(A^T R - caps)^2, axis=(1,2))
+
+The wirelength identity: sum_ij C[i,j] * (A D A^T)[i,j]
+                       = sum((C@A) * (A@D)) elementwise.
+"""
+
+import jax.numpy as jnp
+
+NUM_KINDS = 5
+
+
+def floorplan_cost_ref(a, c, d, r, caps, lam):
+    """Reference batched floorplan cost.
+
+    Args:
+      a:    f32[B, M, S] one-hot assignments.
+      c:    f32[M, M] connectivity.
+      d:    f32[S, S] slot distances.
+      r:    f32[M, K] resources.
+      caps: f32[S, K] capacities (already scaled by the util limit).
+      lam:  f32[1] penalty weight.
+
+    Returns:
+      f32[B] per-candidate cost.
+    """
+    ca = jnp.einsum("ij,bjs->bis", c, a)
+    ad = jnp.einsum("bms,st->bmt", a, d)
+    wirelength = 0.5 * jnp.sum(ca * ad, axis=(1, 2))
+    usage = jnp.einsum("bms,mk->bsk", a, r)
+    over = jnp.maximum(usage - caps[None, :, :], 0.0)
+    penalty = jnp.sum(over * over, axis=(1, 2))
+    return wirelength + lam[0] * penalty
+
+
+def cost_scalar_ref(assignment, c, d, r, caps, lam):
+    """Direct (non-matmul) scalar formula for one candidate - used to
+    validate the matmul identity itself."""
+    m = c.shape[0]
+    wl = 0.0
+    for i in range(m):
+        for j in range(i + 1, m):
+            if c[i, j] != 0:
+                wl += c[i, j] * d[assignment[i], assignment[j]]
+    s, k = caps.shape
+    usage = jnp.zeros((s, k))
+    for i, slot in enumerate(assignment):
+        usage = usage.at[slot].add(r[i])
+    over = jnp.maximum(usage - caps, 0.0)
+    return wl + lam[0] * jnp.sum(over * over)

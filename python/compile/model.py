@@ -1,0 +1,50 @@
+"""L2 JAX model: the floorplan scoring computation graph.
+
+Wraps the L1 Pallas kernel (`kernels.floorplan_cost`) with the reduction
+the coordinator wants on-device: per-candidate costs plus the batch
+argmin, so the PJRT round trip returns both the full score vector (for
+per-chain Metropolis updates) and the global winner without a second
+device call.
+
+Build-time only: `aot.py` lowers `score` to HLO text once per shape
+bucket; the Rust runtime executes the artifacts. Python is never on the
+request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.floorplan_cost import floorplan_cost
+from compile.kernels.ref import floorplan_cost_ref
+
+
+def score(a, c, d, r, caps, lam, *, interpret=True):
+    """Full L2 graph: kernel costs + on-device argmin.
+
+    Returns (costs f32[B], best_idx i32[1], best_cost f32[1]).
+    """
+    block_b = min(64, a.shape[0])
+    costs = floorplan_cost(a, c, d, r, caps, lam, block_b=block_b, interpret=interpret)
+    best_idx = jnp.argmin(costs).astype(jnp.int32)
+    best_cost = costs[best_idx]
+    return costs, best_idx[None], best_cost[None]
+
+
+def score_ref(a, c, d, r, caps, lam):
+    """Same graph over the pure-jnp oracle (shape/semantics check)."""
+    costs = floorplan_cost_ref(a, c, d, r, caps, lam)
+    best_idx = jnp.argmin(costs).astype(jnp.int32)
+    return costs, best_idx[None], costs[best_idx][None]
+
+
+def example_args(b, m, s, k=5):
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((b, m, s), f32),
+        jax.ShapeDtypeStruct((m, m), f32),
+        jax.ShapeDtypeStruct((s, s), f32),
+        jax.ShapeDtypeStruct((m, k), f32),
+        jax.ShapeDtypeStruct((s, k), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )

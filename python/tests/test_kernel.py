@@ -1,0 +1,117 @@
+"""Pallas kernel vs pure-jnp oracle - the core correctness signal,
+including a hypothesis sweep over shapes and random inputs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.floorplan_cost import floorplan_cost, vmem_bytes
+from compile.kernels.ref import cost_scalar_ref, floorplan_cost_ref
+
+
+def make_inputs(rng, b, m, s, k=5, overflow=False):
+    """Random problem instance with realistic magnitudes."""
+    # symmetric connectivity with zero diagonal
+    c = rng.integers(0, 4, size=(m, m)).astype(np.float32) * 32.0
+    c = np.triu(c, 1)
+    c = c + c.T
+    d = rng.uniform(0.0, 10.0, size=(s, s)).astype(np.float32)
+    d = (d + d.T) / 2.0
+    np.fill_diagonal(d, 0.0)
+    r = rng.uniform(0.0, 5000.0, size=(m, k)).astype(np.float32)
+    cap_scale = 0.5 if overflow else 50.0
+    caps = (rng.uniform(0.5, 1.0, size=(s, k)) * m * 5000.0 * cap_scale / s).astype(
+        np.float32
+    )
+    assign = rng.integers(0, s, size=(b, m))
+    a = np.zeros((b, m, s), dtype=np.float32)
+    for bi in range(b):
+        a[bi, np.arange(m), assign[bi]] = 1.0
+    lam = np.array([1e-4], dtype=np.float32)
+    return a, c, d, r, caps, lam, assign
+
+
+def test_kernel_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    a, c, d, r, caps, lam, _ = make_inputs(rng, 64, 16, 8)
+    got = floorplan_cost(a, c, d, r, caps, lam, block_b=32)
+    want = floorplan_cost_ref(a, c, d, r, caps, lam)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_kernel_matches_ref_with_overflow():
+    rng = np.random.default_rng(1)
+    a, c, d, r, caps, lam, _ = make_inputs(rng, 64, 24, 8, overflow=True)
+    got = floorplan_cost(a, c, d, r, caps, lam, block_b=64)
+    want = floorplan_cost_ref(a, c, d, r, caps, lam)
+    assert np.all(np.asarray(want) > 0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_matmul_identity_vs_scalar_formula():
+    """The (C@A)*(A@D) identity equals the direct double loop."""
+    rng = np.random.default_rng(2)
+    a, c, d, r, caps, lam, assign = make_inputs(rng, 4, 10, 6)
+    batched = np.asarray(floorplan_cost_ref(a, c, d, r, caps, lam))
+    for bi in range(4):
+        scalar = float(cost_scalar_ref(assign[bi], c, d, r, caps, lam))
+        np.testing.assert_allclose(batched[bi], scalar, rtol=1e-5, atol=1e-2)
+
+
+def test_grid_tiling_invariance():
+    """Different block_b values must give identical results."""
+    rng = np.random.default_rng(3)
+    a, c, d, r, caps, lam, _ = make_inputs(rng, 128, 16, 8)
+    r1 = np.asarray(floorplan_cost(a, c, d, r, caps, lam, block_b=32))
+    r2 = np.asarray(floorplan_cost(a, c, d, r, caps, lam, block_b=128))
+    np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+def test_batch_not_divisible_raises():
+    rng = np.random.default_rng(4)
+    a, c, d, r, caps, lam, _ = make_inputs(rng, 65, 8, 8)
+    with pytest.raises(ValueError):
+        floorplan_cost(a, c, d, r, caps, lam, block_b=64)
+
+
+def test_padding_neutrality():
+    """Padded units (zero connectivity/resources, slot-0 one-hot) must
+    not change the cost - the Rust evaluator relies on this."""
+    rng = np.random.default_rng(5)
+    a, c, d, r, caps, lam, _ = make_inputs(rng, 32, 12, 8)
+    base = np.asarray(floorplan_cost(a, c, d, r, caps, lam, block_b=32))
+    m_pad = 16
+    a2 = np.zeros((32, m_pad, 8), dtype=np.float32)
+    a2[:, :12] = a
+    a2[:, 12:, 0] = 1.0  # padded units parked in slot 0
+    c2 = np.zeros((m_pad, m_pad), dtype=np.float32)
+    c2[:12, :12] = c
+    r2 = np.zeros((m_pad, 5), dtype=np.float32)
+    r2[:12] = r
+    padded = np.asarray(floorplan_cost(a2, c2, d, r2, caps, lam, block_b=32))
+    np.testing.assert_allclose(base, padded, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(1, 3),
+    m=st.integers(2, 24),
+    s=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    overflow=st.booleans(),
+)
+def test_kernel_matches_ref_hypothesis(b_tiles, m, s, seed, overflow):
+    """Hypothesis sweep: shapes x random inputs x overflow regimes."""
+    rng = np.random.default_rng(seed)
+    b = 16 * b_tiles
+    a, c, d, r, caps, lam, _ = make_inputs(rng, b, m, s, overflow=overflow)
+    got = np.asarray(floorplan_cost(a, c, d, r, caps, lam, block_b=16))
+    want = np.asarray(floorplan_cost_ref(a, c, d, r, caps, lam))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=0.5)
+
+
+def test_vmem_budget():
+    """Worst-case bucket stays within a 16 MiB VMEM budget (SPerf)."""
+    assert vmem_bytes(64, 128, 8) < 16 * 2**20

@@ -1,0 +1,64 @@
+"""L2 model: on-device argmin reduction + AOT lowering shape checks."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from tests.test_kernel import make_inputs
+
+
+def test_score_returns_argmin():
+    rng = np.random.default_rng(7)
+    a, c, d, r, caps, lam, _ = make_inputs(rng, 64, 16, 8)
+    costs, best_idx, best_cost = model.score(a, c, d, r, caps, lam)
+    costs = np.asarray(costs)
+    assert costs.shape == (64,)
+    assert int(best_idx[0]) == int(np.argmin(costs))
+    np.testing.assert_allclose(best_cost[0], costs.min(), rtol=1e-6)
+
+
+def test_score_matches_score_ref():
+    rng = np.random.default_rng(8)
+    a, c, d, r, caps, lam, _ = make_inputs(rng, 64, 12, 6)
+    got, gi, gc = model.score(a, c, d, r, caps, lam)
+    want, wi, wc = model.score_ref(a, c, d, r, caps, lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-2)
+    assert int(gi[0]) == int(wi[0])
+
+
+def test_lowering_produces_hlo_text():
+    lowered = aot.lower_bucket(64, 32, 8)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # 3 outputs in a tuple: costs, best_idx, best_cost
+    assert "ROOT" in text
+
+
+def test_buckets_cover_builtin_devices():
+    # S=8 covers every built-in board (max 8 slots); M up to 128 covers
+    # coarsened problems (max_units default 24, generous headroom).
+    assert all(s == 8 for _, _, s in aot.BUCKETS)
+    assert max(m for _, m, _ in aot.BUCKETS) >= 128
+
+
+def test_aot_writes_artifacts(tmp_path):
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path)]
+    try:
+        # Patch buckets to one small one to keep the test fast.
+        orig = aot.BUCKETS
+        aot.BUCKETS = [(32, 16, 8)]
+        aot.main()
+        aot.BUCKETS = orig
+    finally:
+        sys.argv = argv
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["kernel"] == "floorplan_cost"
+    f = tmp_path / man["buckets"][0]["file"]
+    assert f.exists()
+    assert "HloModule" in f.read_text()[:200]

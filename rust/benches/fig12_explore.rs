@@ -1,0 +1,63 @@
+//! Bench: regenerate **Figure 12** — ten floorplans of the LLM design on
+//! the VHK158, reporting the trade-off between resource distribution
+//! (most-congested-slot utilization), total wirelength, and frequency.
+//!
+//! Shape expectations: tighter utilization limits spread the design
+//! (lower congestion, longer wires), looser limits pack it (shorter
+//! wires, more congestion); frequency varies across the sweep (the paper
+//! observes up to ~20 MHz between trade-off points).
+
+use rsir::coordinator::explore;
+use rsir::coordinator::flow::FlowConfig;
+use rsir::device::builtin;
+use rsir::util::bench::Table;
+use std::time::Instant;
+
+fn main() {
+    let dev = builtin::by_name("vhk158").unwrap();
+    let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
+    let cfg = FlowConfig::default();
+    let limits = explore::default_limits();
+
+    let t0 = Instant::now();
+    let rows = explore::explore(&g.design, &dev, &limits, &cfg).unwrap();
+    let elapsed = t0.elapsed();
+
+    let mut t = Table::new(&["util_limit", "max_slot_util", "wirelength", "Fmax (MHz)"]);
+    for r in &rows {
+        t.row(&[
+            format!("{:.2}", r.util_limit),
+            if r.max_slot_util.is_finite() {
+                format!("{:.2}", r.max_slot_util)
+            } else {
+                "-".into()
+            },
+            if r.wirelength.is_finite() {
+                format!("{:.0}", r.wirelength)
+            } else {
+                "-".into()
+            },
+            if r.routable {
+                format!("{:.0}", r.fmax_mhz)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.print();
+
+    let routable: Vec<_> = rows.iter().filter(|r| r.routable).collect();
+    let fmaxes: Vec<f64> = routable.iter().map(|r| r.fmax_mhz).collect();
+    let spread = fmaxes.iter().cloned().fold(f64::MIN, f64::max)
+        - fmaxes.iter().cloned().fold(f64::MAX, f64::min);
+    let corr = explore::tradeoff_correlation(&rows);
+    println!("\n{} of {} floorplans routable", routable.len(), rows.len());
+    println!("frequency spread across trade-off points: {spread:.0} MHz (paper: up to ~20 MHz)");
+    println!("util_limit vs wirelength correlation: {corr:.2} (negative = the Fig 12 trade-off)");
+    println!("wall time: {elapsed:?} for {} flows", rows.len());
+    let check = |cond: bool, msg: &str| {
+        println!("[{}] {msg}", if cond { "ok" } else { "MISS" });
+    };
+    check(routable.len() >= 7, "most trade-off points routable");
+    check(corr < 0.0, "packing tighter shortens wires");
+}

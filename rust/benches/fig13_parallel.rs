@@ -1,0 +1,69 @@
+//! Bench: regenerate **Figure 13** — synthesis wall time, monolithic vs
+//! per-slot parallel, for CNN systolic arrays 13x4 … 13x12 on the U250.
+//!
+//! Two layers of numbers:
+//! * the modeled vendor wall times (the Figure 13 bars; paper average
+//!   speedup 2.49x, growing with array size);
+//! * measured wall time of actually running our synthesis surrogate
+//!   sequentially vs on threads (the plugin's parallelism is real).
+
+use rsir::coordinator::flow::{run_hlps, FlowConfig};
+use rsir::coordinator::parallel_synth;
+use rsir::designs::cnn::{self, CnnConfig};
+use rsir::device::builtin;
+use rsir::eda::SynthTimeModel;
+use rsir::util::bench::Table;
+use std::time::Instant;
+
+fn main() {
+    let dev = builtin::by_name("u250").unwrap();
+    let model = SynthTimeModel::default();
+    let workers = 8;
+    let mut t = Table::new(&[
+        "CNN",
+        "Groups",
+        "Monolithic (s)",
+        "Parallel (s)",
+        "Speedup",
+        "Measured seq",
+        "Measured par",
+    ]);
+    let mut speedups = Vec::new();
+    let t0 = Instant::now();
+    for cols in [4usize, 6, 8, 10, 12] {
+        let g = cnn::generate(&CnnConfig { rows: 13, cols }).unwrap();
+        let mut d = g.design;
+        run_hlps(
+            &mut d,
+            &dev,
+            &FlowConfig {
+                sa_refine: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rep = parallel_synth::run(&d, &dev, workers, &model).unwrap();
+        speedups.push(rep.modeled_speedup);
+        t.row(&[
+            format!("13x{cols}"),
+            rep.groups.len().to_string(),
+            format!("{:.0}", rep.modeled_monolithic_s),
+            format!("{:.0}", rep.modeled_parallel_s),
+            format!("{:.2}x", rep.modeled_speedup),
+            format!("{:?}", rep.measured_sequential),
+            format!("{:?}", rep.measured_parallel),
+        ]);
+    }
+    t.print();
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("\naverage modeled speedup: {avg:.2}x (paper: 2.49x)");
+    println!("wall time: {:?}", t0.elapsed());
+    let check = |cond: bool, msg: &str| {
+        println!("[{}] {msg}", if cond { "ok" } else { "MISS" });
+    };
+    check((1.5..4.0).contains(&avg), "average speedup in the paper's band");
+    check(
+        speedups.windows(2).all(|w| w[1] >= w[0] - 0.3),
+        "speedup grows (roughly) with array size",
+    );
+}

@@ -1,0 +1,147 @@
+//! Bench: §Perf hot path — batched floorplan-candidate scoring.
+//!
+//! Compares three evaluators on identical batches:
+//! * `cpu-sparse` — edge-list scalar evaluation (the CPU fast path and
+//!                  the flow's default);
+//! * `cpu-dense`  — the batched matmul identity (the Pallas kernel's
+//!                  math, on the CPU — the bit-exact oracle);
+//! * `pjrt`       — the AOT-compiled Pallas kernel through the PJRT
+//!                  runtime (requires `make artifacts`).
+//!
+//! Also times the SA explorer end-to-end with CPU vs PJRT scoring, and a
+//! full `run_hlps` flow (the L3 hot path the coordinator actually runs).
+
+use rsir::coordinator::flow::{run_hlps, FlowConfig};
+use rsir::device::builtin;
+use rsir::floorplan::cost::{BatchEvaluator, CostModel, CpuEvaluator, DenseCpuEvaluator};
+use rsir::floorplan::problem::{Problem, Unit, UnitEdge};
+use rsir::floorplan::sa::{anneal, SaConfig};
+use rsir::ir::core::Resources;
+use rsir::util::bench::bench;
+use rsir::util::rng::Rng;
+
+fn synth_problem(n: usize, seed: u64) -> Problem {
+    let mut rng = Rng::new(seed);
+    let units = (0..n)
+        .map(|i| Unit {
+            nodes: vec![i],
+            resources: Resources::new(
+                2_000.0 + rng.below(40_000) as f64,
+                1_500.0 + rng.below(30_000) as f64,
+                rng.below(40) as f64,
+                rng.below(120) as f64,
+                rng.below(8) as f64,
+            ),
+            fixed_slot: None,
+            name: format!("u{i}"),
+        })
+        .collect();
+    let mut edges = Vec::new();
+    for i in 0..n {
+        if i + 1 < n {
+            edges.push(UnitEdge {
+                a: i,
+                b: i + 1,
+                width: 64 + (rng.below(8) as u64) * 32,
+            });
+        }
+        if i + 5 < n && rng.chance(0.4) {
+            edges.push(UnitEdge {
+                a: i,
+                b: i + 5,
+                width: 32,
+            });
+        }
+    }
+    Problem {
+        units,
+        edges,
+        die_weight: 3.0,
+    }
+}
+
+fn main() {
+    let dev = builtin::by_name("u280").unwrap();
+    let have_artifacts = rsir::runtime::artifacts_dir().join("manifest.json").exists();
+    println!("== batched candidate scoring (B = 1024) ==");
+    for n in [24usize, 60, 120] {
+        let p = synth_problem(n, 7);
+        let model = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let mut rng = Rng::new(11);
+        let batch: Vec<Vec<usize>> = (0..1024)
+            .map(|_| (0..n).map(|_| rng.below(dev.num_slots())).collect())
+            .collect();
+
+        let mut cpu = CpuEvaluator {
+            model: model.clone(),
+        };
+        bench(&format!("cpu-sparse M={n} B=1024"), 1, 5, || {
+            cpu.evaluate(&batch).iter().sum::<f32>()
+        });
+        let mut dense = DenseCpuEvaluator {
+            model: model.clone(),
+        };
+        bench(&format!("cpu-dense  M={n} B=1024"), 1, 5, || {
+            dense.evaluate(&batch).iter().sum::<f32>()
+        });
+        if have_artifacts {
+            let man = rsir::runtime::Manifest::load(&rsir::runtime::artifacts_dir()).unwrap();
+            match rsir::runtime::PjrtEvaluator::new(model.clone(), &man) {
+                Ok(mut pjrt) => {
+                    // sanity: same numbers
+                    let a = pjrt.evaluate(&batch[..64].to_vec());
+                    let b = cpu.evaluate(&batch[..64].to_vec());
+                    for (x, y) in a.iter().zip(&b) {
+                        assert!((x - y).abs() <= 1e-3 * y.abs().max(1.0));
+                    }
+                    bench(&format!("pjrt       M={n} B=1024"), 1, 5, || {
+                        pjrt.evaluate(&batch).iter().sum::<f32>()
+                    });
+                }
+                Err(e) => println!("pjrt unavailable for M={n}: {e}"),
+            }
+        }
+    }
+
+    println!("\n== SA explorer end-to-end (M=60, 120 steps) ==");
+    let p = synth_problem(60, 13);
+    let model = CostModel::build(&p, &dev, 0.7, 1e-4);
+    let sa_cfg = SaConfig {
+        steps: 120,
+        ..Default::default()
+    };
+    {
+        let mut cpu = CpuEvaluator {
+            model: model.clone(),
+        };
+        bench("sa/cpu  M=60", 1, 3, || {
+            anneal(&p, &dev, &mut cpu, None, &sa_cfg).best_cost
+        });
+    }
+    if have_artifacts {
+        let man = rsir::runtime::Manifest::load(&rsir::runtime::artifacts_dir()).unwrap();
+        if let Ok(mut pjrt) = rsir::runtime::PjrtEvaluator::new(model, &man) {
+            bench("sa/pjrt M=60", 1, 3, || {
+                anneal(&p, &dev, &mut pjrt, None, &sa_cfg).best_cost
+            });
+        }
+    }
+
+    println!("\n== full HLPS flow (llama2 on u280) ==");
+    bench("run_hlps llama2/u280 (no SA)", 0, 3, || {
+        let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
+        let mut d = g.design;
+        run_hlps(
+            &mut d,
+            &dev,
+            &FlowConfig {
+                sa_refine: false,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .optimized
+        .fmax_mhz()
+    });
+    println!("\nperf_hotpath bench complete");
+}

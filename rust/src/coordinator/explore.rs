@@ -1,0 +1,124 @@
+//! Floorplan exploration (§4.2 / Figure 12): sweep the per-slot
+//! utilization ceiling and report the trade-off between local congestion
+//! (most-congested-slot utilization), global wirelength, and achieved
+//! frequency. "This automation is implemented as a standalone RIR
+//! plugin … that can be reused across different designs."
+
+use crate::coordinator::flow::{run_hlps, FlowConfig};
+use crate::device::model::VirtualDevice;
+use crate::ir::core::Design;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct ExploreRow {
+    pub util_limit: f64,
+    /// Utilization of the most congested slot after placement.
+    pub max_slot_util: f64,
+    /// Total weighted wirelength of the floorplan.
+    pub wirelength: f64,
+    pub fmax_mhz: f64,
+    pub routable: bool,
+}
+
+/// Run the HLPS flow once per utilization limit (each on a fresh copy of
+/// the design) and collect the Pareto trade-off rows of Figure 12.
+pub fn explore(
+    design: &Design,
+    dev: &VirtualDevice,
+    limits: &[f64],
+    base_cfg: &FlowConfig,
+) -> Result<Vec<ExploreRow>> {
+    let mut rows = Vec::with_capacity(limits.len());
+    for &limit in limits {
+        let mut d = design.clone();
+        let mut cfg = base_cfg.clone();
+        cfg.util_limit = limit;
+        // The sweep wants the exact limit, not the auto-relaxed one; an
+        // infeasible point is itself a data point.
+        match run_hlps(&mut d, dev, &cfg) {
+            Ok(report) => rows.push(ExploreRow {
+                util_limit: limit,
+                max_slot_util: report.optimized.timing.max_util,
+                wirelength: report.floorplan_wirelength,
+                fmax_mhz: report.optimized.fmax_mhz(),
+                routable: report.optimized.routable(),
+            }),
+            Err(_) => rows.push(ExploreRow {
+                util_limit: limit,
+                max_slot_util: f64::NAN,
+                wirelength: f64::NAN,
+                fmax_mhz: 0.0,
+                routable: false,
+            }),
+        }
+    }
+    Ok(rows)
+}
+
+/// The default sweep of ten limits used by the Fig 12 bench.
+pub fn default_limits() -> Vec<f64> {
+    (0..10).map(|i| 0.50 + 0.04 * i as f64).collect()
+}
+
+/// Expected trade-off shape: tighter limits spread the design (lower
+/// congestion, more wirelength); looser limits pack it. Returns Pearson
+/// correlation between util_limit and wirelength over routable rows.
+pub fn tradeoff_correlation(rows: &[ExploreRow]) -> f64 {
+    let pts: Vec<(f64, f64)> = rows
+        .iter()
+        .filter(|r| r.routable && r.wirelength.is_finite())
+        .map(|r| (r.util_limit, r.wirelength))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let n = pts.len() as f64;
+    let (mx, my) = (
+        pts.iter().map(|p| p.0).sum::<f64>() / n,
+        pts.iter().map(|p| p.1).sum::<f64>() / n,
+    );
+    let cov: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let (sx, sy) = (
+        pts.iter().map(|p| (p.0 - mx).powi(2)).sum::<f64>().sqrt(),
+        pts.iter().map(|p| (p.1 - my).powi(2)).sum::<f64>().sqrt(),
+    );
+    if sx == 0.0 || sy == 0.0 {
+        0.0
+    } else {
+        cov / (sx * sy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::designs::cnn::{self, CnnConfig};
+
+    #[test]
+    fn sweep_produces_tradeoff() {
+        let dev = builtin::by_name("u250").unwrap();
+        let g = cnn::generate(&CnnConfig { rows: 4, cols: 3 }).unwrap();
+        let cfg = FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        };
+        let rows = explore(&g.design, &dev, &[0.25, 0.55, 0.85], &cfg).unwrap();
+        assert_eq!(rows.len(), 3);
+        let routable: Vec<_> = rows.iter().filter(|r| r.routable).collect();
+        assert!(routable.len() >= 2, "{rows:?}");
+        // Packing tighter (higher limit) must not increase wirelength.
+        let wl: Vec<f64> = routable.iter().map(|r| r.wirelength).collect();
+        assert!(
+            wl.windows(2).all(|w| w[1] <= w[0] + 1e-6),
+            "wirelength not monotone: {wl:?}"
+        );
+    }
+
+    #[test]
+    fn default_limits_shape() {
+        let l = default_limits();
+        assert_eq!(l.len(), 10);
+        assert!(l[0] >= 0.45 && *l.last().unwrap() <= 0.90);
+    }
+}

@@ -1,0 +1,527 @@
+//! The integrated HLPS flow (§3.4): the four-stage methodology assembled
+//! from RIR plugins and passes.
+//!
+//! 1. **Communication analysis** — platform analysis, hierarchy rebuild,
+//!    interface inference, aux partitioning + passthrough.
+//! 2. **Design partitioning** — flatten; units joined by non-pipelinable
+//!    connections are merged so they always share a slot.
+//! 3. **Coarse-grained floorplanning** — the AutoBridge ILP (optionally
+//!    refined by batched SA through the PJRT-compiled Pallas kernel);
+//!    slot assignments written back as `floorplan` metadata.
+//! 4. **Global interconnect synthesis** — relay stations / FF chains
+//!    inserted on every slot-crossing pipelinable channel, staged along
+//!    the route; the result is re-analyzed by the EDA backend.
+
+use crate::device::model::VirtualDevice;
+use crate::eda::place::PlacerConfig;
+use crate::eda::vivado::{self, ImplReport};
+use crate::floorplan::autobridge::{self, IlpFpConfig};
+use crate::floorplan::cost::{BatchEvaluator, CostModel, CpuEvaluator};
+use crate::floorplan::problem::Problem;
+use crate::floorplan::sa::{self, SaConfig};
+use crate::ir::core::*;
+use crate::passes::iface_infer::InterfaceInference;
+use crate::passes::manager::{Pass, PassContext};
+use crate::passes::partition::PartitionAllAux;
+use crate::passes::passthrough::Passthrough;
+use crate::passes::pipeline_insert;
+use crate::passes::rebuild::RebuildAll;
+use crate::timing::delay::DelayModel;
+use crate::util::union_find::UnionFind;
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct FlowConfig {
+    pub util_limit: f64,
+    pub die_weight: f64,
+    pub ilp: IlpFpConfig,
+    /// Refine the ILP floorplan with batched SA.
+    pub sa_refine: bool,
+    pub sa: SaConfig,
+    /// Use the PJRT-compiled Pallas kernel for SA scoring (falls back to
+    /// the CPU oracle when artifacts are missing).
+    pub use_pjrt: bool,
+    pub delay: DelayModel,
+}
+
+impl Default for FlowConfig {
+    fn default() -> Self {
+        FlowConfig {
+            util_limit: 0.70,
+            die_weight: 3.0,
+            ilp: IlpFpConfig::default(),
+            sa_refine: true,
+            sa: SaConfig {
+                steps: 120,
+                ..Default::default()
+            },
+            use_pjrt: false,
+            delay: DelayModel::default(),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct FlowReport {
+    pub baseline: Result<ImplReport>,
+    pub optimized: ImplReport,
+    pub relay_stations: usize,
+    pub partitions: usize,
+    pub floorplan_wirelength: f64,
+    pub log: Vec<String>,
+    pub evaluator_used: &'static str,
+}
+
+impl FlowReport {
+    pub fn baseline_fmax(&self) -> Option<f64> {
+        self.baseline
+            .as_ref()
+            .ok()
+            .filter(|r| r.routable())
+            .map(|r| r.fmax_mhz())
+    }
+
+    pub fn improvement_pct(&self) -> Option<f64> {
+        self.baseline_fmax()
+            .map(|b| 100.0 * (self.optimized.fmax_mhz() - b) / b)
+    }
+}
+
+/// Stage 1 + 2 of the integrated flow: communication analysis
+/// (platform, rebuild, inference, partition, passthrough) and flattening.
+/// Shared by the HLPS flow and the baseline — the *netlist* a vendor tool
+/// elaborates is the same either way; only floorplanning and pipelining
+/// differ.
+pub fn analyze_structure(
+    design: &mut Design,
+    ctx: &mut PassContext,
+) -> Result<()> {
+    crate::plugins::platform::analyze(design);
+    RebuildAll.run(design, ctx).context("hierarchy rebuild")?;
+    InterfaceInference
+        .run(design, ctx)
+        .context("interface inference")?;
+    PartitionAllAux
+        .run(design, ctx)
+        .context("aux partitioning")?;
+    Passthrough.run(design, ctx).context("passthrough")?;
+    // Bypassed aux may have joined modules directly: infer once more so
+    // newly adjacent ports gain interfaces (the Catapult pattern, §4.1).
+    InterfaceInference
+        .run(design, ctx)
+        .context("interface inference (post-passthrough)")?;
+    // New aux splits need characterization too.
+    crate::plugins::platform::analyze(design);
+    crate::passes::flatten::Flatten
+        .run(design, ctx)
+        .context("flatten")?;
+    Ok(())
+}
+
+/// Run the baseline (vendor-only) flow: no HLPS, wirelength placer.
+/// The design is structurally analyzed so the vendor tool sees the same
+/// netlist, but no floorplanning or pipelining is applied and no
+/// floorplan metadata is honored.
+pub fn run_baseline(design: &Design, dev: &VirtualDevice, dm: &DelayModel) -> Result<ImplReport> {
+    let mut d = design.clone();
+    let mut ctx = PassContext::new();
+    ctx.drc_after_each = false;
+    analyze_structure(&mut d, &mut ctx)?;
+    let mut nl = vivado::elaborate(&d);
+    for node in &mut nl.nodes {
+        node.fixed_slot = None; // vendor flow ignores floorplan hints
+    }
+    // Vendor placers leave ~30 % headroom per region when unconstrained.
+    let placer = PlacerConfig {
+        capacity_limit: 0.72,
+        ..Default::default()
+    };
+    vivado::implement_netlist_with(
+        &nl,
+        dev,
+        &placer,
+        dm,
+        crate::timing::sta::StaOptions { unguided: true },
+    )
+}
+
+/// Run the full RIR HLPS flow, mutating `design` into its optimized form.
+pub fn run_hlps(
+    design: &mut Design,
+    dev: &VirtualDevice,
+    cfg: &FlowConfig,
+) -> Result<FlowReport> {
+    let baseline = run_baseline(design, dev, &cfg.delay);
+    let mut ctx = PassContext::new();
+
+    // ---- Stages 1 + 2: communication analysis & partitioning ------------
+    analyze_structure(design, &mut ctx)?;
+    let nl = vivado::elaborate(design);
+    let mut problem = Problem::from_netlist(&nl, dev, cfg.die_weight);
+    merge_nonpipelinable(&mut problem, &nl);
+    let partitions = problem.units.len();
+
+    // ---- Stage 3: coarse-grained floorplanning ---------------------------
+    let mut ilp_cfg = cfg.ilp.clone();
+    ilp_cfg.util_limit = cfg.util_limit;
+    let ilp = autobridge::solve(&problem, dev, &ilp_cfg).context("floorplan ILP")?;
+    let mut unit_slots = ilp.unit_slots.clone();
+    let mut evaluator_used: &'static str = "ilp-only";
+    if cfg.sa_refine {
+        let model = CostModel::build(&problem, dev, cfg.util_limit, 1e-4);
+        let mut cpu_holder;
+        let mut pjrt_holder;
+        let evaluator: &mut dyn BatchEvaluator = if cfg.use_pjrt {
+            match crate::runtime::Manifest::load(&crate::runtime::artifacts_dir())
+                .and_then(|man| crate::runtime::PjrtEvaluator::new(model.clone(), &man))
+            {
+                Ok(ev) => {
+                    pjrt_holder = ev;
+                    &mut pjrt_holder
+                }
+                Err(e) => {
+                    ctx.log(format!("pjrt unavailable ({e}); using cpu oracle"));
+                    cpu_holder = CpuEvaluator { model };
+                    &mut cpu_holder
+                }
+            }
+        } else {
+            cpu_holder = CpuEvaluator { model };
+            &mut cpu_holder
+        };
+        evaluator_used = evaluator.name();
+        let sa_res = sa::anneal(&problem, dev, evaluator, Some(&unit_slots), &cfg.sa);
+        // Accept SA only if it beats the ILP solution on the same metric
+        // and stays feasible per-slot.
+        let mut chk = CpuEvaluator {
+            model: CostModel::build(&problem, dev, cfg.util_limit, 1e-4),
+        };
+        let ilp_cost = chk.evaluate(&[unit_slots.clone()])[0];
+        if sa_res.best_cost < ilp_cost && feasible(&problem, &sa_res.best, dev, cfg.util_limit) {
+            ctx.log(format!(
+                "sa refine: {} -> {} ({} candidates via {})",
+                ilp_cost, sa_res.best_cost, sa_res.evaluated, evaluator_used
+            ));
+            unit_slots = sa_res.best;
+        }
+    }
+    let floorplan_wirelength = problem.wirelength(&unit_slots, dev);
+
+    // Write floorplan metadata onto the flat top's instances.
+    let node_slots = problem.expand(&unit_slots, nl.nodes.len());
+    {
+        let top_name = design.top.clone();
+        let top = design.module_mut(&top_name).unwrap();
+        for (n, node) in nl.nodes.iter().enumerate() {
+            let pblock = dev.slots[node_slots[n]].pblock.clone();
+            if let Some(inst) = top
+                .instances_mut()
+                .iter_mut()
+                .find(|i| i.instance_name == node.path)
+            {
+                inst.metadata
+                    .insert("floorplan", crate::util::json::Json::str(&pblock));
+            }
+        }
+    }
+
+    // ---- Stage 4: global interconnect synthesis --------------------------
+    let relay_stations = insert_pipelines(design, dev, &nl, &node_slots, &mut ctx)?;
+
+    // Final implementation with fixed placement.
+    let final_nl = vivado::elaborate(design);
+    let optimized = vivado::implement_netlist(
+        &final_nl,
+        dev,
+        &PlacerConfig::default(),
+        &cfg.delay,
+    )?;
+
+    let mut log = std::mem::take(&mut ctx.log);
+    log.push(format!(
+        "flow: {partitions} partitions, {relay_stations} relay stations, wl {floorplan_wirelength:.0}"
+    ));
+    Ok(FlowReport {
+        baseline,
+        optimized,
+        relay_stations,
+        partitions,
+        floorplan_wirelength,
+        log,
+        evaluator_used,
+    })
+}
+
+/// Merge units joined by non-pipelinable edges: they must share a slot.
+fn merge_nonpipelinable(problem: &mut Problem, nl: &crate::timing::netlist::FlatNetlist) {
+    let n = problem.units.len();
+    let mut uf = UnionFind::new(n);
+    // unit index by node: problems built 1:1 node->unit.
+    for e in &nl.edges {
+        if !e.pipelinable {
+            uf.union(e.src, e.dst);
+        }
+    }
+    if uf.components() == n {
+        return;
+    }
+    let groups = uf.groups();
+    let mut new_units = Vec::with_capacity(groups.len());
+    let mut remap = vec![0usize; n];
+    for (gi, g) in groups.iter().enumerate() {
+        let mut merged = problem.units[g[0]].clone();
+        for &m in &g[1..] {
+            merged.resources = merged.resources.add(&problem.units[m].resources);
+            merged.nodes.extend(problem.units[m].nodes.iter().copied());
+            if merged.fixed_slot.is_none() {
+                merged.fixed_slot = problem.units[m].fixed_slot;
+            }
+        }
+        for &m in g {
+            remap[m] = gi;
+        }
+        new_units.push(merged);
+    }
+    let mut agg: std::collections::BTreeMap<(usize, usize), u64> = Default::default();
+    for e in &problem.edges {
+        let (a, b) = (remap[e.a], remap[e.b]);
+        if a != b {
+            let k = if a < b { (a, b) } else { (b, a) };
+            *agg.entry(k).or_default() += e.width;
+        }
+    }
+    problem.units = new_units;
+    problem.edges = agg
+        .into_iter()
+        .map(|((a, b), width)| crate::floorplan::problem::UnitEdge { a, b, width })
+        .collect();
+}
+
+/// Insert relay stations on every pipelinable channel that crosses slots,
+/// one per die crossing plus one per two plain hops, placed along an
+/// L-shaped route.
+fn insert_pipelines(
+    design: &mut Design,
+    dev: &VirtualDevice,
+    nl: &crate::timing::netlist::FlatNetlist,
+    node_slots: &[usize],
+    ctx: &mut PassContext,
+) -> Result<usize> {
+    let top = design.top.clone();
+    let channels = pipeline_insert::pipelinable_channels(design, &top);
+    let mut inserted = 0usize;
+    for (src_inst, iface, dst_inst, _width) in channels {
+        let (Some(src_n), Some(dst_n)) = (nl.node_index(&src_inst), nl.node_index(&dst_inst))
+        else {
+            continue;
+        };
+        let (s_a, s_b) = (node_slots[src_n], node_slots[dst_n]);
+        if s_a == s_b {
+            continue;
+        }
+        let route = l_route(dev, s_a, s_b);
+        let (man, dies) = dev.slot_dist(s_a, s_b);
+        let stages = pipeline_insert::stages_for_distance(man, dies);
+        if stages == 0 {
+            continue;
+        }
+        // Place relay stations at evenly spaced slots along the route.
+        let mut prev = src_inst.clone();
+        let mut prev_iface = iface.clone();
+        for k in 0..stages {
+            let pos = ((k as usize + 1) * route.len()) / (stages as usize + 1);
+            let slot = route[pos.min(route.len() - 1)];
+            let pblock = dev.slots[slot].pblock.clone();
+            let rs = pipeline_insert::insert_relay_station(
+                design,
+                &top,
+                &prev,
+                &prev_iface,
+                1,
+                Some(&pblock),
+                ctx,
+            )?;
+            prev = rs;
+            prev_iface = "o".to_string();
+            inserted += 1;
+        }
+    }
+    Ok(inserted)
+}
+
+/// L-shaped slot route from a to b (inclusive), vertical-first.
+fn l_route(dev: &VirtualDevice, a: usize, b: usize) -> Vec<usize> {
+    let (ax, ay) = (dev.slots[a].x, dev.slots[a].y);
+    let (bx, by) = (dev.slots[b].x, dev.slots[b].y);
+    let mut out = Vec::new();
+    let mut y = ay;
+    while y != by {
+        y = if by > y { y + 1 } else { y - 1 };
+        out.push(dev.slot_index(ax, y));
+    }
+    let mut x = ax;
+    while x != bx {
+        x = if bx > x { x + 1 } else { x - 1 };
+        out.push(dev.slot_index(x, by));
+    }
+    if out.is_empty() {
+        out.push(a);
+    }
+    out
+}
+
+/// Per-slot feasibility at the given utilization limit.
+fn feasible(problem: &Problem, slots: &[usize], dev: &VirtualDevice, limit: f64) -> bool {
+    let mut used = vec![Resources::ZERO; dev.num_slots()];
+    for (u, &s) in problem.units.iter().zip(slots) {
+        used[s] = used[s].add(&u.resources);
+    }
+    used.iter()
+        .zip(&dev.slots)
+        .all(|(u, s)| u.max_util(&s.capacity) <= limit + 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::ir::builder::*;
+
+    /// A chain of heavy stages that cannot fit one slot: the textbook
+    /// HLPS win — the baseline packs and congests / stretches nets, RIR
+    /// spreads and pipelines.
+    fn heavy_chain(dev: &VirtualDevice, n: usize, frac: f64) -> Design {
+        let cap = dev.slots[dev.num_slots() - 1].capacity.lut;
+        let mut d = Design::new("Top");
+        let mut top = GroupedBuilder::new("Top")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .iface(Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            });
+        for i in 0..n {
+            let m = LeafBuilder::verilog_stub(format!("Stage{i}"))
+                .clk_rst()
+                .handshake("i", Dir::In, 64)
+                .handshake("o", Dir::Out, 64)
+                .resource(Resources::new(cap * frac, cap * frac, 20.0, 100.0, 4.0))
+                .meta(
+                    "timing",
+                    crate::util::json::Json::parse(r#"{"internal_ns": 3.0}"#).unwrap(),
+                )
+                .build();
+            d.add(m);
+        }
+        for i in 0..n - 1 {
+            top = top
+                .wire(&format!("w{i}"), 64)
+                .wire(&format!("w{i}_vld"), 1)
+                .wire(&format!("w{i}_rdy"), 1);
+        }
+        for i in 0..n {
+            let mut inst = Instance::new(format!("s{i}"), format!("Stage{i}"));
+            inst.connect("ap_clk", ConnExpr::id("ap_clk"));
+            inst.connect("ap_rst_n", ConnExpr::id("ap_rst_n"));
+            if i > 0 {
+                inst.connect("i", ConnExpr::id(&format!("w{}", i - 1)));
+                inst.connect("i_vld", ConnExpr::id(&format!("w{}_vld", i - 1)));
+                inst.connect("i_rdy", ConnExpr::id(&format!("w{}_rdy", i - 1)));
+            }
+            if i + 1 < n {
+                inst.connect("o", ConnExpr::id(&format!("w{i}")));
+                inst.connect("o_vld", ConnExpr::id(&format!("w{i}_vld")));
+                inst.connect("o_rdy", ConnExpr::id(&format!("w{i}_rdy")));
+            }
+            top = top.inst_full(inst);
+        }
+        d.add(top.build());
+        d
+    }
+
+    #[test]
+    fn hlps_beats_baseline_on_multi_die_chain() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut d = heavy_chain(&dev, 6, 0.40);
+        let cfg = FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        };
+        let report = run_hlps(&mut d, &dev, &cfg).unwrap();
+        assert!(report.optimized.routable(), "{:?}", report.optimized.timing.unroutable_reason);
+        let opt = report.optimized.fmax_mhz();
+        assert!(report.relay_stations > 0, "no pipelining happened");
+        if let Some(base) = report.baseline_fmax() {
+            assert!(
+                opt > base * 1.15,
+                "expected >15% gain: baseline {base:.0} vs optimized {opt:.0}"
+            );
+        }
+        // Optimized design should run near the stages' internal limit.
+        assert!(opt > 250.0, "optimized only {opt:.0} MHz");
+    }
+
+    #[test]
+    fn floorplan_metadata_written() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut d = heavy_chain(&dev, 6, 0.40);
+        let cfg = FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        };
+        run_hlps(&mut d, &dev, &cfg).unwrap();
+        let top = d.top_module();
+        let pinned = top
+            .instances()
+            .iter()
+            .filter(|i| i.metadata.contains_key("floorplan"))
+            .count();
+        assert!(pinned >= 6);
+    }
+
+    #[test]
+    fn sa_refinement_never_regresses() {
+        let dev = builtin::by_name("u250").unwrap();
+        let mut d1 = heavy_chain(&dev, 6, 0.30);
+        let mut d2 = heavy_chain(&dev, 6, 0.30);
+        let no_sa = run_hlps(
+            &mut d1,
+            &dev,
+            &FlowConfig {
+                sa_refine: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let with_sa = run_hlps(
+            &mut d2,
+            &dev,
+            &FlowConfig {
+                sa_refine: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(with_sa.floorplan_wirelength <= no_sa.floorplan_wirelength + 1e-6);
+    }
+
+    #[test]
+    fn small_design_stays_single_slot() {
+        let dev = builtin::by_name("u250").unwrap();
+        let mut d = heavy_chain(&dev, 3, 0.05);
+        let report = run_hlps(
+            &mut d,
+            &dev,
+            &FlowConfig {
+                sa_refine: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.relay_stations, 0);
+        assert_eq!(report.floorplan_wirelength, 0.0);
+    }
+}

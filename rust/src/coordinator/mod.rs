@@ -1,0 +1,10 @@
+//! L3 coordination: the integrated four-stage HLPS flow (§3.4), the
+//! floorplan explorer (§4.2), the parallel-synthesis driver (§4.3), and
+//! the evaluation orchestration regenerating the paper's tables/figures.
+
+pub mod explore;
+pub mod flow;
+pub mod parallel_synth;
+pub mod report;
+
+pub use flow::{run_baseline, run_hlps, FlowConfig, FlowReport};

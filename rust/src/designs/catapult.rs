@@ -1,0 +1,109 @@
+//! Catapult HLS frontend (§4.1): Catapult synthesizes handshakes with
+//! customizable library components (`ccs_out_wait` / `ccs_in_wait`).
+//! "With simple pragmas in these modules' Verilog code, the interface can
+//! be automatically propagated during the interface inference pass to
+//! neighboring modules" — exactly what this adapter does: the two library
+//! modules carry pragmas; everything else gets its interfaces inferred.
+//!
+//! The evaluation benchmark is a sparse linear-algebra accelerator [13].
+
+use crate::designs::common::Generated;
+use crate::ir::core::*;
+use anyhow::Result;
+
+// BEGIN-FRONTEND (counted by support_loc / Table 1)
+/// Catapult's handshake library components, annotated with RIR pragmas.
+pub fn library_sources() -> Vec<String> {
+    vec![
+        "// Catapult output-register with wait protocol.\nmodule ccs_out_wait (\n  input  wire clk,\n  input  wire [63:0] idat, input wire ivld, output wire irdy,\n  output wire [63:0] dat, output wire vld, input wire rdy\n);\n// pragma clock port=clk\n// pragma handshake pattern=i{role} role.valid=vld role.ready=rdy role.data=dat\n// pragma handshake pattern={bundle}{role} role.valid=vld role.ready=rdy role.data=dat\n  assign dat = idat;\n  assign vld = ivld;\n  assign irdy = rdy;\nendmodule\n".to_string(),
+        "// Catapult input-register with wait protocol.\nmodule ccs_in_wait (\n  input  wire clk,\n  input  wire [63:0] dat, input wire vld, output wire rdy,\n  output wire [63:0] odat, output wire ovld, input wire ordy\n);\n// pragma clock port=clk\n// pragma handshake pattern=o{role} role.valid=vld role.ready=rdy role.data=dat\n// pragma handshake pattern={bundle}{role} role.valid=vld role.ready=rdy role.data=dat\n  assign odat = dat;\n  assign ovld = vld;\n  assign rdy = ordy;\nendmodule\n".to_string(),
+    ]
+}
+
+/// Import Catapult RTL: library modules (with pragmas) + generated
+/// design sources; interface inference completes the kernels' ports.
+pub fn import(top: &str, design_sources: &[&str]) -> Result<Design> {
+    let lib = library_sources();
+    let mut all: Vec<&str> = lib.iter().map(|s| s.as_str()).collect();
+    all.extend_from_slice(design_sources);
+    let mut d = crate::plugins::importer::import_design(top, &all)?;
+    // Clock/reset conventions of Catapult RTL.
+    crate::plugins::iface_rules::RuleSet::new()
+        .add_clock(".*", "clk")
+        .add_reset(".*", "rst|arst_n", "high")
+        .apply(&mut d)?;
+    Ok(d)
+}
+// END-FRONTEND
+
+pub fn support_loc() -> usize {
+    crate::designs::dynamatic::count_frontend_loc(include_str!("catapult.rs"))
+}
+
+/// The sparse linear-algebra accelerator benchmark: SpMV compute cores
+/// wrapped in ccs_*_wait channel registers, plus a hierarchy level.
+pub fn generate() -> Result<Generated> {
+    let mut sources = Vec::new();
+    sources.push(
+        "// Catapult-generated SpMV core.\nmodule spmv_core (\n  input  wire clk,\n  input  wire rst,\n  input  wire [63:0] row_dat, input wire row_vld, output wire row_rdy,\n  output wire [63:0] acc_dat, output wire acc_vld, input wire acc_rdy\n);\n  reg [63:0] acc;\n  always @(posedge clk) if (row_vld) acc <= acc + row_dat;\nendmodule\n"
+            .to_string(),
+    );
+    sources.push(
+        "module spmv_top (\n  input  wire clk,\n  input  wire rst,\n  input  wire [63:0] rows, input wire rows_vld, output wire rows_rdy,\n  output wire [63:0] y, output wire y_vld, input wire y_rdy\n);\n  wire [63:0] r0; wire r0_v; wire r0_r;\n  wire [63:0] a0; wire a0_v; wire a0_r;\n  ccs_in_wait in_reg (.clk(clk), .dat(rows), .vld(rows_vld), .rdy(rows_rdy),\n                      .odat(r0), .ovld(r0_v), .ordy(r0_r));\n  spmv_core core (.clk(clk), .rst(rst), .row_dat(r0), .row_vld(r0_v), .row_rdy(r0_r),\n                  .acc_dat(a0), .acc_vld(a0_v), .acc_rdy(a0_r));\n  ccs_out_wait out_reg (.clk(clk), .idat(a0), .ivld(a0_v), .irdy(a0_r),\n                        .dat(y), .vld(y_vld), .rdy(y_rdy));\nendmodule\n"
+            .to_string(),
+    );
+    let src_refs: Vec<&str> = sources.iter().map(|s| s.as_str()).collect();
+    let mut design = import("spmv_top", &src_refs)?;
+    // Inference propagates the library pragma interfaces to spmv_core:
+    // rebuild exposes the structure, partition + passthrough remove the
+    // pure-alias aux between the library regs and the core, and the final
+    // inference mirrors the handshakes onto the core's ports.
+    use crate::passes::manager::{Pass, PassContext};
+    let mut ctx = PassContext::new();
+    crate::passes::rebuild::RebuildAll.run(&mut design, &mut ctx)?;
+    crate::passes::iface_infer::InterfaceInference.run(&mut design, &mut ctx)?;
+    crate::passes::partition::PartitionAllAux.run(&mut design, &mut ctx)?;
+    crate::passes::passthrough::Passthrough.run(&mut design, &mut ctx)?;
+    crate::passes::iface_infer::InterfaceInference.run(&mut design, &mut ctx)?;
+    Ok(Generated {
+        name: "catapult_spmv".to_string(),
+        design,
+        sources,
+        hls_report: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn library_pragmas_give_handshakes() {
+        let g = generate().unwrap();
+        let lib = g.design.module("ccs_out_wait").unwrap();
+        assert_eq!(lib.interface_of("dat").unwrap().kind(), "handshake");
+        assert_eq!(lib.interface_of("idat").unwrap().kind(), "handshake");
+    }
+
+    #[test]
+    fn inference_propagates_to_core() {
+        let g = generate().unwrap();
+        let core = g.design.module("spmv_core").unwrap();
+        assert_eq!(
+            core.interface_of("row_dat").map(|i| i.kind()),
+            Some("handshake"),
+            "{:?}",
+            core.interfaces
+        );
+        assert_eq!(
+            core.interface_of("acc_dat").map(|i| i.kind()),
+            Some("handshake")
+        );
+    }
+
+    #[test]
+    fn support_loc_counted() {
+        let loc = support_loc();
+        assert!(loc > 5 && loc < 220, "loc = {loc}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Dynamatic HLS frontend (§4.1): the open-source dynamically-scheduled
+//! HLS compiler emits VHDL elastic circuits with consistent
+//! `<bundle>_<role>` port naming. Supporting it in RIR takes a metadata
+//! parser (the shared VHDL importer), an interface analyzer (the rule set
+//! below — the paper used 20 Python rules; Fig 11 shows two), and the
+//! shared code rewriter. Table 1 counts the per-tool adaptation code —
+//! [`support_loc`] measures ours the same way.
+
+use crate::designs::common::Generated;
+use crate::ir::core::*;
+use crate::plugins::iface_rules::RuleSet;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// All 29 examples of the Dynamatic repository [14].
+pub const EXAMPLES: [&str; 29] = [
+    "binary_search", "bicg", "fir", "fft", "gaussian", "gemm", "gesummv",
+    "gsum", "gsumif", "histogram", "if_loop_add", "if_loop_mul", "iir",
+    "image_resize", "insertion_sort", "kernel_2mm", "kernel_3mm", "kmp",
+    "loop_array", "matrix", "matrix_power", "matvec", "memory_loop",
+    "mul_example", "pivot", "sobel", "spmv", "stencil_2d", "triangular",
+];
+
+// BEGIN-FRONTEND (counted by support_loc / Table 1)
+/// Interface rules for Dynamatic-generated VHDL (cf. Figure 11).
+pub fn rules() -> RuleSet {
+    RuleSet::new()
+        .add_clock(".*", "clk|clock")
+        .add_reset(".*", "rst|reset", "high")
+        // Elastic channels: <bundle>_<role> with in/out data payloads.
+        .add_handshake(".*", "{bundle}_{role}", "valid|pValid", "ready|nReady", "in|out|data|din|dout|addr")
+        // Memory-controller buses are latency-sensitive.
+        .add_nonpipeline(".*_mc", "address|we|ce")
+        .add_feedforward(".*", "start|end_signal")
+}
+
+/// Import one Dynamatic VHDL source into a design and apply the rules.
+pub fn import(top: &str, vhdl_sources: &[&str]) -> Result<Design> {
+    let mut d = Design::new(top);
+    for src in vhdl_sources {
+        d.add(crate::plugins::importer::import_vhdl(src)?);
+    }
+    rules().apply(&mut d)?;
+    Ok(d)
+}
+// END-FRONTEND
+
+/// Lines of adaptation code for Table 1 (the BEGIN/END-FRONTEND region).
+pub fn support_loc() -> usize {
+    let src = include_str!("dynamatic.rs");
+    count_frontend_loc(src)
+}
+
+pub(crate) fn count_frontend_loc(src: &str) -> usize {
+    let mut counting = false;
+    let mut n = 0;
+    for line in src.lines() {
+        if line.contains("BEGIN-FRONTEND") {
+            counting = true;
+            continue;
+        }
+        if line.contains("END-FRONTEND") {
+            counting = false;
+            continue;
+        }
+        if counting && !line.trim().is_empty() {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Generate a synthetic Dynamatic-style VHDL benchmark: a small elastic
+/// dataflow seeded by the example's name (operator cores joined by
+/// valid/ready channels, the shape `dynamatic --simple-buffers` emits).
+pub fn generate(example: &str) -> Result<Generated> {
+    let seed = example.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed);
+    let n_ops = rng.range(3, 8);
+    let mut sources = Vec::new();
+    // Operator entity (shared).
+    sources.push(
+        "library ieee;\nentity elastic_op is\n  port (\n    clk : in std_logic;\n    rst : in std_logic;\n    a_data : in std_logic_vector(31 downto 0);\n    a_valid : in std_logic;\n    a_ready : out std_logic;\n    r_data : out std_logic_vector(31 downto 0);\n    r_valid : out std_logic;\n    r_ready : in std_logic\n  );\nend entity;\narchitecture rtl of elastic_op is begin end rtl;\n".to_string(),
+    );
+    // Top entity.
+    let mut top = format!(
+        "library ieee;\nentity {example} is\n  port (\n    clk : in std_logic;\n    rst : in std_logic;\n    in0_data : in std_logic_vector(31 downto 0);\n    in0_valid : in std_logic;\n    in0_ready : out std_logic;\n    out0_data : out std_logic_vector(31 downto 0);\n    out0_valid : out std_logic;\n    out0_ready : in std_logic\n  );\nend entity;\narchitecture rtl of {example} is\nbegin\n"
+    );
+    for k in 0..n_ops {
+        top.push_str(&format!("  op{k}: entity work.elastic_op port map (clk, rst, ...);\n"));
+    }
+    top.push_str("end rtl;\n");
+    sources.push(top);
+
+    let src_refs: Vec<&str> = sources.iter().map(|s| s.as_str()).collect();
+    let design = import(example, &src_refs)?;
+    Ok(Generated {
+        name: format!("dynamatic_{example}"),
+        design,
+        sources,
+        hls_report: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_29_examples_import_with_full_interfaces() {
+        for ex in EXAMPLES {
+            let g = generate(ex).unwrap();
+            let top = g.design.module(ex).unwrap();
+            assert_eq!(
+                top.interface_of("in0_data").map(|i| i.kind()),
+                Some("handshake"),
+                "{ex}"
+            );
+            assert_eq!(top.interface_of("clk").map(|i| i.kind()), Some("clock"));
+            assert!(
+                top.uncovered_ports().is_empty(),
+                "{ex}: uncovered {:?}",
+                top.uncovered_ports()
+            );
+        }
+    }
+
+    #[test]
+    fn support_loc_is_small() {
+        let loc = support_loc();
+        // The paper needed 146 lines; ours is the same order of magnitude
+        // and must stay small — that's the point of the rules mechanism.
+        assert!(loc > 5 && loc < 200, "loc = {loc}");
+    }
+
+    #[test]
+    fn vhdl_entity_roundtrip() {
+        let g = generate("fir").unwrap();
+        let op = g.design.module("elastic_op").unwrap();
+        assert_eq!(op.port("a_data").unwrap().width, 32);
+        assert_eq!(op.interface_of("a_data").unwrap().kind(), "handshake");
+    }
+}

@@ -1,0 +1,120 @@
+//! Intel HLS frontend (§4.1): the Intel HLS compiler (i++) emits
+//! Avalon-ST style streaming interfaces with consistent port naming,
+//! "making them also compatible with the Python-based interface rules
+//! method". Benchmarks: the 12 CHStone programs [11].
+
+use crate::designs::common::Generated;
+use crate::ir::core::*;
+use crate::plugins::iface_rules::RuleSet;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// The 12 CHStone benchmarks.
+pub const CHSTONE: [&str; 12] = [
+    "adpcm", "aes", "blowfish", "dfadd", "dfdiv", "dfmul", "dfsin", "gsm",
+    "jpeg", "mips", "motion", "sha",
+];
+
+// BEGIN-FRONTEND (counted by support_loc / Table 1)
+/// Interface rules for Intel-HLS (i++) generated Verilog.
+pub fn rules() -> RuleSet {
+    RuleSet::new()
+        .add_clock(".*", "clock|clock2x")
+        .add_reset(".*", "resetn", "low")
+        // Avalon-ST streams: <bundle>_<role>.
+        .add_handshake(".*", "{bundle}_{role}", "valid", "ready", "data|channel|startofpacket|endofpacket")
+        // Component start/busy/done control group.
+        .add_handshake(".*", "avst_{bundle}_{role}", "valid", "ready", ".*")
+        .add_feedforward(".*", "start|busy|done|stall_out|stall_in")
+}
+
+/// Import i++-generated Verilog and apply the rules.
+pub fn import(top: &str, sources: &[&str]) -> Result<Design> {
+    let mut d = crate::plugins::importer::import_design(top, sources)?;
+    rules().apply(&mut d)?;
+    Ok(d)
+}
+// END-FRONTEND
+
+pub fn support_loc() -> usize {
+    crate::designs::dynamatic::count_frontend_loc(include_str!("intel_hls.rs"))
+}
+
+/// Generate one CHStone benchmark in i++ output style: a component with
+/// Avalon-ST input/output streams and a few internal basic-block modules.
+pub fn generate(bench: &str) -> Result<Generated> {
+    let seed = bench.bytes().fold(7u64, |a, b| a.wrapping_mul(257).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed);
+    let n_bb = rng.range(2, 6);
+    let mut sources = Vec::new();
+    sources.push(
+        "module bb_compute (\n  input wire clock,\n  input wire resetn,\n  input wire [31:0] x_data, input wire x_valid, output wire x_ready,\n  output wire [31:0] y_data, output wire y_valid, input wire y_ready\n);\n  reg [31:0] t;\n  always @(posedge clock) if (x_valid) t <= t ^ x_data;\nendmodule\n"
+            .to_string(),
+    );
+    let mut top = format!(
+        "module {bench} (\n  input wire clock,\n  input wire resetn,\n  input wire [31:0] avst_din_data, input wire avst_din_valid, output wire avst_din_ready,\n  output wire [31:0] avst_dout_data, output wire avst_dout_valid, input wire avst_dout_ready,\n  input wire start, output wire done\n);\n"
+    );
+    for k in 0..n_bb {
+        top.push_str(&format!(
+            "  wire [31:0] c{k}_data; wire c{k}_valid; wire c{k}_ready;\n"
+        ));
+    }
+    for k in 0..n_bb {
+        let i = if k == 0 {
+            "avst_din".to_string()
+        } else {
+            format!("c{}", k - 1)
+        };
+        let o = format!("c{k}");
+        top.push_str(&format!(
+            "  bb_compute bb{k} (.clock(clock), .resetn(resetn), .x_data({i}_data), .x_valid({i}_valid), .x_ready({i}_ready), .y_data({o}_data), .y_valid({o}_valid), .y_ready({o}_ready));\n"
+        ));
+    }
+    let last = n_bb - 1;
+    top.push_str(&format!(
+        "  assign avst_dout_data = c{last}_data;\n  assign avst_dout_valid = c{last}_valid;\n  assign c{last}_ready = avst_dout_ready;\n  assign done = ~start;\nendmodule\n"
+    ));
+    sources.push(top);
+
+    let src_refs: Vec<&str> = sources.iter().map(|s| s.as_str()).collect();
+    let design = import(bench, &src_refs)?;
+    Ok(Generated {
+        name: format!("intel_{bench}"),
+        design,
+        sources,
+        hls_report: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_chstone_benchmarks_import() {
+        for b in CHSTONE {
+            let g = generate(b).unwrap();
+            let top = g.design.module(b).unwrap();
+            assert_eq!(
+                top.interface_of("avst_din_data").map(|i| i.kind()),
+                Some("handshake"),
+                "{b}"
+            );
+            assert_eq!(top.interface_of("clock").map(|i| i.kind()), Some("clock"));
+            assert!(top.uncovered_ports().is_empty(), "{b}: {:?}", top.uncovered_ports());
+        }
+    }
+
+    #[test]
+    fn internal_streams_detected() {
+        let g = generate("aes").unwrap();
+        let bb = g.design.module("bb_compute").unwrap();
+        assert_eq!(bb.interface_of("x_data").unwrap().kind(), "handshake");
+    }
+
+    #[test]
+    fn support_loc_counted() {
+        let loc = support_loc();
+        assert!(loc > 5 && loc < 220, "loc = {loc}");
+    }
+}

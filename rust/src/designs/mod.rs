@@ -1,0 +1,14 @@
+//! Benchmark design generators (§4.1/§4.4): real Verilog/VHDL/manifest
+//! artifacts imported through the standard plugins, reproducing the
+//! structure of the paper's evaluation designs.
+
+pub mod catapult;
+pub mod cnn;
+pub mod common;
+pub mod dynamatic;
+pub mod intel_hls;
+pub mod knn;
+pub mod llama2;
+pub mod minimap2;
+
+pub use common::Generated;

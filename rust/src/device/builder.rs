@@ -1,0 +1,196 @@
+//! User-customizable device definition API — the Rust equivalent of the
+//! Python snippet in Figure 7 of the paper:
+//!
+//! ```text
+//! device = VirtualDevice.from_part("xcvp1552")
+//!     .grid(cols=2, rows=4)
+//!     .die_boundary_after_row(1)
+//!     ...
+//! ```
+//!
+//! "Users can also customize the virtual device by specifying parameters
+//! such as the FPGA device part number and the slot shapes. RIR then uses
+//! vendor tools to extract the necessary resource information" — our
+//! vendor-tool surrogate is the per-part resource database in
+//! [`crate::device::builtin`]; custom parts specify capacities directly.
+
+use crate::device::model::{Slot, VirtualDevice};
+use crate::ir::core::Resources;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+pub struct DeviceBuilder {
+    name: String,
+    part: String,
+    cols: usize,
+    rows: usize,
+    die_rows: Vec<usize>,
+    uniform: Option<Resources>,
+    /// (x, y) -> capacity override (e.g. shell/gap/HBM-adjacent slots).
+    overrides: BTreeMap<(usize, usize), Resources>,
+    /// (x, y) -> fraction of capacity removed (shell, gaps, hard IPs).
+    derates: BTreeMap<(usize, usize), f64>,
+    sll_per_column: u64,
+    hwire: u64,
+    vwire: u64,
+}
+
+impl DeviceBuilder {
+    pub fn new(name: impl Into<String>, part: impl Into<String>) -> DeviceBuilder {
+        DeviceBuilder {
+            name: name.into(),
+            part: part.into(),
+            cols: 1,
+            rows: 1,
+            die_rows: Vec::new(),
+            uniform: None,
+            overrides: BTreeMap::new(),
+            derates: BTreeMap::new(),
+            sll_per_column: 7680,
+            hwire: 20_000,
+            vwire: 20_000,
+        }
+    }
+
+    /// Slot grid: `cols` × `rows` pblocks.
+    pub fn grid(mut self, cols: usize, rows: usize) -> Self {
+        self.cols = cols;
+        self.rows = rows;
+        self
+    }
+
+    /// Declare a die boundary between `row` and `row + 1`.
+    pub fn die_boundary_after_row(mut self, row: usize) -> Self {
+        if !self.die_rows.contains(&row) {
+            self.die_rows.push(row);
+            self.die_rows.sort();
+        }
+        self
+    }
+
+    /// Same capacity in every slot.
+    pub fn uniform_slot_capacity(mut self, r: Resources) -> Self {
+        self.uniform = Some(r);
+        self
+    }
+
+    /// Override one slot's capacity.
+    pub fn slot_capacity(mut self, x: usize, y: usize, r: Resources) -> Self {
+        self.overrides.insert((x, y), r);
+        self
+    }
+
+    /// Remove a fraction of a slot's capacity (Vitis shell, gap regions,
+    /// NoC columns, integrated IPs — the "unprogrammable" areas of Fig 2).
+    pub fn derate_slot(mut self, x: usize, y: usize, fraction: f64) -> Self {
+        self.derates.insert((x, y), fraction);
+        self
+    }
+
+    /// Die-crossing wires per column per boundary (SLLs).
+    pub fn sll_per_column(mut self, n: u64) -> Self {
+        self.sll_per_column = n;
+        self
+    }
+
+    pub fn wire_capacity(mut self, horizontal: u64, vertical: u64) -> Self {
+        self.hwire = horizontal;
+        self.vwire = vertical;
+        self
+    }
+
+    pub fn build(self) -> Result<VirtualDevice> {
+        if self.cols == 0 || self.rows == 0 {
+            bail!("device grid must be at least 1x1");
+        }
+        let uniform = match self.uniform {
+            Some(u) => u,
+            None if !self.overrides.is_empty() => Resources::ZERO,
+            None => bail!("no slot capacity specified"),
+        };
+        if let Some(&r) = self.die_rows.iter().find(|&&r| r + 1 >= self.rows) {
+            bail!("die boundary after row {r} is outside the {}-row grid", self.rows);
+        }
+        let mut slots = Vec::with_capacity(self.cols * self.rows);
+        for y in 0..self.rows {
+            let die = self.die_rows.iter().filter(|&&r| r < y).count();
+            for x in 0..self.cols {
+                let mut cap = *self.overrides.get(&(x, y)).unwrap_or(&uniform);
+                if let Some(d) = self.derates.get(&(x, y)) {
+                    cap = cap.scale(1.0 - d.clamp(0.0, 1.0));
+                }
+                slots.push(Slot {
+                    x,
+                    y,
+                    pblock: format!("SLOT_X{x}Y{y}"),
+                    capacity: cap,
+                    die,
+                });
+            }
+        }
+        Ok(VirtualDevice {
+            name: self.name,
+            part: self.part,
+            cols: self.cols,
+            rows: self.rows,
+            slots,
+            die_rows: self.die_rows,
+            sll_per_column: self.sll_per_column,
+            hwire_capacity: self.hwire,
+            vwire_capacity: self.vwire,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_basic() {
+        let d = DeviceBuilder::new("mini", "xcmini")
+            .grid(2, 2)
+            .uniform_slot_capacity(Resources::new(1000.0, 2000.0, 10.0, 20.0, 5.0))
+            .build()
+            .unwrap();
+        assert_eq!(d.num_slots(), 4);
+        assert_eq!(d.num_dies(), 1);
+    }
+
+    #[test]
+    fn derate_applies() {
+        let d = DeviceBuilder::new("m", "x")
+            .grid(1, 2)
+            .uniform_slot_capacity(Resources::new(1000.0, 0.0, 0.0, 0.0, 0.0))
+            .derate_slot(0, 0, 0.25)
+            .build()
+            .unwrap();
+        assert_eq!(d.slot(0, 0).capacity.lut, 750.0);
+        assert_eq!(d.slot(0, 1).capacity.lut, 1000.0);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(DeviceBuilder::new("x", "y").grid(0, 1).build().is_err());
+        assert!(DeviceBuilder::new("x", "y").grid(1, 1).build().is_err()); // no capacity
+        assert!(DeviceBuilder::new("x", "y")
+            .grid(1, 2)
+            .uniform_slot_capacity(Resources::ZERO)
+            .die_boundary_after_row(1) // would be outside grid
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn die_assignment() {
+        let d = DeviceBuilder::new("x", "y")
+            .grid(1, 4)
+            .uniform_slot_capacity(Resources::new(1.0, 1.0, 1.0, 1.0, 1.0))
+            .die_boundary_after_row(0)
+            .die_boundary_after_row(2)
+            .build()
+            .unwrap();
+        let dies: Vec<usize> = (0..4).map(|y| d.slot(0, y).die).collect();
+        assert_eq!(dies, vec![0, 1, 1, 2]);
+    }
+}

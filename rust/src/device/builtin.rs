@@ -1,0 +1,169 @@
+//! Predefined virtual devices "for UltraScale+ and Versal, based on
+//! empirical data" (§3.1). Capacities follow the public data sheets,
+//! divided across the slot grid; shell/HBM/NoC regions are derated the way
+//! AutoBridge/RapidStream model them. These feed the floorplanner and the
+//! EDA simulator — absolute numbers matter less than the relative shape
+//! (die counts, SLL limits, unusable regions).
+
+use crate::device::builder::DeviceBuilder;
+use crate::device::model::VirtualDevice;
+use crate::ir::core::Resources;
+use anyhow::{bail, Result};
+
+/// All built-in device names, in the order used by Table 2.
+pub const BUILTIN_NAMES: [&str; 6] = ["u250", "u280", "u55c", "vu9p", "vp1552", "vhk158"];
+
+/// Look up a built-in device by (case-insensitive) name.
+pub fn by_name(name: &str) -> Result<VirtualDevice> {
+    match name.to_ascii_lowercase().as_str() {
+        "u250" => u250(),
+        "u280" => u280(),
+        "u55c" => u55c(),
+        "vu9p" => vu9p(),
+        "vp1552" => vp1552(),
+        "vhk158" => vhk158(),
+        other => bail!(
+            "unknown device '{other}' (builtins: {})",
+            BUILTIN_NAMES.join(", ")
+        ),
+    }
+}
+
+/// AMD Alveo U250 — four SLRs (dies), no HBM. The Vitis shell occupies a
+/// part of SLR1's right column.
+pub fn u250() -> Result<VirtualDevice> {
+    DeviceBuilder::new("u250", "xcu250-figd2104-2L-e")
+        .grid(2, 4)
+        .die_boundary_after_row(0)
+        .die_boundary_after_row(1)
+        .die_boundary_after_row(2)
+        .uniform_slot_capacity(Resources::new(216e3, 432e3, 336.0, 1536.0, 160.0))
+        .derate_slot(1, 1, 0.30) // static region / shell
+        .sll_per_column(11520)
+        .wire_capacity(22_000, 22_000)
+        .build()
+}
+
+/// AMD Alveo U280 — three SLRs, HBM2 on the bottom edge, gap regions in
+/// the centre columns (Fig 2 shows the U55C sibling).
+pub fn u280() -> Result<VirtualDevice> {
+    DeviceBuilder::new("u280", "xcu280-fsvh2892-2L-e")
+        .grid(2, 3)
+        .die_boundary_after_row(0)
+        .die_boundary_after_row(1)
+        .uniform_slot_capacity(Resources::new(217e3, 434e3, 336.0, 1504.0, 160.0))
+        .derate_slot(0, 0, 0.15) // HBM controller columns
+        .derate_slot(1, 0, 0.35) // HBM + shell
+        .sll_per_column(11520)
+        .wire_capacity(21_000, 21_000)
+        .build()
+}
+
+/// AMD Alveo U55C — same fabric family as U280, 32 HBM channels at the
+/// bottom, unprogrammable gap regions in the centre (Fig 2(1)).
+pub fn u55c() -> Result<VirtualDevice> {
+    DeviceBuilder::new("u55c", "xcu55c-fsvh2892-2L-e")
+        .grid(2, 3)
+        .die_boundary_after_row(0)
+        .die_boundary_after_row(1)
+        .uniform_slot_capacity(Resources::new(217e3, 434e3, 336.0, 1504.0, 160.0))
+        .derate_slot(0, 0, 0.20) // 32-channel HBM switch
+        .derate_slot(1, 0, 0.30) // HBM + shell
+        .derate_slot(0, 1, 0.05) // centre gap columns
+        .derate_slot(1, 1, 0.05)
+        .sll_per_column(11520)
+        .wire_capacity(21_000, 21_000)
+        .build()
+}
+
+/// AMD Virtex UltraScale+ VU9P — three SLRs, no HBM (classic F1-style
+/// part used by Minimap2's original target).
+pub fn vu9p() -> Result<VirtualDevice> {
+    DeviceBuilder::new("vu9p", "xcvu9p-flga2104-2L-e")
+        .grid(2, 3)
+        .die_boundary_after_row(0)
+        .die_boundary_after_row(1)
+        .uniform_slot_capacity(Resources::new(197e3, 394e3, 360.0, 1140.0, 160.0))
+        .derate_slot(1, 1, 0.20) // shell
+        .sll_per_column(11520)
+        .wire_capacity(20_000, 20_000)
+        .build()
+}
+
+/// AMD Versal Premium VP1552 — two dies; the paper's Figure 7 virtual
+/// device: two columns × four rows, each slot one quarter of a die.
+/// NoC columns and the integrated ARM/PCIe blocks cut into the fabric.
+pub fn vp1552() -> Result<VirtualDevice> {
+    DeviceBuilder::new("vp1552", "xcvp1552-vsva3340-2MHP-i-S")
+        .grid(2, 4)
+        .die_boundary_after_row(1)
+        .uniform_slot_capacity(Resources::new(175e3, 350e3, 336.0, 788.0, 116.0))
+        .derate_slot(0, 0, 0.15) // CPM/PCIe + NoC entry
+        .derate_slot(1, 0, 0.10) // ARM PS + NoC
+        .derate_slot(0, 2, 0.05) // NoC column discontinuity
+        .derate_slot(1, 2, 0.05)
+        .sll_per_column(15360) // Versal interposer is wider than US+ SLLs
+        .wire_capacity(24_000, 24_000)
+        .build()
+}
+
+/// AMD Versal HBM VHK158 — two dies with HBM2e stacks on the bottom edge.
+pub fn vhk158() -> Result<VirtualDevice> {
+    DeviceBuilder::new("vhk158", "xcvh1582-vsva3697-2MP-e-S")
+        .grid(2, 4)
+        .die_boundary_after_row(1)
+        .uniform_slot_capacity(Resources::new(203e3, 406e3, 335.0, 976.0, 139.0))
+        .derate_slot(0, 0, 0.25) // HBM controllers
+        .derate_slot(1, 0, 0.25)
+        .derate_slot(0, 2, 0.05) // NoC columns
+        .derate_slot(1, 2, 0.05)
+        .sll_per_column(15360)
+        .wire_capacity(24_000, 24_000)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtins_construct() {
+        for name in BUILTIN_NAMES {
+            let d = by_name(name).unwrap();
+            assert_eq!(d.name, name);
+            assert!(d.num_slots() >= 6);
+            assert!(d.total_capacity().lut > 1e6, "{name} too small");
+        }
+    }
+
+    #[test]
+    fn die_counts_match_paper() {
+        assert_eq!(by_name("u250").unwrap().num_dies(), 4);
+        assert_eq!(by_name("u280").unwrap().num_dies(), 3);
+        assert_eq!(by_name("u55c").unwrap().num_dies(), 3);
+        assert_eq!(by_name("vu9p").unwrap().num_dies(), 3);
+        assert_eq!(by_name("vp1552").unwrap().num_dies(), 2);
+        assert_eq!(by_name("vhk158").unwrap().num_dies(), 2);
+    }
+
+    #[test]
+    fn unknown_device_rejected() {
+        assert!(by_name("u9000").is_err());
+    }
+
+    #[test]
+    fn derates_reduce_capacity() {
+        let d = u280().unwrap();
+        // Bottom-right (HBM+shell) strictly smaller than top-left.
+        assert!(d.slot(1, 0).capacity.lut < d.slot(0, 2).capacity.lut);
+    }
+
+    #[test]
+    fn json_roundtrip_all() {
+        for name in BUILTIN_NAMES {
+            let d = by_name(name).unwrap();
+            let d2 = VirtualDevice::from_json(&d.to_json()).unwrap();
+            assert_eq!(d, d2);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Virtual device descriptions of multi-die FPGAs (§3.1) plus the
+//! user-customizable builder API of Figure 7.
+
+pub mod builder;
+pub mod builtin;
+pub mod model;
+
+pub use builder::DeviceBuilder;
+pub use builtin::by_name;
+pub use model::{Slot, VirtualDevice};

@@ -1,0 +1,282 @@
+//! Virtual device model (§3.1 "Virtual Device Definition").
+//!
+//! A [`VirtualDevice`] divides a physical FPGA into a grid of **slots**
+//! (Vivado pblocks). It records per-slot resource capacity, unusable
+//! regions (Vitis shell, gap columns, hard IPs), die boundaries with their
+//! limited die-crossing wire capacity (SLLs on UltraScale+, SLR bridges on
+//! Versal), and slot geometry for distance computation.
+
+use crate::ir::core::Resources;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{anyhow, Result};
+
+/// One floorplanning slot (a pblock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Slot {
+    /// Grid position, x = column, y = row (row 0 at the bottom).
+    pub x: usize,
+    pub y: usize,
+    /// Vivado-style pblock name, e.g. "SLOT_X1Y2".
+    pub pblock: String,
+    /// Usable resource capacity (already net of shell/gap regions).
+    pub capacity: Resources,
+    /// Die index this slot belongs to.
+    pub die: usize,
+}
+
+/// A multi-die FPGA as seen by the floorplanner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualDevice {
+    pub name: String,
+    /// Vendor part number, e.g. "xcu280-fsvh2892-2L-e".
+    pub part: String,
+    pub cols: usize,
+    pub rows: usize,
+    /// Row-major (y * cols + x).
+    pub slots: Vec<Slot>,
+    /// Rows r such that a die boundary lies between row r and row r+1.
+    pub die_rows: Vec<usize>,
+    /// Die-crossing wires available per (column, boundary) pair.
+    pub sll_per_column: u64,
+    /// Routing wires available between horizontally adjacent slots.
+    pub hwire_capacity: u64,
+    /// Routing wires available between vertically adjacent slots
+    /// (same die).
+    pub vwire_capacity: u64,
+}
+
+impl VirtualDevice {
+    pub fn slot(&self, x: usize, y: usize) -> &Slot {
+        &self.slots[y * self.cols + x]
+    }
+
+    pub fn slot_index(&self, x: usize, y: usize) -> usize {
+        y * self.cols + x
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn num_dies(&self) -> usize {
+        self.die_rows.len() + 1
+    }
+
+    /// Number of die boundaries crossed moving from row y0 to row y1.
+    pub fn die_crossings(&self, y0: usize, y1: usize) -> usize {
+        let (lo, hi) = if y0 <= y1 { (y0, y1) } else { (y1, y0) };
+        self.die_rows.iter().filter(|&&r| lo <= r && r < hi).count()
+    }
+
+    /// Manhattan slot distance plus the number of die crossings — the unit
+    /// used by the wirelength objective and the delay model.
+    pub fn slot_dist(&self, a: usize, b: usize) -> (usize, usize) {
+        let (ax, ay) = (self.slots[a].x, self.slots[a].y);
+        let (bx, by) = (self.slots[b].x, self.slots[b].y);
+        let manhattan = ax.abs_diff(bx) + ay.abs_diff(by);
+        (manhattan, self.die_crossings(ay, by))
+    }
+
+    /// Total device capacity.
+    pub fn total_capacity(&self) -> Resources {
+        self.slots
+            .iter()
+            .fold(Resources::ZERO, |acc, s| acc.add(&s.capacity))
+    }
+
+    /// Flattened f32 distance matrix (S×S) in row-major order, where
+    /// dist = manhattan + `die_weight` × die_crossings. Fed to the
+    /// PJRT-compiled floorplan-cost kernel.
+    pub fn distance_matrix(&self, die_weight: f32) -> Vec<f32> {
+        let s = self.num_slots();
+        let mut m = vec![0f32; s * s];
+        for a in 0..s {
+            for b in 0..s {
+                let (man, dies) = self.slot_dist(a, b);
+                m[a * s + b] = man as f32 + die_weight * dies as f32;
+            }
+        }
+        m
+    }
+
+    /// Per-slot capacity matrix (S×5) row-major [LUT, FF, BRAM, DSP, URAM].
+    pub fn capacity_matrix(&self) -> Vec<f32> {
+        let mut m = Vec::with_capacity(self.num_slots() * 5);
+        for s in &self.slots {
+            m.extend_from_slice(&[
+                s.capacity.lut as f32,
+                s.capacity.ff as f32,
+                s.capacity.bram as f32,
+                s.capacity.dsp as f32,
+                s.capacity.uram as f32,
+            ]);
+        }
+        m
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("name", Json::str(&self.name));
+        o.insert("part", Json::str(&self.part));
+        o.insert("cols", Json::num(self.cols as f64));
+        o.insert("rows", Json::num(self.rows as f64));
+        o.insert(
+            "die_rows",
+            Json::Arr(self.die_rows.iter().map(|r| Json::num(*r as f64)).collect()),
+        );
+        o.insert("sll_per_column", Json::num(self.sll_per_column as f64));
+        o.insert("hwire_capacity", Json::num(self.hwire_capacity as f64));
+        o.insert("vwire_capacity", Json::num(self.vwire_capacity as f64));
+        o.insert(
+            "slots",
+            Json::Arr(
+                self.slots
+                    .iter()
+                    .map(|s| {
+                        let mut so = JsonObj::new();
+                        so.insert("x", Json::num(s.x as f64));
+                        so.insert("y", Json::num(s.y as f64));
+                        so.insert("pblock", Json::str(&s.pblock));
+                        so.insert("die", Json::num(s.die as f64));
+                        so.insert(
+                            "capacity",
+                            crate::ir::builder::resources_to_json(&s.capacity),
+                        );
+                        Json::Obj(so)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<VirtualDevice> {
+        let gs = |k: &str| {
+            j.at(k)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow!("device missing '{k}'"))
+        };
+        let gn = |k: &str| {
+            j.at(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("device missing '{k}'"))
+        };
+        let mut slots = Vec::new();
+        for sj in j
+            .at("slots")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("device missing slots"))?
+        {
+            slots.push(Slot {
+                x: sj.at("x").and_then(|v| v.as_usize()).unwrap_or(0),
+                y: sj.at("y").and_then(|v| v.as_usize()).unwrap_or(0),
+                pblock: sj
+                    .at("pblock")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                die: sj.at("die").and_then(|v| v.as_usize()).unwrap_or(0),
+                capacity: sj
+                    .at("capacity")
+                    .map(crate::ir::builder::resources_from_json)
+                    .unwrap_or(Resources::ZERO),
+            });
+        }
+        Ok(VirtualDevice {
+            name: gs("name")?,
+            part: gs("part")?,
+            cols: gn("cols")? as usize,
+            rows: gn("rows")? as usize,
+            slots,
+            die_rows: j
+                .at("die_rows")
+                .and_then(|d| d.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default(),
+            sll_per_column: gn("sll_per_column")?,
+            hwire_capacity: gn("hwire_capacity")?,
+            vwire_capacity: gn("vwire_capacity")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builder::DeviceBuilder;
+
+    fn dev() -> VirtualDevice {
+        DeviceBuilder::new("test", "xctest")
+            .grid(2, 4)
+            .die_boundary_after_row(1)
+            .die_boundary_after_row(2)
+            .uniform_slot_capacity(Resources::new(100e3, 200e3, 300.0, 1500.0, 100.0))
+            .sll_per_column(5000)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn grid_layout() {
+        let d = dev();
+        assert_eq!(d.num_slots(), 8);
+        assert_eq!(d.num_dies(), 3);
+        assert_eq!(d.slot(1, 3).pblock, "SLOT_X1Y3");
+        assert_eq!(d.slot(0, 0).die, 0);
+        assert_eq!(d.slot(0, 2).die, 1);
+        assert_eq!(d.slot(0, 3).die, 2);
+    }
+
+    #[test]
+    fn die_crossings_counted() {
+        let d = dev();
+        assert_eq!(d.die_crossings(0, 0), 0);
+        assert_eq!(d.die_crossings(0, 1), 0); // boundary after row 1
+        assert_eq!(d.die_crossings(1, 2), 1);
+        assert_eq!(d.die_crossings(0, 3), 2);
+        assert_eq!(d.die_crossings(3, 0), 2); // symmetric
+    }
+
+    #[test]
+    fn slot_distance() {
+        let d = dev();
+        let a = d.slot_index(0, 0);
+        let b = d.slot_index(1, 3);
+        assert_eq!(d.slot_dist(a, b), (4, 2));
+        assert_eq!(d.slot_dist(a, a), (0, 0));
+    }
+
+    #[test]
+    fn distance_matrix_symmetry() {
+        let d = dev();
+        let m = d.distance_matrix(3.0);
+        let s = d.num_slots();
+        for a in 0..s {
+            assert_eq!(m[a * s + a], 0.0);
+            for b in 0..s {
+                assert_eq!(m[a * s + b], m[b * s + a]);
+            }
+        }
+        // (0,0) -> (0,2): manhattan 2 + 1 die crossing * 3.0
+        let a = d.slot_index(0, 0);
+        let b = d.slot_index(0, 2);
+        assert_eq!(m[a * s + b], 5.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = dev();
+        let j = d.to_json();
+        let d2 = VirtualDevice::from_json(&j).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn total_capacity_sums() {
+        let d = dev();
+        let t = d.total_capacity();
+        assert_eq!(t.lut, 800e3);
+        assert_eq!(t.dsp, 12000.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Simulated EDA backend ("VivadoSim"): synthesis characterization,
+//! baseline placement, routing/congestion, STA, and the synthesis
+//! wall-time model.
+
+pub mod place;
+pub mod synth;
+pub mod synthtime;
+pub mod vivado;
+
+pub use place::{place, PlacerConfig};
+pub use synth::SynthEstimator;
+pub use synthtime::SynthTimeModel;
+pub use vivado::{elaborate, implement, implement_netlist, ImplReport};

@@ -1,0 +1,341 @@
+//! Baseline "vendor" placer.
+//!
+//! Models what Vivado does *without* HLPS guidance (§1: "This forces
+//! downstream tools to place these blocks closer together to minimize
+//! total wire length, which in turn causes local routing congestion"):
+//! a deterministic seeded simulated-annealing placement that minimizes
+//! **wirelength only**, packing connected logic tightly — ignoring
+//! latency tolerance, die crossings-as-pipelining-opportunities, and the
+//! congestion cliff. Floorplan-constrained nodes (from RIR) stay fixed.
+
+use crate::device::model::VirtualDevice;
+use crate::ir::core::Resources;
+use crate::timing::netlist::FlatNetlist;
+use crate::timing::sta::Placement;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct PlacerConfig {
+    pub seed: u64,
+    pub iterations: usize,
+    /// Initial temperature as a fraction of initial cost.
+    pub t0_frac: f64,
+    /// Hard capacity: the placer refuses to overfill a slot beyond this.
+    pub capacity_limit: f64,
+    /// Weight of die crossings relative to manhattan distance in the
+    /// wirelength objective (vendor placers do weigh SLLs).
+    pub die_weight: f64,
+}
+
+impl Default for PlacerConfig {
+    fn default() -> Self {
+        PlacerConfig {
+            seed: 0xF1A6,
+            iterations: 40_000,
+            t0_frac: 0.08,
+            capacity_limit: 1.0,
+            die_weight: 2.0,
+        }
+    }
+}
+
+/// Wirelength of a placement (Σ width × weighted distance).
+pub fn wirelength(
+    nl: &FlatNetlist,
+    slot_of_node: &[usize],
+    dev: &VirtualDevice,
+    die_weight: f64,
+) -> f64 {
+    nl.edges
+        .iter()
+        .map(|e| {
+            let (man, dies) = dev.slot_dist(slot_of_node[e.src], slot_of_node[e.dst]);
+            e.width as f64 * (man as f64 + die_weight * dies as f64)
+        })
+        .sum()
+}
+
+/// Place the netlist. Returns None if total demand cannot fit the device
+/// at all (placer "fails to place").
+pub fn place(nl: &FlatNetlist, dev: &VirtualDevice, cfg: &PlacerConfig) -> Option<Placement> {
+    let ns = dev.num_slots();
+    if nl.nodes.is_empty() {
+        return Some(Placement::new(Vec::new()));
+    }
+
+    // Resolve fixed slots from pblock names.
+    let fixed: Vec<Option<usize>> = nl
+        .nodes
+        .iter()
+        .map(|n| {
+            n.fixed_slot
+                .as_ref()
+                .and_then(|pb| dev.slots.iter().position(|s| &s.pblock == pb))
+        })
+        .collect();
+
+    // Initial placement: BFS over the connectivity graph (what a
+    // wirelength-driven analytic placer converges to) packing nodes into
+    // slots in row-major adjacency order up to the capacity limit, so
+    // connected clusters land together before annealing refines.
+    let mut used = vec![Resources::ZERO; ns];
+    let mut slot_of_node = vec![usize::MAX; nl.nodes.len()];
+    for n in 0..nl.nodes.len() {
+        if let Some(s) = fixed[n] {
+            slot_of_node[n] = s;
+            used[s] = used[s].add(&nl.nodes[n].resources);
+        }
+    }
+    // BFS order seeded from the highest-degree unplaced node.
+    let mut degree = vec![0u64; nl.nodes.len()];
+    let mut neigh: Vec<Vec<usize>> = vec![Vec::new(); nl.nodes.len()];
+    for e in &nl.edges {
+        degree[e.src] += e.width;
+        degree[e.dst] += e.width;
+        neigh[e.src].push(e.dst);
+        neigh[e.dst].push(e.src);
+    }
+    let mut order: Vec<usize> = Vec::with_capacity(nl.nodes.len());
+    let mut seen = vec![false; nl.nodes.len()];
+    let mut seeds: Vec<usize> = (0..nl.nodes.len()).collect();
+    seeds.sort_by_key(|&n| std::cmp::Reverse(degree[n]));
+    for seed in seeds {
+        if seen[seed] {
+            continue;
+        }
+        let mut queue = std::collections::VecDeque::from([seed]);
+        seen[seed] = true;
+        while let Some(n) = queue.pop_front() {
+            order.push(n);
+            for &m in &neigh[n] {
+                if !seen[m] {
+                    seen[m] = true;
+                    queue.push_back(m);
+                }
+            }
+        }
+    }
+    let mut cursor = 0usize; // current slot in row-major order
+    for &n in &order {
+        if slot_of_node[n] != usize::MAX {
+            continue;
+        }
+        let mut placed = false;
+        for k in 0..ns {
+            let s = (cursor + k) % ns;
+            let u = used[s]
+                .add(&nl.nodes[n].resources)
+                .max_util(&dev.slots[s].capacity);
+            if u <= cfg.capacity_limit {
+                slot_of_node[n] = s;
+                used[s] = used[s].add(&nl.nodes[n].resources);
+                cursor = s;
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            // Overfull device: fall back to the least-loaded slot.
+            let s = (0..ns)
+                .min_by(|&a, &b| {
+                    let ua = used[a]
+                        .add(&nl.nodes[n].resources)
+                        .max_util(&dev.slots[a].capacity);
+                    let ub = used[b]
+                        .add(&nl.nodes[n].resources)
+                        .max_util(&dev.slots[b].capacity);
+                    ua.partial_cmp(&ub).unwrap()
+                })
+                .unwrap();
+            slot_of_node[n] = s;
+            used[s] = used[s].add(&nl.nodes[n].resources);
+        }
+    }
+    // Fixed nodes may legitimately exceed the limit (RIR decides); only
+    // movable nodes respect the placer's own capacity limit during SA.
+
+    // Simulated annealing on single-node moves, wirelength objective.
+    // Iteration budget scales with design size so large flat netlists
+    // converge (~2000 proposed moves per movable node).
+    let movable: Vec<usize> = (0..nl.nodes.len()).filter(|&n| fixed[n].is_none()).collect();
+    let iterations = cfg.iterations.max(movable.len() * 2000);
+    if !movable.is_empty() {
+        let mut rng = Rng::new(cfg.seed);
+        // Per-node edge adjacency for incremental cost.
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nl.nodes.len()];
+        for (ei, e) in nl.edges.iter().enumerate() {
+            adj[e.src].push(ei);
+            adj[e.dst].push(ei);
+        }
+        let edge_cost = |e: &crate::timing::netlist::FlatEdge, slots: &[usize]| {
+            let (man, dies) = dev.slot_dist(slots[e.src], slots[e.dst]);
+            e.width as f64 * (man as f64 + cfg.die_weight * dies as f64)
+        };
+        let init_cost = wirelength(nl, &slot_of_node, dev, cfg.die_weight);
+        let mut temp = (init_cost * cfg.t0_frac).max(1.0);
+        let cooling = 0.999965f64.powf(40_000.0 / iterations.max(1) as f64);
+        for it in 0..iterations {
+            temp *= cooling;
+            if it % 10 < 3 && movable.len() >= 2 {
+                // Swap move: exchanges two nodes — escapes tight-capacity
+                // local minima single-node moves cannot leave.
+                let a = *rng.pick(&movable);
+                let b = *rng.pick(&movable);
+                let (sa, sb) = (slot_of_node[a], slot_of_node[b]);
+                if a == b || sa == sb {
+                    continue;
+                }
+                let ua = sub(used[sa], &nl.nodes[a].resources)
+                    .add(&nl.nodes[b].resources)
+                    .max_util(&dev.slots[sa].capacity);
+                let ub = sub(used[sb], &nl.nodes[b].resources)
+                    .add(&nl.nodes[a].resources)
+                    .max_util(&dev.slots[sb].capacity);
+                if ua > cfg.capacity_limit || ub > cfg.capacity_limit {
+                    continue;
+                }
+                let edges: std::collections::BTreeSet<usize> =
+                    adj[a].iter().chain(adj[b].iter()).copied().collect();
+                let before: f64 = edges.iter().map(|&ei| edge_cost(&nl.edges[ei], &slot_of_node)).sum();
+                slot_of_node[a] = sb;
+                slot_of_node[b] = sa;
+                let after: f64 = edges.iter().map(|&ei| edge_cost(&nl.edges[ei], &slot_of_node)).sum();
+                let delta = after - before;
+                if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
+                    let ra = nl.nodes[a].resources;
+                    let rb = nl.nodes[b].resources;
+                    used[sa] = sub(used[sa], &ra).add(&rb);
+                    used[sb] = sub(used[sb], &rb).add(&ra);
+                } else {
+                    slot_of_node[a] = sa;
+                    slot_of_node[b] = sb;
+                }
+                continue;
+            }
+            let n = *rng.pick(&movable);
+            let old_slot = slot_of_node[n];
+            let new_slot = rng.below(ns);
+            if new_slot == old_slot {
+                continue;
+            }
+            // Capacity check.
+            let nu = used[new_slot]
+                .add(&nl.nodes[n].resources)
+                .max_util(&dev.slots[new_slot].capacity);
+            if nu > cfg.capacity_limit {
+                continue;
+            }
+            let before: f64 = adj[n].iter().map(|&ei| edge_cost(&nl.edges[ei], &slot_of_node)).sum();
+            slot_of_node[n] = new_slot;
+            let after: f64 = adj[n].iter().map(|&ei| edge_cost(&nl.edges[ei], &slot_of_node)).sum();
+            let delta = after - before;
+            if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
+                // accept
+                used[old_slot] = sub(used[old_slot], &nl.nodes[n].resources);
+                used[new_slot] = used[new_slot].add(&nl.nodes[n].resources);
+            } else {
+                slot_of_node[n] = old_slot;
+            }
+        }
+    }
+
+    Some(Placement::new(slot_of_node))
+}
+
+fn sub(a: Resources, b: &Resources) -> Resources {
+    Resources {
+        lut: a.lut - b.lut,
+        ff: a.ff - b.ff,
+        bram: a.bram - b.bram,
+        dsp: a.dsp - b.dsp,
+        uram: a.uram - b.uram,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::timing::netlist::{FlatEdge, FlatNode};
+
+    fn node(path: &str, lut: f64) -> FlatNode {
+        FlatNode {
+            path: path.into(),
+            module: "M".into(),
+            resources: Resources::new(lut, lut, 0.0, 0.0, 0.0),
+            internal_ns: 2.0,
+            is_pipeline: false,
+            fixed_slot: None,
+        }
+    }
+
+    #[test]
+    fn chain_gets_colocated() {
+        // 6 small nodes in a chain fit one slot; vendor placer should pull
+        // them close (wirelength near zero).
+        let dev = builtin::by_name("u250").unwrap();
+        let nl = FlatNetlist {
+            nodes: (0..6).map(|i| node(&format!("n{i}"), 1000.0)).collect(),
+            edges: (0..5)
+                .map(|i| FlatEdge {
+                    src: i,
+                    dst: i + 1,
+                    width: 64,
+                    pipelinable: true,
+                })
+                .collect(),
+        };
+        let p = place(&nl, &dev, &PlacerConfig::default()).unwrap();
+        let wl = wirelength(&nl, &p.slot_of_node, &dev, 2.0);
+        assert!(wl <= 64.0 * 2.0, "wl={wl} placement={:?}", p.slot_of_node);
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let dev = builtin::by_name("u280").unwrap();
+        // Two nodes each ~60% of a slot: cannot share one slot.
+        let cap = dev.slots[0].capacity.lut;
+        let nl = FlatNetlist {
+            nodes: vec![node("a", cap * 0.6), node("b", cap * 0.6)],
+            edges: vec![FlatEdge {
+                src: 0,
+                dst: 1,
+                width: 8,
+                pipelinable: true,
+            }],
+        };
+        let p = place(&nl, &dev, &PlacerConfig::default()).unwrap();
+        assert_ne!(p.slot_of_node[0], p.slot_of_node[1]);
+    }
+
+    #[test]
+    fn fixed_slots_honored() {
+        let dev = builtin::by_name("u250").unwrap();
+        let mut nl = FlatNetlist {
+            nodes: vec![node("a", 100.0), node("b", 100.0)],
+            edges: vec![],
+        };
+        nl.nodes[0].fixed_slot = Some("SLOT_X1Y3".into());
+        let p = place(&nl, &dev, &PlacerConfig::default()).unwrap();
+        assert_eq!(p.slot_of_node[0], dev.slot_index(1, 3));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let dev = builtin::by_name("u280").unwrap();
+        let nl = FlatNetlist {
+            nodes: (0..10).map(|i| node(&format!("n{i}"), 5000.0)).collect(),
+            edges: (0..9)
+                .map(|i| FlatEdge {
+                    src: i,
+                    dst: i + 1,
+                    width: 32,
+                    pipelinable: true,
+                })
+                .collect(),
+        };
+        let p1 = place(&nl, &dev, &PlacerConfig::default()).unwrap();
+        let p2 = place(&nl, &dev, &PlacerConfig::default()).unwrap();
+        assert_eq!(p1, p2);
+    }
+}

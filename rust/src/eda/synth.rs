@@ -1,0 +1,213 @@
+//! Synthesis surrogate: per-module resource and timing characterization.
+//!
+//! The paper's platform analyzer "interfaces with vendor tools to collect
+//! data" (§3.2) — here the vendor synthesizer is replaced by (a) metadata
+//! already attached to the module (the HLS-report path: benchmark
+//! generators attach exact `resource` / `timing` entries, as Vitis HLS
+//! reports would provide), and (b) an AST-based estimator for handwritten
+//! Verilog aux logic where no report exists.
+
+use crate::ir::core::*;
+use crate::timing::netlist::ModuleCharacteristics;
+use crate::verilog::ast::{VItem, VModule};
+use crate::verilog::parser::parse_file;
+
+/// Characteristics provider: metadata first, AST estimation fallback.
+pub struct SynthEstimator {
+    /// Default internal delay when nothing else is known (ns).
+    pub default_internal_ns: f64,
+}
+
+impl Default for SynthEstimator {
+    fn default() -> Self {
+        SynthEstimator {
+            default_internal_ns: 2.2,
+        }
+    }
+}
+
+impl ModuleCharacteristics for SynthEstimator {
+    fn resources(&self, m: &Module) -> Resources {
+        if let Some(r) = crate::ir::builder::module_resources(m) {
+            return r;
+        }
+        match &m.body {
+            Body::Leaf {
+                format: SourceFormat::Verilog,
+                source,
+            } => estimate_verilog(source).unwrap_or_else(|| estimate_from_ports(m)),
+            _ => estimate_from_ports(m),
+        }
+    }
+
+    fn internal_ns(&self, m: &Module) -> f64 {
+        if let Some(t) = m
+            .metadata
+            .get("timing")
+            .and_then(|t| t.at("internal_ns"))
+            .and_then(|v| v.as_f64())
+        {
+            return t;
+        }
+        // Logic-depth heuristic: larger modules have longer internal paths.
+        let r = self.resources(m);
+        let lut = r.lut.max(1.0);
+        // 1.6 ns base + ~0.09 ns per doubling of LUT count beyond 100.
+        let depth = (lut / 100.0).max(1.0).log2();
+        (1.6 + 0.09 * depth).min(3.4).max(0.8)
+    }
+}
+
+/// AST-based resource estimation for handwritten Verilog.
+///
+/// Deliberately coarse — the quantities that matter downstream are
+/// relative module sizes, not gate-accurate counts:
+/// * FF  ≈ Σ widths of `reg` declarations (+ per always block overhead);
+/// * LUT ≈ Σ expression operator costs in assigns + always blocks;
+/// * DSP ≈ wide multiplications;
+/// * BRAM ≈ memory arrays (captured raw; detected textually).
+pub fn estimate_verilog(source: &str) -> Option<Resources> {
+    let file = parse_file(source).ok()?;
+    let mut total = Resources::ZERO;
+    for m in &file.modules {
+        total = total.add(&estimate_vmodule(m));
+    }
+    Some(total)
+}
+
+pub fn estimate_vmodule(m: &VModule) -> Resources {
+    let mut r = Resources::ZERO;
+    for item in &m.items {
+        match item {
+            VItem::Net(n) => {
+                if n.kind == "reg" {
+                    r.ff += (n.width as f64) * n.names.len() as f64;
+                }
+            }
+            VItem::Assign(a) => {
+                r.lut += expr_lut_cost(&a.rhs, m);
+                let (dsp, bram) = expr_hard_blocks(&a.rhs, m);
+                r.dsp += dsp;
+                r.bram += bram;
+            }
+            VItem::Raw(raw) => {
+                // Heuristics over verbatim logic.
+                let ops = raw.matches("<=").count() + raw.matches('=').count();
+                r.lut += 4.0 * ops as f64;
+                let (dsp, bram) = expr_hard_blocks(raw, m);
+                r.dsp += dsp;
+                r.bram += bram;
+                // Memory arrays: `reg [..] name [0:N]`.
+                if raw.contains("reg") && raw.matches('[').count() >= 2 {
+                    r.bram += 1.0;
+                }
+                if raw.trim_start().starts_with("always") {
+                    r.ff += 8.0;
+                }
+            }
+            VItem::Instance(_) => {}
+        }
+    }
+    // Port registering overhead.
+    let port_bits: u32 = m.ports.iter().map(|p| p.width).sum();
+    r.ff += port_bits as f64 * 0.5;
+    r.lut += port_bits as f64 * 0.25;
+    r
+}
+
+fn expr_lut_cost(expr: &str, m: &VModule) -> f64 {
+    let width_guess = crate::verilog::ast::expr_identifiers(expr)
+        .iter()
+        .filter_map(|id| m.width_of(id))
+        .max()
+        .unwrap_or(1) as f64;
+    let ops = expr.matches(|c| "&|^~+-<>?".contains(c)).count().max(1);
+    ops as f64 * width_guess * 0.5
+}
+
+fn expr_hard_blocks(expr: &str, m: &VModule) -> (f64, f64) {
+    let mut dsp = 0.0;
+    // Count '*' not part of comments/power.
+    let muls = expr
+        .as_bytes()
+        .windows(2)
+        .filter(|w| w[0] == b'*' && w[1] != b'*' && w[1] != b'/' && w[1] != b')')
+        .count();
+    if muls > 0 {
+        let w = crate::verilog::ast::expr_identifiers(expr)
+            .iter()
+            .filter_map(|id| m.width_of(id))
+            .max()
+            .unwrap_or(18) as f64;
+        dsp += muls as f64 * (w / 18.0).ceil();
+    }
+    (dsp, 0.0)
+}
+
+/// Port-sum fallback when no source is parseable (XCI/XO/blackbox leaves
+/// without metadata).
+fn estimate_from_ports(m: &Module) -> Resources {
+    let bits: u32 = m.ports.iter().map(|p| p.width).sum();
+    Resources::new(bits as f64 * 2.0, bits as f64 * 2.0, 0.0, 0.0, 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::LeafBuilder;
+
+    #[test]
+    fn metadata_takes_priority() {
+        let est = SynthEstimator::default();
+        let m = LeafBuilder::verilog_stub("M")
+            .port("a", Dir::In, 64)
+            .resource(Resources::new(1234.0, 10.0, 1.0, 2.0, 3.0))
+            .build();
+        assert_eq!(est.resources(&m).lut, 1234.0);
+    }
+
+    #[test]
+    fn verilog_reg_counted_as_ff() {
+        let src = "module M(input clk);\nreg [31:0] acc;\nreg flag;\nendmodule";
+        let r = estimate_verilog(src).unwrap();
+        assert!(r.ff >= 33.0, "{r:?}");
+    }
+
+    #[test]
+    fn multiplication_uses_dsp() {
+        let src =
+            "module M(input [26:0] a, input [17:0] b, output [44:0] y);\nassign y = a * b;\nendmodule";
+        let r = estimate_verilog(src).unwrap();
+        assert!(r.dsp >= 1.0, "{r:?}");
+    }
+
+    #[test]
+    fn memory_array_uses_bram() {
+        let src = "module M(input clk);\nreg [63:0] mem [0:511];\nendmodule";
+        let r = estimate_verilog(src).unwrap();
+        assert!(r.bram >= 1.0, "{r:?}");
+    }
+
+    #[test]
+    fn internal_delay_grows_with_size() {
+        let est = SynthEstimator::default();
+        let small = LeafBuilder::verilog_stub("S")
+            .resource(Resources::new(100.0, 0.0, 0.0, 0.0, 0.0))
+            .build();
+        let big = LeafBuilder::verilog_stub("B")
+            .resource(Resources::new(100_000.0, 0.0, 0.0, 0.0, 0.0))
+            .build();
+        assert!(est.internal_ns(&big) > est.internal_ns(&small));
+        assert!(est.internal_ns(&big) <= 3.4);
+    }
+
+    #[test]
+    fn timing_metadata_respected() {
+        let est = SynthEstimator::default();
+        let mut m = LeafBuilder::verilog_stub("T").build();
+        let mut t = crate::util::json::JsonObj::new();
+        t.insert("internal_ns", crate::util::json::Json::num(3.14));
+        m.metadata.insert("timing", crate::util::json::Json::Obj(t));
+        assert_eq!(est.internal_ns(&m), 3.14);
+    }
+}

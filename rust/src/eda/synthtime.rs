@@ -1,0 +1,147 @@
+//! Synthesis wall-time model for the parallel-synthesis case study
+//! (§4.3 / Figure 13).
+//!
+//! Vendor logic synthesis scales super-linearly with design size; the
+//! per-slot divide-and-conquer flow wins by (a) smaller problems and
+//! (b) parallelism across slots, at the price of a final assembly step
+//! over black-box netlists. The model below reproduces that shape: the
+//! paper reports 2.49× mean wall-time speedup on CNN 13×4…13×12, growing
+//! with array size.
+
+use crate::ir::core::Resources;
+
+/// Wall-time model constants (seconds).
+#[derive(Debug, Clone)]
+pub struct SynthTimeModel {
+    /// Fixed tool start-up per invocation.
+    pub startup_s: f64,
+    /// Seconds per kLUT (linear term).
+    pub per_klut_s: f64,
+    /// Super-linear exponent on total size.
+    pub exponent: f64,
+    /// Final assembly base cost (open netlists, stitch top).
+    pub assembly_base_s: f64,
+    /// Assembly cost per kLUT of the whole design (netlist linking).
+    pub assembly_per_klut_s: f64,
+}
+
+impl Default for SynthTimeModel {
+    fn default() -> Self {
+        SynthTimeModel {
+            startup_s: 45.0,
+            per_klut_s: 7.0,
+            exponent: 1.10,
+            assembly_base_s: 60.0,
+            assembly_per_klut_s: 1.5,
+        }
+    }
+}
+
+impl SynthTimeModel {
+    /// Modeled wall time to synthesize one blob of logic.
+    pub fn synth_s(&self, r: &Resources) -> f64 {
+        let klut = (r.lut / 1000.0).max(0.1);
+        self.startup_s + self.per_klut_s * klut.powf(self.exponent)
+    }
+
+    /// Monolithic flow: one synthesis of everything.
+    pub fn monolithic_s(&self, total: &Resources) -> f64 {
+        self.synth_s(total)
+    }
+
+    /// Parallel flow: synthesize each slot's group concurrently on
+    /// `workers` parallel jobs (the top wrapper with black boxes counts as
+    /// one more job), then assemble.
+    pub fn parallel_s(&self, groups: &[Resources], workers: usize) -> f64 {
+        assert!(workers > 0);
+        // List-scheduling (LPT) of jobs onto workers.
+        let mut jobs: Vec<f64> = groups.iter().map(|g| self.synth_s(g)).collect();
+        // Top-level wrapper job: tiny.
+        jobs.push(self.startup_s);
+        jobs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut load = vec![0.0f64; workers];
+        for j in jobs {
+            let w = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            load[w] += j;
+        }
+        let makespan = load.iter().cloned().fold(0.0, f64::max);
+        let total_klut: f64 = groups.iter().map(|g| g.lut / 1000.0).sum();
+        makespan + self.assembly_base_s + self.assembly_per_klut_s * total_klut
+    }
+
+    /// Speedup of the parallel flow.
+    pub fn speedup(&self, groups: &[Resources], workers: usize) -> f64 {
+        let total = groups.iter().fold(Resources::ZERO, |a, g| a.add(g));
+        self.monolithic_s(&total) / self.parallel_s(groups, workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups(n: usize, klut_each: f64) -> Vec<Resources> {
+        (0..n)
+            .map(|_| Resources::new(klut_each * 1000.0, 0.0, 0.0, 0.0, 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn parallel_beats_monolithic_for_large_designs() {
+        let m = SynthTimeModel::default();
+        let g = groups(8, 30.0); // 240 kLUT total across 8 slots
+        let s = m.speedup(&g, 8);
+        assert!(s > 1.5, "speedup {s}");
+    }
+
+    #[test]
+    fn speedup_grows_with_design_size() {
+        let m = SynthTimeModel::default();
+        let small = m.speedup(&groups(8, 5.0), 8);
+        let large = m.speedup(&groups(8, 40.0), 8);
+        assert!(large > small, "small={small} large={large}");
+    }
+
+    #[test]
+    fn tiny_designs_not_worth_splitting() {
+        let m = SynthTimeModel::default();
+        // 8 × 0.5 kLUT: startup + assembly dominate.
+        let s = m.speedup(&groups(8, 0.5), 8);
+        assert!(s < 1.2, "{s}");
+    }
+
+    #[test]
+    fn worker_limit_respected() {
+        let m = SynthTimeModel::default();
+        let g = groups(8, 30.0);
+        let s1 = m.parallel_s(&g, 1);
+        let s8 = m.parallel_s(&g, 8);
+        assert!(s1 > s8 * 3.0);
+        // Single worker ≈ sum of all jobs + assembly.
+        let total_klut: f64 = g.iter().map(|r| r.lut / 1000.0).sum();
+        let sum: f64 = g.iter().map(|r| m.synth_s(r)).sum::<f64>() + m.startup_s
+            + m.assembly_base_s + m.assembly_per_klut_s * total_klut;
+        assert!((s1 - sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_matches_paper_range() {
+        // CNN-like: arrays from ~50 to ~150 kLUT over 8 slots on U250;
+        // mean speedup should land in the 2–3× band (paper: 2.49×).
+        let m = SynthTimeModel::default();
+        let mut speedups = Vec::new();
+        for total_klut in [50.0, 75.0, 100.0, 125.0, 150.0] {
+            let g = groups(8, total_klut / 8.0);
+            speedups.push(m.speedup(&g, 8));
+        }
+        let mean: f64 = speedups.iter().sum::<f64>() / speedups.len() as f64;
+        assert!(mean > 1.8 && mean < 3.5, "mean speedup {mean}");
+        // Monotone growth with size.
+        assert!(speedups.windows(2).all(|w| w[1] >= w[0] - 1e-9));
+    }
+}

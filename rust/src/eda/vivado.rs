@@ -1,0 +1,169 @@
+//! Vendor-tool facade ("VivadoSim"): synthesize → place → route → STA.
+//!
+//! `implement` is what both the baseline flow (no HLPS) and the RIR flow
+//! call at the very end. The only difference between them is what they
+//! hand over: the baseline passes the raw design (placer free to pack),
+//! RIR passes a design whose instances carry `floorplan` metadata and
+//! whose long nets have been broken with pipeline elements.
+
+use crate::device::model::VirtualDevice;
+use crate::eda::place::{place, PlacerConfig};
+use crate::eda::synth::SynthEstimator;
+use crate::ir::core::Design;
+use crate::timing::delay::DelayModel;
+use crate::timing::netlist::{flatten, FlatNetlist};
+use crate::timing::sta::{Placement, TimingReport};
+use anyhow::{anyhow, Result};
+
+/// Result of a full implementation run.
+#[derive(Debug, Clone)]
+pub struct ImplReport {
+    pub timing: TimingReport,
+    pub placement: Placement,
+    pub netlist_nodes: usize,
+    pub netlist_edges: usize,
+    /// Total resources as fraction of device capacity (LUT/FF/BRAM/DSP/URAM %).
+    pub util_pct: [f64; 5],
+}
+
+impl ImplReport {
+    pub fn fmax_mhz(&self) -> f64 {
+        self.timing.fmax_mhz
+    }
+
+    pub fn routable(&self) -> bool {
+        self.timing.routable
+    }
+}
+
+/// Flatten a design with the standard estimator.
+pub fn elaborate(design: &Design) -> FlatNetlist {
+    flatten(design, &SynthEstimator::default())
+}
+
+/// Run the full backend on an elaborated netlist.
+pub fn implement_netlist(
+    nl: &FlatNetlist,
+    dev: &VirtualDevice,
+    placer: &PlacerConfig,
+    dm: &DelayModel,
+) -> Result<ImplReport> {
+    implement_netlist_with(nl, dev, placer, dm, crate::timing::sta::StaOptions::default())
+}
+
+/// Backend with explicit STA options (`unguided: true` = vendor baseline
+/// without floorplan guidance).
+pub fn implement_netlist_with(
+    nl: &FlatNetlist,
+    dev: &VirtualDevice,
+    placer: &PlacerConfig,
+    dm: &DelayModel,
+    opts: crate::timing::sta::StaOptions,
+) -> Result<ImplReport> {
+    let placement =
+        place(nl, dev, placer).ok_or_else(|| anyhow!("placement failed: design does not fit"))?;
+    let timing = crate::timing::sta::analyze_with(nl, &placement, dev, dm, opts);
+    let total = nl.total_resources();
+    let cap = dev.total_capacity();
+    let pct = |x: f64, c: f64| if c > 0.0 { 100.0 * x / c } else { 0.0 };
+    Ok(ImplReport {
+        util_pct: [
+            pct(total.lut, cap.lut),
+            pct(total.ff, cap.ff),
+            pct(total.bram, cap.bram),
+            pct(total.dsp, cap.dsp),
+            pct(total.uram, cap.uram),
+        ],
+        netlist_nodes: nl.nodes.len(),
+        netlist_edges: nl.edges.len(),
+        placement,
+        timing,
+    })
+}
+
+/// One-call flow: elaborate + place + analyze.
+pub fn implement(design: &Design, dev: &VirtualDevice) -> Result<ImplReport> {
+    let nl = elaborate(design);
+    implement_netlist(&nl, dev, &PlacerConfig::default(), &DelayModel::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::ir::builder::*;
+    use crate::ir::core::*;
+
+    fn pipeline_design(n: usize, lut_each: f64) -> Design {
+        let mut d = Design::new("Top");
+        let mut top = GroupedBuilder::new("Top")
+            .port("ap_clk", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            });
+        for i in 0..n {
+            let m = LeafBuilder::verilog_stub(format!("Stage{i}"))
+                .clk_rst()
+                .handshake("i", Dir::In, 64)
+                .handshake("o", Dir::Out, 64)
+                .resource(Resources::new(lut_each, lut_each, 8.0, 32.0, 0.0))
+                .build();
+            d.add(m);
+        }
+        for i in 0..n.saturating_sub(1) {
+            top = top
+                .wire(&format!("w{i}"), 64)
+                .wire(&format!("w{i}_vld"), 1)
+                .wire(&format!("w{i}_rdy"), 1);
+        }
+        for i in 0..n {
+            let mut inst = Instance::new(format!("s{i}"), format!("Stage{i}"));
+            inst.connect("ap_clk", ConnExpr::id("ap_clk"));
+            if i > 0 {
+                inst.connect("i", ConnExpr::id(&format!("w{}", i - 1)));
+                inst.connect("i_vld", ConnExpr::id(&format!("w{}_vld", i - 1)));
+                inst.connect("i_rdy", ConnExpr::id(&format!("w{}_rdy", i - 1)));
+            }
+            if i + 1 < n {
+                inst.connect("o", ConnExpr::id(&format!("w{i}")));
+                inst.connect("o_vld", ConnExpr::id(&format!("w{i}_vld")));
+                inst.connect("o_rdy", ConnExpr::id(&format!("w{i}_rdy")));
+            }
+            top = top.inst_full(inst);
+        }
+        d.add(top.build());
+        d
+    }
+
+    #[test]
+    fn small_design_implements_routable() {
+        let d = pipeline_design(4, 2000.0);
+        let dev = builtin::by_name("u280").unwrap();
+        let r = implement(&d, &dev).unwrap();
+        assert!(r.routable());
+        assert!(r.fmax_mhz() > 250.0, "{}", r.fmax_mhz());
+        assert_eq!(r.netlist_nodes, 4);
+    }
+
+    #[test]
+    fn oversized_design_fails_placement_or_routing() {
+        // Each stage ~80% of a slot, 12 stages on a 6-slot device.
+        let dev = builtin::by_name("u280").unwrap();
+        let cap = dev.slots[5].capacity.lut;
+        let d = pipeline_design(12, cap * 0.8);
+        match implement(&d, &dev) {
+            Ok(r) => assert!(!r.routable(), "should be congested"),
+            Err(_) => {} // placement failure also acceptable
+        }
+    }
+
+    #[test]
+    fn utilization_percentages_reported() {
+        let d = pipeline_design(4, 10_000.0);
+        let dev = builtin::by_name("u250").unwrap();
+        let r = implement(&d, &dev).unwrap();
+        let total_lut = 4.0 * 10_000.0;
+        let expect = 100.0 * total_lut / dev.total_capacity().lut;
+        assert!((r.util_pct[0] - expect).abs() < 0.1);
+    }
+}

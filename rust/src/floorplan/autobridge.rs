@@ -1,0 +1,408 @@
+//! AutoBridge-style ILP floorplanning (§3.4 stage 3).
+//!
+//! Binary variable `x[v][s]` assigns unit `v` to slot `s`. The wirelength
+//! objective is linearized with per-edge |Δcol| / |Δrow| envelope
+//! variables, where row coordinates are *die-weighted potentials*: row r
+//! maps to `r + die_weight × (#boundaries below r)`, so |Δrow-potential|
+//! is exactly `manhattan_rows + die_weight × die_crossings` — the same
+//! metric the SA explorer and the Pallas kernel use. Constraints:
+//!
+//! * each unit in exactly one slot;
+//! * per-slot resource capacity ≤ `util_limit` per kind (the knob Figure
+//!   12 sweeps);
+//! * pinned units respect their pin;
+//! * an aggregate die-crossing budget approximates SLL capacity (exact
+//!   per-column accounting is checked post-hoc by the router).
+
+use crate::device::model::VirtualDevice;
+use crate::floorplan::problem::Problem;
+use crate::ilp::{self, BnbConfig, Cmp, IlpModel, Status};
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct IlpFpConfig {
+    /// Max per-slot utilization per resource kind (Fig 12's x-axis knob).
+    pub util_limit: f64,
+    /// Branch & bound node budget (the "400-second" analogue).
+    pub max_nodes: usize,
+    /// Max units the ILP accepts before coarsening kicks in.
+    pub max_units: usize,
+    /// Fraction of total SLL capacity the crossing budget allows.
+    pub sll_budget_frac: f64,
+}
+
+impl Default for IlpFpConfig {
+    fn default() -> Self {
+        IlpFpConfig {
+            util_limit: 0.70,
+            max_nodes: 600,
+            max_units: 12,
+            sll_budget_frac: 0.9,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FloorplanResult {
+    /// Slot per problem unit.
+    pub unit_slots: Vec<usize>,
+    pub wirelength: f64,
+    pub optimal: bool,
+}
+
+/// Solve the floorplan ILP, relaxing the utilization limit in +0.05 steps
+/// (up to the router's give-up point) when the requested limit is
+/// infeasible — mirroring how the Fig 12 exploration walks the knob.
+pub fn solve(
+    problem: &Problem,
+    dev: &VirtualDevice,
+    cfg: &IlpFpConfig,
+) -> Result<FloorplanResult> {
+    let mut limit = cfg.util_limit;
+    loop {
+        let mut attempt = cfg.clone();
+        attempt.util_limit = limit;
+        match solve_at(problem, dev, &attempt) {
+            Ok(r) => return Ok(r),
+            Err(e) if limit + 0.05 <= 0.90 + 1e-9 => {
+                log::debug!("floorplan at util {limit:.2} failed ({e}); relaxing");
+                limit += 0.05;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Single-shot ILP solve at exactly `cfg.util_limit`.
+pub fn solve_at(
+    problem: &Problem,
+    dev: &VirtualDevice,
+    cfg: &IlpFpConfig,
+) -> Result<FloorplanResult> {
+    let coarse = problem.coarsen(cfg.max_units);
+    let ns = dev.num_slots();
+    let nu = coarse.units.len();
+    if nu == 0 {
+        return Ok(FloorplanResult {
+            unit_slots: Vec::new(),
+            wirelength: 0.0,
+            optimal: true,
+        });
+    }
+
+    // Die-weighted row potential and plain column positions.
+    let rowpot: Vec<f64> = (0..dev.rows)
+        .map(|r| r as f64 + coarse.die_weight * dev.die_rows.iter().filter(|&&b| b < r).count() as f64)
+        .collect();
+
+    let mut m = IlpModel::new();
+    // x[v][s]
+    let mut x = vec![vec![0usize; ns]; nu];
+    for (v, unit) in coarse.units.iter().enumerate() {
+        for s in 0..ns {
+            x[v][s] = m.binary(format!("x_{v}_{s}"));
+        }
+        // exactly one slot
+        m.constraint(
+            format!("assign_{v}"),
+            (0..ns).map(|s| (x[v][s], 1.0)).collect(),
+            Cmp::Eq,
+            1.0,
+        );
+        // pinning
+        if let Some(pin) = unit.fixed_slot {
+            m.constraint(format!("pin_{v}"), vec![(x[v][pin], 1.0)], Cmp::Eq, 1.0);
+        }
+    }
+    // per-slot resource limits
+    for s in 0..ns {
+        let cap = &dev.slots[s].capacity;
+        for (k, kind) in crate::ir::core::Resources::kinds().iter().enumerate() {
+            let capk = cap.get(kind);
+            if capk <= 0.0 {
+                continue;
+            }
+            let terms: Vec<(usize, f64)> = (0..nu)
+                .map(|v| (x[v][s], coarse.units[v].resources.get(kind)))
+                .filter(|(_, c)| *c > 0.0)
+                .collect();
+            if terms.is_empty() {
+                continue;
+            }
+            m.constraint(
+                format!("cap_{s}_{k}"),
+                terms,
+                Cmp::Le,
+                cfg.util_limit * capk,
+            );
+        }
+    }
+    // per-edge |Δcol| and |Δrowpot| envelopes
+    let col_of = |s: usize| dev.slots[s].x as f64;
+    let row_of = |s: usize| rowpot[dev.slots[s].y];
+    let max_pot = rowpot.last().copied().unwrap_or(0.0) + dev.cols as f64;
+    let mut crossing_terms: Vec<(usize, f64)> = Vec::new();
+    let mut env_vars: Vec<(usize, usize)> = Vec::with_capacity(coarse.edges.len());
+    for (ei, e) in coarse.edges.iter().enumerate() {
+        let dx = m.cont(format!("dx_{ei}"), 0.0, max_pot);
+        let dy = m.cont(format!("dy_{ei}"), 0.0, max_pot);
+        env_vars.push((dx, dy));
+        // dx >= Xa - Xb and dx >= Xb - Xa, X = Σ col(s)·x[v][s]
+        for sign in [1.0f64, -1.0] {
+            let mut terms = vec![(dx, 1.0)];
+            for s in 0..ns {
+                terms.push((x[e.a][s], -sign * col_of(s)));
+                terms.push((x[e.b][s], sign * col_of(s)));
+            }
+            m.constraint(format!("dxc_{ei}_{sign}"), terms, Cmp::Ge, 0.0);
+            let mut terms = vec![(dy, 1.0)];
+            for s in 0..ns {
+                terms.push((x[e.a][s], -sign * row_of(s)));
+                terms.push((x[e.b][s], sign * row_of(s)));
+            }
+            m.constraint(format!("dyc_{ei}_{sign}"), terms, Cmp::Ge, 0.0);
+        }
+        m.obj(dx, e.width as f64);
+        m.obj(dy, e.width as f64);
+        crossing_terms.push((dy, e.width as f64));
+    }
+    // aggregate SLL budget (die_weight scales each crossing's contribution
+    // to dy, so divide it back out).
+    if !dev.die_rows.is_empty() && coarse.die_weight > 0.0 {
+        let budget = cfg.sll_budget_frac
+            * (dev.sll_per_column * dev.cols as u64 * dev.die_rows.len() as u64) as f64
+            * coarse.die_weight;
+        m.constraint("sll_budget", crossing_terms, Cmp::Le, budget);
+    }
+
+    // Warm start: greedy feasible placement (B&B prunes against it from
+    // node zero; budget exhaustion then still returns a decent plan).
+    let initial = greedy_initial(&coarse, dev, cfg.util_limit).map(|slots| {
+        let mut x0 = vec![0.0f64; m.num_vars()];
+        for (v, &s) in slots.iter().enumerate() {
+            x0[x[v][s]] = 1.0;
+        }
+        for (ei, e) in coarse.edges.iter().enumerate() {
+            let (dxv, dyv) = env_vars[ei];
+            x0[dxv] = (col_of(slots[e.a]) - col_of(slots[e.b])).abs();
+            x0[dyv] = (row_of(slots[e.a]) - row_of(slots[e.b])).abs();
+        }
+        x0
+    });
+    let sol = ilp::solve(
+        &m,
+        &BnbConfig {
+            max_nodes: cfg.max_nodes,
+            rel_gap: 1e-6,
+            initial,
+        },
+    );
+    match sol.status {
+        Status::Optimal | Status::Limit if sol.objective.is_finite() => {}
+        Status::Unbounded => return Err(anyhow!("floorplan ILP unbounded (bug)")),
+        _ => {
+            return Err(anyhow!(
+                "floorplan ILP infeasible (or budget exhausted with no incumbent) at util_limit {}",
+                cfg.util_limit
+            ))
+        }
+    }
+    let mut coarse_slots = vec![0usize; nu];
+    for v in 0..nu {
+        coarse_slots[v] = (0..ns)
+            .max_by(|&a, &b| sol.x[x[v][a]].partial_cmp(&sol.x[x[v][b]]).unwrap())
+            .unwrap();
+    }
+    // Expand coarse assignment to the original problem's units.
+    let node_slots = coarse.expand(
+        &coarse_slots,
+        problem.units.iter().flat_map(|u| u.nodes.iter()).count(),
+    );
+    // original problem units are 1:1 with nodes (pre-coarsening), so map
+    // via each unit's first node.
+    let unit_slots: Vec<usize> = problem
+        .units
+        .iter()
+        .map(|u| node_slots[u.nodes[0]])
+        .collect();
+    let wirelength = problem.wirelength(&unit_slots, dev);
+    Ok(FloorplanResult {
+        unit_slots,
+        wirelength,
+        optimal: sol.status == Status::Optimal,
+    })
+}
+
+/// Greedy feasible placement: heaviest-connected units first, each into
+/// the capacity-feasible slot minimizing incremental wirelength to its
+/// already-placed neighbours (utilization as tie-break).
+fn greedy_initial(
+    problem: &Problem,
+    dev: &VirtualDevice,
+    util_limit: f64,
+) -> Option<Vec<usize>> {
+    use crate::ir::core::Resources;
+    let nu = problem.units.len();
+    let ns = dev.num_slots();
+    let mut adj: Vec<Vec<(usize, u64)>> = vec![Vec::new(); nu];
+    for e in &problem.edges {
+        adj[e.a].push((e.b, e.width));
+        adj[e.b].push((e.a, e.width));
+    }
+    let mut order: Vec<usize> = (0..nu).collect();
+    order.sort_by_key(|&v| {
+        std::cmp::Reverse(adj[v].iter().map(|(_, w)| *w).sum::<u64>())
+    });
+    let mut slot_of = vec![usize::MAX; nu];
+    let mut used = vec![Resources::ZERO; ns];
+    for &v in &order {
+        if let Some(pin) = problem.units[v].fixed_slot {
+            slot_of[v] = pin;
+            used[pin] = used[pin].add(&problem.units[v].resources);
+            if used[pin].max_util(&dev.slots[pin].capacity) > util_limit + 1e-9 {
+                return None; // pinned unit cannot fit
+            }
+        }
+    }
+    for &v in &order {
+        if slot_of[v] != usize::MAX {
+            continue;
+        }
+        let mut best = usize::MAX;
+        let mut best_cost = f64::INFINITY;
+        for s in 0..ns {
+            let u = used[s]
+                .add(&problem.units[v].resources)
+                .max_util(&dev.slots[s].capacity);
+            if u > util_limit {
+                continue;
+            }
+            let mut wl = 0.0;
+            for &(nb, w) in &adj[v] {
+                if slot_of[nb] != usize::MAX {
+                    let (man, dies) = dev.slot_dist(s, slot_of[nb]);
+                    wl += w as f64 * (man as f64 + problem.die_weight * dies as f64);
+                }
+            }
+            let cost = wl + 0.1 * u;
+            if cost < best_cost {
+                best_cost = cost;
+                best = s;
+            }
+        }
+        if best == usize::MAX {
+            return None;
+        }
+        slot_of[v] = best;
+        used[best] = used[best].add(&problem.units[v].resources);
+    }
+    Some(slot_of)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::floorplan::problem::{Problem, Unit, UnitEdge};
+    use crate::ir::core::Resources;
+
+    fn unit(name: &str, lut: f64) -> Unit {
+        Unit {
+            nodes: vec![],
+            resources: Resources::new(lut, lut, 0.0, 0.0, 0.0),
+            fixed_slot: None,
+            name: name.into(),
+        }
+    }
+
+    fn chain(n: usize, lut: f64, width: u64) -> Problem {
+        let mut units: Vec<Unit> = (0..n).map(|i| unit(&format!("u{i}"), lut)).collect();
+        for (i, u) in units.iter_mut().enumerate() {
+            u.nodes = vec![i];
+        }
+        Problem {
+            units,
+            edges: (0..n - 1)
+                .map(|i| UnitEdge {
+                    a: i,
+                    b: i + 1,
+                    width,
+                })
+                .collect(),
+            die_weight: 3.0,
+        }
+    }
+
+    #[test]
+    fn small_chain_colocates_when_it_fits() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = chain(4, 5_000.0, 64);
+        let r = solve(&p, &dev, &IlpFpConfig::default()).unwrap();
+        assert_eq!(r.wirelength, 0.0, "{:?}", r.unit_slots);
+    }
+
+    #[test]
+    fn oversized_units_spread_across_slots() {
+        let dev = builtin::by_name("u280").unwrap();
+        // Each unit ~60% of a slot at util_limit 0.7: one per slot.
+        let cap = dev.slots[5].capacity.lut;
+        let p = chain(4, cap * 0.6, 32);
+        let r = solve(&p, &dev, &IlpFpConfig::default()).unwrap();
+        let mut slots = r.unit_slots.clone();
+        slots.sort();
+        slots.dedup();
+        assert_eq!(slots.len(), 4, "each unit its own slot: {:?}", r.unit_slots);
+        // Chain should occupy adjacent slots (wirelength small).
+        assert!(r.wirelength <= 32.0 * (3.0 + 3.0 * 2.0) + 1.0, "{}", r.wirelength);
+    }
+
+    #[test]
+    fn pinned_unit_respected() {
+        let dev = builtin::by_name("u250").unwrap();
+        let mut p = chain(3, 1000.0, 16);
+        let pin = dev.slot_index(1, 3);
+        p.units[0].fixed_slot = Some(pin);
+        let r = solve(&p, &dev, &IlpFpConfig::default()).unwrap();
+        assert_eq!(r.unit_slots[0], pin);
+        // Others follow to minimize wirelength.
+        assert_eq!(r.unit_slots[1], pin);
+    }
+
+    #[test]
+    fn util_limit_infeasible_when_too_tight() {
+        let dev = builtin::by_name("u280").unwrap();
+        let cap = dev.slots[5].capacity.lut;
+        // 7 units of 60% on 6 slots at limit 0.7: pigeonhole infeasible.
+        let p = chain(7, cap * 0.6, 8);
+        let cfg = IlpFpConfig {
+            util_limit: 0.70,
+            max_nodes: 2_000,
+            ..Default::default()
+        };
+        assert!(solve_at(&p, &dev, &cfg).is_err());
+    }
+
+    #[test]
+    fn coarsening_path_used_for_many_units() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = chain(60, 2_000.0, 16);
+        let cfg = IlpFpConfig {
+            max_units: 12,
+            max_nodes: 5_000,
+            ..Default::default()
+        };
+        let r = solve(&p, &dev, &cfg).unwrap();
+        assert_eq!(r.unit_slots.len(), 60);
+        // Feasible: per-slot LUT within limit.
+        let mut per_slot = vec![0.0f64; dev.num_slots()];
+        for (u, &s) in p.units.iter().zip(&r.unit_slots) {
+            per_slot[s] += u.resources.lut;
+        }
+        for (s, &used) in per_slot.iter().enumerate() {
+            assert!(
+                used <= 0.7 * dev.slots[s].capacity.lut + 1e-6,
+                "slot {s} over: {used}"
+            );
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! Batched floorplan-candidate cost model — CPU oracle of the L1 Pallas
+//! kernel (`python/compile/kernels/floorplan_cost.py`).
+//!
+//! Contract (all f32, shared verbatim with the kernel and ref.py):
+//!
+//! ```text
+//! inputs  C    [M, M]  symmetric connectivity (bit widths), zero diag
+//!         D    [S, S]  slot distance (manhattan + die_w × crossings)
+//!         R    [M, K]  unit resources, K = 5 (LUT FF BRAM DSP URAM)
+//!         caps [S, K]  slot capacity × util_limit
+//!         A    [B, M, S] one-hot assignment batch
+//! output  cost [B] = 0.5 · Σ (C@A ⊙ A@D)  +  λ · Σ relu(AᵀR − caps)²
+//! ```
+//!
+//! The wirelength term uses the identity
+//! `Σᵢⱼ C[i,j]·(A D Aᵀ)[i,j] = Σ (C@A) ⊙ (A@D)` — two MXU matmuls per
+//! candidate instead of a gather.
+
+use crate::device::model::VirtualDevice;
+use crate::floorplan::problem::Problem;
+
+pub const NUM_KINDS: usize = 5;
+
+/// Dense, padded instance of the cost model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Padded unit count (multiple of 8 for MXU friendliness).
+    pub m: usize,
+    /// Real unit count (≤ m).
+    pub m_real: usize,
+    /// Slot count (not padded; S is small).
+    pub s: usize,
+    pub conn: Vec<f32>,
+    pub dist: Vec<f32>,
+    pub res: Vec<f32>,
+    pub caps: Vec<f32>,
+    /// Penalty weight λ.
+    pub lambda: f32,
+    /// Sparse (i, j, weight) upper-triangle edges — the CPU fast path.
+    pub edges_sparse: Vec<(u32, u32, f32)>,
+}
+
+impl CostModel {
+    pub fn build(
+        problem: &Problem,
+        dev: &VirtualDevice,
+        util_limit: f64,
+        lambda: f32,
+    ) -> CostModel {
+        let m_real = problem.units.len();
+        let m = m_real.div_ceil(8) * 8;
+        let s = dev.num_slots();
+        let mut conn = vec![0f32; m * m];
+        for e in &problem.edges {
+            conn[e.a * m + e.b] += e.width as f32;
+            conn[e.b * m + e.a] += e.width as f32;
+        }
+        let dist = {
+            let d = dev.distance_matrix(problem.die_weight as f32);
+            debug_assert_eq!(d.len(), s * s);
+            d
+        };
+        let mut res = vec![0f32; m * NUM_KINDS];
+        for (i, u) in problem.units.iter().enumerate() {
+            res[i * NUM_KINDS] = u.resources.lut as f32;
+            res[i * NUM_KINDS + 1] = u.resources.ff as f32;
+            res[i * NUM_KINDS + 2] = u.resources.bram as f32;
+            res[i * NUM_KINDS + 3] = u.resources.dsp as f32;
+            res[i * NUM_KINDS + 4] = u.resources.uram as f32;
+        }
+        let mut caps = vec![0f32; s * NUM_KINDS];
+        for (si, slot) in dev.slots.iter().enumerate() {
+            caps[si * NUM_KINDS] = (slot.capacity.lut * util_limit) as f32;
+            caps[si * NUM_KINDS + 1] = (slot.capacity.ff * util_limit) as f32;
+            caps[si * NUM_KINDS + 2] = (slot.capacity.bram * util_limit) as f32;
+            caps[si * NUM_KINDS + 3] = (slot.capacity.dsp * util_limit) as f32;
+            caps[si * NUM_KINDS + 4] = (slot.capacity.uram * util_limit) as f32;
+        }
+        // Upper-triangle nonzeros of the (already aggregated) matrix —
+        // built from `conn` so duplicate edge entries cannot double-count.
+        let mut edges_sparse = Vec::new();
+        for a in 0..m_real {
+            for b in (a + 1)..m_real {
+                let c = conn[a * m + b];
+                if c != 0.0 {
+                    edges_sparse.push((a as u32, b as u32, c));
+                }
+            }
+        }
+        CostModel {
+            m,
+            m_real,
+            s,
+            conn,
+            dist,
+            res,
+            caps,
+            lambda,
+            edges_sparse,
+        }
+    }
+
+    /// One-hot encode a batch of assignments (slot id per real unit;
+    /// padded units pinned to slot 0 with zero resources/connectivity, so
+    /// they never affect the cost).
+    pub fn onehot(&self, batch: &[Vec<usize>]) -> Vec<f32> {
+        let (m, s) = (self.m, self.s);
+        let mut a = vec![0f32; batch.len() * m * s];
+        for (b, cand) in batch.iter().enumerate() {
+            assert_eq!(cand.len(), self.m_real);
+            for i in 0..m {
+                let slot = if i < self.m_real { cand[i] } else { 0 };
+                a[b * m * s + i * s + slot] = 1.0;
+            }
+        }
+        a
+    }
+
+    /// Scalar cost of one candidate — sparse edge iteration (the CPU fast
+    /// path; identical math to the dense/batched form).
+    pub fn cost_scalar(&self, cand: &[usize]) -> f32 {
+        let mut wl = 0f32;
+        for &(i, j, c) in &self.edges_sparse {
+            wl += c * self.dist[cand[i as usize] * self.s + cand[j as usize]];
+        }
+        let mut usage = vec![0f32; self.s * NUM_KINDS];
+        for (i, &slot) in cand.iter().enumerate() {
+            for k in 0..NUM_KINDS {
+                usage[slot * NUM_KINDS + k] += self.res[i * NUM_KINDS + k];
+            }
+        }
+        let mut pen = 0f32;
+        for (u, c) in usage.iter().zip(&self.caps) {
+            let over = (u - c).max(0.0);
+            pen += over * over;
+        }
+        wl + self.lambda * pen
+    }
+
+    /// Batched cost via the matmul identity — numerically the same
+    /// computation the Pallas kernel performs.
+    pub fn cost_batch(&self, a_onehot: &[f32], batch: usize) -> Vec<f32> {
+        let (m, s) = (self.m, self.s);
+        assert_eq!(a_onehot.len(), batch * m * s);
+        let mut out = Vec::with_capacity(batch);
+        // scratch
+        let mut ca = vec![0f32; m * s];
+        let mut ad = vec![0f32; m * s];
+        let mut usage = vec![0f32; s * NUM_KINDS];
+        for b in 0..batch {
+            let a = &a_onehot[b * m * s..(b + 1) * m * s];
+            // CA = C (M×M) @ A (M×S)
+            matmul(&self.conn, a, &mut ca, m, m, s);
+            // AD = A (M×S) @ D (S×S)
+            matmul(a, &self.dist, &mut ad, m, s, s);
+            let wl: f32 = ca.iter().zip(&ad).map(|(x, y)| x * y).sum();
+            // usage = Aᵀ (S×M) @ R (M×K)
+            usage.iter_mut().for_each(|u| *u = 0.0);
+            for i in 0..m {
+                for sl in 0..s {
+                    let av = a[i * s + sl];
+                    if av != 0.0 {
+                        for k in 0..NUM_KINDS {
+                            usage[sl * NUM_KINDS + k] += av * self.res[i * NUM_KINDS + k];
+                        }
+                    }
+                }
+            }
+            let pen: f32 = usage
+                .iter()
+                .zip(&self.caps)
+                .map(|(u, c)| {
+                    let over = (u - c).max(0.0);
+                    over * over
+                })
+                .sum();
+            out.push(0.5 * wl + self.lambda * pen);
+        }
+        out
+    }
+}
+
+fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av != 0.0 {
+                let brow = &b[kk * n..kk * n + n];
+                let crow = &mut c[i * n..i * n + n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Batch evaluator abstraction: CPU oracle or the PJRT executable.
+pub trait BatchEvaluator {
+    /// Evaluate a batch of candidates (slot id per real unit each).
+    fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32>;
+    fn name(&self) -> &'static str;
+}
+
+/// CPU implementation of [`BatchEvaluator`].
+///
+/// §Perf note: on a CPU the *sparse* scalar formula (iterate edges, not
+/// the dense M×M matrix) beats the matmul identity by ~3-5x — the dense
+/// form exists because it is what maps onto the MXU. `evaluate` therefore
+/// uses the scalar path; `CostModel::cost_batch` remains the bit-level
+/// oracle of the Pallas kernel (and is what the PJRT comparison tests
+/// check against — scalar, dense and kernel agree within f32 tolerance).
+pub struct CpuEvaluator {
+    pub model: CostModel,
+}
+
+impl BatchEvaluator for CpuEvaluator {
+    fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32> {
+        batch.iter().map(|c| self.model.cost_scalar(c)).collect()
+    }
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+/// Dense-matmul evaluator — the exact computation the Pallas kernel runs,
+/// on the CPU. Used by tests and by the perf bench as the kernel oracle.
+pub struct DenseCpuEvaluator {
+    pub model: CostModel,
+}
+
+impl BatchEvaluator for DenseCpuEvaluator {
+    fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32> {
+        let a = self.model.onehot(batch);
+        self.model.cost_batch(&a, batch.len())
+    }
+    fn name(&self) -> &'static str {
+        "cpu-dense"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::floorplan::problem::{Problem, Unit, UnitEdge};
+    use crate::ir::core::Resources;
+    use crate::util::rng::Rng;
+
+    fn problem(n: usize) -> Problem {
+        let mut units: Vec<Unit> = (0..n)
+            .map(|i| Unit {
+                nodes: vec![i],
+                resources: Resources::new(
+                    1000.0 + 137.0 * i as f64,
+                    500.0,
+                    2.0,
+                    8.0,
+                    0.0,
+                ),
+                fixed_slot: None,
+                name: format!("u{i}"),
+            })
+            .collect();
+        units[0].resources.lut = 50_000.0;
+        Problem {
+            units,
+            edges: (0..n - 1)
+                .map(|i| UnitEdge {
+                    a: i,
+                    b: i + 1,
+                    width: 32 + (i as u64 % 5) * 16,
+                })
+                .collect(),
+            die_weight: 3.0,
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = problem(13);
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let mut rng = Rng::new(5);
+        let batch: Vec<Vec<usize>> = (0..16)
+            .map(|_| (0..13).map(|_| rng.below(cm.s)).collect())
+            .collect();
+        let scalar: Vec<f32> = batch.iter().map(|c| cm.cost_scalar(c)).collect();
+        let a = cm.onehot(&batch);
+        let batched = cm.cost_batch(&a, 16);
+        for (s, b) in scalar.iter().zip(&batched) {
+            assert!(
+                (s - b).abs() <= 1e-3 * s.abs().max(1.0),
+                "scalar {s} vs batch {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn colocations_cheaper_than_spread_when_no_overflow() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = problem(4);
+        let cm = CostModel::build(&p, &dev, 0.9, 1e-4);
+        let together = cm.cost_scalar(&[0, 0, 0, 0]);
+        let apart = cm.cost_scalar(&[0, 5, 0, 5]);
+        assert!(together < apart);
+    }
+
+    #[test]
+    fn overflow_penalized() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut p = problem(4);
+        // make every unit huge
+        for u in &mut p.units {
+            u.resources.lut = dev.slots[0].capacity.lut * 0.5;
+        }
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let stacked = cm.cost_scalar(&[0, 0, 0, 0]);
+        let spread = cm.cost_scalar(&[0, 1, 2, 3]);
+        assert!(stacked > spread, "stacked {stacked} spread {spread}");
+    }
+
+    #[test]
+    fn padding_is_neutral() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = problem(5); // padded to m=8
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        assert_eq!(cm.m, 8);
+        let cand = vec![1, 2, 3, 4, 5];
+        let a = cm.onehot(&[cand.clone()]);
+        let batched = cm.cost_batch(&a, 1)[0];
+        let scalar = cm.cost_scalar(&cand);
+        assert!((batched - scalar).abs() <= 1e-3 * scalar.max(1.0));
+    }
+
+    #[test]
+    fn cpu_evaluator_wraps_model() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = problem(6);
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let mut ev = CpuEvaluator { model: cm };
+        let costs = ev.evaluate(&[vec![0; 6], vec![7; 6]]);
+        assert_eq!(costs.len(), 2);
+        assert!(costs.iter().all(|c| c.is_finite()));
+    }
+}

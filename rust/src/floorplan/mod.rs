@@ -1,0 +1,13 @@
+//! Floorplanning: the AutoBridge ILP formulation, the batched cost model
+//! (CPU oracle of the Pallas kernel), and the simulated-annealing
+//! explorer used for design-space exploration (Fig 12).
+
+pub mod autobridge;
+pub mod cost;
+pub mod problem;
+pub mod sa;
+
+pub use autobridge::{solve, FloorplanResult, IlpFpConfig};
+pub use cost::{BatchEvaluator, CostModel, CpuEvaluator};
+pub use problem::{Problem, Unit, UnitEdge};
+pub use sa::{anneal, SaConfig, SaResult};

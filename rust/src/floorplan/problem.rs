@@ -1,0 +1,297 @@
+//! Floorplanning problem extraction: from a flat netlist to the
+//! unit/edge abstraction the ILP and SA engines consume, including the
+//! coarsening step that merges small units into clusters (AutoBridge
+//! floorplans coarse-grained *partitions*, not individual cells).
+
+use crate::device::model::VirtualDevice;
+use crate::ir::core::Resources;
+use crate::timing::netlist::FlatNetlist;
+use std::collections::BTreeMap;
+
+/// A floorplannable unit (one or more netlist nodes).
+#[derive(Debug, Clone)]
+pub struct Unit {
+    /// Netlist node indices merged into this unit.
+    pub nodes: Vec<usize>,
+    pub resources: Resources,
+    /// Slot index this unit is pinned to, if any.
+    pub fixed_slot: Option<usize>,
+    pub name: String,
+}
+
+/// An undirected edge between units with total bit width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitEdge {
+    pub a: usize,
+    pub b: usize,
+    pub width: u64,
+}
+
+/// The floorplanning instance.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub units: Vec<Unit>,
+    pub edges: Vec<UnitEdge>,
+    /// Per-slot distance = manhattan + die_weight × crossings.
+    pub die_weight: f64,
+}
+
+impl Problem {
+    /// One unit per netlist node.
+    pub fn from_netlist(nl: &FlatNetlist, dev: &VirtualDevice, die_weight: f64) -> Problem {
+        let units = nl
+            .nodes
+            .iter()
+            .map(|n| Unit {
+                nodes: vec![],
+                resources: n.resources,
+                fixed_slot: n
+                    .fixed_slot
+                    .as_ref()
+                    .and_then(|pb| dev.slots.iter().position(|s| &s.pblock == pb)),
+                name: n.path.clone(),
+            })
+            .enumerate()
+            .map(|(i, mut u)| {
+                u.nodes = vec![i];
+                u
+            })
+            .collect();
+        let mut agg: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for e in &nl.edges {
+            let (a, b) = if e.src < e.dst {
+                (e.src, e.dst)
+            } else {
+                (e.dst, e.src)
+            };
+            if a != b {
+                *agg.entry((a, b)).or_default() += e.width;
+            }
+        }
+        Problem {
+            units,
+            edges: agg
+                .into_iter()
+                .map(|((a, b), width)| UnitEdge { a, b, width })
+                .collect(),
+            die_weight,
+        }
+    }
+
+    /// Greedy coarsening: repeatedly merge the lightest unit into its
+    /// most-connected neighbour until at most `max_units` remain. Units
+    /// pinned to different slots are never merged; a merged cluster keeps
+    /// a pin if any member had one.
+    pub fn coarsen(&self, max_units: usize) -> Problem {
+        let n = self.units.len();
+        if n <= max_units {
+            return self.clone();
+        }
+        // cluster id per original unit
+        let mut cluster: Vec<usize> = (0..n).collect();
+        let mut cl_res: Vec<Resources> = self.units.iter().map(|u| u.resources).collect();
+        let mut cl_fixed: Vec<Option<usize>> = self.units.iter().map(|u| u.fixed_slot).collect();
+        let mut cl_alive: Vec<bool> = vec![true; n];
+        let mut alive_count = n;
+        // adjacency: (neighbor cluster, width)
+        let mut adj: Vec<BTreeMap<usize, u64>> = vec![BTreeMap::new(); n];
+        for e in &self.edges {
+            *adj[e.a].entry(e.b).or_default() += e.width;
+            *adj[e.b].entry(e.a).or_default() += e.width;
+        }
+        let key = |r: &Resources| r.lut + r.ff * 0.5 + r.dsp * 80.0 + r.bram * 100.0 + r.uram * 300.0;
+        while alive_count > max_units {
+            // lightest alive cluster with at least one neighbour
+            let Some(light) = (0..n)
+                .filter(|&c| cl_alive[c] && !adj[c].is_empty())
+                .min_by(|&a, &b| key(&cl_res[a]).partial_cmp(&key(&cl_res[b])).unwrap())
+            else {
+                break;
+            };
+            // strongest neighbour compatible by pinning
+            let Some((&nb, _)) = adj[light]
+                .iter()
+                .filter(|(&nb, _)| {
+                    cl_alive[nb]
+                        && match (cl_fixed[light], cl_fixed[nb]) {
+                            (Some(a), Some(b)) => a == b,
+                            _ => true,
+                        }
+                })
+                .max_by_key(|(_, &w)| w)
+            else {
+                // cannot merge this one; detach it from consideration
+                adj[light].clear();
+                continue;
+            };
+            // merge light into nb
+            cl_res[nb] = cl_res[nb].add(&cl_res[light]);
+            if cl_fixed[nb].is_none() {
+                cl_fixed[nb] = cl_fixed[light];
+            }
+            cl_alive[light] = false;
+            alive_count -= 1;
+            let light_adj = std::mem::take(&mut adj[light]);
+            for (other, w) in light_adj {
+                if other == nb || !cl_alive[other] {
+                    adj[other].remove(&light);
+                    continue;
+                }
+                *adj[nb].entry(other).or_default() += w;
+                let ow = adj[other].remove(&light).unwrap_or(w);
+                *adj[other].entry(nb).or_default() += ow;
+            }
+            adj[nb].remove(&light);
+            for c in cluster.iter_mut() {
+                if *c == light {
+                    *c = nb;
+                }
+            }
+        }
+        // compact clusters
+        let mut remap: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut units = Vec::new();
+        for (i, &c) in cluster.iter().enumerate() {
+            let id = *remap.entry(c).or_insert_with(|| {
+                units.push(Unit {
+                    nodes: Vec::new(),
+                    resources: cl_res[c],
+                    fixed_slot: cl_fixed[c],
+                    name: self.units[c].name.clone(),
+                });
+                units.len() - 1
+            });
+            units[id].nodes.extend(self.units[i].nodes.iter().copied());
+        }
+        let mut agg: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for e in &self.edges {
+            let (a, b) = (remap[&cluster[e.a]], remap[&cluster[e.b]]);
+            if a != b {
+                let k = if a < b { (a, b) } else { (b, a) };
+                *agg.entry(k).or_default() += e.width;
+            }
+        }
+        Problem {
+            units,
+            edges: agg
+                .into_iter()
+                .map(|((a, b), width)| UnitEdge { a, b, width })
+                .collect(),
+            die_weight: self.die_weight,
+        }
+    }
+
+    /// Expand a per-unit slot assignment back to per-netlist-node slots.
+    pub fn expand(&self, unit_slots: &[usize], num_nodes: usize) -> Vec<usize> {
+        let mut out = vec![0usize; num_nodes];
+        for (u, &s) in self.units.iter().zip(unit_slots) {
+            for &node in &u.nodes {
+                out[node] = s;
+            }
+        }
+        out
+    }
+
+    /// Wirelength of an assignment under the device's distance metric.
+    pub fn wirelength(&self, slots: &[usize], dev: &VirtualDevice) -> f64 {
+        self.edges
+            .iter()
+            .map(|e| {
+                let (man, dies) = dev.slot_dist(slots[e.a], slots[e.b]);
+                e.width as f64 * (man as f64 + self.die_weight * dies as f64)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::timing::netlist::{FlatEdge, FlatNode};
+
+    fn netlist(n: usize) -> FlatNetlist {
+        FlatNetlist {
+            nodes: (0..n)
+                .map(|i| FlatNode {
+                    path: format!("n{i}"),
+                    module: "M".into(),
+                    resources: Resources::new(1000.0 * (i as f64 + 1.0), 0.0, 0.0, 0.0, 0.0),
+                    internal_ns: 2.0,
+                    is_pipeline: false,
+                    fixed_slot: None,
+                })
+                .collect(),
+            edges: (0..n - 1)
+                .map(|i| FlatEdge {
+                    src: i,
+                    dst: i + 1,
+                    width: 32,
+                    pipelinable: true,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn from_netlist_builds_units() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = Problem::from_netlist(&netlist(5), &dev, 3.0);
+        assert_eq!(p.units.len(), 5);
+        assert_eq!(p.edges.len(), 4);
+    }
+
+    #[test]
+    fn coarsen_reduces_units_and_conserves_resources() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = Problem::from_netlist(&netlist(20), &dev, 3.0);
+        let total_before: f64 = p.units.iter().map(|u| u.resources.lut).sum();
+        let c = p.coarsen(6);
+        assert!(c.units.len() <= 6);
+        let total_after: f64 = c.units.iter().map(|u| u.resources.lut).sum();
+        assert!((total_before - total_after).abs() < 1e-6);
+        // Every original node represented exactly once.
+        let mut all: Vec<usize> = c.units.iter().flat_map(|u| u.nodes.clone()).collect();
+        all.sort();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn expand_maps_back() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = Problem::from_netlist(&netlist(10), &dev, 3.0);
+        let c = p.coarsen(3);
+        let slots: Vec<usize> = (0..c.units.len()).map(|i| i % 4).collect();
+        let full = c.expand(&slots, 10);
+        assert_eq!(full.len(), 10);
+        for (u, &s) in c.units.iter().zip(&slots) {
+            for &nidx in &u.nodes {
+                assert_eq!(full[nidx], s);
+            }
+        }
+    }
+
+    #[test]
+    fn wirelength_counts_die_crossings() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = Problem::from_netlist(&netlist(2), &dev, 3.0);
+        let a = dev.slot_index(0, 0);
+        let b = dev.slot_index(0, 1);
+        let wl = p.wirelength(&[a, b], &dev);
+        // 1 crossing: width 32 × (1 + 3×1)
+        assert_eq!(wl, 128.0);
+    }
+
+    #[test]
+    fn coarsen_respects_conflicting_pins() {
+        let dev = builtin::by_name("u250").unwrap();
+        let mut nl = netlist(4);
+        nl.nodes[0].fixed_slot = Some("SLOT_X0Y0".into());
+        nl.nodes[3].fixed_slot = Some("SLOT_X1Y3".into());
+        let p = Problem::from_netlist(&nl, &dev, 3.0);
+        let c = p.coarsen(2);
+        // The two pinned nodes must be in different clusters.
+        let find = |n: usize| c.units.iter().position(|u| u.nodes.contains(&n)).unwrap();
+        assert_ne!(find(0), find(3));
+    }
+}

@@ -1,0 +1,243 @@
+//! Batched simulated-annealing floorplan explorer.
+//!
+//! Used by the Figure-12 design-space exploration and as a refinement /
+//! fallback around the ILP: a population of candidate assignments is
+//! mutated and re-scored *in batches* through a [`BatchEvaluator`] — the
+//! CPU oracle or the AOT-compiled Pallas kernel via PJRT. Batching is
+//! what makes the accelerator offload worthwhile: one `evaluate` call
+//! scores `population × proposals` candidates in a single device launch.
+
+use crate::device::model::VirtualDevice;
+use crate::floorplan::cost::BatchEvaluator;
+use crate::floorplan::problem::Problem;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SaConfig {
+    pub seed: u64,
+    /// Parallel annealing chains.
+    pub population: usize,
+    /// Proposals per chain per step (all scored in one batch).
+    pub proposals: usize,
+    pub steps: usize,
+    pub t0: f64,
+    pub cooling: f64,
+}
+
+impl Default for SaConfig {
+    fn default() -> Self {
+        SaConfig {
+            seed: 0x5EED,
+            population: 16,
+            proposals: 8,
+            steps: 300,
+            t0: 2_000.0,
+            cooling: 0.97,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SaResult {
+    pub best: Vec<usize>,
+    pub best_cost: f32,
+    /// Candidates evaluated in total.
+    pub evaluated: usize,
+    /// Cost trace (best-so-far per step), for convergence plots.
+    pub trace: Vec<f32>,
+}
+
+/// Run batched SA. `initial` seeds chain 0 (e.g. the ILP solution);
+/// remaining chains start random. Pinned units never move.
+pub fn anneal(
+    problem: &Problem,
+    dev: &VirtualDevice,
+    evaluator: &mut dyn BatchEvaluator,
+    initial: Option<&[usize]>,
+    cfg: &SaConfig,
+) -> SaResult {
+    let nu = problem.units.len();
+    let ns = dev.num_slots();
+    let mut rng = Rng::new(cfg.seed);
+    let movable: Vec<usize> = (0..nu)
+        .filter(|&u| problem.units[u].fixed_slot.is_none())
+        .collect();
+
+    // Initial population.
+    let mut chains: Vec<Vec<usize>> = (0..cfg.population)
+        .map(|c| {
+            if c == 0 {
+                if let Some(init) = initial {
+                    return init.to_vec();
+                }
+            }
+            (0..nu)
+                .map(|u| problem.units[u].fixed_slot.unwrap_or_else(|| rng.below(ns)))
+                .collect()
+        })
+        .collect();
+    let mut chain_costs = evaluator.evaluate(&chains);
+    let mut evaluated = chains.len();
+
+    let mut best_idx = argmin(&chain_costs);
+    let mut best = chains[best_idx].clone();
+    let mut best_cost = chain_costs[best_idx];
+
+    let mut temp = cfg.t0;
+    let mut trace = Vec::with_capacity(cfg.steps);
+    if movable.is_empty() {
+        return SaResult {
+            best,
+            best_cost,
+            evaluated,
+            trace,
+        };
+    }
+
+    for _ in 0..cfg.steps {
+        // Propose: population × proposals mutated candidates.
+        let mut batch: Vec<Vec<usize>> = Vec::with_capacity(cfg.population * cfg.proposals);
+        for chain in &chains {
+            for _ in 0..cfg.proposals {
+                let mut cand = chain.clone();
+                // 1–2 random moves (or a swap).
+                let moves = 1 + rng.below(2);
+                for _ in 0..moves {
+                    if rng.chance(0.3) && movable.len() >= 2 {
+                        // swap two movable units
+                        let a = *rng.pick(&movable);
+                        let b = *rng.pick(&movable);
+                        cand.swap(a, b);
+                    } else {
+                        let u = *rng.pick(&movable);
+                        cand[u] = rng.below(ns);
+                    }
+                }
+                batch.push(cand);
+            }
+        }
+        let costs = evaluator.evaluate(&batch);
+        evaluated += batch.len();
+
+        // Per-chain: pick best proposal; Metropolis accept.
+        for c in 0..cfg.population {
+            let base = c * cfg.proposals;
+            let mut pick = base;
+            for k in base..base + cfg.proposals {
+                if costs[k] < costs[pick] {
+                    pick = k;
+                }
+            }
+            let delta = (costs[pick] - chain_costs[c]) as f64;
+            if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
+                chains[c] = batch[pick].clone();
+                chain_costs[c] = costs[pick];
+                if chain_costs[c] < best_cost {
+                    best_cost = chain_costs[c];
+                    best = chains[c].clone();
+                }
+            }
+        }
+        temp *= cfg.cooling;
+        trace.push(best_cost);
+        let _ = best_idx;
+        best_idx = argmin(&chain_costs);
+    }
+
+    SaResult {
+        best,
+        best_cost,
+        evaluated,
+        trace,
+    }
+}
+
+fn argmin(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::floorplan::cost::{CostModel, CpuEvaluator};
+    use crate::floorplan::problem::{Problem, Unit, UnitEdge};
+    use crate::ir::core::Resources;
+
+    fn chain_problem(n: usize) -> Problem {
+        Problem {
+            units: (0..n)
+                .map(|i| Unit {
+                    nodes: vec![i],
+                    resources: Resources::new(2_000.0, 1_000.0, 0.0, 0.0, 0.0),
+                    fixed_slot: None,
+                    name: format!("u{i}"),
+                })
+                .collect(),
+            edges: (0..n - 1)
+                .map(|i| UnitEdge {
+                    a: i,
+                    b: i + 1,
+                    width: 64,
+                })
+                .collect(),
+            die_weight: 3.0,
+        }
+    }
+
+    fn evaluator(p: &Problem, dev: &crate::device::model::VirtualDevice) -> CpuEvaluator {
+        CpuEvaluator {
+            model: CostModel::build(p, dev, 0.7, 1e-4),
+        }
+    }
+
+    #[test]
+    fn sa_finds_colocation_optimum() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = chain_problem(6);
+        let mut ev = evaluator(&p, &dev);
+        let r = anneal(&p, &dev, &mut ev, None, &SaConfig::default());
+        // All small units fit one slot: optimal wirelength 0.
+        assert_eq!(r.best_cost, 0.0, "best={:?}", r.best);
+    }
+
+    #[test]
+    fn sa_improves_over_random_start() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = chain_problem(12);
+        let mut ev = evaluator(&p, &dev);
+        let bad: Vec<usize> = (0..12).map(|i| (i * 7) % dev.num_slots()).collect();
+        let bad_cost = ev.model.cost_scalar(&bad);
+        let r = anneal(&p, &dev, &mut ev, Some(&bad), &SaConfig::default());
+        assert!(r.best_cost < bad_cost * 0.5, "{} vs {}", r.best_cost, bad_cost);
+        // trace monotone non-increasing
+        assert!(r.trace.windows(2).all(|w| w[1] <= w[0]));
+    }
+
+    #[test]
+    fn pinned_units_stay_put() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut p = chain_problem(5);
+        let pin = dev.slot_index(1, 2);
+        p.units[2].fixed_slot = Some(pin);
+        let mut ev = evaluator(&p, &dev);
+        let r = anneal(&p, &dev, &mut ev, None, &SaConfig::default());
+        assert_eq!(r.best[2], pin);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = chain_problem(8);
+        let mut e1 = evaluator(&p, &dev);
+        let mut e2 = evaluator(&p, &dev);
+        let r1 = anneal(&p, &dev, &mut e1, None, &SaConfig::default());
+        let r2 = anneal(&p, &dev, &mut e2, None, &SaConfig::default());
+        assert_eq!(r1.best, r2.best);
+        assert_eq!(r1.best_cost, r2.best_cost);
+    }
+}

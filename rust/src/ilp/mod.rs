@@ -1,0 +1,11 @@
+//! Exact MILP solver substrate: model builder, dense two-phase simplex for
+//! the LP relaxation, and best-first branch & bound (replaces COIN-OR CBC
+//! in the paper's toolchain).
+
+pub mod branch_bound;
+pub mod model;
+pub mod simplex;
+
+pub use branch_bound::{solve, BnbConfig};
+pub use model::{Cmp, IlpModel, Solution, Status, VarId};
+pub use simplex::solve_lp;

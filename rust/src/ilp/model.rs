@@ -1,0 +1,194 @@
+//! ILP model builder — the interface the AutoBridge floorplan formulation
+//! (§3.4 stage 3) targets. Solved exactly by the bundled simplex + branch
+//! & bound (the paper uses the COIN-OR CBC solver with a 400 s limit; we
+//! bound work with node/iteration budgets instead).
+
+use std::fmt;
+
+/// Index of a decision variable.
+pub type VarId = usize;
+
+#[derive(Debug, Clone)]
+pub struct Var {
+    pub name: String,
+    pub lb: f64,
+    pub ub: f64,
+    pub integer: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+impl fmt::Display for Cmp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Cmp::Le => "<=",
+            Cmp::Ge => ">=",
+            Cmp::Eq => "=",
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub name: String,
+    pub terms: Vec<(VarId, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// A minimization ILP.
+#[derive(Debug, Clone, Default)]
+pub struct IlpModel {
+    pub vars: Vec<Var>,
+    /// Linear objective to minimize.
+    pub objective: Vec<(VarId, f64)>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl IlpModel {
+    pub fn new() -> IlpModel {
+        IlpModel::default()
+    }
+
+    /// Add a binary 0/1 variable.
+    pub fn binary(&mut self, name: impl Into<String>) -> VarId {
+        self.var(name, 0.0, 1.0, true)
+    }
+
+    /// Add an integer variable in [lb, ub].
+    pub fn int(&mut self, name: impl Into<String>, lb: f64, ub: f64) -> VarId {
+        self.var(name, lb, ub, true)
+    }
+
+    /// Add a continuous variable in [lb, ub].
+    pub fn cont(&mut self, name: impl Into<String>, lb: f64, ub: f64) -> VarId {
+        self.var(name, lb, ub, false)
+    }
+
+    fn var(&mut self, name: impl Into<String>, lb: f64, ub: f64, integer: bool) -> VarId {
+        assert!(lb <= ub, "var bounds");
+        assert!(lb >= 0.0, "only non-negative variables supported");
+        self.vars.push(Var {
+            name: name.into(),
+            lb,
+            ub,
+            integer,
+        });
+        self.vars.len() - 1
+    }
+
+    /// Set (replace) the objective coefficient of `v`.
+    pub fn obj(&mut self, v: VarId, coeff: f64) {
+        if let Some(t) = self.objective.iter_mut().find(|(id, _)| *id == v) {
+            t.1 += coeff;
+        } else {
+            self.objective.push((v, coeff));
+        }
+    }
+
+    pub fn constraint(
+        &mut self,
+        name: impl Into<String>,
+        terms: Vec<(VarId, f64)>,
+        cmp: Cmp,
+        rhs: f64,
+    ) {
+        self.constraints.push(Constraint {
+            name: name.into(),
+            terms,
+            cmp,
+            rhs,
+        });
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Evaluate the objective at a point.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.objective.iter().map(|(v, c)| c * x[*v]).sum()
+    }
+
+    /// Check feasibility of a point within tolerance.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        for (i, v) in self.vars.iter().enumerate() {
+            if x[i] < v.lb - tol || x[i] > v.ub + tol {
+                return false;
+            }
+            if v.integer && (x[i] - x[i].round()).abs() > tol {
+                return false;
+            }
+        }
+        for c in &self.constraints {
+            let lhs: f64 = c.terms.iter().map(|(v, co)| co * x[*v]).sum();
+            let ok = match c.cmp {
+                Cmp::Le => lhs <= c.rhs + tol,
+                Cmp::Ge => lhs >= c.rhs - tol,
+                Cmp::Eq => (lhs - c.rhs).abs() <= tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Outcome of an LP/ILP solve.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Status {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    /// Budget exhausted; the incumbent (if any) is returned.
+    Limit,
+}
+
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub status: Status,
+    pub objective: f64,
+    pub x: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_evaluate() {
+        let mut m = IlpModel::new();
+        let a = m.binary("a");
+        let b = m.cont("b", 0.0, 10.0);
+        m.obj(a, 3.0);
+        m.obj(b, 1.0);
+        m.constraint("c0", vec![(a, 1.0), (b, 2.0)], Cmp::Le, 5.0);
+        assert_eq!(m.num_vars(), 2);
+        assert_eq!(m.objective_value(&[1.0, 2.0]), 5.0);
+        assert!(m.is_feasible(&[1.0, 2.0], 1e-9));
+        assert!(!m.is_feasible(&[1.0, 2.5], 1e-9)); // violates c0
+        assert!(!m.is_feasible(&[0.5, 0.0], 1e-9)); // a not integral
+    }
+
+    #[test]
+    fn obj_accumulates() {
+        let mut m = IlpModel::new();
+        let a = m.cont("a", 0.0, 1.0);
+        m.obj(a, 1.0);
+        m.obj(a, 2.0);
+        assert_eq!(m.objective_value(&[1.0]), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_lb() {
+        let mut m = IlpModel::new();
+        m.cont("bad", -1.0, 1.0);
+    }
+}

@@ -1,0 +1,415 @@
+//! Dense two-phase primal simplex for the LP relaxation.
+//!
+//! Solves `min cᵀx  s.t.  Ax {≤,≥,=} b,  lb ≤ x ≤ ub` with all `lb ≥ 0`.
+//! Lower bounds are handled by shifting, upper bounds by explicit rows
+//! (problem sizes in the floorplanner are a few hundred variables, where a
+//! dense tableau is fast and simple). Bland's rule guards against cycling.
+
+use crate::ilp::model::{Cmp, IlpModel, Solution, Status};
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP relaxation of `m` (integrality dropped). Additional bound
+/// overrides (used by branch & bound) may tighten `lb`/`ub` per variable.
+pub fn solve_lp(m: &IlpModel, lb_over: Option<&[f64]>, ub_over: Option<&[f64]>) -> Solution {
+    let n = m.num_vars();
+    let lb: Vec<f64> = (0..n)
+        .map(|i| lb_over.map(|o| o[i]).unwrap_or(m.vars[i].lb))
+        .collect();
+    let ub: Vec<f64> = (0..n)
+        .map(|i| ub_over.map(|o| o[i]).unwrap_or(m.vars[i].ub))
+        .collect();
+    if lb.iter().zip(&ub).any(|(l, u)| *l > u + EPS) {
+        return Solution {
+            status: Status::Infeasible,
+            objective: f64::INFINITY,
+            x: vec![0.0; n],
+        };
+    }
+
+    // Shift x = x' + lb so x' >= 0; fold shift into rhs.
+    // Build row list: model constraints (+ shifted rhs), then finite
+    // upper-bound rows x'_i <= ub_i - lb_i.
+    struct Row {
+        coeffs: Vec<(usize, f64)>,
+        cmp: Cmp,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for c in &m.constraints {
+        let shift: f64 = c.terms.iter().map(|(v, co)| co * lb[*v]).sum();
+        rows.push(Row {
+            coeffs: c.terms.clone(),
+            cmp: c.cmp,
+            rhs: c.rhs - shift,
+        });
+    }
+    for i in 0..n {
+        let range = ub[i] - lb[i];
+        if range.is_finite() {
+            rows.push(Row {
+                coeffs: vec![(i, 1.0)],
+                cmp: Cmp::Le,
+                rhs: range,
+            });
+        }
+    }
+
+    let nrows = rows.len();
+    // Columns: n structural + nrows slack/surplus + up to nrows artificial.
+    // Count slacks and artificials.
+    let mut ncols = n;
+    let mut slack_col = vec![usize::MAX; nrows];
+    let mut art_col = vec![usize::MAX; nrows];
+    // Normalize rhs >= 0 first.
+    let mut norm: Vec<(Vec<(usize, f64)>, Cmp, f64)> = rows
+        .iter()
+        .map(|r| {
+            if r.rhs < 0.0 {
+                let flipped = r.coeffs.iter().map(|(v, c)| (*v, -c)).collect();
+                let cmp = match r.cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
+                };
+                (flipped, cmp, -r.rhs)
+            } else {
+                (r.coeffs.clone(), r.cmp, r.rhs)
+            }
+        })
+        .collect();
+    for (ri, (_, cmp, _)) in norm.iter().enumerate() {
+        match cmp {
+            Cmp::Le => {
+                slack_col[ri] = ncols;
+                ncols += 1;
+            }
+            Cmp::Ge => {
+                slack_col[ri] = ncols; // surplus (coeff -1)
+                ncols += 1;
+                art_col[ri] = ncols;
+                ncols += 1;
+            }
+            Cmp::Eq => {
+                art_col[ri] = ncols;
+                ncols += 1;
+            }
+        }
+    }
+
+    // Tableau: nrows x (ncols + 1 rhs).
+    let width = ncols + 1;
+    let mut t = vec![0.0f64; nrows * width];
+    let mut basis = vec![usize::MAX; nrows];
+    for (ri, (coeffs, cmp, rhs)) in norm.iter_mut().enumerate() {
+        for (v, c) in coeffs.iter() {
+            t[ri * width + v] += c;
+        }
+        match cmp {
+            Cmp::Le => {
+                t[ri * width + slack_col[ri]] = 1.0;
+                basis[ri] = slack_col[ri];
+            }
+            Cmp::Ge => {
+                t[ri * width + slack_col[ri]] = -1.0;
+                t[ri * width + art_col[ri]] = 1.0;
+                basis[ri] = art_col[ri];
+            }
+            Cmp::Eq => {
+                t[ri * width + art_col[ri]] = 1.0;
+                basis[ri] = art_col[ri];
+            }
+        }
+        t[ri * width + ncols] = *rhs;
+    }
+
+    let has_artificials = art_col.iter().any(|&c| c != usize::MAX);
+
+    // Phase 1: minimize sum of artificials.
+    if has_artificials {
+        let mut obj = vec![0.0f64; width];
+        for &c in &art_col {
+            if c != usize::MAX {
+                obj[c] = 1.0;
+            }
+        }
+        // Price out basic artificials.
+        let mut z = vec![0.0f64; width];
+        for (ri, &b) in basis.iter().enumerate() {
+            if obj[b] != 0.0 {
+                for j in 0..width {
+                    z[j] += obj[b] * t[ri * width + j];
+                }
+            }
+        }
+        let mut red: Vec<f64> = (0..width).map(|j| obj[j] - z[j]).collect();
+        if !pivot_loop(&mut t, &mut basis, &mut red, nrows, ncols, width) {
+            // Phase 1 LP can't be unbounded (objective bounded below by 0);
+            // treat failure as infeasible.
+            return infeasible(n);
+        }
+        let phase1_obj = -red[ncols];
+        if phase1_obj > 1e-6 {
+            return infeasible(n);
+        }
+        // Drive remaining basic artificials out (degenerate).
+        for ri in 0..nrows {
+            if art_col.contains(&basis[ri]) && basis[ri] != usize::MAX {
+                // pivot on any nonzero structural/slack column
+                if let Some(j) = (0..ncols)
+                    .filter(|j| !art_col.contains(j))
+                    .find(|&j| t[ri * width + j].abs() > EPS)
+                {
+                    pivot(&mut t, &mut basis, &mut red, ri, j, nrows, width);
+                } else {
+                    // redundant row; leave artificial at zero
+                }
+            }
+        }
+    }
+
+    // Phase 2: minimize the real objective over current basis.
+    let mut obj = vec![0.0f64; width];
+    for (v, c) in &m.objective {
+        obj[*v] += c;
+    }
+    // Forbid artificials from re-entering by giving them huge cost.
+    for &c in &art_col {
+        if c != usize::MAX {
+            obj[c] = 1e18;
+        }
+    }
+    let mut z = vec![0.0f64; width];
+    for (ri, &b) in basis.iter().enumerate() {
+        if obj[b] != 0.0 {
+            for j in 0..width {
+                z[j] += obj[b] * t[ri * width + j];
+            }
+        }
+    }
+    let mut red: Vec<f64> = (0..width).map(|j| obj[j] - z[j]).collect();
+    if !pivot_loop(&mut t, &mut basis, &mut red, nrows, ncols, width) {
+        return Solution {
+            status: Status::Unbounded,
+            objective: f64::NEG_INFINITY,
+            x: vec![0.0; n],
+        };
+    }
+
+    // Extract solution (unshift).
+    let mut x = lb.clone();
+    for (ri, &b) in basis.iter().enumerate() {
+        if b < n {
+            x[b] = lb[b] + t[ri * width + ncols];
+        }
+    }
+    let objective = m.objective_value(&x);
+    Solution {
+        status: Status::Optimal,
+        objective,
+        x,
+    }
+}
+
+fn infeasible(n: usize) -> Solution {
+    Solution {
+        status: Status::Infeasible,
+        objective: f64::INFINITY,
+        x: vec![0.0; n],
+    }
+}
+
+/// Primal simplex pivot loop on reduced costs `red` (index ncols = -obj).
+/// Returns false if unbounded.
+fn pivot_loop(
+    t: &mut [f64],
+    basis: &mut [usize],
+    red: &mut [f64],
+    nrows: usize,
+    ncols: usize,
+    width: usize,
+) -> bool {
+    let max_iters = 50_000.max(200 * (nrows + ncols));
+    for iter in 0..max_iters {
+        // Entering: Dantzig rule normally, Bland's rule after many iters.
+        let entering = if iter < max_iters / 2 {
+            let mut best = usize::MAX;
+            let mut best_val = -1e-7;
+            for (j, &r) in red.iter().enumerate().take(ncols) {
+                if r < best_val {
+                    best_val = r;
+                    best = j;
+                }
+            }
+            best
+        } else {
+            (0..ncols).find(|&j| red[j] < -1e-9).unwrap_or(usize::MAX)
+        };
+        if entering == usize::MAX {
+            return true; // optimal
+        }
+        // Leaving: min ratio.
+        let mut leave = usize::MAX;
+        let mut best_ratio = f64::INFINITY;
+        for ri in 0..nrows {
+            let a = t[ri * width + entering];
+            if a > EPS {
+                let ratio = t[ri * width + ncols] / a;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave != usize::MAX
+                        && basis[ri] < basis[leave])
+                {
+                    best_ratio = ratio;
+                    leave = ri;
+                }
+            }
+        }
+        if leave == usize::MAX {
+            return false; // unbounded
+        }
+        pivot(t, basis, red, leave, entering, nrows, width);
+    }
+    true // iteration budget exhausted: return current (near-optimal) point
+}
+
+fn pivot(
+    t: &mut [f64],
+    basis: &mut [usize],
+    red: &mut [f64],
+    leave: usize,
+    entering: usize,
+    nrows: usize,
+    width: usize,
+) {
+    let piv = t[leave * width + entering];
+    debug_assert!(piv.abs() > EPS);
+    let inv = 1.0 / piv;
+    for j in 0..width {
+        t[leave * width + j] *= inv;
+    }
+    for ri in 0..nrows {
+        if ri != leave {
+            let f = t[ri * width + entering];
+            if f.abs() > EPS {
+                for j in 0..width {
+                    t[ri * width + j] -= f * t[leave * width + j];
+                }
+            }
+        }
+    }
+    let f = red[entering];
+    if f.abs() > EPS {
+        for j in 0..width {
+            red[j] -= f * t[leave * width + j];
+        }
+    }
+    basis[leave] = entering;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::model::*;
+
+    #[test]
+    fn simple_lp() {
+        // min -x - 2y  s.t. x + y <= 4, x <= 3, y <= 2  → x=2..3? optimum x=2,y=2? obj -6 at (2,2)
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 0.0, 3.0);
+        let y = m.cont("y", 0.0, 2.0);
+        m.obj(x, -1.0);
+        m.obj(y, -2.0);
+        m.constraint("c", vec![(x, 1.0), (y, 1.0)], Cmp::Le, 4.0);
+        let s = solve_lp(&m, None, None);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective - (-6.0)).abs() < 1e-6, "{s:?}");
+        assert!((s.x[0] - 2.0).abs() < 1e-6);
+        assert!((s.x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_and_ge() {
+        // min x + y  s.t. x + y = 10, x >= 3, y >= 2 → handled via bounds
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 3.0, 100.0);
+        let y = m.cont("y", 2.0, 100.0);
+        m.obj(x, 1.0);
+        m.obj(y, 1.0);
+        m.constraint("eq", vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 10.0);
+        let s = solve_lp(&m, None, None);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective - 10.0).abs() < 1e-6);
+        assert!(s.x[0] >= 3.0 - 1e-6 && s.x[1] >= 2.0 - 1e-6);
+    }
+
+    #[test]
+    fn ge_constraint() {
+        // min 2x + 3y  s.t. x + y >= 5 → pick x=5, obj 10
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 0.0, 100.0);
+        let y = m.cont("y", 0.0, 100.0);
+        m.obj(x, 2.0);
+        m.obj(y, 3.0);
+        m.constraint("g", vec![(x, 1.0), (y, 1.0)], Cmp::Ge, 5.0);
+        let s = solve_lp(&m, None, None);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective - 10.0).abs() < 1e-6, "{s:?}");
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 0.0, 1.0);
+        m.constraint("c", vec![(x, 1.0)], Cmp::Ge, 5.0);
+        let s = solve_lp(&m, None, None);
+        assert_eq!(s.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 0.0, f64::INFINITY);
+        m.obj(x, -1.0);
+        let s = solve_lp(&m, None, None);
+        assert_eq!(s.status, Status::Unbounded);
+    }
+
+    #[test]
+    fn bound_overrides() {
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 0.0, 10.0);
+        m.obj(x, -1.0);
+        let s = solve_lp(&m, None, Some(&[4.0]));
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.x[0] - 4.0).abs() < 1e-6);
+        // contradictory overrides
+        let s2 = solve_lp(&m, Some(&[5.0]), Some(&[4.0]));
+        assert_eq!(s2.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn degenerate_with_redundant_rows() {
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 0.0, 10.0);
+        let y = m.cont("y", 0.0, 10.0);
+        m.obj(x, 1.0);
+        m.obj(y, 1.0);
+        m.constraint("a", vec![(x, 1.0), (y, 1.0)], Cmp::Eq, 4.0);
+        m.constraint("b", vec![(x, 2.0), (y, 2.0)], Cmp::Eq, 8.0); // redundant
+        let s = solve_lp(&m, None, None);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lower_bound_shifting() {
+        // min x s.t. x >= lb via bounds only.
+        let mut m = IlpModel::new();
+        let x = m.cont("x", 2.5, 7.0);
+        m.obj(x, 1.0);
+        let s = solve_lp(&m, None, None);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.x[0] - 2.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,247 @@
+//! Pipeline element templates (Figure 6 of the paper).
+//!
+//! * **Relay station** — an almost-full FIFO with registered outputs that
+//!   pipelines a *handshake* interface: the AFull signal throttles the
+//!   producer early enough to absorb the flip-flop latency, so inserting
+//!   one never changes protocol semantics, only latency.
+//! * **FF chain** — plain flip-flop stages pipelining a *feedforward*
+//!   (scalar) interface.
+//! * **Clock broadcast** — fan-out helper for clock/reset distribution to
+//!   partition splits.
+//!
+//! Each generator returns a leaf [`Module`] with real Verilog, interface
+//! metadata, a resource estimate, and `pipeline_element: true` so the STA
+//! treats it as a register boundary.
+
+use crate::ir::builder::{resources_to_json, LeafBuilder};
+use crate::ir::core::*;
+use crate::util::json::{Json, JsonObj};
+
+pub mod sim;
+
+/// Relay-station module name for a given width/depth.
+pub fn relay_station_name(width: u32, stages: u32) -> String {
+    format!("rs_w{width}_s{stages}")
+}
+
+/// Generate a relay station: handshake in `i`, handshake out `o`,
+/// `stages` internal register levels (depth = stages + 2 so AFull can
+/// tolerate the registered handshake round trip).
+pub fn relay_station(width: u32, stages: u32) -> Module {
+    let name = relay_station_name(width, stages);
+    let depth = (stages + 2).next_power_of_two().max(4);
+    let source = relay_station_verilog(&name, width, depth);
+    let mut m = LeafBuilder::new(&name, SourceFormat::Verilog, source)
+        .clk_rst()
+        .handshake("i", Dir::In, width)
+        .handshake("o", Dir::Out, width)
+        .build();
+    // FF: data regs per stage + FIFO control; LUT: small control.
+    let ff = (width + 2) as f64 * (stages as f64 + 1.0) + 16.0;
+    let lut = width as f64 * 0.5 + 24.0;
+    m.metadata
+        .insert("resource", resources_to_json(&Resources::new(lut, ff, 0.0, 0.0, 0.0)));
+    let mut t = JsonObj::new();
+    t.insert("internal_ns", Json::num(0.9));
+    m.metadata.insert("timing", Json::Obj(t));
+    m.metadata.insert("pipeline_element", Json::Bool(true));
+    m.metadata.insert("pipeline_stages", Json::num(stages as f64));
+    m
+}
+
+fn relay_station_verilog(name: &str, width: u32, depth: u32) -> String {
+    let aw = (31 - depth.leading_zeros()).max(1);
+    format!(
+        r#"// Relay station: almost-full FIFO pipelining a handshake channel.
+// AFull asserts {afull_margin} entries early so fully registered i_rdy
+// never overflows the buffer (Fig 6, right).
+module {name} (
+  input  wire ap_clk,
+  input  wire ap_rst_n,
+  input  wire [{msb}:0] i,
+  input  wire i_vld,
+  output reg  i_rdy,
+  output reg  [{msb}:0] o,
+  output reg  o_vld,
+  input  wire o_rdy
+);
+  reg [{msb}:0] buffer [0:{dmax}];
+  reg [{aw}:0] wptr, rptr, count;
+  wire afull = (count >= {afull_at});
+  wire do_write = i_vld & i_rdy;
+  wire do_read  = (count != 0) & (~o_vld | o_rdy);
+
+  always @(posedge ap_clk) begin
+    if (!ap_rst_n) begin
+      wptr <= 0; rptr <= 0; count <= 0;
+      i_rdy <= 1'b0; o_vld <= 1'b0;
+    end else begin
+      i_rdy <= ~afull;
+      if (do_write) begin
+        buffer[wptr[{awm1}:0]] <= i;
+        wptr <= wptr + 1;
+      end
+      if (do_read) begin
+        o <= buffer[rptr[{awm1}:0]];
+        o_vld <= 1'b1;
+        rptr <= rptr + 1;
+      end else if (o_rdy) begin
+        o_vld <= 1'b0;
+      end
+      count <= count + (do_write ? 1 : 0) - (do_read ? 1 : 0);
+    end
+  end
+endmodule
+"#,
+        name = name,
+        msb = width - 1,
+        dmax = depth - 1,
+        aw = aw,
+        awm1 = aw.saturating_sub(1),
+        afull_at = depth - 2,
+        afull_margin = 2,
+    )
+}
+
+/// FF-chain module name.
+pub fn ff_chain_name(width: u32, stages: u32) -> String {
+    format!("ff_w{width}_s{stages}")
+}
+
+/// Generate a feedforward pipeline: `stages` flip-flop levels on a scalar
+/// bundle (Fig 6, left).
+pub fn ff_chain(width: u32, stages: u32) -> Module {
+    let name = ff_chain_name(width, stages);
+    let source = format!(
+        r#"// Feedforward pipeline: {stages} register stages.
+module {name} (
+  input  wire ap_clk,
+  input  wire [{msb}:0] i,
+  output wire [{msb}:0] o
+);
+  reg [{msb}:0] pipe [0:{smax}];
+  integer k;
+  always @(posedge ap_clk) begin
+    pipe[0] <= i;
+    for (k = 1; k <= {smax}; k = k + 1)
+      pipe[k] <= pipe[k-1];
+  end
+  assign o = pipe[{smax}];
+endmodule
+"#,
+        name = name,
+        msb = width - 1,
+        smax = stages.max(1) - 1,
+        stages = stages
+    );
+    let mut m = LeafBuilder::new(&name, SourceFormat::Verilog, source)
+        .port("ap_clk", Dir::In, 1)
+        .iface(Interface::Clock {
+            port: "ap_clk".into(),
+        })
+        .port("i", Dir::In, width)
+        .port("o", Dir::Out, width)
+        .iface(Interface::Feedforward {
+            name: "i".into(),
+            ports: vec!["i".into()],
+        })
+        .iface(Interface::Feedforward {
+            name: "o".into(),
+            ports: vec!["o".into()],
+        })
+        .build();
+    m.metadata.insert(
+        "resource",
+        resources_to_json(&Resources::new(4.0, (width * stages) as f64, 0.0, 0.0, 0.0)),
+    );
+    let mut t = JsonObj::new();
+    t.insert("internal_ns", Json::num(0.6));
+    m.metadata.insert("timing", Json::Obj(t));
+    m.metadata.insert("pipeline_element", Json::Bool(true));
+    m.metadata.insert("pipeline_stages", Json::num(stages as f64));
+    m
+}
+
+/// Clock/reset broadcast helper: 1-bit input fanned out to `n` outputs.
+pub fn broadcast(n: u32) -> Module {
+    let name = format!("bcast_{n}");
+    let mut outs = String::new();
+    let mut assigns = String::new();
+    for k in 0..n {
+        outs.push_str(&format!(",\n  output wire o{k}"));
+        assigns.push_str(&format!("  assign o{k} = i;\n"));
+    }
+    let source = format!(
+        "// Clock/reset broadcast tree.\nmodule {name} (\n  input  wire i{outs}\n);\n{assigns}endmodule\n"
+    );
+    let mut b = LeafBuilder::new(&name, SourceFormat::Verilog, source).port("i", Dir::In, 1);
+    for k in 0..n {
+        b = b.port(&format!("o{k}"), Dir::Out, 1);
+    }
+    let mut m = b.build();
+    m.metadata.insert(
+        "resource",
+        resources_to_json(&Resources::new(1.0, 0.0, 0.0, 0.0, 0.0)),
+    );
+    m.metadata.insert("pipeline_element", Json::Bool(true));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verilog::parser::parse_module;
+
+    #[test]
+    fn relay_station_verilog_parses() {
+        let m = relay_station(64, 2);
+        let Body::Leaf { source, .. } = &m.body else {
+            panic!()
+        };
+        let vm = parse_module(source).unwrap();
+        assert_eq!(vm.name, m.name);
+        assert_eq!(vm.port("i").unwrap().width, 64);
+        assert_eq!(vm.port("o_vld").unwrap().dir, Dir::Out);
+    }
+
+    #[test]
+    fn relay_station_ir_shape() {
+        let m = relay_station(32, 3);
+        assert_eq!(m.interfaces.iter().filter(|i| i.pipelinable()).count(), 2);
+        assert!(m
+            .metadata
+            .get("pipeline_element")
+            .and_then(|v| v.as_bool())
+            .unwrap());
+        let r = crate::ir::builder::module_resources(&m).unwrap();
+        assert!(r.ff > 100.0);
+    }
+
+    #[test]
+    fn ff_chain_parses_and_scales() {
+        let m = ff_chain(16, 4);
+        let Body::Leaf { source, .. } = &m.body else {
+            panic!()
+        };
+        parse_module(source).unwrap();
+        let r = crate::ir::builder::module_resources(&m).unwrap();
+        assert_eq!(r.ff, 64.0);
+    }
+
+    #[test]
+    fn broadcast_parses() {
+        let m = broadcast(4);
+        let Body::Leaf { source, .. } = &m.body else {
+            panic!()
+        };
+        let vm = parse_module(source).unwrap();
+        assert_eq!(vm.ports.len(), 5);
+        assert_eq!(vm.assigns().count(), 4);
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(relay_station(64, 2).name, "rs_w64_s2");
+        assert_eq!(ff_chain(8, 1).name, "ff_w8_s1");
+    }
+}

@@ -1,0 +1,211 @@
+//! Cycle-level simulation of the relay-station RTL semantics.
+//!
+//! Mirrors the generated Verilog of [`super::relay_station`] register for
+//! register, so the handshake-preservation property (latency-insensitivity:
+//! no token dropped, no token duplicated, order preserved, no overflow even
+//! with the registered `i_rdy`) can be property-tested in Rust against
+//! randomized producer/consumer stall patterns.
+
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// One relay station instance (behavioural twin of the Verilog).
+pub struct RelayStationSim {
+    depth: usize,
+    afull_at: usize,
+    buffer: VecDeque<u64>,
+    // Registered outputs, exactly as in the RTL.
+    pub i_rdy: bool,
+    pub o: u64,
+    pub o_vld: bool,
+}
+
+impl RelayStationSim {
+    pub fn new(stages: u32) -> RelayStationSim {
+        let depth = ((stages + 2).next_power_of_two().max(4)) as usize;
+        RelayStationSim {
+            depth,
+            afull_at: depth - 2,
+            buffer: VecDeque::new(),
+            i_rdy: false,
+            o: 0,
+            o_vld: false,
+        }
+    }
+
+    /// One clock edge. Inputs are the producer's `i`/`i_vld` and the
+    /// consumer's `o_rdy` *before* the edge; registered outputs update.
+    /// Returns the value accepted this cycle, if any.
+    pub fn tick(&mut self, i: u64, i_vld: bool, o_rdy: bool) -> Option<u64> {
+        let afull = self.buffer.len() >= self.afull_at;
+        let do_write = i_vld && self.i_rdy;
+        let do_read = !self.buffer.is_empty() && (!self.o_vld || o_rdy);
+
+        let mut accepted = None;
+        if do_write {
+            assert!(
+                self.buffer.len() < self.depth,
+                "relay station overflow: AFull margin insufficient"
+            );
+            self.buffer.push_back(i);
+            accepted = Some(i);
+        }
+        if do_read {
+            self.o = self.buffer.pop_front().unwrap();
+            self.o_vld = true;
+        } else if o_rdy {
+            self.o_vld = false;
+        }
+        self.i_rdy = !afull;
+        accepted
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.buffer.len()
+    }
+}
+
+/// Drive `n_tokens` through a chain of relay stations with random stalls;
+/// returns (received tokens, cycles taken).
+pub fn run_chain(
+    stations: &mut [RelayStationSim],
+    n_tokens: u64,
+    rng: &mut Rng,
+    stall_p: f64,
+) -> (Vec<u64>, usize) {
+    let mut sent = 0u64;
+    let mut received = Vec::new();
+    let mut cycles = 0usize;
+    // Handshake values travelling between stages this cycle.
+    while received.len() < n_tokens as usize {
+        cycles += 1;
+        assert!(cycles < 100_000, "simulation did not converge");
+        // Consumer side: random stall.
+        let consumer_rdy = !rng.chance(stall_p);
+        // Evaluate stages back-to-front so each stage sees the downstream
+        // registered outputs of *this* cycle boundary.
+        // Collect current outputs first (registered, so pre-edge values).
+        let n = stations.len();
+        let mut vld: Vec<bool> = stations.iter().map(|s| s.o_vld).collect();
+        let mut data: Vec<u64> = stations.iter().map(|s| s.o).collect();
+        let mut rdy: Vec<bool> = (0..n)
+            .map(|k| {
+                if k + 1 < n {
+                    stations[k + 1].i_rdy
+                } else {
+                    consumer_rdy
+                }
+            })
+            .collect();
+        // Producer: random stall.
+        let produce = sent < n_tokens && !rng.chance(stall_p);
+        let p_vld = produce;
+        let p_data = sent;
+        // Tick all stages with pre-edge values.
+        for k in 0..n {
+            let (i, i_vld) = if k == 0 {
+                (p_data, p_vld)
+            } else {
+                (data[k - 1], vld[k - 1])
+            };
+            let o_rdy = rdy[k];
+            let accepted = stations[k].tick(i, i_vld, o_rdy);
+            if k == 0 {
+                if accepted.is_some() {
+                    sent += 1;
+                }
+            }
+        }
+        // Last stage -> consumer transfer happens when vld & rdy pre-edge.
+        if vld[n - 1] && rdy[n - 1] {
+            received.push(data[n - 1]);
+        }
+        let _ = (&mut vld, &mut data, &mut rdy);
+    }
+    (received, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, Gen};
+
+    #[test]
+    fn tokens_arrive_in_order_no_stalls() {
+        let mut st = [RelayStationSim::new(2)];
+        let mut rng = Rng::new(1);
+        let (rx, _) = run_chain(&mut st, 50, &mut rng, 0.0);
+        assert_eq!(rx, (0..50).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn deep_chain_preserves_stream() {
+        let mut st: Vec<RelayStationSim> = (0..5).map(|_| RelayStationSim::new(1)).collect();
+        let mut rng = Rng::new(2);
+        let (rx, cycles) = run_chain(&mut st, 100, &mut rng, 0.3);
+        assert_eq!(rx, (0..100).collect::<Vec<u64>>());
+        assert!(cycles > 100); // latency added, throughput sustained
+    }
+
+    #[test]
+    fn full_throughput_when_unstalled() {
+        // After warm-up, one token per cycle must flow through.
+        let mut st = [RelayStationSim::new(2)];
+        let mut rng = Rng::new(3);
+        let (_, cycles) = run_chain(&mut st, 1000, &mut rng, 0.0);
+        assert!(cycles <= 1010, "II != 1: {cycles} cycles for 1000 tokens");
+    }
+
+    struct StallGen;
+    impl Gen for StallGen {
+        type Item = (u64, u64, usize);
+        fn generate(&self, rng: &mut Rng) -> Self::Item {
+            (
+                rng.next_u64(),
+                rng.range(1, 200) as u64,
+                rng.range(1, 4),
+            )
+        }
+        fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+            let mut v = Vec::new();
+            if item.1 > 1 {
+                v.push((item.0, item.1 / 2, item.2));
+            }
+            if item.2 > 1 {
+                v.push((item.0, item.1, item.2 - 1));
+            }
+            v
+        }
+    }
+
+    /// Property: latency-insensitivity under arbitrary stall patterns.
+    #[test]
+    fn property_latency_insensitive() {
+        forall(0xF00D, 40, &StallGen, |&(seed, tokens, stages)| {
+            let mut st: Vec<RelayStationSim> =
+                (0..stages).map(|_| RelayStationSim::new(2)).collect();
+            let mut rng = Rng::new(seed);
+            let (rx, _) = run_chain(&mut st, tokens, &mut rng, 0.5);
+            rx == (0..tokens).collect::<Vec<u64>>()
+        });
+    }
+
+    #[test]
+    fn never_overflows_with_registered_ready() {
+        // The assert! inside tick() fires on overflow; hammer it.
+        let mut st = [RelayStationSim::new(1)];
+        let mut rng = Rng::new(99);
+        // Consumer almost always stalled: buffer pressure maximal.
+        let mut sent = 0u64;
+        for cycle in 0..2000 {
+            let consumer_rdy = cycle % 17 == 0;
+            let pre_vld = st[0].o_vld;
+            let accepted = st[0].tick(sent, true, consumer_rdy);
+            if accepted.is_some() {
+                sent += 1;
+            }
+            let _ = pre_vld;
+        }
+        assert!(st[0].occupancy() <= 4);
+    }
+}

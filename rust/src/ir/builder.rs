@@ -1,0 +1,293 @@
+//! Fluent programmatic construction of IR designs.
+//!
+//! Used by the benchmark design generators (`designs/`), by tests, and by
+//! users scripting design composition — the "write tools to modify the IR"
+//! path of Figure 5.
+
+use crate::ir::core::*;
+
+/// Builder for a grouped module.
+pub struct GroupedBuilder {
+    module: Module,
+}
+
+impl GroupedBuilder {
+    pub fn new(name: impl Into<String>) -> GroupedBuilder {
+        GroupedBuilder {
+            module: Module::grouped(name),
+        }
+    }
+
+    pub fn port(mut self, name: &str, dir: Dir, width: u32) -> Self {
+        self.module.ports.push(Port::new(name, dir, width));
+        self
+    }
+
+    pub fn wire(mut self, name: &str, width: u32) -> Self {
+        self.module.wires_mut().push(Wire {
+            name: name.into(),
+            width,
+        });
+        self
+    }
+
+    /// Declare an instance with `(port, identifier)` bindings.
+    pub fn inst(mut self, inst_name: &str, module_name: &str, conns: &[(&str, &str)]) -> Self {
+        let mut i = Instance::new(inst_name, module_name);
+        for (p, v) in conns {
+            i.connect(*p, ConnExpr::id(*v));
+        }
+        self.module.instances_mut().push(i);
+        self
+    }
+
+    pub fn inst_full(mut self, inst: Instance) -> Self {
+        self.module.instances_mut().push(inst);
+        self
+    }
+
+    pub fn iface(mut self, iface: Interface) -> Self {
+        self.module.interfaces.push(iface);
+        self
+    }
+
+    pub fn meta(mut self, key: &str, value: crate::util::json::Json) -> Self {
+        self.module.metadata.insert(key, value);
+        self
+    }
+
+    pub fn build(self) -> Module {
+        self.module
+    }
+}
+
+/// Builder for a leaf module.
+pub struct LeafBuilder {
+    module: Module,
+}
+
+impl LeafBuilder {
+    pub fn new(name: impl Into<String>, format: SourceFormat, source: impl Into<String>) -> Self {
+        LeafBuilder {
+            module: Module::leaf(name, format, source),
+        }
+    }
+
+    /// Verilog leaf with auto-generated stub source matching the ports.
+    pub fn verilog_stub(name: impl Into<String>) -> Self {
+        LeafBuilder {
+            module: Module::leaf(name, SourceFormat::Verilog, String::new()),
+        }
+    }
+
+    pub fn port(mut self, name: &str, dir: Dir, width: u32) -> Self {
+        self.module.ports.push(Port::new(name, dir, width));
+        self
+    }
+
+    /// Add a handshake bundle `<name>`, `<name>_vld`, `<name>_rdy`
+    /// (HLS-style naming) and the matching interface in one call.
+    pub fn handshake(mut self, name: &str, dir: Dir, width: u32) -> Self {
+        let (vld_dir, rdy_dir) = (dir, dir.flipped());
+        self.module.ports.push(Port::new(name, dir, width));
+        self.module
+            .ports
+            .push(Port::new(format!("{name}_vld"), vld_dir, 1));
+        self.module
+            .ports
+            .push(Port::new(format!("{name}_rdy"), rdy_dir, 1));
+        self.module.interfaces.push(Interface::Handshake {
+            name: name.into(),
+            data: vec![name.into()],
+            valid: format!("{name}_vld"),
+            ready: format!("{name}_rdy"),
+            clk: Some("ap_clk".into()),
+        });
+        self
+    }
+
+    /// Add the standard ap_clk/ap_rst_n pair with interfaces.
+    pub fn clk_rst(mut self) -> Self {
+        self.module.ports.push(Port::new("ap_clk", Dir::In, 1));
+        self.module.ports.push(Port::new("ap_rst_n", Dir::In, 1));
+        self.module.interfaces.push(Interface::Clock {
+            port: "ap_clk".into(),
+        });
+        self.module.interfaces.push(Interface::Reset {
+            port: "ap_rst_n".into(),
+            active_high: false,
+        });
+        self
+    }
+
+    pub fn iface(mut self, iface: Interface) -> Self {
+        self.module.interfaces.push(iface);
+        self
+    }
+
+    /// Attach a resource estimate in metadata (`resource: {LUT, FF, ...}`).
+    pub fn resource(mut self, r: Resources) -> Self {
+        self.module
+            .metadata
+            .insert("resource", resources_to_json(&r));
+        self
+    }
+
+    pub fn meta(mut self, key: &str, value: crate::util::json::Json) -> Self {
+        self.module.metadata.insert(key, value);
+        self
+    }
+
+    pub fn build(mut self) -> Module {
+        // Fill in a Verilog stub body if source is empty.
+        if let Body::Leaf { format, source } = &mut self.module.body {
+            if *format == SourceFormat::Verilog && source.is_empty() {
+                *source = stub_verilog(&self.module.name, &self.module.ports);
+            }
+        }
+        self.module
+    }
+}
+
+/// Generate a synthesizable Verilog stub for a module signature.
+pub fn stub_verilog(name: &str, ports: &[Port]) -> String {
+    let mut s = format!("module {name} (\n");
+    for (i, p) in ports.iter().enumerate() {
+        let dir = match p.dir {
+            Dir::In => "input  wire",
+            Dir::Out => "output wire",
+            Dir::InOut => "inout  wire",
+        };
+        let range = if p.width > 1 {
+            format!("[{}:0] ", p.width - 1)
+        } else {
+            String::new()
+        };
+        let comma = if i + 1 < ports.len() { "," } else { "" };
+        s.push_str(&format!("  {dir} {range}{}{comma}\n", p.name));
+    }
+    s.push_str(");\nendmodule\n");
+    s
+}
+
+/// Serialize a [`Resources`] vector to the metadata JSON shape used in
+/// Figure 8 (`{FF: 10, LUT: 39, DSP: 0, BRAM: 0, URAM: 0}`).
+pub fn resources_to_json(r: &Resources) -> crate::util::json::Json {
+    use crate::util::json::{Json, JsonObj};
+    let mut o = JsonObj::new();
+    o.insert("LUT", Json::num(r.lut));
+    o.insert("FF", Json::num(r.ff));
+    o.insert("BRAM", Json::num(r.bram));
+    o.insert("DSP", Json::num(r.dsp));
+    o.insert("URAM", Json::num(r.uram));
+    Json::Obj(o)
+}
+
+/// Read a [`Resources`] vector back from metadata.
+pub fn resources_from_json(j: &crate::util::json::Json) -> Resources {
+    let g = |k: &str| j.at(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    Resources {
+        lut: g("LUT"),
+        ff: g("FF"),
+        bram: g("BRAM"),
+        dsp: g("DSP"),
+        uram: g("URAM"),
+    }
+}
+
+/// Convenience: resource metadata of a module, if present.
+pub fn module_resources(m: &Module) -> Option<Resources> {
+    m.metadata.get("resource").map(resources_from_json)
+}
+
+/// Set resource metadata on a module.
+pub fn set_module_resources(m: &mut Module, r: Resources) {
+    m.metadata.insert("resource", resources_to_json(&r));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::validate;
+
+    #[test]
+    fn build_clean_two_module_design() {
+        let a = LeafBuilder::verilog_stub("A")
+            .clk_rst()
+            .handshake("o", Dir::Out, 32)
+            .resource(Resources::new(100.0, 50.0, 0.0, 0.0, 0.0))
+            .build();
+        let b = LeafBuilder::verilog_stub("B")
+            .clk_rst()
+            .handshake("i", Dir::In, 32)
+            .build();
+        let top = GroupedBuilder::new("Top")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .iface(Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            })
+            .wire("d", 32)
+            .wire("d_vld", 1)
+            .wire("d_rdy", 1)
+            .inst(
+                "a0",
+                "A",
+                &[
+                    ("o", "d"),
+                    ("o_vld", "d_vld"),
+                    ("o_rdy", "d_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .inst(
+                "b0",
+                "B",
+                &[
+                    ("i", "d"),
+                    ("i_vld", "d_vld"),
+                    ("i_rdy", "d_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .build();
+        let mut d = Design::new("Top");
+        d.add(a);
+        d.add(b);
+        d.add(top);
+        validate::assert_clean(&d);
+    }
+
+    #[test]
+    fn stub_verilog_shape() {
+        let s = stub_verilog(
+            "M",
+            &[Port::new("a", Dir::In, 8), Port::new("b", Dir::Out, 1)],
+        );
+        assert!(s.contains("module M ("));
+        assert!(s.contains("input  wire [7:0] a,"));
+        assert!(s.contains("output wire b\n"));
+        assert!(s.ends_with("endmodule\n"));
+    }
+
+    #[test]
+    fn resources_json_roundtrip() {
+        let r = Resources::new(1.0, 2.0, 3.0, 4.0, 5.0);
+        assert_eq!(resources_from_json(&resources_to_json(&r)), r);
+    }
+
+    #[test]
+    fn handshake_builder_creates_bundle() {
+        let m = LeafBuilder::verilog_stub("X").handshake("s", Dir::In, 64).build();
+        assert!(m.port("s").is_some());
+        assert!(m.port("s_vld").is_some());
+        assert_eq!(m.port("s_rdy").unwrap().dir, Dir::Out);
+        assert_eq!(m.interfaces.len(), 1);
+    }
+}

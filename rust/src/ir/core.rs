@@ -1,0 +1,637 @@
+//! Core data model of the RapidStream IR (§3.1 of the paper).
+//!
+//! A [`Design`] is a library of [`Module`]s plus a designated top module.
+//! Modules are either **leaf** modules — atomic units whose native source
+//! (Verilog, netlist, XCI manifest, …) is embedded verbatim — or **grouped**
+//! modules — pure containers holding wires and submodule instances with *no
+//! logic of their own*.
+//!
+//! Invariant assumptions maintained by every transformation pass:
+//! 1. each wire in a grouped module connects exactly two endpoints;
+//! 2. each submodule port connects to a single identifier or a constant
+//!    (no concatenation / bit-select);
+//! 3. non-constant ports of an interface are fully connected — interfaces
+//!    are never split across modules.
+//!
+//! These are checked by [`crate::ir::validate`] (the "DRC" passes).
+
+use crate::util::json::JsonObj;
+use std::collections::BTreeMap;
+
+/// Port direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    In,
+    Out,
+    InOut,
+}
+
+impl Dir {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dir::In => "in",
+            Dir::Out => "out",
+            Dir::InOut => "inout",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dir> {
+        match s {
+            "in" | "input" => Some(Dir::In),
+            "out" | "output" => Some(Dir::Out),
+            "inout" => Some(Dir::InOut),
+            _ => None,
+        }
+    }
+
+    pub fn flipped(&self) -> Dir {
+        match self {
+            Dir::In => Dir::Out,
+            Dir::Out => Dir::In,
+            Dir::InOut => Dir::InOut,
+        }
+    }
+}
+
+/// A module port: name, direction, bit width.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Port {
+    pub name: String,
+    pub dir: Dir,
+    pub width: u32,
+}
+
+impl Port {
+    pub fn new(name: impl Into<String>, dir: Dir, width: u32) -> Port {
+        Port {
+            name: name.into(),
+            dir,
+            width,
+        }
+    }
+}
+
+/// A named wire inside a grouped module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Wire {
+    pub name: String,
+    pub width: u32,
+}
+
+/// What a submodule port connects to: a single identifier (a wire or a
+/// parent-port name) or a constant (invariant 2 prohibits expressions).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConnExpr {
+    /// A wire or parent-port identifier.
+    Id(String),
+    /// A literal constant, e.g. `8'd0` → width 8, value 0.
+    Const { width: u32, value: u64 },
+    /// Explicitly unconnected (dangling output).
+    Open,
+}
+
+impl ConnExpr {
+    pub fn id(s: impl Into<String>) -> ConnExpr {
+        ConnExpr::Id(s.into())
+    }
+
+    pub fn as_id(&self) -> Option<&str> {
+        match self {
+            ConnExpr::Id(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A port-to-expression binding on an instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Connection {
+    pub port: String,
+    pub value: ConnExpr,
+}
+
+/// An instantiation of a module inside a grouped module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instance {
+    pub instance_name: String,
+    pub module_name: String,
+    pub connections: Vec<Connection>,
+    pub metadata: JsonObj,
+}
+
+impl Instance {
+    pub fn new(instance_name: impl Into<String>, module_name: impl Into<String>) -> Instance {
+        Instance {
+            instance_name: instance_name.into(),
+            module_name: module_name.into(),
+            connections: Vec::new(),
+            metadata: JsonObj::new(),
+        }
+    }
+
+    pub fn connect(&mut self, port: impl Into<String>, value: ConnExpr) {
+        self.connections.push(Connection {
+            port: port.into(),
+            value,
+        });
+    }
+
+    pub fn connection(&self, port: &str) -> Option<&ConnExpr> {
+        self.connections
+            .iter()
+            .find(|c| c.port == port)
+            .map(|c| &c.value)
+    }
+
+    pub fn connection_mut(&mut self, port: &str) -> Option<&mut ConnExpr> {
+        self.connections
+            .iter_mut()
+            .find(|c| c.port == port)
+            .map(|c| &mut c.value)
+    }
+}
+
+/// Native source format of a leaf module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceFormat {
+    Verilog,
+    Vhdl,
+    Netlist,
+    /// Xilinx Compiled IP manifest (JSON surrogate of an .xci).
+    Xci,
+    /// Vitis Xilinx Object container manifest.
+    Xo,
+    /// Interface-only stub: ports known, implementation opaque.
+    Blackbox,
+}
+
+impl SourceFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SourceFormat::Verilog => "verilog",
+            SourceFormat::Vhdl => "vhdl",
+            SourceFormat::Netlist => "netlist",
+            SourceFormat::Xci => "xci",
+            SourceFormat::Xo => "xo",
+            SourceFormat::Blackbox => "blackbox",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SourceFormat> {
+        match s {
+            "verilog" => Some(SourceFormat::Verilog),
+            "vhdl" => Some(SourceFormat::Vhdl),
+            "netlist" => Some(SourceFormat::Netlist),
+            "xci" => Some(SourceFormat::Xci),
+            "xo" => Some(SourceFormat::Xo),
+            "blackbox" => Some(SourceFormat::Blackbox),
+            _ => None,
+        }
+    }
+}
+
+/// Body of a module: leaf (native source kept verbatim) or grouped
+/// (pure container of wires + instances).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Body {
+    Leaf {
+        format: SourceFormat,
+        /// Original source text / manifest, embedded to preserve integrity.
+        source: String,
+    },
+    Grouped {
+        wires: Vec<Wire>,
+        instances: Vec<Instance>,
+    },
+}
+
+/// A pipeline strategy applicable to a set of ports (§3.1 "Interface").
+///
+/// * `Handshake` — valid/ready/data; pipelined with a relay station or an
+///   almost-full FIFO (Fig 6 right).
+/// * `Feedforward` — scalar signals pipelined by inserting flip-flops
+///   (Fig 6 left).
+/// * `Clock` / `Reset` — broadcast nets, excluded from connectivity
+///   analysis and never pipelined.
+/// * `NonPipeline` — explicitly latency-sensitive ports; modules joined by
+///   these must be grouped into the same partition.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Interface {
+    Handshake {
+        /// Bundle name, e.g. "I" or "m_axi_AW".
+        name: String,
+        data: Vec<String>,
+        valid: String,
+        ready: String,
+        /// Associated clock port, if known.
+        clk: Option<String>,
+    },
+    Feedforward {
+        name: String,
+        ports: Vec<String>,
+    },
+    Clock {
+        port: String,
+    },
+    Reset {
+        port: String,
+        active_high: bool,
+    },
+    NonPipeline {
+        name: String,
+        ports: Vec<String>,
+    },
+}
+
+impl Interface {
+    /// All ports covered by this interface (including valid/ready, and the
+    /// clock only for `Clock` itself).
+    pub fn ports(&self) -> Vec<&str> {
+        match self {
+            Interface::Handshake {
+                data, valid, ready, ..
+            } => {
+                let mut v: Vec<&str> = data.iter().map(|s| s.as_str()).collect();
+                v.push(valid);
+                v.push(ready);
+                v
+            }
+            Interface::Feedforward { ports, .. } | Interface::NonPipeline { ports, .. } => {
+                ports.iter().map(|s| s.as_str()).collect()
+            }
+            Interface::Clock { port } | Interface::Reset { port, .. } => vec![port.as_str()],
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Interface::Handshake { name, .. }
+            | Interface::Feedforward { name, .. }
+            | Interface::NonPipeline { name, .. } => name,
+            Interface::Clock { port } | Interface::Reset { port, .. } => port,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Interface::Handshake { .. } => "handshake",
+            Interface::Feedforward { .. } => "feedforward",
+            Interface::Clock { .. } => "clock",
+            Interface::Reset { .. } => "reset",
+            Interface::NonPipeline { .. } => "nonpipeline",
+        }
+    }
+
+    /// Whether pipeline stages may be inserted on this interface.
+    pub fn pipelinable(&self) -> bool {
+        matches!(
+            self,
+            Interface::Handshake { .. } | Interface::Feedforward { .. }
+        )
+    }
+}
+
+/// FPGA resource vector. Fractions of a unit are allowed because synthesis
+/// estimation distributes shared logic across submodules.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub dsp: f64,
+    pub uram: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources {
+        lut: 0.0,
+        ff: 0.0,
+        bram: 0.0,
+        dsp: 0.0,
+        uram: 0.0,
+    };
+
+    pub fn new(lut: f64, ff: f64, bram: f64, dsp: f64, uram: f64) -> Resources {
+        Resources {
+            lut,
+            ff,
+            bram,
+            dsp,
+            uram,
+        }
+    }
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            dsp: self.dsp + o.dsp,
+            uram: self.uram + o.uram,
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            ff: self.ff * k,
+            bram: self.bram * k,
+            dsp: self.dsp * k,
+            uram: self.uram * k,
+        }
+    }
+
+    /// Max over all kinds of `self[kind] / cap[kind]` — the utilization
+    /// ratio of the binding resource.
+    pub fn max_util(&self, cap: &Resources) -> f64 {
+        let r = |x: f64, c: f64| if c > 0.0 { x / c } else { 0.0 };
+        r(self.lut, cap.lut)
+            .max(r(self.ff, cap.ff))
+            .max(r(self.bram, cap.bram))
+            .max(r(self.dsp, cap.dsp))
+            .max(r(self.uram, cap.uram))
+    }
+
+    pub fn fits(&self, cap: &Resources, limit: f64) -> bool {
+        self.max_util(cap) <= limit
+    }
+
+    pub fn kinds() -> [&'static str; 5] {
+        ["LUT", "FF", "BRAM", "DSP", "URAM"]
+    }
+
+    pub fn get(&self, kind: &str) -> f64 {
+        match kind {
+            "LUT" => self.lut,
+            "FF" => self.ff,
+            "BRAM" => self.bram,
+            "DSP" => self.dsp,
+            "URAM" => self.uram,
+            _ => 0.0,
+        }
+    }
+}
+
+/// A design module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Module {
+    pub name: String,
+    pub ports: Vec<Port>,
+    pub body: Body,
+    pub interfaces: Vec<Interface>,
+    /// Free-form metadata: `resource`, `floorplan`, `timing`, pass
+    /// bookkeeping — anything an analysis pass wants to attach (§3.1
+    /// "Additional Metadata").
+    pub metadata: JsonObj,
+}
+
+impl Module {
+    pub fn leaf(name: impl Into<String>, format: SourceFormat, source: impl Into<String>) -> Module {
+        Module {
+            name: name.into(),
+            ports: Vec::new(),
+            body: Body::Leaf {
+                format,
+                source: source.into(),
+            },
+            interfaces: Vec::new(),
+            metadata: JsonObj::new(),
+        }
+    }
+
+    pub fn grouped(name: impl Into<String>) -> Module {
+        Module {
+            name: name.into(),
+            ports: Vec::new(),
+            body: Body::Grouped {
+                wires: Vec::new(),
+                instances: Vec::new(),
+            },
+            interfaces: Vec::new(),
+            metadata: JsonObj::new(),
+        }
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        matches!(self.body, Body::Leaf { .. })
+    }
+
+    pub fn is_grouped(&self) -> bool {
+        matches!(self.body, Body::Grouped { .. })
+    }
+
+    pub fn port(&self, name: &str) -> Option<&Port> {
+        self.ports.iter().find(|p| p.name == name)
+    }
+
+    pub fn wires(&self) -> &[Wire] {
+        match &self.body {
+            Body::Grouped { wires, .. } => wires,
+            _ => &[],
+        }
+    }
+
+    pub fn instances(&self) -> &[Instance] {
+        match &self.body {
+            Body::Grouped { instances, .. } => instances,
+            _ => &[],
+        }
+    }
+
+    pub fn wires_mut(&mut self) -> &mut Vec<Wire> {
+        match &mut self.body {
+            Body::Grouped { wires, .. } => wires,
+            _ => panic!("wires_mut on leaf module {}", self.name),
+        }
+    }
+
+    pub fn instances_mut(&mut self) -> &mut Vec<Instance> {
+        match &mut self.body {
+            Body::Grouped { instances, .. } => instances,
+            _ => panic!("instances_mut on leaf module {}", self.name),
+        }
+    }
+
+    pub fn instance(&self, name: &str) -> Option<&Instance> {
+        self.instances().iter().find(|i| i.instance_name == name)
+    }
+
+    /// The interface covering `port`, if any.
+    pub fn interface_of(&self, port: &str) -> Option<&Interface> {
+        self.interfaces
+            .iter()
+            .find(|i| i.ports().contains(&port))
+    }
+
+    /// Ports not covered by any interface.
+    pub fn uncovered_ports(&self) -> Vec<&Port> {
+        self.ports
+            .iter()
+            .filter(|p| self.interface_of(&p.name).is_none())
+            .collect()
+    }
+}
+
+/// The whole IR: a module library with a designated top.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Design {
+    pub top: String,
+    pub modules: BTreeMap<String, Module>,
+    pub metadata: JsonObj,
+}
+
+impl Design {
+    pub fn new(top: impl Into<String>) -> Design {
+        Design {
+            top: top.into(),
+            modules: BTreeMap::new(),
+            metadata: JsonObj::new(),
+        }
+    }
+
+    pub fn add(&mut self, module: Module) {
+        self.modules.insert(module.name.clone(), module);
+    }
+
+    pub fn module(&self, name: &str) -> Option<&Module> {
+        self.modules.get(name)
+    }
+
+    pub fn module_mut(&mut self, name: &str) -> Option<&mut Module> {
+        self.modules.get_mut(name)
+    }
+
+    pub fn top_module(&self) -> &Module {
+        self.modules
+            .get(&self.top)
+            .unwrap_or_else(|| panic!("top module '{}' not in design", self.top))
+    }
+
+    /// Generate a module name not already present, based on `base`.
+    pub fn fresh_module_name(&self, base: &str) -> String {
+        if !self.modules.contains_key(base) {
+            return base.to_string();
+        }
+        for i in 1.. {
+            let cand = format!("{base}_{i}");
+            if !self.modules.contains_key(&cand) {
+                return cand;
+            }
+        }
+        unreachable!()
+    }
+
+    /// Remove modules unreachable from the top (after passthrough/flatten).
+    pub fn gc(&mut self) {
+        let mut live = std::collections::BTreeSet::new();
+        let mut stack = vec![self.top.clone()];
+        while let Some(name) = stack.pop() {
+            if !live.insert(name.clone()) {
+                continue;
+            }
+            if let Some(m) = self.modules.get(&name) {
+                for inst in m.instances() {
+                    stack.push(inst.module_name.clone());
+                }
+            }
+        }
+        self.modules.retain(|name, _| live.contains(name));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fifo_module() -> Module {
+        let mut m = Module::leaf("FIFO", SourceFormat::Verilog, "module FIFO(); endmodule");
+        m.ports = vec![
+            Port::new("I", Dir::In, 64),
+            Port::new("I_vld", Dir::In, 1),
+            Port::new("I_rdy", Dir::Out, 1),
+            Port::new("ap_clk", Dir::In, 1),
+        ];
+        m.interfaces = vec![
+            Interface::Handshake {
+                name: "I".into(),
+                data: vec!["I".into()],
+                valid: "I_vld".into(),
+                ready: "I_rdy".into(),
+                clk: Some("ap_clk".into()),
+            },
+            Interface::Clock {
+                port: "ap_clk".into(),
+            },
+        ];
+        m
+    }
+
+    #[test]
+    fn interface_port_coverage() {
+        let m = fifo_module();
+        assert_eq!(m.interface_of("I_vld").unwrap().kind(), "handshake");
+        // clk is an associated port, not a handshake member: Clock covers it.
+        assert_eq!(m.interface_of("ap_clk").unwrap().kind(), "clock");
+    }
+
+    #[test]
+    fn interface_ports_listing() {
+        let m = fifo_module();
+        let hs = &m.interfaces[0];
+        let mut ps = hs.ports();
+        ps.sort();
+        assert_eq!(ps, vec!["I", "I_rdy", "I_vld"]);
+        assert!(hs.pipelinable());
+        assert!(!m.interfaces[1].pipelinable());
+    }
+
+    #[test]
+    fn uncovered_ports_empty_when_fully_covered() {
+        let m = fifo_module();
+        assert!(m.uncovered_ports().is_empty());
+    }
+
+    #[test]
+    fn design_gc_removes_unreachable() {
+        let mut d = Design::new("Top");
+        let mut top = Module::grouped("Top");
+        let mut inst = Instance::new("a", "A");
+        inst.connect("x", ConnExpr::id("w"));
+        top.instances_mut().push(inst);
+        d.add(top);
+        d.add(Module::leaf("A", SourceFormat::Verilog, ""));
+        d.add(Module::leaf("Orphan", SourceFormat::Verilog, ""));
+        d.gc();
+        assert!(d.module("A").is_some());
+        assert!(d.module("Orphan").is_none());
+    }
+
+    #[test]
+    fn fresh_module_name_avoids_collisions() {
+        let mut d = Design::new("T");
+        d.add(Module::grouped("T"));
+        d.add(Module::grouped("T_1"));
+        assert_eq!(d.fresh_module_name("T"), "T_2");
+        assert_eq!(d.fresh_module_name("X"), "X");
+    }
+
+    #[test]
+    fn resources_arithmetic() {
+        let a = Resources::new(100.0, 200.0, 4.0, 8.0, 0.0);
+        let cap = Resources::new(1000.0, 2000.0, 10.0, 10.0, 10.0);
+        assert!((a.max_util(&cap) - 0.8).abs() < 1e-9);
+        assert!(a.fits(&cap, 0.8));
+        assert!(!a.fits(&cap, 0.7));
+        let s = a.add(&a).scale(0.5);
+        assert_eq!(s, a);
+    }
+
+    #[test]
+    fn dir_roundtrip() {
+        for d in [Dir::In, Dir::Out, Dir::InOut] {
+            assert_eq!(Dir::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(Dir::parse("input"), Some(Dir::In));
+        assert_eq!(Dir::In.flipped(), Dir::Out);
+    }
+}

@@ -1,0 +1,200 @@
+//! Block-graph view of a grouped module: wire endpoints, connectivity
+//! queries, and the inter-instance edge list used by partitioning,
+//! floorplanning, and pipeline insertion.
+
+use crate::ir::core::*;
+use std::collections::BTreeMap;
+
+/// One endpoint of a wire inside a grouped module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A port on the grouped module itself (seen from inside).
+    Parent { port: String },
+    /// A port on instance `inst`.
+    Inst { inst: String, port: String },
+}
+
+impl Endpoint {
+    pub fn describe(&self) -> String {
+        match self {
+            Endpoint::Parent { port } => format!("<parent>.{port}"),
+            Endpoint::Inst { inst, port } => format!("{inst}.{port}"),
+        }
+    }
+}
+
+/// Connectivity of one identifier (wire or parent-port name).
+#[derive(Debug, Clone, Default)]
+pub struct NetInfo {
+    pub endpoints: Vec<Endpoint>,
+    pub width: u32,
+}
+
+/// The resolved connectivity of a grouped module.
+#[derive(Debug, Clone)]
+pub struct BlockGraph {
+    /// identifier -> endpoints. Identifiers are wire names or parent ports.
+    pub nets: BTreeMap<String, NetInfo>,
+    /// instance names in declaration order.
+    pub instances: Vec<String>,
+}
+
+impl BlockGraph {
+    /// Build the graph for grouped module `m` (panics on leaf modules).
+    pub fn build(m: &Module) -> BlockGraph {
+        assert!(m.is_grouped(), "BlockGraph::build on leaf {}", m.name);
+        let mut nets: BTreeMap<String, NetInfo> = BTreeMap::new();
+        for w in m.wires() {
+            nets.entry(w.name.clone()).or_default().width = w.width;
+        }
+        for p in &m.ports {
+            let e = nets.entry(p.name.clone()).or_default();
+            e.width = p.width;
+            e.endpoints.push(Endpoint::Parent {
+                port: p.name.clone(),
+            });
+        }
+        let mut instances = Vec::new();
+        for inst in m.instances() {
+            instances.push(inst.instance_name.clone());
+            for conn in &inst.connections {
+                if let ConnExpr::Id(id) = &conn.value {
+                    nets.entry(id.clone()).or_default().endpoints.push(Endpoint::Inst {
+                        inst: inst.instance_name.clone(),
+                        port: conn.port.clone(),
+                    });
+                }
+            }
+        }
+        BlockGraph { nets, instances }
+    }
+
+    /// The other endpoint of a 2-endpoint net, given one side.
+    pub fn opposite(&self, net: &str, this: &Endpoint) -> Option<&Endpoint> {
+        let info = self.nets.get(net)?;
+        if info.endpoints.len() != 2 {
+            return None;
+        }
+        info.endpoints.iter().find(|e| *e != this)
+    }
+
+    /// Inter-instance edges: (inst_a, inst_b, total bit width) aggregated
+    /// over all nets joining the pair. Parent-port nets are excluded.
+    /// Clock/reset nets can be excluded by passing their identifiers.
+    pub fn instance_edges(&self, exclude_nets: &[String]) -> Vec<(String, String, u64)> {
+        let mut acc: BTreeMap<(String, String), u64> = BTreeMap::new();
+        for (name, info) in &self.nets {
+            if exclude_nets.iter().any(|x| x == name) {
+                continue;
+            }
+            let insts: Vec<&str> = info
+                .endpoints
+                .iter()
+                .filter_map(|e| match e {
+                    Endpoint::Inst { inst, .. } => Some(inst.as_str()),
+                    _ => None,
+                })
+                .collect();
+            if insts.len() == 2 && insts[0] != insts[1] {
+                let (a, b) = if insts[0] < insts[1] {
+                    (insts[0], insts[1])
+                } else {
+                    (insts[1], insts[0])
+                };
+                *acc.entry((a.to_string(), b.to_string())).or_default() += info.width as u64;
+            }
+        }
+        acc.into_iter().map(|((a, b), w)| (a, b, w)).collect()
+    }
+
+    /// Nets whose endpoints include instance `inst`.
+    pub fn nets_of_instance<'a>(&'a self, inst: &str) -> Vec<&'a str> {
+        self.nets
+            .iter()
+            .filter(|(_, info)| {
+                info.endpoints.iter().any(|e| matches!(e, Endpoint::Inst { inst: i, .. } if i == inst))
+            })
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::*;
+
+    /// Top with two instances A, B joined by wire `w` (64b), A also tied to
+    /// parent port `in_data`.
+    fn sample() -> Module {
+        let mut m = Module::grouped("Top");
+        m.ports = vec![Port::new("in_data", Dir::In, 32)];
+        m.wires_mut().push(Wire {
+            name: "w".into(),
+            width: 64,
+        });
+        let mut a = Instance::new("a", "A");
+        a.connect("o", ConnExpr::id("w"));
+        a.connect("i", ConnExpr::id("in_data"));
+        let mut b = Instance::new("b", "B");
+        b.connect("i", ConnExpr::id("w"));
+        m.instances_mut().push(a);
+        m.instances_mut().push(b);
+        m
+    }
+
+    #[test]
+    fn nets_resolve_endpoints() {
+        let g = BlockGraph::build(&sample());
+        assert_eq!(g.nets["w"].endpoints.len(), 2);
+        assert_eq!(g.nets["in_data"].endpoints.len(), 2);
+        assert_eq!(g.nets["w"].width, 64);
+    }
+
+    #[test]
+    fn opposite_endpoint() {
+        let g = BlockGraph::build(&sample());
+        let from = Endpoint::Inst {
+            inst: "a".into(),
+            port: "o".into(),
+        };
+        let opp = g.opposite("w", &from).unwrap();
+        assert_eq!(
+            *opp,
+            Endpoint::Inst {
+                inst: "b".into(),
+                port: "i".into()
+            }
+        );
+    }
+
+    #[test]
+    fn instance_edges_aggregate_width() {
+        let mut m = sample();
+        // Add a second 8-bit wire between a and b.
+        m.wires_mut().push(Wire {
+            name: "w2".into(),
+            width: 8,
+        });
+        m.instances_mut()[0].connect("o2", ConnExpr::id("w2"));
+        m.instances_mut()[1].connect("i2", ConnExpr::id("w2"));
+        let g = BlockGraph::build(&m);
+        let edges = g.instance_edges(&[]);
+        assert_eq!(edges, vec![("a".to_string(), "b".to_string(), 72)]);
+    }
+
+    #[test]
+    fn excluded_nets_skipped() {
+        let g = BlockGraph::build(&sample());
+        let edges = g.instance_edges(&["w".to_string()]);
+        assert!(edges.is_empty());
+    }
+
+    #[test]
+    fn nets_of_instance_lists_all() {
+        let g = BlockGraph::build(&sample());
+        let mut nets = g.nets_of_instance("a");
+        nets.sort();
+        assert_eq!(nets, vec!["in_data", "w"]);
+    }
+}

@@ -1,0 +1,14 @@
+//! The RapidStream intermediate representation (§3.1): a progressively
+//! refined, coarse-grained IR of a hybrid-source FPGA design.
+
+pub mod builder;
+pub mod core;
+pub mod graph;
+pub mod namemap;
+pub mod schema;
+pub mod validate;
+
+pub use core::{
+    Body, ConnExpr, Connection, Design, Dir, Instance, Interface, Module, Port, Resources,
+    SourceFormat, Wire,
+};

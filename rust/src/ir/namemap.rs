@@ -1,0 +1,104 @@
+//! Mapping between original design components and their transformed
+//! counterparts, "maintained throughout the optimization process, enabling
+//! human readability and debuggability" (§3, Design Principles).
+//!
+//! Each pass records renames/moves here; `trace` resolves a transformed
+//! name back to its original hierarchical path.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct NameMap {
+    /// transformed name -> immediate predecessor name.
+    parent: BTreeMap<String, String>,
+    /// pass that introduced each transformed name.
+    origin_pass: BTreeMap<String, String>,
+}
+
+impl NameMap {
+    pub fn new() -> NameMap {
+        NameMap::default()
+    }
+
+    /// Record that `new_name` was derived from `old_name` by `pass`.
+    pub fn record(&mut self, pass: &str, old_name: &str, new_name: &str) {
+        if old_name == new_name {
+            return;
+        }
+        self.parent.insert(new_name.to_string(), old_name.to_string());
+        self.origin_pass.insert(new_name.to_string(), pass.to_string());
+    }
+
+    /// Resolve a (possibly multiply-) transformed name to its original.
+    pub fn trace(&self, name: &str) -> String {
+        let mut cur = name;
+        let mut hops = 0;
+        while let Some(prev) = self.parent.get(cur) {
+            cur = prev;
+            hops += 1;
+            if hops > 10_000 {
+                break; // defensive: cycle
+            }
+        }
+        cur.to_string()
+    }
+
+    /// Full derivation chain, most recent first.
+    pub fn chain(&self, name: &str) -> Vec<(String, Option<String>)> {
+        let mut out = vec![(name.to_string(), None)];
+        let mut cur = name.to_string();
+        while let Some(prev) = self.parent.get(&cur) {
+            let pass = self.origin_pass.get(&cur).cloned();
+            out.last_mut().unwrap().1 = pass;
+            out.push((prev.clone(), None));
+            cur = prev.clone();
+            if out.len() > 10_000 {
+                break;
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_resolves_chain() {
+        let mut nm = NameMap::new();
+        nm.record("rebuild", "LLM", "LLM_grouped");
+        nm.record("partition", "LLM_Aux", "LLM_Aux_split0");
+        nm.record("flatten", "LLM_Aux_split0", "LLM_Aux_split0_flat");
+        assert_eq!(nm.trace("LLM_Aux_split0_flat"), "LLM_Aux");
+        assert_eq!(nm.trace("LLM_grouped"), "LLM");
+        assert_eq!(nm.trace("untouched"), "untouched");
+    }
+
+    #[test]
+    fn chain_records_passes() {
+        let mut nm = NameMap::new();
+        nm.record("rebuild", "A", "B");
+        nm.record("flatten", "B", "C");
+        let chain = nm.chain("C");
+        assert_eq!(chain.len(), 3);
+        assert_eq!(chain[0].0, "C");
+        assert_eq!(chain[0].1.as_deref(), Some("flatten"));
+        assert_eq!(chain[2].0, "A");
+    }
+
+    #[test]
+    fn identity_record_ignored() {
+        let mut nm = NameMap::new();
+        nm.record("p", "X", "X");
+        assert!(nm.is_empty());
+    }
+}

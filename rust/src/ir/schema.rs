@@ -1,0 +1,486 @@
+//! JSON (de)serialization of the IR, following the field names of the
+//! paper's Figure 8: `module_name`, `module_ports`, `module_wires`,
+//! `module_submodules`, `module_verilog` (generalized to `module_source` +
+//! `source_format`), `module_interfaces`, `module_metadata`.
+
+use crate::ir::core::*;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{anyhow, bail, Context, Result};
+
+pub fn design_to_json(d: &Design) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("top", Json::str(&d.top));
+    let mods: Vec<Json> = d.modules.values().map(module_to_json).collect();
+    o.insert("modules", Json::Arr(mods));
+    if !d.metadata.is_empty() {
+        o.insert("metadata", Json::Obj(d.metadata.clone()));
+    }
+    Json::Obj(o)
+}
+
+pub fn design_from_json(j: &Json) -> Result<Design> {
+    let top = j
+        .at("top")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| anyhow!("design missing 'top'"))?;
+    let mut d = Design::new(top);
+    for (i, mj) in j
+        .at("modules")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| anyhow!("design missing 'modules'"))?
+        .iter()
+        .enumerate()
+    {
+        let m = module_from_json(mj).with_context(|| format!("modules[{i}]"))?;
+        d.add(m);
+    }
+    if let Some(Json::Obj(meta)) = j.at("metadata") {
+        d.metadata = meta.clone();
+    }
+    Ok(d)
+}
+
+pub fn module_to_json(m: &Module) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("module_name", Json::str(&m.name));
+    o.insert(
+        "module_ports",
+        Json::Arr(m.ports.iter().map(port_to_json).collect()),
+    );
+    match &m.body {
+        Body::Leaf { format, source } => {
+            o.insert("source_format", Json::str(format.as_str()));
+            o.insert("module_source", Json::str(source));
+        }
+        Body::Grouped { wires, instances } => {
+            o.insert(
+                "module_wires",
+                Json::Arr(
+                    wires
+                        .iter()
+                        .map(|w| {
+                            let mut wo = JsonObj::new();
+                            wo.insert("name", Json::str(&w.name));
+                            wo.insert("width", Json::num(w.width as f64));
+                            Json::Obj(wo)
+                        })
+                        .collect(),
+                ),
+            );
+            o.insert(
+                "module_submodules",
+                Json::Arr(instances.iter().map(instance_to_json).collect()),
+            );
+        }
+    }
+    if !m.interfaces.is_empty() {
+        o.insert(
+            "module_interfaces",
+            Json::Arr(m.interfaces.iter().map(interface_to_json).collect()),
+        );
+    }
+    if !m.metadata.is_empty() {
+        o.insert("module_metadata", Json::Obj(m.metadata.clone()));
+    }
+    Json::Obj(o)
+}
+
+fn port_to_json(p: &Port) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("name", Json::str(&p.name));
+    o.insert("direction", Json::str(p.dir.as_str()));
+    o.insert("width", Json::num(p.width as f64));
+    Json::Obj(o)
+}
+
+fn instance_to_json(i: &Instance) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("instance_name", Json::str(&i.instance_name));
+    o.insert("module_name", Json::str(&i.module_name));
+    o.insert(
+        "connections",
+        Json::Arr(
+            i.connections
+                .iter()
+                .map(|c| {
+                    let mut co = JsonObj::new();
+                    co.insert("port", Json::str(&c.port));
+                    match &c.value {
+                        ConnExpr::Id(id) => co.insert("value", Json::str(id)),
+                        ConnExpr::Const { width, value } => {
+                            co.insert("const", Json::str(format!("{width}'d{value}")))
+                        }
+                        ConnExpr::Open => co.insert("open", Json::Bool(true)),
+                    }
+                    Json::Obj(co)
+                })
+                .collect(),
+        ),
+    );
+    if !i.metadata.is_empty() {
+        o.insert("metadata", Json::Obj(i.metadata.clone()));
+    }
+    Json::Obj(o)
+}
+
+fn interface_to_json(iface: &Interface) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("iface_type", Json::str(iface.kind()));
+    match iface {
+        Interface::Handshake {
+            name,
+            data,
+            valid,
+            ready,
+            clk,
+        } => {
+            o.insert("name", Json::str(name));
+            let mut ports = JsonObj::new();
+            ports.insert(
+                "data",
+                Json::Arr(data.iter().map(|d| Json::str(d)).collect()),
+            );
+            ports.insert("valid", Json::str(valid));
+            ports.insert("ready", Json::str(ready));
+            if let Some(c) = clk {
+                ports.insert("clk", Json::str(c));
+            }
+            o.insert("iface_ports", Json::Obj(ports));
+        }
+        Interface::Feedforward { name, ports } | Interface::NonPipeline { name, ports } => {
+            o.insert("name", Json::str(name));
+            o.insert(
+                "iface_ports",
+                Json::Arr(ports.iter().map(|p| Json::str(p)).collect()),
+            );
+        }
+        Interface::Clock { port } => {
+            o.insert("port", Json::str(port));
+        }
+        Interface::Reset { port, active_high } => {
+            o.insert("port", Json::str(port));
+            o.insert("active_high", Json::Bool(*active_high));
+        }
+    }
+    Json::Obj(o)
+}
+
+pub fn module_from_json(j: &Json) -> Result<Module> {
+    let name = j
+        .at("module_name")
+        .and_then(|n| n.as_str())
+        .ok_or_else(|| anyhow!("module missing 'module_name'"))?
+        .to_string();
+    let mut ports = Vec::new();
+    if let Some(parr) = j.at("module_ports").and_then(|p| p.as_arr()) {
+        for pj in parr {
+            ports.push(port_from_json(pj)?);
+        }
+    }
+    let body = if let Some(src) = j.at("module_source").and_then(|s| s.as_str()) {
+        let fmt = j
+            .at("source_format")
+            .and_then(|f| f.as_str())
+            .and_then(SourceFormat::parse)
+            .ok_or_else(|| anyhow!("module '{name}': bad source_format"))?;
+        Body::Leaf {
+            format: fmt,
+            source: src.to_string(),
+        }
+    } else {
+        let mut wires = Vec::new();
+        if let Some(warr) = j.at("module_wires").and_then(|w| w.as_arr()) {
+            for wj in warr {
+                wires.push(Wire {
+                    name: wj
+                        .at("name")
+                        .and_then(|n| n.as_str())
+                        .ok_or_else(|| anyhow!("wire missing name"))?
+                        .to_string(),
+                    width: wj.at("width").and_then(|w| w.as_u64()).unwrap_or(1) as u32,
+                });
+            }
+        }
+        let mut instances = Vec::new();
+        if let Some(iarr) = j.at("module_submodules").and_then(|i| i.as_arr()) {
+            for ij in iarr {
+                instances.push(instance_from_json(ij)?);
+            }
+        }
+        Body::Grouped { wires, instances }
+    };
+    let mut interfaces = Vec::new();
+    if let Some(iarr) = j.at("module_interfaces").and_then(|i| i.as_arr()) {
+        for ij in iarr {
+            interfaces.push(interface_from_json(ij)?);
+        }
+    }
+    let metadata = match j.at("module_metadata") {
+        Some(Json::Obj(o)) => o.clone(),
+        _ => JsonObj::new(),
+    };
+    Ok(Module {
+        name,
+        ports,
+        body,
+        interfaces,
+        metadata,
+    })
+}
+
+fn port_from_json(j: &Json) -> Result<Port> {
+    Ok(Port {
+        name: j
+            .at("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("port missing name"))?
+            .to_string(),
+        dir: j
+            .at("direction")
+            .and_then(|d| d.as_str())
+            .and_then(Dir::parse)
+            .ok_or_else(|| anyhow!("port missing/bad direction"))?,
+        width: j.at("width").and_then(|w| w.as_u64()).unwrap_or(1) as u32,
+    })
+}
+
+fn instance_from_json(j: &Json) -> Result<Instance> {
+    let mut inst = Instance::new(
+        j.at("instance_name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("instance missing instance_name"))?,
+        j.at("module_name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("instance missing module_name"))?,
+    );
+    if let Some(carr) = j.at("connections").and_then(|c| c.as_arr()) {
+        for cj in carr {
+            let port = cj
+                .at("port")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow!("connection missing port"))?
+                .to_string();
+            let value = if let Some(id) = cj.at("value").and_then(|v| v.as_str()) {
+                ConnExpr::Id(id.to_string())
+            } else if let Some(c) = cj.at("const").and_then(|c| c.as_str()) {
+                parse_const(c)?
+            } else if cj.at("open").is_some() {
+                ConnExpr::Open
+            } else {
+                bail!("connection for port '{port}' has no value/const/open");
+            };
+            inst.connections.push(Connection { port, value });
+        }
+    }
+    if let Some(Json::Obj(meta)) = j.at("metadata") {
+        inst.metadata = meta.clone();
+    }
+    Ok(inst)
+}
+
+/// Parse `<width>'d<value>` constants, e.g. "8'd0".
+pub fn parse_const(s: &str) -> Result<ConnExpr> {
+    let (w, rest) = s
+        .split_once("'d")
+        .ok_or_else(|| anyhow!("bad const '{s}' (expect <w>'d<v>)"))?;
+    Ok(ConnExpr::Const {
+        width: w.parse().with_context(|| format!("const width in '{s}'"))?,
+        value: rest.parse().with_context(|| format!("const value in '{s}'"))?,
+    })
+}
+
+fn interface_from_json(j: &Json) -> Result<Interface> {
+    let kind = j
+        .at("iface_type")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| anyhow!("interface missing iface_type"))?;
+    match kind {
+        "handshake" => {
+            let p = j
+                .at("iface_ports")
+                .ok_or_else(|| anyhow!("handshake missing iface_ports"))?;
+            let data = p
+                .at("data")
+                .and_then(|d| d.as_arr())
+                .ok_or_else(|| anyhow!("handshake missing data"))?
+                .iter()
+                .map(|d| d.as_str().unwrap_or_default().to_string())
+                .collect();
+            Ok(Interface::Handshake {
+                name: j
+                    .at("name")
+                    .and_then(|n| n.as_str())
+                    .unwrap_or("hs")
+                    .to_string(),
+                data,
+                valid: p
+                    .at("valid")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("handshake missing valid"))?
+                    .to_string(),
+                ready: p
+                    .at("ready")
+                    .and_then(|r| r.as_str())
+                    .ok_or_else(|| anyhow!("handshake missing ready"))?
+                    .to_string(),
+                clk: p.at("clk").and_then(|c| c.as_str()).map(|s| s.to_string()),
+            })
+        }
+        "feedforward" | "nonpipeline" => {
+            let ports = j
+                .at("iface_ports")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| anyhow!("{kind} missing iface_ports"))?
+                .iter()
+                .map(|p| p.as_str().unwrap_or_default().to_string())
+                .collect();
+            let name = j
+                .at("name")
+                .and_then(|n| n.as_str())
+                .unwrap_or(kind)
+                .to_string();
+            Ok(if kind == "feedforward" {
+                Interface::Feedforward { name, ports }
+            } else {
+                Interface::NonPipeline { name, ports }
+            })
+        }
+        "clock" => Ok(Interface::Clock {
+            port: j
+                .at("port")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow!("clock missing port"))?
+                .to_string(),
+        }),
+        "reset" => Ok(Interface::Reset {
+            port: j
+                .at("port")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow!("reset missing port"))?
+                .to_string(),
+            active_high: j.at("active_high").and_then(|a| a.as_bool()).unwrap_or(true),
+        }),
+        other => bail!("unknown iface_type '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::*;
+
+    fn sample_design() -> Design {
+        let mut d = Design::new("LLM");
+        let mut top = Module::grouped("LLM");
+        top.ports = vec![
+            Port::new("ap_clk", Dir::In, 1),
+            Port::new("in_data", Dir::In, 64),
+        ];
+        top.wires_mut().push(Wire {
+            name: "I_wire".into(),
+            width: 64,
+        });
+        let mut fifo_inst = Instance::new("FIFO_inst", "FIFO");
+        fifo_inst.connect("I", ConnExpr::id("I_wire"));
+        fifo_inst.connect("rst", ConnExpr::Const { width: 1, value: 0 });
+        fifo_inst.connect("dbg", ConnExpr::Open);
+        top.instances_mut().push(fifo_inst);
+        d.add(top);
+
+        let mut fifo = Module::leaf("FIFO", SourceFormat::Verilog, "module FIFO(); endmodule");
+        fifo.ports = vec![
+            Port::new("I", Dir::In, 64),
+            Port::new("I_vld", Dir::In, 1),
+            Port::new("I_rdy", Dir::Out, 1),
+        ];
+        fifo.interfaces = vec![Interface::Handshake {
+            name: "I".into(),
+            data: vec!["I".into()],
+            valid: "I_vld".into(),
+            ready: "I_rdy".into(),
+            clk: Some("ap_clk".into()),
+        }];
+        fifo.metadata.insert(
+            "resource",
+            crate::util::json::Json::parse(r#"{"FF":10,"LUT":39}"#).unwrap(),
+        );
+        d.add(fifo);
+        d
+    }
+
+    #[test]
+    fn design_roundtrip() {
+        let d = sample_design();
+        let j = design_to_json(&d);
+        let d2 = design_from_json(&j).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let d = sample_design();
+        let text = design_to_json(&d).pretty();
+        let d2 = design_from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn schema_uses_paper_field_names() {
+        let d = sample_design();
+        let text = design_to_json(&d).dump();
+        for field in [
+            "module_name",
+            "module_ports",
+            "module_wires",
+            "module_submodules",
+            "module_interfaces",
+            "module_metadata",
+            "instance_name",
+            "iface_type",
+            "iface_ports",
+        ] {
+            assert!(text.contains(field), "missing field {field}");
+        }
+    }
+
+    #[test]
+    fn const_parse() {
+        assert_eq!(
+            parse_const("8'd42").unwrap(),
+            ConnExpr::Const {
+                width: 8,
+                value: 42
+            }
+        );
+        assert!(parse_const("42").is_err());
+    }
+
+    #[test]
+    fn all_interface_kinds_roundtrip() {
+        let mut m = Module::leaf("X", SourceFormat::Verilog, "");
+        m.interfaces = vec![
+            Interface::Feedforward {
+                name: "ff".into(),
+                ports: vec!["a".into(), "b".into()],
+            },
+            Interface::NonPipeline {
+                name: "np".into(),
+                ports: vec!["c".into()],
+            },
+            Interface::Clock { port: "clk".into() },
+            Interface::Reset {
+                port: "rst_n".into(),
+                active_high: false,
+            },
+        ];
+        let j = module_to_json(&m);
+        let m2 = module_from_json(&j).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn error_on_missing_fields() {
+        let j = crate::util::json::Json::parse(r#"{"module_ports":[]}"#).unwrap();
+        assert!(module_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Design Rule Checking (DRC) passes: verify the IR invariant assumptions
+//! of §3.1 plus referential integrity. Run after every transformation pass
+//! by the pass manager (when DRC hooks are enabled).
+
+use crate::ir::core::*;
+use crate::ir::graph::BlockGraph;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DrcViolation {
+    pub module: String,
+    pub rule: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for DrcViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.rule, self.module, self.detail)
+    }
+}
+
+/// Run all DRC rules over the design. Empty result = clean.
+pub fn check(d: &Design) -> Vec<DrcViolation> {
+    let mut v = Vec::new();
+    check_referential(d, &mut v);
+    for m in d.modules.values() {
+        check_interfaces_cover_known_ports(m, &mut v);
+        if m.is_grouped() {
+            check_grouped(d, m, &mut v);
+        }
+    }
+    v
+}
+
+/// Panic with a readable report if the design has violations (test helper).
+pub fn assert_clean(d: &Design) {
+    let violations = check(d);
+    if !violations.is_empty() {
+        let mut msg = format!("{} DRC violations:\n", violations.len());
+        for viol in &violations {
+            msg.push_str(&format!("  {viol}\n"));
+        }
+        panic!("{msg}");
+    }
+}
+
+fn check_referential(d: &Design, out: &mut Vec<DrcViolation>) {
+    if !d.modules.contains_key(&d.top) {
+        out.push(DrcViolation {
+            module: d.top.clone(),
+            rule: "top-exists",
+            detail: "top module not found in design".into(),
+        });
+    }
+    for m in d.modules.values() {
+        for inst in m.instances() {
+            if !d.modules.contains_key(&inst.module_name) {
+                out.push(DrcViolation {
+                    module: m.name.clone(),
+                    rule: "module-ref",
+                    detail: format!(
+                        "instance '{}' references unknown module '{}'",
+                        inst.instance_name, inst.module_name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn check_grouped(d: &Design, m: &Module, out: &mut Vec<DrcViolation>) {
+    let g = BlockGraph::build(m);
+
+    // Invariant 1: each wire connects exactly two endpoints (no fan-out).
+    // Parent ports count as one endpoint; a completely unused wire is also
+    // flagged. Clock/reset identifiers are exempt: they are broadcast nets
+    // handled by dedicated broadcasting aux modules (§3.3 Partitioning).
+    let clockish: Vec<&str> = m
+        .interfaces
+        .iter()
+        .filter(|i| matches!(i, Interface::Clock { .. } | Interface::Reset { .. }))
+        .flat_map(|i| i.ports())
+        .collect();
+    for (net, info) in &g.nets {
+        if clockish.contains(&net.as_str()) {
+            continue;
+        }
+        if info.endpoints.len() != 2 {
+            out.push(DrcViolation {
+                module: m.name.clone(),
+                rule: "two-endpoints",
+                detail: format!(
+                    "net '{}' has {} endpoints: [{}]",
+                    net,
+                    info.endpoints.len(),
+                    info.endpoints
+                        .iter()
+                        .map(|e| e.describe())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            });
+        }
+    }
+
+    // Invariant 2: every instance connection targets a known identifier
+    // (wire or parent port) or a constant — schema enforces the expression
+    // shape; here we check identifier resolution and port existence.
+    let known_ids: std::collections::BTreeSet<&str> = m
+        .wires()
+        .iter()
+        .map(|w| w.name.as_str())
+        .chain(m.ports.iter().map(|p| p.name.as_str()))
+        .collect();
+    for inst in m.instances() {
+        let target = d.module(&inst.module_name);
+        let mut seen = std::collections::BTreeSet::new();
+        for conn in &inst.connections {
+            if !seen.insert(conn.port.as_str()) {
+                out.push(DrcViolation {
+                    module: m.name.clone(),
+                    rule: "dup-connection",
+                    detail: format!("instance '{}' connects port '{}' twice", inst.instance_name, conn.port),
+                });
+            }
+            if let Some(t) = target {
+                if t.port(&conn.port).is_none() {
+                    out.push(DrcViolation {
+                        module: m.name.clone(),
+                        rule: "port-exists",
+                        detail: format!(
+                            "instance '{}' connects unknown port '{}.{}'",
+                            inst.instance_name, inst.module_name, conn.port
+                        ),
+                    });
+                }
+            }
+            if let ConnExpr::Id(id) = &conn.value {
+                if !known_ids.contains(id.as_str()) {
+                    out.push(DrcViolation {
+                        module: m.name.clone(),
+                        rule: "id-resolves",
+                        detail: format!(
+                            "instance '{}' port '{}' connects to undeclared identifier '{}'",
+                            inst.instance_name, conn.port, id
+                        ),
+                    });
+                }
+            }
+        }
+        // Invariant 3 (interface completeness): all non-constant ports of
+        // any interface on the target module must be connected.
+        if let Some(t) = target {
+            for iface in &t.interfaces {
+                if !iface.pipelinable() {
+                    continue;
+                }
+                let connected: Vec<&str> = iface
+                    .ports()
+                    .into_iter()
+                    .filter(|p| {
+                        matches!(inst.connection(p), Some(ConnExpr::Id(_)) | Some(ConnExpr::Const { .. }))
+                    })
+                    .collect();
+                if !connected.is_empty() && connected.len() != iface.ports().len() {
+                    out.push(DrcViolation {
+                        module: m.name.clone(),
+                        rule: "iface-complete",
+                        detail: format!(
+                            "instance '{}': interface '{}' of '{}' partially connected ({}/{})",
+                            inst.instance_name,
+                            iface.name(),
+                            inst.module_name,
+                            connected.len(),
+                            iface.ports().len()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Width consistency between connection endpoints.
+    for inst in m.instances() {
+        let Some(t) = d.module(&inst.module_name) else {
+            continue;
+        };
+        for conn in &inst.connections {
+            let Some(port) = t.port(&conn.port) else {
+                continue;
+            };
+            if let ConnExpr::Id(id) = &conn.value {
+                let id_width = m
+                    .wires()
+                    .iter()
+                    .find(|w| &w.name == id)
+                    .map(|w| w.width)
+                    .or_else(|| m.port(id).map(|p| p.width));
+                if let Some(w) = id_width {
+                    if w != port.width {
+                        out.push(DrcViolation {
+                            module: m.name.clone(),
+                            rule: "width-match",
+                            detail: format!(
+                                "'{}'.{} is {}b but identifier '{}' is {}b",
+                                inst.instance_name, conn.port, port.width, id, w
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Interfaces must reference ports that exist on the module.
+fn check_interfaces_cover_known_ports(m: &Module, out: &mut Vec<DrcViolation>) {
+    for iface in &m.interfaces {
+        for p in iface.ports() {
+            if m.port(p).is_none() {
+                out.push(DrcViolation {
+                    module: m.name.clone(),
+                    rule: "iface-port-exists",
+                    detail: format!("interface '{}' references unknown port '{}'", iface.name(), p),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::*;
+
+    fn leaf_ab(d: &mut Design) {
+        let mut a = Module::leaf("A", SourceFormat::Verilog, "");
+        a.ports = vec![Port::new("o", Dir::Out, 8), Port::new("i", Dir::In, 32)];
+        d.add(a);
+        let mut b = Module::leaf("B", SourceFormat::Verilog, "");
+        b.ports = vec![Port::new("i", Dir::In, 8)];
+        d.add(b);
+    }
+
+    fn clean_design() -> Design {
+        let mut d = Design::new("Top");
+        let mut m = Module::grouped("Top");
+        m.ports = vec![Port::new("in_data", Dir::In, 32)];
+        m.wires_mut().push(Wire {
+            name: "w".into(),
+            width: 8,
+        });
+        let mut a = Instance::new("a", "A");
+        a.connect("o", ConnExpr::id("w"));
+        a.connect("i", ConnExpr::id("in_data"));
+        let mut b = Instance::new("b", "B");
+        b.connect("i", ConnExpr::id("w"));
+        m.instances_mut().push(a);
+        m.instances_mut().push(b);
+        d.add(m);
+        leaf_ab(&mut d);
+        d
+    }
+
+    #[test]
+    fn clean_design_passes() {
+        assert_clean(&clean_design());
+    }
+
+    #[test]
+    fn detects_fanout() {
+        let mut d = clean_design();
+        // Connect a third endpoint to w.
+        let top = d.module_mut("Top").unwrap();
+        let mut c = Instance::new("c", "B");
+        c.connect("i", ConnExpr::id("w"));
+        top.instances_mut().push(c);
+        let v = check(&d);
+        assert!(v.iter().any(|x| x.rule == "two-endpoints"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_unknown_module() {
+        let mut d = clean_design();
+        d.module_mut("Top")
+            .unwrap()
+            .instances_mut()
+            .push(Instance::new("x", "Ghost"));
+        let v = check(&d);
+        assert!(v.iter().any(|x| x.rule == "module-ref"));
+    }
+
+    #[test]
+    fn detects_unresolved_identifier() {
+        let mut d = clean_design();
+        d.module_mut("Top").unwrap().instances_mut()[0]
+            .connection_mut("o")
+            .map(|c| *c = ConnExpr::id("ghost_wire"));
+        let v = check(&d);
+        assert!(v.iter().any(|x| x.rule == "id-resolves"));
+    }
+
+    #[test]
+    fn detects_width_mismatch() {
+        let mut d = clean_design();
+        d.module_mut("Top").unwrap().wires_mut()[0].width = 16;
+        let v = check(&d);
+        assert!(v.iter().any(|x| x.rule == "width-match"));
+    }
+
+    #[test]
+    fn detects_unknown_port() {
+        let mut d = clean_design();
+        d.module_mut("Top").unwrap().instances_mut()[1].connect("ghost", ConnExpr::id("w"));
+        let v = check(&d);
+        assert!(v.iter().any(|x| x.rule == "port-exists"));
+        // also creates a 3-endpoint net
+        assert!(v.iter().any(|x| x.rule == "two-endpoints"));
+    }
+
+    #[test]
+    fn detects_partial_interface() {
+        let mut d = clean_design();
+        // Give B a handshake interface; Top only connects the data port.
+        let b = d.module_mut("B").unwrap();
+        b.ports.push(Port::new("i_vld", Dir::In, 1));
+        b.ports.push(Port::new("i_rdy", Dir::Out, 1));
+        b.interfaces.push(Interface::Handshake {
+            name: "i".into(),
+            data: vec!["i".into()],
+            valid: "i_vld".into(),
+            ready: "i_rdy".into(),
+            clk: None,
+        });
+        let v = check(&d);
+        assert!(v.iter().any(|x| x.rule == "iface-complete"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_bad_interface_port_ref() {
+        let mut d = clean_design();
+        d.module_mut("A").unwrap().interfaces.push(Interface::Feedforward {
+            name: "ff".into(),
+            ports: vec!["nonexistent".into()],
+        });
+        let v = check(&d);
+        assert!(v.iter().any(|x| x.rule == "iface-port-exists"));
+    }
+
+    #[test]
+    fn clock_nets_exempt_from_fanout() {
+        let mut d = clean_design();
+        let top = d.module_mut("Top").unwrap();
+        top.ports.push(Port::new("ap_clk", Dir::In, 1));
+        top.interfaces.push(Interface::Clock {
+            port: "ap_clk".into(),
+        });
+        // Broadcast clk to both instances (fan-out of 3 incl parent).
+        for a_module_port in ["a", "b"] {
+            let _ = a_module_port;
+        }
+        let a = d.module_mut("A").unwrap();
+        a.ports.push(Port::new("ap_clk", Dir::In, 1));
+        let b = d.module_mut("B").unwrap();
+        b.ports.push(Port::new("ap_clk", Dir::In, 1));
+        let top = d.module_mut("Top").unwrap();
+        top.instances_mut()[0].connect("ap_clk", ConnExpr::id("ap_clk"));
+        top.instances_mut()[1].connect("ap_clk", ConnExpr::id("ap_clk"));
+        assert_clean(&d);
+    }
+}

@@ -1,0 +1,44 @@
+//! # RapidStream IR
+//!
+//! A from-scratch reproduction of *RapidStream IR: Infrastructure for FPGA
+//! High-Level Physical Synthesis* (ICCAD '24). The crate provides:
+//!
+//! * [`ir`] — the coarse-grained intermediate representation: leaf/grouped
+//!   modules, ports, wires, interfaces (handshake / feedforward), metadata,
+//!   JSON schema round-trip and DRC validation;
+//! * [`verilog`] — a Verilog-subset lexer/parser/printer/rewriter used by
+//!   the importers and the hierarchy-rebuild pass;
+//! * [`plugins`] — importers (Verilog, XCI/XO surrogates, HLS reports,
+//!   pragma + regex interface rules), exporters (Verilog + constraints),
+//!   and the platform analyzer;
+//! * [`passes`] — the composable transformation passes of §3.3;
+//! * [`device`] — virtual device descriptions of multi-die FPGAs;
+//! * [`ilp`] — an exact ILP solver (simplex + branch & bound);
+//! * [`floorplan`] — the AutoBridge-style ILP floorplanner and the batched
+//!   simulated-annealing explorer (PJRT-accelerated);
+//! * [`timing`] / [`eda`] — the simulated vendor backend: synthesis
+//!   resource estimation, placement, routing congestion, and STA;
+//! * [`interconnect`] — pipeline element templates (relay station,
+//!   almost-full FIFO, FF chains);
+//! * [`designs`] — benchmark design generators (CNN systolic arrays,
+//!   LLaMA2 hybrid accelerator, Minimap2, KNN, Dynamatic / Catapult /
+//!   Intel-HLS style RTL);
+//! * [`coordinator`] — the four-stage HLPS flow of §3.4 and the parallel
+//!   synthesis driver of §4.3;
+//! * [`runtime`] — the PJRT loader executing AOT-compiled JAX/Pallas
+//!   artifacts from the floorplan hot path.
+
+pub mod coordinator;
+pub mod designs;
+pub mod device;
+pub mod eda;
+pub mod floorplan;
+pub mod ilp;
+pub mod interconnect;
+pub mod ir;
+pub mod passes;
+pub mod plugins;
+pub mod runtime;
+pub mod timing;
+pub mod util;
+pub mod verilog;

@@ -1,0 +1,181 @@
+//! `rsir` — RapidStream IR command-line driver.
+//!
+//! ```text
+//! rsir devices                         list built-in virtual devices
+//! rsir flow --bench llama2 --device u280 [--util 0.7] [--pjrt]
+//! rsir table1                          Table 1: HLS-frontend LoC
+//! rsir table2 [--only <substr>]        Table 2: frequency improvements
+//! rsir fig12 [--device vhk158]         Figure 12: floorplan exploration
+//! rsir fig13                           Figure 13: parallel synthesis
+//! rsir import <top> <file.v>...        import Verilog into IR JSON
+//! rsir export <ir.json> <outdir>       export IR to Verilog + XDC
+//! ```
+
+use anyhow::{bail, Result};
+use rsir::coordinator::{explore, flow, parallel_synth, report};
+use rsir::device::builtin;
+use rsir::util::bench::Table;
+use rsir::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["bench", "device", "util", "only", "out", "seed", "workers"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if let Err(e) = dispatch(cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flow_config(args: &Args) -> flow::FlowConfig {
+    let mut cfg = flow::FlowConfig {
+        use_pjrt: args.has_flag("pjrt"),
+        sa_refine: !args.has_flag("no-sa"),
+        ..Default::default()
+    };
+    cfg.util_limit = args.get_f64("util", cfg.util_limit);
+    cfg.sa.seed = args.get_usize("seed", cfg.sa.seed as usize) as u64;
+    cfg
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "devices" => {
+            let mut t = Table::new(&["Name", "Part", "Grid", "Dies", "kLUT", "DSP", "SLL/col"]);
+            for name in builtin::BUILTIN_NAMES {
+                let d = builtin::by_name(name)?;
+                let cap = d.total_capacity();
+                t.row(&[
+                    d.name.clone(),
+                    d.part.clone(),
+                    format!("{}x{}", d.cols, d.rows),
+                    d.num_dies().to_string(),
+                    format!("{:.0}", cap.lut / 1000.0),
+                    format!("{:.0}", cap.dsp),
+                    d.sll_per_column.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        "flow" => {
+            let bench = args.get_or("bench", "llama2");
+            let device = args.get_or("device", "u280");
+            let (app, id) = match bench {
+                b if b.starts_with("cnn") => ("CNN", b),
+                b => (b, b),
+            };
+            let row = report::run_row(app, id, device, &flow_config(args))?;
+            report::render_table2(&[row]).print();
+        }
+        "table1" => report::table1().print(),
+        "table2" => {
+            let rows = report::table2(args.get("only"), &flow_config(args))?;
+            report::render_table2(&rows).print();
+            summary(&rows);
+        }
+        "fig12" => {
+            let device = args.get_or("device", "vhk158");
+            let dev = builtin::by_name(device)?;
+            let g = rsir::designs::llama2::generate(&Default::default())?;
+            let rows = explore::explore(
+                &g.design,
+                &dev,
+                &explore::default_limits(),
+                &flow_config(args),
+            )?;
+            let mut t = Table::new(&["util_limit", "max_slot_util", "wirelength", "Fmax (MHz)"]);
+            for r in &rows {
+                t.row(&[
+                    format!("{:.2}", r.util_limit),
+                    format!("{:.2}", r.max_slot_util),
+                    format!("{:.0}", r.wirelength),
+                    if r.routable {
+                        format!("{:.0}", r.fmax_mhz)
+                    } else {
+                        "-".into()
+                    },
+                ]);
+            }
+            t.print();
+        }
+        "fig13" => {
+            let dev = builtin::by_name("u250")?;
+            let workers = args.get_usize("workers", 8);
+            let model = rsir::eda::SynthTimeModel::default();
+            let mut t = Table::new(&["CNN", "Monolithic (s)", "Parallel (s)", "Speedup"]);
+            let mut speedups = Vec::new();
+            for cols in [4usize, 6, 8, 10, 12] {
+                let g = rsir::designs::cnn::generate(&rsir::designs::cnn::CnnConfig {
+                    rows: 13,
+                    cols,
+                })?;
+                let mut d = g.design;
+                flow::run_hlps(&mut d, &dev, &flow_config(args))?;
+                let rep = parallel_synth::run(&d, &dev, workers, &model)?;
+                speedups.push(rep.modeled_speedup);
+                t.row(&[
+                    format!("13x{cols}"),
+                    format!("{:.0}", rep.modeled_monolithic_s),
+                    format!("{:.0}", rep.modeled_parallel_s),
+                    format!("{:.2}x", rep.modeled_speedup),
+                ]);
+            }
+            t.print();
+            println!(
+                "average speedup: {:.2}x (paper: 2.49x)",
+                speedups.iter().sum::<f64>() / speedups.len() as f64
+            );
+        }
+        "import" => {
+            let top = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: rsir import <top> <file.v>..."))?;
+            let mut sources = Vec::new();
+            for f in &args.positional[2..] {
+                sources.push(std::fs::read_to_string(f)?);
+            }
+            let refs: Vec<&str> = sources.iter().map(|s| s.as_str()).collect();
+            let design = rsir::plugins::import_design(top, &refs)?;
+            let json = rsir::ir::schema::design_to_json(&design).pretty();
+            match args.get("out") {
+                Some(path) => std::fs::write(path, json)?,
+                None => println!("{json}"),
+            }
+        }
+        "export" => {
+            let ir = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: rsir export <ir.json> <outdir>"))?;
+            let outdir = args.positional.get(2).map(|s| s.as_str()).unwrap_or("out");
+            let text = std::fs::read_to_string(ir)?;
+            let design =
+                rsir::ir::schema::design_from_json(&rsir::util::json::Json::parse(&text)?)?;
+            let bundle = rsir::plugins::export(&design)?;
+            bundle.write_to_dir(std::path::Path::new(outdir))?;
+            println!("wrote {} files to {outdir}", bundle.files.len());
+        }
+        "help" | "--help" => {
+            println!("rsir — RapidStream IR (ICCAD'24 reproduction)");
+            println!("commands: devices flow table1 table2 fig12 fig13 import export");
+        }
+        other => bail!("unknown command '{other}' (try 'rsir help')"),
+    }
+    Ok(())
+}
+
+fn summary(rows: &[report::Table2Row]) {
+    let imps: Vec<f64> = rows.iter().filter_map(|r| r.improvement()).collect();
+    if !imps.is_empty() {
+        println!(
+            "average improvement (excluding originally-unroutable): +{:.0}% over {} designs",
+            imps.iter().sum::<f64>() / imps.len() as f64,
+            imps.len()
+        );
+    }
+    let unroutable = rows.iter().filter(|r| r.original_mhz.is_none()).count();
+    if unroutable > 0 {
+        println!("{unroutable} designs unroutable with the vendor-only flow (\"-\")");
+    }
+}

@@ -1,0 +1,390 @@
+//! Flattening Pass (§3.3, Fig 10e).
+//!
+//! ILP-based floorplanning wants a flat module graph, not a hypergraph of
+//! nested hierarchies. This pass recursively merges grouped submodules of
+//! the top module into it: wires are consolidated (child wires renamed
+//! `<inst>__<wire>`), child instances are re-parented, and child port
+//! connections are re-established through the parent's identifiers.
+//! Leaf modules are untouched; "Without this pass, [Layer_1 and Layer_2]
+//! would have to be grouped into a single partition".
+
+use crate::ir::core::*;
+use crate::passes::manager::{Pass, PassContext};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+pub struct Flatten;
+
+impl Pass for Flatten {
+    fn name(&self) -> &'static str {
+        "flatten"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        flatten_top(design, ctx)
+    }
+}
+
+pub fn flatten_top(design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+    loop {
+        let top = design
+            .module(&design.top)
+            .ok_or_else(|| anyhow!("missing top"))?;
+        if !top.is_grouped() {
+            return Ok(()); // leaf top: nothing to flatten
+        }
+        let target = top
+            .instances()
+            .iter()
+            .find(|i| {
+                design
+                    .module(&i.module_name)
+                    .map(|m| m.is_grouped())
+                    .unwrap_or(false)
+            })
+            .map(|i| i.instance_name.clone());
+        let Some(inst_name) = target else {
+            design.gc();
+            return Ok(());
+        };
+        inline_instance(design, &design.top.clone(), &inst_name, ctx)?;
+    }
+}
+
+/// Inline one grouped-module instance `inst_name` into grouped `parent`.
+pub fn inline_instance(
+    design: &mut Design,
+    parent_name: &str,
+    inst_name: &str,
+    ctx: &mut PassContext,
+) -> Result<()> {
+    let parent = design
+        .module(parent_name)
+        .ok_or_else(|| anyhow!("missing parent '{parent_name}'"))?;
+    let inst = parent
+        .instance(inst_name)
+        .ok_or_else(|| anyhow!("no instance '{inst_name}' in '{parent_name}'"))?
+        .clone();
+    let child = design
+        .module(&inst.module_name)
+        .ok_or_else(|| anyhow!("missing module '{}'", inst.module_name))?
+        .clone();
+    if !child.is_grouped() {
+        return Ok(());
+    }
+
+    // Alias: child port -> parent connection expression.
+    let mut alias: BTreeMap<String, ConnExpr> = BTreeMap::new();
+    for p in &child.ports {
+        let v = inst
+            .connection(&p.name)
+            .cloned()
+            .unwrap_or(ConnExpr::Open);
+        alias.insert(p.name.clone(), v);
+    }
+
+    let parent = design.modules.get_mut(parent_name).unwrap();
+    // Remove the instance being inlined.
+    let idx = parent
+        .instances()
+        .iter()
+        .position(|i| i.instance_name == inst_name)
+        .unwrap();
+    parent.instances_mut().remove(idx);
+
+    // Existing identifiers, to avoid collisions for imported wires.
+    let mut used: std::collections::BTreeSet<String> = parent
+        .wires()
+        .iter()
+        .map(|w| w.name.clone())
+        .chain(parent.ports.iter().map(|p| p.name.clone()))
+        .collect();
+
+    // Import child wires under a prefixed name.
+    let mut wire_rename: BTreeMap<String, String> = BTreeMap::new();
+    for w in child.wires() {
+        let mut nn = format!("{inst_name}__{}", w.name);
+        while used.contains(&nn) {
+            nn.push('_');
+        }
+        used.insert(nn.clone());
+        wire_rename.insert(w.name.clone(), nn.clone());
+        parent.wires_mut().push(Wire {
+            name: nn,
+            width: w.width,
+        });
+        ctx.namemap
+            .record("flatten", &format!("{}/{}", inst.module_name, w.name), wire_rename[&w.name].as_str());
+    }
+
+    // Existing instance names.
+    let mut inst_used: std::collections::BTreeSet<String> = parent
+        .instances()
+        .iter()
+        .map(|i| i.instance_name.clone())
+        .collect();
+
+    // Re-parent child instances.
+    for ci in child.instances() {
+        let mut nn = format!("{inst_name}__{}", ci.instance_name);
+        while inst_used.contains(&nn) {
+            nn.push('_');
+        }
+        inst_used.insert(nn.clone());
+        let mut new_inst = Instance::new(&nn, &ci.module_name);
+        new_inst.metadata = ci.metadata.clone();
+        for conn in &ci.connections {
+            let v = match &conn.value {
+                ConnExpr::Id(id) => {
+                    if let Some(renamed) = wire_rename.get(id) {
+                        ConnExpr::Id(renamed.clone())
+                    } else if let Some(parent_expr) = alias.get(id) {
+                        parent_expr.clone()
+                    } else {
+                        // Identifier must be a child wire or port by DRC.
+                        ConnExpr::Id(id.clone())
+                    }
+                }
+                other => other.clone(),
+            };
+            new_inst.connections.push(Connection {
+                port: conn.port.clone(),
+                value: v,
+            });
+        }
+        ctx.namemap.record(
+            "flatten",
+            &format!("{inst_name}/{}", ci.instance_name),
+            &nn,
+        );
+        parent.instances_mut().push(new_inst);
+    }
+
+    ctx.log(format!(
+        "flatten: inlined '{inst_name}' ({}) into '{parent_name}'",
+        inst.module_name
+    ));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::*;
+    use crate::ir::validate;
+
+    /// Top { a0: A, mid: Mid { l1: Leaf, l2: Leaf } } with a handshake
+    /// chain a0 -> l1 -> l2 where the l1→l2 hop is internal to Mid.
+    fn nested() -> Design {
+        let leaf = |name: &str| {
+            LeafBuilder::verilog_stub(name)
+                .clk_rst()
+                .handshake("i", Dir::In, 16)
+                .handshake("o", Dir::Out, 16)
+                .build()
+        };
+        let mut d = Design::new("Top");
+        d.add(leaf("A"));
+        d.add(leaf("L1"));
+        d.add(leaf("L2"));
+        let mid = GroupedBuilder::new("Mid")
+            .port("i", Dir::In, 16)
+            .port("i_vld", Dir::In, 1)
+            .port("i_rdy", Dir::Out, 1)
+            .port("o", Dir::Out, 16)
+            .port("o_vld", Dir::Out, 1)
+            .port("o_rdy", Dir::In, 1)
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .iface(Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            })
+            .wire("m", 16)
+            .wire("m_vld", 1)
+            .wire("m_rdy", 1)
+            .inst(
+                "l1",
+                "L1",
+                &[
+                    ("i", "i"),
+                    ("i_vld", "i_vld"),
+                    ("i_rdy", "i_rdy"),
+                    ("o", "m"),
+                    ("o_vld", "m_vld"),
+                    ("o_rdy", "m_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .inst(
+                "l2",
+                "L2",
+                &[
+                    ("i", "m"),
+                    ("i_vld", "m_vld"),
+                    ("i_rdy", "m_rdy"),
+                    ("o", "o"),
+                    ("o_vld", "o_vld"),
+                    ("o_rdy", "o_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .build();
+        d.add(mid);
+        let top = GroupedBuilder::new("Top")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .port("out", Dir::Out, 16)
+            .port("out_vld", Dir::Out, 1)
+            .port("out_rdy", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .iface(Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            })
+            .iface(Interface::Handshake {
+                name: "out".into(),
+                data: vec!["out".into()],
+                valid: "out_vld".into(),
+                ready: "out_rdy".into(),
+                clk: Some("ap_clk".into()),
+            })
+            .wire("t", 16)
+            .wire("t_vld", 1)
+            .wire("t_rdy", 1)
+            .wire("a_i", 16)
+            .wire("a_i_vld", 1)
+            .wire("a_i_rdy", 1)
+            .inst(
+                "a0",
+                "A",
+                &[
+                    ("i", "a_i"),
+                    ("i_vld", "a_i_vld"),
+                    ("i_rdy", "a_i_rdy"),
+                    ("o", "t"),
+                    ("o_vld", "t_vld"),
+                    ("o_rdy", "t_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .inst(
+                "mid",
+                "Mid",
+                &[
+                    ("i", "t"),
+                    ("i_vld", "t_vld"),
+                    ("i_rdy", "t_rdy"),
+                    ("o", "out"),
+                    ("o_vld", "out_vld"),
+                    ("o_rdy", "out_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .build();
+        d.add(top);
+        d
+    }
+
+    #[test]
+    fn flatten_inlines_everything() {
+        let mut d = nested();
+        // a_i* dangle (A's input unconnected upstream) — wire them to ports
+        // to keep DRC clean for this test.
+        {
+            let top = d.module_mut("Top").unwrap();
+            top.ports.push(Port::new("a_in", Dir::In, 16));
+            top.ports.push(Port::new("a_in_vld", Dir::In, 1));
+            top.ports.push(Port::new("a_in_rdy", Dir::Out, 1));
+            top.wires_mut().retain(|w| !w.name.starts_with("a_i"));
+            let a0 = top.instances_mut().iter_mut().find(|i| i.instance_name == "a0").unwrap();
+            for (p, v) in [("i", "a_in"), ("i_vld", "a_in_vld"), ("i_rdy", "a_in_rdy")] {
+                *a0.connection_mut(p).unwrap() = ConnExpr::id(v);
+            }
+        }
+        validate::assert_clean(&d);
+        let mut ctx = PassContext::new();
+        Flatten.run(&mut d, &mut ctx).unwrap();
+        let top = d.module("Top").unwrap();
+        assert_eq!(top.instances().len(), 3); // a0, mid__l1, mid__l2
+        assert!(top.instance("mid__l1").is_some());
+        assert!(d.module("Mid").is_none(), "gc should drop Mid");
+        validate::assert_clean(&d);
+    }
+
+    #[test]
+    fn internal_wire_renamed_and_connected() {
+        let mut d = nested();
+        {
+            // same DRC fixup as above
+            let top = d.module_mut("Top").unwrap();
+            top.ports.push(Port::new("a_in", Dir::In, 16));
+            top.ports.push(Port::new("a_in_vld", Dir::In, 1));
+            top.ports.push(Port::new("a_in_rdy", Dir::Out, 1));
+            top.wires_mut().retain(|w| !w.name.starts_with("a_i"));
+            let a0 = top.instances_mut().iter_mut().find(|i| i.instance_name == "a0").unwrap();
+            for (p, v) in [("i", "a_in"), ("i_vld", "a_in_vld"), ("i_rdy", "a_in_rdy")] {
+                *a0.connection_mut(p).unwrap() = ConnExpr::id(v);
+            }
+        }
+        Flatten.run(&mut d, &mut PassContext::new()).unwrap();
+        let top = d.module("Top").unwrap();
+        assert!(top.wires().iter().any(|w| w.name == "mid__m"));
+        let l1 = top.instance("mid__l1").unwrap();
+        assert_eq!(l1.connection("o"), Some(&ConnExpr::id("mid__m")));
+        // Boundary connection rewired to parent wire t.
+        assert_eq!(l1.connection("i"), Some(&ConnExpr::id("t")));
+        // Parent port of Mid mapped through to Top's port.
+        let l2 = top.instance("mid__l2").unwrap();
+        assert_eq!(l2.connection("o"), Some(&ConnExpr::id("out")));
+    }
+
+    #[test]
+    fn flatten_is_idempotent() {
+        let mut d = nested();
+        {
+            let top = d.module_mut("Top").unwrap();
+            top.ports.push(Port::new("a_in", Dir::In, 16));
+            top.ports.push(Port::new("a_in_vld", Dir::In, 1));
+            top.ports.push(Port::new("a_in_rdy", Dir::Out, 1));
+            top.wires_mut().retain(|w| !w.name.starts_with("a_i"));
+            let a0 = top.instances_mut().iter_mut().find(|i| i.instance_name == "a0").unwrap();
+            for (p, v) in [("i", "a_in"), ("i_vld", "a_in_vld"), ("i_rdy", "a_in_rdy")] {
+                *a0.connection_mut(p).unwrap() = ConnExpr::id(v);
+            }
+        }
+        let mut ctx = PassContext::new();
+        Flatten.run(&mut d, &mut ctx).unwrap();
+        let once = d.clone();
+        Flatten.run(&mut d, &mut ctx).unwrap();
+        assert_eq!(d, once);
+    }
+
+    #[test]
+    fn namemap_traces_inlined_instances() {
+        let mut d = nested();
+        {
+            let top = d.module_mut("Top").unwrap();
+            top.ports.push(Port::new("a_in", Dir::In, 16));
+            top.ports.push(Port::new("a_in_vld", Dir::In, 1));
+            top.ports.push(Port::new("a_in_rdy", Dir::Out, 1));
+            top.wires_mut().retain(|w| !w.name.starts_with("a_i"));
+            let a0 = top.instances_mut().iter_mut().find(|i| i.instance_name == "a0").unwrap();
+            for (p, v) in [("i", "a_in"), ("i_vld", "a_in_vld"), ("i_rdy", "a_in_rdy")] {
+                *a0.connection_mut(p).unwrap() = ConnExpr::id(v);
+            }
+        }
+        let mut ctx = PassContext::new();
+        Flatten.run(&mut d, &mut ctx).unwrap();
+        assert_eq!(ctx.namemap.trace("mid__l1"), "mid/l1");
+    }
+}

@@ -1,0 +1,324 @@
+//! Interface Inference Pass (§3.3, Fig 10c).
+//!
+//! Modules lacking interface information (above all the aux modules minted
+//! by the hierarchy rebuild) get interfaces transferred from the modules
+//! they connect to: "for aux modules created during the hierarchy rebuild
+//! pass, the interface inferencer defines their interfaces by transferring
+//! information from the aux's sibling modules".
+//!
+//! For every wire `A.pa ↔ B.pb` inside a grouped module where `A`'s module
+//! covers `pa` with an interface and `B`'s module has nothing covering
+//! `pb`, the mirrored interface is created on `B`'s module (handshake
+//! roles preserved, direction implicit in the ports). Parent ports take
+//! part through the grouped module's own interfaces.
+
+use crate::ir::core::*;
+use crate::ir::graph::{BlockGraph, Endpoint};
+use crate::passes::manager::{Pass, PassContext};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+pub struct InterfaceInference;
+
+impl Pass for InterfaceInference {
+    fn name(&self) -> &'static str {
+        "interface-inference"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        // Iterate to a fixpoint: inference can cascade through aux chains.
+        for _ in 0..design.modules.len() + 1 {
+            if infer_once(design, ctx)? == 0 {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn infer_once(design: &mut Design, ctx: &mut PassContext) -> Result<usize> {
+    let grouped: Vec<String> = design
+        .modules
+        .values()
+        .filter(|m| m.is_grouped())
+        .map(|m| m.name.clone())
+        .collect();
+    let mut created = 0usize;
+    for gname in grouped {
+        created += infer_in_grouped(design, &gname, ctx)?;
+    }
+    Ok(created)
+}
+
+/// Where a module port maps to on the "other side" of the parent's wires.
+#[derive(Debug, Clone)]
+struct PeerPort {
+    /// Instance name inside the grouped module ("" = the parent itself).
+    peer_holder: String,
+    peer_module: String,
+    peer_port: String,
+}
+
+fn infer_in_grouped(design: &mut Design, gname: &str, ctx: &mut PassContext) -> Result<usize> {
+    let g = design.module(gname).unwrap().clone();
+    let graph = BlockGraph::build(&g);
+
+    // For each (holder, port), resolve the opposite endpoint.
+    // holder "" = parent.
+    let mut peers: BTreeMap<(String, String), PeerPort> = BTreeMap::new();
+    for (_, info) in graph.nets.iter() {
+        if info.endpoints.len() != 2 {
+            continue;
+        }
+        let resolve = |e: &Endpoint| -> Option<(String, String, String)> {
+            match e {
+                Endpoint::Parent { port } => {
+                    Some(("".to_string(), g.name.clone(), port.clone()))
+                }
+                Endpoint::Inst { inst, port } => {
+                    let mname = g.instance(inst)?.module_name.clone();
+                    Some((inst.clone(), mname, port.clone()))
+                }
+            }
+        };
+        let (Some(a), Some(b)) = (resolve(&info.endpoints[0]), resolve(&info.endpoints[1]))
+        else {
+            continue;
+        };
+        peers.insert(
+            (a.0.clone(), a.2.clone()),
+            PeerPort {
+                peer_holder: b.0.clone(),
+                peer_module: b.1.clone(),
+                peer_port: b.2.clone(),
+            },
+        );
+        peers.insert(
+            (b.0, b.2),
+            PeerPort {
+                peer_holder: a.0,
+                peer_module: a.1,
+                peer_port: a.2,
+            },
+        );
+    }
+
+    // Collect candidate transfers: for each holder side with an interface,
+    // mirror onto peers lacking one.
+    // source interfaces: parent module's own + each instance's module's.
+    let mut new_ifaces: Vec<(String, Interface)> = Vec::new(); // (module to extend, iface)
+    let mut consider = |src_module: &Module, holder: &str| {
+        for iface in &src_module.interfaces {
+            if !iface.pipelinable() {
+                continue;
+            }
+            // Map each interface port through the wires to one peer module.
+            let mapped: Option<Vec<(String, PeerPort)>> = iface
+                .ports()
+                .iter()
+                .map(|p| {
+                    peers
+                        .get(&(holder.to_string(), p.to_string()))
+                        .map(|pp| (p.to_string(), pp.clone()))
+                })
+                .collect();
+            let Some(mapped) = mapped else { continue };
+            // All ports must land on the same peer holder.
+            let first_holder = &mapped[0].1.peer_holder;
+            if !mapped.iter().all(|(_, pp)| &pp.peer_holder == first_holder) {
+                continue;
+            }
+            let peer_module_name = mapped[0].1.peer_module.clone();
+            if peer_module_name == src_module.name {
+                continue;
+            }
+            let Some(peer_module) = design.module(&peer_module_name) else {
+                continue;
+            };
+            // Peer must not already cover any of these ports.
+            if mapped
+                .iter()
+                .any(|(_, pp)| peer_module.interface_of(&pp.peer_port).is_some())
+            {
+                continue;
+            }
+            let port_map: BTreeMap<&str, &str> = mapped
+                .iter()
+                .map(|(src, pp)| (src.as_str(), pp.peer_port.as_str()))
+                .collect();
+            // Name the mirrored interface after its own ports (several
+            // interfaces can be inferred onto one module; names must stay
+            // unique so passes can address them).
+            let mirrored = match iface {
+                Interface::Handshake {
+                    data, valid, ready, ..
+                } => Interface::Handshake {
+                    name: format!("{}_inferred", port_map[valid.as_str()]),
+                    data: data.iter().map(|d| port_map[d.as_str()].to_string()).collect(),
+                    valid: port_map[valid.as_str()].to_string(),
+                    ready: port_map[ready.as_str()].to_string(),
+                    clk: None,
+                },
+                Interface::Feedforward { ports, .. } => Interface::Feedforward {
+                    name: format!("{}_inferred", port_map[ports[0].as_str()]),
+                    ports: ports.iter().map(|p| port_map[p.as_str()].to_string()).collect(),
+                },
+                _ => continue,
+            };
+            new_ifaces.push((peer_module_name, mirrored));
+        }
+    };
+
+    consider(&g, "");
+    for inst in g.instances() {
+        if let Some(m) = design.module(&inst.module_name) {
+            consider(m, &inst.instance_name);
+        }
+    }
+
+    let mut created = 0;
+    for (mname, iface) in new_ifaces {
+        let m = design.module_mut(&mname).unwrap();
+        // Double-check no overlap was created meanwhile.
+        if iface.ports().iter().any(|p| m.interface_of(p).is_some()) {
+            continue;
+        }
+        ctx.log(format!(
+            "iface-infer: {} gains {} interface '{}'",
+            mname,
+            iface.kind(),
+            iface.name()
+        ));
+        m.interfaces.push(iface);
+        created += 1;
+    }
+    Ok(created)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::*;
+    use crate::passes::rebuild;
+
+    /// After rebuilding the LLM example, the aux module has bare ports;
+    /// inference must mirror the handshake interfaces of its siblings.
+    fn rebuilt_llm() -> Design {
+        let mut d = Design::new("LLM");
+        let input_loader = LeafBuilder::verilog_stub("InputLoader")
+            .clk_rst()
+            .handshake("o", Dir::Out, 64)
+            .build();
+        let layers = LeafBuilder::verilog_stub("Layers")
+            .clk_rst()
+            .handshake("i", Dir::In, 64)
+            .build();
+        d.add(input_loader);
+        d.add(layers);
+        let top_src = r#"
+module LLM (input wire ap_clk, input wire ap_rst_n);
+  wire [63:0] a; wire a_v; wire a_r;
+  wire [63:0] b; wire b_v; wire b_r;
+  reg hold;
+  always @(posedge ap_clk) hold <= ~hold;
+  InputLoader il (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+                  .o(a), .o_vld(a_v), .o_rdy(a_r));
+  Layers ly (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+             .i(b), .i_vld(b_v), .i_rdy(b_r));
+endmodule
+"#;
+        let mut top = Module::leaf("LLM", SourceFormat::Verilog, top_src);
+        top.ports = vec![
+            Port::new("ap_clk", Dir::In, 1),
+            Port::new("ap_rst_n", Dir::In, 1),
+        ];
+        top.interfaces = vec![
+            Interface::Clock {
+                port: "ap_clk".into(),
+            },
+            Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            },
+        ];
+        d.add(top);
+        rebuild::rebuild(&mut d, "LLM", &mut PassContext::new()).unwrap();
+        d
+    }
+
+    #[test]
+    fn aux_inherits_sibling_handshakes() {
+        let mut d = rebuilt_llm();
+        InterfaceInference
+            .run(&mut d, &mut PassContext::new())
+            .unwrap();
+        let aux = d.module("LLM_aux").unwrap();
+        let hs: Vec<_> = aux
+            .interfaces
+            .iter()
+            .filter(|i| i.kind() == "handshake")
+            .collect();
+        // One mirrored from InputLoader.o, one from Layers.i.
+        assert_eq!(hs.len(), 2, "{:?}", aux.interfaces);
+        // The aux port wired to il.o is il_o; check coverage.
+        assert!(aux.interface_of("il_o").is_some());
+        assert!(aux.interface_of("ly_i").is_some());
+    }
+
+    #[test]
+    fn inference_is_idempotent() {
+        let mut d = rebuilt_llm();
+        let mut ctx = PassContext::new();
+        InterfaceInference.run(&mut d, &mut ctx).unwrap();
+        let after_once = d.clone();
+        InterfaceInference.run(&mut d, &mut ctx).unwrap();
+        assert_eq!(d, after_once);
+    }
+
+    #[test]
+    fn no_overwrite_of_existing_interfaces() {
+        let mut d = rebuilt_llm();
+        // Pre-install a feedforward covering il_o on the aux.
+        let aux = d.module_mut("LLM_aux").unwrap();
+        aux.interfaces.push(Interface::NonPipeline {
+            name: "pre".into(),
+            ports: vec!["il_o".into(), "il_o_vld".into(), "il_o_rdy".into()],
+        });
+        InterfaceInference
+            .run(&mut d, &mut PassContext::new())
+            .unwrap();
+        let aux = d.module("LLM_aux").unwrap();
+        assert_eq!(aux.interface_of("il_o").unwrap().name(), "pre");
+    }
+
+    #[test]
+    fn parent_interface_propagates_to_child() {
+        // Grouped module with a handshake on its own ports, child lacking.
+        let child = LeafBuilder::verilog_stub("C")
+            .port("x", Dir::In, 8)
+            .port("x_v", Dir::In, 1)
+            .port("x_r", Dir::Out, 1)
+            .build();
+        let g = GroupedBuilder::new("G")
+            .port("s", Dir::In, 8)
+            .port("s_v", Dir::In, 1)
+            .port("s_r", Dir::Out, 1)
+            .iface(Interface::Handshake {
+                name: "s".into(),
+                data: vec!["s".into()],
+                valid: "s_v".into(),
+                ready: "s_r".into(),
+                clk: None,
+            })
+            .inst("c0", "C", &[("x", "s"), ("x_v", "s_v"), ("x_r", "s_r")])
+            .build();
+        let mut d = Design::new("G");
+        d.add(child);
+        d.add(g);
+        InterfaceInference
+            .run(&mut d, &mut PassContext::new())
+            .unwrap();
+        let c = d.module("C").unwrap();
+        assert_eq!(c.interface_of("x").unwrap().kind(), "handshake");
+    }
+}

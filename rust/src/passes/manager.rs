@@ -1,0 +1,154 @@
+//! Pass framework: each transformation "does one thing and does it well"
+//! (§3.3); the manager sequences passes, keeps the original↔transformed
+//! name mapping, and optionally runs DRC after every pass.
+
+use crate::ir::core::Design;
+use crate::ir::namemap::NameMap;
+use crate::ir::validate;
+use anyhow::{bail, Result};
+
+/// Shared state threaded through a pass pipeline.
+#[derive(Debug, Default)]
+pub struct PassContext {
+    pub namemap: NameMap,
+    /// Run DRC after each pass and fail on violations.
+    pub drc_after_each: bool,
+    /// Human-readable log lines from passes.
+    pub log: Vec<String>,
+}
+
+impl PassContext {
+    pub fn new() -> PassContext {
+        PassContext {
+            drc_after_each: true,
+            ..Default::default()
+        }
+    }
+
+    pub fn log(&mut self, msg: impl Into<String>) {
+        self.log.push(msg.into());
+    }
+}
+
+/// A composable IR transformation.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()>;
+}
+
+/// Run a sequence of passes with DRC hooks.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PassManager {
+    pub fn new() -> PassManager {
+        PassManager { passes: Vec::new() }
+    }
+
+    pub fn add(mut self, pass: impl Pass + 'static) -> Self {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    pub fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        for pass in &self.passes {
+            pass.run(design, ctx)?;
+            ctx.log(format!("pass '{}' complete", pass.name()));
+            if ctx.drc_after_each {
+                let violations = validate::check(design);
+                if !violations.is_empty() {
+                    let mut msg =
+                        format!("DRC failed after pass '{}':\n", pass.name());
+                    for v in violations.iter().take(10) {
+                        msg.push_str(&format!("  {v}\n"));
+                    }
+                    if violations.len() > 10 {
+                        msg.push_str(&format!("  ... {} more\n", violations.len() - 10));
+                    }
+                    bail!(msg);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::*;
+
+    struct AddModule(&'static str);
+    impl Pass for AddModule {
+        fn name(&self) -> &'static str {
+            "add-module"
+        }
+        fn run(&self, d: &mut Design, ctx: &mut PassContext) -> Result<()> {
+            d.add(Module::leaf(self.0, SourceFormat::Verilog, ""));
+            ctx.namemap.record("add-module", "origin", self.0);
+            Ok(())
+        }
+    }
+
+    struct Corrupt;
+    impl Pass for Corrupt {
+        fn name(&self) -> &'static str {
+            "corrupt"
+        }
+        fn run(&self, d: &mut Design, _: &mut PassContext) -> Result<()> {
+            // Introduce a dangling module reference.
+            let top = d.modules.get_mut(&d.top.clone()).unwrap();
+            if top.is_grouped() {
+                top.instances_mut().push(Instance::new("x", "Ghost"));
+            }
+            Ok(())
+        }
+    }
+
+    fn base() -> Design {
+        let mut d = Design::new("Top");
+        d.add(Module::grouped("Top"));
+        d
+    }
+
+    #[test]
+    fn passes_run_in_order() {
+        let mut d = base();
+        let mut ctx = PassContext::new();
+        PassManager::new()
+            .add(AddModule("A"))
+            .add(AddModule("B"))
+            .run(&mut d, &mut ctx)
+            .unwrap();
+        assert!(d.module("A").is_some());
+        assert!(d.module("B").is_some());
+        assert_eq!(ctx.log.len(), 2);
+        assert_eq!(ctx.namemap.trace("B"), "origin");
+    }
+
+    #[test]
+    fn drc_hook_catches_corruption() {
+        let mut d = base();
+        let mut ctx = PassContext::new();
+        let err = PassManager::new()
+            .add(Corrupt)
+            .run(&mut d, &mut ctx)
+            .unwrap_err();
+        assert!(err.to_string().contains("DRC failed after pass 'corrupt'"));
+    }
+
+    #[test]
+    fn drc_hook_can_be_disabled() {
+        let mut d = base();
+        let mut ctx = PassContext::new();
+        ctx.drc_after_each = false;
+        PassManager::new().add(Corrupt).run(&mut d, &mut ctx).unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! Composable transformation passes (§3.3).
+
+pub mod flatten;
+pub mod group;
+pub mod iface_infer;
+pub mod manager;
+pub mod partition;
+pub mod passthrough;
+pub mod pipeline_insert;
+pub mod rebuild;
+
+pub use manager::{Pass, PassContext, PassManager};

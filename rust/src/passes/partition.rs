@@ -1,0 +1,586 @@
+//! Partitioning Pass (§3.3, Fig 10d).
+//!
+//! Splits an aux leaf module into independently-floorplannable units: the
+//! module is converted to a netlist view (our structural Verilog parse),
+//! port connectivity is analyzed with union-find — identifiers co-occurring
+//! in a statement are conservatively connected — and each disjoint
+//! component becomes a **split**: a thin wrapper around the original aux
+//! exposing only that component's ports ("the splits are created by
+//! wrapping the original aux module … Unconnected logic remains undriven,
+//! which will be eliminated by subsequent EDA flows"). Clock and reset are
+//! excluded from the analysis and re-distributed to every split.
+//!
+//! Components whose logic is nothing but port-to-port assigns are tagged
+//! `passthrough_pairs` for the passthrough pass to bypass.
+
+use crate::ir::core::*;
+use crate::passes::manager::{Pass, PassContext};
+use crate::util::json::{Json, JsonObj};
+use crate::util::union_find::UnionFind;
+use crate::verilog::ast::{expr_identifiers, is_single_identifier, VItem};
+use crate::verilog::parser::parse_module;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Partition one aux instance inside a grouped parent.
+pub struct Partition {
+    pub parent: String,
+    pub aux_instance: String,
+}
+
+impl Pass for Partition {
+    fn name(&self) -> &'static str {
+        "partition"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        partition_aux(design, &self.parent, &self.aux_instance, ctx)?;
+        Ok(())
+    }
+}
+
+/// Partition every aux instance (modules with `aux_of` metadata) found in
+/// grouped modules — step (d) of the integrated flow.
+pub struct PartitionAllAux;
+
+impl Pass for PartitionAllAux {
+    fn name(&self) -> &'static str {
+        "partition-all-aux"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        let work: Vec<(String, String)> = design
+            .modules
+            .values()
+            .filter(|m| m.is_grouped())
+            .flat_map(|g| {
+                g.instances()
+                    .iter()
+                    .filter(|i| {
+                        design
+                            .module(&i.module_name)
+                            .map(|t| t.metadata.contains_key("aux_of"))
+                            .unwrap_or(false)
+                    })
+                    .map(|i| (g.name.clone(), i.instance_name.clone()))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        for (parent, inst) in work {
+            partition_aux(design, &parent, &inst, ctx)?;
+        }
+        Ok(())
+    }
+}
+
+/// Returns the number of splits created (1 = nothing to split).
+pub fn partition_aux(
+    design: &mut Design,
+    parent_name: &str,
+    aux_inst_name: &str,
+    ctx: &mut PassContext,
+) -> Result<usize> {
+    let parent = design
+        .module(parent_name)
+        .ok_or_else(|| anyhow!("missing parent '{parent_name}'"))?;
+    let aux_inst = parent
+        .instance(aux_inst_name)
+        .ok_or_else(|| anyhow!("no instance '{aux_inst_name}' in '{parent_name}'"))?
+        .clone();
+    let aux = design
+        .module(&aux_inst.module_name)
+        .ok_or_else(|| anyhow!("missing module '{}'", aux_inst.module_name))?
+        .clone();
+    let Body::Leaf {
+        format: SourceFormat::Verilog,
+        source,
+    } = &aux.body
+    else {
+        bail!("aux '{}' is not a Verilog leaf", aux.name);
+    };
+    let vm = parse_module(source)?;
+
+    // Clock/reset ports excluded from connectivity.
+    let clockish: BTreeSet<String> = aux
+        .interfaces
+        .iter()
+        .filter(|i| matches!(i, Interface::Clock { .. } | Interface::Reset { .. }))
+        .flat_map(|i| i.ports())
+        .map(|s| s.to_string())
+        .collect();
+
+    // Identifier universe: everything appearing in the module.
+    let mut ids: Vec<String> = Vec::new();
+    let mut id_idx: BTreeMap<String, usize> = BTreeMap::new();
+    let intern = |name: &str, ids: &mut Vec<String>, id_idx: &mut BTreeMap<String, usize>| {
+        if let Some(&i) = id_idx.get(name) {
+            return i;
+        }
+        let i = ids.len();
+        ids.push(name.to_string());
+        id_idx.insert(name.to_string(), i);
+        i
+    };
+    for p in &aux.ports {
+        intern(&p.name, &mut ids, &mut id_idx);
+    }
+    // Gather statement groups (each joins its identifiers).
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    // Pure alias assigns `lhs = rhs` (single identifiers both sides) for
+    // feed-through chain detection, and whether any non-alias statement
+    // touched each identifier.
+    let mut alias_assigns: Vec<(String, String)> = Vec::new();
+    let mut logic_stmt_roots: Vec<Vec<String>> = Vec::new();
+    for item in &vm.items {
+        let mut is_alias = false;
+        let idents: Vec<String> = match item {
+            VItem::Assign(a) => {
+                let lhs = a.lhs.trim();
+                let rhs = a.rhs.trim();
+                if is_single_identifier(lhs) && is_single_identifier(rhs) {
+                    alias_assigns.push((lhs.to_string(), rhs.to_string()));
+                    is_alias = true;
+                }
+                let mut v = expr_identifiers(&a.lhs);
+                v.extend(expr_identifiers(&a.rhs));
+                v
+            }
+            VItem::Raw(r) => expr_identifiers(r),
+            VItem::Instance(i) => {
+                let mut v = Vec::new();
+                for (_, e) in &i.conns {
+                    v.extend(expr_identifiers(e));
+                }
+                v
+            }
+            VItem::Net(_) => continue,
+        };
+        let filtered: Vec<String> = idents
+            .into_iter()
+            .filter(|id| !clockish.contains(id))
+            .collect();
+        if !is_alias && !filtered.is_empty() {
+            logic_stmt_roots.push(filtered.clone());
+        }
+        let idxs: Vec<usize> = filtered
+            .iter()
+            .map(|id| intern(id, &mut ids, &mut id_idx))
+            .collect();
+        if idxs.len() > 1 {
+            groups.push(idxs);
+        }
+    }
+    // Interface port merging: ports in a common interface go together.
+    for iface in &aux.interfaces {
+        if matches!(iface, Interface::Clock { .. } | Interface::Reset { .. }) {
+            continue;
+        }
+        let idxs: Vec<usize> = iface
+            .ports()
+            .iter()
+            .map(|p| intern(p, &mut ids, &mut id_idx))
+            .collect();
+        if idxs.len() > 1 {
+            groups.push(idxs);
+        }
+    }
+
+    let mut uf = UnionFind::new(ids.len());
+    for g in &groups {
+        for w in g.windows(2) {
+            uf.union(w[0], w[1]);
+        }
+    }
+
+    // Components restricted to (non-clock) ports.
+    let mut comp_ports: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for p in &aux.ports {
+        if clockish.contains(&p.name) {
+            continue;
+        }
+        let root = uf.find(id_idx[&p.name]);
+        comp_ports.entry(root).or_default().push(p.name.clone());
+    }
+    if comp_ports.len() <= 1 {
+        ctx.log(format!("partition {}: single component, no split", aux.name));
+        return Ok(1);
+    }
+
+    // Identify pure-passthrough components: no non-alias logic touches the
+    // component, and every output port resolves through the alias chain to
+    // an input port.
+    let mut logic_roots: BTreeSet<usize> = BTreeSet::new();
+    for stmt in &logic_stmt_roots {
+        for id in stmt {
+            logic_roots.insert(uf.find(id_idx[id]));
+        }
+    }
+    // Alias graph: lhs <- rhs.
+    let driver_of: BTreeMap<&str, &str> = alias_assigns
+        .iter()
+        .map(|(l, r)| (l.as_str(), r.as_str()))
+        .collect();
+    let trace_to_input = |start: &str| -> Option<String> {
+        let mut cur = start;
+        for _ in 0..1000 {
+            if let Some(p) = aux.port(cur) {
+                if p.dir == Dir::In && cur != start {
+                    return Some(cur.to_string());
+                }
+            }
+            cur = driver_of.get(cur)?;
+        }
+        None
+    };
+    let mut pass_pairs_by_root: BTreeMap<usize, Vec<(String, String)>> = BTreeMap::new();
+    for (&root, ports) in comp_ports.iter() {
+        if logic_roots.contains(&root) {
+            continue;
+        }
+        let outs: Vec<&String> = ports
+            .iter()
+            .filter(|p| aux.port(p).map(|q| q.dir == Dir::Out).unwrap_or(false))
+            .collect();
+        if outs.is_empty() {
+            continue;
+        }
+        let pairs: Option<Vec<(String, String)>> = outs
+            .iter()
+            .map(|o| trace_to_input(o).map(|i| ((*o).clone(), i)))
+            .collect();
+        if let Some(pairs) = pairs {
+            pass_pairs_by_root.insert(root, pairs);
+        }
+    }
+
+    let total_bits: f64 = aux
+        .ports
+        .iter()
+        .filter(|p| !clockish.contains(&p.name))
+        .map(|p| p.width as f64)
+        .sum();
+    let aux_res = crate::ir::builder::module_resources(&aux).unwrap_or_else(|| {
+        crate::eda::synth::estimate_verilog(source).unwrap_or(Resources::ZERO)
+    });
+
+    // Build split modules + instances.
+    let clk_ports: Vec<Port> = aux
+        .ports
+        .iter()
+        .filter(|p| clockish.contains(&p.name))
+        .cloned()
+        .collect();
+    let mut new_instances: Vec<Instance> = Vec::new();
+    let mut split_names: Vec<String> = Vec::new();
+    for (k, (root, ports)) in comp_ports.iter().enumerate() {
+        let split_name = design.fresh_module_name(&format!("{}_split{k}", aux.name));
+        let mut sm = Module::leaf(
+            &split_name,
+            SourceFormat::Verilog,
+            wrapper_verilog(&split_name, &aux, ports, &clk_ports),
+        );
+        for p in ports {
+            sm.ports.push(aux.port(p).unwrap().clone());
+        }
+        for p in &clk_ports {
+            sm.ports.push(p.clone());
+        }
+        // Interfaces covering this component's ports transfer over.
+        for iface in &aux.interfaces {
+            let ip = iface.ports();
+            if ip.iter().all(|p| {
+                ports.iter().any(|q| q == p) || clockish.contains(*p)
+            }) {
+                sm.interfaces.push(iface.clone());
+            }
+        }
+        // Resource share by port-bit fraction.
+        let bits: f64 = ports
+            .iter()
+            .map(|p| aux.port(p).unwrap().width as f64)
+            .sum();
+        let share = if total_bits > 0.0 { bits / total_bits } else { 0.0 };
+        crate::ir::builder::set_module_resources(&mut sm, aux_res.scale(share));
+        sm.metadata.insert("split_of", Json::str(&aux.name));
+        if let Some(pairs) = pass_pairs_by_root.get(root) {
+            let covered: BTreeSet<&str> = pairs
+                .iter()
+                .flat_map(|(a, b)| [a.as_str(), b.as_str()])
+                .collect();
+            if ports.iter().all(|p| covered.contains(p.as_str())) {
+                let arr = Json::Arr(
+                    pairs
+                        .iter()
+                        .map(|(a, b)| {
+                            let mut o = JsonObj::new();
+                            o.insert("out", Json::str(a));
+                            o.insert("in", Json::str(b));
+                            Json::Obj(o)
+                        })
+                        .collect(),
+                );
+                sm.metadata.insert("passthrough_pairs", arr);
+            }
+        }
+
+        // Parent-side instance.
+        let mut si = Instance::new(format!("{aux_inst_name}_s{k}"), &split_name);
+        for p in ports {
+            if let Some(v) = aux_inst.connection(p) {
+                si.connections.push(Connection {
+                    port: p.clone(),
+                    value: v.clone(),
+                });
+            }
+        }
+        for p in &clk_ports {
+            if let Some(v) = aux_inst.connection(&p.name) {
+                si.connections.push(Connection {
+                    port: p.name.clone(),
+                    value: v.clone(),
+                });
+            }
+        }
+        ctx.namemap.record("partition", &aux.name, &split_name);
+        split_names.push(split_name);
+        new_instances.push(si);
+        design.add(sm);
+    }
+
+    // Swap the aux instance for the splits.
+    let parent = design.modules.get_mut(parent_name).unwrap();
+    parent
+        .instances_mut()
+        .retain(|i| i.instance_name != aux_inst_name);
+    let n = new_instances.len();
+    parent.instances_mut().extend(new_instances);
+    ctx.log(format!(
+        "partition {}: {} splits [{}]",
+        aux.name,
+        n,
+        split_names.join(", ")
+    ));
+    Ok(n)
+}
+
+/// Wrapper Verilog: instantiate the original aux, connect only this
+/// split's ports (+ clock/reset); everything else left open.
+fn wrapper_verilog(name: &str, aux: &Module, ports: &[String], clk_ports: &[Port]) -> String {
+    let mut s = format!("// Split wrapper over {}: undriven logic is pruned by synthesis.\nmodule {name} (\n", aux.name);
+    let all: Vec<&Port> = ports
+        .iter()
+        .map(|p| aux.port(p).unwrap())
+        .chain(clk_ports.iter())
+        .collect();
+    for (i, p) in all.iter().enumerate() {
+        let dir = match p.dir {
+            Dir::In => "input  wire",
+            Dir::Out => "output wire",
+            Dir::InOut => "inout  wire",
+        };
+        let range = if p.width > 1 {
+            format!("[{}:0] ", p.width - 1)
+        } else {
+            String::new()
+        };
+        let comma = if i + 1 < all.len() { "," } else { "" };
+        s.push_str(&format!("  {dir} {range}{}{comma}\n", p.name));
+    }
+    s.push_str(");\n");
+    s.push_str(&format!("  {} core (\n", aux.name));
+    let conns: Vec<String> = aux
+        .ports
+        .iter()
+        .map(|p| {
+            if ports.iter().any(|q| q == &p.name) || clk_ports.iter().any(|c| c.name == p.name) {
+                format!("    .{}({})", p.name, p.name)
+            } else {
+                format!("    .{}()", p.name)
+            }
+        })
+        .collect();
+    s.push_str(&conns.join(",\n"));
+    s.push_str("\n  );\nendmodule\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::*;
+    use crate::ir::validate;
+    use crate::passes::iface_infer::InterfaceInference;
+    use crate::passes::rebuild;
+
+    /// LLM-style top whose body has TWO independent control blobs: one
+    /// gating the loader→layer path, one a standalone RAM passthrough.
+    fn design_with_aux() -> Design {
+        let mut d = Design::new("LLM");
+        d.add(
+            LeafBuilder::verilog_stub("InputLoader")
+                .clk_rst()
+                .handshake("o", Dir::Out, 64)
+                .build(),
+        );
+        d.add(
+            LeafBuilder::verilog_stub("Layers")
+                .clk_rst()
+                .handshake("i", Dir::In, 64)
+                .handshake("o", Dir::Out, 32)
+                .build(),
+        );
+        d.add(
+            LeafBuilder::verilog_stub("Buffer")
+                .clk_rst()
+                .handshake("i", Dir::In, 32)
+                .build(),
+        );
+        let top_src = r#"
+module LLM (input wire ap_clk, input wire ap_rst_n);
+  wire [63:0] a; wire a_v; wire a_r;
+  wire [31:0] q; wire q_v; wire q_r;
+  wire [31:0] qq; wire qq_v; wire qq_r;
+  reg gate;
+  always @(posedge ap_clk) gate <= ~gate;
+
+  // Component 1: loader -> layers with gated valid.
+  InputLoader il (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+                  .o(a), .o_vld(a_v), .o_rdy(a_r));
+  Layers ly (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+             .i(a), .i_vld(a_v & gate), .i_rdy(a_r),
+             .o(q), .o_vld(q_v), .o_rdy(q_r));
+
+  // Component 2: pure feed-through to the buffer (auxRAM-like).
+  Buffer bf (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+             .i(qq), .i_vld(qq_v), .i_rdy(qq_r));
+  assign qq = q;
+  assign qq_v = q_v;
+  assign q_r = qq_r;
+endmodule
+"#;
+        let mut top = Module::leaf("LLM", SourceFormat::Verilog, top_src);
+        top.ports = vec![
+            Port::new("ap_clk", Dir::In, 1),
+            Port::new("ap_rst_n", Dir::In, 1),
+        ];
+        top.interfaces = vec![
+            Interface::Clock {
+                port: "ap_clk".into(),
+            },
+            Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            },
+        ];
+        d.add(top);
+        d
+    }
+
+    fn prepared() -> (Design, PassContext) {
+        let mut d = design_with_aux();
+        let mut ctx = PassContext::new();
+        rebuild::rebuild(&mut d, "LLM", &mut ctx).unwrap();
+        InterfaceInference.run(&mut d, &mut ctx).unwrap();
+        (d, ctx)
+    }
+
+    #[test]
+    fn aux_splits_into_components() {
+        let (mut d, mut ctx) = prepared();
+        let n = partition_aux(&mut d, "LLM", "LLM_aux_inst", &mut ctx).unwrap();
+        assert!(n >= 2, "expected ≥2 splits, got {n}");
+        validate::assert_clean(&d);
+        let top = d.module("LLM").unwrap();
+        assert!(top.instance("LLM_aux_inst").is_none());
+        assert!(top.instance("LLM_aux_inst_s0").is_some());
+    }
+
+    #[test]
+    fn gate_logic_and_feedthrough_in_different_splits() {
+        let (mut d, mut ctx) = prepared();
+        partition_aux(&mut d, "LLM", "LLM_aux_inst", &mut ctx).unwrap();
+        // Find the split carrying the ly_i_vld (gated) port and the one
+        // carrying bf_i (feed-through).
+        let split_of = |port: &str| -> Option<String> {
+            d.modules
+                .values()
+                .find(|m| {
+                    m.metadata.contains_key("split_of") && m.port(port).is_some()
+                })
+                .map(|m| m.name.clone())
+        };
+        let gated = split_of("ly_i_vld").expect("gated split");
+        let ft = split_of("bf_i").expect("feedthrough split");
+        assert_ne!(gated, ft);
+        // The feed-through split is tagged for the passthrough pass.
+        let ftm = d.module(&ft).unwrap();
+        assert!(ftm.metadata.contains_key("passthrough_pairs"), "{ftm:?}");
+        let gm = d.module(&gated).unwrap();
+        assert!(!gm.metadata.contains_key("passthrough_pairs"));
+    }
+
+    #[test]
+    fn splits_share_aux_resources() {
+        let (mut d, mut ctx) = prepared();
+        // Attach a known resource estimate to the aux first.
+        crate::ir::builder::set_module_resources(
+            d.module_mut("LLM_aux").unwrap(),
+            Resources::new(1000.0, 500.0, 0.0, 0.0, 0.0),
+        );
+        partition_aux(&mut d, "LLM", "LLM_aux_inst", &mut ctx).unwrap();
+        let total: f64 = d
+            .modules
+            .values()
+            .filter(|m| m.metadata.contains_key("split_of"))
+            .map(|m| crate::ir::builder::module_resources(m).unwrap().lut)
+            .sum();
+        assert!((total - 1000.0).abs() < 1.0, "split LUTs sum to {total}");
+    }
+
+    #[test]
+    fn wrapper_verilog_parses_and_instantiates_core() {
+        let (mut d, mut ctx) = prepared();
+        partition_aux(&mut d, "LLM", "LLM_aux_inst", &mut ctx).unwrap();
+        for m in d.modules.values().filter(|m| m.metadata.contains_key("split_of")) {
+            let Body::Leaf { source, .. } = &m.body else {
+                panic!()
+            };
+            let vm = crate::verilog::parser::parse_module(source).unwrap();
+            assert_eq!(vm.instances().count(), 1);
+            assert_eq!(vm.instances().next().unwrap().module, "LLM_aux");
+        }
+    }
+
+    #[test]
+    fn clock_distributed_to_every_split() {
+        let (mut d, mut ctx) = prepared();
+        partition_aux(&mut d, "LLM", "LLM_aux_inst", &mut ctx).unwrap();
+        let top = d.module("LLM").unwrap();
+        for inst in top.instances().iter().filter(|i| i.instance_name.starts_with("LLM_aux_inst_s")) {
+            assert_eq!(inst.connection("ap_clk"), Some(&ConnExpr::id("ap_clk")));
+        }
+    }
+
+    #[test]
+    fn single_component_no_split() {
+        // An aux whose ports are all interconnected stays whole.
+        let mut d = Design::new("T");
+        let mut aux = Module::leaf(
+            "T_aux",
+            SourceFormat::Verilog,
+            "module T_aux(input [7:0] a, output [7:0] b);\nassign b = a + 1;\nendmodule",
+        );
+        aux.ports = vec![Port::new("a", Dir::In, 8), Port::new("b", Dir::Out, 8)];
+        aux.metadata.insert("aux_of", Json::str("T"));
+        d.add(aux);
+        let top = GroupedBuilder::new("T")
+            .port("x", Dir::In, 8)
+            .port("y", Dir::Out, 8)
+            .inst("aux0", "T_aux", &[("a", "x"), ("b", "y")])
+            .build();
+        d.add(top);
+        let n = partition_aux(&mut d, "T", "aux0", &mut PassContext::new()).unwrap();
+        assert_eq!(n, 1);
+        assert!(d.module("T").unwrap().instance("aux0").is_some());
+    }
+}

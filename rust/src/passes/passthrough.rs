@@ -1,0 +1,196 @@
+//! Passthrough Pass (§3.3, Fig 10d "auxRAM is bypassed").
+//!
+//! If netlist analysis shows an interface connects solely and directly to
+//! another (a pure feed-through split), the module is bypassed by
+//! rerouting connections between the interfaces. The partition pass tags
+//! such splits with `passthrough_pairs` metadata; this pass removes the
+//! instance and merges each pair's nets, "detaching a wire from one module
+//! before connecting it to another" so the two-endpoint invariant holds.
+
+use crate::ir::core::*;
+use crate::passes::manager::{Pass, PassContext};
+use anyhow::Result;
+
+pub struct Passthrough;
+
+impl Pass for Passthrough {
+    fn name(&self) -> &'static str {
+        "passthrough"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        let grouped: Vec<String> = design
+            .modules
+            .values()
+            .filter(|m| m.is_grouped())
+            .map(|m| m.name.clone())
+            .collect();
+        for g in grouped {
+            bypass_in(design, &g, ctx)?;
+        }
+        design.gc();
+        Ok(())
+    }
+}
+
+fn bypass_in(design: &mut Design, parent_name: &str, ctx: &mut PassContext) -> Result<()> {
+    loop {
+        let parent = design.module(parent_name).unwrap();
+        // Find a bypassable instance.
+        let target = parent.instances().iter().find_map(|inst| {
+            let m = design.module(&inst.module_name)?;
+            let pairs = m.metadata.get("passthrough_pairs")?.as_arr()?;
+            let mut resolved = Vec::new();
+            for p in pairs {
+                let out_port = p.at("out")?.as_str()?;
+                let in_port = p.at("in")?.as_str()?;
+                let out_id = inst.connection(out_port)?.as_id()?.to_string();
+                let in_id = inst.connection(in_port)?.as_id()?.to_string();
+                resolved.push((out_id, in_id));
+            }
+            Some((inst.instance_name.clone(), resolved))
+        });
+        let Some((inst_name, pairs)) = target else {
+            return Ok(());
+        };
+
+        let parent = design.modules.get_mut(parent_name).unwrap();
+        parent
+            .instances_mut()
+            .retain(|i| i.instance_name != inst_name);
+        for (out_id, in_id) in &pairs {
+            // Merge nets: prefer keeping a parent-port identifier.
+            let out_is_port = parent.port(out_id).is_some();
+            let in_is_port = parent.port(in_id).is_some();
+            let (keep, drop) = match (out_is_port, in_is_port) {
+                (true, true) => {
+                    // Two parent ports fed through: cannot merge without an
+                    // assign — leave as-is (rare; an exporter-level alias).
+                    continue;
+                }
+                (true, false) => (out_id.clone(), in_id.clone()),
+                _ => (in_id.clone(), out_id.clone()),
+            };
+            // Rewrite all uses of `drop` to `keep`, remove the wire.
+            for inst in parent.instances_mut() {
+                for c in &mut inst.connections {
+                    if let ConnExpr::Id(id) = &mut c.value {
+                        if *id == drop {
+                            *id = keep.clone();
+                        }
+                    }
+                }
+            }
+            parent.wires_mut().retain(|w| w.name != drop);
+        }
+        ctx.log(format!(
+            "passthrough: bypassed '{inst_name}' in '{parent_name}' ({} pairs)",
+            pairs.len()
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::*;
+    use crate::ir::validate;
+    use crate::util::json::{Json, JsonObj};
+
+    /// A -> FT -> B where FT is a tagged feed-through.
+    fn design_with_feedthrough() -> Design {
+        let a = LeafBuilder::verilog_stub("A")
+            .handshake("o", Dir::Out, 32)
+            .build();
+        let b = LeafBuilder::verilog_stub("B")
+            .handshake("i", Dir::In, 32)
+            .build();
+        let mut ft = LeafBuilder::verilog_stub("FT")
+            .port("x", Dir::In, 32)
+            .port("x_v", Dir::In, 1)
+            .port("x_r", Dir::Out, 1)
+            .port("y", Dir::Out, 32)
+            .port("y_v", Dir::Out, 1)
+            .port("y_r", Dir::In, 1)
+            .build();
+        let mk = |pairs: &[(&str, &str)]| {
+            Json::Arr(
+                pairs
+                    .iter()
+                    .map(|(o, i)| {
+                        let mut j = JsonObj::new();
+                        j.insert("out", Json::str(*o));
+                        j.insert("in", Json::str(*i));
+                        Json::Obj(j)
+                    })
+                    .collect(),
+            )
+        };
+        ft.metadata
+            .insert("passthrough_pairs", mk(&[("y", "x"), ("y_v", "x_v"), ("x_r", "y_r")]));
+        let top = GroupedBuilder::new("Top")
+            .wire("p", 32)
+            .wire("p_v", 1)
+            .wire("p_r", 1)
+            .wire("q", 32)
+            .wire("q_v", 1)
+            .wire("q_r", 1)
+            .inst("a0", "A", &[("o", "p"), ("o_vld", "p_v"), ("o_rdy", "p_r")])
+            .inst(
+                "ft0",
+                "FT",
+                &[
+                    ("x", "p"),
+                    ("x_v", "p_v"),
+                    ("x_r", "p_r"),
+                    ("y", "q"),
+                    ("y_v", "q_v"),
+                    ("y_r", "q_r"),
+                ],
+            )
+            .inst("b0", "B", &[("i", "q"), ("i_vld", "q_v"), ("i_rdy", "q_r")])
+            .build();
+        let mut d = Design::new("Top");
+        d.add(a);
+        d.add(b);
+        d.add(ft);
+        d.add(top);
+        d
+    }
+
+    #[test]
+    fn feedthrough_bypassed() {
+        let mut d = design_with_feedthrough();
+        validate::assert_clean(&d);
+        Passthrough.run(&mut d, &mut PassContext::new()).unwrap();
+        validate::assert_clean(&d);
+        let top = d.module("Top").unwrap();
+        assert!(top.instance("ft0").is_none());
+        assert_eq!(top.instances().len(), 2);
+        // a0 and b0 now share nets directly.
+        let a0 = top.instance("a0").unwrap();
+        let b0 = top.instance("b0").unwrap();
+        assert_eq!(a0.connection("o"), b0.connection("i"));
+        assert_eq!(a0.connection("o_rdy"), b0.connection("i_rdy"));
+        // FT module garbage-collected.
+        assert!(d.module("FT").is_none());
+    }
+
+    #[test]
+    fn non_tagged_instances_untouched() {
+        let mut d = design_with_feedthrough();
+        d.module_mut("FT").unwrap().metadata.remove("passthrough_pairs");
+        let before = d.clone();
+        Passthrough.run(&mut d, &mut PassContext::new()).unwrap();
+        assert_eq!(d.module("Top"), before.module("Top"));
+    }
+
+    #[test]
+    fn wires_pruned_after_bypass() {
+        let mut d = design_with_feedthrough();
+        Passthrough.run(&mut d, &mut PassContext::new()).unwrap();
+        let top = d.module("Top").unwrap();
+        // 3 merged wires remain out of 6.
+        assert_eq!(top.wires().len(), 3);
+    }
+}

@@ -1,0 +1,370 @@
+//! Pipeline insertion — the Wrapping Pass (§3.3) applied to interconnect
+//! synthesis (§3.4 stage 4): break a latency-tolerant channel between two
+//! instances with a relay station (handshake) or an FF chain
+//! (feedforward), then rely on flattening to elevate the helper.
+//!
+//! Operates on a flat grouped module: given the source instance and its
+//! handshake *output* interface, the three wires (data/valid/ready) are cut
+//! and a pipeline element is inserted in between, optionally carrying a
+//! `floorplan` slot assignment for each stage.
+
+use crate::interconnect;
+use crate::ir::core::*;
+use crate::ir::graph::BlockGraph;
+use crate::passes::manager::PassContext;
+use anyhow::{anyhow, bail, Result};
+
+/// Insert a relay station on the handshake interface `iface_name` *driven
+/// by* instance `src_inst` inside grouped module `parent`. Returns the
+/// inserted instance name. `slot` attaches floorplan metadata.
+pub fn insert_relay_station(
+    design: &mut Design,
+    parent_name: &str,
+    src_inst: &str,
+    iface_name: &str,
+    stages: u32,
+    slot: Option<&str>,
+    ctx: &mut PassContext,
+) -> Result<String> {
+    let parent = design
+        .module(parent_name)
+        .ok_or_else(|| anyhow!("missing parent '{parent_name}'"))?;
+    let inst = parent
+        .instance(src_inst)
+        .ok_or_else(|| anyhow!("no instance '{src_inst}'"))?
+        .clone();
+    let src_mod = design
+        .module(&inst.module_name)
+        .ok_or_else(|| anyhow!("missing module '{}'", inst.module_name))?;
+    // Several interfaces may share a name (pragma fallback bundles);
+    // pick the *output* handshake with this name.
+    let iface = src_mod
+        .interfaces
+        .iter()
+        .filter(|i| i.name() == iface_name)
+        .find(|i| match i {
+            Interface::Handshake { valid, .. } => {
+                src_mod.port(valid).map(|p| p.dir) == Some(Dir::Out)
+            }
+            _ => false,
+        })
+        .ok_or_else(|| {
+            anyhow!(
+                "interface '{iface_name}' on '{src_inst}' is not an output handshake"
+            )
+        })?
+        .clone();
+    let Interface::Handshake {
+        data,
+        valid,
+        ready,
+        ..
+    } = &iface
+    else {
+        unreachable!()
+    };
+    let width: u32 = data
+        .iter()
+        .map(|d| src_mod.port(d).map(|p| p.width).unwrap_or(0))
+        .sum();
+
+    // The identifiers currently carrying this channel.
+    let id_of = |port: &str| -> Result<String> {
+        match inst.connection(port) {
+            Some(ConnExpr::Id(id)) => Ok(id.clone()),
+            other => bail!("port '{port}' of '{src_inst}' not an identifier: {other:?}"),
+        }
+    };
+    // Concatenated data is only supported for single-port data bundles
+    // (the general case would need a packer aux; HLS channels are 1-port).
+    if data.len() != 1 {
+        bail!("multi-port data bundles not supported for pipelining yet");
+    }
+    let data_id = id_of(&data[0])?;
+    let valid_id = id_of(valid)?;
+    let ready_id = id_of(ready)?;
+
+    // Ensure the relay-station module exists.
+    let rs = interconnect::relay_station(width, stages);
+    let rs_name = rs.name.clone();
+    if design.module(&rs_name).is_none() {
+        design.add(rs);
+    }
+
+    // New wires from relay station to the old consumer side; the old wires
+    // now terminate at the relay-station input. (We rewire the *source*
+    // instance to fresh wires and feed the relay from those, keeping the
+    // consumer untouched.)
+    let parent = design.modules.get_mut(parent_name).unwrap();
+    let rs_inst_name = {
+        let mut base = format!("rs_{src_inst}_{iface_name}");
+        let mut k = 0;
+        while parent.instance(&base).is_some() {
+            k += 1;
+            base = format!("rs_{src_inst}_{iface_name}_{k}");
+        }
+        base
+    };
+    let fresh = |parent: &mut Module, base: &str, width: u32| -> String {
+        let mut name = base.to_string();
+        while parent.wires().iter().any(|w| w.name == name)
+            || parent.port(&name).is_some()
+        {
+            name.push('_');
+        }
+        parent.wires_mut().push(Wire {
+            name: name.clone(),
+            width,
+        });
+        name
+    };
+    let nd = fresh(parent, &format!("{rs_inst_name}__d"), width);
+    let nv = fresh(parent, &format!("{rs_inst_name}__v"), 1);
+    let nr = fresh(parent, &format!("{rs_inst_name}__r"), 1);
+
+    // Rewire source instance outputs to the fresh wires.
+    {
+        let src = parent
+            .instances_mut()
+            .iter_mut()
+            .find(|i| i.instance_name == src_inst)
+            .unwrap();
+        *src.connection_mut(&data[0]).unwrap() = ConnExpr::id(&nd);
+        *src.connection_mut(valid).unwrap() = ConnExpr::id(&nv);
+        *src.connection_mut(ready).unwrap() = ConnExpr::id(&nr);
+    }
+
+    // Relay instance: input from fresh wires, output to the old wires.
+    let mut rs_inst = Instance::new(&rs_inst_name, &rs_name);
+    rs_inst.connect("i", ConnExpr::id(&nd));
+    rs_inst.connect("i_vld", ConnExpr::id(&nv));
+    rs_inst.connect("i_rdy", ConnExpr::id(&nr));
+    rs_inst.connect("o", ConnExpr::id(&data_id));
+    rs_inst.connect("o_vld", ConnExpr::id(&valid_id));
+    rs_inst.connect("o_rdy", ConnExpr::id(&ready_id));
+    // Clock/reset broadcast.
+    let (clk, rst) = clock_reset_ids(parent);
+    if let Some(c) = clk {
+        rs_inst.connect("ap_clk", ConnExpr::id(c));
+    }
+    match rst {
+        Some(r) => rs_inst.connect("ap_rst_n", ConnExpr::id(r)),
+        None => rs_inst.connect("ap_rst_n", ConnExpr::Const { width: 1, value: 1 }),
+    }
+    if let Some(s) = slot {
+        rs_inst
+            .metadata
+            .insert("floorplan", crate::util::json::Json::str(s));
+    }
+    parent.instances_mut().push(rs_inst);
+    ctx.namemap.record(
+        "pipeline-insert",
+        &format!("{src_inst}.{iface_name}"),
+        &rs_inst_name,
+    );
+    ctx.log(format!(
+        "pipeline: relay station '{rs_inst_name}' ({width}b × {stages} stages) on {src_inst}.{iface_name}"
+    ));
+    Ok(rs_inst_name)
+}
+
+/// Clock / active-low reset identifiers of a grouped module, if declared.
+fn clock_reset_ids(m: &Module) -> (Option<&str>, Option<&str>) {
+    let mut clk = None;
+    let mut rst = None;
+    for i in &m.interfaces {
+        match i {
+            Interface::Clock { port } => clk = Some(port.as_str()),
+            Interface::Reset { port, .. } => rst = Some(port.as_str()),
+            _ => {}
+        }
+    }
+    (clk, rst)
+}
+
+/// Count pipeline stages needed for a slot pair: one relay station per die
+/// crossing plus one per two plain hops (AutoBridge's rule of thumb).
+pub fn stages_for_distance(manhattan: usize, die_crossings: usize) -> u32 {
+    (die_crossings as u32) + (manhattan.saturating_sub(die_crossings) as u32).div_ceil(2)
+}
+
+/// All pipelinable channels of a flat grouped module:
+/// (src_inst, iface_name, dst_inst, width).
+pub fn pipelinable_channels(design: &Design, parent_name: &str) -> Vec<(String, String, String, u32)> {
+    let Some(parent) = design.module(parent_name) else {
+        return Vec::new();
+    };
+    let graph = BlockGraph::build(parent);
+    let mut out = Vec::new();
+    for inst in parent.instances() {
+        let Some(m) = design.module(&inst.module_name) else {
+            continue;
+        };
+        for iface in &m.interfaces {
+            let Interface::Handshake { name, data, valid, .. } = iface else {
+                continue;
+            };
+            if m.port(valid).map(|p| p.dir) != Some(Dir::Out) {
+                continue;
+            }
+            // Find consumer through the valid wire.
+            let Some(ConnExpr::Id(vid)) = inst.connection(valid) else {
+                continue;
+            };
+            let this = crate::ir::graph::Endpoint::Inst {
+                inst: inst.instance_name.clone(),
+                port: valid.clone(),
+            };
+            let Some(opp) = graph.opposite(vid, &this) else {
+                continue;
+            };
+            let dst = match opp {
+                crate::ir::graph::Endpoint::Inst { inst, .. } => inst.clone(),
+                crate::ir::graph::Endpoint::Parent { .. } => continue,
+            };
+            let width: u32 = data
+                .iter()
+                .map(|d| m.port(d).map(|p| p.width).unwrap_or(0))
+                .sum();
+            out.push((inst.instance_name.clone(), name.clone(), dst, width));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::*;
+    use crate::ir::validate;
+
+    fn two_stage() -> Design {
+        let a = LeafBuilder::verilog_stub("A")
+            .clk_rst()
+            .handshake("o", Dir::Out, 64)
+            .build();
+        let b = LeafBuilder::verilog_stub("B")
+            .clk_rst()
+            .handshake("i", Dir::In, 64)
+            .build();
+        let top = GroupedBuilder::new("Top")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .iface(Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            })
+            .wire("d", 64)
+            .wire("d_vld", 1)
+            .wire("d_rdy", 1)
+            .inst(
+                "a0",
+                "A",
+                &[
+                    ("o", "d"),
+                    ("o_vld", "d_vld"),
+                    ("o_rdy", "d_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .inst(
+                "b0",
+                "B",
+                &[
+                    ("i", "d"),
+                    ("i_vld", "d_vld"),
+                    ("i_rdy", "d_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .build();
+        let mut d = Design::new("Top");
+        d.add(a);
+        d.add(b);
+        d.add(top);
+        d
+    }
+
+    #[test]
+    fn insert_preserves_drc() {
+        let mut d = two_stage();
+        validate::assert_clean(&d);
+        let rs = insert_relay_station(
+            &mut d,
+            "Top",
+            "a0",
+            "o",
+            2,
+            Some("SLOT_X0Y1"),
+            &mut PassContext::new(),
+        )
+        .unwrap();
+        validate::assert_clean(&d);
+        let top = d.module("Top").unwrap();
+        assert_eq!(top.instances().len(), 3);
+        let rsi = top.instance(&rs).unwrap();
+        assert_eq!(
+            rsi.metadata.get("floorplan").unwrap().as_str(),
+            Some("SLOT_X0Y1")
+        );
+        // Consumer untouched.
+        let b0 = top.instance("b0").unwrap();
+        assert_eq!(b0.connection("i"), Some(&ConnExpr::id("d")));
+        // Source rewired to fresh wires.
+        let a0 = top.instance("a0").unwrap();
+        assert_ne!(a0.connection("o"), Some(&ConnExpr::id("d")));
+    }
+
+    #[test]
+    fn inserted_module_is_pipeline_element() {
+        let mut d = two_stage();
+        insert_relay_station(&mut d, "Top", "a0", "o", 1, None, &mut PassContext::new())
+            .unwrap();
+        let rs_mod = d.module("rs_w64_s1").unwrap();
+        assert!(rs_mod
+            .metadata
+            .get("pipeline_element")
+            .and_then(|v| v.as_bool())
+            .unwrap());
+    }
+
+    #[test]
+    fn double_insertion_chains() {
+        let mut d = two_stage();
+        let mut ctx = PassContext::new();
+        insert_relay_station(&mut d, "Top", "a0", "o", 1, None, &mut ctx).unwrap();
+        // Insert another stage after the first relay station.
+        insert_relay_station(&mut d, "Top", "rs_a0_o", "o", 1, None, &mut ctx).unwrap();
+        validate::assert_clean(&d);
+        assert_eq!(d.module("Top").unwrap().instances().len(), 4);
+    }
+
+    #[test]
+    fn channels_detected() {
+        let d = two_stage();
+        let ch = pipelinable_channels(&d, "Top");
+        assert_eq!(ch.len(), 1);
+        assert_eq!(ch[0], ("a0".into(), "o".into(), "b0".into(), 64));
+    }
+
+    #[test]
+    fn stage_heuristic() {
+        assert_eq!(stages_for_distance(0, 0), 0);
+        assert_eq!(stages_for_distance(1, 1), 1);
+        assert_eq!(stages_for_distance(3, 1), 2);
+        assert_eq!(stages_for_distance(4, 2), 3);
+    }
+
+    #[test]
+    fn rejects_input_handshake() {
+        let mut d = two_stage();
+        let err = insert_relay_station(&mut d, "Top", "b0", "i", 1, None, &mut PassContext::new())
+            .unwrap_err();
+        assert!(err.to_string().contains("not an output handshake"));
+    }
+}

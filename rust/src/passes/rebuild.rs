@@ -1,0 +1,440 @@
+//! Hierarchy Rebuild Pass (§3.3, Fig 10b).
+//!
+//! Converts a *leaf* Verilog module into a *grouped* module containing its
+//! extracted submodule instances plus an **aux module** holding all
+//! residual logic (always blocks, assigns, unknown-IP instances). The
+//! grouped module keeps the original name, ports and interfaces; every
+//! extracted connection is rerouted through a fresh wire between the
+//! submodule and a new flipped-direction aux port. Clock/reset
+//! connections stay as direct broadcast nets (handled by invariant-exempt
+//! clock distribution).
+
+use crate::ir::core::*;
+use crate::passes::manager::{Pass, PassContext};
+use crate::verilog::ast::{is_single_identifier, parse_literal};
+use crate::verilog::parser::parse_module;
+use crate::verilog::printer::print_module;
+use crate::verilog::rewriter::extract_aux_with_skip;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Rebuild one leaf module (by name) into a grouped module + aux.
+pub struct HierarchyRebuild {
+    pub target: String,
+}
+
+impl HierarchyRebuild {
+    pub fn new(target: impl Into<String>) -> Self {
+        HierarchyRebuild {
+            target: target.into(),
+        }
+    }
+}
+
+impl Pass for HierarchyRebuild {
+    fn name(&self) -> &'static str {
+        "hierarchy-rebuild"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        rebuild(design, &self.target, ctx)
+            .with_context(|| format!("rebuilding module '{}'", self.target))
+    }
+}
+
+/// Rebuild all leaf Verilog modules that instantiate known library
+/// modules, top-down, until a fixpoint (the "restructure large modules"
+/// step (b) of the integrated flow, §3.4).
+pub struct RebuildAll;
+
+impl Pass for RebuildAll {
+    fn name(&self) -> &'static str {
+        "hierarchy-rebuild-all"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        loop {
+            let candidate = design
+                .modules
+                .values()
+                .find(|m| is_rebuild_candidate(design, m))
+                .map(|m| m.name.clone());
+            match candidate {
+                Some(name) => rebuild(design, &name, ctx)
+                    .with_context(|| format!("rebuilding module '{name}'"))?,
+                None => return Ok(()),
+            }
+        }
+    }
+}
+
+fn is_rebuild_candidate(design: &Design, m: &Module) -> bool {
+    let Body::Leaf {
+        format: SourceFormat::Verilog,
+        source,
+    } = &m.body
+    else {
+        return false;
+    };
+    // Cheap textual pre-filter, then parse.
+    if !design
+        .modules
+        .keys()
+        .any(|k| k != &m.name && source.contains(k.as_str()))
+    {
+        return false;
+    }
+    let Ok(vm) = parse_module(source) else {
+        return false;
+    };
+    let has_known_child = vm.instances().any(|i| {
+        design
+            .modules
+            .get(&i.module)
+            .map(|t| t.name != m.name)
+            .unwrap_or(false)
+    });
+    has_known_child
+}
+
+pub fn rebuild(design: &mut Design, target: &str, ctx: &mut PassContext) -> Result<()> {
+    let module = design
+        .module(target)
+        .ok_or_else(|| anyhow!("module '{target}' not found"))?
+        .clone();
+    let Body::Leaf {
+        format: SourceFormat::Verilog,
+        source,
+    } = &module.body
+    else {
+        bail!("'{target}' is not a Verilog leaf module");
+    };
+    let vm = parse_module(source)?;
+
+    // Clock/reset identifiers on the parent: direct-connect those.
+    let clockish: Vec<String> = module
+        .interfaces
+        .iter()
+        .filter(|i| matches!(i, Interface::Clock { .. } | Interface::Reset { .. }))
+        .flat_map(|i| i.ports())
+        .map(|s| s.to_string())
+        .collect();
+
+    let lookup = |mname: &str, pname: &str| -> Option<(Dir, u32)> {
+        let m = design.module(mname)?;
+        if m.name == target {
+            return None; // no self-recursion
+        }
+        m.port(pname).map(|p| (p.dir, p.width))
+    };
+    // Identifier use counts across the module: a parent-port identifier
+    // used by exactly one connection (and no residual logic) can connect
+    // the submodule directly — no phantom aux feed-through.
+    let mut id_uses: std::collections::BTreeMap<String, usize> = Default::default();
+    {
+        use crate::verilog::ast::{expr_identifiers, VItem};
+        let mut bump = |ids: Vec<String>| {
+            for id in ids {
+                *id_uses.entry(id).or_default() += 1;
+            }
+        };
+        for item in &vm.items {
+            match item {
+                VItem::Assign(a) => {
+                    bump(expr_identifiers(&a.lhs));
+                    bump(expr_identifiers(&a.rhs));
+                }
+                VItem::Raw(r) => bump(expr_identifiers(r)),
+                VItem::Instance(i) => {
+                    for (_, e) in &i.conns {
+                        bump(expr_identifiers(e));
+                    }
+                }
+                VItem::Net(_) => {}
+            }
+        }
+    }
+    let parent_port_names: Vec<String> = module.ports.iter().map(|p| p.name.clone()).collect();
+    let skip = |_inst: &crate::verilog::ast::VInst, port: &str, expr: &str| -> bool {
+        let _ = port;
+        let e = expr.trim();
+        if !is_single_identifier(e) {
+            return false;
+        }
+        if clockish.iter().any(|c| c == e) {
+            return true;
+        }
+        // Single-use parent port: direct connection.
+        parent_port_names.iter().any(|p| p == e)
+            && id_uses.get(e).copied().unwrap_or(0) == 1
+    };
+    let aux_name = design.fresh_module_name(&format!("{target}_aux"));
+    let mut split = extract_aux_with_skip(&vm, &aux_name, &lookup, &skip)?;
+    if split.extracted.is_empty() {
+        ctx.log(format!("rebuild {target}: no extractable instances"));
+        return Ok(());
+    }
+
+    // Parent ports consumed by a direct (skipped, non-clock) connection
+    // leave the aux entirely — otherwise the net would gain a third
+    // endpoint.
+    let direct_ports: std::collections::BTreeSet<String> = split
+        .extracted
+        .iter()
+        .flat_map(|e| e.bindings.iter())
+        .filter(|b| b.aux_port.is_empty())
+        .map(|b| b.expr.trim().to_string())
+        .filter(|e| {
+            parent_port_names.iter().any(|p| p == e) && !clockish.iter().any(|c| c == e)
+        })
+        .collect();
+    split.aux.ports.retain(|p| !direct_ports.contains(&p.name));
+
+    // Build the aux leaf module.
+    let mut aux = Module::leaf(&aux_name, SourceFormat::Verilog, print_module(&split.aux));
+    aux.ports = split
+        .aux
+        .ports
+        .iter()
+        .map(|p| Port::new(&p.name, p.dir, p.width))
+        .collect();
+    // Parent clock/reset interfaces also apply to the aux's copies.
+    for iface in &module.interfaces {
+        if matches!(iface, Interface::Clock { .. } | Interface::Reset { .. }) {
+            aux.interfaces.push(iface.clone());
+        }
+    }
+    aux.metadata
+        .insert("aux_of", crate::util::json::Json::str(target));
+
+    // Build the grouped module replacing the original leaf.
+    let mut grouped = Module::grouped(target);
+    grouped.ports = module.ports.clone();
+    grouped.interfaces = module.interfaces.clone();
+    grouped.metadata = module.metadata.clone();
+
+    // Aux instance: parent ports connect straight through (same names),
+    // except those consumed by direct submodule connections.
+    let mut aux_inst = Instance::new(format!("{aux_name}_inst"), &aux_name);
+    for p in &module.ports {
+        if !direct_ports.contains(&p.name) {
+            aux_inst.connect(&p.name, ConnExpr::id(&p.name));
+        }
+    }
+
+    let mut used_wires: std::collections::BTreeSet<String> =
+        grouped.ports.iter().map(|p| p.name.clone()).collect();
+
+    for e in &split.extracted {
+        let mut inst = Instance::new(&e.inst.name, &e.inst.module);
+        for b in &e.bindings {
+            if b.aux_port.is_empty() {
+                let expr = b.expr.trim();
+                if expr.is_empty() {
+                    inst.connect(&b.sub_port, ConnExpr::Open);
+                } else if clockish.iter().any(|c| c == expr)
+                    || parent_port_names.iter().any(|p| p == expr)
+                {
+                    // Direct clock/reset broadcast or single-use parent port.
+                    inst.connect(&b.sub_port, ConnExpr::id(expr));
+                } else if let Some((w, v)) = parse_literal(expr) {
+                    inst.connect(
+                        &b.sub_port,
+                        ConnExpr::Const {
+                            width: w.min(b.width),
+                            value: v,
+                        },
+                    );
+                } else {
+                    bail!(
+                        "unexpected skipped binding {}.{} = '{}'",
+                        e.inst.name,
+                        b.sub_port,
+                        expr
+                    );
+                }
+                continue;
+            }
+            // Fresh wire joining submodule port and aux port.
+            let mut wname = format!("w_{}", b.aux_port);
+            while used_wires.contains(&wname) {
+                wname.push('_');
+            }
+            used_wires.insert(wname.clone());
+            grouped.wires_mut().push(Wire {
+                name: wname.clone(),
+                width: b.width,
+            });
+            inst.connect(&b.sub_port, ConnExpr::id(&wname));
+            aux_inst.connect(&b.aux_port, ConnExpr::id(&wname));
+        }
+        grouped.instances_mut().push(inst);
+    }
+    grouped.instances_mut().push(aux_inst);
+
+    ctx.namemap.record("hierarchy-rebuild", target, &aux_name);
+    ctx.log(format!(
+        "rebuild {target}: extracted {} instances into grouped module + {aux_name}",
+        split.extracted.len()
+    ));
+
+    design.add(aux);
+    design.add(grouped); // replaces the leaf under the same name
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::LeafBuilder;
+    use crate::ir::validate;
+
+    /// The motivating LLM example of Fig 4a: Verilog top with InputLoader
+    /// (RTL), FIFO (RTL), Layers (HLS) + control logic in the body.
+    fn llm_design() -> Design {
+        let mut d = Design::new("LLM");
+        let input_loader = LeafBuilder::verilog_stub("InputLoader")
+            .clk_rst()
+            .handshake("o", Dir::Out, 64)
+            .build();
+        let fifo = LeafBuilder::verilog_stub("FIFO")
+            .clk_rst()
+            .handshake("I", Dir::In, 64)
+            .handshake("O", Dir::Out, 64)
+            .build();
+        let layers = LeafBuilder::verilog_stub("Layers")
+            .clk_rst()
+            .handshake("i", Dir::In, 64)
+            .handshake("o", Dir::Out, 32)
+            .build();
+        d.add(input_loader);
+        d.add(fifo);
+        d.add(layers);
+
+        let top_src = r#"
+module LLM (
+  input  wire ap_clk,
+  input  wire ap_rst_n,
+  output wire [31:0] out_data,
+  output wire out_vld,
+  input  wire out_rdy
+);
+  wire [63:0] a; wire a_v; wire a_r;
+  wire [63:0] b; wire b_v; wire b_r;
+  reg [3:0] ctr;
+  always @(posedge ap_clk) ctr <= ctr + 1;
+
+  InputLoader il (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+                  .o(a), .o_vld(a_v), .o_rdy(a_r));
+  FIFO fifo (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+             .I(a), .I_vld(a_v), .I_rdy(a_r),
+             .O(b), .O_vld(b_v), .O_rdy(b_r));
+  Layers layers (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+                 .i(b), .i_vld(b_v & ~ctr[3]), .i_rdy(b_r),
+                 .o(out_data), .o_vld(out_vld), .o_rdy(out_rdy));
+endmodule
+"#;
+        let mut top = Module::leaf("LLM", SourceFormat::Verilog, top_src);
+        top.ports = vec![
+            Port::new("ap_clk", Dir::In, 1),
+            Port::new("ap_rst_n", Dir::In, 1),
+            Port::new("out_data", Dir::Out, 32),
+            Port::new("out_vld", Dir::Out, 1),
+            Port::new("out_rdy", Dir::In, 1),
+        ];
+        top.interfaces = vec![
+            Interface::Clock {
+                port: "ap_clk".into(),
+            },
+            Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            },
+            Interface::Handshake {
+                name: "out".into(),
+                data: vec!["out_data".into()],
+                valid: "out_vld".into(),
+                ready: "out_rdy".into(),
+                clk: Some("ap_clk".into()),
+            },
+        ];
+        d.add(top);
+        d
+    }
+
+    #[test]
+    fn rebuild_produces_grouped_plus_aux() {
+        let mut d = llm_design();
+        let mut ctx = PassContext::new();
+        rebuild(&mut d, "LLM", &mut ctx).unwrap();
+        let top = d.module("LLM").unwrap();
+        assert!(top.is_grouped());
+        // 3 extracted + 1 aux instance.
+        assert_eq!(top.instances().len(), 4);
+        assert!(d.module("LLM_aux").unwrap().is_leaf());
+        validate::assert_clean(&d);
+    }
+
+    #[test]
+    fn clock_connects_directly_not_via_aux() {
+        let mut d = llm_design();
+        rebuild(&mut d, "LLM", &mut PassContext::new()).unwrap();
+        let top = d.module("LLM").unwrap();
+        let il = top.instance("il").unwrap();
+        assert_eq!(il.connection("ap_clk"), Some(&ConnExpr::id("ap_clk")));
+        // Aux has no il_ap_clk port.
+        assert!(d.module("LLM_aux").unwrap().port("il_ap_clk").is_none());
+    }
+
+    #[test]
+    fn complex_expression_lands_in_aux() {
+        let mut d = llm_design();
+        rebuild(&mut d, "LLM", &mut PassContext::new()).unwrap();
+        let aux = d.module("LLM_aux").unwrap();
+        let Body::Leaf { source, .. } = &aux.body else {
+            panic!()
+        };
+        // `.i_vld(b_v & ~ctr[3])` became an aux assign.
+        assert!(source.contains("assign layers_i_vld = b_v & ~ctr[3];"), "{source}");
+        // Residual always block survives.
+        assert!(source.contains("ctr <= ctr + 1"));
+    }
+
+    #[test]
+    fn grouped_ports_unchanged() {
+        let mut d = llm_design();
+        let before = d.module("LLM").unwrap().ports.clone();
+        rebuild(&mut d, "LLM", &mut PassContext::new()).unwrap();
+        assert_eq!(d.module("LLM").unwrap().ports, before);
+        assert_eq!(d.module("LLM").unwrap().interfaces.len(), 3);
+    }
+
+    #[test]
+    fn namemap_records_aux() {
+        let mut d = llm_design();
+        let mut ctx = PassContext::new();
+        rebuild(&mut d, "LLM", &mut ctx).unwrap();
+        assert_eq!(ctx.namemap.trace("LLM_aux"), "LLM");
+    }
+
+    #[test]
+    fn rebuild_all_reaches_fixpoint() {
+        let mut d = llm_design();
+        let mut ctx = PassContext::new();
+        RebuildAll.run(&mut d, &mut ctx).unwrap();
+        assert!(d.module("LLM").unwrap().is_grouped());
+        // Running again is a no-op.
+        let before = d.clone();
+        RebuildAll.run(&mut d, &mut ctx).unwrap();
+        assert_eq!(d, before);
+    }
+
+    #[test]
+    fn rebuild_via_pass_manager_with_drc() {
+        let mut d = llm_design();
+        let mut ctx = PassContext::new();
+        crate::passes::manager::PassManager::new()
+            .add(HierarchyRebuild::new("LLM"))
+            .run(&mut d, &mut ctx)
+            .unwrap();
+    }
+}

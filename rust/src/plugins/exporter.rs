@@ -1,0 +1,262 @@
+//! Design Exporter (§3.2): generate the final output from the IR for
+//! downstream EDA tools. Unchanged leaf modules are emitted with their
+//! original source intact; grouped modules are printed as structural
+//! Verilog; floorplan metadata becomes a constraints file (XDC-style
+//! pblock assignments).
+
+use crate::ir::core::*;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Exported artifact set: file name -> content.
+#[derive(Debug, Clone, Default)]
+pub struct ExportBundle {
+    pub files: BTreeMap<String, String>,
+}
+
+impl ExportBundle {
+    pub fn file(&self, name: &str) -> Option<&str> {
+        self.files.get(name).map(|s| s.as_str())
+    }
+
+    pub fn write_to_dir(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (name, content) in &self.files {
+            std::fs::write(dir.join(name), content)?;
+        }
+        Ok(())
+    }
+}
+
+/// Export the design: one Verilog file for the structural hierarchy
+/// (grouped modules), one per leaf source kind, plus constraints.
+pub fn export(design: &Design) -> Result<ExportBundle> {
+    let mut bundle = ExportBundle::default();
+    let mut structural = String::new();
+    let mut leaves = String::new();
+    let mut emitted_sources: std::collections::BTreeSet<&str> = Default::default();
+
+    for m in design.modules.values() {
+        match &m.body {
+            Body::Grouped { .. } => {
+                structural.push_str(&grouped_to_verilog(design, m)?);
+                structural.push('\n');
+            }
+            Body::Leaf { format, source } => match format {
+                SourceFormat::Verilog => {
+                    // Multiple IR modules may share one source file; emit
+                    // each distinct source once, verbatim.
+                    if emitted_sources.insert(source.as_str()) {
+                        leaves.push_str(source);
+                        if !source.ends_with('\n') {
+                            leaves.push('\n');
+                        }
+                        leaves.push('\n');
+                    }
+                }
+                SourceFormat::Vhdl => {
+                    bundle
+                        .files
+                        .insert(format!("{}.vhd", m.name), source.clone());
+                }
+                SourceFormat::Xci | SourceFormat::Xo => {
+                    bundle
+                        .files
+                        .insert(format!("{}.{}", m.name, format.as_str()), source.clone());
+                }
+                SourceFormat::Netlist | SourceFormat::Blackbox => {
+                    // Stub so the hierarchy elaborates; the netlist/binary
+                    // travels alongside.
+                    leaves.push_str(&crate::ir::builder::stub_verilog(&m.name, &m.ports));
+                    leaves.push('\n');
+                }
+            },
+        }
+    }
+    bundle.files.insert("design_top.v".into(), structural);
+    bundle.files.insert("design_leaves.v".into(), leaves);
+    bundle
+        .files
+        .insert("constraints.xdc".into(), constraints_xdc(design));
+    Ok(bundle)
+}
+
+/// Print a grouped module as structural Verilog.
+pub fn grouped_to_verilog(design: &Design, m: &Module) -> Result<String> {
+    let mut s = format!("module {} (\n", m.name);
+    for (i, p) in m.ports.iter().enumerate() {
+        let dir = match p.dir {
+            Dir::In => "input  wire",
+            Dir::Out => "output wire",
+            Dir::InOut => "inout  wire",
+        };
+        let range = if p.width > 1 {
+            format!("[{}:0] ", p.width - 1)
+        } else {
+            String::new()
+        };
+        let comma = if i + 1 < m.ports.len() { "," } else { "" };
+        s.push_str(&format!("  {dir} {range}{}{comma}\n", p.name));
+    }
+    s.push_str(");\n");
+    for w in m.wires() {
+        let range = if w.width > 1 {
+            format!("[{}:0] ", w.width - 1)
+        } else {
+            String::new()
+        };
+        s.push_str(&format!("  wire {range}{};\n", w.name));
+    }
+    for inst in m.instances() {
+        if design.module(&inst.module_name).is_none() {
+            bail!(
+                "instance '{}' references unknown module '{}'",
+                inst.instance_name,
+                inst.module_name
+            );
+        }
+        s.push_str(&format!("  {} {} (\n", inst.module_name, inst.instance_name));
+        for (i, c) in inst.connections.iter().enumerate() {
+            let v = match &c.value {
+                ConnExpr::Id(id) => id.clone(),
+                ConnExpr::Const { width, value } => format!("{width}'d{value}"),
+                ConnExpr::Open => String::new(),
+            };
+            let comma = if i + 1 < inst.connections.len() { "," } else { "" };
+            s.push_str(&format!("    .{}({v}){comma}\n", c.port));
+        }
+        s.push_str("  );\n");
+    }
+    s.push_str("endmodule\n");
+    Ok(s)
+}
+
+/// XDC-style pblock constraints from `floorplan` metadata on instances
+/// (hierarchical paths) and modules.
+pub fn constraints_xdc(design: &Design) -> String {
+    let mut s = String::from("# RapidStream IR floorplan constraints\n");
+    let mut emit = |path: &str, slot: &str| {
+        s.push_str(&format!(
+            "add_cells_to_pblock [get_pblocks {slot}] [get_cells {{{path}}}]\n"
+        ));
+    };
+    // Walk hierarchy from the top for instance paths.
+    fn walk(
+        design: &Design,
+        m: &Module,
+        prefix: &str,
+        emit: &mut dyn FnMut(&str, &str),
+    ) {
+        for inst in m.instances() {
+            let path = if prefix.is_empty() {
+                inst.instance_name.clone()
+            } else {
+                format!("{prefix}/{}", inst.instance_name)
+            };
+            if let Some(slot) = inst.metadata.get("floorplan").and_then(|f| f.as_str()) {
+                emit(&path, slot);
+            } else if let Some(sub) = design.module(&inst.module_name) {
+                if let Some(slot) = sub.metadata.get("floorplan").and_then(|f| f.as_str()) {
+                    emit(&path, slot);
+                }
+            }
+            if let Some(sub) = design.module(&inst.module_name) {
+                if sub.is_grouped() {
+                    walk(design, sub, &path, emit);
+                }
+            }
+        }
+    }
+    walk(design, design.top_module(), "", &mut emit);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::*;
+    use crate::util::json::Json;
+
+    fn sample() -> Design {
+        let a = LeafBuilder::verilog_stub("A")
+            .handshake("o", Dir::Out, 8)
+            .build();
+        let b = LeafBuilder::verilog_stub("B")
+            .handshake("i", Dir::In, 8)
+            .build();
+        let mut top = GroupedBuilder::new("Top")
+            .wire("d", 8)
+            .wire("d_vld", 1)
+            .wire("d_rdy", 1)
+            .inst("a0", "A", &[("o", "d"), ("o_vld", "d_vld"), ("o_rdy", "d_rdy")])
+            .inst("b0", "B", &[("i", "d"), ("i_vld", "d_vld"), ("i_rdy", "d_rdy")])
+            .build();
+        top.instances_mut()[0]
+            .metadata
+            .insert("floorplan", Json::str("SLOT_X0Y0"));
+        top.instances_mut()[1]
+            .metadata
+            .insert("floorplan", Json::str("SLOT_X1Y2"));
+        let mut d = Design::new("Top");
+        d.add(a);
+        d.add(b);
+        d.add(top);
+        d
+    }
+
+    #[test]
+    fn export_produces_reimportable_verilog() {
+        let d = sample();
+        let bundle = export(&d).unwrap();
+        let top_v = bundle.file("design_top.v").unwrap();
+        let leaves_v = bundle.file("design_leaves.v").unwrap();
+        // Both files parse.
+        let ftop = crate::verilog::parser::parse_file(top_v).unwrap();
+        let fleaves = crate::verilog::parser::parse_file(leaves_v).unwrap();
+        assert_eq!(ftop.modules.len(), 1);
+        assert_eq!(fleaves.modules.len(), 2);
+        // The structural module instantiates both leaves.
+        let top = ftop.module("Top").unwrap();
+        assert_eq!(top.instances().count(), 2);
+    }
+
+    #[test]
+    fn leaf_sources_verbatim() {
+        let d = sample();
+        let bundle = export(&d).unwrap();
+        let Body::Leaf { source, .. } = &d.module("A").unwrap().body else {
+            panic!()
+        };
+        assert!(bundle.file("design_leaves.v").unwrap().contains(source.as_str()));
+    }
+
+    #[test]
+    fn constraints_contain_pblocks() {
+        let d = sample();
+        let xdc = constraints_xdc(&d);
+        assert!(xdc.contains("add_cells_to_pblock [get_pblocks SLOT_X0Y0] [get_cells {a0}]"));
+        assert!(xdc.contains("SLOT_X1Y2"));
+    }
+
+    #[test]
+    fn open_and_const_connections_rendered() {
+        let mut d = sample();
+        let top = d.module_mut("Top").unwrap();
+        top.instances_mut()[0].connect("dbg", ConnExpr::Open);
+        top.instances_mut()[0].connect("cfg", ConnExpr::Const { width: 4, value: 5 });
+        // (A doesn't have these ports; rendering shouldn't care.)
+        let s = grouped_to_verilog(&d, d.module("Top").unwrap()).unwrap();
+        assert!(s.contains(".dbg()"));
+        assert!(s.contains(".cfg(4'd5)"));
+    }
+
+    #[test]
+    fn unknown_module_ref_fails() {
+        let mut d = sample();
+        d.module_mut("Top")
+            .unwrap()
+            .instances_mut()
+            .push(Instance::new("g", "Ghost"));
+        assert!(export(&d).is_err());
+    }
+}

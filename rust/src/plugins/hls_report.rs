@@ -1,0 +1,178 @@
+//! Vitis-HLS report importer (§3.2, "Vitis HLS provides interface
+//! information in report files"). Our surrogate consumes the JSON shape
+//! the benchmark generators fabricate — the same content a
+//! `csynth.xml` / `*_csynth.rpt` pair carries:
+//!
+//! ```json
+//! {
+//!   "modules": {
+//!     "Layer1": {
+//!       "resource": {"LUT": 52000, "FF": 61000, "BRAM": 48, "DSP": 256, "URAM": 8},
+//!       "timing": {"internal_ns": 3.1},
+//!       "interfaces": [
+//!         {"type": "handshake", "name": "i",
+//!          "data": ["i"], "valid": "i_vld", "ready": "i_rdy"}
+//!       ]
+//!     }
+//!   }
+//! }
+//! ```
+
+use crate::ir::core::*;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Apply an HLS report to a design: resource/timing metadata and missing
+/// interface info for every module the report mentions. Returns the
+/// number of modules annotated.
+pub fn apply_report(design: &mut Design, report: &str) -> Result<usize> {
+    let j = Json::parse(report).map_err(|e| anyhow!("hls report: {e}"))?;
+    let mods = j
+        .at("modules")
+        .and_then(|m| m.as_obj())
+        .ok_or_else(|| anyhow!("hls report missing 'modules'"))?;
+    let mut annotated = 0;
+    for (name, info) in mods.iter() {
+        let Some(m) = design.module_mut(name) else {
+            continue;
+        };
+        if let Some(r) = info.at("resource") {
+            m.metadata.insert("resource", r.clone());
+        }
+        if let Some(t) = info.at("timing") {
+            m.metadata.insert("timing", t.clone());
+        }
+        if let Some(ifaces) = info.at("interfaces").and_then(|i| i.as_arr()) {
+            for ij in ifaces {
+                let kind = ij.at("type").and_then(|t| t.as_str()).unwrap_or("");
+                match kind {
+                    "handshake" => {
+                        let valid = ij
+                            .at("valid")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("handshake missing valid"))?;
+                        if m.interface_of(valid).is_some() {
+                            continue;
+                        }
+                        m.interfaces.push(Interface::Handshake {
+                            name: ij
+                                .at("name")
+                                .and_then(|n| n.as_str())
+                                .unwrap_or("hs")
+                                .to_string(),
+                            data: ij
+                                .at("data")
+                                .and_then(|d| d.as_arr())
+                                .map(|a| {
+                                    a.iter()
+                                        .filter_map(|v| v.as_str().map(String::from))
+                                        .collect()
+                                })
+                                .unwrap_or_default(),
+                            valid: valid.to_string(),
+                            ready: ij
+                                .at("ready")
+                                .and_then(|r| r.as_str())
+                                .ok_or_else(|| anyhow!("handshake missing ready"))?
+                                .to_string(),
+                            clk: None,
+                        });
+                    }
+                    "clock" => {
+                        if let Some(p) = ij.at("port").and_then(|p| p.as_str()) {
+                            if m.interface_of(p).is_none() {
+                                m.interfaces.push(Interface::Clock { port: p.into() });
+                            }
+                        }
+                    }
+                    "reset" => {
+                        if let Some(p) = ij.at("port").and_then(|p| p.as_str()) {
+                            if m.interface_of(p).is_none() {
+                                m.interfaces.push(Interface::Reset {
+                                    port: p.into(),
+                                    active_high: ij
+                                        .at("active_high")
+                                        .and_then(|a| a.as_bool())
+                                        .unwrap_or(true),
+                                });
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        annotated += 1;
+    }
+    Ok(annotated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::LeafBuilder;
+
+    #[test]
+    fn report_annotates_matching_modules() {
+        let mut d = Design::new("L1");
+        d.add(
+            LeafBuilder::verilog_stub("L1")
+                .port("i", Dir::In, 64)
+                .port("i_vld", Dir::In, 1)
+                .port("i_rdy", Dir::Out, 1)
+                .build(),
+        );
+        let report = r#"{
+          "modules": {
+            "L1": {
+              "resource": {"LUT": 52000, "FF": 61000, "BRAM": 48, "DSP": 256, "URAM": 8},
+              "timing": {"internal_ns": 3.1},
+              "interfaces": [
+                {"type": "handshake", "name": "i", "data": ["i"],
+                 "valid": "i_vld", "ready": "i_rdy"}
+              ]
+            },
+            "NotInDesign": {"resource": {"LUT": 1}}
+          }
+        }"#;
+        let n = apply_report(&mut d, report).unwrap();
+        assert_eq!(n, 1);
+        let m = d.module("L1").unwrap();
+        assert_eq!(
+            crate::ir::builder::module_resources(m).unwrap().dsp,
+            256.0
+        );
+        assert_eq!(m.interface_of("i").unwrap().kind(), "handshake");
+        assert_eq!(
+            m.metadata
+                .get("timing")
+                .and_then(|t| t.at("internal_ns"))
+                .and_then(|v| v.as_f64()),
+            Some(3.1)
+        );
+    }
+
+    #[test]
+    fn existing_interfaces_kept() {
+        let mut d = Design::new("L1");
+        d.add(
+            LeafBuilder::verilog_stub("L1")
+                .handshake("i", Dir::In, 64)
+                .build(),
+        );
+        let report = r#"{"modules": {"L1": {"interfaces": [
+          {"type": "handshake", "name": "dup", "data": ["i"],
+           "valid": "i_vld", "ready": "i_rdy"}]}}}"#;
+        apply_report(&mut d, report).unwrap();
+        let m = d.module("L1").unwrap();
+        assert_eq!(m.interfaces.len(), 1);
+        assert_eq!(m.interface_of("i").unwrap().name(), "i");
+    }
+
+    #[test]
+    fn bad_report_rejected() {
+        let mut d = Design::new("X");
+        assert!(apply_report(&mut d, "oops").is_err());
+        assert!(apply_report(&mut d, "{}").is_err());
+    }
+}

@@ -1,0 +1,455 @@
+//! Interface rules (§3.2 / Figure 11): regex-based rules that attach
+//! interface information to modules whose sources carry none — the
+//! mechanism that onboards Dynamatic, Catapult HLS and Intel HLS RTL with
+//! a handful of rules each (Table 1).
+//!
+//! ```text
+//! add_reset(module=".*", port="rst|reset", active="high")
+//! add_handshake(module=top, pattern="{bundle}_{role}",
+//!               role={ready:"ready", valid:"valid", data:"in|out"})
+//! ```
+
+use crate::ir::core::*;
+use anyhow::{anyhow, Result};
+use regex::Regex;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+enum Rule {
+    Clock {
+        module: String,
+        port: String,
+    },
+    Reset {
+        module: String,
+        port: String,
+        active_high: bool,
+    },
+    Handshake {
+        module: String,
+        /// Port-name pattern with `{bundle}` and `{role}` placeholders.
+        pattern: String,
+        role_valid: String,
+        role_ready: String,
+        role_data: String,
+    },
+    Feedforward {
+        module: String,
+        port: String,
+    },
+    NonPipeline {
+        module: String,
+        port: String,
+    },
+}
+
+/// A set of interface rules, applied to a whole design.
+#[derive(Debug, Clone, Default)]
+pub struct RuleSet {
+    rules: Vec<Rule>,
+}
+
+impl RuleSet {
+    pub fn new() -> RuleSet {
+        RuleSet::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn add_clock(mut self, module: &str, port: &str) -> Self {
+        self.rules.push(Rule::Clock {
+            module: module.into(),
+            port: port.into(),
+        });
+        self
+    }
+
+    pub fn add_reset(mut self, module: &str, port: &str, active: &str) -> Self {
+        self.rules.push(Rule::Reset {
+            module: module.into(),
+            port: port.into(),
+            active_high: active != "low",
+        });
+        self
+    }
+
+    /// `pattern` uses `{bundle}` / `{role}` placeholders; `roles` maps the
+    /// role part onto valid/ready/data regexes.
+    pub fn add_handshake(
+        mut self,
+        module: &str,
+        pattern: &str,
+        valid: &str,
+        ready: &str,
+        data: &str,
+    ) -> Self {
+        self.rules.push(Rule::Handshake {
+            module: module.into(),
+            pattern: pattern.into(),
+            role_valid: valid.into(),
+            role_ready: ready.into(),
+            role_data: data.into(),
+        });
+        self
+    }
+
+    pub fn add_feedforward(mut self, module: &str, port: &str) -> Self {
+        self.rules.push(Rule::Feedforward {
+            module: module.into(),
+            port: port.into(),
+        });
+        self
+    }
+
+    pub fn add_nonpipeline(mut self, module: &str, port: &str) -> Self {
+        self.rules.push(Rule::NonPipeline {
+            module: module.into(),
+            port: port.into(),
+        });
+        self
+    }
+
+    /// Apply all rules to every matching module of the design. Ports
+    /// already covered by an interface are never re-covered. Returns the
+    /// number of interfaces created.
+    pub fn apply(&self, design: &mut Design) -> Result<usize> {
+        let mut created = 0;
+        let names: Vec<String> = design.modules.keys().cloned().collect();
+        for rule in &self.rules {
+            let module_re = full_match(rule_module(rule))?;
+            for name in &names {
+                if !module_re.is_match(name) {
+                    continue;
+                }
+                let m = design.module_mut(name).unwrap();
+                created += apply_rule(rule, m)?;
+            }
+        }
+        Ok(created)
+    }
+}
+
+fn rule_module(r: &Rule) -> &str {
+    match r {
+        Rule::Clock { module, .. }
+        | Rule::Reset { module, .. }
+        | Rule::Handshake { module, .. }
+        | Rule::Feedforward { module, .. }
+        | Rule::NonPipeline { module, .. } => module,
+    }
+}
+
+fn full_match(pat: &str) -> Result<Regex> {
+    Regex::new(&format!("^(?:{pat})$")).map_err(|e| anyhow!("bad regex '{pat}': {e}"))
+}
+
+fn apply_rule(rule: &Rule, m: &mut Module) -> Result<usize> {
+    let mut created = 0;
+    match rule {
+        Rule::Clock { port, .. } => {
+            let re = full_match(port)?;
+            let hits: Vec<String> = uncovered(m)
+                .into_iter()
+                .filter(|p| re.is_match(p))
+                .collect();
+            for p in hits {
+                m.interfaces.push(Interface::Clock { port: p });
+                created += 1;
+            }
+        }
+        Rule::Reset {
+            port, active_high, ..
+        } => {
+            let re = full_match(port)?;
+            let hits: Vec<String> = uncovered(m)
+                .into_iter()
+                .filter(|p| re.is_match(p))
+                .collect();
+            for p in hits {
+                m.interfaces.push(Interface::Reset {
+                    port: p,
+                    active_high: *active_high,
+                });
+                created += 1;
+            }
+        }
+        Rule::Feedforward { port, .. } | Rule::NonPipeline { port, .. } => {
+            let re = full_match(port)?;
+            let hits: Vec<String> = uncovered(m)
+                .into_iter()
+                .filter(|p| re.is_match(p))
+                .collect();
+            for p in hits {
+                m.interfaces.push(match rule {
+                    Rule::Feedforward { .. } => Interface::Feedforward {
+                        name: p.clone(),
+                        ports: vec![p],
+                    },
+                    _ => Interface::NonPipeline {
+                        name: p.clone(),
+                        ports: vec![p],
+                    },
+                });
+                created += 1;
+            }
+        }
+        Rule::Handshake {
+            pattern,
+            role_valid,
+            role_ready,
+            role_data,
+            ..
+        } => {
+            created += apply_handshake_pattern(m, pattern, role_valid, role_ready, role_data)?;
+        }
+    }
+    Ok(created)
+}
+
+fn uncovered(m: &Module) -> Vec<String> {
+    m.uncovered_ports()
+        .iter()
+        .map(|p| p.name.clone())
+        .collect()
+}
+
+/// Shared with the pragma plugin: group ports by `{bundle}` and classify
+/// the `{role}` part, then emit one handshake (or feedforward fallback)
+/// interface per bundle.
+///
+/// Two-pass matching handles separator-free patterns like Figure 9's
+/// `m_axi_{bundle}{role}`: valid/ready roles are anchored first (their
+/// regexes are specific, so they uniquely determine the bundle names),
+/// then data ports prefer the longest already-known bundle prefix
+/// (`m_axi_AWADDR` → bundle `AW`, not `A`).
+pub fn apply_handshake_pattern(
+    m: &mut Module,
+    pattern: &str,
+    role_valid: &str,
+    role_ready: &str,
+    role_data: &str,
+) -> Result<usize> {
+    let make_re = |role_pat: &str| -> Result<Regex> {
+        let src = regex::escape(pattern)
+            .replace(r"\{bundle\}", "(?P<bundle>.*?)")
+            .replace(r"\{role\}", &format!("(?P<role>(?:{role_pat}))"));
+        Regex::new(&format!("^{src}$")).map_err(|e| anyhow!("bad pattern '{pattern}': {e}"))
+    };
+    let bundle_re = |bundle: &str, role_pat: &str| -> Result<Regex> {
+        let src = regex::escape(pattern)
+            .replace(r"\{bundle\}", &regex::escape(bundle))
+            .replace(r"\{role\}", &format!("(?:{role_pat})"));
+        Regex::new(&format!("^{src}$")).map_err(|e| anyhow!("bad pattern '{pattern}': {e}"))
+    };
+    let re_valid = make_re(role_valid)?;
+    let re_ready = make_re(role_ready)?;
+    let re_data = make_re(role_data)?;
+
+    #[derive(Default)]
+    struct Bundle {
+        data: Vec<String>,
+        valid: Option<String>,
+        ready: Option<String>,
+    }
+    let mut bundles: BTreeMap<String, Bundle> = BTreeMap::new();
+    let ports = uncovered(m);
+
+    // Pass 1: valid/ready define the bundles.
+    let mut rest: Vec<String> = Vec::new();
+    for pname in ports {
+        let vb = re_valid
+            .captures(&pname)
+            .map(|c| c.name("bundle").map(|b| b.as_str()).unwrap_or("").to_string());
+        let rb = re_ready
+            .captures(&pname)
+            .map(|c| c.name("bundle").map(|b| b.as_str()).unwrap_or("").to_string());
+        if let Some(bundle) = vb {
+            bundles.entry(bundle).or_default().valid = Some(pname);
+        } else if let Some(bundle) = rb {
+            bundles.entry(bundle).or_default().ready = Some(pname);
+        } else {
+            rest.push(pname);
+        }
+    }
+    // Pass 2: data ports prefer the longest known bundle.
+    let mut known: Vec<String> = bundles.keys().cloned().collect();
+    known.sort_by_key(|b| std::cmp::Reverse(b.len()));
+    'port: for pname in rest {
+        for b in &known {
+            if bundle_re(b, role_data)?.is_match(&pname) {
+                bundles.get_mut(b).unwrap().data.push(pname);
+                continue 'port;
+            }
+        }
+        if let Some(caps) = re_data.captures(&pname) {
+            let bundle = caps
+                .name("bundle")
+                .map(|b| b.as_str().to_string())
+                .unwrap_or_default();
+            bundles.entry(bundle).or_default().data.push(pname);
+        }
+    }
+
+    let mut created = 0;
+    for (bname, b) in bundles {
+        // Unique interface name within the module (pragma fallback
+        // bundles may otherwise collide on "hs").
+        let mut bname = if bname.is_empty() { "hs".to_string() } else { bname };
+        while m.interfaces.iter().any(|i| i.name() == bname) {
+            bname.push('_');
+        }
+        match (&b.valid, &b.ready) {
+            (Some(v), Some(r)) => {
+                m.interfaces.push(Interface::Handshake {
+                    name: bname,
+                    data: b.data,
+                    valid: v.clone(),
+                    ready: r.clone(),
+                    clk: None,
+                });
+                created += 1;
+            }
+            _ if !b.data.is_empty() => {
+                // Data without a full handshake: feedforward bundle (the
+                // stray valid/ready ports, if any, ride along so they do
+                // not end up uncovered).
+                let mut ports = b.data;
+                ports.extend(b.valid);
+                ports.extend(b.ready);
+                m.interfaces.push(Interface::Feedforward {
+                    name: bname,
+                    ports,
+                });
+                created += 1;
+            }
+            _ => {}
+        }
+    }
+    Ok(created)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::LeafBuilder;
+
+    /// Dynamatic-style elastic module: consistent `{bundle}_{role}` names.
+    fn dynamatic_module() -> Module {
+        LeafBuilder::verilog_stub("fir")
+            .port("clk", Dir::In, 1)
+            .port("rst", Dir::In, 1)
+            .port("in0_data", Dir::In, 32)
+            .port("in0_valid", Dir::In, 1)
+            .port("in0_ready", Dir::Out, 1)
+            .port("out0_data", Dir::Out, 32)
+            .port("out0_valid", Dir::Out, 1)
+            .port("out0_ready", Dir::In, 1)
+            .build()
+    }
+
+    fn dynamatic_rules() -> RuleSet {
+        RuleSet::new()
+            .add_clock(".*", "clk|clock")
+            .add_reset(".*", "rst|reset", "high")
+            .add_handshake(".*", "{bundle}_{role}", "valid", "ready", "data|in|out")
+    }
+
+    #[test]
+    fn dynamatic_handshakes_detected() {
+        let mut d = Design::new("fir");
+        d.add(dynamatic_module());
+        let n = dynamatic_rules().apply(&mut d).unwrap();
+        assert_eq!(n, 4); // clk, rst, in0, out0
+        let m = d.module("fir").unwrap();
+        assert_eq!(m.interface_of("in0_data").unwrap().kind(), "handshake");
+        assert_eq!(m.interface_of("out0_ready").unwrap().kind(), "handshake");
+        assert_eq!(m.interface_of("clk").unwrap().kind(), "clock");
+        assert!(m.uncovered_ports().is_empty());
+    }
+
+    #[test]
+    fn module_scoping_respected() {
+        let mut d = Design::new("top");
+        d.add(dynamatic_module());
+        let mut other = dynamatic_module();
+        other.name = "top".into();
+        d.add(other);
+        let rules = RuleSet::new().add_handshake("fir", "{bundle}_{role}", "valid", "ready", ".*");
+        rules.apply(&mut d).unwrap();
+        assert!(d.module("fir").unwrap().interface_of("in0_data").is_some());
+        assert!(d.module("top").unwrap().interface_of("in0_data").is_none());
+    }
+
+    #[test]
+    fn existing_interfaces_not_overwritten() {
+        let mut d = Design::new("fir");
+        let mut m = dynamatic_module();
+        m.interfaces.push(Interface::NonPipeline {
+            name: "pin".into(),
+            ports: vec!["in0_data".into(), "in0_valid".into(), "in0_ready".into()],
+        });
+        d.add(m);
+        dynamatic_rules().apply(&mut d).unwrap();
+        let m = d.module("fir").unwrap();
+        assert_eq!(m.interface_of("in0_data").unwrap().name(), "pin");
+        // out0 still picked up as handshake.
+        assert_eq!(m.interface_of("out0_data").unwrap().kind(), "handshake");
+    }
+
+    #[test]
+    fn partial_bundle_becomes_feedforward() {
+        let mut d = Design::new("m");
+        d.add(
+            LeafBuilder::verilog_stub("m")
+                .port("cfg_data", Dir::In, 16)
+                .build(),
+        );
+        RuleSet::new()
+            .add_handshake(".*", "{bundle}_{role}", "valid", "ready", "data")
+            .apply(&mut d)
+            .unwrap();
+        assert_eq!(
+            d.module("m").unwrap().interface_of("cfg_data").unwrap().kind(),
+            "feedforward"
+        );
+    }
+
+    #[test]
+    fn axi_style_pattern() {
+        // Fig 9: pattern=m_axi_{bundle}{role}, VALID/READY suffixes.
+        let mut d = Design::new("InputLoader");
+        d.add(
+            LeafBuilder::verilog_stub("InputLoader")
+                .port("m_axi_AWVALID", Dir::Out, 1)
+                .port("m_axi_AWREADY", Dir::In, 1)
+                .port("m_axi_AWADDR", Dir::Out, 64)
+                .port("m_axi_WVALID", Dir::Out, 1)
+                .port("m_axi_WREADY", Dir::In, 1)
+                .port("m_axi_WDATA", Dir::Out, 512)
+                .build(),
+        );
+        RuleSet::new()
+            .add_handshake(".*", "m_axi_{bundle}{role}", "VALID", "READY", ".*")
+            .apply(&mut d)
+            .unwrap();
+        let m = d.module("InputLoader").unwrap();
+        let aw = m.interface_of("m_axi_AWVALID").unwrap();
+        assert_eq!(aw.kind(), "handshake");
+        assert!(aw.ports().contains(&"m_axi_AWADDR"));
+        assert!(!aw.ports().contains(&"m_axi_WDATA"));
+        assert!(m.interface_of("m_axi_WDATA").is_some());
+    }
+
+    #[test]
+    fn bad_regex_reported() {
+        let mut d = Design::new("x");
+        d.add(LeafBuilder::verilog_stub("x").build());
+        assert!(RuleSet::new().add_clock(".*", "(").apply(&mut d).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Leaf Module Importer (§3.2): builds IR leaf modules from design
+//! sources. "To maintain the design integrity, the source code or its
+//! binary is directly embedded in the IR."
+
+use crate::ir::core::*;
+use crate::verilog::parser::parse_file;
+use anyhow::{anyhow, Result};
+
+/// Import every module of a Verilog source as leaf modules (one IR module
+/// per Verilog module; the source text embedded verbatim in each).
+pub fn import_verilog(source: &str) -> Result<Vec<Module>> {
+    let file = parse_file(source)?;
+    if file.modules.is_empty() {
+        return Err(anyhow!("no modules found in source"));
+    }
+    let mut out = Vec::new();
+    for vm in &file.modules {
+        let mut m = Module::leaf(&vm.name, SourceFormat::Verilog, source);
+        m.ports = vm
+            .ports
+            .iter()
+            .map(|p| Port::new(&p.name, p.dir, p.width))
+            .collect();
+        out.push(m);
+    }
+    Ok(out)
+}
+
+/// Import a set of Verilog sources into a design with the given top.
+/// Pragma comments in each source are applied (see
+/// [`crate::plugins::pragma`]).
+pub fn import_design(top: &str, sources: &[&str]) -> Result<Design> {
+    let mut d = Design::new(top);
+    for src in sources {
+        for mut m in import_verilog(src)? {
+            crate::plugins::pragma::apply_pragmas(&mut m, src)?;
+            d.add(m);
+        }
+    }
+    if d.module(top).is_none() {
+        return Err(anyhow!("top module '{top}' not found in sources"));
+    }
+    Ok(d)
+}
+
+/// Import a VHDL entity via its signature (the paper routes VHDL through
+/// "transforming module signatures into a Verilog stub file using EDA
+/// tools, followed by the Verilog importer" — our surrogate parses the
+/// entity/port declaration directly and embeds the VHDL verbatim).
+pub fn import_vhdl(source: &str) -> Result<Module> {
+    let lower = source.to_lowercase();
+    let ent_pos = lower
+        .find("entity ")
+        .ok_or_else(|| anyhow!("no entity declaration"))?;
+    let after = &source[ent_pos + 7..];
+    let name: String = after
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    let mut m = Module::leaf(&name, SourceFormat::Vhdl, source);
+    // port ( name : in|out std_logic[_vector(msb downto lsb)] ; ... );
+    if let Some(pstart) = lower.find("port") {
+        let body = &source[pstart..];
+        let open = body.find('(').ok_or_else(|| anyhow!("bad port clause"))?;
+        // find matching close paren
+        let mut depth = 0usize;
+        let mut end = open;
+        for (i, c) in body.char_indices().skip(open) {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = i;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let ports_text = &body[open + 1..end];
+        for decl in ports_text.split(';') {
+            let Some((names, ty)) = decl.split_once(':') else {
+                continue;
+            };
+            let ty_l = ty.trim().to_lowercase();
+            let dir = if ty_l.starts_with("inout") {
+                Dir::InOut
+            } else if ty_l.starts_with("in") {
+                Dir::In
+            } else if ty_l.starts_with("out") {
+                Dir::Out
+            } else {
+                continue;
+            };
+            let width = if let Some(dt) = ty_l.find("downto") {
+                // (msb downto lsb)
+                let before: String = ty_l[..dt]
+                    .chars()
+                    .rev()
+                    .skip_while(|c| c.is_whitespace())
+                    .take_while(|c| c.is_ascii_digit())
+                    .collect();
+                let msb: u32 = before.chars().rev().collect::<String>().parse().unwrap_or(0);
+                let after_dt: String = ty_l[dt + 6..]
+                    .chars()
+                    .skip_while(|c| c.is_whitespace())
+                    .take_while(|c| c.is_ascii_digit())
+                    .collect();
+                let lsb: u32 = after_dt.parse().unwrap_or(0);
+                msb - lsb + 1
+            } else {
+                1
+            };
+            for n in names.split(',') {
+                let n = n.trim();
+                if !n.is_empty() {
+                    m.ports.push(Port::new(n, dir, width));
+                }
+            }
+        }
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verilog_import_extracts_signature() {
+        let src = "module Loader (input wire clk, output wire [63:0] d);\nendmodule";
+        let ms = import_verilog(src).unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].name, "Loader");
+        assert_eq!(ms[0].port("d").unwrap().width, 64);
+        // Source embedded verbatim.
+        let Body::Leaf { source, .. } = &ms[0].body else {
+            panic!()
+        };
+        assert_eq!(*source, src);
+    }
+
+    #[test]
+    fn design_import_requires_top() {
+        let src = "module A(); endmodule";
+        assert!(import_design("Missing", &[src]).is_err());
+        assert!(import_design("A", &[src]).is_ok());
+    }
+
+    #[test]
+    fn vhdl_entity_import() {
+        let src = r#"
+library ieee;
+entity dyn_fifo is
+  port (
+    clk     : in  std_logic;
+    din     : in  std_logic_vector(31 downto 0);
+    dout    : out std_logic_vector(31 downto 0);
+    wr, rd  : in  std_logic
+  );
+end entity;
+architecture rtl of dyn_fifo is begin end rtl;
+"#;
+        let m = import_vhdl(src).unwrap();
+        assert_eq!(m.name, "dyn_fifo");
+        assert_eq!(m.port("din").unwrap().width, 32);
+        assert_eq!(m.port("dout").unwrap().dir, Dir::Out);
+        assert_eq!(m.port("wr").unwrap().width, 1);
+        assert!(matches!(
+            m.body,
+            Body::Leaf {
+                format: SourceFormat::Vhdl,
+                ..
+            }
+        ));
+    }
+}

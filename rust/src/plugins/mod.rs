@@ -1,0 +1,15 @@
+//! Utility plugins (§3.2): importers, analyzers, and exporters bridging
+//! the abstract IR and concrete design formats / EDA tools.
+
+pub mod exporter;
+pub mod hls_report;
+pub mod iface_rules;
+pub mod importer;
+pub mod platform;
+pub mod pragma;
+pub mod xci;
+pub mod xo;
+
+pub use exporter::{export, ExportBundle};
+pub use iface_rules::RuleSet;
+pub use importer::{import_design, import_verilog, import_vhdl};

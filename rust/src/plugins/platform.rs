@@ -1,0 +1,94 @@
+//! Platform Analyzer (§3.2): "interfaces with vendor tools to collect
+//! data" such as per-module resource utilization. Our vendor surrogate is
+//! the synthesis estimator; this plugin runs it over every leaf module
+//! missing a `resource` entry and writes the result into metadata, so the
+//! floorplanner and the EDA simulator agree on one characterization.
+
+use crate::eda::synth::SynthEstimator;
+use crate::ir::core::*;
+use crate::timing::netlist::ModuleCharacteristics;
+use crate::util::json::{Json, JsonObj};
+
+/// Annotate every leaf module lacking resource/timing metadata.
+/// Returns the number of modules annotated.
+pub fn analyze(design: &mut Design) -> usize {
+    let est = SynthEstimator::default();
+    let mut annotated = 0;
+    let names: Vec<String> = design.modules.keys().cloned().collect();
+    for name in names {
+        let m = design.module_mut(&name).unwrap();
+        if !m.is_leaf() {
+            continue;
+        }
+        let mut touched = false;
+        if !m.metadata.contains_key("resource") {
+            let r = est.resources(m);
+            m.metadata
+                .insert("resource", crate::ir::builder::resources_to_json(&r));
+            touched = true;
+        }
+        if !m.metadata.contains_key("timing") {
+            let t = est.internal_ns(m);
+            let mut to = JsonObj::new();
+            to.insert("internal_ns", Json::num(t));
+            m.metadata.insert("timing", Json::Obj(to));
+            touched = true;
+        }
+        if touched {
+            annotated += 1;
+        }
+    }
+    annotated
+}
+
+/// Total resources of the design (sum over leaf instances, respecting the
+/// hierarchy) — what the "report_utilization" vendor call would return.
+pub fn total_resources(design: &Design) -> Resources {
+    let nl = crate::eda::vivado::elaborate(design);
+    nl.total_resources()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::*;
+
+    #[test]
+    fn annotates_only_missing() {
+        let mut d = Design::new("T");
+        d.add(
+            LeafBuilder::new(
+                "A",
+                SourceFormat::Verilog,
+                "module A(input clk);\nreg [31:0] x;\nalways @(posedge clk) x <= x + 1;\nendmodule",
+            )
+            .port("clk", Dir::In, 1)
+            .build(),
+        );
+        d.add(
+            LeafBuilder::verilog_stub("B")
+                .resource(Resources::new(7.0, 7.0, 0.0, 0.0, 0.0))
+                .build(),
+        );
+        d.add(Module::grouped("T"));
+        let n = analyze(&mut d);
+        assert_eq!(n, 2); // A gets both; B gets timing only
+        let a = d.module("A").unwrap();
+        assert!(crate::ir::builder::module_resources(a).unwrap().ff >= 32.0);
+        let b = d.module("B").unwrap();
+        assert_eq!(crate::ir::builder::module_resources(b).unwrap().lut, 7.0);
+        assert!(b.metadata.contains_key("timing"));
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut d = Design::new("T");
+        d.add(LeafBuilder::verilog_stub("A").build());
+        d.add(Module::grouped("T"));
+        analyze(&mut d);
+        let once = d.clone();
+        let n = analyze(&mut d);
+        assert_eq!(n, 0);
+        assert_eq!(d, once);
+    }
+}

@@ -1,0 +1,225 @@
+//! Source-comment pragmas (§3.2 / Figure 9): single-line comments inside
+//! a Verilog module that declare its interfaces, e.g.
+//!
+//! ```verilog
+//! // pragma handshake pattern=m_axi_{bundle}{role} \
+//! //        role.valid=VALID role.ready=READY role.data=.*
+//! // pragma clock port=ap_clk
+//! // pragma reset port=ap_rst_n active=low
+//! // pragma feedforward port=scalar_.*
+//! ```
+//!
+//! Line continuations with a trailing backslash are supported; key=value
+//! tokens are whitespace-separated.
+
+use crate::ir::core::*;
+use crate::plugins::iface_rules::apply_handshake_pattern;
+use anyhow::{anyhow, Result};
+use regex::Regex;
+use std::collections::BTreeMap;
+
+/// One parsed pragma: kind + key/value arguments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pragma {
+    pub kind: String,
+    pub args: BTreeMap<String, String>,
+}
+
+/// Extract `// pragma ...` comments (with backslash continuations).
+pub fn extract_pragmas(source: &str) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    let mut lines = source.lines().peekable();
+    while let Some(line) = lines.next() {
+        let t = line.trim_start();
+        let Some(body) = t.strip_prefix("//") else {
+            continue;
+        };
+        let body = body.trim_start();
+        let Some(rest) = body.strip_prefix("pragma ") else {
+            continue;
+        };
+        let mut text = rest.trim().to_string();
+        // Continuation: trailing backslash pulls in following comment lines.
+        while text.ends_with('\\') {
+            text.pop();
+            match lines.peek() {
+                Some(next) => {
+                    let nt = next.trim_start();
+                    if let Some(cb) = nt.strip_prefix("//") {
+                        text.push(' ');
+                        text.push_str(cb.trim());
+                        lines.next();
+                    } else {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+        let mut parts = text.split_whitespace();
+        let Some(kind) = parts.next() else { continue };
+        let mut args = BTreeMap::new();
+        for tok in parts {
+            if let Some((k, v)) = tok.split_once('=') {
+                args.insert(k.to_string(), v.to_string());
+            }
+        }
+        out.push(Pragma {
+            kind: kind.to_string(),
+            args,
+        });
+    }
+    out
+}
+
+/// Apply the pragmas found in `source` to module `m` (ports must already
+/// be imported). Unknown pragma kinds are ignored (other tools may own
+/// them); malformed known pragmas error.
+pub fn apply_pragmas(m: &mut Module, source: &str) -> Result<usize> {
+    let mut created = 0;
+    for p in extract_pragmas(source) {
+        match p.kind.as_str() {
+            "clock" => {
+                let port = req(&p, "port")?;
+                for pn in match_ports(m, port)? {
+                    m.interfaces.push(Interface::Clock { port: pn });
+                    created += 1;
+                }
+            }
+            "reset" => {
+                let port = req(&p, "port")?;
+                let active_high = p.args.get("active").map(|a| a != "low").unwrap_or(true);
+                for pn in match_ports(m, port)? {
+                    m.interfaces.push(Interface::Reset {
+                        port: pn,
+                        active_high,
+                    });
+                    created += 1;
+                }
+            }
+            "feedforward" => {
+                let port = req(&p, "port")?;
+                for pn in match_ports(m, port)? {
+                    m.interfaces.push(Interface::Feedforward {
+                        name: pn.clone(),
+                        ports: vec![pn],
+                    });
+                    created += 1;
+                }
+            }
+            "nonpipeline" => {
+                let port = req(&p, "port")?;
+                for pn in match_ports(m, port)? {
+                    m.interfaces.push(Interface::NonPipeline {
+                        name: pn.clone(),
+                        ports: vec![pn],
+                    });
+                    created += 1;
+                }
+            }
+            "handshake" => {
+                let pattern = req(&p, "pattern")?;
+                let valid = p.args.get("role.valid").map(|s| s.as_str()).unwrap_or("valid");
+                let ready = p.args.get("role.ready").map(|s| s.as_str()).unwrap_or("ready");
+                let data = p.args.get("role.data").map(|s| s.as_str()).unwrap_or(".*");
+                created += apply_handshake_pattern(m, pattern, valid, ready, data)?;
+            }
+            _ => {}
+        }
+    }
+    Ok(created)
+}
+
+fn req<'a>(p: &'a Pragma, key: &str) -> Result<&'a str> {
+    p.args
+        .get(key)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("pragma '{}' missing '{key}'", p.kind))
+}
+
+fn match_ports(m: &Module, pattern: &str) -> Result<Vec<String>> {
+    let re = Regex::new(&format!("^(?:{pattern})$"))
+        .map_err(|e| anyhow!("bad pragma regex '{pattern}': {e}"))?;
+    Ok(m.uncovered_ports()
+        .iter()
+        .filter(|p| re.is_match(&p.name))
+        .map(|p| p.name.clone())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::LeafBuilder;
+
+    const FIG9: &str = r#"
+module InputLoader (
+  output wire m_axi_AWVALID, input wire m_axi_AWREADY,
+  output wire m_axi_WVALID, input wire m_axi_WREADY,
+  output wire [63:0] m_axi_AWADDR
+);
+// pragma handshake pattern=m_axi_{bundle}{role} \
+//        role.valid=VALID role.ready=READY role.data=.*
+// pragma clock port=ap_clk
+endmodule
+"#;
+
+    #[test]
+    fn extracts_with_continuation() {
+        let ps = extract_pragmas(FIG9);
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].kind, "handshake");
+        assert_eq!(ps[0].args["role.valid"], "VALID");
+        assert_eq!(ps[0].args["pattern"], "m_axi_{bundle}{role}");
+        assert_eq!(ps[1].kind, "clock");
+    }
+
+    #[test]
+    fn fig9_example_applies() {
+        let mut m = LeafBuilder::verilog_stub("InputLoader")
+            .port("m_axi_AWVALID", Dir::Out, 1)
+            .port("m_axi_AWREADY", Dir::In, 1)
+            .port("m_axi_AWADDR", Dir::Out, 64)
+            .port("m_axi_WVALID", Dir::Out, 1)
+            .port("m_axi_WREADY", Dir::In, 1)
+            .build();
+        let n = apply_pragmas(&mut m, FIG9).unwrap();
+        assert_eq!(n, 2); // AW + W bundles (no ap_clk port present)
+        assert_eq!(m.interface_of("m_axi_AWADDR").unwrap().kind(), "handshake");
+        assert!(m.uncovered_ports().is_empty());
+    }
+
+    #[test]
+    fn reset_active_low() {
+        let mut m = LeafBuilder::verilog_stub("M")
+            .port("ap_rst_n", Dir::In, 1)
+            .build();
+        apply_pragmas(&mut m, "// pragma reset port=ap_rst_n active=low\nmodule M(); endmodule")
+            .unwrap();
+        assert!(matches!(
+            m.interfaces[0],
+            Interface::Reset {
+                active_high: false,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn unknown_pragmas_ignored() {
+        let mut m = LeafBuilder::verilog_stub("M").build();
+        let n = apply_pragmas(&mut m, "// pragma synthesis_off foo=bar").unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn malformed_known_pragma_errors() {
+        let mut m = LeafBuilder::verilog_stub("M").build();
+        assert!(apply_pragmas(&mut m, "// pragma clock").is_err());
+    }
+
+    #[test]
+    fn non_pragma_comments_skipped() {
+        assert!(extract_pragmas("// just a comment\n/* pragma x */").is_empty());
+    }
+}

@@ -1,0 +1,156 @@
+//! Vitis Xilinx Object (XO) container — JSON-manifest surrogate.
+//!
+//! A real .xo is a zip holding a kernel's RTL plus kernel.xml describing
+//! its AXI interfaces. The KNN benchmark (§4.4) is ingested this way:
+//! "RIR directly ingests the Vitis-packed Xilinx Object (XO) files for
+//! optimization and outputs the optimized design in the same format,
+//! acting as a transparent plugin to the Vitis framework." Our manifest:
+//!
+//! ```json
+//! { "kernel": "krnl_knn", "sources": ["<verilog>"],
+//!   "top": "krnl_knn", "interfaces": {...iface rules applied after...} }
+//! ```
+
+use crate::ir::core::*;
+use crate::util::json::{Json, JsonObj};
+use anyhow::{anyhow, Result};
+
+/// Import an XO manifest: every contained Verilog module becomes a leaf;
+/// the kernel top is returned first. The manifest itself is embedded in
+/// the kernel-top module so the exporter can reproduce the container.
+pub fn import_xo(manifest: &str) -> Result<Vec<Module>> {
+    let j = Json::parse(manifest).map_err(|e| anyhow!("xo manifest: {e}"))?;
+    let kernel = j
+        .at("kernel")
+        .and_then(|k| k.as_str())
+        .ok_or_else(|| anyhow!("xo missing kernel"))?;
+    let sources = j
+        .at("sources")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("xo missing sources"))?;
+    let mut out = Vec::new();
+    for src in sources {
+        let text = src
+            .as_str()
+            .ok_or_else(|| anyhow!("xo source must be a string"))?;
+        for mut m in crate::plugins::importer::import_verilog(text)? {
+            crate::plugins::pragma::apply_pragmas(&mut m, text)?;
+            if m.name == kernel {
+                m.metadata.insert("xo_manifest", Json::str(manifest));
+                m.metadata.insert("xo_kernel", Json::Bool(true));
+            }
+            out.push(m);
+        }
+    }
+    if !out.iter().any(|m| m.name == kernel) {
+        return Err(anyhow!("kernel '{kernel}' not found in xo sources"));
+    }
+    out.sort_by_key(|m| if m.name == kernel { 0 } else { 1 });
+    Ok(out)
+}
+
+/// Export a kernel subtree back into an XO manifest ("outputs the
+/// optimized design in the same format").
+pub fn export_xo(design: &Design, kernel: &str) -> Result<String> {
+    let top = design
+        .module(kernel)
+        .ok_or_else(|| anyhow!("kernel '{kernel}' not in design"))?;
+    // Collect the kernel's reachable modules.
+    let mut live = std::collections::BTreeSet::new();
+    let mut stack = vec![kernel.to_string()];
+    while let Some(n) = stack.pop() {
+        if !live.insert(n.clone()) {
+            continue;
+        }
+        if let Some(m) = design.module(&n) {
+            for i in m.instances() {
+                stack.push(i.module_name.clone());
+            }
+        }
+    }
+    let mut sources = Vec::new();
+    let mut seen_src: std::collections::BTreeSet<String> = Default::default();
+    for n in &live {
+        let m = design.module(n).unwrap();
+        match &m.body {
+            Body::Leaf {
+                format: SourceFormat::Verilog,
+                source,
+            } => {
+                if seen_src.insert(source.clone()) {
+                    sources.push(Json::str(source));
+                }
+            }
+            Body::Grouped { .. } => {
+                sources.push(Json::str(crate::plugins::exporter::grouped_to_verilog(
+                    design, m,
+                )?));
+            }
+            _ => {}
+        }
+    }
+    let mut o = JsonObj::new();
+    o.insert("kernel", Json::str(kernel));
+    o.insert("top", Json::str(&top.name));
+    o.insert("sources", Json::Arr(sources));
+    Ok(Json::Obj(o).pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> String {
+        let krnl = r#"
+module krnl_knn (
+  input wire ap_clk,
+  input wire ap_rst_n,
+  output wire [511:0] m_axi_WDATA,
+  output wire m_axi_WVALID,
+  input wire m_axi_WREADY
+);
+// pragma clock port=ap_clk
+// pragma reset port=ap_rst_n active=low
+// pragma handshake pattern=m_axi_{bundle}{role} role.valid=VALID role.ready=READY role.data=.*
+  dist_core c0 (.clk(ap_clk));
+endmodule
+module dist_core (input wire clk);
+endmodule
+"#;
+        let mut o = JsonObj::new();
+        o.insert("kernel", Json::str("krnl_knn"));
+        o.insert("sources", Json::Arr(vec![Json::str(krnl)]));
+        Json::Obj(o).dump()
+    }
+
+    #[test]
+    fn xo_import_kernel_first_with_interfaces() {
+        let mods = import_xo(&manifest()).unwrap();
+        assert_eq!(mods.len(), 2);
+        assert_eq!(mods[0].name, "krnl_knn");
+        assert!(mods[0].metadata.contains_key("xo_kernel"));
+        assert_eq!(
+            mods[0].interface_of("m_axi_WDATA").unwrap().kind(),
+            "handshake"
+        );
+    }
+
+    #[test]
+    fn xo_roundtrip() {
+        let mods = import_xo(&manifest()).unwrap();
+        let mut d = Design::new("krnl_knn");
+        for m in mods {
+            d.add(m);
+        }
+        let exported = export_xo(&d, "krnl_knn").unwrap();
+        let re = import_xo(&exported).unwrap();
+        assert_eq!(re[0].name, "krnl_knn");
+        assert_eq!(re.len(), 2);
+    }
+
+    #[test]
+    fn missing_kernel_rejected() {
+        let bad = r#"{"kernel": "nope", "sources": ["module a(); endmodule"]}"#;
+        assert!(import_xo(bad).is_err());
+    }
+}

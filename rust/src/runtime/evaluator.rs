@@ -1,0 +1,219 @@
+//! PJRT-backed [`BatchEvaluator`]: scores floorplan candidates through
+//! the AOT-compiled Pallas kernel.
+//!
+//! The problem is padded into the nearest artifact bucket:
+//! * units padded with zero connectivity/resources, parked in slot 0
+//!   (cost-neutral — property-tested on the Python side);
+//! * slots padded with zero capacity and zero distance (one-hot columns
+//!   for padded slots are never set);
+//! * the batch padded by repeating the last candidate.
+
+use crate::floorplan::cost::{BatchEvaluator, CostModel, NUM_KINDS};
+use crate::runtime::pjrt::{Bucket, Manifest, Runtime};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+pub struct PjrtEvaluator {
+    pub model: CostModel,
+    runtime: Runtime,
+    artifact: PathBuf,
+    bucket: Bucket,
+    // Pre-padded static operands.
+    conn: Vec<f32>,
+    dist: Vec<f32>,
+    res: Vec<f32>,
+    caps: Vec<f32>,
+    lam: Vec<f32>,
+}
+
+impl PjrtEvaluator {
+    /// Build from a cost model + the artifacts directory manifest.
+    pub fn new(model: CostModel, manifest: &Manifest) -> Result<PjrtEvaluator> {
+        let bucket = manifest
+            .pick(model.m, model.s)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact bucket for M={} S={} (have: {:?})",
+                    model.m,
+                    model.s,
+                    manifest.buckets.iter().map(|b| b.units).collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let (bm, bs) = (bucket.units, bucket.slots);
+        // Pad static operands into bucket shape.
+        let mut conn = vec![0f32; bm * bm];
+        for i in 0..model.m {
+            conn[i * bm..i * bm + model.m]
+                .copy_from_slice(&model.conn[i * model.m..(i + 1) * model.m]);
+        }
+        let mut dist = vec![0f32; bs * bs];
+        for i in 0..model.s {
+            dist[i * bs..i * bs + model.s]
+                .copy_from_slice(&model.dist[i * model.s..(i + 1) * model.s]);
+        }
+        let mut res = vec![0f32; bm * NUM_KINDS];
+        res[..model.m * NUM_KINDS].copy_from_slice(&model.res);
+        let mut caps = vec![0f32; bs * NUM_KINDS];
+        caps[..model.s * NUM_KINDS].copy_from_slice(&model.caps);
+        Ok(PjrtEvaluator {
+            lam: vec![model.lambda],
+            runtime: Runtime::cpu()?,
+            artifact: manifest.path_of(&bucket),
+            bucket,
+            conn,
+            dist,
+            res,
+            caps,
+            model,
+        })
+    }
+
+    /// Evaluate one padded device batch, returning bucket.batch costs.
+    fn run_batch(&mut self, a: &[f32]) -> Result<Vec<f32>> {
+        let (bb, bm, bs) = (self.bucket.batch, self.bucket.units, self.bucket.slots);
+        let outs = self.runtime.execute_f32(
+            &self.artifact,
+            &[
+                (a, &[bb as i64, bm as i64, bs as i64]),
+                (&self.conn, &[bm as i64, bm as i64]),
+                (&self.dist, &[bs as i64, bs as i64]),
+                (&self.res, &[bm as i64, NUM_KINDS as i64]),
+                (&self.caps, &[bs as i64, NUM_KINDS as i64]),
+                (&self.lam, &[1]),
+            ],
+        )?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+}
+
+impl BatchEvaluator for PjrtEvaluator {
+    fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32> {
+        let (bb, bm, bs) = (self.bucket.batch, self.bucket.units, self.bucket.slots);
+        let mut costs = Vec::with_capacity(batch.len());
+        for chunk in batch.chunks(bb) {
+            // One-hot into bucket shape; pad rows park in slot 0, pad
+            // candidates repeat the last row.
+            let mut a = vec![0f32; bb * bm * bs];
+            for b in 0..bb {
+                let cand = &chunk[b.min(chunk.len() - 1)];
+                for i in 0..bm {
+                    let slot = if i < self.model.m_real { cand[i] } else { 0 };
+                    a[b * bm * bs + i * bs + slot] = 1.0;
+                }
+            }
+            let out = self
+                .run_batch(&a)
+                .expect("pjrt floorplan-cost execution failed");
+            costs.extend_from_slice(&out[..chunk.len()]);
+        }
+        costs
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::floorplan::cost::CpuEvaluator;
+    use crate::floorplan::problem::{Problem, Unit, UnitEdge};
+    use crate::ir::core::Resources;
+    use crate::runtime::pjrt::artifacts_dir;
+    use crate::util::rng::Rng;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    fn problem(n: usize) -> Problem {
+        Problem {
+            units: (0..n)
+                .map(|i| Unit {
+                    nodes: vec![i],
+                    resources: Resources::new(
+                        1_000.0 + 321.0 * i as f64,
+                        900.0,
+                        3.0,
+                        12.0,
+                        1.0,
+                    ),
+                    fixed_slot: None,
+                    name: format!("u{i}"),
+                })
+                .collect(),
+            edges: (0..n)
+                .flat_map(|i| {
+                    let mut v = Vec::new();
+                    if i + 1 < n {
+                        v.push(UnitEdge {
+                            a: i,
+                            b: i + 1,
+                            width: 64,
+                        });
+                    }
+                    if i + 4 < n {
+                        v.push(UnitEdge {
+                            a: i,
+                            b: i + 4,
+                            width: 16,
+                        });
+                    }
+                    v
+                })
+                .collect(),
+            die_weight: 3.0,
+        }
+    }
+
+    /// Invariant 8 of DESIGN.md: CPU oracle == PJRT-executed Pallas HLO.
+    #[test]
+    fn pjrt_matches_cpu_oracle() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let dev = builtin::by_name("u280").unwrap();
+        let p = problem(21);
+        let model = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let man = Manifest::load(&artifacts_dir()).unwrap();
+        let mut pjrt = PjrtEvaluator::new(model.clone(), &man).unwrap();
+        let mut cpu = CpuEvaluator { model };
+        let mut rng = Rng::new(42);
+        let batch: Vec<Vec<usize>> = (0..100)
+            .map(|_| (0..21).map(|_| rng.below(dev.num_slots())).collect())
+            .collect();
+        let a = pjrt.evaluate(&batch);
+        let b = cpu.evaluate(&batch);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() <= 1e-3 * y.abs().max(1.0),
+                "pjrt {x} vs cpu {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_sa_end_to_end() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let dev = builtin::by_name("u250").unwrap();
+        let p = problem(10);
+        let model = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let man = Manifest::load(&artifacts_dir()).unwrap();
+        let mut ev = PjrtEvaluator::new(model, &man).unwrap();
+        let cfg = crate::floorplan::sa::SaConfig {
+            steps: 30,
+            ..Default::default()
+        };
+        let r = crate::floorplan::sa::anneal(&p, &dev, &mut ev, None, &cfg);
+        assert!(r.best_cost.is_finite());
+        assert!(r.evaluated > 1000);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! executes them from the floorplan-exploration hot path. Python is
+//! build-time only — after `make artifacts` the binary is self-contained.
+
+pub mod evaluator;
+pub mod pjrt;
+
+pub use evaluator::PjrtEvaluator;
+pub use pjrt::{artifacts_dir, Manifest, Runtime};

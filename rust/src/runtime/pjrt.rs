@@ -1,0 +1,209 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the L3 hot path.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` parses
+//! and re-ids the module, `PjRtClient::compile` JITs it once, and the
+//! compiled executable is cached for the lifetime of the runtime. Python
+//! never runs at this point — `make artifacts` happened at build time.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Lazily-initialized PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached per path).
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse hlo text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(&self.cache[path])
+    }
+
+    /// Execute an artifact with f32 tensor inputs `(data, dims)`;
+    /// returns the flattened f32 contents of each tuple element.
+    /// (The aot pipeline lowers with `return_tuple=True`.)
+    pub fn execute_f32(
+        &mut self,
+        path: &Path,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.load(path)?;
+        let exe = &self.cache[path];
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            // Outputs may be f32 or i32 (argmin); normalize to f32.
+            let v = p
+                .to_vec::<f32>()
+                .or_else(|_| p.to_vec::<i32>().map(|v| v.into_iter().map(|x| x as f32).collect()))
+                .map_err(|e| anyhow!("read output: {e:?}"))?;
+            vecs.push(v);
+        }
+        Ok(vecs)
+    }
+}
+
+/// Artifact manifest (written by `python -m compile.aot`).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<Bucket>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub file: String,
+    pub batch: usize,
+    pub units: usize,
+    pub slots: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut buckets = Vec::new();
+        for b in j
+            .at("buckets")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+        {
+            buckets.push(Bucket {
+                file: b
+                    .at("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("bucket missing file"))?
+                    .to_string(),
+                batch: b.at("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                units: b.at("units").and_then(|v| v.as_usize()).unwrap_or(0),
+                slots: b.at("slots").and_then(|v| v.as_usize()).unwrap_or(0),
+            });
+        }
+        buckets.sort_by_key(|b| b.units);
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            buckets,
+        })
+    }
+
+    /// Smallest bucket fitting `units` real units and `slots` slots.
+    pub fn pick(&self, units: usize, slots: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|b| b.units >= units && b.slots >= slots)
+    }
+
+    pub fn path_of(&self, b: &Bucket) -> PathBuf {
+        self.dir.join(&b.file)
+    }
+}
+
+/// Default artifacts directory: `$REPO/artifacts` (overridable for tests
+/// via the RSIR_ARTIFACTS env var).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("RSIR_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_loads_and_picks() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let man = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(!man.buckets.is_empty());
+        let b = man.pick(20, 8).unwrap();
+        assert!(b.units >= 20);
+        // smallest adequate bucket
+        assert_eq!(b.units, 32);
+        assert!(man.pick(4096, 8).is_none());
+    }
+
+    #[test]
+    fn execute_artifact_smoke() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let man = Manifest::load(&artifacts_dir()).unwrap();
+        let b = man.pick(8, 8).unwrap().clone();
+        let mut rt = Runtime::cpu().unwrap();
+        let (bt, m, s) = (b.batch, b.units, b.slots);
+        // All-zero instance: cost must be exactly 0 for every candidate.
+        let a = vec![0f32; bt * m * s];
+        let c = vec![0f32; m * m];
+        let d = vec![0f32; s * s];
+        let r = vec![0f32; m * 5];
+        let caps = vec![0f32; s * 5];
+        let lam = vec![1e-4f32];
+        let outs = rt
+            .execute_f32(
+                &man.path_of(&b),
+                &[
+                    (&a, &[bt as i64, m as i64, s as i64]),
+                    (&c, &[m as i64, m as i64]),
+                    (&d, &[s as i64, s as i64]),
+                    (&r, &[m as i64, 5]),
+                    (&caps, &[s as i64, 5]),
+                    (&lam, &[1]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 3); // costs, best_idx, best_cost
+        assert_eq!(outs[0].len(), bt);
+        assert!(outs[0].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,202 @@
+//! Calibrated wire-delay model of a multi-die FPGA.
+//!
+//! This is the core of the Vivado surrogate: the paper's claims are about
+//! *relative* frequency (baseline vs HLPS-optimized), which hinge on three
+//! physical effects the model captures (cf. §2.1 / Fig 2):
+//!
+//! 1. **Die crossings are expensive.** An unregistered SLL hop costs
+//!    multiple nanoseconds; registering both ends hides most of it.
+//! 2. **Distance costs.** Each slot-boundary hop adds routing delay.
+//! 3. **Congestion degrades everything.** Once a slot's binding resource
+//!    passes ~70 % utilization, detours inflate both net delay and the
+//!    module-internal critical path, superlinearly.
+//!
+//! Constants are calibrated so the absolute numbers land in the ranges the
+//! paper reports (vendor baselines 140–250 MHz, optimized 250–335 MHz);
+//! see EXPERIMENTS.md for the calibration table.
+
+use crate::device::model::VirtualDevice;
+
+/// Tunable constants of the delay model.
+#[derive(Debug, Clone)]
+pub struct DelayModel {
+    /// Register clock-to-out (ns).
+    pub clk2q_ns: f64,
+    /// Register setup (ns).
+    pub setup_ns: f64,
+    /// Net delay within one slot (ns).
+    pub local_ns: f64,
+    /// Extra delay per slot-boundary hop, same die (ns).
+    pub hop_ns: f64,
+    /// Extra delay per die crossing (ns) for ordinary logic-to-logic
+    /// nets: the router reaches the SLL columns through general fabric,
+    /// so unregistered crossings are expensive.
+    pub die_ns: f64,
+    /// Die crossing when the net terminates in a dedicated pipeline
+    /// element (relay station / FF stage): the crossing uses the
+    /// Laguna-registered SLL path (TX/RX flops at the boundary).
+    pub die_reg_ns: f64,
+    /// Utilization above which congestion kicks in.
+    pub cong_threshold: f64,
+    /// Quadratic congestion coefficient.
+    pub cong_alpha: f64,
+    /// Utilization above which the router gives up.
+    pub route_fail_util: f64,
+    /// Additional per-unit-width demand factor for boundary wires.
+    pub min_clock_ns: f64,
+}
+
+impl Default for DelayModel {
+    fn default() -> Self {
+        DelayModel {
+            clk2q_ns: 0.15,
+            setup_ns: 0.10,
+            local_ns: 0.45,
+            hop_ns: 0.65,
+            die_ns: 4.00,
+            die_reg_ns: 1.90,
+            cong_threshold: 0.68,
+            cong_alpha: 14.0,
+            route_fail_util: 0.92,
+            // Hard floor from clock distribution (no FPGA runs at 2 GHz).
+            min_clock_ns: 2.0,
+        }
+    }
+}
+
+impl DelayModel {
+    /// Congestion multiplier for a slot at utilization `u` (of its binding
+    /// resource). 1.0 below the threshold, quadratic above it:
+    /// u = 0.80 → ≈1.20, u = 0.90 → ≈1.68.
+    pub fn congestion_mult(&self, u: f64) -> f64 {
+        let over = (u - self.cong_threshold).max(0.0);
+        1.0 + self.cong_alpha * over * over
+    }
+
+    /// Raw (congestion-free) net delay between two slots. `registered`
+    /// selects the Laguna-registered SLL rate for die crossings (nets
+    /// terminating in a dedicated pipeline element).
+    pub fn base_wire_ns(
+        &self,
+        dev: &VirtualDevice,
+        slot_a: usize,
+        slot_b: usize,
+        registered: bool,
+    ) -> f64 {
+        let (manhattan, dies) = dev.slot_dist(slot_a, slot_b);
+        // Die crossings are part of the manhattan distance; don't charge
+        // the generic hop cost for the boundary row the SLL already spans.
+        let plain_hops = manhattan.saturating_sub(dies);
+        let die = if registered { self.die_reg_ns } else { self.die_ns };
+        self.local_ns + self.hop_ns * plain_hops as f64 + die * dies as f64
+    }
+
+    /// Net delay between two slots under congestion. `util` holds the
+    /// binding-resource utilization of every slot; the worst slot touched
+    /// by the net (conservatively: both endpoints) scales the delay.
+    pub fn wire_ns(
+        &self,
+        dev: &VirtualDevice,
+        slot_a: usize,
+        slot_b: usize,
+        util: &[f64],
+        registered: bool,
+    ) -> f64 {
+        let u = util[slot_a].max(util[slot_b]);
+        self.base_wire_ns(dev, slot_a, slot_b, registered) * self.congestion_mult(u)
+    }
+
+    /// Full register-to-register path delay over one net.
+    pub fn path_ns(
+        &self,
+        dev: &VirtualDevice,
+        slot_a: usize,
+        slot_b: usize,
+        util: &[f64],
+        registered: bool,
+    ) -> f64 {
+        self.clk2q_ns + self.wire_ns(dev, slot_a, slot_b, util, registered) + self.setup_ns
+    }
+
+    /// Module-internal critical path under congestion.
+    pub fn internal_ns(&self, base_internal_ns: f64, slot_util: f64) -> f64 {
+        base_internal_ns * self.congestion_mult(slot_util)
+    }
+
+    /// Convert a critical-path delay to MHz, clamped by the clock floor.
+    pub fn fmax_mhz(&self, critical_ns: f64) -> f64 {
+        1000.0 / critical_ns.max(self.min_clock_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+
+    #[test]
+    fn congestion_is_monotone_and_flat_below_threshold() {
+        let dm = DelayModel::default();
+        assert_eq!(dm.congestion_mult(0.3), 1.0);
+        assert_eq!(dm.congestion_mult(0.68), 1.0);
+        let m80 = dm.congestion_mult(0.80);
+        let m90 = dm.congestion_mult(0.90);
+        assert!(m80 > 1.1 && m80 < 1.4, "{m80}");
+        assert!(m90 > m80);
+    }
+
+    #[test]
+    fn die_crossing_dominates() {
+        let dm = DelayModel::default();
+        let dev = builtin::by_name("u280").unwrap();
+        let a = dev.slot_index(0, 0);
+        let b = dev.slot_index(0, 1); // one die crossing on u280
+        let c = dev.slot_index(1, 0); // one horizontal hop, same die
+        assert!(dm.base_wire_ns(&dev, a, b, false) > dm.base_wire_ns(&dev, a, c, false) + 1.0);
+        assert!(dm.base_wire_ns(&dev, a, b, true) < dm.base_wire_ns(&dev, a, b, false));
+    }
+
+    #[test]
+    fn local_net_is_cheap() {
+        let dm = DelayModel::default();
+        let dev = builtin::by_name("u250").unwrap();
+        let u = vec![0.0; dev.num_slots()];
+        let p = dm.path_ns(&dev, 0, 0, &u, false);
+        // clk2q + local + setup
+        assert!((p - 0.70).abs() < 1e-9);
+        // supports > 600 MHz locally before the clock floor
+        assert!(dm.fmax_mhz(p) >= 400.0);
+    }
+
+    #[test]
+    fn unregistered_multi_die_path_is_slow() {
+        let dm = DelayModel::default();
+        let dev = builtin::by_name("u250").unwrap();
+        let u = vec![0.0; dev.num_slots()];
+        let bottom = dev.slot_index(0, 0);
+        let top = dev.slot_index(1, 3);
+        let p = dm.path_ns(&dev, bottom, top, &u, false);
+        // 3 die crossings + 1 plain hop: deep into the 100-MHz range.
+        assert!(p > 7.0, "{p}");
+        assert!(dm.fmax_mhz(p) < 150.0);
+    }
+
+    #[test]
+    fn fmax_clamped_by_clock_floor() {
+        let dm = DelayModel::default();
+        assert_eq!(dm.fmax_mhz(0.1), 500.0);
+    }
+
+    #[test]
+    fn registered_die_hop_supports_300mhz() {
+        // The whole point of HLPS: one pipelined die crossing per cycle
+        // must comfortably beat 300 MHz.
+        let dm = DelayModel::default();
+        let dev = builtin::by_name("u280").unwrap();
+        let u = vec![0.5; dev.num_slots()];
+        let a = dev.slot_index(0, 0);
+        let b = dev.slot_index(0, 1);
+        let p = dm.path_ns(&dev, a, b, &u, true);
+        assert!(dm.fmax_mhz(p) > 300.0, "die hop {p} ns");
+    }
+}

@@ -1,0 +1,10 @@
+//! Timing substrate: the calibrated wire-delay model, the flattened
+//! physical netlist, and coarse static timing analysis.
+
+pub mod delay;
+pub mod netlist;
+pub mod sta;
+
+pub use delay::DelayModel;
+pub use netlist::{flatten, FlatEdge, FlatNetlist, FlatNode, ModuleCharacteristics};
+pub use sta::{analyze, Placement, TimingReport};

@@ -1,0 +1,388 @@
+//! Flattened physical netlist: the leaf-instance graph the placer, router
+//! and STA operate on.
+//!
+//! Elaborates the IR from the top module, aliasing nets across hierarchy
+//! levels (a grouped module adds no logic, so its wires are pure aliases),
+//! and emits one node per leaf instance and one edge per point-to-point
+//! net between leaves. Clock/reset broadcast nets are excluded from the
+//! edge list, matching the partitioning pass's connectivity analysis.
+
+use crate::ir::core::*;
+use crate::util::union_find::UnionFind;
+use std::collections::BTreeMap;
+
+/// A leaf instance in the flattened design.
+#[derive(Debug, Clone)]
+pub struct FlatNode {
+    /// Hierarchical path, e.g. "Layers_inst/L1".
+    pub path: String,
+    pub module: String,
+    pub resources: Resources,
+    /// Congestion-free internal critical path (ns).
+    pub internal_ns: f64,
+    /// True for relay stations / FF chains inserted by pipeline passes.
+    pub is_pipeline: bool,
+    /// Pre-assigned slot (from floorplan metadata), if any.
+    pub fixed_slot: Option<String>,
+}
+
+/// A point-to-point net between two leaf instances.
+#[derive(Debug, Clone)]
+pub struct FlatEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub width: u64,
+    /// Both endpoints sit on pipelinable interfaces.
+    pub pipelinable: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct FlatNetlist {
+    pub nodes: Vec<FlatNode>,
+    pub edges: Vec<FlatEdge>,
+}
+
+impl FlatNetlist {
+    pub fn total_resources(&self) -> Resources {
+        self.nodes
+            .iter()
+            .fold(Resources::ZERO, |a, n| a.add(&n.resources))
+    }
+
+    pub fn node_index(&self, path: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.path == path)
+    }
+}
+
+/// Provides per-leaf-module resources and internal delay — implemented by
+/// `eda::synth` (metadata first, AST estimation as fallback).
+pub trait ModuleCharacteristics {
+    fn resources(&self, m: &Module) -> Resources;
+    fn internal_ns(&self, m: &Module) -> f64;
+}
+
+/// Flatten `design` from its top module.
+pub fn flatten(design: &Design, chars: &dyn ModuleCharacteristics) -> FlatNetlist {
+    let mut fl = Flattener {
+        design,
+        chars,
+        nodes: Vec::new(),
+        // (scope instance path, identifier) -> pin list index
+        pins: Vec::new(),
+        net_of_pin: BTreeMap::new(),
+    };
+    fl.walk(design.top_module(), "", &BTreeMap::new());
+    fl.finish()
+}
+
+/// One leaf-port attachment to a global net.
+#[derive(Debug, Clone)]
+struct Pin {
+    node: usize,
+    dir: Dir,
+    width: u32,
+    pipelinable: bool,
+    clockish: bool,
+}
+
+struct Flattener<'a> {
+    design: &'a Design,
+    chars: &'a dyn ModuleCharacteristics,
+    nodes: Vec<FlatNode>,
+    pins: Vec<Pin>,
+    /// global net key -> pin indices
+    net_of_pin: BTreeMap<String, Vec<usize>>,
+}
+
+impl<'a> Flattener<'a> {
+    /// `aliases` maps this module's port names to global net keys supplied
+    /// by the parent; locally declared wires get fresh keys under `scope`.
+    fn walk(&mut self, m: &Module, scope: &str, aliases: &BTreeMap<String, String>) {
+        let local_key = |id: &str, aliases: &BTreeMap<String, String>| -> String {
+            aliases
+                .get(id)
+                .cloned()
+                .unwrap_or_else(|| format!("{scope}/{id}"))
+        };
+        for inst in m.instances() {
+            let child_path = if scope.is_empty() {
+                inst.instance_name.clone()
+            } else {
+                format!("{scope}/{}", inst.instance_name)
+            };
+            let Some(child) = self.design.module(&inst.module_name) else {
+                continue;
+            };
+            // Map child ports to global nets.
+            let mut child_aliases = BTreeMap::new();
+            for conn in &inst.connections {
+                if let ConnExpr::Id(id) = &conn.value {
+                    child_aliases.insert(conn.port.clone(), local_key(id, aliases));
+                }
+            }
+            if child.is_grouped() {
+                self.walk(child, &child_path, &child_aliases);
+            } else {
+                // Leaf: create a node and pins.
+                let fixed_slot = inst
+                    .metadata
+                    .get("floorplan")
+                    .and_then(|f| f.as_str())
+                    .map(|s| s.to_string())
+                    .or_else(|| {
+                        child
+                            .metadata
+                            .get("floorplan")
+                            .and_then(|f| f.as_str())
+                            .map(|s| s.to_string())
+                    });
+                let node_idx = self.nodes.len();
+                self.nodes.push(FlatNode {
+                    path: child_path.clone(),
+                    module: child.name.clone(),
+                    resources: self.chars.resources(child),
+                    internal_ns: self.chars.internal_ns(child),
+                    is_pipeline: child
+                        .metadata
+                        .get("pipeline_element")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
+                    fixed_slot,
+                });
+                for conn in &inst.connections {
+                    let Some(port) = child.port(&conn.port) else {
+                        continue;
+                    };
+                    if let ConnExpr::Id(id) = &conn.value {
+                        let key = local_key(id, aliases);
+                        let iface = child.interface_of(&port.name);
+                        let pin = Pin {
+                            node: node_idx,
+                            dir: port.dir,
+                            width: port.width,
+                            pipelinable: iface.map(|i| i.pipelinable()).unwrap_or(false),
+                            clockish: matches!(
+                                iface,
+                                Some(Interface::Clock { .. }) | Some(Interface::Reset { .. })
+                            ),
+                        };
+                        let pidx = self.pins.len();
+                        self.pins.push(pin);
+                        self.net_of_pin.entry(key).or_default().push(pidx);
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish(self) -> FlatNetlist {
+        // Merge nets that alias the same pins is already handled by key
+        // naming; now aggregate pins per net into edges.
+        let mut uf = UnionFind::new(self.pins.len());
+        let mut net_pins: Vec<Vec<usize>> = Vec::new();
+        for (_, pins) in self.net_of_pin.iter() {
+            for w in pins.windows(2) {
+                uf.union(w[0], w[1]);
+            }
+            net_pins.push(pins.clone());
+        }
+        // Build edges: for each net, driver (Out pin) to each sink (In pin).
+        // Aggregate multiple nets between the same node pair.
+        let mut agg: BTreeMap<(usize, usize), (u64, bool, bool)> = BTreeMap::new();
+        for pins in &net_pins {
+            if pins.iter().any(|&p| self.pins[p].clockish) {
+                continue;
+            }
+            let drivers: Vec<usize> = pins
+                .iter()
+                .copied()
+                .filter(|&p| self.pins[p].dir == Dir::Out)
+                .collect();
+            let sinks: Vec<usize> = pins
+                .iter()
+                .copied()
+                .filter(|&p| self.pins[p].dir == Dir::In)
+                .collect();
+            for &d in &drivers {
+                for &s in &sinks {
+                    let (dn, sn) = (self.pins[d].node, self.pins[s].node);
+                    if dn == sn {
+                        continue;
+                    }
+                    let pipe = self.pins[d].pipelinable && self.pins[s].pipelinable;
+                    let e = agg.entry((dn, sn)).or_insert((0, true, false));
+                    e.0 += self.pins[d].width as u64;
+                    e.1 &= pipe;
+                    e.2 = true;
+                }
+            }
+        }
+        let edges = agg
+            .into_iter()
+            .map(|((src, dst), (width, pipelinable, _))| FlatEdge {
+                src,
+                dst,
+                width,
+                pipelinable,
+            })
+            .collect();
+        FlatNetlist {
+            nodes: self.nodes,
+            edges,
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod test_support {
+    use super::*;
+
+    /// Characteristics provider reading only metadata, with fixed defaults.
+    pub struct MetaChars;
+
+    impl ModuleCharacteristics for MetaChars {
+        fn resources(&self, m: &Module) -> Resources {
+            crate::ir::builder::module_resources(m).unwrap_or(Resources::new(
+                100.0, 100.0, 0.0, 0.0, 0.0,
+            ))
+        }
+        fn internal_ns(&self, m: &Module) -> f64 {
+            m.metadata
+                .get("timing")
+                .and_then(|t| t.at("internal_ns"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(2.5)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::MetaChars;
+    use super::*;
+    use crate::ir::builder::*;
+
+    /// Top { a0: A, mid: Mid { b0: B } }, A.o(hs) -> (via top wire) Mid.i -> B.i
+    fn hierarchical_design() -> Design {
+        let a = LeafBuilder::verilog_stub("A")
+            .clk_rst()
+            .handshake("o", Dir::Out, 32)
+            .resource(Resources::new(1000.0, 500.0, 0.0, 4.0, 0.0))
+            .build();
+        let b = LeafBuilder::verilog_stub("B")
+            .clk_rst()
+            .handshake("i", Dir::In, 32)
+            .build();
+        let mid = GroupedBuilder::new("Mid")
+            .port("i", Dir::In, 32)
+            .port("i_vld", Dir::In, 1)
+            .port("i_rdy", Dir::Out, 1)
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .inst(
+                "b0",
+                "B",
+                &[
+                    ("i", "i"),
+                    ("i_vld", "i_vld"),
+                    ("i_rdy", "i_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .build();
+        let top = GroupedBuilder::new("Top")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .wire("d", 32)
+            .wire("d_vld", 1)
+            .wire("d_rdy", 1)
+            .inst(
+                "a0",
+                "A",
+                &[
+                    ("o", "d"),
+                    ("o_vld", "d_vld"),
+                    ("o_rdy", "d_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .inst(
+                "mid",
+                "Mid",
+                &[
+                    ("i", "d"),
+                    ("i_vld", "d_vld"),
+                    ("i_rdy", "d_rdy"),
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                ],
+            )
+            .build();
+        let mut d = Design::new("Top");
+        d.add(a);
+        d.add(b);
+        d.add(mid);
+        d.add(top);
+        d
+    }
+
+    #[test]
+    fn flattens_across_hierarchy() {
+        let d = hierarchical_design();
+        let nl = flatten(&d, &MetaChars);
+        assert_eq!(nl.nodes.len(), 2);
+        assert!(nl.node_index("a0").is_some());
+        assert!(nl.node_index("mid/b0").is_some());
+    }
+
+    #[test]
+    fn edge_crosses_hierarchy_boundary() {
+        let d = hierarchical_design();
+        let nl = flatten(&d, &MetaChars);
+        assert_eq!(nl.edges.len(), 2, "{:?}", nl.edges); // data+vld fwd, rdy back
+        let a = nl.node_index("a0").unwrap();
+        let b = nl.node_index("mid/b0").unwrap();
+        let fwd = nl.edges.iter().find(|e| e.src == a && e.dst == b).unwrap();
+        assert_eq!(fwd.width, 33); // 32 data + 1 valid
+        assert!(fwd.pipelinable);
+        let back = nl.edges.iter().find(|e| e.src == b && e.dst == a).unwrap();
+        assert_eq!(back.width, 1); // ready
+    }
+
+    #[test]
+    fn clock_nets_excluded() {
+        let d = hierarchical_design();
+        let nl = flatten(&d, &MetaChars);
+        // No edge should have width > 33 (clk/rst fan-out would add more).
+        assert!(nl.edges.iter().all(|e| e.width <= 33));
+    }
+
+    #[test]
+    fn resources_read_from_metadata() {
+        let d = hierarchical_design();
+        let nl = flatten(&d, &MetaChars);
+        let a = &nl.nodes[nl.node_index("a0").unwrap()];
+        assert_eq!(a.resources.lut, 1000.0);
+        assert_eq!(nl.total_resources().lut, 1100.0);
+    }
+
+    #[test]
+    fn floorplan_metadata_respected() {
+        let mut d = hierarchical_design();
+        let top = d.module_mut("Top").unwrap();
+        top.instances_mut()[0]
+            .metadata
+            .insert("floorplan", crate::util::json::Json::str("SLOT_X0Y1"));
+        let nl = flatten(&d, &MetaChars);
+        let a = &nl.nodes[nl.node_index("a0").unwrap()];
+        assert_eq!(a.fixed_slot.as_deref(), Some("SLOT_X0Y1"));
+    }
+}

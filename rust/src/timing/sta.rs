@@ -1,0 +1,349 @@
+//! Coarse static timing analysis over a placed flat netlist.
+//!
+//! Model: every leaf module registers its interface boundary (true for HLS
+//! kernels, relay stations, and the RTL the benchmarks use), so each
+//! inter-module net is a single register-to-register path:
+//! `clk2q + wire(slotA, slotB, congestion) + setup`. Module-internal
+//! critical paths scale with the congestion of their slot. Fmax is set by
+//! the worst path; the report also carries per-slot utilization, total
+//! wirelength, and boundary-wire overflow for the routability verdict.
+
+use crate::device::model::VirtualDevice;
+use crate::ir::core::Resources;
+use crate::timing::delay::DelayModel;
+use crate::timing::netlist::FlatNetlist;
+
+/// Node-to-slot assignment (parallel to `FlatNetlist::nodes`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub slot_of_node: Vec<usize>,
+}
+
+impl Placement {
+    pub fn new(slot_of_node: Vec<usize>) -> Placement {
+        Placement { slot_of_node }
+    }
+}
+
+/// One timing path in the report.
+#[derive(Debug, Clone)]
+pub struct PathInfo {
+    pub description: String,
+    pub delay_ns: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    pub fmax_mhz: f64,
+    pub critical_ns: f64,
+    pub critical_path: PathInfo,
+    /// Binding-resource utilization per slot.
+    pub slot_util: Vec<f64>,
+    /// Max slot utilization.
+    pub max_util: f64,
+    /// Σ edge width × slot distance (the floorplanner's objective).
+    pub wirelength: f64,
+    /// Demand / capacity per die-boundary column; >1 means overflow.
+    pub boundary_load: Vec<f64>,
+    pub routable: bool,
+    pub unroutable_reason: Option<String>,
+}
+
+/// STA options: `unguided` models vendor placement without floorplan
+/// guidance — interleaved, unrelated logic raises the *effective* routing
+/// demand of a slot beyond its raw utilization (§2.2: unguided packing
+/// "causes local routing congestion"). Floorplan-constrained placement
+/// (the RIR flow) keeps partitions coherent, so no mixing penalty.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaOptions {
+    pub unguided: bool,
+}
+
+/// Per-slot utilization of the binding resource.
+pub fn slot_utilization(
+    nl: &FlatNetlist,
+    placement: &Placement,
+    dev: &VirtualDevice,
+) -> Vec<f64> {
+    effective_utilization(nl, placement, dev, StaOptions::default())
+}
+
+/// Utilization including the unguided-placement mixing penalty:
+/// +1.5 % effective routing demand per extra module interleaved in the
+/// slot, capped at +18 %.
+pub fn effective_utilization(
+    nl: &FlatNetlist,
+    placement: &Placement,
+    dev: &VirtualDevice,
+    opts: StaOptions,
+) -> Vec<f64> {
+    let mut used = vec![Resources::ZERO; dev.num_slots()];
+    let mut count = vec![0usize; dev.num_slots()];
+    for (n, node) in nl.nodes.iter().enumerate() {
+        let s = placement.slot_of_node[n];
+        used[s] = used[s].add(&node.resources);
+        if !node.is_pipeline {
+            count[s] += 1;
+        }
+    }
+    used.iter()
+        .zip(&dev.slots)
+        .zip(&count)
+        .map(|((u, s), &c)| {
+            let base = u.max_util(&s.capacity);
+            if opts.unguided && base > 0.0 && c > 1 {
+                base + (0.015 * (c as f64 - 1.0)).min(0.18)
+            } else {
+                base
+            }
+        })
+        .collect()
+}
+
+/// Demand on each die-boundary (boundary_index × column) in wires, as a
+/// fraction of SLL capacity.
+pub fn boundary_load(nl: &FlatNetlist, placement: &Placement, dev: &VirtualDevice) -> Vec<f64> {
+    let nb = dev.die_rows.len();
+    if nb == 0 {
+        return Vec::new();
+    }
+    let mut demand = vec![0u64; nb * dev.cols];
+    for e in &nl.edges {
+        let sa = &dev.slots[placement.slot_of_node[e.src]];
+        let sb = &dev.slots[placement.slot_of_node[e.dst]];
+        let (lo, hi) = if sa.y <= sb.y { (sa.y, sb.y) } else { (sb.y, sa.y) };
+        // Route vertically in the source column (L-shaped routing).
+        let col = sa.x;
+        for (bi, &brow) in dev.die_rows.iter().enumerate() {
+            if lo <= brow && brow < hi {
+                demand[bi * dev.cols + col] += e.width;
+            }
+        }
+    }
+    demand
+        .iter()
+        .map(|&d| d as f64 / dev.sll_per_column as f64)
+        .collect()
+}
+
+/// Analyze a placed netlist (floorplan-guided placement assumed).
+pub fn analyze(
+    nl: &FlatNetlist,
+    placement: &Placement,
+    dev: &VirtualDevice,
+    dm: &DelayModel,
+) -> TimingReport {
+    analyze_with(nl, placement, dev, dm, StaOptions::default())
+}
+
+/// Analyze with explicit [`StaOptions`].
+pub fn analyze_with(
+    nl: &FlatNetlist,
+    placement: &Placement,
+    dev: &VirtualDevice,
+    dm: &DelayModel,
+    opts: StaOptions,
+) -> TimingReport {
+    assert_eq!(nl.nodes.len(), placement.slot_of_node.len());
+    let util = effective_utilization(nl, placement, dev, opts);
+
+    let mut critical = PathInfo {
+        description: "(clock floor)".into(),
+        delay_ns: dm.min_clock_ns,
+    };
+    let mut wirelength = 0.0f64;
+
+    // Net paths.
+    for e in &nl.edges {
+        let (sa, sb) = (placement.slot_of_node[e.src], placement.slot_of_node[e.dst]);
+        let registered = nl.nodes[e.src].is_pipeline || nl.nodes[e.dst].is_pipeline;
+        let d = dm.path_ns(dev, sa, sb, &util, registered);
+        let (man, dies) = dev.slot_dist(sa, sb);
+        wirelength += e.width as f64 * (man + dies) as f64;
+        if d > critical.delay_ns {
+            critical = PathInfo {
+                description: format!(
+                    "net {} -> {} ({}b, {} hops, {} die crossings)",
+                    nl.nodes[e.src].path, nl.nodes[e.dst].path, e.width, man, dies
+                ),
+                delay_ns: d,
+            };
+        }
+    }
+
+    // Module-internal paths.
+    for (n, node) in nl.nodes.iter().enumerate() {
+        let u = util[placement.slot_of_node[n]];
+        let d = dm.internal_ns(node.internal_ns, u);
+        if d > critical.delay_ns {
+            critical = PathInfo {
+                description: format!(
+                    "internal {} ({} @ util {:.2})",
+                    node.path, node.module, u
+                ),
+                delay_ns: d,
+            };
+        }
+    }
+
+    // Routability.
+    let bload = boundary_load(nl, placement, dev);
+    let max_util = util.iter().cloned().fold(0.0, f64::max);
+    let mut routable = true;
+    let mut reason = None;
+    // Unguided placement cannot balance DSP columns: past ~38 % device-
+    // wide DSP demand the router runs out of column-adjacent tracks (the
+    // AutoBridge observation that duplicating compute without manual
+    // floorplanning wrecks QoR — CNN 13x10/13x12 baselines in Table 2).
+    let dsp_demand = nl.total_resources().dsp / dev.total_capacity().dsp.max(1.0);
+    if opts.unguided && dsp_demand > 0.38 {
+        routable = false;
+        reason = Some(format!(
+            "DSP column congestion: {:.0}% of device DSP without floorplan guidance",
+            dsp_demand * 100.0
+        ));
+    } else if max_util > dm.route_fail_util {
+        routable = false;
+        let s = util
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        reason = Some(format!(
+            "slot {} utilization {:.0}% exceeds {:.0}%",
+            dev.slots[s].pblock,
+            max_util * 100.0,
+            dm.route_fail_util * 100.0
+        ));
+    } else if let Some((bi, &l)) = bload
+        .iter()
+        .enumerate()
+        .find(|(_, &l)| l > 1.0)
+    {
+        routable = false;
+        reason = Some(format!(
+            "die-boundary column {} SLL overflow: {:.0}% of capacity",
+            bi,
+            l * 100.0
+        ));
+    }
+
+    TimingReport {
+        fmax_mhz: dm.fmax_mhz(critical.delay_ns),
+        critical_ns: critical.delay_ns.max(dm.min_clock_ns),
+        critical_path: critical,
+        slot_util: util,
+        max_util,
+        wirelength,
+        boundary_load: bload,
+        routable,
+        unroutable_reason: reason,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::timing::netlist::{FlatEdge, FlatNode, FlatNetlist};
+
+    fn node(path: &str, lut: f64, internal: f64) -> FlatNode {
+        FlatNode {
+            path: path.into(),
+            module: path.to_uppercase(),
+            resources: Resources::new(lut, lut, 0.0, 0.0, 0.0),
+            internal_ns: internal,
+            is_pipeline: false,
+            fixed_slot: None,
+        }
+    }
+
+    fn two_node_netlist() -> FlatNetlist {
+        FlatNetlist {
+            nodes: vec![node("a", 10e3, 2.8), node("b", 10e3, 2.8)],
+            edges: vec![FlatEdge {
+                src: 0,
+                dst: 1,
+                width: 64,
+                pipelinable: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn colocated_hits_internal_path() {
+        let dev = builtin::by_name("u280").unwrap();
+        let nl = two_node_netlist();
+        let p = Placement::new(vec![0, 0]);
+        let r = analyze(&nl, &p, &dev, &DelayModel::default());
+        assert!(r.routable);
+        // Internal 2.8 ns dominates the local net.
+        assert!((r.critical_ns - 2.8).abs() < 1e-9, "{:?}", r.critical_path);
+        assert!((r.fmax_mhz - 357.1).abs() < 1.0);
+    }
+
+    #[test]
+    fn cross_die_unpipelined_is_critical() {
+        let dev = builtin::by_name("u280").unwrap();
+        let nl = two_node_netlist();
+        let bottom = dev.slot_index(0, 0);
+        let top = dev.slot_index(0, 2);
+        let p = Placement::new(vec![bottom, top]);
+        let r = analyze(&nl, &p, &dev, &DelayModel::default());
+        // 2 die crossings unregistered: 0.15+0.45+2*2.3+0.1 = 5.3 ns
+        assert!(r.critical_ns > 5.0, "{}", r.critical_ns);
+        assert!(r.critical_path.description.contains("die crossings"));
+        assert!(r.fmax_mhz < 200.0);
+    }
+
+    #[test]
+    fn congestion_degrades_internal() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut nl = two_node_netlist();
+        // Load slot 0 to ~85% of its LUT capacity.
+        let cap = dev.slots[0].capacity.lut;
+        nl.nodes[0].resources.lut = cap * 0.85;
+        nl.nodes[0].resources.ff = 0.0;
+        let p = Placement::new(vec![0, 0]);
+        let r = analyze(&nl, &p, &dev, &DelayModel::default());
+        assert!(r.max_util > 0.84);
+        assert!(r.critical_ns > 2.8 * 1.3, "{}", r.critical_ns);
+    }
+
+    #[test]
+    fn overutilized_slot_unroutable() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut nl = two_node_netlist();
+        nl.nodes[0].resources.lut = dev.slots[0].capacity.lut * 0.95;
+        let p = Placement::new(vec![0, 0]);
+        let r = analyze(&nl, &p, &dev, &DelayModel::default());
+        assert!(!r.routable);
+        assert!(r.unroutable_reason.as_ref().unwrap().contains("utilization"));
+    }
+
+    #[test]
+    fn sll_overflow_unroutable() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut nl = two_node_netlist();
+        nl.edges[0].width = dev.sll_per_column + 1;
+        let bottom = dev.slot_index(0, 0);
+        let top = dev.slot_index(0, 1);
+        let p = Placement::new(vec![bottom, top]);
+        let r = analyze(&nl, &p, &dev, &DelayModel::default());
+        assert!(!r.routable);
+        assert!(r.unroutable_reason.as_ref().unwrap().contains("SLL"));
+    }
+
+    #[test]
+    fn wirelength_accumulates() {
+        let dev = builtin::by_name("u250").unwrap();
+        let nl = two_node_netlist();
+        let a = dev.slot_index(0, 0);
+        let b = dev.slot_index(1, 1);
+        let p = Placement::new(vec![a, b]);
+        let r = analyze(&nl, &p, &dev, &DelayModel::default());
+        // manhattan 2 + 1 die crossing = 3 × 64b
+        assert_eq!(r.wirelength, 192.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with median/mean/min reporting in a
+//! fixed-width table, used by every `benches/*.rs` target (declared with
+//! `harness = false` in Cargo.toml).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub runs: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} runs={:<3} min={:>10} median={:>10} mean={:>10} max={:>10}",
+            self.name,
+            self.runs,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.max)
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `runs` measured runs.
+/// A `black_box`-style sink prevents the optimizer from deleting the work:
+/// callers should return a value from `f` that depends on the computation.
+pub fn bench<T>(name: &str, warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        sink(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    let stats = Stats {
+        name: name.to_string(),
+        runs,
+        min: times[0],
+        median: times[times.len() / 2],
+        mean: total / runs as u32,
+        max: *times.last().unwrap(),
+    };
+    stats.report();
+    stats
+}
+
+/// Opaque sink: prevents dead-code elimination of benchmark results.
+#[inline]
+pub fn sink<T>(value: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(value)
+}
+
+/// Simple fixed-width table printer used by the table/figure benches so the
+/// output rows match the paper's presentation.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Render to a string (used to write bench outputs into EXPERIMENTS.md).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let push_line = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        push_line(&self.headers, &mut out);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            push_line(row, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_plausible_stats() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.runs, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["App", "Freq"]);
+        t.row(&["CNN".into(), "335".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| App | Freq |"));
+        assert!(s.contains("| CNN | 335  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Tiny command-line argument parser (no clap available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name). `option_keys` lists the
+    /// long options that consume a following value when given as
+    /// `--key value`; everything else starting with `--` is a flag.
+    pub fn parse(argv: &[String], option_keys: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if option_keys.contains(&body) && i + 1 < argv.len() {
+                    out.options.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_and_flags() {
+        let a = Args::parse(&sv(&["table2", "--verbose", "x.json"]), &[]);
+        assert_eq!(a.positional, vec!["table2", "x.json"]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn parses_options_both_styles() {
+        let a = Args::parse(&sv(&["--device=u280", "--seed", "42"]), &["seed"]);
+        assert_eq!(a.get("device"), Some("u280"));
+        assert_eq!(a.get_usize("seed", 0), 42);
+    }
+
+    #[test]
+    fn unknown_dashdash_is_flag() {
+        let a = Args::parse(&sv(&["--fast", "value"]), &[]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.positional, vec!["value"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&[], &[]);
+        assert_eq!(a.get_or("device", "u250"), "u250");
+        assert_eq!(a.get_f64("temp", 1.5), 1.5);
+    }
+}

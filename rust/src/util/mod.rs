@@ -1,0 +1,10 @@
+//! Self-contained substrates: JSON, YAML emission, RNG, union-find,
+//! CLI parsing, property testing, and the benchmark harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod union_find;
+pub mod yamlish;

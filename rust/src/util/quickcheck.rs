@@ -1,0 +1,143 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! and, on failure, greedily shrinks the input via the generator's `shrink`
+//! before panicking with the minimal counterexample's debug repr.
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// A generator of random test inputs plus a shrinking strategy.
+pub trait Gen {
+    type Item: Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Item;
+    /// Candidate smaller versions of `item`; empty when fully shrunk.
+    fn shrink(&self, _item: &Self::Item) -> Vec<Self::Item> {
+        Vec::new()
+    }
+}
+
+/// Run the property over `cases` random inputs, shrinking on failure.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Item) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(gen, input, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case});\nminimal counterexample: {minimal:#?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut failing: G::Item, prop: &impl Fn(&G::Item) -> bool) -> G::Item {
+    // Greedy descent: accept the first shrunken candidate that still fails.
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+/// Generator for usize in [lo, hi], shrinking toward lo.
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Item = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi)
+    }
+    fn shrink(&self, item: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *item > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*item - self.lo) / 2);
+            out.push(*item - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator for Vec<T>, shrinking by halving length then shrinking elements.
+pub struct VecGen<G> {
+    pub inner: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Item = Vec<G::Item>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Item> {
+        let len = rng.range(self.min_len, self.max_len);
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, item: &Vec<G::Item>) -> Vec<Vec<G::Item>> {
+        let mut out = Vec::new();
+        if item.len() > self.min_len {
+            // Drop the back half / one element.
+            let keep = (item.len() / 2).max(self.min_len);
+            out.push(item[..keep].to_vec());
+            out.push(item[..item.len() - 1].to_vec());
+            out.push(item[1..].to_vec());
+        }
+        // Shrink one element at a time (first position with candidates).
+        for (i, el) in item.iter().enumerate() {
+            let cands = self.inner.shrink(el);
+            if !cands.is_empty() {
+                for c in cands.into_iter().take(2) {
+                    let mut v = item.clone();
+                    v[i] = c;
+                    out.push(v);
+                }
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(1, 200, &UsizeGen { lo: 0, hi: 100 }, |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics() {
+        forall(2, 200, &UsizeGen { lo: 0, hi: 100 }, |&x| x < 90);
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        // Capture the panic message and check the counterexample is minimal (90).
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 500, &UsizeGen { lo: 0, hi: 1000 }, |&x| x < 90);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("90"), "expected shrink to 90, got: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecGen {
+            inner: UsizeGen { lo: 0, hi: 9 },
+            min_len: 2,
+            max_len: 5,
+        };
+        forall(4, 100, &g, |v| (2..=5).contains(&v.len()));
+    }
+}

@@ -1,0 +1,138 @@
+//! Union-find (disjoint-set) with path halving and union by rank.
+//!
+//! The partitioning pass (§3.3 of the paper) analyzes port connectivity of
+//! an aux module's netlist with union-find — "It converts modules in
+//! arbitrary formats to netlists ... and applies union-find [15] ... to
+//! analyze port connectivity" — splitting disjoint components into separate
+//! floorplannable units.
+
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<usize>,
+    rank: Vec<u8>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind {
+            parent: (0..n).collect(),
+            rank: vec![0; n],
+            components: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint components.
+    pub fn components(&self) -> usize {
+        self.components
+    }
+
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]]; // path halving
+            x = self.parent[x];
+        }
+        x
+    }
+
+    /// Returns true if the union merged two distinct components.
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        self.components -= 1;
+        match self.rank[ra].cmp(&self.rank[rb]) {
+            std::cmp::Ordering::Less => self.parent[ra] = rb,
+            std::cmp::Ordering::Greater => self.parent[rb] = ra,
+            std::cmp::Ordering::Equal => {
+                self.parent[rb] = ra;
+                self.rank[ra] += 1;
+            }
+        }
+        true
+    }
+
+    pub fn same(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Group element indices by component; groups ordered by smallest member.
+    pub fn groups(&mut self) -> Vec<Vec<usize>> {
+        let n = self.len();
+        let mut by_root: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for i in 0..n {
+            let r = self.find(i);
+            by_root.entry(r).or_default().push(i);
+        }
+        let mut groups: Vec<Vec<usize>> = by_root.into_values().collect();
+        groups.sort_by_key(|g| g[0]);
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_singletons() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.components(), 5);
+        assert!(!uf.same(0, 1));
+    }
+
+    #[test]
+    fn union_merges() {
+        let mut uf = UnionFind::new(5);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(1, 0)); // already merged
+        assert!(uf.same(0, 1));
+        assert_eq!(uf.components(), 4);
+    }
+
+    #[test]
+    fn transitive() {
+        let mut uf = UnionFind::new(6);
+        uf.union(0, 1);
+        uf.union(1, 2);
+        uf.union(4, 5);
+        assert!(uf.same(0, 2));
+        assert!(!uf.same(2, 4));
+        assert_eq!(uf.components(), 3);
+    }
+
+    #[test]
+    fn groups_partition() {
+        let mut uf = UnionFind::new(6);
+        uf.union(0, 3);
+        uf.union(1, 4);
+        let groups = uf.groups();
+        assert_eq!(groups.len(), 4);
+        assert!(groups.contains(&vec![0, 3]));
+        assert!(groups.contains(&vec![1, 4]));
+        assert!(groups.contains(&vec![2]));
+        assert!(groups.contains(&vec![5]));
+        // All elements appear exactly once.
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn chain_large() {
+        let mut uf = UnionFind::new(1000);
+        for i in 0..999 {
+            uf.union(i, i + 1);
+        }
+        assert_eq!(uf.components(), 1);
+        assert!(uf.same(0, 999));
+    }
+}

@@ -1,0 +1,180 @@
+//! YAML *emitter* for human-readable IR dumps (§3.1: "The choice of storage
+//! and exchange format for the IR, such as YAML, JSON, or XML, can
+//! optionally vary"). We emit a YAML-compatible rendering of [`Json`]
+//! values; JSON remains the canonical parse format.
+
+use crate::util::json::Json;
+
+pub fn to_yaml(v: &Json) -> String {
+    let mut out = String::new();
+    emit(v, &mut out, 0, false);
+    if !out.ends_with('\n') {
+        out.push('\n');
+    }
+    out
+}
+
+fn emit(v: &Json, out: &mut String, indent: usize, inline_ctx: bool) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                out.push_str(&format!("{}", *n as i64));
+            } else {
+                out.push_str(&format!("{n}"));
+            }
+        }
+        Json::Str(s) => emit_str(s, out),
+        Json::Arr(a) => {
+            if a.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            if inline_ctx {
+                out.push('\n');
+            }
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 || inline_ctx {
+                    pad(out, indent);
+                }
+                out.push_str("- ");
+                emit(item, out, indent + 1, true);
+                if !out.ends_with('\n') {
+                    out.push('\n');
+                }
+            }
+        }
+        Json::Obj(o) => {
+            if o.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            if inline_ctx {
+                // Nested object: first key on same line after "- ", or newline after "key:".
+                let mut first = true;
+                for (k, val) in o.iter() {
+                    if first {
+                        first = false;
+                        // For `- key: val` style, key follows directly.
+                        if !out.ends_with("- ") {
+                            out.push('\n');
+                            pad(out, indent);
+                        }
+                    } else {
+                        pad(out, indent);
+                    }
+                    emit_key(k, out);
+                    emit_value_after_key(val, out, indent);
+                }
+            } else {
+                for (k, val) in o.iter() {
+                    pad(out, indent);
+                    emit_key(k, out);
+                    emit_value_after_key(val, out, indent);
+                }
+            }
+        }
+    }
+}
+
+fn emit_value_after_key(val: &Json, out: &mut String, indent: usize) {
+    match val {
+        Json::Obj(o) if !o.is_empty() => {
+            out.push('\n');
+            emit(val, out, indent + 1, false);
+        }
+        Json::Arr(a) if !a.is_empty() => {
+            out.push('\n');
+            emit(val, out, indent + 1, false);
+        }
+        _ => {
+            out.push(' ');
+            emit(val, out, indent, true);
+            out.push('\n');
+        }
+    }
+}
+
+fn emit_key(k: &str, out: &mut String) {
+    if needs_quoting(k) {
+        emit_str(k, out);
+    } else {
+        out.push_str(k);
+    }
+    out.push(':');
+}
+
+fn emit_str(s: &str, out: &mut String) {
+    if needs_quoting(s) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    } else {
+        out.push_str(s);
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.is_empty()
+        || s.chars().any(|c| {
+            !(c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.' || c == '/')
+        })
+        || matches!(s, "true" | "false" | "null" | "yes" | "no")
+        || s.chars().next().map(|c| c.is_ascii_digit() || c == '-').unwrap_or(false)
+}
+
+fn pad(out: &mut String, indent: usize) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn scalar_map() {
+        let j = Json::parse(r#"{"name":"FIFO","width":64}"#).unwrap();
+        let y = to_yaml(&j);
+        assert!(y.contains("name: FIFO\n"));
+        assert!(y.contains("width: 64\n"));
+    }
+
+    #[test]
+    fn nested_list_of_objects() {
+        let j = Json::parse(r#"{"ports":[{"name":"I","width":64},{"name":"clk","width":1}]}"#)
+            .unwrap();
+        let y = to_yaml(&j);
+        assert!(y.contains("ports:\n"), "{y}");
+        assert!(y.contains("- name: I\n"), "{y}");
+        assert!(y.contains("    width: 1\n"), "{y}");
+    }
+
+    #[test]
+    fn quoting_special_strings() {
+        let j = Json::parse(r#"{"v":"module FIFO (I);","k":"true"}"#).unwrap();
+        let y = to_yaml(&j);
+        assert!(y.contains(r#"v: "module FIFO (I);""#), "{y}");
+        assert!(y.contains(r#"k: "true""#), "{y}");
+    }
+
+    #[test]
+    fn empty_collections() {
+        let j = Json::parse(r#"{"a":[],"b":{}}"#).unwrap();
+        let y = to_yaml(&j);
+        assert!(y.contains("a: []"));
+        assert!(y.contains("b: {}"));
+    }
+}

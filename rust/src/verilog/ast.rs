@@ -1,0 +1,261 @@
+//! Verilog AST — deliberately *structural*, not elaborated.
+//!
+//! Mirroring the paper's design principle ("Directly analyzing LLM's
+//! interconnect is challenging due to the complexity of its source format
+//! … requiring a full elaborator. Maintaining and updating such an
+//! elaborator … would be labor-intensive"), the AST models precisely what
+//! the RIR passes need — module signatures, net declarations, `assign`
+//! statements, and submodule instantiations — and preserves everything
+//! else (always blocks, functions, generate regions) as verbatim
+//! [`VItem::Raw`] text.
+
+use crate::ir::core::Dir;
+
+/// A parameter declaration: `parameter WIDTH = 64`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VParam {
+    pub name: String,
+    /// Raw default-value text.
+    pub default: String,
+}
+
+/// A port in the module signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VPort {
+    pub name: String,
+    pub dir: Dir,
+    pub width: u32,
+    /// `wire` or `reg` (output reg).
+    pub net: String,
+}
+
+/// A net declaration: `wire [63:0] a, b;`
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VNet {
+    pub kind: String,
+    pub width: u32,
+    pub names: Vec<String>,
+}
+
+/// A continuous assignment, raw expression text on both sides.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VAssign {
+    pub lhs: String,
+    pub rhs: String,
+}
+
+/// A submodule instantiation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VInst {
+    pub module: String,
+    pub name: String,
+    /// `#(.P(V))` parameter overrides, raw value text.
+    pub params: Vec<(String, String)>,
+    /// Named connections `.port(expr)`; `expr` is raw text, empty for
+    /// explicitly open `.port()`. Positional connections get port `""`.
+    pub conns: Vec<(String, String)>,
+}
+
+impl VInst {
+    pub fn conn(&self, port: &str) -> Option<&str> {
+        self.conns
+            .iter()
+            .find(|(p, _)| p == port)
+            .map(|(_, e)| e.as_str())
+    }
+}
+
+/// A module item.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VItem {
+    Net(VNet),
+    Assign(VAssign),
+    Instance(VInst),
+    /// Verbatim source text for anything the structural parser does not
+    /// model: always/initial blocks, functions, tasks, generate regions,
+    /// localparams, arrayed nets, etc.
+    Raw(String),
+}
+
+/// A parsed Verilog module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VModule {
+    pub name: String,
+    pub params: Vec<VParam>,
+    pub ports: Vec<VPort>,
+    pub items: Vec<VItem>,
+}
+
+impl VModule {
+    pub fn new(name: impl Into<String>) -> VModule {
+        VModule {
+            name: name.into(),
+            params: Vec::new(),
+            ports: Vec::new(),
+            items: Vec::new(),
+        }
+    }
+
+    pub fn port(&self, name: &str) -> Option<&VPort> {
+        self.ports.iter().find(|p| p.name == name)
+    }
+
+    pub fn instances(&self) -> impl Iterator<Item = &VInst> {
+        self.items.iter().filter_map(|i| match i {
+            VItem::Instance(inst) => Some(inst),
+            _ => None,
+        })
+    }
+
+    pub fn nets(&self) -> impl Iterator<Item = &VNet> {
+        self.items.iter().filter_map(|i| match i {
+            VItem::Net(n) => Some(n),
+            _ => None,
+        })
+    }
+
+    pub fn assigns(&self) -> impl Iterator<Item = &VAssign> {
+        self.items.iter().filter_map(|i| match i {
+            VItem::Assign(a) => Some(a),
+            _ => None,
+        })
+    }
+
+    /// Width of an identifier if declared as a net or port here.
+    pub fn width_of(&self, id: &str) -> Option<u32> {
+        if let Some(p) = self.port(id) {
+            return Some(p.width);
+        }
+        self.nets()
+            .find(|n| n.names.iter().any(|x| x == id))
+            .map(|n| n.width)
+    }
+}
+
+/// A parsed source file: one or more modules.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct VFile {
+    pub modules: Vec<VModule>,
+}
+
+impl VFile {
+    pub fn module(&self, name: &str) -> Option<&VModule> {
+        self.modules.iter().find(|m| m.name == name)
+    }
+}
+
+/// Extract the identifiers referenced in a raw expression string.
+/// Used for connectivity analysis of residual logic: identifiers that
+/// co-occur in one statement are conservatively considered connected.
+pub fn expr_identifiers(expr: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let b = expr.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b'$') {
+                i += 1;
+            }
+            let id = &expr[start..i];
+            // Skip sized-literal bases like 8'd0 handled below, and keywords
+            // that appear inside expressions.
+            if !matches!(
+                id,
+                "posedge" | "negedge" | "or" | "and" | "begin" | "end" | "if" | "else"
+            ) {
+                out.push(id.to_string());
+            }
+        } else if c.is_ascii_digit() {
+            // skip numbers incl. sized literals (8'hFF)
+            while i < b.len()
+                && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b'\'')
+            {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out.dedup();
+    out
+}
+
+/// True if the expression is a single plain identifier.
+pub fn is_single_identifier(expr: &str) -> bool {
+    let t = expr.trim();
+    !t.is_empty()
+        && t.chars().next().map(|c| c.is_ascii_alphabetic() || c == '_').unwrap_or(false)
+        && t.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '$')
+}
+
+/// Parse a Verilog constant literal like `8'd42`, `1'b0`, `42`.
+pub fn parse_literal(expr: &str) -> Option<(u32, u64)> {
+    let t = expr.trim().replace('_', "");
+    if let Some(apos) = t.find('\'') {
+        let width: u32 = t[..apos].parse().ok()?;
+        let rest = &t[apos + 1..];
+        let (base, digits) = rest.split_at(1);
+        let radix = match base {
+            "d" | "D" => 10,
+            "h" | "H" => 16,
+            "b" | "B" => 2,
+            "o" | "O" => 8,
+            _ => return None,
+        };
+        let value = u64::from_str_radix(digits, radix).ok()?;
+        Some((width, value))
+    } else {
+        t.parse::<u64>().ok().map(|v| (32, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_identifier_extraction() {
+        let ids = expr_identifiers("(a & b_2) | {c, 8'hFF} + d$x");
+        assert_eq!(ids, vec!["a", "b_2", "c", "d$x"]);
+    }
+
+    #[test]
+    fn single_identifier_detection() {
+        assert!(is_single_identifier(" foo_bar "));
+        assert!(!is_single_identifier("a + b"));
+        assert!(!is_single_identifier("a[3]"));
+        assert!(!is_single_identifier("8'd0"));
+        assert!(!is_single_identifier(""));
+    }
+
+    #[test]
+    fn literal_parsing() {
+        assert_eq!(parse_literal("8'd42"), Some((8, 42)));
+        assert_eq!(parse_literal("1'b1"), Some((1, 1)));
+        assert_eq!(parse_literal("16'hBEEF"), Some((16, 0xBEEF)));
+        assert_eq!(parse_literal("32'hDEAD_BEEF"), Some((32, 0xDEADBEEF)));
+        assert_eq!(parse_literal("7"), Some((32, 7)));
+        assert_eq!(parse_literal("a"), None);
+    }
+
+    #[test]
+    fn width_of_checks_ports_and_nets() {
+        let mut m = VModule::new("M");
+        m.ports.push(VPort {
+            name: "p".into(),
+            dir: Dir::In,
+            width: 8,
+            net: "wire".into(),
+        });
+        m.items.push(VItem::Net(VNet {
+            kind: "wire".into(),
+            width: 16,
+            names: vec!["w".into()],
+        }));
+        assert_eq!(m.width_of("p"), Some(8));
+        assert_eq!(m.width_of("w"), Some(16));
+        assert_eq!(m.width_of("nope"), None);
+    }
+}

@@ -1,0 +1,13 @@
+//! Verilog frontend: lexer, structural parser, printer, and the rewriter
+//! capabilities required by the hierarchy-rebuild pass (replaces Slang in
+//! the paper's toolchain).
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod printer;
+pub mod rewriter;
+
+pub use ast::{VFile, VInst, VItem, VModule, VPort};
+pub use parser::{parse_file, parse_module};
+pub use printer::print_module;

@@ -1,0 +1,972 @@
+//! Structural Verilog parser.
+//!
+//! Parses module signatures, net declarations, `assign` statements, and
+//! submodule instantiations precisely; captures everything else verbatim
+//! as raw text (see [`crate::verilog::ast`]). Width expressions over
+//! parameters are folded with a small constant evaluator.
+
+use crate::ir::core::Dir;
+use crate::verilog::ast::*;
+use crate::verilog::lexer::{lex, SpannedTok, Tok};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+pub fn parse_file(src: &str) -> Result<VFile> {
+    let toks = lex(src).map_err(|e| anyhow!("{e}"))?;
+    let mut p = P {
+        src,
+        toks: &toks,
+        i: 0,
+        params: BTreeMap::new(),
+    };
+    let mut file = VFile::default();
+    while !p.eof() {
+        if p.peek_id("module") || p.peek_id("macromodule") {
+            file.modules.push(p.module()?);
+        } else {
+            p.i += 1; // skip directives/junk between modules
+        }
+    }
+    Ok(file)
+}
+
+/// Parse a source expected to contain exactly one module.
+pub fn parse_module(src: &str) -> Result<VModule> {
+    let f = parse_file(src)?;
+    match f.modules.len() {
+        1 => Ok(f.modules.into_iter().next().unwrap()),
+        n => bail!("expected exactly 1 module, found {n}"),
+    }
+}
+
+struct P<'a> {
+    src: &'a str,
+    toks: &'a [SpannedTok],
+    i: usize,
+    /// parameter environment for width folding.
+    params: BTreeMap<String, i64>,
+}
+
+impl<'a> P<'a> {
+    fn eof(&self) -> bool {
+        self.i >= self.toks.len()
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i).map(|t| &t.tok)
+    }
+
+    fn peek_at(&self, k: usize) -> Option<&Tok> {
+        self.toks.get(self.i + k).map(|t| &t.tok)
+    }
+
+    fn peek_id(&self, s: &str) -> bool {
+        matches!(self.peek(), Some(t) if t.is_id(s))
+    }
+
+    fn peek_sym(&self, s: &str) -> bool {
+        matches!(self.peek(), Some(t) if t.is_sym(s))
+    }
+
+    fn bump(&mut self) -> Result<&'a SpannedTok> {
+        let t = self.toks.get(self.i).ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn expect_sym(&mut self, s: &str) -> Result<()> {
+        let t = self.bump()?;
+        if t.tok.is_sym(s) {
+            Ok(())
+        } else {
+            bail!("line {}: expected '{}', found '{}'", t.line, s, t.tok)
+        }
+    }
+
+    fn expect_id(&mut self) -> Result<String> {
+        let t = self.bump()?;
+        t.tok
+            .id()
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("line {}: expected identifier, found '{}'", t.line, t.tok))
+    }
+
+    /// Raw source text between token indices [from, to).
+    fn text(&self, from: usize, to: usize) -> String {
+        if from >= to {
+            return String::new();
+        }
+        let s = self.toks[from].start;
+        let e = self.toks[to - 1].end;
+        self.src[s..e].to_string()
+    }
+
+    /// Advance past a balanced `(...)` (cursor must be on `(`); returns the
+    /// token range inside the parens.
+    fn balanced_parens(&mut self) -> Result<(usize, usize)> {
+        self.expect_sym("(")?;
+        let start = self.i;
+        let mut depth = 1usize;
+        while depth > 0 {
+            let t = self.bump()?;
+            match &t.tok {
+                Tok::Sym(s) if s == "(" => depth += 1,
+                Tok::Sym(s) if s == ")" => depth -= 1,
+                _ => {}
+            }
+        }
+        Ok((start, self.i - 1))
+    }
+
+    fn module(&mut self) -> Result<VModule> {
+        self.bump()?; // module
+        let name = self.expect_id()?;
+        let mut m = VModule::new(&name);
+        self.params.clear();
+
+        // #(parameter ...) header
+        if self.peek_sym("#") {
+            self.bump()?;
+            self.param_header(&mut m)?;
+        }
+        // port list
+        if self.peek_sym("(") {
+            self.port_list(&mut m)?;
+        }
+        self.expect_sym(";")?;
+
+        // body items until endmodule
+        while !self.peek_id("endmodule") {
+            if self.eof() {
+                bail!("module '{name}': missing endmodule");
+            }
+            self.item(&mut m)?;
+        }
+        self.bump()?; // endmodule
+        Ok(m)
+    }
+
+    fn param_header(&mut self, m: &mut VModule) -> Result<()> {
+        self.expect_sym("(")?;
+        loop {
+            if self.peek_sym(")") {
+                self.bump()?;
+                break;
+            }
+            if self.peek_id("parameter") || self.peek_id("localparam") {
+                self.bump()?;
+            }
+            // optional type keywords
+            while self.peek_id("integer") || self.peek_id("int") || self.peek_id("signed") {
+                self.bump()?;
+            }
+            if self.peek_sym("[") {
+                self.skip_range()?;
+            }
+            let pname = self.expect_id()?;
+            let mut default = String::new();
+            if self.peek_sym("=") {
+                self.bump()?;
+                let start = self.i;
+                let mut depth = 0usize;
+                while !self.eof() {
+                    match self.peek() {
+                        Some(t) if t.is_sym("(") || t.is_sym("[") || t.is_sym("{") => depth += 1,
+                        Some(t) if t.is_sym("[") => depth += 1,
+                        Some(t) if t.is_sym(")") && depth == 0 => break,
+                        Some(t) if (t.is_sym(")") || t.is_sym("]") || t.is_sym("}")) => depth -= 1,
+                        Some(t) if t.is_sym(",") && depth == 0 => break,
+                        _ => {}
+                    }
+                    self.i += 1;
+                }
+                default = self.text(start, self.i);
+            }
+            if let Some(v) = self.eval_const(&default) {
+                self.params.insert(pname.clone(), v);
+            }
+            m.params.push(VParam {
+                name: pname,
+                default,
+            });
+            if self.peek_sym(",") {
+                self.bump()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn port_list(&mut self, m: &mut VModule) -> Result<()> {
+        self.expect_sym("(")?;
+        if self.peek_sym(")") {
+            self.bump()?;
+            return Ok(());
+        }
+        // Two styles: ANSI (`input wire [7:0] a, output b`) or non-ANSI
+        // (bare names, directions declared in the body).
+        let mut cur_dir: Option<Dir> = None;
+        let mut cur_width = 1u32;
+        let mut cur_net = "wire".to_string();
+        loop {
+            if self.peek_id("input") || self.peek_id("output") || self.peek_id("inout") {
+                let d = self.expect_id()?;
+                cur_dir = Dir::parse(&d);
+                cur_net = "wire".into();
+                cur_width = 1;
+                if self.peek_id("wire") || self.peek_id("reg") || self.peek_id("logic") {
+                    cur_net = self.expect_id()?;
+                    if cur_net == "logic" {
+                        cur_net = "wire".into();
+                    }
+                }
+                if self.peek_id("signed") {
+                    self.bump()?;
+                }
+                if self.peek_sym("[") {
+                    cur_width = self.range_width()?;
+                }
+            }
+            let pname = self.expect_id()?;
+            m.ports.push(VPort {
+                name: pname,
+                dir: cur_dir.unwrap_or(Dir::In),
+                width: cur_width,
+                net: cur_net.clone(),
+            });
+            // Mark non-ANSI ports: dir unknown until body declarations.
+            if cur_dir.is_none() {
+                m.ports.last_mut().unwrap().net = "undeclared".into();
+            }
+            match self.bump()?.tok.clone() {
+                Tok::Sym(s) if s == "," => continue,
+                Tok::Sym(s) if s == ")" => break,
+                t => bail!("port list: unexpected '{t}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse `[msb:lsb]` returning the width; cursor on `[`.
+    fn range_width(&mut self) -> Result<u32> {
+        self.expect_sym("[")?;
+        let start = self.i;
+        let mut depth = 0usize;
+        let mut colon = None;
+        while !self.eof() {
+            match self.peek() {
+                Some(t) if t.is_sym("[") || t.is_sym("(") => depth += 1,
+                Some(t) if t.is_sym("]") && depth == 0 => break,
+                Some(t) if t.is_sym("]") || t.is_sym(")") => depth -= 1,
+                Some(t) if t.is_sym(":") && depth == 0 && colon.is_none() => colon = Some(self.i),
+                _ => {}
+            }
+            self.i += 1;
+        }
+        let end = self.i;
+        self.expect_sym("]")?;
+        let colon = colon.ok_or_else(|| anyhow!("range without ':'"))?;
+        let msb_txt = self.text(start, colon);
+        let lsb_txt = self.text(colon + 1, end);
+        let msb = self
+            .eval_const(&msb_txt)
+            .ok_or_else(|| anyhow!("cannot fold range msb '{msb_txt}'"))?;
+        let lsb = self
+            .eval_const(&lsb_txt)
+            .ok_or_else(|| anyhow!("cannot fold range lsb '{lsb_txt}'"))?;
+        Ok(((msb - lsb).unsigned_abs() + 1) as u32)
+    }
+
+    fn skip_range(&mut self) -> Result<()> {
+        self.expect_sym("[")?;
+        let mut depth = 1usize;
+        while depth > 0 {
+            let t = self.bump()?;
+            match &t.tok {
+                Tok::Sym(s) if s == "[" => depth += 1,
+                Tok::Sym(s) if s == "]" => depth -= 1,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold a constant expression: integers, parameters, + - * / ( ).
+    fn eval_const(&self, text: &str) -> Option<i64> {
+        let toks = lex(text).ok()?;
+        let mut ev = ConstEval {
+            toks: &toks,
+            i: 0,
+            params: &self.params,
+        };
+        let v = ev.expr()?;
+        if ev.i == toks.len() {
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    fn item(&mut self, m: &mut VModule) -> Result<()> {
+        let t = self.peek().cloned().ok_or_else(|| anyhow!("EOF in module body"))?;
+        match &t {
+            Tok::Id(kw) => match kw.as_str() {
+                "wire" | "reg" | "logic" => self.net_decl(m),
+                "assign" => self.assign_item(m),
+                "input" | "output" | "inout" => self.nonansi_port_decl(m),
+                "always" | "always_ff" | "always_comb" | "always_latch" | "initial" => {
+                    let raw = self.capture_always()?;
+                    m.items.push(VItem::Raw(raw));
+                    Ok(())
+                }
+                "function" => self.capture_until_kw(m, "endfunction"),
+                "task" => self.capture_until_kw(m, "endtask"),
+                "generate" => self.capture_until_kw(m, "endgenerate"),
+                "parameter" => {
+                    // body parameter decl: record then keep raw
+                    let raw = self.capture_stmt_raw()?;
+                    self.record_body_param(&raw);
+                    m.items.push(VItem::Raw(raw));
+                    Ok(())
+                }
+                "localparam" | "genvar" | "integer" | "real" | "time" | "event"
+                | "specify" | "defparam" => {
+                    if kw == "specify" {
+                        return self.capture_until_kw(m, "endspecify");
+                    }
+                    let raw = self.capture_stmt_raw()?;
+                    if kw == "localparam" {
+                        self.record_body_param(&raw);
+                    }
+                    m.items.push(VItem::Raw(raw));
+                    Ok(())
+                }
+                _ => {
+                    // Likely an instantiation: Ident [#(...)] Ident ( ... ) ;
+                    if self.looks_like_instance() {
+                        let inst = self.instance()?;
+                        m.items.push(VItem::Instance(inst));
+                        Ok(())
+                    } else {
+                        let raw = self.capture_stmt_raw()?;
+                        m.items.push(VItem::Raw(raw));
+                        Ok(())
+                    }
+                }
+            },
+            _ => {
+                let raw = self.capture_stmt_raw()?;
+                m.items.push(VItem::Raw(raw));
+                Ok(())
+            }
+        }
+    }
+
+    fn record_body_param(&mut self, raw: &str) {
+        // parameter NAME = <const>; (possibly multiple comma-separated)
+        let body = raw
+            .trim_start_matches("parameter")
+            .trim_start_matches("localparam")
+            .trim_end_matches(';');
+        for part in body.split(',') {
+            if let Some((name, val)) = part.split_once('=') {
+                let name = name
+                    .trim()
+                    .rsplit(|c: char| c.is_whitespace() || c == ']')
+                    .next()
+                    .unwrap_or("")
+                    .to_string();
+                if let Some(v) = self.eval_const(val.trim()) {
+                    self.params.insert(name, v);
+                }
+            }
+        }
+    }
+
+    fn net_decl(&mut self, m: &mut VModule) -> Result<()> {
+        let start_tok = self.i;
+        let mut kind = self.expect_id()?;
+        if kind == "logic" {
+            kind = "wire".into();
+        }
+        if self.peek_id("signed") {
+            self.bump()?;
+        }
+        let mut width = 1u32;
+        if self.peek_sym("[") {
+            match self.range_width() {
+                Ok(w) => width = w,
+                Err(_) => {
+                    // Unfoldable range: keep raw.
+                    return self.raw_from(start_tok, m);
+                }
+            }
+        }
+        let mut names = Vec::new();
+        loop {
+            if self.peek().map(|t| t.id().is_some()) != Some(true) {
+                return self.raw_from(start_tok, m);
+            }
+            let n = self.expect_id()?;
+            // Array dims or initializer → raw.
+            if self.peek_sym("[") || self.peek_sym("=") {
+                return self.raw_from(start_tok, m);
+            }
+            names.push(n);
+            match self.bump()?.tok.clone() {
+                Tok::Sym(s) if s == "," => continue,
+                Tok::Sym(s) if s == ";" => break,
+                _ => return self.raw_from(start_tok, m),
+            }
+        }
+        m.items.push(VItem::Net(VNet { kind, width, names }));
+        Ok(())
+    }
+
+    /// Rewind to `start_tok` and capture the statement as raw text.
+    fn raw_from(&mut self, start_tok: usize, m: &mut VModule) -> Result<()> {
+        self.i = start_tok;
+        let raw = self.capture_stmt_raw()?;
+        m.items.push(VItem::Raw(raw));
+        Ok(())
+    }
+
+    fn nonansi_port_decl(&mut self, m: &mut VModule) -> Result<()> {
+        let dir = Dir::parse(&self.expect_id()?).unwrap();
+        let mut net = "wire".to_string();
+        if self.peek_id("wire") || self.peek_id("reg") || self.peek_id("logic") {
+            net = self.expect_id()?;
+        }
+        if self.peek_id("signed") {
+            self.bump()?;
+        }
+        let mut width = 1u32;
+        if self.peek_sym("[") {
+            width = self.range_width()?;
+        }
+        loop {
+            let name = self.expect_id()?;
+            if let Some(p) = m.ports.iter_mut().find(|p| p.name == name) {
+                p.dir = dir;
+                p.width = width;
+                p.net = net.clone();
+            } else {
+                m.ports.push(VPort {
+                    name,
+                    dir,
+                    width,
+                    net: net.clone(),
+                });
+            }
+            match self.bump()?.tok.clone() {
+                Tok::Sym(s) if s == "," => continue,
+                Tok::Sym(s) if s == ";" => break,
+                t => bail!("port decl: unexpected '{t}'"),
+            }
+        }
+        Ok(())
+    }
+
+    fn assign_item(&mut self, m: &mut VModule) -> Result<()> {
+        self.bump()?; // assign
+        // optional drive strength / delay: #1, (strong0, ...)
+        if self.peek_sym("#") {
+            self.bump()?;
+            self.bump()?; // delay value
+        }
+        let lhs_start = self.i;
+        let mut depth = 0usize;
+        while !self.eof() {
+            match self.peek() {
+                Some(t) if t.is_sym("{") || t.is_sym("[") || t.is_sym("(") => depth += 1,
+                Some(t) if t.is_sym("}") || t.is_sym("]") || t.is_sym(")") => depth -= 1,
+                Some(t) if t.is_sym("=") && depth == 0 => break,
+                _ => {}
+            }
+            self.i += 1;
+        }
+        let lhs = self.text(lhs_start, self.i);
+        self.expect_sym("=")?;
+        let rhs_start = self.i;
+        let mut depth = 0usize;
+        while !self.eof() {
+            match self.peek() {
+                Some(t) if t.is_sym("{") || t.is_sym("[") || t.is_sym("(") => depth += 1,
+                Some(t) if t.is_sym("}") || t.is_sym("]") || t.is_sym(")") => depth -= 1,
+                Some(t) if t.is_sym(";") && depth == 0 => break,
+                _ => {}
+            }
+            self.i += 1;
+        }
+        let rhs = self.text(rhs_start, self.i);
+        self.expect_sym(";")?;
+        m.items.push(VItem::Assign(VAssign { lhs, rhs }));
+        Ok(())
+    }
+
+    fn looks_like_instance(&self) -> bool {
+        // Ident Ident (   OR   Ident #( ... ) Ident (
+        let id0 = matches!(self.peek(), Some(Tok::Id(_)));
+        if !id0 {
+            return false;
+        }
+        if matches!(self.peek_at(1), Some(Tok::Id(_)))
+            && matches!(self.peek_at(2), Some(t) if t.is_sym("("))
+        {
+            return true;
+        }
+        matches!(self.peek_at(1), Some(t) if t.is_sym("#"))
+    }
+
+    fn instance(&mut self) -> Result<VInst> {
+        let module = self.expect_id()?;
+        let mut params = Vec::new();
+        if self.peek_sym("#") {
+            self.bump()?;
+            let (s, e) = self.balanced_parens()?;
+            params = self.parse_named_bindings(s, e);
+        }
+        let name = self.expect_id()?;
+        // optional instance array range — unsupported, treat as error
+        if self.peek_sym("[") {
+            bail!("instance arrays not supported: {module} {name}[..]");
+        }
+        let (s, e) = self.balanced_parens()?;
+        let conns = self.parse_named_bindings(s, e);
+        self.expect_sym(";")?;
+        Ok(VInst {
+            module,
+            name,
+            params,
+            conns,
+        })
+    }
+
+    /// Parse `.name(expr), .name(), expr, ...` inside token range [s, e).
+    fn parse_named_bindings(&self, s: usize, e: usize) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        let mut i = s;
+        while i < e {
+            if self.toks[i].tok.is_sym(".") && i + 1 < e {
+                let port = self.toks[i + 1].tok.id().unwrap_or("").to_string();
+                // expect ( expr )
+                let mut j = i + 2;
+                if j < e && self.toks[j].tok.is_sym("(") {
+                    let mut depth = 1usize;
+                    let estart = j + 1;
+                    j += 1;
+                    while j < e && depth > 0 {
+                        if self.toks[j].tok.is_sym("(") {
+                            depth += 1;
+                        } else if self.toks[j].tok.is_sym(")") {
+                            depth -= 1;
+                        }
+                        j += 1;
+                    }
+                    let expr = self.text(estart, j - 1);
+                    out.push((port, expr));
+                    i = j;
+                } else {
+                    // .port shorthand (SystemVerilog .name) — expr = name
+                    out.push((port.clone(), port));
+                    i += 2;
+                }
+                // skip comma
+                while i < e && self.toks[i].tok.is_sym(",") {
+                    i += 1;
+                }
+            } else {
+                // positional: capture until comma at depth 0
+                let start = i;
+                let mut depth = 0usize;
+                while i < e {
+                    let t = &self.toks[i].tok;
+                    if t.is_sym("(") || t.is_sym("[") || t.is_sym("{") {
+                        depth += 1;
+                    } else if t.is_sym(")") || t.is_sym("]") || t.is_sym("}") {
+                        depth -= 1;
+                    } else if t.is_sym(",") && depth == 0 {
+                        break;
+                    }
+                    i += 1;
+                }
+                let expr = self.text(start, i);
+                if !expr.trim().is_empty() {
+                    out.push((String::new(), expr));
+                }
+                if i < e {
+                    i += 1; // comma
+                }
+            }
+        }
+        out
+    }
+
+    /// Capture `always …` / `initial …` including its statement, verbatim.
+    fn capture_always(&mut self) -> Result<String> {
+        let start = self.i;
+        self.bump()?; // always/initial
+        // optional event control @(...) or @*
+        if self.peek_sym("@") {
+            self.bump()?;
+            if self.peek_sym("(") {
+                self.balanced_parens()?;
+            } else {
+                self.bump()?; // @* or @ident
+            }
+        }
+        self.scan_stmt()?;
+        Ok(self.text(start, self.i))
+    }
+
+    /// Skip one behavioural statement (begin/end blocks, if/else, case,
+    /// for/while, or simple `…;`).
+    fn scan_stmt(&mut self) -> Result<()> {
+        match self.peek() {
+            Some(t) if t.is_id("begin") => {
+                self.bump()?;
+                // optional : label
+                if self.peek_sym(":") {
+                    self.bump()?;
+                    self.bump()?;
+                }
+                let mut depth = 1usize;
+                while depth > 0 {
+                    let t = self.bump()?;
+                    match &t.tok {
+                        Tok::Id(s) if s == "begin" || s == "case" || s == "casex"
+                            || s == "casez" || s == "fork" => depth += 1,
+                        Tok::Id(s) if s == "end" || s == "endcase" || s == "join" => depth -= 1,
+                        _ => {}
+                    }
+                }
+                Ok(())
+            }
+            Some(t) if t.is_id("if") => {
+                self.bump()?;
+                self.balanced_parens()?;
+                self.scan_stmt()?;
+                if self.peek_id("else") {
+                    self.bump()?;
+                    self.scan_stmt()?;
+                }
+                Ok(())
+            }
+            Some(t) if t.is_id("case") || t.is_id("casex") || t.is_id("casez") => {
+                let mut depth = 1usize;
+                self.bump()?;
+                while depth > 0 {
+                    let t = self.bump()?;
+                    match &t.tok {
+                        Tok::Id(s) if s == "case" || s == "casex" || s == "casez"
+                            || s == "begin" || s == "fork" => depth += 1,
+                        Tok::Id(s) if s == "endcase" || s == "end" || s == "join" => depth -= 1,
+                        _ => {}
+                    }
+                }
+                Ok(())
+            }
+            Some(t) if t.is_id("for") || t.is_id("while") || t.is_id("repeat") => {
+                self.bump()?;
+                self.balanced_parens()?;
+                self.scan_stmt()
+            }
+            Some(t) if t.is_sym("@") || t.is_sym("#") => {
+                self.bump()?;
+                if self.peek_sym("(") {
+                    self.balanced_parens()?;
+                } else {
+                    self.bump()?;
+                }
+                self.scan_stmt()
+            }
+            _ => {
+                // simple statement up to `;` at depth 0
+                let mut depth = 0usize;
+                loop {
+                    let t = self.bump()?;
+                    match &t.tok {
+                        Tok::Sym(s) if s == "(" || s == "[" || s == "{" => depth += 1,
+                        Tok::Sym(s) if s == ")" || s == "]" || s == "}" => depth -= 1,
+                        Tok::Sym(s) if s == ";" && depth == 0 => return Ok(()),
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    /// Capture raw text up to and including the next `;` at bracket depth 0.
+    fn capture_stmt_raw(&mut self) -> Result<String> {
+        let start = self.i;
+        let mut depth = 0usize;
+        loop {
+            let t = self.bump()?;
+            match &t.tok {
+                Tok::Sym(s) if s == "(" || s == "[" || s == "{" => depth += 1,
+                Tok::Sym(s) if s == ")" || s == "]" || s == "}" => depth = depth.saturating_sub(1),
+                Tok::Sym(s) if s == ";" && depth == 0 => break,
+                _ => {}
+            }
+        }
+        Ok(self.text(start, self.i))
+    }
+
+    /// Capture raw from current token through the closing keyword `endkw`.
+    fn capture_until_kw(&mut self, m: &mut VModule, endkw: &str) -> Result<()> {
+        let start = self.i;
+        loop {
+            let t = self.bump()?;
+            if t.tok.is_id(endkw) {
+                break;
+            }
+        }
+        m.items.push(VItem::Raw(self.text(start, self.i)));
+        Ok(())
+    }
+}
+
+struct ConstEval<'a> {
+    toks: &'a [SpannedTok],
+    i: usize,
+    params: &'a BTreeMap<String, i64>,
+}
+
+impl<'a> ConstEval<'a> {
+    fn expr(&mut self) -> Option<i64> {
+        let mut v = self.term()?;
+        while let Some(t) = self.toks.get(self.i) {
+            match &t.tok {
+                Tok::Sym(s) if s == "+" => {
+                    self.i += 1;
+                    v += self.term()?;
+                }
+                Tok::Sym(s) if s == "-" => {
+                    self.i += 1;
+                    v -= self.term()?;
+                }
+                _ => break,
+            }
+        }
+        Some(v)
+    }
+
+    fn term(&mut self) -> Option<i64> {
+        let mut v = self.atom()?;
+        while let Some(t) = self.toks.get(self.i) {
+            match &t.tok {
+                Tok::Sym(s) if s == "*" => {
+                    self.i += 1;
+                    v *= self.atom()?;
+                }
+                Tok::Sym(s) if s == "/" => {
+                    self.i += 1;
+                    let d = self.atom()?;
+                    if d == 0 {
+                        return None;
+                    }
+                    v /= d;
+                }
+                _ => break,
+            }
+        }
+        Some(v)
+    }
+
+    fn atom(&mut self) -> Option<i64> {
+        let t = self.toks.get(self.i)?;
+        self.i += 1;
+        match &t.tok {
+            Tok::Num(n) => {
+                if let Some((_, val)) = crate::verilog::ast::parse_literal(n) {
+                    Some(val as i64)
+                } else {
+                    n.replace('_', "").parse().ok()
+                }
+            }
+            Tok::Id(id) => self.params.get(id).copied(),
+            Tok::Sym(s) if s == "(" => {
+                let v = self.expr()?;
+                let close = self.toks.get(self.i)?;
+                if close.tok.is_sym(")") {
+                    self.i += 1;
+                    Some(v)
+                } else {
+                    None
+                }
+            }
+            Tok::Sym(s) if s == "-" => Some(-self.atom()?),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LLM_TOP: &str = r#"
+// Top-level interconnect of the LLM accelerator (cf. Fig 4a).
+module LLM #(parameter W = 64, parameter DEPTH = W/2) (
+  input  wire ap_clk,
+  input  wire ap_rst_n,
+  input  wire [W-1:0] in_data,
+  input  wire in_vld,
+  output wire in_rdy,
+  output wire [31:0] out_data
+);
+  wire [63:0] I_wire;
+  wire I_wire_vld, I_wire_rdy;
+  reg [7:0] ctrl_state;
+
+  assign in_rdy = I_wire_rdy & ~ctrl_state[0];
+
+  always @(posedge ap_clk) begin
+    if (!ap_rst_n) ctrl_state <= 8'd0;
+    else ctrl_state <= ctrl_state + 1;
+  end
+
+  InputLoader #(.W(W)) InputLoader_inst (
+    .clk(ap_clk),
+    .data(in_data),
+    .o(I_wire),
+    .o_vld(I_wire_vld),
+    .o_rdy(I_wire_rdy)
+  );
+
+  FIFO FIFO_inst (.I(I_wire), .I_vld(I_wire_vld), .I_rdy(I_wire_rdy), .O(out_data), .unused());
+endmodule
+"#;
+
+    #[test]
+    fn parses_header_and_params() {
+        let m = parse_module(LLM_TOP).unwrap();
+        assert_eq!(m.name, "LLM");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].name, "W");
+        // DEPTH = W/2 folded with W=64
+        assert_eq!(m.ports.len(), 6);
+        let ind = m.port("in_data").unwrap();
+        assert_eq!(ind.width, 64); // W-1:0 folded
+        assert_eq!(ind.dir, Dir::In);
+        assert_eq!(m.port("out_data").unwrap().dir, Dir::Out);
+    }
+
+    #[test]
+    fn parses_nets_and_assigns() {
+        let m = parse_module(LLM_TOP).unwrap();
+        let nets: Vec<_> = m.nets().collect();
+        assert_eq!(nets.len(), 3);
+        assert_eq!(nets[0].width, 64);
+        assert_eq!(nets[1].names, vec!["I_wire_vld", "I_wire_rdy"]);
+        let assigns: Vec<_> = m.assigns().collect();
+        assert_eq!(assigns.len(), 1);
+        assert_eq!(assigns[0].lhs.trim(), "in_rdy");
+        assert!(assigns[0].rhs.contains("ctrl_state"));
+    }
+
+    #[test]
+    fn preserves_always_block_raw() {
+        let m = parse_module(LLM_TOP).unwrap();
+        let raws: Vec<_> = m
+            .items
+            .iter()
+            .filter_map(|i| match i {
+                VItem::Raw(r) => Some(r),
+                _ => None,
+            })
+            .collect();
+        assert!(raws.iter().any(|r| r.contains("ctrl_state <= ctrl_state + 1")));
+        // the whole always block, including the trailing `end`
+        assert!(raws.iter().any(|r| r.trim_start().starts_with("always") && r.trim_end().ends_with("end")));
+    }
+
+    #[test]
+    fn parses_instances_with_params() {
+        let m = parse_module(LLM_TOP).unwrap();
+        let insts: Vec<_> = m.instances().collect();
+        assert_eq!(insts.len(), 2);
+        let il = insts[0];
+        assert_eq!(il.module, "InputLoader");
+        assert_eq!(il.name, "InputLoader_inst");
+        assert_eq!(il.params, vec![("W".to_string(), "W".to_string())]);
+        assert_eq!(il.conn("o"), Some("I_wire"));
+        let fifo = insts[1];
+        assert_eq!(fifo.conn("unused"), Some("")); // explicitly open
+    }
+
+    #[test]
+    fn nonansi_ports() {
+        let src = "module M (a, b, c);\ninput [7:0] a;\noutput reg b;\ninout c;\nendmodule";
+        let m = parse_module(src).unwrap();
+        assert_eq!(m.port("a").unwrap().width, 8);
+        assert_eq!(m.port("a").unwrap().dir, Dir::In);
+        assert_eq!(m.port("b").unwrap().net, "reg");
+        assert_eq!(m.port("c").unwrap().dir, Dir::InOut);
+    }
+
+    #[test]
+    fn multiple_modules_per_file() {
+        let src = "module A(); endmodule\nmodule B(input x); endmodule";
+        let f = parse_file(src).unwrap();
+        assert_eq!(f.modules.len(), 2);
+        assert!(f.module("B").unwrap().port("x").is_some());
+    }
+
+    #[test]
+    fn generate_blocks_raw() {
+        let src = "module G(input c);\ngenerate\n genvar i;\n for (i=0;i<4;i=i+1) begin: g\n  buf b(c);\n end\nendgenerate\nendmodule";
+        let m = parse_module(src).unwrap();
+        assert!(m.items.iter().any(|i| matches!(i, VItem::Raw(r) if r.contains("endgenerate"))));
+        // the buf instance inside generate must NOT be extracted
+        assert_eq!(m.instances().count(), 0);
+    }
+
+    #[test]
+    fn if_else_single_statement_always() {
+        let src = "module T(input c, output reg q);\nalways @(posedge c) if (c) q <= 1; else q <= 0;\nendmodule";
+        let m = parse_module(src).unwrap();
+        let raw = m
+            .items
+            .iter()
+            .find_map(|i| match i {
+                VItem::Raw(r) => Some(r),
+                _ => None,
+            })
+            .unwrap();
+        assert!(raw.contains("else q <= 0;"), "{raw}");
+    }
+
+    #[test]
+    fn localparam_updates_env() {
+        let src = "module L();\nlocalparam W = 16;\nwire [W-1:0] d;\nendmodule";
+        let m = parse_module(src).unwrap();
+        assert_eq!(m.nets().next().unwrap().width, 16);
+    }
+
+    #[test]
+    fn arrayed_net_kept_raw() {
+        let src = "module R();\nreg [7:0] mem [0:255];\nendmodule";
+        let m = parse_module(src).unwrap();
+        assert_eq!(m.nets().count(), 0);
+        assert!(m.items.iter().any(|i| matches!(i, VItem::Raw(r) if r.contains("mem"))));
+    }
+
+    #[test]
+    fn errors_on_missing_endmodule() {
+        assert!(parse_module("module X(input a);").is_err());
+    }
+
+    #[test]
+    fn positional_connections() {
+        let src = "module P(input a, input b);\nsub s0 (a, b);\nendmodule";
+        let m = parse_module(src).unwrap();
+        let inst = m.instances().next().unwrap();
+        assert_eq!(
+            inst.conns,
+            vec![
+                (String::new(), "a".to_string()),
+                (String::new(), "b".to_string())
+            ]
+        );
+    }
+}

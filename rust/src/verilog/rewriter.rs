@@ -1,0 +1,320 @@
+//! Verilog rewriter — the three capabilities the hierarchy-rebuild pass
+//! requires of *any* source format (§3.3): (1) extraction of submodule
+//! names and port connections, (2) addition of new ports to a module, and
+//! (3) connection of expressions to these new ports via `assign`.
+//!
+//! `extract_aux` combines them to split a Verilog module into its
+//! submodule instances plus a residual **aux module** holding all original
+//! logic, with fresh ports standing in for each extracted connection.
+
+use crate::ir::core::Dir;
+use crate::verilog::ast::*;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// Capability (1): extracted instance info.
+#[derive(Debug, Clone)]
+pub struct ExtractedInst {
+    pub inst: VInst,
+    /// (port, expr, aux_port_name, dir as seen on the aux module, width).
+    pub bindings: Vec<AuxBinding>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AuxBinding {
+    pub sub_port: String,
+    /// Original connection expression text ("" for open).
+    pub expr: String,
+    pub aux_port: String,
+    /// Direction of the new aux port: flipped vs the submodule port
+    /// (submodule input ⇒ aux output drives it).
+    pub aux_dir: Dir,
+    pub width: u32,
+}
+
+/// Result of [`extract_aux`].
+#[derive(Debug, Clone)]
+pub struct AuxSplit {
+    /// The residual module: original logic, instances removed, new ports
+    /// added, glue assigns appended.
+    pub aux: VModule,
+    /// Extracted instances with their aux-port bindings.
+    pub extracted: Vec<ExtractedInst>,
+}
+
+/// Port widths/directions of extraction targets must be resolvable: the
+/// callback maps `(module_name, port_name)` to `(dir, width)` for known
+/// library modules; returns None for unknown modules (those instances are
+/// left inside the aux).
+pub fn extract_aux(
+    m: &VModule,
+    aux_name: &str,
+    lookup: &dyn Fn(&str, &str) -> Option<(Dir, u32)>,
+) -> Result<AuxSplit> {
+    extract_aux_with_skip(m, aux_name, lookup, &|_, _, _| false)
+}
+
+/// Like [`extract_aux`], but `skip(inst, port, expr)` can mark bindings
+/// that should bypass the aux module entirely — the hierarchy-rebuild pass
+/// uses this to keep clock/reset connections as direct broadcast nets
+/// instead of threading them through aux ports. Skipped bindings keep
+/// their original expression and get an empty `aux_port`.
+pub fn extract_aux_with_skip(
+    m: &VModule,
+    aux_name: &str,
+    lookup: &dyn Fn(&str, &str) -> Option<(Dir, u32)>,
+    skip: &dyn Fn(&VInst, &str, &str) -> bool,
+) -> Result<AuxSplit> {
+    let mut aux = VModule::new(aux_name);
+    aux.params = m.params.clone();
+    aux.ports = m.ports.clone();
+    let mut extracted = Vec::new();
+    let mut used_names: BTreeSet<String> = m.ports.iter().map(|p| p.name.clone()).collect();
+    for n in m.nets() {
+        used_names.extend(n.names.iter().cloned());
+    }
+
+    for item in &m.items {
+        match item {
+            VItem::Instance(inst) => {
+                // Extract only if every named connection resolves on the
+                // target module; otherwise keep the instance in the aux.
+                let resolvable = inst.conns.iter().all(|(p, _)| {
+                    !p.is_empty() && lookup(&inst.module, p).is_some()
+                });
+                if !resolvable {
+                    aux.items.push(item.clone());
+                    continue;
+                }
+                let mut bindings = Vec::new();
+                for (port, expr) in &inst.conns {
+                    let (dir, width) = lookup(&inst.module, port).unwrap();
+                    if dir == Dir::InOut {
+                        bail!(
+                            "inout port {}.{} cannot be extracted",
+                            inst.module,
+                            port
+                        );
+                    }
+                    if expr.trim().is_empty() || skip(inst, port, expr) {
+                        // Explicitly open, or a clock/reset-style direct
+                        // connection: no aux port needed.
+                        bindings.push(AuxBinding {
+                            sub_port: port.clone(),
+                            expr: expr.trim().to_string(),
+                            aux_port: String::new(),
+                            aux_dir: dir.flipped(),
+                            width,
+                        });
+                        continue;
+                    }
+                    let mut aux_port = format!("{}_{}", inst.name, port);
+                    while used_names.contains(&aux_port) {
+                        aux_port.push('_');
+                    }
+                    used_names.insert(aux_port.clone());
+                    bindings.push(AuxBinding {
+                        sub_port: port.clone(),
+                        expr: expr.clone(),
+                        aux_port,
+                        aux_dir: dir.flipped(),
+                        width,
+                    });
+                }
+                extracted.push(ExtractedInst {
+                    inst: inst.clone(),
+                    bindings,
+                });
+            }
+            other => aux.items.push(other.clone()),
+        }
+    }
+
+    // Capabilities (2) + (3): add aux ports and glue assigns.
+    for e in &extracted {
+        for b in &e.bindings {
+            if b.aux_port.is_empty() {
+                continue;
+            }
+            aux.ports.push(VPort {
+                name: b.aux_port.clone(),
+                dir: b.aux_dir,
+                width: b.width,
+                net: "wire".into(),
+            });
+            match b.aux_dir {
+                // Submodule input: aux drives it with the original expr.
+                Dir::Out => aux.items.push(VItem::Assign(VAssign {
+                    lhs: b.aux_port.clone(),
+                    rhs: b.expr.clone(),
+                })),
+                // Submodule output: the original expr (an lvalue —
+                // identifier or concat) receives the value from the new
+                // aux input port.
+                Dir::In => {
+                    if is_single_identifier(&b.expr) && aux.width_of(b.expr.trim()).is_none() {
+                        // The identifier was only used as an implicit net
+                        // on the instance; declare it so the assign is
+                        // well-formed.
+                        aux.items.insert(
+                            0,
+                            VItem::Net(VNet {
+                                kind: "wire".into(),
+                                width: b.width,
+                                names: vec![b.expr.trim().to_string()],
+                            }),
+                        );
+                    }
+                    aux.items.push(VItem::Assign(VAssign {
+                        lhs: b.expr.clone(),
+                        rhs: b.aux_port.clone(),
+                    }));
+                }
+                Dir::InOut => unreachable!(),
+            }
+        }
+    }
+    Ok(AuxSplit { aux, extracted })
+}
+
+/// Capability (2) standalone: add a port to a module.
+pub fn add_port(m: &mut VModule, name: &str, dir: Dir, width: u32) {
+    m.ports.push(VPort {
+        name: name.into(),
+        dir,
+        width,
+        net: "wire".into(),
+    });
+}
+
+/// Capability (3) standalone: connect an expression to a port via assign.
+pub fn connect_expr(m: &mut VModule, port: &str, expr: &str, port_is_lhs: bool) {
+    let (lhs, rhs) = if port_is_lhs {
+        (port.to_string(), expr.to_string())
+    } else {
+        (expr.to_string(), port.to_string())
+    };
+    m.items.push(VItem::Assign(VAssign { lhs, rhs }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verilog::parser::parse_module;
+    use crate::verilog::printer::print_module;
+
+    const SRC: &str = r#"
+module LLM (
+  input  wire ap_clk,
+  input  wire [63:0] in_data,
+  output wire [31:0] out_data
+);
+  wire [63:0] I_wire;
+  reg  [7:0] state;
+  always @(posedge ap_clk) state <= state + 1;
+
+  InputLoader il (.clk(ap_clk), .data(in_data & 64'hFF), .o(I_wire));
+  FIFO f0 (.I(I_wire), .O(fifo_out), .dbg());
+  UnknownIP u0 (.x(I_wire));
+endmodule
+"#;
+
+    fn lookup(module: &str, port: &str) -> Option<(Dir, u32)> {
+        match (module, port) {
+            ("InputLoader", "clk") => Some((Dir::In, 1)),
+            ("InputLoader", "data") => Some((Dir::In, 64)),
+            ("InputLoader", "o") => Some((Dir::Out, 64)),
+            ("FIFO", "I") => Some((Dir::In, 64)),
+            ("FIFO", "O") => Some((Dir::Out, 32)),
+            ("FIFO", "dbg") => Some((Dir::Out, 1)),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn extracts_known_instances_only() {
+        let m = parse_module(SRC).unwrap();
+        let split = extract_aux(&m, "LLM_Aux", &lookup).unwrap();
+        assert_eq!(split.extracted.len(), 2);
+        // UnknownIP stays inside the aux.
+        assert_eq!(split.aux.instances().count(), 1);
+        assert_eq!(split.aux.instances().next().unwrap().module, "UnknownIP");
+    }
+
+    #[test]
+    fn aux_gains_flipped_ports() {
+        let m = parse_module(SRC).unwrap();
+        let split = extract_aux(&m, "LLM_Aux", &lookup).unwrap();
+        let aux = &split.aux;
+        // il.data is a submodule input ⇒ aux output port il_data.
+        let p = aux.port("il_data").unwrap();
+        assert_eq!(p.dir, Dir::Out);
+        assert_eq!(p.width, 64);
+        // il.o is a submodule output ⇒ aux input port il_o.
+        assert_eq!(aux.port("il_o").unwrap().dir, Dir::In);
+        // Original ports survive.
+        assert!(aux.port("ap_clk").is_some());
+    }
+
+    #[test]
+    fn glue_assigns_preserve_expressions() {
+        let m = parse_module(SRC).unwrap();
+        let split = extract_aux(&m, "LLM_Aux", &lookup).unwrap();
+        let printed = print_module(&split.aux);
+        // Complex input expression moved into the aux.
+        assert!(printed.contains("assign il_data = in_data & 64'hFF;"), "{printed}");
+        // Output port value flows back into the original identifier.
+        assert!(printed.contains("assign I_wire = il_o;"), "{printed}");
+        // Implicit net fifo_out gets declared.
+        assert!(printed.contains("wire [31:0] fifo_out;"), "{printed}");
+        assert!(printed.contains("assign fifo_out = f0_O;"), "{printed}");
+    }
+
+    #[test]
+    fn open_connections_get_no_aux_port() {
+        let m = parse_module(SRC).unwrap();
+        let split = extract_aux(&m, "LLM_Aux", &lookup).unwrap();
+        assert!(split.aux.port("f0_dbg").is_none());
+    }
+
+    #[test]
+    fn residual_logic_survives() {
+        let m = parse_module(SRC).unwrap();
+        let split = extract_aux(&m, "LLM_Aux", &lookup).unwrap();
+        let printed = print_module(&split.aux);
+        assert!(printed.contains("state <= state + 1"));
+        assert!(printed.contains("reg [7:0] state;"));
+    }
+
+    #[test]
+    fn aux_is_reparsable() {
+        let m = parse_module(SRC).unwrap();
+        let split = extract_aux(&m, "LLM_Aux", &lookup).unwrap();
+        let printed = print_module(&split.aux);
+        let re = parse_module(&printed).unwrap();
+        assert_eq!(re.name, "LLM_Aux");
+        assert_eq!(re.ports.len(), split.aux.ports.len());
+    }
+
+    #[test]
+    fn name_collision_resolved() {
+        let src = "module M(input a);\n  wire s0_x;\n  sub s0 (.x(a));\nendmodule";
+        let m = parse_module(src).unwrap();
+        let split = extract_aux(&m, "M_Aux", &|mo, p| {
+            (mo == "sub" && p == "x").then_some((Dir::In, 1))
+        })
+        .unwrap();
+        // s0_x taken ⇒ new port gets underscore suffix.
+        assert!(split.aux.port("s0_x_").is_some());
+    }
+
+    #[test]
+    fn standalone_capabilities() {
+        let mut m = parse_module("module T(input a); endmodule").unwrap();
+        add_port(&mut m, "np", Dir::Out, 4);
+        connect_expr(&mut m, "np", "{a, 3'd0}", true);
+        let p = print_module(&m);
+        assert!(p.contains("output wire [3:0] np"));
+        assert!(p.contains("assign np = {a, 3'd0};"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration: full HLPS flows over every benchmark family, checking the
+//! Table-2 shape invariants end-to-end (import → passes → floorplan →
+//! pipeline → EDA backend), plus export validity of the optimized result.
+
+use rsir::coordinator::flow::{run_hlps, FlowConfig};
+use rsir::device::builtin;
+use rsir::ir::validate;
+
+fn quick() -> FlowConfig {
+    FlowConfig {
+        sa_refine: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cnn_flow_beats_baseline_and_exports() {
+    let dev = builtin::by_name("u250").unwrap();
+    let g = rsir::designs::cnn::generate(&rsir::designs::cnn::CnnConfig { rows: 13, cols: 4 })
+        .unwrap();
+    let mut d = g.design;
+    let report = run_hlps(&mut d, &dev, &quick()).unwrap();
+    assert!(report.optimized.routable());
+    let base = report.baseline_fmax().expect("13x4 baseline routable");
+    assert!(
+        report.optimized.fmax_mhz() > base * 1.2,
+        "base {base:.0} vs {:.0}",
+        report.optimized.fmax_mhz()
+    );
+    // Optimized design is still DRC-clean and exportable Verilog.
+    validate::assert_clean(&d);
+    let bundle = rsir::plugins::export(&d).unwrap();
+    let top_v = bundle.file("design_top.v").unwrap();
+    rsir::verilog::parse_file(top_v).unwrap();
+    assert!(bundle.file("constraints.xdc").unwrap().contains("SLOT_X"));
+}
+
+#[test]
+fn llama2_flow_on_new_device() {
+    // New-platform portability (vp1552): same design, no code changes.
+    let dev = builtin::by_name("vp1552").unwrap();
+    let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
+    let mut d = g.design;
+    let report = run_hlps(&mut d, &dev, &quick()).unwrap();
+    assert!(report.optimized.routable());
+    assert!(report.relay_stations > 0);
+    assert!(report.partitions > 5, "hierarchy must be decomposed");
+    if let Some(imp) = report.improvement_pct() {
+        assert!(imp > 0.0, "no regression: {imp:.0}%");
+    }
+}
+
+#[test]
+fn knn_unroutable_baseline_fixed_by_rir() {
+    let dev = builtin::by_name("u280").unwrap();
+    let g = rsir::designs::knn::generate(&Default::default()).unwrap();
+    let mut d = g.design;
+    let report = run_hlps(&mut d, &dev, &quick()).unwrap();
+    assert!(report.baseline_fmax().is_none(), "KNN baseline must fail");
+    assert!(report.optimized.routable(), "RIR must recover KNN");
+    assert!(report.optimized.fmax_mhz() > 250.0);
+}
+
+#[test]
+fn minimap2_small_gain_no_regression() {
+    let dev = builtin::by_name("vp1552").unwrap();
+    let g = rsir::designs::minimap2::generate().unwrap();
+    let mut d = g.design;
+    let report = run_hlps(&mut d, &dev, &quick()).unwrap();
+    assert!(report.optimized.routable());
+    if let Some(base) = report.baseline_fmax() {
+        // Pre-pipelined design: small gain, but never a big loss.
+        assert!(
+            report.optimized.fmax_mhz() > base * 0.97,
+            "regression: {base:.0} -> {:.0}",
+            report.optimized.fmax_mhz()
+        );
+    }
+}
+
+#[test]
+fn flow_deterministic() {
+    let dev = builtin::by_name("u280").unwrap();
+    let run = || {
+        let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
+        let mut d = g.design;
+        let r = run_hlps(&mut d, &dev, &quick()).unwrap();
+        (r.optimized.fmax_mhz(), r.relay_stations, r.partitions)
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn pjrt_flow_matches_cpu_flow_when_artifacts_exist() {
+    if !rsir::runtime::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dev = builtin::by_name("u280").unwrap();
+    let mut cfg_cpu = FlowConfig::default();
+    cfg_cpu.use_pjrt = false;
+    cfg_cpu.sa.steps = 40;
+    let mut cfg_pjrt = cfg_cpu.clone();
+    cfg_pjrt.use_pjrt = true;
+    let run = |cfg: &FlowConfig| {
+        let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
+        let mut d = g.design;
+        run_hlps(&mut d, &dev, cfg).unwrap().optimized.fmax_mhz()
+    };
+    // Same seeds + bit-identical cost function => identical outcome.
+    assert_eq!(run(&cfg_cpu), run(&cfg_pjrt));
+}

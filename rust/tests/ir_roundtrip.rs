@@ -1,0 +1,189 @@
+//! Integration: IR round-trip and pass-invariant properties over
+//! randomized designs (DESIGN.md invariants 4–6).
+
+use rsir::ir::builder::*;
+use rsir::ir::core::*;
+use rsir::ir::schema;
+use rsir::ir::validate;
+use rsir::passes::manager::{Pass, PassContext};
+use rsir::util::json::Json;
+use rsir::util::quickcheck::{forall, Gen};
+use rsir::util::rng::Rng;
+
+/// Random clean handshake-chain design generator for property tests.
+struct ChainDesignGen;
+
+impl Gen for ChainDesignGen {
+    type Item = (u64, usize, u32);
+    fn generate(&self, rng: &mut Rng) -> Self::Item {
+        (rng.next_u64(), rng.range(2, 8), 8 << rng.below(4))
+    }
+    fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+        let mut v = Vec::new();
+        if item.1 > 2 {
+            v.push((item.0, item.1 - 1, item.2));
+        }
+        if item.2 > 8 {
+            v.push((item.0, item.1, item.2 / 2));
+        }
+        v
+    }
+}
+
+fn build_chain(seed: u64, n: usize, width: u32) -> Design {
+    let mut rng = Rng::new(seed);
+    let mut d = Design::new("Top");
+    let mut top = GroupedBuilder::new("Top")
+        .port("ap_clk", Dir::In, 1)
+        .iface(Interface::Clock {
+            port: "ap_clk".into(),
+        });
+    for i in 0..n {
+        let m = LeafBuilder::verilog_stub(format!("M{i}"))
+            .port("ap_clk", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .handshake("i", Dir::In, width)
+            .handshake("o", Dir::Out, width)
+            .resource(Resources::new(
+                1000.0 + rng.below(50_000) as f64,
+                500.0,
+                2.0,
+                8.0,
+                0.0,
+            ))
+            .build();
+        d.add(m);
+    }
+    for i in 0..n.saturating_sub(1) {
+        top = top
+            .wire(&format!("w{i}"), width)
+            .wire(&format!("w{i}_vld"), 1)
+            .wire(&format!("w{i}_rdy"), 1);
+    }
+    for i in 0..n {
+        let mut inst = Instance::new(format!("m{i}"), format!("M{i}"));
+        inst.connect("ap_clk", ConnExpr::id("ap_clk"));
+        if i > 0 {
+            inst.connect("i", ConnExpr::id(&format!("w{}", i - 1)));
+            inst.connect("i_vld", ConnExpr::id(&format!("w{}_vld", i - 1)));
+            inst.connect("i_rdy", ConnExpr::id(&format!("w{}_rdy", i - 1)));
+        }
+        if i + 1 < n {
+            inst.connect("o", ConnExpr::id(&format!("w{i}")));
+            inst.connect("o_vld", ConnExpr::id(&format!("w{i}_vld")));
+            inst.connect("o_rdy", ConnExpr::id(&format!("w{i}_rdy")));
+        }
+        top = top.inst_full(inst);
+    }
+    d.add(top.build());
+    d
+}
+
+#[test]
+fn property_json_roundtrip_preserves_design() {
+    forall(0xAB, 30, &ChainDesignGen, |&(seed, n, w)| {
+        let d = build_chain(seed, n, w);
+        let j = schema::design_to_json(&d);
+        let text = j.pretty();
+        let d2 = schema::design_from_json(&Json::parse(&text).unwrap()).unwrap();
+        d == d2
+    });
+}
+
+#[test]
+fn property_export_reimport_preserves_leaf_sources() {
+    forall(0xCD, 20, &ChainDesignGen, |&(seed, n, w)| {
+        let d = build_chain(seed, n, w);
+        let bundle = rsir::plugins::export(&d).unwrap();
+        let leaves = bundle.file("design_leaves.v").unwrap();
+        // Every leaf's embedded source appears verbatim.
+        d.modules.values().all(|m| match &m.body {
+            Body::Leaf { source, .. } => leaves.contains(source.as_str()),
+            _ => true,
+        })
+    });
+}
+
+#[test]
+fn property_group_then_flatten_preserves_edges() {
+    forall(0xEF, 20, &ChainDesignGen, |&(seed, n, w)| {
+        if n < 3 {
+            return true;
+        }
+        let d = build_chain(seed, n, w);
+        let edges_of = |d: &Design| {
+            let g = rsir::ir::graph::BlockGraph::build(d.top_module());
+            let mut v: Vec<u64> = g.instance_edges(&["ap_clk".into()]).iter().map(|e| e.2).collect();
+            v.sort();
+            v
+        };
+        let before = edges_of(&d);
+        let mut d2 = d.clone();
+        let mut ctx = PassContext::new();
+        rsir::passes::group::group_instances(
+            &mut d2,
+            "Top",
+            &["m0".into(), "m1".into()],
+            "G01",
+            &mut ctx,
+        )
+        .unwrap();
+        validate::check(&d2).is_empty()
+            && {
+                rsir::passes::flatten::Flatten.run(&mut d2, &mut ctx).unwrap();
+                validate::check(&d2).is_empty() && edges_of(&d2) == before
+            }
+    });
+}
+
+#[test]
+fn property_pipeline_insert_preserves_drc_and_fmax_improves_or_holds() {
+    forall(0x11, 15, &ChainDesignGen, |&(seed, n, w)| {
+        let mut d = build_chain(seed, n, w);
+        let mut ctx = PassContext::new();
+        // Insert a relay station on every forward channel.
+        for i in 0..n.saturating_sub(1) {
+            rsir::passes::pipeline_insert::insert_relay_station(
+                &mut d,
+                "Top",
+                &format!("m{i}"),
+                "o",
+                1,
+                None,
+                &mut ctx,
+            )
+            .unwrap();
+        }
+        validate::check(&d).is_empty()
+    });
+}
+
+#[test]
+fn yaml_dump_of_real_ir_contains_paper_fields() {
+    let d = build_chain(7, 3, 32);
+    let y = rsir::util::yamlish::to_yaml(&schema::design_to_json(&d));
+    for f in ["module_name:", "module_ports:", "module_interfaces:", "iface_type: handshake"] {
+        assert!(y.contains(f), "missing {f} in yaml dump");
+    }
+}
+
+#[test]
+fn namemap_traces_through_full_flow() {
+    let dev = rsir::device::builtin::by_name("u280").unwrap();
+    let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
+    let mut d = g.design;
+    let mut ctx = PassContext::new();
+    rsir::coordinator::flow::analyze_structure(&mut d, &mut ctx).unwrap();
+    let _ = dev;
+    // Flattened instance names trace back to hierarchical paths.
+    assert!(!ctx.namemap.is_empty());
+    let top = d.top_module();
+    let traced: Vec<String> = top
+        .instances()
+        .iter()
+        .map(|i| ctx.namemap.trace(&i.instance_name))
+        .collect();
+    assert!(traced.iter().any(|t| t.contains('/')), "{traced:?}");
+}
