@@ -11,6 +11,7 @@ use rsir::coordinator::explore;
 use rsir::coordinator::flow::FlowConfig;
 use rsir::device::builtin;
 use rsir::util::bench::Table;
+use rsir::util::pool::Pool;
 
 fn main() -> anyhow::Result<()> {
     let device = std::env::args().nth(1).unwrap_or_else(|| "vhk158".into());
@@ -20,8 +21,14 @@ fn main() -> anyhow::Result<()> {
         sa_refine: true,
         ..Default::default()
     };
-    println!("exploring {} floorplans of llama2 on {device}...", explore::default_limits().len());
-    let rows = explore::explore(&g.design, &dev, &explore::default_limits(), &cfg)?;
+    // One pool job per sweep point (RSIR_WORKERS overrides the width).
+    let pool = Pool::from_env(None);
+    println!(
+        "exploring {} floorplans of llama2 on {device} ({} workers)...",
+        explore::default_limits().len(),
+        pool.workers()
+    );
+    let rows = explore::explore(&g.design, &dev, &explore::default_limits(), &cfg, &pool)?;
 
     let mut t = Table::new(&["util_limit", "max_slot_util", "wirelength", "Fmax (MHz)"]);
     for r in &rows {

@@ -11,6 +11,7 @@ use rsir::coordinator::explore;
 use rsir::coordinator::flow::FlowConfig;
 use rsir::device::builtin;
 use rsir::util::bench::Table;
+use rsir::util::pool::Pool;
 use std::time::Instant;
 
 fn main() {
@@ -18,9 +19,11 @@ fn main() {
     let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
     let cfg = FlowConfig::default();
     let limits = explore::default_limits();
+    let pool = Pool::from_env(None);
+    println!("pool: {} workers over {} sweep points\n", pool.workers(), limits.len());
 
     let t0 = Instant::now();
-    let rows = explore::explore(&g.design, &dev, &limits, &cfg).unwrap();
+    let rows = explore::explore(&g.design, &dev, &limits, &cfg, &pool).unwrap();
     let elapsed = t0.elapsed();
 
     let mut t = Table::new(&["util_limit", "max_slot_util", "wirelength", "Fmax (MHz)"]);

@@ -1,6 +1,7 @@
 //! Bench: regenerate **Table 2** — frequency improvements for every
 //! benchmark × device row, timing each full HLPS flow. Pass `--only
-//! <substr>` via `cargo bench --bench table2_freq -- --only llama2-u280`.
+//! <substr>` via `cargo bench --bench table2_freq -- --only llama2-u280`,
+//! and `--workers N` (or `RSIR_WORKERS`) to size the row-level pool.
 //!
 //! Shape expectations vs the paper (absolute MHz comes from the EDA
 //! simulator, see DESIGN.md substitutions):
@@ -11,22 +12,27 @@
 
 use rsir::coordinator::flow::FlowConfig;
 use rsir::coordinator::report;
+use rsir::util::pool::Pool;
 use std::time::Instant;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let only = args
-        .iter()
-        .position(|a| a == "--only")
-        .and_then(|i| args.get(i + 1))
-        .map(|s| s.as_str());
+    let arg_after = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+    };
+    let only = arg_after("--only").map(|s| s.as_str());
+    let workers = arg_after("--workers").and_then(|s| s.parse::<usize>().ok());
+    let pool = Pool::from_env(workers);
     let cfg = FlowConfig::default();
 
     let t0 = Instant::now();
-    let rows = report::table2(only, &cfg).expect("table2 failed");
+    let rows = report::table2(only, &cfg, &pool).expect("table2 failed");
     let elapsed = t0.elapsed();
 
     report::render_table2(&rows).print();
+    println!("pool: {} workers", pool.workers());
 
     let imps: Vec<f64> = rows.iter().filter_map(|r| r.improvement()).collect();
     let unroutable = rows.iter().filter(|r| r.original_mhz.is_none()).count();

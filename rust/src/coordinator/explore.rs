@@ -7,6 +7,7 @@
 use crate::coordinator::flow::{run_hlps, FlowConfig};
 use crate::device::model::VirtualDevice;
 use crate::ir::core::Design;
+use crate::util::pool::Pool;
 use anyhow::Result;
 
 #[derive(Debug, Clone)]
@@ -20,38 +21,40 @@ pub struct ExploreRow {
     pub routable: bool,
 }
 
-/// Run the HLPS flow once per utilization limit (each on a fresh copy of
-/// the design) and collect the Pareto trade-off rows of Figure 12.
+/// Run the HLPS flow once per utilization limit — one pool job per sweep
+/// point, each on a fresh clone of the design — and collect the Pareto
+/// trade-off rows of Figure 12 in sweep order.
 pub fn explore(
     design: &Design,
     dev: &VirtualDevice,
     limits: &[f64],
     base_cfg: &FlowConfig,
+    pool: &Pool,
 ) -> Result<Vec<ExploreRow>> {
-    let mut rows = Vec::with_capacity(limits.len());
-    for &limit in limits {
+    let rows = pool.par_map(limits.to_vec(), |limit| {
         let mut d = design.clone();
         let mut cfg = base_cfg.clone();
         cfg.util_limit = limit;
         // The sweep wants the exact limit, not the auto-relaxed one; an
-        // infeasible point is itself a data point.
+        // infeasible point is itself a data point, recorded as an
+        // unroutable row rather than aborting the sweep.
         match run_hlps(&mut d, dev, &cfg) {
-            Ok(report) => rows.push(ExploreRow {
+            Ok(report) => ExploreRow {
                 util_limit: limit,
                 max_slot_util: report.optimized.timing.max_util,
                 wirelength: report.floorplan_wirelength,
                 fmax_mhz: report.optimized.fmax_mhz(),
                 routable: report.optimized.routable(),
-            }),
-            Err(_) => rows.push(ExploreRow {
+            },
+            Err(_) => ExploreRow {
                 util_limit: limit,
                 max_slot_util: f64::NAN,
                 wirelength: f64::NAN,
                 fmax_mhz: 0.0,
                 routable: false,
-            }),
+            },
         }
-    }
+    });
     Ok(rows)
 }
 
@@ -103,7 +106,8 @@ mod tests {
             sa_refine: false,
             ..Default::default()
         };
-        let rows = explore(&g.design, &dev, &[0.25, 0.55, 0.85], &cfg).unwrap();
+        let pool = Pool::new(2);
+        let rows = explore(&g.design, &dev, &[0.25, 0.55, 0.85], &cfg, &pool).unwrap();
         assert_eq!(rows.len(), 3);
         let routable: Vec<_> = rows.iter().filter(|r| r.routable).collect();
         assert!(routable.len() >= 2, "{rows:?}");

@@ -29,6 +29,7 @@ use crate::passes::rebuild::RebuildAll;
 use crate::timing::delay::DelayModel;
 use crate::util::union_find::UnionFind;
 use anyhow::{Context, Result};
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct FlowConfig {
@@ -61,6 +62,42 @@ impl Default for FlowConfig {
     }
 }
 
+/// Wall-clock time spent in each stage of one [`run_hlps`] invocation.
+///
+/// Purely observational: no stage *result* depends on these durations, so
+/// the flow's numeric outputs stay deterministic for a given seed no
+/// matter the worker count or machine load (asserted by the Table 2
+/// determinism test). Rendered by the CLI after `rsir flow`.
+#[derive(Debug, Clone, Default)]
+pub struct FlowStats {
+    /// Vendor-only baseline implementation (placement + STA).
+    pub baseline: Duration,
+    /// Stages 1+2: communication analysis, partitioning, netlist build.
+    pub analysis: Duration,
+    /// Stage 3: ILP floorplanning (+ optional SA refinement) and
+    /// metadata write-back.
+    pub floorplan: Duration,
+    /// Stage 4: global interconnect synthesis (relay-station insertion).
+    pub pipeline: Duration,
+    /// Final implementation of the optimized netlist.
+    pub implement: Duration,
+    /// End-to-end wall time of the whole flow.
+    pub total: Duration,
+}
+
+impl FlowStats {
+    /// One-line human-readable breakdown, e.g. for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "stage wall times: baseline {:.2?} | analysis {:.2?} | floorplan {:.2?} | pipeline {:.2?} | implement {:.2?} | total {:.2?}",
+            self.baseline, self.analysis, self.floorplan, self.pipeline, self.implement, self.total
+        )
+    }
+}
+
+/// Everything [`run_hlps`] learned about one design: the optimized
+/// implementation, the vendor-only baseline (which may legitimately fail
+/// on congested designs), flow shape counters, and per-stage timings.
 #[derive(Debug)]
 pub struct FlowReport {
     pub baseline: Result<ImplReport>,
@@ -70,6 +107,8 @@ pub struct FlowReport {
     pub floorplan_wirelength: f64,
     pub log: Vec<String>,
     pub evaluator_used: &'static str,
+    /// Per-stage wall-clock instrumentation (observational only).
+    pub stats: FlowStats,
 }
 
 impl FlowReport {
@@ -151,17 +190,23 @@ pub fn run_hlps(
     dev: &VirtualDevice,
     cfg: &FlowConfig,
 ) -> Result<FlowReport> {
+    let t_total = Instant::now();
+    let t = Instant::now();
     let baseline = run_baseline(design, dev, &cfg.delay);
+    let stat_baseline = t.elapsed();
     let mut ctx = PassContext::new();
 
     // ---- Stages 1 + 2: communication analysis & partitioning ------------
+    let t = Instant::now();
     analyze_structure(design, &mut ctx)?;
     let nl = vivado::elaborate(design);
     let mut problem = Problem::from_netlist(&nl, dev, cfg.die_weight);
     merge_nonpipelinable(&mut problem, &nl);
     let partitions = problem.units.len();
+    let stat_analysis = t.elapsed();
 
     // ---- Stage 3: coarse-grained floorplanning ---------------------------
+    let t = Instant::now();
     let mut ilp_cfg = cfg.ilp.clone();
     ilp_cfg.util_limit = cfg.util_limit;
     let ilp = autobridge::solve(&problem, dev, &ilp_cfg).context("floorplan ILP")?;
@@ -224,11 +269,15 @@ pub fn run_hlps(
             }
         }
     }
+    let stat_floorplan = t.elapsed();
 
     // ---- Stage 4: global interconnect synthesis --------------------------
+    let t = Instant::now();
     let relay_stations = insert_pipelines(design, dev, &nl, &node_slots, &mut ctx)?;
+    let stat_pipeline = t.elapsed();
 
     // Final implementation with fixed placement.
+    let t = Instant::now();
     let final_nl = vivado::elaborate(design);
     let optimized = vivado::implement_netlist(
         &final_nl,
@@ -236,6 +285,7 @@ pub fn run_hlps(
         &PlacerConfig::default(),
         &cfg.delay,
     )?;
+    let stat_implement = t.elapsed();
 
     let mut log = std::mem::take(&mut ctx.log);
     log.push(format!(
@@ -249,6 +299,14 @@ pub fn run_hlps(
         floorplan_wirelength,
         log,
         evaluator_used,
+        stats: FlowStats {
+            baseline: stat_baseline,
+            analysis: stat_analysis,
+            floorplan: stat_floorplan,
+            pipeline: stat_pipeline,
+            implement: stat_implement,
+            total: t_total.elapsed(),
+        },
     })
 }
 

@@ -1,10 +1,17 @@
 //! L3 coordination: the integrated four-stage HLPS flow (§3.4), the
 //! floorplan explorer (§4.2), the parallel-synthesis driver (§4.3), and
 //! the evaluation orchestration regenerating the paper's tables/figures.
+//!
+//! All batch surfaces — the Table 2 row matrix ([`report::table2`]), the
+//! Figure 12 utilization sweep ([`explore::explore`]) and the Figure 13
+//! per-slot synthesis ([`parallel_synth::run`]) — execute on the shared
+//! work-stealing [`crate::util::pool::Pool`]; results are returned in
+//! input order, so every table and figure is deterministic for a given
+//! seed regardless of the worker count.
 
 pub mod explore;
 pub mod flow;
 pub mod parallel_synth;
 pub mod report;
 
-pub use flow::{run_baseline, run_hlps, FlowConfig, FlowReport};
+pub use flow::{run_baseline, run_hlps, FlowConfig, FlowReport, FlowStats};

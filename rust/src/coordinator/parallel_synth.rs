@@ -16,8 +16,9 @@ use crate::device::model::VirtualDevice;
 use crate::eda::synthtime::SynthTimeModel;
 use crate::ir::core::{Design, Resources};
 use crate::plugins::exporter;
+use crate::timing::netlist::ModuleCharacteristics;
+use crate::util::pool::Pool;
 use anyhow::Result;
-use std::sync::Arc;
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -66,16 +67,15 @@ pub fn run(
     let modeled_monolithic_s = model.monolithic_s(&total);
     let modeled_parallel_s = model.parallel_s(&groups, workers);
 
-    // Measured: run our synthesis surrogate per group, seq vs threads.
-    // The surrogate work = re-estimating every module of the group from
-    // its source + exporting the group's netlist stub.
-    let design = Arc::new(design.clone());
-    let work = |mods: &[String]| {
+    // Measured: run our synthesis surrogate per group, sequentially vs on
+    // the work-stealing pool. The surrogate work = re-estimating every
+    // module of the group from its source + exporting the group's netlist
+    // stub. The pool is scoped, so the design is borrowed — no clone.
+    let work = |mods: &[String]| -> f64 {
         let est = crate::eda::synth::SynthEstimator::default();
         let mut acc = 0.0f64;
         for mname in mods {
             if let Some(m) = design.module(mname) {
-                use crate::timing::netlist::ModuleCharacteristics;
                 let r = est.resources(m);
                 acc += r.lut + r.ff;
             }
@@ -90,33 +90,21 @@ pub fn run(
     }
     let measured_sequential = t0.elapsed();
 
+    // One pool job per slot group: with more workers than groups the
+    // extra workers simply stay idle, instead of the old chunking which
+    // degenerated into one thread per group with no `workers` cap at all.
+    let pool = Pool::new(workers);
     let t1 = Instant::now();
-    let mut handles = Vec::new();
-    for chunk in nonempty.chunks(nonempty.len().div_ceil(workers.max(1))) {
-        let mods: Vec<Vec<String>> = chunk.iter().map(|&s| groups_mods[s].clone()).collect();
-        let design = Arc::clone(&design);
-        handles.push(std::thread::spawn(move || {
-            let est = crate::eda::synth::SynthEstimator::default();
-            let mut acc = 0.0f64;
-            for group in &mods {
-                for mname in group {
-                    if let Some(m) = design.module(mname) {
-                        use crate::timing::netlist::ModuleCharacteristics;
-                        let r = est.resources(m);
-                        acc += r.lut + r.ff;
-                    }
-                }
-            }
-            acc
-        }));
-    }
-    let par_acc: f64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let par_acc: f64 = pool
+        .par_map(nonempty.clone(), |s| work(&groups_mods[s]))
+        .iter()
+        .sum();
     let measured_parallel = t1.elapsed();
     // Keep the work honest (same totals) — floating error tolerated.
     debug_assert!((seq_acc - par_acc).abs() <= 1e-6 * seq_acc.abs().max(1.0));
 
     // Assembly step (both flows export the final netlist once).
-    let _ = exporter::export(&design)?;
+    let _ = exporter::export(design)?;
 
     Ok(ParallelSynthReport {
         modeled_speedup: modeled_monolithic_s / modeled_parallel_s,
@@ -170,11 +158,18 @@ mod tests {
         assert_eq!(rep.groups.len(), 1);
         // One group: parallel flow only adds assembly overhead.
         assert!(rep.modeled_speedup <= 1.0 + 1e-9);
-        // Un-elaborated leaf top errors cleanly.
+        // A genuinely invalid input (leaf top) errors cleanly.
         assert!(run(&g_err(), &dev, 4, &SynthTimeModel::default()).is_err());
     }
 
+    /// A design whose top is a *leaf* module: elaboration finds no leaf
+    /// instances at all, so there is nothing to group and `run` must
+    /// reject it (unlike a merely un-floorplanned design, which is valid
+    /// and collapses into a single group).
     fn g_err() -> crate::ir::core::Design {
-        cnn::generate(&CnnConfig { rows: 2, cols: 2 }).unwrap().design
+        use crate::ir::builder::LeafBuilder;
+        let mut d = crate::ir::core::Design::new("Lonely");
+        d.add(LeafBuilder::verilog_stub("Lonely").clk_rst().build());
+        d
     }
 }

@@ -1,11 +1,17 @@
 //! Evaluation orchestration: regenerates the paper's Table 1, Table 2,
 //! Figure 12 and Figure 13 from the benchmark generators + the HLPS flow.
 //! Shared by the CLI (`rsir table2 …`) and the bench targets.
+//!
+//! [`table2`] fans one job per design row onto the shared
+//! [work-stealing pool](crate::util::pool::Pool); each row is an
+//! independent full HLPS flow, so the matrix parallelizes embarrassingly
+//! while row order (and every number in it) stays deterministic.
 
-use crate::coordinator::flow::{run_hlps, FlowConfig};
+use crate::coordinator::flow::{run_hlps, FlowConfig, FlowStats};
 use crate::designs;
 use crate::device::builtin;
 use crate::util::bench::Table;
+use crate::util::pool::Pool;
 use anyhow::Result;
 
 /// One Table 2 row.
@@ -107,6 +113,17 @@ impl IntoTuple3 for (bool, bool) {
 
 /// Run one Table 2 row end-to-end.
 pub fn run_row(app: &str, id: &str, target: &str, cfg: &FlowConfig) -> Result<Table2Row> {
+    run_row_timed(app, id, target, cfg).map(|(row, _)| row)
+}
+
+/// Like [`run_row`], but also returns the flow's per-stage wall-time
+/// breakdown (rendered by `rsir flow`).
+pub fn run_row_timed(
+    app: &str,
+    id: &str,
+    target: &str,
+    cfg: &FlowConfig,
+) -> Result<(Table2Row, FlowStats)> {
     let dev = builtin::by_name(target)?;
     let g = generate_by_id(id)?;
     let mut design = g.design;
@@ -121,7 +138,7 @@ pub fn run_row(app: &str, id: &str, target: &str, cfg: &FlowConfig) -> Result<Ta
         .as_ref()
         .map(|b| b.util_pct)
         .unwrap_or(report.optimized.util_pct);
-    Ok(Table2Row {
+    let row = Table2Row {
         app: app.to_string(),
         target: target.to_string(),
         hierarchy,
@@ -131,22 +148,32 @@ pub fn run_row(app: &str, id: &str, target: &str, cfg: &FlowConfig) -> Result<Ta
         original_mhz: report.baseline_fmax(),
         rir_mhz: report.optimized.fmax_mhz(),
         others: literature(app, target),
-    })
+    };
+    Ok((row, report.stats))
 }
 
-/// Run the full Table 2 (or a filtered subset by substring match).
-pub fn table2(filter: Option<&str>, cfg: &FlowConfig) -> Result<Vec<Table2Row>> {
-    let mut rows = Vec::new();
-    for (app, id, target) in table2_specs() {
-        let label = format!("{app}-{target}").to_lowercase();
-        if let Some(f) = filter {
-            if !label.contains(&f.to_lowercase()) {
-                continue;
-            }
-        }
-        rows.push(run_row(app, id, target, cfg)?);
-    }
-    Ok(rows)
+/// Run the full Table 2 (or a filtered subset by substring match on
+/// `"<app>-<target>"`, case-insensitive), one pool job per row.
+///
+/// Rows come back in spec order regardless of completion order, and the
+/// numbers are identical for any worker count (each row is an isolated
+/// flow over its own design instance).
+pub fn table2(filter: Option<&str>, cfg: &FlowConfig, pool: &Pool) -> Result<Vec<Table2Row>> {
+    let specs: Vec<(&'static str, &'static str, &'static str)> = table2_specs()
+        .into_iter()
+        .filter(|(app, _, target)| {
+            filter
+                .map(|f| {
+                    format!("{app}-{target}")
+                        .to_lowercase()
+                        .contains(&f.to_lowercase())
+                })
+                .unwrap_or(true)
+        })
+        .collect();
+    pool.par_map(specs, |(app, id, target)| run_row(app, id, target, cfg))
+        .into_iter()
+        .collect()
 }
 
 /// Render Table 2 in the paper's format.
@@ -241,6 +268,32 @@ mod tests {
         }
         // DSP utilization ≈ 17 % of a U250.
         assert!((10.0..25.0).contains(&r.util_pct[3]), "{:?}", r.util_pct);
+    }
+
+    /// Same seed ⇒ byte-identical Table 2 rendering no matter how many
+    /// workers the pool schedules the rows onto.
+    #[test]
+    fn table2_rows_identical_across_worker_counts() {
+        let cfg = quick_cfg();
+        let run = |workers: usize| {
+            let pool = Pool::new(workers);
+            let rows = table2(Some("llama2-u2"), &cfg, &pool).unwrap();
+            render_table2(&rows).to_string()
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(8));
+        // The filter must have matched the two LLaMA2 rows (u250, u280)
+        // and nothing else — two rows + header + separator.
+        assert_eq!(serial.lines().count(), 4, "{serial}");
+    }
+
+    #[test]
+    fn table2_filter_preserves_spec_order() {
+        let pool = Pool::new(4);
+        let rows = table2(Some("cnn 13x4"), &quick_cfg(), &pool).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].app, "CNN 13x4");
+        assert_eq!(rows[0].target, "u250");
     }
 
     #[test]

@@ -10,12 +10,20 @@
 //! rsir import <top> <file.v>...        import Verilog into IR JSON
 //! rsir export <ir.json> <outdir>       export IR to Verilog + XDC
 //! ```
+//!
+//! The global `--workers N` flag (or the `RSIR_WORKERS` environment
+//! variable) sizes the work-stealing pool that fans out Table 2 rows, the
+//! Figure 12 sweep points, and the Figure 13 per-slot synthesis jobs;
+//! unset, it defaults to the machine's available parallelism. Results are
+//! deterministic for a given seed regardless of the worker count.
 
 use anyhow::{bail, Result};
 use rsir::coordinator::{explore, flow, parallel_synth, report};
 use rsir::device::builtin;
 use rsir::util::bench::Table;
 use rsir::util::cli::Args;
+use rsir::util::pool::Pool;
+use std::time::Instant;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -38,7 +46,13 @@ fn flow_config(args: &Args) -> flow::FlowConfig {
     cfg
 }
 
+/// Effective worker-count override: `--workers N` when given and parseable.
+fn workers_cli(args: &Args) -> Option<usize> {
+    args.get("workers").and_then(|v| v.parse::<usize>().ok())
+}
+
 fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    let pool = Pool::from_env(workers_cli(args));
     match cmd {
         "devices" => {
             let mut t = Table::new(&["Name", "Part", "Grid", "Dies", "kLUT", "DSP", "SLL/col"]);
@@ -64,14 +78,22 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 b if b.starts_with("cnn") => ("CNN", b),
                 b => (b, b),
             };
-            let row = report::run_row(app, id, device, &flow_config(args))?;
+            let (row, stats) = report::run_row_timed(app, id, device, &flow_config(args))?;
             report::render_table2(&[row]).print();
+            println!("{}", stats.render());
         }
         "table1" => report::table1().print(),
         "table2" => {
-            let rows = report::table2(args.get("only"), &flow_config(args))?;
+            let t0 = Instant::now();
+            let rows = report::table2(args.get("only"), &flow_config(args), &pool)?;
             report::render_table2(&rows).print();
             summary(&rows);
+            println!(
+                "{} flows on {} workers in {:.2?}",
+                rows.len(),
+                pool.workers(),
+                t0.elapsed()
+            );
         }
         "fig12" => {
             let device = args.get_or("device", "vhk158");
@@ -82,6 +104,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 &dev,
                 &explore::default_limits(),
                 &flow_config(args),
+                &pool,
             )?;
             let mut t = Table::new(&["util_limit", "max_slot_util", "wirelength", "Fmax (MHz)"]);
             for r in &rows {
@@ -100,7 +123,10 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "fig13" => {
             let dev = builtin::by_name("u250")?;
-            let workers = args.get_usize("workers", 8);
+            // The worker count doubles as the modeled vendor job-farm
+            // width, so Figure 13 defaults to the paper's 8 jobs rather
+            // than the machine's parallelism (CLI and env still override).
+            let workers = rsir::util::pool::resolve_workers_or(workers_cli(args), 8);
             let model = rsir::eda::SynthTimeModel::default();
             let mut t = Table::new(&["CNN", "Monolithic (s)", "Parallel (s)", "Speedup"]);
             let mut speedups = Vec::new();
@@ -159,6 +185,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "help" | "--help" => {
             println!("rsir — RapidStream IR (ICCAD'24 reproduction)");
             println!("commands: devices flow table1 table2 fig12 fig13 import export");
+            println!("global: --workers N (or RSIR_WORKERS) sizes the evaluation pool");
         }
         other => bail!("unknown command '{other}' (try 'rsir help')"),
     }

@@ -1,9 +1,11 @@
 //! Self-contained substrates: JSON, YAML emission, RNG, union-find,
-//! CLI parsing, property testing, and the benchmark harness.
+//! CLI parsing, property testing, the benchmark harness, and the
+//! work-stealing thread pool driving the evaluation matrix.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod quickcheck;
 pub mod rng;
 pub mod union_find;

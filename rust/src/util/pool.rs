@@ -1,0 +1,346 @@
+//! Work-stealing thread-pool executor shared by every batch surface of
+//! the evaluation matrix (Table 2 rows, the Figure 12 utilization sweep,
+//! Figure 13 per-slot synthesis).
+//!
+//! Design notes:
+//!
+//! * **Scoped** — jobs may borrow from the caller's stack (designs,
+//!   devices, configs) because execution happens inside
+//!   [`std::thread::scope`]; no `Arc`/`'static` plumbing at call sites.
+//! * **Work-stealing** — jobs are pre-distributed round-robin onto one
+//!   deque per worker; a worker pops from the front of its own deque and,
+//!   when empty, steals from the back of a victim's. Uneven job durations
+//!   (a 13x12 CNN flow next to a KNN flow) therefore cannot leave
+//!   workers idle while one queue is backed up.
+//! * **Order-preserving** — [`Pool::par_map`] returns results in input
+//!   order regardless of completion order, so paper tables render
+//!   identically for any worker count.
+//! * **Panic-transparent** — a panicking job does not wedge the pool;
+//!   the payload is re-raised on the calling thread after all workers
+//!   drain.
+//!
+//! Worker count resolution (CLI `--workers` > `RSIR_WORKERS` env >
+//! available parallelism) lives in [`resolve_workers`].
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+/// Environment variable consulted by [`resolve_workers`] when no explicit
+/// worker count is given.
+pub const WORKERS_ENV: &str = "RSIR_WORKERS";
+
+/// A fixed-width work-stealing executor.
+///
+/// The pool is a lightweight handle: threads are spawned per call (scoped
+/// to it), so a `Pool` can be created once in `main` and passed by
+/// reference through the coordinator without lifetime ceremony.
+///
+/// ```
+/// use rsir::util::pool::Pool;
+///
+/// let pool = Pool::new(4);
+/// let squares = pool.par_map((0..8).collect::<Vec<u64>>(), |x| x * x);
+/// assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// Create a pool with a fixed worker count (clamped to at least 1).
+    ///
+    /// ```
+    /// use rsir::util::pool::Pool;
+    /// assert_eq!(Pool::new(0).workers(), 1); // never zero workers
+    /// assert_eq!(Pool::new(6).workers(), 6);
+    /// ```
+    pub fn new(workers: usize) -> Pool {
+        Pool {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Create a pool from the standard resolution chain: an explicit CLI
+    /// value (`--workers`), else the `RSIR_WORKERS` environment variable,
+    /// else the machine's available parallelism.
+    ///
+    /// ```
+    /// use rsir::util::pool::Pool;
+    /// assert_eq!(Pool::from_env(Some(2)).workers(), 2);
+    /// assert!(Pool::from_env(None).workers() >= 1);
+    /// ```
+    pub fn from_env(cli: Option<usize>) -> Pool {
+        Pool::new(resolve_workers(cli))
+    }
+
+    /// Number of worker threads this pool schedules onto.
+    ///
+    /// ```
+    /// assert_eq!(rsir::util::pool::Pool::new(3).workers(), 3);
+    /// ```
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Map `f` over `items` on the pool, returning results **in input
+    /// order**. With one worker (or one item) this degenerates to the
+    /// plain serial `map`, so `--workers 1` is bit-for-bit equivalent to
+    /// no pool at all.
+    ///
+    /// If any job panics, the panic is re-raised on the caller's thread
+    /// after the remaining jobs finish.
+    ///
+    /// ```
+    /// use rsir::util::pool::Pool;
+    /// let out = Pool::new(3).par_map(vec!["a", "bb", "ccc"], |s| s.len());
+    /// assert_eq!(out, vec![1, 2, 3]);
+    /// ```
+    ///
+    /// Panic propagation:
+    ///
+    /// ```should_panic
+    /// use rsir::util::pool::Pool;
+    /// Pool::new(2).par_map(vec![1, 2], |x| { assert_ne!(x, 2); x });
+    /// ```
+    pub fn par_map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(I) -> T + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let nw = self.workers.min(n);
+        if nw == 1 {
+            // Serial fast path: identical semantics, no thread overhead.
+            return items.into_iter().map(f).collect();
+        }
+
+        // One slot per job for the input (taken exactly once) and the
+        // output (written exactly once); per-worker index deques seeded
+        // round-robin.
+        let inputs: Vec<Mutex<Option<I>>> =
+            items.into_iter().map(|i| Mutex::new(Some(i))).collect();
+        let outputs: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let queues: Vec<Mutex<VecDeque<usize>>> = (0..nw)
+            .map(|w| Mutex::new((0..n).filter(|i| i % nw == w).collect()))
+            .collect();
+        let panics: Mutex<Vec<Box<dyn Any + Send>>> = Mutex::new(Vec::new());
+
+        // Work is fully pre-distributed and never re-enqueued, so a queue
+        // observed empty stays empty: a worker that finds no job anywhere
+        // can simply exit (the scope joins stragglers) instead of
+        // busy-spinning until the slowest job completes.
+        std::thread::scope(|s| {
+            for w in 0..nw {
+                let (inputs, outputs, queues) = (&inputs, &outputs, &queues);
+                let (panics, f) = (&panics, &f);
+                s.spawn(move || {
+                    while let Some(i) = pop_or_steal(queues, w) {
+                        let item = inputs[i]
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .expect("pool job claimed twice");
+                        match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                            Ok(v) => *outputs[i].lock().unwrap() = Some(v),
+                            Err(payload) => panics.lock().unwrap().push(payload),
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(payload) = panics.into_inner().unwrap().pop() {
+            resume_unwind(payload);
+        }
+        outputs
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("pool job produced no result"))
+            .collect()
+    }
+
+    /// Run a batch of independent closures to completion (scoped spawn:
+    /// the closures may borrow from the caller's stack).
+    ///
+    /// ```
+    /// use std::sync::atomic::{AtomicUsize, Ordering};
+    /// use rsir::util::pool::Pool;
+    ///
+    /// let hits = AtomicUsize::new(0);
+    /// let jobs: Vec<_> = (0..8)
+    ///     .map(|_| || { hits.fetch_add(1, Ordering::SeqCst); })
+    ///     .collect();
+    /// Pool::new(4).run(jobs);
+    /// assert_eq!(hits.load(Ordering::SeqCst), 8);
+    /// ```
+    pub fn run<F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send,
+    {
+        self.par_map(jobs, |job| job());
+    }
+}
+
+/// Pop from `w`'s own deque front, else steal one job from the back of
+/// the first non-empty victim deque (scanning neighbors cyclically).
+fn pop_or_steal(queues: &[Mutex<VecDeque<usize>>], w: usize) -> Option<usize> {
+    if let Some(i) = queues[w].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    let nw = queues.len();
+    for k in 1..nw {
+        let victim = (w + k) % nw;
+        if let Some(i) = queues[victim].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Resolve the effective worker count: an explicit (nonzero) CLI value
+/// wins, then a nonzero `RSIR_WORKERS` environment variable, then the
+/// machine's available parallelism (falling back to 4 when unknown).
+///
+/// ```
+/// use rsir::util::pool::resolve_workers;
+/// assert_eq!(resolve_workers(Some(5)), 5);
+/// assert!(resolve_workers(None) >= 1);
+/// ```
+pub fn resolve_workers(cli: Option<usize>) -> usize {
+    resolve_workers_or(
+        cli,
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
+    )
+}
+
+/// Like [`resolve_workers`], but falling back to an explicit `default`
+/// instead of the machine's parallelism. Zero (CLI or env) means
+/// "unset". Used by `fig13`, where the worker count is a modeling
+/// parameter defaulting to the paper's 8 jobs.
+///
+/// ```
+/// use rsir::util::pool::resolve_workers_or;
+/// assert_eq!(resolve_workers_or(Some(3), 8), 3);
+/// assert_eq!(resolve_workers_or(Some(0), 8), 8); // 0 = unset
+/// ```
+pub fn resolve_workers_or(cli: Option<usize>, default: usize) -> usize {
+    if let Some(w) = cli {
+        if w > 0 {
+            return w;
+        }
+    }
+    if let Ok(v) = std::env::var(WORKERS_ENV) {
+        if let Ok(w) = v.trim().parse::<usize>() {
+            if w > 0 {
+                return w;
+            }
+        }
+    }
+    default.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn par_map_preserves_order_under_shuffled_durations() {
+        // Durations deliberately anti-correlated with index so completion
+        // order differs from input order.
+        let pool = Pool::new(4);
+        let out = pool.par_map((0..32usize).collect(), |i| {
+            std::thread::sleep(Duration::from_millis(((i * 7) % 5) as u64));
+            i * i
+        });
+        assert_eq!(out, (0..32usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_matches_serial_map() {
+        let items: Vec<i64> = (0..100).collect();
+        let serial: Vec<i64> = items.iter().map(|x| x * 3 + 1).collect();
+        assert_eq!(Pool::new(1).par_map(items.clone(), |x| x * 3 + 1), serial);
+        assert_eq!(Pool::new(7).par_map(items, |x| x * 3 + 1), serial);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(Pool::new(16).par_map(vec![1, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out: Vec<i32> = Pool::new(4).par_map(Vec::new(), |x: i32| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_drains() {
+        let pool = Pool::new(4);
+        let result = std::panic::catch_unwind(|| {
+            pool.par_map((0..16usize).collect(), |x| {
+                if x == 5 {
+                    panic!("job 5 exploded");
+                }
+                x
+            })
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn run_executes_every_job_exactly_once() {
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..40)
+            .map(|_| || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            })
+            .collect();
+        Pool::new(5).run(jobs);
+        assert_eq!(hits.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn stealing_drains_a_backed_up_queue() {
+        // Job 0 (worker 0's queue) is slow; workers must steal the rest of
+        // worker 0's round-robin share or this takes ~8x longer than the
+        // asserted budget.
+        let pool = Pool::new(2);
+        let t0 = std::time::Instant::now();
+        let out = pool.par_map((0..16usize).collect(), |i| {
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(120));
+            }
+            i
+        });
+        assert_eq!(out.len(), 16);
+        // Generous bound: serial-behind-the-slow-job would be fine too;
+        // what must never happen is a deadlock/livelock.
+        assert!(t0.elapsed() < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn resolve_workers_precedence() {
+        assert_eq!(resolve_workers(Some(5)), 5);
+        std::env::set_var(WORKERS_ENV, "3");
+        assert_eq!(resolve_workers(None), 3);
+        assert_eq!(resolve_workers(Some(2)), 2, "CLI beats env");
+        std::env::set_var(WORKERS_ENV, "not-a-number");
+        assert!(resolve_workers(None) >= 1);
+        std::env::remove_var(WORKERS_ENV);
+        assert!(resolve_workers(None) >= 1);
+        assert_eq!(resolve_workers(Some(0)), resolve_workers(None), "0 = unset");
+        assert_eq!(resolve_workers_or(None, 8), 8);
+        assert_eq!(resolve_workers_or(Some(0), 0), 1, "clamped to >= 1");
+    }
+}
