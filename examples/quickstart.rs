@@ -100,9 +100,17 @@ endmodule
             .insert("timing", rsir::util::json::Json::Obj(t));
     }
 
-    // 2. Run the four-stage HLPS flow.
+    // 2. Run the four-stage HLPS flow. Stages 1-2 execute the registered
+    //    `analyze-structure` pass pipeline (`rsir passes` lists it along
+    //    with every individual pass).
     let dev = builtin::by_name("u280")?;
     let report = run_hlps(&mut design, &dev, &FlowConfig::default())?;
+    println!(
+        "analysis pipeline ran {} passes: {}",
+        report.analysis.passes.len(),
+        report.analysis.pass_names().join(" -> ")
+    );
+    println!("{}", report.stats.render_passes());
 
     // 3. Results.
     match report.baseline_fmax() {

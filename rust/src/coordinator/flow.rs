@@ -20,12 +20,9 @@ use crate::floorplan::cost::{BatchEvaluator, CostModel, CpuEvaluator};
 use crate::floorplan::problem::Problem;
 use crate::floorplan::sa::{self, SaConfig};
 use crate::ir::core::*;
-use crate::passes::iface_infer::InterfaceInference;
-use crate::passes::manager::{Pass, PassContext};
-use crate::passes::partition::PartitionAllAux;
-use crate::passes::passthrough::Passthrough;
+use crate::passes::manager::{PassContext, PipelineReport};
 use crate::passes::pipeline_insert;
-use crate::passes::rebuild::RebuildAll;
+use crate::passes::registry;
 use crate::timing::delay::DelayModel;
 use crate::util::union_find::UnionFind;
 use anyhow::{Context, Result};
@@ -62,7 +59,9 @@ impl Default for FlowConfig {
     }
 }
 
-/// Wall-clock time spent in each stage of one [`run_hlps`] invocation.
+/// Wall-clock time spent in each stage of one [`run_hlps`] invocation,
+/// aggregated from the stage pipelines' [`PipelineReport`]s plus the
+/// non-pass stages (floorplanning, implementation).
 ///
 /// Purely observational: no stage *result* depends on these durations, so
 /// the flow's numeric outputs stay deterministic for a given seed no
@@ -83,6 +82,11 @@ pub struct FlowStats {
     pub implement: Duration,
     /// End-to-end wall time of the whole flow.
     pub total: Duration,
+    /// Per-pass wall times inside the analysis stage: derived state,
+    /// always equal to [`FlowReport::analysis`]`.timings()` (aggregated
+    /// by pass name, repeated passes summed) — kept here so stats stay
+    /// self-contained when passed around without the full report.
+    pub pass_times: Vec<(String, Duration)>,
 }
 
 impl FlowStats {
@@ -91,6 +95,14 @@ impl FlowStats {
         format!(
             "stage wall times: baseline {:.2?} | analysis {:.2?} | floorplan {:.2?} | pipeline {:.2?} | implement {:.2?} | total {:.2?}",
             self.baseline, self.analysis, self.floorplan, self.pipeline, self.implement, self.total
+        )
+    }
+
+    /// One-line per-pass breakdown of the analysis-stage pipeline.
+    pub fn render_passes(&self) -> String {
+        format!(
+            "pass wall times: {}",
+            crate::passes::manager::render_timings(&self.pass_times)
         )
     }
 }
@@ -109,6 +121,9 @@ pub struct FlowReport {
     pub evaluator_used: &'static str,
     /// Per-stage wall-clock instrumentation (observational only).
     pub stats: FlowStats,
+    /// Structured record of the stages-1–2 pass pipeline (per-pass wall
+    /// time, DRC outcome, log lines).
+    pub analysis: PipelineReport,
 }
 
 impl FlowReport {
@@ -131,30 +146,17 @@ impl FlowReport {
 /// Shared by the HLPS flow and the baseline — the *netlist* a vendor tool
 /// elaborates is the same either way; only floorplanning and pipelining
 /// differ.
-pub fn analyze_structure(
-    design: &mut Design,
-    ctx: &mut PassContext,
-) -> Result<()> {
-    crate::plugins::platform::analyze(design);
-    RebuildAll.run(design, ctx).context("hierarchy rebuild")?;
-    InterfaceInference
-        .run(design, ctx)
-        .context("interface inference")?;
-    PartitionAllAux
-        .run(design, ctx)
-        .context("aux partitioning")?;
-    Passthrough.run(design, ctx).context("passthrough")?;
-    // Bypassed aux may have joined modules directly: infer once more so
-    // newly adjacent ports gain interfaces (the Catapult pattern, §4.1).
-    InterfaceInference
-        .run(design, ctx)
-        .context("interface inference (post-passthrough)")?;
-    // New aux splits need characterization too.
-    crate::plugins::platform::analyze(design);
-    crate::passes::flatten::Flatten
-        .run(design, ctx)
-        .context("flatten")?;
-    Ok(())
+///
+/// The pass sequence is the registered
+/// [`analyze-structure`](registry::ANALYZE_STRUCTURE) pipeline
+/// (`platform-analyze, rebuild, iface-infer, partition-aux, passthrough,
+/// iface-infer, platform-analyze, flatten` — interface inference runs
+/// again post-passthrough because bypassed aux may have joined modules
+/// directly, the Catapult pattern of §4.1; platform analysis runs again
+/// because new aux splits need characterization too). Whether DRC runs
+/// between passes is the caller's choice via `ctx.drc_after_each`.
+pub fn analyze_structure(design: &mut Design, ctx: &mut PassContext) -> Result<PipelineReport> {
+    registry::named(registry::ANALYZE_STRUCTURE)?.run(design, ctx)
 }
 
 /// Run the baseline (vendor-only) flow: no HLPS, wirelength placer.
@@ -195,10 +197,14 @@ pub fn run_hlps(
     let baseline = run_baseline(design, dev, &cfg.delay);
     let stat_baseline = t.elapsed();
     let mut ctx = PassContext::new();
+    // The flow has never DRC-checked between stage-1 passes (mid-rebuild
+    // states may be transiently inconsistent); the optimized result is
+    // validated end-to-end by the e2e tests instead.
+    ctx.drc_after_each = false;
 
     // ---- Stages 1 + 2: communication analysis & partitioning ------------
     let t = Instant::now();
-    analyze_structure(design, &mut ctx)?;
+    let analysis = analyze_structure(design, &mut ctx)?;
     let nl = vivado::elaborate(design);
     let mut problem = Problem::from_netlist(&nl, dev, cfg.die_weight);
     merge_nonpipelinable(&mut problem, &nl);
@@ -306,7 +312,9 @@ pub fn run_hlps(
             pipeline: stat_pipeline,
             implement: stat_implement,
             total: t_total.elapsed(),
+            pass_times: analysis.timings(),
         },
+        analysis,
     })
 }
 

@@ -70,7 +70,10 @@ fn literature(app: &str, target: &str) -> Option<(f64, &'static str)> {
     }
 }
 
-fn generate_by_id(id: &str) -> Result<designs::Generated> {
+/// Instantiate a benchmark generator by CLI id (`cnn:<rows>x<cols>`,
+/// `llama2`, `llama2_opt`, `minimap2`, `knn`) — shared by `rsir flow`,
+/// `rsir pipeline` and the Table 2 matrix.
+pub fn generate_by_id(id: &str) -> Result<designs::Generated> {
     if let Some(dims) = id.strip_prefix("cnn:") {
         let (r, c) = dims.split_once('x').unwrap();
         return designs::cnn::generate(&designs::cnn::CnnConfig {

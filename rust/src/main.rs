@@ -3,6 +3,8 @@
 //! ```text
 //! rsir devices                         list built-in virtual devices
 //! rsir flow --bench llama2 --device u280 [--util 0.7] [--pjrt]
+//! rsir passes                          list registered passes + pipelines
+//! rsir pipeline <spec> [--bench id]    run a pass composition by name
 //! rsir table1                          Table 1: HLS-frontend LoC
 //! rsir table2 [--only <substr>]        Table 2: frequency improvements
 //! rsir fig12 [--device vhk158]         Figure 12: floorplan exploration
@@ -20,6 +22,7 @@
 use anyhow::{bail, Result};
 use rsir::coordinator::{explore, flow, parallel_synth, report};
 use rsir::device::builtin;
+use rsir::passes::{registry, DrcOutcome, PassContext};
 use rsir::util::bench::Table;
 use rsir::util::cli::Args;
 use rsir::util::pool::Pool;
@@ -27,7 +30,10 @@ use std::time::Instant;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["bench", "device", "util", "only", "out", "seed", "workers"]);
+    let args = Args::parse(
+        &argv,
+        &["bench", "device", "util", "only", "out", "seed", "workers", "ir"],
+    );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     if let Err(e) = dispatch(cmd, &args) {
         eprintln!("error: {e:#}");
@@ -81,6 +87,72 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let (row, stats) = report::run_row_timed(app, id, device, &flow_config(args))?;
             report::render_table2(&[row]).print();
             println!("{}", stats.render());
+            println!("{}", stats.render_passes());
+        }
+        "passes" => {
+            let mut t = Table::new(&["Name", "Argument", "Description"]);
+            for e in registry::passes() {
+                t.row(&[
+                    e.name.to_string(),
+                    e.arg.unwrap_or("").to_string(),
+                    e.description.to_string(),
+                ]);
+            }
+            t.print();
+            println!();
+            let mut t = Table::new(&["Pipeline", "Passes", "Description"]);
+            for p in registry::pipelines() {
+                t.row(&[
+                    p.name.to_string(),
+                    registry::build(p.name)?.len().to_string(),
+                    p.description.to_string(),
+                ]);
+            }
+            t.print();
+            println!("\nrun one with: rsir pipeline <name-or-spec> [--bench id | --ir file.json]");
+        }
+        "pipeline" => {
+            let spec = args.positional.get(1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: rsir pipeline <spec> [--bench id | --ir file.json] [--out ir.json] [--drc]"
+                )
+            })?;
+            let pipeline = registry::build(spec)?;
+            let mut design = match args.get("ir") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)?;
+                    rsir::ir::schema::design_from_json(&rsir::util::json::Json::parse(&text)?)?
+                }
+                None => report::generate_by_id(args.get_or("bench", "llama2"))?.design,
+            };
+            let mut ctx = PassContext::new();
+            // Interleaved DRC is opt-in here, matching the flow's stage
+            // contract: mid-pipeline states may be transiently
+            // inconsistent (e.g. between partition and passthrough).
+            ctx.drc_after_each = args.has_flag("drc");
+            let rep = pipeline.run(&mut design, &mut ctx)?;
+            let mut t = Table::new(&["#", "Pass", "Wall", "DRC", "Log lines"]);
+            for (i, p) in rep.passes.iter().enumerate() {
+                t.row(&[
+                    (i + 1).to_string(),
+                    p.name.clone(),
+                    format!("{:.2?}", p.wall),
+                    match p.drc {
+                        DrcOutcome::Clean => "clean".to_string(),
+                        DrcOutcome::Skipped => "-".to_string(),
+                    },
+                    p.log.len().to_string(),
+                ]);
+            }
+            t.print();
+            println!("{}", rep.render());
+            for line in &ctx.log {
+                println!("  {line}");
+            }
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, rsir::ir::schema::design_to_json(&design).pretty())?;
+                println!("wrote transformed IR to {path}");
+            }
         }
         "table1" => report::table1().print(),
         "table2" => {
@@ -184,8 +256,9 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "help" | "--help" => {
             println!("rsir — RapidStream IR (ICCAD'24 reproduction)");
-            println!("commands: devices flow table1 table2 fig12 fig13 import export");
+            println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 import export");
             println!("global: --workers N (or RSIR_WORKERS) sizes the evaluation pool");
+            println!("pass registry: `rsir passes` lists it; `rsir pipeline <spec>` runs one");
         }
         other => bail!("unknown command '{other}' (try 'rsir help')"),
     }

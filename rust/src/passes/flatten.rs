@@ -20,6 +20,10 @@ impl Pass for Flatten {
         "flatten"
     }
 
+    fn description(&self) -> &'static str {
+        "Recursively inline grouped submodules into the top module"
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
         flatten_top(design, ctx)
     }

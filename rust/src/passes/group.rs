@@ -26,6 +26,10 @@ impl Pass for Group {
         "group"
     }
 
+    fn description(&self) -> &'static str {
+        "Pull instances of a grouped module into a fresh grouped submodule"
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
         group_instances(design, &self.parent, &self.members, &self.group_name, ctx)
     }

@@ -22,7 +22,11 @@ pub struct InterfaceInference;
 
 impl Pass for InterfaceInference {
     fn name(&self) -> &'static str {
-        "interface-inference"
+        "iface-infer"
+    }
+
+    fn description(&self) -> &'static str {
+        "Transfer interfaces onto modules lacking them from their siblings"
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {

@@ -1,82 +1,295 @@
 //! Pass framework: each transformation "does one thing and does it well"
-//! (§3.3); the manager sequences passes, keeps the original↔transformed
-//! name mapping, and optionally runs DRC after every pass.
+//! (§3.3); the [`Pipeline`] sequences passes, keeps the original↔transformed
+//! name mapping, optionally runs DRC after every pass, and records a
+//! structured [`PipelineReport`] (per-pass wall time, DRC outcome, log
+//! lines) for every run.
 
 use crate::ir::core::Design;
 use crate::ir::namemap::NameMap;
 use crate::ir::validate;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Severity of a [`Diagnostic`] emitted by a pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+/// One typed message emitted through a [`PassContext`]. The legacy
+/// `ctx.log` string vector remains the plain-text view of the same
+/// stream; diagnostics add the emitting pass and a severity so callers
+/// (CLI, reports) can filter and attribute without string parsing.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable name of the pass that emitted it ("" outside a pipeline).
+    pub pass: String,
+    pub severity: Severity,
+    pub message: String,
+}
 
 /// Shared state threaded through a pass pipeline.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct PassContext {
     pub namemap: NameMap,
     /// Run DRC after each pass and fail on violations.
     pub drc_after_each: bool,
     /// Human-readable log lines from passes.
     pub log: Vec<String>,
+    /// Typed view of the log stream (plus warnings/errors).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Name of the pass currently running (set by [`Pipeline::run`]).
+    current_pass: String,
 }
 
-impl PassContext {
-    pub fn new() -> PassContext {
-        PassContext {
-            drc_after_each: true,
-            ..Default::default()
-        }
-    }
-
-    pub fn log(&mut self, msg: impl Into<String>) {
-        self.log.push(msg.into());
-    }
-}
-
-/// A composable IR transformation.
-pub trait Pass {
-    fn name(&self) -> &'static str;
-    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()>;
-}
-
-/// Run a sequence of passes with DRC hooks.
-pub struct PassManager {
-    passes: Vec<Box<dyn Pass>>,
-}
-
-impl Default for PassManager {
+impl Default for PassContext {
+    /// Identical to [`PassContext::new`]: DRC-after-each-pass **on**.
+    /// (Historically `Default` left it off, so contexts built with
+    /// `..Default::default()` silently skipped DRC.)
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl PassManager {
-    pub fn new() -> PassManager {
-        PassManager { passes: Vec::new() }
+impl PassContext {
+    pub fn new() -> PassContext {
+        PassContext {
+            namemap: NameMap::default(),
+            drc_after_each: true,
+            log: Vec::new(),
+            diagnostics: Vec::new(),
+            current_pass: String::new(),
+        }
     }
 
-    pub fn add(mut self, pass: impl Pass + 'static) -> Self {
-        self.passes.push(Box::new(pass));
+    /// The pass currently running under a [`Pipeline`], if any.
+    pub fn current_pass(&self) -> &str {
+        &self.current_pass
+    }
+
+    pub fn log(&mut self, msg: impl Into<String>) {
+        self.diag(Severity::Info, msg.into());
+    }
+
+    pub fn warn(&mut self, msg: impl Into<String>) {
+        self.diag(Severity::Warning, msg.into());
+    }
+
+    fn diag(&mut self, severity: Severity, message: String) {
+        self.log.push(match severity {
+            Severity::Info => message.clone(),
+            Severity::Warning => format!("warning: {message}"),
+            Severity::Error => format!("error: {message}"),
+        });
+        self.diagnostics.push(Diagnostic {
+            pass: self.current_pass.clone(),
+            severity,
+            message,
+        });
+    }
+}
+
+/// A composable IR transformation.
+pub trait Pass {
+    /// Stable name; the registry key used by `rsir pipeline <spec>`.
+    fn name(&self) -> &'static str;
+
+    /// One-line human description (shown by `rsir passes`).
+    fn description(&self) -> &'static str {
+        "(undocumented pass)"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()>;
+}
+
+/// DRC outcome recorded after one pass of a pipeline run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrcOutcome {
+    /// `ctx.drc_after_each` was off — no check ran.
+    Skipped,
+    /// The design passed DRC after this pass. (A failing check aborts the
+    /// pipeline with an error, so no record survives it.)
+    Clean,
+}
+
+/// Instrumentation for one pass of a [`Pipeline`] run.
+#[derive(Debug, Clone)]
+pub struct PassRecord {
+    pub name: String,
+    /// Wall time of the pass itself (excluding the DRC check).
+    pub wall: Duration,
+    pub drc: DrcOutcome,
+    /// Log lines emitted while this pass ran.
+    pub log: Vec<String>,
+}
+
+/// Structured result of one [`Pipeline::run`]: what ran, for how long,
+/// and what each pass reported. Purely observational — no pass *result*
+/// depends on the recorded durations, so flows stay deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    /// Name of the pipeline that produced this report.
+    pub pipeline: String,
+    pub passes: Vec<PassRecord>,
+    /// End-to-end wall time (passes + DRC checks).
+    pub total: Duration,
+}
+
+impl PipelineReport {
+    /// Pass names in execution order.
+    pub fn pass_names(&self) -> Vec<&str> {
+        self.passes.iter().map(|p| p.name.as_str()).collect()
+    }
+
+    /// Per-pass wall times aggregated by pass name (summing repeats,
+    /// first-seen order) — the raw material for flow-level stats.
+    pub fn timings(&self) -> Vec<(String, Duration)> {
+        let mut out: Vec<(String, Duration)> = Vec::new();
+        for p in &self.passes {
+            match out.iter_mut().find(|(n, _)| *n == p.name) {
+                Some((_, d)) => *d += p.wall,
+                None => out.push((p.name.clone(), p.wall)),
+            }
+        }
+        out
+    }
+
+    /// One-line breakdown, e.g. `rebuild 1.2ms | flatten 340µs`.
+    pub fn render(&self) -> String {
+        format!(
+            "pipeline '{}': {} in {:.2?} ({})",
+            self.pipeline,
+            self.passes.len(),
+            self.total,
+            render_timings(&self.timings())
+        )
+    }
+}
+
+/// Shared `name wall | name wall` formatting for aggregated pass timings
+/// ([`PipelineReport::render`], `FlowStats::render_passes`).
+pub fn render_timings(timings: &[(String, Duration)]) -> String {
+    timings
+        .iter()
+        .map(|(n, d)| format!("{n} {d:.2?}"))
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// Run a sequence of passes with DRC hooks, recording a
+/// [`PipelineReport`]. This is the single execution path for every
+/// transformation in the repo — flows compose pipelines rather than
+/// hand-calling `pass.run()`.
+pub struct Pipeline {
+    name: String,
+    passes: Vec<Box<dyn Pass>>,
+}
+
+/// Former name of [`Pipeline`]; kept so `PassManager::new().add(..)`
+/// call sites and docs keep working.
+pub type PassManager = Pipeline;
+
+impl fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Pipeline")
+            .field("name", &self.name)
+            .field(
+                "passes",
+                &self.passes.iter().map(|p| p.name()).collect::<Vec<_>>(),
+            )
+            .finish()
+    }
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::named("pipeline")
+    }
+
+    pub fn named(name: impl Into<String>) -> Pipeline {
+        Pipeline {
+            name: name.into(),
+            passes: Vec::new(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn add(self, pass: impl Pass + 'static) -> Self {
+        self.add_boxed(Box::new(pass))
+    }
+
+    pub fn add_boxed(mut self, pass: Box<dyn Pass>) -> Self {
+        self.passes.push(pass);
         self
     }
 
-    pub fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+    pub fn len(&self) -> usize {
+        self.passes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    pub fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<PipelineReport> {
+        let t_total = Instant::now();
+        let mut records = Vec::with_capacity(self.passes.len());
         for pass in &self.passes {
-            pass.run(design, ctx)?;
+            let log_start = ctx.log.len();
+            ctx.current_pass = pass.name().to_string();
+            let t_pass = Instant::now();
+            let result = pass
+                .run(design, ctx)
+                .with_context(|| format!("pass '{}'", pass.name()));
+            let wall = t_pass.elapsed();
+            if let Err(e) = result {
+                ctx.current_pass.clear();
+                return Err(e);
+            }
             ctx.log(format!("pass '{}' complete", pass.name()));
-            if ctx.drc_after_each {
+            let drc = if ctx.drc_after_each {
                 let violations = validate::check(design);
                 if !violations.is_empty() {
-                    let mut msg =
-                        format!("DRC failed after pass '{}':\n", pass.name());
+                    let mut msg = format!("DRC failed after pass '{}':\n", pass.name());
                     for v in violations.iter().take(10) {
                         msg.push_str(&format!("  {v}\n"));
                     }
                     if violations.len() > 10 {
                         msg.push_str(&format!("  ... {} more\n", violations.len() - 10));
                     }
+                    ctx.diag(Severity::Error, msg.clone());
+                    ctx.current_pass.clear();
                     bail!(msg);
                 }
-            }
+                DrcOutcome::Clean
+            } else {
+                DrcOutcome::Skipped
+            };
+            ctx.current_pass.clear();
+            records.push(PassRecord {
+                name: pass.name().to_string(),
+                wall,
+                drc,
+                log: ctx.log[log_start..].to_vec(),
+            });
         }
-        Ok(())
+        Ok(PipelineReport {
+            pipeline: self.name.clone(),
+            passes: records,
+            total: t_total.elapsed(),
+        })
     }
 }
 
@@ -122,7 +335,7 @@ mod tests {
     fn passes_run_in_order() {
         let mut d = base();
         let mut ctx = PassContext::new();
-        PassManager::new()
+        let report = PassManager::new()
             .add(AddModule("A"))
             .add(AddModule("B"))
             .run(&mut d, &mut ctx)
@@ -131,6 +344,8 @@ mod tests {
         assert!(d.module("B").is_some());
         assert_eq!(ctx.log.len(), 2);
         assert_eq!(ctx.namemap.trace("B"), "origin");
+        assert_eq!(report.pass_names(), ["add-module", "add-module"]);
+        assert_eq!(report.passes[0].drc, DrcOutcome::Clean);
     }
 
     #[test]
@@ -142,6 +357,11 @@ mod tests {
             .run(&mut d, &mut ctx)
             .unwrap_err();
         assert!(err.to_string().contains("DRC failed after pass 'corrupt'"));
+        // The failure is also a typed Error diagnostic.
+        assert!(ctx
+            .diagnostics
+            .iter()
+            .any(|d| d.severity == Severity::Error && d.pass == "corrupt"));
     }
 
     #[test]
@@ -149,6 +369,39 @@ mod tests {
         let mut d = base();
         let mut ctx = PassContext::new();
         ctx.drc_after_each = false;
-        PassManager::new().add(Corrupt).run(&mut d, &mut ctx).unwrap();
+        let report = PassManager::new().add(Corrupt).run(&mut d, &mut ctx).unwrap();
+        assert_eq!(report.passes[0].drc, DrcOutcome::Skipped);
+    }
+
+    #[test]
+    fn default_context_matches_new() {
+        // Regression: `Default` used to leave drc_after_each = false,
+        // silently skipping DRC in derived contexts.
+        assert!(PassContext::default().drc_after_each);
+        assert!(PassContext::new().drc_after_each);
+    }
+
+    #[test]
+    fn diagnostics_attribute_to_running_pass() {
+        struct Chatty;
+        impl Pass for Chatty {
+            fn name(&self) -> &'static str {
+                "chatty"
+            }
+            fn run(&self, _: &mut Design, ctx: &mut PassContext) -> Result<()> {
+                ctx.log("hello");
+                ctx.warn("careful");
+                Ok(())
+            }
+        }
+        let mut d = base();
+        let mut ctx = PassContext::new();
+        let report = Pipeline::named("t").add(Chatty).run(&mut d, &mut ctx).unwrap();
+        let hello = ctx.diagnostics.iter().find(|x| x.message == "hello").unwrap();
+        assert_eq!(hello.pass, "chatty");
+        assert_eq!(hello.severity, Severity::Info);
+        assert!(ctx.log.contains(&"warning: careful".to_string()));
+        // The pass's log lines are captured on its record.
+        assert!(report.passes[0].log.contains(&"hello".to_string()));
     }
 }

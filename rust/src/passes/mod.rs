@@ -1,4 +1,10 @@
 //! Composable transformation passes (§3.3).
+//!
+//! Every transformation implements [`Pass`] and is registered by stable
+//! name in [`registry`]; the flow's analysis stages run them through the
+//! instrumented [`Pipeline`] rather than hand-calling `pass.run()`.
+//! (The coordinator's floorplanning/pipelining stages 3–4 remain plain
+//! functions — see `docs/ARCHITECTURE.md`.)
 
 pub mod flatten;
 pub mod group;
@@ -8,5 +14,8 @@ pub mod partition;
 pub mod passthrough;
 pub mod pipeline_insert;
 pub mod rebuild;
+pub mod registry;
 
-pub use manager::{Pass, PassContext, PassManager};
+pub use manager::{
+    Diagnostic, DrcOutcome, Pass, PassContext, PassManager, Pipeline, PipelineReport, Severity,
+};

@@ -33,6 +33,10 @@ impl Pass for Partition {
         "partition"
     }
 
+    fn description(&self) -> &'static str {
+        "Split one aux instance into independently-floorplannable units"
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
         partition_aux(design, &self.parent, &self.aux_instance, ctx)?;
         Ok(())
@@ -45,7 +49,11 @@ pub struct PartitionAllAux;
 
 impl Pass for PartitionAllAux {
     fn name(&self) -> &'static str {
-        "partition-all-aux"
+        "partition-aux"
+    }
+
+    fn description(&self) -> &'static str {
+        "Partition every aux instance (modules tagged aux_of) in the design"
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {

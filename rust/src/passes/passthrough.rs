@@ -18,6 +18,10 @@ impl Pass for Passthrough {
         "passthrough"
     }
 
+    fn description(&self) -> &'static str {
+        "Bypass pure feed-through splits, merging their nets"
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
         let grouped: Vec<String> = design
             .modules

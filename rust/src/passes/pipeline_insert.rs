@@ -11,8 +11,45 @@
 use crate::interconnect;
 use crate::ir::core::*;
 use crate::ir::graph::BlockGraph;
-use crate::passes::manager::PassContext;
+use crate::passes::manager::{Pass, PassContext};
 use anyhow::{anyhow, bail, Result};
+
+/// Pass form of [`insert_relay_station`], operating on the design's top
+/// module: registry name `relay-insert`, argument
+/// `SRC_INST/IFACE[/STAGES]`.
+pub struct InsertRelayStation {
+    /// Instance inside the top module driving the channel.
+    pub src_inst: String,
+    /// Output handshake interface of that instance to cut.
+    pub iface: String,
+    pub stages: u32,
+    /// Optional pblock to attach as `floorplan` metadata.
+    pub slot: Option<String>,
+}
+
+impl Pass for InsertRelayStation {
+    fn name(&self) -> &'static str {
+        "relay-insert"
+    }
+
+    fn description(&self) -> &'static str {
+        "Insert a relay station on a handshake channel of the flat top"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
+        let top = design.top.clone();
+        insert_relay_station(
+            design,
+            &top,
+            &self.src_inst,
+            &self.iface,
+            self.stages,
+            self.slot.as_deref(),
+            ctx,
+        )?;
+        Ok(())
+    }
+}
 
 /// Insert a relay station on the handshake interface `iface_name` *driven
 /// by* instance `src_inst` inside grouped module `parent`. Returns the

@@ -32,7 +32,11 @@ impl HierarchyRebuild {
 
 impl Pass for HierarchyRebuild {
     fn name(&self) -> &'static str {
-        "hierarchy-rebuild"
+        "rebuild-module"
+    }
+
+    fn description(&self) -> &'static str {
+        "Rebuild one leaf Verilog module into a grouped module plus an aux"
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
@@ -48,7 +52,11 @@ pub struct RebuildAll;
 
 impl Pass for RebuildAll {
     fn name(&self) -> &'static str {
-        "hierarchy-rebuild-all"
+        "rebuild"
+    }
+
+    fn description(&self) -> &'static str {
+        "Rebuild all leaf Verilog modules with known children, to a fixpoint"
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {

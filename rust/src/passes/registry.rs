@@ -1,0 +1,392 @@
+//! Global pass registry (§3.3): stable names → pass factories, plus
+//! named pipelines, so every transformation in the repo is resolvable by
+//! name and arbitrary compositions can be run from the CLI:
+//!
+//! ```text
+//! rsir passes
+//! rsir pipeline "rebuild,iface-infer,partition-aux,passthrough,iface-infer,flatten"
+//! rsir pipeline analyze-structure --bench llama2
+//! ```
+//!
+//! A registry entry is a plain `fn(Option<&str>) -> Result<Box<dyn Pass>>`
+//! factory keyed by a stable name. Parameterless passes reject an
+//! argument; parameterized ones (`rebuild-module=TARGET`, …) require one.
+//! Named pipelines expand to pass sequences, so the integrated flow's
+//! stages are themselves registry-resolvable (see [`ANALYZE_STRUCTURE`]).
+//!
+//! ```
+//! use rsir::passes::registry;
+//! let pipeline = registry::build("iface-infer,flatten").unwrap();
+//! assert_eq!(pipeline.len(), 2);
+//! assert!(registry::build("no-such-pass").is_err());
+//! ```
+
+use super::flatten::Flatten;
+use super::group::Group;
+use super::iface_infer::InterfaceInference;
+use super::manager::{Pass, Pipeline};
+use super::partition::{Partition, PartitionAllAux};
+use super::passthrough::Passthrough;
+use super::pipeline_insert::InsertRelayStation;
+use super::rebuild::{HierarchyRebuild, RebuildAll};
+use crate::plugins::platform::PlatformAnalyze;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Registry name of the stages-1–2 pipeline of the integrated flow
+/// (communication analysis + partitioning), shared by
+/// [`analyze_structure`](crate::coordinator::flow::analyze_structure),
+/// [`run_baseline`](crate::coordinator::flow::run_baseline) and
+/// [`run_hlps`](crate::coordinator::flow::run_hlps).
+pub const ANALYZE_STRUCTURE: &str = "analyze-structure";
+
+type Factory = fn(Option<&str>) -> Result<Box<dyn Pass>>;
+
+/// One registered pass: a stable name, a one-line description, and a
+/// factory producing a fresh boxed instance.
+pub struct PassEntry {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Argument placeholder when the pass is parameterized
+    /// (`name=<arg>` in a spec), `None` for parameterless passes.
+    pub arg: Option<&'static str>,
+    factory: Factory,
+}
+
+impl PassEntry {
+    /// Instantiate this pass with an optional `name=arg` argument.
+    pub fn create(&self, arg: Option<&str>) -> Result<Box<dyn Pass>> {
+        (self.factory)(arg)
+    }
+}
+
+/// One registered named pipeline: a name resolving to a pass spec.
+pub struct PipelineEntry {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// The pass composition, in [`parse_spec`] syntax.
+    pub spec: &'static str,
+}
+
+fn no_arg(name: &str, arg: Option<&str>) -> Result<()> {
+    match arg {
+        None => Ok(()),
+        Some(a) => bail!("pass '{name}' takes no argument (got '{a}')"),
+    }
+}
+
+fn req_arg<'a>(name: &str, placeholder: &str, arg: Option<&'a str>) -> Result<&'a str> {
+    arg.ok_or_else(|| anyhow::anyhow!("pass '{name}' requires an argument: {name}={placeholder}"))
+}
+
+/// All registered passes, sorted by name. Every `Pass` implementation in
+/// the crate — including pass-ified plugin analyzers — appears here.
+pub fn passes() -> &'static [PassEntry] {
+    static ENTRIES: &[PassEntry] = &[
+        PassEntry {
+            name: "flatten",
+            description: "Recursively inline grouped submodules into the top module",
+            arg: None,
+            factory: |a| {
+                no_arg("flatten", a)?;
+                Ok(Box::new(Flatten))
+            },
+        },
+        PassEntry {
+            name: "group",
+            description: "Pull instances of a grouped module into a fresh grouped submodule",
+            arg: Some("PARENT/NAME/INST1+INST2+..."),
+            factory: |a| {
+                let a = req_arg("group", "PARENT/NAME/INST1+INST2+...", a)?;
+                let parts: Vec<&str> = a.split('/').collect();
+                let (parent, name, members) = match parts[..] {
+                    [p, n, m] => (p, n, m),
+                    _ => bail!("group argument must be PARENT/NAME/INST1+INST2+... (got '{a}')"),
+                };
+                Ok(Box::new(Group {
+                    parent: parent.to_string(),
+                    group_name: name.to_string(),
+                    members: members.split('+').map(str::to_string).collect(),
+                }))
+            },
+        },
+        PassEntry {
+            name: "iface-infer",
+            description: "Transfer interfaces onto modules lacking them from their siblings",
+            arg: None,
+            factory: |a| {
+                no_arg("iface-infer", a)?;
+                Ok(Box::new(InterfaceInference))
+            },
+        },
+        PassEntry {
+            name: "partition",
+            description: "Split one aux instance into independently-floorplannable units",
+            arg: Some("PARENT/AUX_INST"),
+            factory: |a| {
+                let a = req_arg("partition", "PARENT/AUX_INST", a)?;
+                let Some((parent, aux)) = a.split_once('/') else {
+                    bail!("partition argument must be PARENT/AUX_INST (got '{a}')");
+                };
+                Ok(Box::new(Partition {
+                    parent: parent.to_string(),
+                    aux_instance: aux.to_string(),
+                }))
+            },
+        },
+        PassEntry {
+            name: "partition-aux",
+            description: "Partition every aux instance (modules tagged aux_of) in the design",
+            arg: None,
+            factory: |a| {
+                no_arg("partition-aux", a)?;
+                Ok(Box::new(PartitionAllAux))
+            },
+        },
+        PassEntry {
+            name: "passthrough",
+            description: "Bypass pure feed-through splits, merging their nets",
+            arg: None,
+            factory: |a| {
+                no_arg("passthrough", a)?;
+                Ok(Box::new(Passthrough))
+            },
+        },
+        PassEntry {
+            name: "platform-analyze",
+            description: "Annotate leaf modules missing resource/timing metadata (vendor surrogate)",
+            arg: None,
+            factory: |a| {
+                no_arg("platform-analyze", a)?;
+                Ok(Box::new(PlatformAnalyze))
+            },
+        },
+        PassEntry {
+            name: "rebuild",
+            description: "Rebuild all leaf Verilog modules with known children, to a fixpoint",
+            arg: None,
+            factory: |a| {
+                no_arg("rebuild", a)?;
+                Ok(Box::new(RebuildAll))
+            },
+        },
+        PassEntry {
+            name: "rebuild-module",
+            description: "Rebuild one leaf Verilog module into a grouped module plus an aux",
+            arg: Some("TARGET"),
+            factory: |a| {
+                let a = req_arg("rebuild-module", "TARGET", a)?;
+                Ok(Box::new(HierarchyRebuild::new(a)))
+            },
+        },
+        PassEntry {
+            name: "relay-insert",
+            description: "Insert a relay station on a handshake channel of the flat top",
+            arg: Some("SRC_INST/IFACE[/STAGES]"),
+            factory: |a| {
+                let a = req_arg("relay-insert", "SRC_INST/IFACE[/STAGES]", a)?;
+                let parts: Vec<&str> = a.split('/').collect();
+                let (src, iface, stages) = match parts[..] {
+                    [s, i] => (s, i, 1u32),
+                    [s, i, n] => (s, i, n.parse()?),
+                    _ => bail!("relay-insert argument must be SRC_INST/IFACE[/STAGES] (got '{a}')"),
+                };
+                Ok(Box::new(InsertRelayStation {
+                    src_inst: src.to_string(),
+                    iface: iface.to_string(),
+                    stages,
+                    slot: None,
+                }))
+            },
+        },
+    ];
+    ENTRIES
+}
+
+/// All registered named pipelines.
+pub fn pipelines() -> &'static [PipelineEntry] {
+    static ENTRIES: &[PipelineEntry] = &[PipelineEntry {
+        name: ANALYZE_STRUCTURE,
+        description: "Stages 1-2 of the HLPS flow: communication analysis + partitioning \
+                      (shared by the baseline and optimized flows)",
+        spec: "platform-analyze,rebuild,iface-infer,partition-aux,passthrough,\
+               iface-infer,platform-analyze,flatten",
+    }];
+    ENTRIES
+}
+
+fn find_pass(name: &str) -> Option<&'static PassEntry> {
+    passes().iter().find(|e| e.name == name)
+}
+
+fn find_pipeline(name: &str) -> Option<&'static PipelineEntry> {
+    pipelines().iter().find(|e| e.name == name)
+}
+
+/// One step of a parsed pipeline spec: a registry name plus its optional
+/// `name=arg` argument. `Display` renders the spec syntax back, so
+/// `render_spec(&parse_spec(s)?)` round-trips.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassInvocation {
+    pub name: String,
+    pub arg: Option<String>,
+}
+
+impl fmt::Display for PassInvocation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.arg {
+            Some(a) => write!(f, "{}={a}", self.name),
+            None => write!(f, "{}", self.name),
+        }
+    }
+}
+
+/// Parse a comma-separated pipeline spec (`"rebuild,iface-infer"`,
+/// `"rebuild-module=LLM,flatten"`). Whitespace around items is ignored;
+/// names are *not* resolved here (that happens in [`build`]).
+pub fn parse_spec(spec: &str) -> Result<Vec<PassInvocation>> {
+    let mut out = Vec::new();
+    for raw in spec.split(',') {
+        let item = raw.trim();
+        if item.is_empty() {
+            bail!("empty pass name in pipeline spec '{spec}'");
+        }
+        let (name, arg) = match item.split_once('=') {
+            Some((n, a)) => (n.trim(), Some(a.trim().to_string())),
+            None => (item, None),
+        };
+        if name.is_empty() {
+            bail!("empty pass name in pipeline spec '{spec}'");
+        }
+        // `name=` would sail past the factories' argument checks and fail
+        // late with a confusing downstream error; reject it at parse time.
+        if matches!(&arg, Some(a) if a.is_empty()) {
+            bail!("empty argument in pipeline spec item '{item}'");
+        }
+        out.push(PassInvocation {
+            name: name.to_string(),
+            arg,
+        });
+    }
+    Ok(out)
+}
+
+/// Render invocations back to canonical spec syntax.
+pub fn render_spec(invocations: &[PassInvocation]) -> String {
+    invocations
+        .iter()
+        .map(|i| i.to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Build a runnable [`Pipeline`] from a spec. Items may name passes or
+/// registered pipelines (which expand in place, recursively).
+pub fn build(spec: &str) -> Result<Pipeline> {
+    build_named("pipeline", spec)
+}
+
+/// Resolve a registered pipeline by name (e.g. [`ANALYZE_STRUCTURE`]).
+pub fn named(name: &str) -> Result<Pipeline> {
+    let Some(entry) = find_pipeline(name) else {
+        bail!(
+            "unknown pipeline '{name}'; registered: {}",
+            pipelines()
+                .iter()
+                .map(|p| p.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    };
+    build_named(entry.name, entry.spec)
+}
+
+fn build_named(name: &str, spec: &str) -> Result<Pipeline> {
+    let mut pipeline = Pipeline::named(name);
+    for inv in parse_spec(spec)? {
+        pipeline = push(pipeline, &inv, 4)?;
+    }
+    Ok(pipeline)
+}
+
+fn push(pipeline: Pipeline, inv: &PassInvocation, depth: usize) -> Result<Pipeline> {
+    if let Some(entry) = find_pipeline(&inv.name) {
+        if inv.arg.is_some() {
+            bail!("pipeline '{}' takes no argument", inv.name);
+        }
+        if depth == 0 {
+            bail!("pipeline '{}' nests too deeply", inv.name);
+        }
+        let mut pipeline = pipeline;
+        for sub in parse_spec(entry.spec)? {
+            pipeline = push(pipeline, &sub, depth - 1)?;
+        }
+        return Ok(pipeline);
+    }
+    let Some(entry) = find_pass(&inv.name) else {
+        bail!(
+            "unknown pass '{}'; registered: {}",
+            inv.name,
+            passes()
+                .iter()
+                .map(|p| p.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    };
+    Ok(pipeline.add_boxed(entry.create(inv.arg.as_deref())?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_descriptions_present() {
+        let names: Vec<&str> = passes().iter().map(|e| e.name).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "registry must stay sorted by name");
+        assert!(passes().iter().all(|e| !e.description.is_empty()));
+    }
+
+    #[test]
+    fn factory_arg_validation() {
+        assert!(find_pass("flatten").unwrap().create(None).is_ok());
+        assert!(find_pass("flatten").unwrap().create(Some("x")).is_err());
+        assert!(find_pass("rebuild-module").unwrap().create(None).is_err());
+        let p = find_pass("rebuild-module").unwrap().create(Some("LLM")).unwrap();
+        assert_eq!(p.name(), "rebuild-module");
+    }
+
+    /// The registry key IS the pass's `name()`, and the table's
+    /// description matches the trait's `description()` — so `rsir
+    /// pipeline` output (which prints `Pass::name()`) is always valid
+    /// `rsir pipeline` input, and the two description sources can't
+    /// drift.
+    #[test]
+    fn entries_agree_with_pass_impls() {
+        for entry in passes() {
+            // Parameterized passes need a plausible dummy argument.
+            let arg = entry.arg.map(|_| match entry.name {
+                "group" => "Top/G/a+b",
+                "partition" => "Top/aux0",
+                "rebuild-module" => "M",
+                "relay-insert" => "src/o",
+                other => panic!("no dummy arg for '{other}'"),
+            });
+            let pass = entry.create(arg).unwrap();
+            assert_eq!(pass.name(), entry.name);
+            assert_eq!(pass.description(), entry.description);
+        }
+    }
+
+    #[test]
+    fn named_pipeline_expands_in_spec() {
+        let p = build("analyze-structure").unwrap();
+        assert_eq!(p.len(), 8);
+        // A pipeline name composes with plain passes.
+        let p = build("analyze-structure,flatten").unwrap();
+        assert_eq!(p.len(), 9);
+    }
+}

@@ -6,8 +6,31 @@
 
 use crate::eda::synth::SynthEstimator;
 use crate::ir::core::*;
+use crate::passes::manager::{Pass, PassContext};
 use crate::timing::netlist::ModuleCharacteristics;
 use crate::util::json::{Json, JsonObj};
+
+/// Pass form of [`analyze`], so platform analysis composes in pipelines
+/// like any §3.3 transformation (registry name `platform-analyze`).
+pub struct PlatformAnalyze;
+
+impl Pass for PlatformAnalyze {
+    fn name(&self) -> &'static str {
+        "platform-analyze"
+    }
+
+    fn description(&self) -> &'static str {
+        "Annotate leaf modules missing resource/timing metadata (vendor surrogate)"
+    }
+
+    fn run(&self, design: &mut Design, ctx: &mut PassContext) -> anyhow::Result<()> {
+        let n = analyze(design);
+        if n > 0 {
+            ctx.log(format!("platform-analyze: annotated {n} modules"));
+        }
+        Ok(())
+    }
+}
 
 /// Annotate every leaf module lacking resource/timing metadata.
 /// Returns the number of modules annotated.

@@ -175,6 +175,9 @@ fn namemap_traces_through_full_flow() {
     let g = rsir::designs::llama2::generate(&Default::default()).unwrap();
     let mut d = g.design;
     let mut ctx = PassContext::new();
+    // Match the flow's stage-1 contract: no interleaved DRC (mid-rebuild
+    // states may be transiently inconsistent).
+    ctx.drc_after_each = false;
     rsir::coordinator::flow::analyze_structure(&mut d, &mut ctx).unwrap();
     let _ = dev;
     // Flattened instance names trace back to hierarchical paths.
