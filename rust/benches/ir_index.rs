@@ -1,0 +1,126 @@
+//! Bench: the `ir_index` hot path — cached connectivity queries through
+//! `DesignIndex` vs the legacy per-pass `BlockGraph` rebuild loop, on the
+//! largest built-in design (CNN 13x12, analyzed down to its flat top —
+//! the shape every post-analysis pass queries).
+//!
+//! `--smoke` shrinks the iteration counts for CI; `--out FILE` writes the
+//! stats as JSON (uploaded as the `BENCH_ir_index.json` CI artifact to
+//! track the perf trajectory).
+
+use rsir::coordinator::flow;
+use rsir::ir::core::{ConnExpr, Module};
+use rsir::ir::graph::{BlockGraph, Endpoint, NetInfo};
+use rsir::ir::index::DesignIndex;
+use rsir::passes::PassContext;
+use rsir::util::bench::bench;
+use rsir::util::json::{Json, JsonObj};
+use std::collections::BTreeMap;
+
+/// The pre-refactor string-keyed `BlockGraph::build`, kept verbatim as
+/// the baseline (the in-tree `build` is now a view over `ModuleConn`, so
+/// timing it would charge the baseline for interning it never did —
+/// same reference implementation as tests/ir_index.rs).
+fn legacy_block_graph(m: &Module) -> BlockGraph {
+    let mut nets: BTreeMap<String, NetInfo> = BTreeMap::new();
+    for w in m.wires() {
+        nets.entry(w.name.clone()).or_default().width = w.width;
+    }
+    for p in &m.ports {
+        let e = nets.entry(p.name.clone()).or_default();
+        e.width = p.width;
+        e.endpoints.push(Endpoint::Parent {
+            port: p.name.clone(),
+        });
+    }
+    let mut instances = Vec::new();
+    for inst in m.instances() {
+        instances.push(inst.instance_name.clone());
+        for conn in &inst.connections {
+            if let ConnExpr::Id(id) = &conn.value {
+                nets.entry(id.clone()).or_default().endpoints.push(Endpoint::Inst {
+                    inst: inst.instance_name.clone(),
+                    port: conn.port.clone(),
+                });
+            }
+        }
+    }
+    BlockGraph { nets, instances }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let g = rsir::designs::cnn::generate(&rsir::designs::cnn::CnnConfig { rows: 13, cols: 12 })
+        .unwrap();
+    let mut d = g.design;
+    let mut ctx = PassContext::new();
+    ctx.drc_after_each = false;
+    flow::analyze_structure(&mut d, &mut ctx).unwrap();
+    let grouped: Vec<String> = d
+        .modules
+        .values()
+        .filter(|m| m.is_grouped())
+        .map(|m| m.name.clone())
+        .collect();
+    let queries = if smoke { 50 } else { 1000 };
+    let runs = if smoke { 3 } else { 7 };
+    println!(
+        "== ir_index hot path (cnn 13x12 analyzed: {} grouped modules, {queries} query rounds) ==",
+        grouped.len()
+    );
+
+    // Legacy: what DRC / iface-infer / channel discovery did per pass —
+    // rebuild the whole string-keyed block graph for every query.
+    let legacy = bench("legacy rebuild loop", 1, runs, || {
+        let mut total = 0usize;
+        for _ in 0..queries {
+            for name in &grouped {
+                let bg = legacy_block_graph(d.module(name).unwrap());
+                total += bg.nets.len();
+            }
+        }
+        total
+    });
+
+    // Indexed: build the cache once, then every query is a table lookup.
+    let indexed = bench("index build + cached query", 1, runs, || {
+        let mut index = DesignIndex::for_design(&d);
+        let mut total = 0usize;
+        for _ in 0..queries {
+            for name in &grouped {
+                let (conn, _) = index.conn(&d, name).unwrap();
+                total += conn.nets.len();
+            }
+        }
+        total
+    });
+
+    let speedup = legacy.median.as_secs_f64() / indexed.median.as_secs_f64().max(1e-12);
+    println!("speedup (legacy median / indexed median): {speedup:.1}x");
+
+    if let Some(path) = &out {
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::str("ir_index"));
+        o.insert("design", Json::str("cnn:13x12 (analyzed)"));
+        o.insert("grouped_modules", Json::num(grouped.len() as f64));
+        o.insert("query_rounds", Json::num(queries as f64));
+        o.insert("runs", Json::num(runs as f64));
+        o.insert("smoke", Json::Bool(smoke));
+        o.insert("legacy_median_ns", Json::num(legacy.median.as_nanos() as f64));
+        o.insert("indexed_median_ns", Json::num(indexed.median.as_nanos() as f64));
+        o.insert("speedup", Json::num(speedup));
+        std::fs::write(path, Json::Obj(o).pretty()).unwrap();
+        println!("wrote {path}");
+    }
+    assert!(
+        speedup >= 2.0,
+        "cached index path must beat the rebuild loop >=2x (got {speedup:.2}x)"
+    );
+    println!("\nir_index bench complete");
+}

@@ -374,7 +374,15 @@ fn insert_pipelines(
     ctx: &mut PassContext,
 ) -> Result<usize> {
     let top = design.top.clone();
-    let channels = pipeline_insert::pipelinable_channels(design, &top);
+    let channels = match pipeline_insert::pipelinable_channels(design, &top, &mut ctx.index) {
+        Ok(c) => c,
+        Err(e) => {
+            // A leaf top has no channels to pipeline. Record the typed
+            // diagnostic and skip stage 4 (this used to panic).
+            ctx.error(format!("interconnect synthesis skipped: {e}"));
+            return Ok(0);
+        }
+    };
     let mut inserted = 0usize;
     for (src_inst, iface, dst_inst, _width) in channels {
         let (Some(src_n), Some(dst_n)) = (nl.node_index(&src_inst), nl.node_index(&dst_inst))

@@ -37,24 +37,26 @@ pub struct Problem {
 }
 
 impl Problem {
-    /// One unit per netlist node.
+    /// One unit per netlist node. Pblock names resolve to slot indices
+    /// through a prebuilt map (first occurrence wins, matching the
+    /// historical linear scan) instead of rescanning `dev.slots` per node.
     pub fn from_netlist(nl: &FlatNetlist, dev: &VirtualDevice, die_weight: f64) -> Problem {
+        let mut slot_by_pblock: BTreeMap<&str, usize> = BTreeMap::new();
+        for (i, s) in dev.slots.iter().enumerate() {
+            slot_by_pblock.entry(&s.pblock).or_insert(i);
+        }
         let units = nl
             .nodes
             .iter()
-            .map(|n| Unit {
-                nodes: vec![],
+            .enumerate()
+            .map(|(i, n)| Unit {
+                nodes: vec![i],
                 resources: n.resources,
                 fixed_slot: n
                     .fixed_slot
-                    .as_ref()
-                    .and_then(|pb| dev.slots.iter().position(|s| &s.pblock == pb)),
+                    .as_deref()
+                    .and_then(|pb| slot_by_pblock.get(pb).copied()),
                 name: n.path.clone(),
-            })
-            .enumerate()
-            .map(|(i, mut u)| {
-                u.nodes = vec![i];
-                u
             })
             .collect();
         let mut agg: BTreeMap<(usize, usize), u64> = BTreeMap::new();

@@ -1,9 +1,43 @@
 //! Block-graph view of a grouped module: wire endpoints, connectivity
 //! queries, and the inter-instance edge list used by partitioning,
 //! floorplanning, and pipeline insertion.
+//!
+//! Since the introduction of [`crate::ir::index`], `BlockGraph` is a thin
+//! string-keyed *compatibility view* derived from the ID-based
+//! [`ModuleConn`](crate::ir::index::ModuleConn): hot paths query the
+//! cached index instead of rebuilding this structure per pass.
 
 use crate::ir::core::*;
+use crate::ir::index::ModuleConn;
+use crate::ir::intern::Interner;
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// Typed failure of connectivity extraction ([`BlockGraph::try_build`],
+/// [`crate::ir::index::DesignIndex::conn`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// Connectivity was requested on a leaf module (it has no wires or
+    /// instances — only grouped modules have a block graph).
+    Leaf { module: String },
+    /// The named module is not in the design.
+    Missing { module: String },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Leaf { module } => {
+                write!(f, "connectivity requested on leaf module '{module}'")
+            }
+            GraphError::Missing { module } => {
+                write!(f, "module '{module}' not found in design")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 /// One endpoint of a wire inside a grouped module.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -24,14 +58,15 @@ impl Endpoint {
 }
 
 /// Connectivity of one identifier (wire or parent-port name).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct NetInfo {
     pub endpoints: Vec<Endpoint>,
     pub width: u32,
 }
 
-/// The resolved connectivity of a grouped module.
-#[derive(Debug, Clone)]
+/// The resolved connectivity of a grouped module (string-keyed
+/// compatibility view over [`ModuleConn`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockGraph {
     /// identifier -> endpoints. Identifiers are wire names or parent ports.
     pub nets: BTreeMap<String, NetInfo>,
@@ -40,33 +75,18 @@ pub struct BlockGraph {
 }
 
 impl BlockGraph {
-    /// Build the graph for grouped module `m` (panics on leaf modules).
+    /// Build the graph for grouped module `m`; a leaf module yields a
+    /// typed [`GraphError`] instead of a panic.
+    pub fn try_build(m: &Module) -> Result<BlockGraph, GraphError> {
+        let mut interner = Interner::new();
+        let conn = ModuleConn::build(m, &mut interner)?;
+        Ok(conn.to_block_graph(&interner))
+    }
+
+    /// Build the graph for grouped module `m` (panics on leaf modules —
+    /// prefer [`BlockGraph::try_build`] in pass code).
     pub fn build(m: &Module) -> BlockGraph {
-        assert!(m.is_grouped(), "BlockGraph::build on leaf {}", m.name);
-        let mut nets: BTreeMap<String, NetInfo> = BTreeMap::new();
-        for w in m.wires() {
-            nets.entry(w.name.clone()).or_default().width = w.width;
-        }
-        for p in &m.ports {
-            let e = nets.entry(p.name.clone()).or_default();
-            e.width = p.width;
-            e.endpoints.push(Endpoint::Parent {
-                port: p.name.clone(),
-            });
-        }
-        let mut instances = Vec::new();
-        for inst in m.instances() {
-            instances.push(inst.instance_name.clone());
-            for conn in &inst.connections {
-                if let ConnExpr::Id(id) = &conn.value {
-                    nets.entry(id.clone()).or_default().endpoints.push(Endpoint::Inst {
-                        inst: inst.instance_name.clone(),
-                        port: conn.port.clone(),
-                    });
-                }
-            }
-        }
-        BlockGraph { nets, instances }
+        Self::try_build(m).unwrap_or_else(|e| panic!("BlockGraph::build: {e}"))
     }
 
     /// The other endpoint of a 2-endpoint net, given one side.
@@ -196,5 +216,13 @@ mod tests {
         let mut nets = g.nets_of_instance("a");
         nets.sort();
         assert_eq!(nets, vec!["in_data", "w"]);
+    }
+
+    #[test]
+    fn try_build_rejects_leaf_with_typed_error() {
+        let leaf = Module::leaf("L", SourceFormat::Verilog, "");
+        let err = BlockGraph::try_build(&leaf).unwrap_err();
+        assert!(matches!(&err, GraphError::Leaf { module } if module == "L"));
+        assert!(err.to_string().contains("leaf module 'L'"));
     }
 }

@@ -1,0 +1,685 @@
+//! Indexed, cached connectivity over a [`Design`] — the ID-based layer
+//! that replaces per-pass string-keyed [`BlockGraph`] rebuilds.
+//!
+//! A [`DesignIndex`] assigns stable IDs ([`ModuleId`], [`InstId`],
+//! [`NetId`], [`PortId`]) and memoizes one [`ModuleConn`] — the resolved
+//! net/endpoint table of a grouped module — per module, so repeated
+//! connectivity queries (DRC after every pass, interface-inference
+//! fixpoints, channel discovery) are table lookups instead of whole-module
+//! rebuilds. It also caches the inverse instance→parent map
+//! ([`DesignIndex::parents`]).
+//!
+//! ## ID stability
+//!
+//! * A [`ModuleId`], once assigned to a name, keeps that name for the
+//!   lifetime of the index; re-registering the same name returns the same
+//!   id (a module replaced under its old name keeps its id, with the
+//!   cache dirtied). Ids are never recycled.
+//! * [`InstId`] / [`PortId`] are declaration indices *within* one
+//!   [`ModuleConn`] snapshot; [`NetId`] is the net's position in the
+//!   name-sorted net table. They are stable as long as the module is not
+//!   edited.
+//! * Two indexes populated over equal designs in the same order assign
+//!   equal ids ([`DesignIndex::for_design`] registers in module-name
+//!   order), which keeps every downstream result deterministic.
+//!
+//! ## Cache invalidation
+//!
+//! The design stays the source of truth; the index only caches derived
+//! connectivity. Mutations must be announced:
+//!
+//! * [`DesignIndex::edit`] — the sanctioned way to mutate a module's
+//!   wires, instances or connections: marks that module's cache dirty and
+//!   hands out the `&mut Module`.
+//! * [`DesignIndex::touch`] — after adding, replacing or removing a
+//!   module outside `edit`.
+//! * [`DesignIndex::invalidate_all`] — the pass pipeline calls this after
+//!   any pass that does not track its own mutations (see
+//!   `passes::manager::IndexPolicy`).
+//!
+//! Interface and metadata edits do not feed the connectivity tables and
+//! need no invalidation. In debug builds every cache hit is cross-checked
+//! against a fresh build and panics on divergence, so a pass that forgets
+//! to invalidate fails loudly under `cargo test` instead of silently
+//! serving stale nets.
+//!
+//! ```
+//! use rsir::ir::core::{ConnExpr, Design, Dir, Instance, Module, Port, SourceFormat};
+//! use rsir::ir::index::DesignIndex;
+//!
+//! let mut d = Design::new("Top");
+//! d.add(Module::leaf("A", SourceFormat::Verilog, ""));
+//! let mut top = Module::grouped("Top");
+//! top.ports = vec![Port::new("x", Dir::In, 8)];
+//! let mut a = Instance::new("a0", "A");
+//! a.connect("i", ConnExpr::id("x"));
+//! top.instances_mut().push(a);
+//! d.add(top);
+//!
+//! let mut index = DesignIndex::for_design(&d);
+//! let (conn, interner) = index.conn(&d, "Top").unwrap();
+//! assert_eq!(conn.nets.len(), 1); // the identifier "x"
+//! assert_eq!(conn.nets[0].endpoints.len(), 2); // parent port + a0.i
+//! assert_eq!(interner.resolve(conn.insts[0].module), "A");
+//! // The second query is a cached table lookup, not a rebuild.
+//! let _ = index.conn(&d, "Top").unwrap();
+//! assert_eq!(index.cache_stats(), (1, 1)); // one hit, one miss
+//! ```
+
+use crate::ir::core::{ConnExpr, Design, Module};
+use crate::ir::graph::{BlockGraph, Endpoint, GraphError, NetInfo};
+use crate::ir::intern::{Interner, Symbol};
+use std::collections::BTreeMap;
+
+/// Stable id of a module name within one [`DesignIndex`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModuleId(pub u32);
+
+/// Declaration index of an instance within its grouped module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InstId(pub u32);
+
+/// Position of a net in a module's name-sorted net table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NetId(pub u32);
+
+/// Declaration index of a port within its module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PortId(pub u32);
+
+impl ModuleId {
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl InstId {
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl NetId {
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl PortId {
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One endpoint of a net, in ID form (compare [`Endpoint`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnEndpoint {
+    /// A port on the grouped module itself (seen from inside).
+    Parent { port: PortId },
+    /// Port `port` on the instance with declaration index `inst`.
+    Inst { inst: InstId, port: Symbol },
+}
+
+/// One net: an identifier (wire or parent-port name) with its endpoints.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetConn {
+    pub name: Symbol,
+    pub width: u32,
+    pub endpoints: Vec<ConnEndpoint>,
+}
+
+/// One instance: declaration-ordered name + instantiated module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InstConn {
+    pub name: Symbol,
+    pub module: Symbol,
+}
+
+/// One port of the grouped module, in declaration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PortConn {
+    pub name: Symbol,
+    pub width: u32,
+}
+
+/// The resolved connectivity of one grouped module, ID-based: the same
+/// information as [`BlockGraph`] (which is now a view over this), but
+/// with interned names and dense indices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModuleConn {
+    /// The grouped module's own name.
+    pub module: Symbol,
+    /// Nets sorted by identifier string ([`NetId`] = position).
+    pub nets: Vec<NetConn>,
+    /// Ports in declaration order ([`PortId`] = position).
+    pub ports: Vec<PortConn>,
+    /// Instances in declaration order ([`InstId`] = position).
+    pub insts: Vec<InstConn>,
+}
+
+impl ModuleConn {
+    /// Extract the connectivity of grouped module `m`, interning every
+    /// identifier. Mirrors the historical `BlockGraph::build` exactly:
+    /// wires seed widths, ports overwrite widths and add parent
+    /// endpoints, instance connections append endpoints in declaration
+    /// order, and nets come out sorted by name.
+    pub fn build(m: &Module, interner: &mut Interner) -> Result<ModuleConn, GraphError> {
+        if !m.is_grouped() {
+            return Err(GraphError::Leaf {
+                module: m.name.clone(),
+            });
+        }
+        let mut acc: BTreeMap<&str, (u32, Vec<ConnEndpoint>)> = BTreeMap::new();
+        for w in m.wires() {
+            acc.entry(&w.name).or_default().0 = w.width;
+        }
+        let mut ports = Vec::with_capacity(m.ports.len());
+        for (pi, p) in m.ports.iter().enumerate() {
+            let e = acc.entry(&p.name).or_default();
+            e.0 = p.width;
+            e.1.push(ConnEndpoint::Parent {
+                port: PortId(pi as u32),
+            });
+            ports.push(PortConn {
+                name: interner.intern(&p.name),
+                width: p.width,
+            });
+        }
+        let mut insts = Vec::with_capacity(m.instances().len());
+        for (ii, inst) in m.instances().iter().enumerate() {
+            insts.push(InstConn {
+                name: interner.intern(&inst.instance_name),
+                module: interner.intern(&inst.module_name),
+            });
+            for conn in &inst.connections {
+                if let ConnExpr::Id(id) = &conn.value {
+                    acc.entry(id).or_default().1.push(ConnEndpoint::Inst {
+                        inst: InstId(ii as u32),
+                        port: interner.intern(&conn.port),
+                    });
+                }
+            }
+        }
+        let nets = acc
+            .into_iter()
+            .map(|(name, (width, endpoints))| NetConn {
+                name: interner.intern(name),
+                width,
+                endpoints,
+            })
+            .collect();
+        Ok(ModuleConn {
+            module: interner.intern(&m.name),
+            nets,
+            ports,
+            insts,
+        })
+    }
+
+    /// Net id of an identifier, by binary search over the sorted table.
+    pub fn net_id(&self, interner: &Interner, name: &str) -> Option<NetId> {
+        self.nets
+            .binary_search_by(|n| interner.resolve(n.name).cmp(name))
+            .ok()
+            .map(|i| NetId(i as u32))
+    }
+
+    pub fn net(&self, id: NetId) -> &NetConn {
+        &self.nets[id.as_usize()]
+    }
+
+    /// Instance id by name (declaration-order position).
+    pub fn inst_id(&self, interner: &Interner, name: &str) -> Option<InstId> {
+        let sym = interner.get(name)?;
+        self.insts
+            .iter()
+            .position(|i| i.name == sym)
+            .map(|i| InstId(i as u32))
+    }
+
+    /// The other endpoint of a 2-endpoint net, given one side.
+    pub fn opposite(&self, net: NetId, this: &ConnEndpoint) -> Option<&ConnEndpoint> {
+        let info = self.net(net);
+        if info.endpoints.len() != 2 {
+            return None;
+        }
+        info.endpoints.iter().find(|e| *e != this)
+    }
+
+    /// Human-readable endpoint, matching `Endpoint::describe` exactly.
+    pub fn describe_endpoint(&self, e: &ConnEndpoint, interner: &Interner) -> String {
+        match e {
+            ConnEndpoint::Parent { port } => {
+                format!(
+                    "<parent>.{}",
+                    interner.resolve(self.ports[port.as_usize()].name)
+                )
+            }
+            ConnEndpoint::Inst { inst, port } => {
+                format!(
+                    "{}.{}",
+                    interner.resolve(self.insts[inst.as_usize()].name),
+                    interner.resolve(*port)
+                )
+            }
+        }
+    }
+
+    /// Materialize the legacy string-keyed [`BlockGraph`] view.
+    pub fn to_block_graph(&self, interner: &Interner) -> BlockGraph {
+        let mut nets = BTreeMap::new();
+        for n in &self.nets {
+            nets.insert(
+                interner.resolve(n.name).to_string(),
+                NetInfo {
+                    endpoints: n
+                        .endpoints
+                        .iter()
+                        .map(|e| self.legacy_endpoint(e, interner))
+                        .collect(),
+                    width: n.width,
+                },
+            );
+        }
+        BlockGraph {
+            nets,
+            instances: self
+                .insts
+                .iter()
+                .map(|i| interner.resolve(i.name).to_string())
+                .collect(),
+        }
+    }
+
+    fn legacy_endpoint(&self, e: &ConnEndpoint, interner: &Interner) -> Endpoint {
+        match e {
+            ConnEndpoint::Parent { port } => {
+                let name = self.ports[port.as_usize()].name;
+                Endpoint::Parent {
+                    port: interner.resolve(name).to_string(),
+                }
+            }
+            ConnEndpoint::Inst { inst, port } => {
+                let name = self.insts[inst.as_usize()].name;
+                Endpoint::Inst {
+                    inst: interner.resolve(name).to_string(),
+                    port: interner.resolve(*port).to_string(),
+                }
+            }
+        }
+    }
+}
+
+/// One instantiation site of a module: which parent instantiates it, as
+/// which instance, at which declaration position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParentSite {
+    pub parent: Symbol,
+    pub instance: Symbol,
+    pub decl: usize,
+}
+
+/// The interning + indexing layer over one [`Design`]: stable module ids,
+/// per-module cached connectivity, and the inverse instance→parent map.
+/// See the module docs for the invalidation contract.
+#[derive(Debug, Clone)]
+pub struct DesignIndex {
+    interner: Interner,
+    ids: BTreeMap<String, ModuleId>,
+    names: Vec<Symbol>,
+    conns: Vec<Option<ModuleConn>>,
+    parents: Option<BTreeMap<Symbol, Vec<ParentSite>>>,
+    caching: bool,
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for DesignIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DesignIndex {
+    pub fn new() -> DesignIndex {
+        DesignIndex {
+            interner: Interner::new(),
+            ids: BTreeMap::new(),
+            names: Vec::new(),
+            conns: Vec::new(),
+            parents: None,
+            caching: true,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Index every module of `design` up front. Ids are assigned in
+    /// module-name order, so two indexes built over equal designs assign
+    /// equal ids.
+    pub fn for_design(design: &Design) -> DesignIndex {
+        let mut ix = DesignIndex::new();
+        for name in design.modules.keys() {
+            ix.module_id(name);
+        }
+        ix
+    }
+
+    /// The interner backing every symbol this index hands out.
+    pub fn interner(&self) -> &Interner {
+        &self.interner
+    }
+
+    /// Stable id for a module name, assigned on first sight.
+    pub fn module_id(&mut self, name: &str) -> ModuleId {
+        if let Some(&id) = self.ids.get(name) {
+            return id;
+        }
+        let id = ModuleId(self.names.len() as u32);
+        self.names.push(self.interner.intern(name));
+        self.conns.push(None);
+        self.ids.insert(name.to_string(), id);
+        id
+    }
+
+    /// The name a [`ModuleId`] was assigned to.
+    pub fn module_name(&self, id: ModuleId) -> &str {
+        self.interner.resolve(self.names[id.as_usize()])
+    }
+
+    /// Cached connectivity of grouped module `name` (built on first query
+    /// or after invalidation). Returns the interner alongside so callers
+    /// can resolve the symbols without a second borrow of the index.
+    pub fn conn(
+        &mut self,
+        design: &Design,
+        name: &str,
+    ) -> Result<(&ModuleConn, &Interner), GraphError> {
+        let id = self.module_id(name).as_usize();
+        let m = design.module(name).ok_or_else(|| GraphError::Missing {
+            module: name.to_string(),
+        })?;
+        if !m.is_grouped() {
+            return Err(GraphError::Leaf {
+                module: name.to_string(),
+            });
+        }
+        if self.conns[id].is_none() || !self.caching {
+            self.conns[id] = Some(ModuleConn::build(m, &mut self.interner)?);
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+            // In debug builds, cross-check the cache against a fresh
+            // build: a mismatch means something mutated the module
+            // without `edit`/`touch` (or a pass wrongly declared
+            // `IndexPolicy::Tracked`).
+            #[cfg(debug_assertions)]
+            {
+                let fresh = ModuleConn::build(m, &mut self.interner)?;
+                assert!(
+                    self.conns[id].as_ref() == Some(&fresh),
+                    "stale connectivity cache for module '{name}': \
+                     mutated without DesignIndex::edit/touch"
+                );
+            }
+        }
+        Ok((self.conns[id].as_ref().unwrap(), &self.interner))
+    }
+
+    /// Like [`conn`](Self::conn), addressed by id.
+    pub fn conn_by_id(
+        &mut self,
+        design: &Design,
+        id: ModuleId,
+    ) -> Result<(&ModuleConn, &Interner), GraphError> {
+        let name = self.module_name(id).to_string();
+        self.conn(design, &name)
+    }
+
+    /// Mutable access to a module for a connectivity-changing edit: marks
+    /// only this module's cache dirty (plus the parent map, in case
+    /// instances changed) before handing out the borrow. This is the one
+    /// sanctioned mutation path for an `IndexPolicy::Tracked` pass.
+    pub fn edit<'d>(&mut self, design: &'d mut Design, name: &str) -> Option<&'d mut Module> {
+        self.touch(name);
+        design.module_mut(name)
+    }
+
+    /// Like [`edit`](Self::edit), addressed by id.
+    pub fn edit_by_id<'d>(
+        &mut self,
+        design: &'d mut Design,
+        id: ModuleId,
+    ) -> Option<&'d mut Module> {
+        let name = self.module_name(id).to_string();
+        self.edit(design, &name)
+    }
+
+    /// Mark one module's cached connectivity dirty — call after adding,
+    /// replacing or removing the module named `name` outside [`edit`](Self::edit).
+    pub fn touch(&mut self, name: &str) {
+        let id = self.module_id(name);
+        self.conns[id.as_usize()] = None;
+        self.parents = None;
+    }
+
+    /// Drop every cached artifact (connectivity + parent map), keeping
+    /// the interner and the stable name→id assignment. The pass pipeline
+    /// calls this after any pass that does not track its own mutations.
+    pub fn invalidate_all(&mut self) {
+        for c in &mut self.conns {
+            *c = None;
+        }
+        self.parents = None;
+    }
+
+    /// Drop only the cached parent map — call after module *removals*
+    /// (e.g. [`Design::gc`]). Connectivity caches self-guard against
+    /// deleted modules ([`conn`](Self::conn) checks the design first),
+    /// but the parents map would otherwise keep listing the removed
+    /// instantiation sites.
+    pub fn invalidate_parents(&mut self) {
+        self.parents = None;
+    }
+
+    /// Disable (or re-enable) connectivity caching — every [`conn`](Self::conn)
+    /// query then rebuilds from the design. The equivalence tests use this
+    /// to prove cached and uncached runs are byte-identical.
+    pub fn set_caching(&mut self, on: bool) {
+        self.caching = on;
+    }
+
+    /// `(hits, misses)` of the connectivity cache so far.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// The inverse instance→parent map: for each instantiated module,
+    /// every site that instantiates it, ordered by (parent module name,
+    /// declaration index). Cached until the next `edit`/`touch`/
+    /// `invalidate_all`.
+    pub fn parents(&mut self, design: &Design) -> (&BTreeMap<Symbol, Vec<ParentSite>>, &Interner) {
+        if self.parents.is_none() {
+            let mut map: BTreeMap<Symbol, Vec<ParentSite>> = BTreeMap::new();
+            for m in design.modules.values() {
+                let parent = self.interner.intern(&m.name);
+                for (decl, inst) in m.instances().iter().enumerate() {
+                    let child = self.interner.intern(&inst.module_name);
+                    map.entry(child).or_default().push(ParentSite {
+                        parent,
+                        instance: self.interner.intern(&inst.instance_name),
+                        decl,
+                    });
+                }
+            }
+            self.parents = Some(map);
+        }
+        (self.parents.as_ref().unwrap(), &self.interner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::*;
+
+    /// Top with two instances A, B joined by wire `w`, A tied to parent
+    /// port `in_data` (same shape as the graph.rs sample).
+    fn sample_design() -> Design {
+        let mut d = Design::new("Top");
+        d.add(Module::leaf("A", SourceFormat::Verilog, ""));
+        d.add(Module::leaf("B", SourceFormat::Verilog, ""));
+        let mut m = Module::grouped("Top");
+        m.ports = vec![Port::new("in_data", Dir::In, 32)];
+        m.wires_mut().push(Wire {
+            name: "w".into(),
+            width: 64,
+        });
+        let mut a = Instance::new("a", "A");
+        a.connect("o", ConnExpr::id("w"));
+        a.connect("i", ConnExpr::id("in_data"));
+        let mut b = Instance::new("b", "B");
+        b.connect("i", ConnExpr::id("w"));
+        m.instances_mut().push(a);
+        m.instances_mut().push(b);
+        d.add(m);
+        d
+    }
+
+    #[test]
+    fn conn_matches_legacy_block_graph() {
+        let d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        let (conn, interner) = ix.conn(&d, "Top").unwrap();
+        let view = conn.to_block_graph(interner);
+        assert_eq!(view, BlockGraph::build(d.module("Top").unwrap()));
+    }
+
+    #[test]
+    fn conn_is_cached_until_edit() {
+        let mut d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        ix.conn(&d, "Top").unwrap();
+        ix.conn(&d, "Top").unwrap();
+        assert_eq!(ix.cache_stats(), (1, 1));
+        // Edit through the index: cache dirtied, next query rebuilds and
+        // sees the new wire.
+        let top = ix.edit(&mut d, "Top").unwrap();
+        top.wires_mut().push(Wire {
+            name: "extra".into(),
+            width: 1,
+        });
+        let (conn, interner) = ix.conn(&d, "Top").unwrap();
+        assert!(conn.net_id(interner, "extra").is_some());
+        assert_eq!(ix.cache_stats(), (1, 2));
+    }
+
+    #[test]
+    fn module_ids_are_stable() {
+        let mut d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        let id = ix.module_id("Top");
+        ix.touch("Top");
+        ix.invalidate_all();
+        d.add(Module::grouped("Late"));
+        ix.touch("Late");
+        assert_eq!(ix.module_id("Top"), id);
+        assert_eq!(ix.module_name(id), "Top");
+        assert_ne!(ix.module_id("Late"), id);
+    }
+
+    #[test]
+    fn leaf_and_missing_are_typed_errors() {
+        let d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        assert!(matches!(
+            ix.conn(&d, "A"),
+            Err(GraphError::Leaf { module }) if module == "A"
+        ));
+        assert!(matches!(
+            ix.conn(&d, "Ghost"),
+            Err(GraphError::Missing { module }) if module == "Ghost"
+        ));
+    }
+
+    #[test]
+    fn opposite_and_lookups() {
+        let d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        let (conn, interner) = ix.conn(&d, "Top").unwrap();
+        let w = conn.net_id(interner, "w").unwrap();
+        let a = conn.inst_id(interner, "a").unwrap();
+        let this = ConnEndpoint::Inst {
+            inst: a,
+            port: interner.get("o").unwrap(),
+        };
+        let opp = conn.opposite(w, &this).unwrap();
+        assert_eq!(conn.describe_endpoint(opp, interner), "b.i");
+        // in_data has two endpoints (parent + a.i): opposite works there
+        // too; a 1-endpoint net would yield None.
+        let ind = conn.net_id(interner, "in_data").unwrap();
+        assert_eq!(conn.net(ind).endpoints.len(), 2);
+    }
+
+    #[test]
+    fn parents_invalidation_after_removal() {
+        let mut d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        {
+            let (map, interner) = ix.parents(&d);
+            assert!(map.contains_key(&interner.get("A").unwrap()));
+        }
+        // Remove Top (the only module with instances), as gc would.
+        d.modules.remove("Top");
+        ix.invalidate_parents();
+        let (map, _) = ix.parents(&d);
+        assert!(map.is_empty(), "stale sites survived: {map:?}");
+    }
+
+    #[test]
+    fn parents_map_lists_sites_in_order() {
+        let d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        let (map, interner) = ix.parents(&d);
+        let a = interner.get("A").unwrap();
+        let sites = &map[&a];
+        assert_eq!(sites.len(), 1);
+        assert_eq!(interner.resolve(sites[0].parent), "Top");
+        assert_eq!(interner.resolve(sites[0].instance), "a");
+        assert_eq!(sites[0].decl, 0);
+        let b = interner.get("B").unwrap();
+        assert_eq!(map[&b][0].decl, 1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "stale connectivity cache")]
+    fn untracked_mutation_panics_in_debug() {
+        let mut d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        ix.conn(&d, "Top").unwrap();
+        // Bypass the index: mutate the module directly.
+        d.module_mut("Top").unwrap().wires_mut().push(Wire {
+            name: "sneaky".into(),
+            width: 1,
+        });
+        let _ = ix.conn(&d, "Top");
+    }
+
+    #[test]
+    fn uncached_mode_always_rebuilds() {
+        let mut d = sample_design();
+        let mut ix = DesignIndex::for_design(&d);
+        ix.set_caching(false);
+        ix.conn(&d, "Top").unwrap();
+        // Mutate WITHOUT announcing: with caching off this is still
+        // served fresh (the mode the equivalence tests compare against).
+        d.module_mut("Top").unwrap().wires_mut().push(Wire {
+            name: "late".into(),
+            width: 1,
+        });
+        let (conn, interner) = ix.conn(&d, "Top").unwrap();
+        assert!(conn.net_id(interner, "late").is_some());
+        assert_eq!(ix.cache_stats().0, 0);
+    }
+}

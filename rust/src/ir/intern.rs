@@ -1,0 +1,107 @@
+//! String interning for the IR core: a [`Symbol`] is a `u32` key into an
+//! append-only string table, so hot paths compare and hash identifiers as
+//! integers instead of re-hashing `String`s, and the connectivity caches
+//! of [`crate::ir::index`] store nets and endpoints without cloning names.
+//!
+//! Symbols are assigned in first-intern order and stay valid for the
+//! lifetime of their [`Interner`]. They are **not** ordered like the
+//! strings they name — resolve before comparing lexicographically.
+
+use std::collections::HashMap;
+
+/// Interned string key: a `u32` index into the owning [`Interner`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Symbol(u32);
+
+impl Symbol {
+    /// The raw table index — usable as a dense array key.
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Append-only string table. [`Interner::intern`] is idempotent: the same
+/// string always yields the same [`Symbol`].
+#[derive(Debug, Clone, Default)]
+pub struct Interner {
+    strings: Vec<String>,
+    map: HashMap<String, Symbol>,
+}
+
+impl Interner {
+    pub fn new() -> Interner {
+        Interner::default()
+    }
+
+    /// Intern `s`, assigning a fresh [`Symbol`] on first sight.
+    pub fn intern(&mut self, s: &str) -> Symbol {
+        if let Some(&sym) = self.map.get(s) {
+            return sym;
+        }
+        let sym = Symbol(self.strings.len() as u32);
+        self.strings.push(s.to_string());
+        self.map.insert(s.to_string(), sym);
+        sym
+    }
+
+    /// Look a string up without interning it.
+    pub fn get(&self, s: &str) -> Option<Symbol> {
+        self.map.get(s).copied()
+    }
+
+    /// The string behind a symbol. Panics on a symbol minted by a
+    /// different interner (index out of range).
+    pub fn resolve(&self, sym: Symbol) -> &str {
+        &self.strings[sym.as_usize()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.strings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.strings.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut i = Interner::new();
+        let a = i.intern("ap_clk");
+        let b = i.intern("ap_clk");
+        assert_eq!(a, b);
+        assert_eq!(i.len(), 1);
+    }
+
+    #[test]
+    fn distinct_strings_get_distinct_symbols() {
+        let mut i = Interner::new();
+        let a = i.intern("a");
+        let b = i.intern("b");
+        assert_ne!(a, b);
+        assert_eq!(i.resolve(a), "a");
+        assert_eq!(i.resolve(b), "b");
+    }
+
+    #[test]
+    fn get_does_not_intern() {
+        let mut i = Interner::new();
+        assert!(i.get("x").is_none());
+        let s = i.intern("x");
+        assert_eq!(i.get("x"), Some(s));
+        assert_eq!(i.len(), 1);
+    }
+
+    #[test]
+    fn symbols_are_dense_indices() {
+        let mut i = Interner::new();
+        let a = i.intern("first");
+        let b = i.intern("second");
+        assert_eq!(a.as_usize(), 0);
+        assert_eq!(b.as_usize(), 1);
+    }
+}

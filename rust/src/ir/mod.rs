@@ -4,6 +4,8 @@
 pub mod builder;
 pub mod core;
 pub mod graph;
+pub mod index;
+pub mod intern;
 pub mod namemap;
 pub mod schema;
 pub mod validate;

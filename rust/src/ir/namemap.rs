@@ -30,31 +30,41 @@ impl NameMap {
     }
 
     /// Resolve a (possibly multiply-) transformed name to its original.
+    ///
+    /// A cyclic record set (possible when passes rename back and forth)
+    /// has no true origin: the walk detects the revisit with a seen-set
+    /// and stops at the cycle entry — the first name encountered twice —
+    /// rather than returning an arbitrary mid-chain name after a bounded
+    /// number of hops.
     pub fn trace(&self, name: &str) -> String {
+        let mut seen = std::collections::BTreeSet::new();
         let mut cur = name;
-        let mut hops = 0;
+        seen.insert(cur);
         while let Some(prev) = self.parent.get(cur) {
-            cur = prev;
-            hops += 1;
-            if hops > 10_000 {
-                break; // defensive: cycle
+            if seen.contains(prev.as_str()) {
+                return prev.clone(); // cycle entry
             }
+            seen.insert(prev);
+            cur = prev;
         }
         cur.to_string()
     }
 
-    /// Full derivation chain, most recent first.
+    /// Full derivation chain, most recent first. On a cyclic record set
+    /// the chain ends at the cycle entry (each name appears once).
     pub fn chain(&self, name: &str) -> Vec<(String, Option<String>)> {
         let mut out = vec![(name.to_string(), None)];
+        let mut seen = std::collections::BTreeSet::new();
+        seen.insert(name.to_string());
         let mut cur = name.to_string();
         while let Some(prev) = self.parent.get(&cur) {
             let pass = self.origin_pass.get(&cur).cloned();
             out.last_mut().unwrap().1 = pass;
-            out.push((prev.clone(), None));
-            cur = prev.clone();
-            if out.len() > 10_000 {
+            if !seen.insert(prev.clone()) {
                 break;
             }
+            out.push((prev.clone(), None));
+            cur = prev.clone();
         }
         out
     }
@@ -100,5 +110,34 @@ mod tests {
         let mut nm = NameMap::new();
         nm.record("p", "X", "X");
         assert!(nm.is_empty());
+    }
+
+    #[test]
+    fn trace_terminates_on_cycle_at_entry() {
+        // A pass renames A -> B, a later one renames B back to A: the
+        // parent chain is cyclic and has no true origin.
+        let mut nm = NameMap::new();
+        nm.record("p1", "A", "B");
+        nm.record("p2", "B", "A");
+        // Entering from outside the cycle: C -> A -> B -> A stops at the
+        // first revisited name (the cycle entry), not a mid-chain hop.
+        nm.record("p0", "A", "C");
+        assert_eq!(nm.trace("C"), "A");
+        // Entering on the cycle itself terminates too.
+        assert_eq!(nm.trace("A"), "A");
+        assert_eq!(nm.trace("B"), "B");
+    }
+
+    #[test]
+    fn chain_lists_each_name_once_on_cycle() {
+        let mut nm = NameMap::new();
+        nm.record("p1", "A", "B");
+        nm.record("p2", "B", "A");
+        let chain = nm.chain("A");
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0].0, "A");
+        assert_eq!(chain[0].1.as_deref(), Some("p2"));
+        assert_eq!(chain[1].0, "B");
+        assert_eq!(chain[1].1.as_deref(), Some("p1"));
     }
 }

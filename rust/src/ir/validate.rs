@@ -3,7 +3,8 @@
 //! by the pass manager (when DRC hooks are enabled).
 
 use crate::ir::core::*;
-use crate::ir::graph::BlockGraph;
+use crate::ir::index::{DesignIndex, ModuleConn};
+use crate::ir::intern::Interner;
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -21,12 +22,22 @@ impl fmt::Display for DrcViolation {
 
 /// Run all DRC rules over the design. Empty result = clean.
 pub fn check(d: &Design) -> Vec<DrcViolation> {
+    let mut index = DesignIndex::for_design(d);
+    check_with(d, &mut index)
+}
+
+/// Run all DRC rules, reusing `index`'s cached connectivity. The pass
+/// pipeline's after-each-pass hook passes its long-lived index here, so
+/// only modules dirtied since the last check are re-analyzed instead of
+/// rebuilding every block graph from scratch.
+pub fn check_with(d: &Design, index: &mut DesignIndex) -> Vec<DrcViolation> {
     let mut v = Vec::new();
     check_referential(d, &mut v);
     for m in d.modules.values() {
         check_interfaces_cover_known_ports(m, &mut v);
         if m.is_grouped() {
-            check_grouped(d, m, &mut v);
+            let (conn, interner) = index.conn(d, &m.name).expect("grouped module");
+            check_grouped(d, m, conn, interner, &mut v);
         }
     }
     v
@@ -68,9 +79,13 @@ fn check_referential(d: &Design, out: &mut Vec<DrcViolation>) {
     }
 }
 
-fn check_grouped(d: &Design, m: &Module, out: &mut Vec<DrcViolation>) {
-    let g = BlockGraph::build(m);
-
+fn check_grouped(
+    d: &Design,
+    m: &Module,
+    conn: &ModuleConn,
+    interner: &Interner,
+    out: &mut Vec<DrcViolation>,
+) {
     // Invariant 1: each wire connects exactly two endpoints (no fan-out).
     // Parent ports count as one endpoint; a completely unused wire is also
     // flagged. Clock/reset identifiers are exempt: they are broadcast nets
@@ -81,21 +96,22 @@ fn check_grouped(d: &Design, m: &Module, out: &mut Vec<DrcViolation>) {
         .filter(|i| matches!(i, Interface::Clock { .. } | Interface::Reset { .. }))
         .flat_map(|i| i.ports())
         .collect();
-    for (net, info) in &g.nets {
-        if clockish.contains(&net.as_str()) {
+    for net in &conn.nets {
+        let name = interner.resolve(net.name);
+        if clockish.contains(&name) {
             continue;
         }
-        if info.endpoints.len() != 2 {
+        if net.endpoints.len() != 2 {
             out.push(DrcViolation {
                 module: m.name.clone(),
                 rule: "two-endpoints",
                 detail: format!(
                     "net '{}' has {} endpoints: [{}]",
-                    net,
-                    info.endpoints.len(),
-                    info.endpoints
+                    name,
+                    net.endpoints.len(),
+                    net.endpoints
                         .iter()
-                        .map(|e| e.describe())
+                        .map(|e| conn.describe_endpoint(e, interner))
                         .collect::<Vec<_>>()
                         .join(", ")
                 ),

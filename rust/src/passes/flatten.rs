@@ -9,7 +9,7 @@
 //! would have to be grouped into a single partition".
 
 use crate::ir::core::*;
-use crate::passes::manager::{Pass, PassContext};
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
@@ -22,6 +22,10 @@ impl Pass for Flatten {
 
     fn description(&self) -> &'static str {
         "Recursively inline grouped submodules into the top module"
+    }
+
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Tracked
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
@@ -49,6 +53,9 @@ pub fn flatten_top(design: &mut Design, ctx: &mut PassContext) -> Result<()> {
             .map(|i| i.instance_name.clone());
         let Some(inst_name) = target else {
             design.gc();
+            // gc removes modules: the cached parents map must not keep
+            // listing the removed instantiation sites.
+            ctx.index.invalidate_parents();
             return Ok(());
         };
         inline_instance(design, &design.top.clone(), &inst_name, ctx)?;
@@ -87,7 +94,9 @@ pub fn inline_instance(
         alias.insert(p.name.clone(), v);
     }
 
-    let parent = design.modules.get_mut(parent_name).unwrap();
+    // Inlining rewrites only the parent; edit through the index so just
+    // its connectivity cache is dirtied.
+    let parent = ctx.index.edit(design, parent_name).unwrap();
     // Remove the instance being inlined.
     let idx = parent
         .instances()

@@ -8,7 +8,7 @@
 //! whole cluster at once.
 
 use crate::ir::core::*;
-use crate::passes::manager::{Pass, PassContext};
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -28,6 +28,10 @@ impl Pass for Group {
 
     fn description(&self) -> &'static str {
         "Pull instances of a grouped module into a fresh grouped submodule"
+    }
+
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Tracked
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
@@ -136,10 +140,10 @@ pub fn group_instances(
         }
     }
 
-    // Rewrite the parent.
+    // Rewrite the parent (through the index: only its cache dirties).
     let group_mod_name = design.fresh_module_name(group_name);
     group.name = group_mod_name.clone();
-    let parent_mut = design.modules.get_mut(parent_name).unwrap();
+    let parent_mut = ctx.index.edit(design, parent_name).unwrap();
     parent_mut
         .instances_mut()
         .retain(|i| !member_set.contains(i.instance_name.as_str()));
@@ -161,6 +165,7 @@ pub fn group_instances(
         "group: {} instances of '{parent_name}' into '{group_mod_name}'",
         members.len()
     ));
+    ctx.index.touch(&group_mod_name);
     design.add(group);
     Ok(())
 }

@@ -13,8 +13,8 @@
 //! part through the grouped module's own interfaces.
 
 use crate::ir::core::*;
-use crate::ir::graph::{BlockGraph, Endpoint};
-use crate::passes::manager::{Pass, PassContext};
+use crate::ir::index::ConnEndpoint;
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use anyhow::Result;
 use std::collections::BTreeMap;
 
@@ -27,6 +27,12 @@ impl Pass for InterfaceInference {
 
     fn description(&self) -> &'static str {
         "Transfer interfaces onto modules lacking them from their siblings"
+    }
+
+    fn index_policy(&self) -> IndexPolicy {
+        // Reads connectivity from the cached index; only mutates
+        // interface lists, which the index does not cache.
+        IndexPolicy::Tracked
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
@@ -64,47 +70,50 @@ struct PeerPort {
 }
 
 fn infer_in_grouped(design: &mut Design, gname: &str, ctx: &mut PassContext) -> Result<usize> {
-    let g = design.module(gname).unwrap().clone();
-    let graph = BlockGraph::build(&g);
-
-    // For each (holder, port), resolve the opposite endpoint.
-    // holder "" = parent.
+    // For each (holder, port), resolve the opposite endpoint through the
+    // cached connectivity index. holder "" = parent.
     let mut peers: BTreeMap<(String, String), PeerPort> = BTreeMap::new();
-    for (_, info) in graph.nets.iter() {
-        if info.endpoints.len() != 2 {
-            continue;
-        }
-        let resolve = |e: &Endpoint| -> Option<(String, String, String)> {
+    {
+        let (conn, interner) = ctx.index.conn(design, gname)?;
+        let resolve = |e: &ConnEndpoint| -> (String, String, String) {
             match e {
-                Endpoint::Parent { port } => {
-                    Some(("".to_string(), g.name.clone(), port.clone()))
+                ConnEndpoint::Parent { port } => {
+                    let p = interner.resolve(conn.ports[port.as_usize()].name);
+                    ("".to_string(), gname.to_string(), p.to_string())
                 }
-                Endpoint::Inst { inst, port } => {
-                    let mname = g.instance(inst)?.module_name.clone();
-                    Some((inst.clone(), mname, port.clone()))
+                ConnEndpoint::Inst { inst, port } => {
+                    let i = &conn.insts[inst.as_usize()];
+                    (
+                        interner.resolve(i.name).to_string(),
+                        interner.resolve(i.module).to_string(),
+                        interner.resolve(*port).to_string(),
+                    )
                 }
             }
         };
-        let (Some(a), Some(b)) = (resolve(&info.endpoints[0]), resolve(&info.endpoints[1]))
-        else {
-            continue;
-        };
-        peers.insert(
-            (a.0.clone(), a.2.clone()),
-            PeerPort {
-                peer_holder: b.0.clone(),
-                peer_module: b.1.clone(),
-                peer_port: b.2.clone(),
-            },
-        );
-        peers.insert(
-            (b.0, b.2),
-            PeerPort {
-                peer_holder: a.0,
-                peer_module: a.1,
-                peer_port: a.2,
-            },
-        );
+        for info in &conn.nets {
+            if info.endpoints.len() != 2 {
+                continue;
+            }
+            let a = resolve(&info.endpoints[0]);
+            let b = resolve(&info.endpoints[1]);
+            peers.insert(
+                (a.0.clone(), a.2.clone()),
+                PeerPort {
+                    peer_holder: b.0.clone(),
+                    peer_module: b.1.clone(),
+                    peer_port: b.2.clone(),
+                },
+            );
+            peers.insert(
+                (b.0, b.2),
+                PeerPort {
+                    peer_holder: a.0,
+                    peer_module: a.1,
+                    peer_port: a.2,
+                },
+            );
+        }
     }
 
     // Collect candidate transfers: for each holder side with an interface,
@@ -173,7 +182,8 @@ fn infer_in_grouped(design: &mut Design, gname: &str, ctx: &mut PassContext) -> 
         }
     };
 
-    consider(&g, "");
+    let g = design.module(gname).unwrap();
+    consider(g, "");
     for inst in g.instances() {
         if let Some(m) = design.module(&inst.module_name) {
             consider(m, &inst.instance_name);
@@ -182,6 +192,9 @@ fn infer_in_grouped(design: &mut Design, gname: &str, ctx: &mut PassContext) -> 
 
     let mut created = 0;
     for (mname, iface) in new_ifaces {
+        // Interface lists don't feed the connectivity index (nets, ports
+        // and instances are untouched), so this edit keeps the caches
+        // valid without an invalidation.
         let m = design.module_mut(&mname).unwrap();
         // Double-check no overlap was created meanwhile.
         if iface.ports().iter().any(|p| m.interface_of(p).is_some()) {

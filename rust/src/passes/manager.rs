@@ -5,6 +5,7 @@
 //! lines) for every run.
 
 use crate::ir::core::Design;
+use crate::ir::index::DesignIndex;
 use crate::ir::namemap::NameMap;
 use crate::ir::validate;
 use anyhow::{bail, Context, Result};
@@ -41,6 +42,12 @@ pub struct PassContext {
     pub log: Vec<String>,
     /// Typed view of the log stream (plus warnings/errors).
     pub diagnostics: Vec<Diagnostic>,
+    /// Cached ID-based connectivity over the design, built once per run
+    /// and kept warm across passes that declare [`IndexPolicy::Tracked`].
+    /// Passes query it via `ctx.index.conn(design, module)` and mutate
+    /// modules through `ctx.index.edit` / announce adds with
+    /// `ctx.index.touch` (see `ir::index` for the invalidation contract).
+    pub index: DesignIndex,
     /// Name of the pass currently running (set by [`Pipeline::run`]).
     current_pass: String,
 }
@@ -61,6 +68,7 @@ impl PassContext {
             drc_after_each: true,
             log: Vec::new(),
             diagnostics: Vec::new(),
+            index: DesignIndex::new(),
             current_pass: String::new(),
         }
     }
@@ -78,6 +86,12 @@ impl PassContext {
         self.diag(Severity::Warning, msg.into());
     }
 
+    /// Record a typed [`Severity::Error`] diagnostic (e.g. a degraded
+    /// step that used to panic, like connectivity on a leaf top).
+    pub fn error(&mut self, msg: impl Into<String>) {
+        self.diag(Severity::Error, msg.into());
+    }
+
     fn diag(&mut self, severity: Severity, message: String) {
         self.log.push(match severity {
             Severity::Info => message.clone(),
@@ -92,6 +106,22 @@ impl PassContext {
     }
 }
 
+/// How a pass interacts with the cached connectivity index on
+/// [`PassContext`]. The safe default, [`IndexPolicy::Invalidate`], drops
+/// every cached entry after the pass runs; passes that route all
+/// connectivity-affecting mutations through
+/// [`DesignIndex::edit`] / [`DesignIndex::touch`] declare
+/// [`IndexPolicy::Tracked`] and keep the caches warm across the
+/// pipeline (debug builds cross-check every cache hit, so a wrong
+/// `Tracked` claim fails loudly under `cargo test`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexPolicy {
+    /// The pass maintains the index itself; caches survive it.
+    Tracked,
+    /// The pipeline invalidates all cached connectivity after the pass.
+    Invalidate,
+}
+
 /// A composable IR transformation.
 pub trait Pass {
     /// Stable name; the registry key used by `rsir pipeline <spec>`.
@@ -100,6 +130,13 @@ pub trait Pass {
     /// One-line human description (shown by `rsir passes`).
     fn description(&self) -> &'static str {
         "(undocumented pass)"
+    }
+
+    /// Whether this pass keeps `ctx.index` consistent itself. The
+    /// conservative default forces a full invalidation after the pass;
+    /// every in-tree pass overrides it with [`IndexPolicy::Tracked`].
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Invalidate
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()>;
@@ -259,8 +296,12 @@ impl Pipeline {
                 return Err(e);
             }
             ctx.log(format!("pass '{}' complete", pass.name()));
+            match pass.index_policy() {
+                IndexPolicy::Tracked => {}
+                IndexPolicy::Invalidate => ctx.index.invalidate_all(),
+            }
             let drc = if ctx.drc_after_each {
-                let violations = validate::check(design);
+                let violations = validate::check_with(design, &mut ctx.index);
                 if !violations.is_empty() {
                     let mut msg = format!("DRC failed after pass '{}':\n", pass.name());
                     for v in violations.iter().take(10) {
@@ -371,6 +412,52 @@ mod tests {
         ctx.drc_after_each = false;
         let report = PassManager::new().add(Corrupt).run(&mut d, &mut ctx).unwrap();
         assert_eq!(report.passes[0].drc, DrcOutcome::Skipped);
+    }
+
+    #[test]
+    fn tracked_pass_keeps_cache_warm_across_drc() {
+        // A pass that mutates through the index keeps its caches: the
+        // second DRC check hits the cache instead of rebuilding.
+        struct AddWire;
+        impl Pass for AddWire {
+            fn name(&self) -> &'static str {
+                "add-wire"
+            }
+            fn index_policy(&self) -> IndexPolicy {
+                IndexPolicy::Tracked
+            }
+            fn run(&self, d: &mut Design, ctx: &mut PassContext) -> Result<()> {
+                // The edit itself (even without a change) dirties the
+                // cache — which is what this test exercises; the module
+                // stays unchanged so DRC remains clean.
+                let top_name = d.top.clone();
+                ctx.index.edit(d, &top_name).unwrap();
+                Ok(())
+            }
+        }
+        struct Noop;
+        impl Pass for Noop {
+            fn name(&self) -> &'static str {
+                "noop"
+            }
+            fn index_policy(&self) -> IndexPolicy {
+                IndexPolicy::Tracked
+            }
+            fn run(&self, _: &mut Design, _: &mut PassContext) -> Result<()> {
+                Ok(())
+            }
+        }
+        let mut d = base();
+        let mut ctx = PassContext::new();
+        Pipeline::named("warm")
+            .add(AddWire)
+            .add(Noop)
+            .run(&mut d, &mut ctx)
+            .unwrap();
+        // First DRC builds Top's connectivity (miss); the second DRC,
+        // after the untouched Noop pass, is served from the cache (hit).
+        let (hits, misses) = ctx.index.cache_stats();
+        assert!(hits >= 1, "expected a cache hit, got {hits}/{misses}");
     }
 
     #[test]

@@ -17,5 +17,6 @@ pub mod rebuild;
 pub mod registry;
 
 pub use manager::{
-    Diagnostic, DrcOutcome, Pass, PassContext, PassManager, Pipeline, PipelineReport, Severity,
+    Diagnostic, DrcOutcome, IndexPolicy, Pass, PassContext, PassManager, Pipeline, PipelineReport,
+    Severity,
 };

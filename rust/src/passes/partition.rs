@@ -14,7 +14,8 @@
 //! `passthrough_pairs` for the passthrough pass to bypass.
 
 use crate::ir::core::*;
-use crate::passes::manager::{Pass, PassContext};
+use crate::ir::intern::Interner;
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use crate::util::json::{Json, JsonObj};
 use crate::util::union_find::UnionFind;
 use crate::verilog::ast::{expr_identifiers, is_single_identifier, VItem};
@@ -37,6 +38,10 @@ impl Pass for Partition {
         "Split one aux instance into independently-floorplannable units"
     }
 
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Tracked
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
         partition_aux(design, &self.parent, &self.aux_instance, ctx)?;
         Ok(())
@@ -56,25 +61,40 @@ impl Pass for PartitionAllAux {
         "Partition every aux instance (modules tagged aux_of) in the design"
     }
 
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Tracked
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
-        let work: Vec<(String, String)> = design
+        // The cached inverse instance→parent map hands us every site that
+        // instantiates an aux module, instead of rescanning each grouped
+        // module's instance list.
+        let aux_names: Vec<String> = design
             .modules
             .values()
-            .filter(|m| m.is_grouped())
-            .flat_map(|g| {
-                g.instances()
-                    .iter()
-                    .filter(|i| {
-                        design
-                            .module(&i.module_name)
-                            .map(|t| t.metadata.contains_key("aux_of"))
-                            .unwrap_or(false)
-                    })
-                    .map(|i| (g.name.clone(), i.instance_name.clone()))
-                    .collect::<Vec<_>>()
-            })
+            .filter(|m| m.metadata.contains_key("aux_of"))
+            .map(|m| m.name.clone())
             .collect();
-        for (parent, inst) in work {
+        let mut work: Vec<(String, usize, String)> = Vec::new();
+        {
+            let (sites, interner) = ctx.index.parents(design);
+            for name in &aux_names {
+                let Some(sym) = interner.get(name) else {
+                    continue;
+                };
+                for site in sites.get(&sym).map(|v| v.as_slice()).unwrap_or(&[]) {
+                    work.push((
+                        interner.resolve(site.parent).to_string(),
+                        site.decl,
+                        interner.resolve(site.instance).to_string(),
+                    ));
+                }
+            }
+        }
+        // (parent module name, declaration index) order — exactly the
+        // order the historical nested scan visited the sites in.
+        work.sort();
+        for (parent, _, inst) in work {
             partition_aux(design, &parent, &inst, ctx)?;
         }
         Ok(())
@@ -117,20 +137,11 @@ pub fn partition_aux(
         .map(|s| s.to_string())
         .collect();
 
-    // Identifier universe: everything appearing in the module.
-    let mut ids: Vec<String> = Vec::new();
-    let mut id_idx: BTreeMap<String, usize> = BTreeMap::new();
-    let intern = |name: &str, ids: &mut Vec<String>, id_idx: &mut BTreeMap<String, usize>| {
-        if let Some(&i) = id_idx.get(name) {
-            return i;
-        }
-        let i = ids.len();
-        ids.push(name.to_string());
-        id_idx.insert(name.to_string(), i);
-        i
-    };
+    // Identifier universe: everything appearing in the module, interned
+    // to dense u32 symbols — the union-find runs over symbol indices.
+    let mut interner = Interner::new();
     for p in &aux.ports {
-        intern(&p.name, &mut ids, &mut id_idx);
+        interner.intern(&p.name);
     }
     // Gather statement groups (each joins its identifiers).
     let mut groups: Vec<Vec<usize>> = Vec::new();
@@ -172,7 +183,7 @@ pub fn partition_aux(
         }
         let idxs: Vec<usize> = filtered
             .iter()
-            .map(|id| intern(id, &mut ids, &mut id_idx))
+            .map(|id| interner.intern(id).as_usize())
             .collect();
         if idxs.len() > 1 {
             groups.push(idxs);
@@ -186,14 +197,14 @@ pub fn partition_aux(
         let idxs: Vec<usize> = iface
             .ports()
             .iter()
-            .map(|p| intern(p, &mut ids, &mut id_idx))
+            .map(|p| interner.intern(p).as_usize())
             .collect();
         if idxs.len() > 1 {
             groups.push(idxs);
         }
     }
 
-    let mut uf = UnionFind::new(ids.len());
+    let mut uf = UnionFind::new(interner.len());
     for g in &groups {
         for w in g.windows(2) {
             uf.union(w[0], w[1]);
@@ -206,7 +217,7 @@ pub fn partition_aux(
         if clockish.contains(&p.name) {
             continue;
         }
-        let root = uf.find(id_idx[&p.name]);
+        let root = uf.find(interner.get(&p.name).unwrap().as_usize());
         comp_ports.entry(root).or_default().push(p.name.clone());
     }
     if comp_ports.len() <= 1 {
@@ -220,7 +231,7 @@ pub fn partition_aux(
     let mut logic_roots: BTreeSet<usize> = BTreeSet::new();
     for stmt in &logic_stmt_roots {
         for id in stmt {
-            logic_roots.insert(uf.find(id_idx[id]));
+            logic_roots.insert(uf.find(interner.get(id).unwrap().as_usize()));
         }
     }
     // Alias graph: lhs <- rhs.
@@ -350,13 +361,15 @@ pub fn partition_aux(
             }
         }
         ctx.namemap.record("partition", &aux.name, &split_name);
+        ctx.index.touch(&split_name);
         split_names.push(split_name);
         new_instances.push(si);
         design.add(sm);
     }
 
-    // Swap the aux instance for the splits.
-    let parent = design.modules.get_mut(parent_name).unwrap();
+    // Swap the aux instance for the splits (through the index, so only
+    // the parent's connectivity cache is dirtied).
+    let parent = ctx.index.edit(design, parent_name).unwrap();
     parent
         .instances_mut()
         .retain(|i| i.instance_name != aux_inst_name);

@@ -8,7 +8,7 @@
 //! before connecting it to another" so the two-endpoint invariant holds.
 
 use crate::ir::core::*;
-use crate::passes::manager::{Pass, PassContext};
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use anyhow::Result;
 
 pub struct Passthrough;
@@ -22,6 +22,10 @@ impl Pass for Passthrough {
         "Bypass pure feed-through splits, merging their nets"
     }
 
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Tracked
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
         let grouped: Vec<String> = design
             .modules
@@ -33,6 +37,9 @@ impl Pass for Passthrough {
             bypass_in(design, &g, ctx)?;
         }
         design.gc();
+        // gc removes modules: connectivity caches self-guard, but the
+        // cached parents map must not keep listing the removed sites.
+        ctx.index.invalidate_parents();
         Ok(())
     }
 }
@@ -58,7 +65,7 @@ fn bypass_in(design: &mut Design, parent_name: &str, ctx: &mut PassContext) -> R
             return Ok(());
         };
 
-        let parent = design.modules.get_mut(parent_name).unwrap();
+        let parent = ctx.index.edit(design, parent_name).unwrap();
         parent
             .instances_mut()
             .retain(|i| i.instance_name != inst_name);

@@ -10,8 +10,9 @@
 
 use crate::interconnect;
 use crate::ir::core::*;
-use crate::ir::graph::BlockGraph;
-use crate::passes::manager::{Pass, PassContext};
+use crate::ir::graph::GraphError;
+use crate::ir::index::{ConnEndpoint, DesignIndex, InstId};
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use anyhow::{anyhow, bail, Result};
 
 /// Pass form of [`insert_relay_station`], operating on the design's top
@@ -34,6 +35,11 @@ impl Pass for InsertRelayStation {
 
     fn description(&self) -> &'static str {
         "Insert a relay station on a handshake channel of the flat top"
+    }
+
+    fn index_policy(&self) -> IndexPolicy {
+        // All mutations go through ctx.index.edit / touch.
+        IndexPolicy::Tracked
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
@@ -126,13 +132,15 @@ pub fn insert_relay_station(
     let rs_name = rs.name.clone();
     if design.module(&rs_name).is_none() {
         design.add(rs);
+        ctx.index.touch(&rs_name);
     }
 
     // New wires from relay station to the old consumer side; the old wires
     // now terminate at the relay-station input. (We rewire the *source*
     // instance to fresh wires and feed the relay from those, keeping the
-    // consumer untouched.)
-    let parent = design.modules.get_mut(parent_name).unwrap();
+    // consumer untouched.) Editing through the index marks only the
+    // parent's connectivity cache dirty.
+    let parent = ctx.index.edit(design, parent_name).unwrap();
     let rs_inst_name = {
         let mut base = format!("rs_{src_inst}_{iface_name}");
         let mut k = 0;
@@ -226,14 +234,20 @@ pub fn stages_for_distance(manhattan: usize, die_crossings: usize) -> u32 {
 }
 
 /// All pipelinable channels of a flat grouped module:
-/// (src_inst, iface_name, dst_inst, width).
-pub fn pipelinable_channels(design: &Design, parent_name: &str) -> Vec<(String, String, String, u32)> {
+/// (src_inst, iface_name, dst_inst, width). Connectivity comes from the
+/// cached index; a leaf parent yields a typed [`GraphError`] for the
+/// caller to route into a diagnostic (historically this panicked).
+pub fn pipelinable_channels(
+    design: &Design,
+    parent_name: &str,
+    index: &mut DesignIndex,
+) -> Result<Vec<(String, String, String, u32)>, GraphError> {
     let Some(parent) = design.module(parent_name) else {
-        return Vec::new();
+        return Ok(Vec::new());
     };
-    let graph = BlockGraph::build(parent);
+    let (conn, interner) = index.conn(design, parent_name)?;
     let mut out = Vec::new();
-    for inst in parent.instances() {
+    for (ii, inst) in parent.instances().iter().enumerate() {
         let Some(m) = design.module(&inst.module_name) else {
             continue;
         };
@@ -248,16 +262,25 @@ pub fn pipelinable_channels(design: &Design, parent_name: &str) -> Vec<(String, 
             let Some(ConnExpr::Id(vid)) = inst.connection(valid) else {
                 continue;
             };
-            let this = crate::ir::graph::Endpoint::Inst {
-                inst: inst.instance_name.clone(),
-                port: valid.clone(),
+            let Some(net) = conn.net_id(interner, vid) else {
+                continue;
             };
-            let Some(opp) = graph.opposite(vid, &this) else {
+            let Some(valid_sym) = interner.get(valid) else {
+                continue;
+            };
+            let this = ConnEndpoint::Inst {
+                inst: InstId(ii as u32),
+                port: valid_sym,
+            };
+            let Some(opp) = conn.opposite(net, &this) else {
                 continue;
             };
             let dst = match opp {
-                crate::ir::graph::Endpoint::Inst { inst, .. } => inst.clone(),
-                crate::ir::graph::Endpoint::Parent { .. } => continue,
+                ConnEndpoint::Inst { inst, .. } => {
+                    let name = conn.insts[inst.as_usize()].name;
+                    interner.resolve(name).to_string()
+                }
+                ConnEndpoint::Parent { .. } => continue,
             };
             let width: u32 = data
                 .iter()
@@ -266,7 +289,7 @@ pub fn pipelinable_channels(design: &Design, parent_name: &str) -> Vec<(String, 
             out.push((inst.instance_name.clone(), name.clone(), dst, width));
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -384,9 +407,22 @@ mod tests {
     #[test]
     fn channels_detected() {
         let d = two_stage();
-        let ch = pipelinable_channels(&d, "Top");
+        let mut index = crate::ir::index::DesignIndex::for_design(&d);
+        let ch = pipelinable_channels(&d, "Top", &mut index).unwrap();
         assert_eq!(ch.len(), 1);
         assert_eq!(ch[0], ("a0".into(), "o".into(), "b0".into(), 64));
+    }
+
+    #[test]
+    fn leaf_parent_is_typed_error_not_panic() {
+        let mut d = Design::new("OnlyLeaf");
+        d.add(Module::leaf("OnlyLeaf", SourceFormat::Verilog, ""));
+        let mut index = crate::ir::index::DesignIndex::for_design(&d);
+        let err = pipelinable_channels(&d, "OnlyLeaf", &mut index).unwrap_err();
+        assert!(matches!(err, GraphError::Leaf { .. }));
+        // An unknown parent is simply empty, as before.
+        let ch = pipelinable_channels(&d, "Ghost", &mut index).unwrap();
+        assert!(ch.is_empty());
     }
 
     #[test]

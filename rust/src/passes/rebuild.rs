@@ -10,7 +10,7 @@
 //! clock distribution).
 
 use crate::ir::core::*;
-use crate::passes::manager::{Pass, PassContext};
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use crate::verilog::ast::{is_single_identifier, parse_literal};
 use crate::verilog::parser::parse_module;
 use crate::verilog::printer::print_module;
@@ -39,6 +39,10 @@ impl Pass for HierarchyRebuild {
         "Rebuild one leaf Verilog module into a grouped module plus an aux"
     }
 
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Tracked
+    }
+
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
         rebuild(design, &self.target, ctx)
             .with_context(|| format!("rebuilding module '{}'", self.target))
@@ -57,6 +61,10 @@ impl Pass for RebuildAll {
 
     fn description(&self) -> &'static str {
         "Rebuild all leaf Verilog modules with known children, to a fixpoint"
+    }
+
+    fn index_policy(&self) -> IndexPolicy {
+        IndexPolicy::Tracked
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> Result<()> {
@@ -285,6 +293,10 @@ pub fn rebuild(design: &mut Design, target: &str, ctx: &mut PassContext) -> Resu
         split.extracted.len()
     ));
 
+    // Both adds announce themselves to the connectivity index: the aux is
+    // new, and the grouped module replaces the leaf under the same name.
+    ctx.index.touch(&aux_name);
+    ctx.index.touch(target);
     design.add(aux);
     design.add(grouped); // replaces the leaf under the same name
     Ok(())

@@ -6,7 +6,7 @@
 
 use crate::eda::synth::SynthEstimator;
 use crate::ir::core::*;
-use crate::passes::manager::{Pass, PassContext};
+use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use crate::timing::netlist::ModuleCharacteristics;
 use crate::util::json::{Json, JsonObj};
 
@@ -21,6 +21,12 @@ impl Pass for PlatformAnalyze {
 
     fn description(&self) -> &'static str {
         "Annotate leaf modules missing resource/timing metadata (vendor surrogate)"
+    }
+
+    fn index_policy(&self) -> IndexPolicy {
+        // Writes only metadata on leaf modules; connectivity caches
+        // (grouped modules' nets) are untouched.
+        IndexPolicy::Tracked
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> anyhow::Result<()> {

@@ -6,9 +6,15 @@
 //! and emits one node per leaf instance and one edge per point-to-point
 //! net between leaves. Clock/reset broadcast nets are excluded from the
 //! edge list, matching the partitioning pass's connectivity analysis.
+//!
+//! Net identity is a dense `u32` key allocated during the walk: a parent
+//! connection aliases the child port onto the parent's key, a locally
+//! declared wire mints a fresh key — union by construction, with no
+//! `"{scope}/{id}"` string paths to format, hash or compare. Edge
+//! aggregation is commutative, so the resulting node/edge lists are
+//! byte-identical to the historical string-keyed elaboration.
 
 use crate::ir::core::*;
-use crate::util::union_find::UnionFind;
 use std::collections::BTreeMap;
 
 /// A leaf instance in the flattened design.
@@ -67,9 +73,8 @@ pub fn flatten(design: &Design, chars: &dyn ModuleCharacteristics) -> FlatNetlis
         design,
         chars,
         nodes: Vec::new(),
-        // (scope instance path, identifier) -> pin list index
         pins: Vec::new(),
-        net_of_pin: BTreeMap::new(),
+        nets: Vec::new(),
     };
     fl.walk(design.top_module(), "", &BTreeMap::new());
     fl.finish()
@@ -85,25 +90,43 @@ struct Pin {
     clockish: bool,
 }
 
+/// Dense global net key (index into `Flattener::nets`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct NetKey(u32);
+
 struct Flattener<'a> {
     design: &'a Design,
     chars: &'a dyn ModuleCharacteristics,
     nodes: Vec<FlatNode>,
     pins: Vec<Pin>,
-    /// global net key -> pin indices
-    net_of_pin: BTreeMap<String, Vec<usize>>,
+    /// net key -> pin indices (key allocation order).
+    nets: Vec<Vec<usize>>,
 }
 
 impl<'a> Flattener<'a> {
+    /// Global key of identifier `id` in the current scope: the parent's
+    /// key when `id` is an aliased port, else a fresh key memoized in
+    /// `local` (one per locally declared wire per scope).
+    fn key_for(
+        &mut self,
+        id: &str,
+        aliases: &BTreeMap<String, NetKey>,
+        local: &mut BTreeMap<String, NetKey>,
+    ) -> NetKey {
+        if let Some(&k) = aliases.get(id) {
+            return k;
+        }
+        *local.entry(id.to_string()).or_insert_with(|| {
+            let k = NetKey(self.nets.len() as u32);
+            self.nets.push(Vec::new());
+            k
+        })
+    }
+
     /// `aliases` maps this module's port names to global net keys supplied
-    /// by the parent; locally declared wires get fresh keys under `scope`.
-    fn walk(&mut self, m: &Module, scope: &str, aliases: &BTreeMap<String, String>) {
-        let local_key = |id: &str, aliases: &BTreeMap<String, String>| -> String {
-            aliases
-                .get(id)
-                .cloned()
-                .unwrap_or_else(|| format!("{scope}/{id}"))
-        };
+    /// by the parent; locally declared wires get fresh keys.
+    fn walk(&mut self, m: &Module, scope: &str, aliases: &BTreeMap<String, NetKey>) {
+        let mut local: BTreeMap<String, NetKey> = BTreeMap::new();
         for inst in m.instances() {
             let child_path = if scope.is_empty() {
                 inst.instance_name.clone()
@@ -117,7 +140,8 @@ impl<'a> Flattener<'a> {
             let mut child_aliases = BTreeMap::new();
             for conn in &inst.connections {
                 if let ConnExpr::Id(id) = &conn.value {
-                    child_aliases.insert(conn.port.clone(), local_key(id, aliases));
+                    let key = self.key_for(id, aliases, &mut local);
+                    child_aliases.insert(conn.port.clone(), key);
                 }
             }
             if child.is_grouped() {
@@ -154,7 +178,7 @@ impl<'a> Flattener<'a> {
                         continue;
                     };
                     if let ConnExpr::Id(id) = &conn.value {
-                        let key = local_key(id, aliases);
+                        let key = self.key_for(id, aliases, &mut local);
                         let iface = child.interface_of(&port.name);
                         let pin = Pin {
                             node: node_idx,
@@ -168,7 +192,7 @@ impl<'a> Flattener<'a> {
                         };
                         let pidx = self.pins.len();
                         self.pins.push(pin);
-                        self.net_of_pin.entry(key).or_default().push(pidx);
+                        self.nets[key.0 as usize].push(pidx);
                     }
                 }
             }
@@ -176,20 +200,15 @@ impl<'a> Flattener<'a> {
     }
 
     fn finish(self) -> FlatNetlist {
-        // Merge nets that alias the same pins is already handled by key
-        // naming; now aggregate pins per net into edges.
-        let mut uf = UnionFind::new(self.pins.len());
-        let mut net_pins: Vec<Vec<usize>> = Vec::new();
-        for (_, pins) in self.net_of_pin.iter() {
-            for w in pins.windows(2) {
-                uf.union(w[0], w[1]);
-            }
-            net_pins.push(pins.clone());
-        }
-        // Build edges: for each net, driver (Out pin) to each sink (In pin).
-        // Aggregate multiple nets between the same node pair.
+        // Cross-hierarchy aliasing already merged nets by construction
+        // (aliased ports share the parent's key — an implicit ID-based
+        // union); now aggregate pins per net into edges: for each net,
+        // driver (Out pin) to each sink (In pin), summing multiple nets
+        // between the same node pair. Sums and ANDs are commutative, so
+        // iterating nets in key order instead of the historical
+        // name order leaves every edge unchanged.
         let mut agg: BTreeMap<(usize, usize), (u64, bool, bool)> = BTreeMap::new();
-        for pins in &net_pins {
+        for pins in &self.nets {
             if pins.iter().any(|&p| self.pins[p].clockish) {
                 continue;
             }

@@ -1,0 +1,177 @@
+//! Index/graph equivalence gates for the interned, indexed IR core:
+//!
+//! 1. For every built-in benchmark design, the indexed connectivity view
+//!    (`DesignIndex::conn` → `ModuleConn::to_block_graph`) matches a
+//!    reference reimplementation of the legacy string-keyed
+//!    `BlockGraph::build` net-for-net — before *and* after the analysis
+//!    pipeline has run (i.e. through real cache invalidations).
+//! 2. Running the analysis pipeline with connectivity caching disabled
+//!    produces byte-identical IR JSON, logs and name maps — the cache is
+//!    purely an accelerator.
+//! 3. A full `run_hlps` flow through the index stays byte-deterministic:
+//!    IR JSON and the rendered Table 2 row are identical across runs.
+
+use rsir::coordinator::flow;
+use rsir::coordinator::report;
+use rsir::designs::Generated;
+use rsir::ir::core::*;
+use rsir::ir::graph::{BlockGraph, Endpoint, NetInfo};
+use rsir::ir::index::DesignIndex;
+use rsir::ir::schema::design_to_json;
+use rsir::passes::PassContext;
+use std::collections::BTreeMap;
+
+/// The legacy string-keyed graph construction, kept verbatim as the
+/// reference semantics (the in-tree `BlockGraph::build` is now a view
+/// over `ModuleConn`, so the comparison must be against an independent
+/// implementation).
+fn reference_block_graph(m: &Module) -> BlockGraph {
+    let mut nets: BTreeMap<String, NetInfo> = BTreeMap::new();
+    for w in m.wires() {
+        nets.entry(w.name.clone()).or_default().width = w.width;
+    }
+    for p in &m.ports {
+        let e = nets.entry(p.name.clone()).or_default();
+        e.width = p.width;
+        e.endpoints.push(Endpoint::Parent {
+            port: p.name.clone(),
+        });
+    }
+    let mut instances = Vec::new();
+    for inst in m.instances() {
+        instances.push(inst.instance_name.clone());
+        for conn in &inst.connections {
+            if let ConnExpr::Id(id) = &conn.value {
+                nets.entry(id.clone()).or_default().endpoints.push(Endpoint::Inst {
+                    inst: inst.instance_name.clone(),
+                    port: conn.port.clone(),
+                });
+            }
+        }
+    }
+    BlockGraph { nets, instances }
+}
+
+/// One generator per built-in benchmark family (small configs where the
+/// family is parameterized). The second tuple field says whether the
+/// family also goes through the analysis pipeline in this test (the four
+/// Table 2 families, whose full flows the e2e suite already exercises).
+fn builtin_designs() -> Vec<(Generated, bool)> {
+    vec![
+        (
+            rsir::designs::cnn::generate(&rsir::designs::cnn::CnnConfig { rows: 4, cols: 4 })
+                .unwrap(),
+            true,
+        ),
+        (
+            rsir::designs::llama2::generate(&Default::default()).unwrap(),
+            true,
+        ),
+        (rsir::designs::minimap2::generate().unwrap(), true),
+        (
+            rsir::designs::knn::generate(&Default::default()).unwrap(),
+            true,
+        ),
+        (rsir::designs::catapult::generate().unwrap(), false),
+        (
+            rsir::designs::dynamatic::generate(rsir::designs::dynamatic::EXAMPLES[0]).unwrap(),
+            false,
+        ),
+        (
+            rsir::designs::intel_hls::generate(rsir::designs::intel_hls::CHSTONE[0]).unwrap(),
+            false,
+        ),
+    ]
+}
+
+/// Every grouped module's indexed view must equal the reference graph.
+fn assert_index_matches_reference(d: &Design, index: &mut DesignIndex) -> usize {
+    let mut grouped = 0;
+    for m in d.modules.values() {
+        if !m.is_grouped() {
+            continue;
+        }
+        grouped += 1;
+        let (conn, interner) = index.conn(d, &m.name).unwrap();
+        let view = conn.to_block_graph(interner);
+        assert_eq!(
+            view,
+            reference_block_graph(m),
+            "indexed view diverges from reference for module '{}'",
+            m.name
+        );
+    }
+    grouped
+}
+
+#[test]
+fn indexed_view_matches_reference_for_all_builtin_designs() {
+    let mut grouped_total = 0;
+    for (g, run_analyze) in builtin_designs() {
+        let mut d = g.design;
+        // Pre-pass: fresh index over the imported design.
+        let mut fresh = DesignIndex::for_design(&d);
+        grouped_total += assert_index_matches_reference(&d, &mut fresh);
+
+        if !run_analyze {
+            continue;
+        }
+        // Post-pass: the pipeline's own (warm) index, after every cache
+        // invalidation the real passes performed.
+        let mut ctx = PassContext::new();
+        ctx.drc_after_each = false;
+        flow::analyze_structure(&mut d, &mut ctx).unwrap();
+        grouped_total += assert_index_matches_reference(&d, &mut ctx.index);
+    }
+    assert!(grouped_total > 0, "no grouped modules were compared");
+}
+
+#[test]
+fn analysis_pipeline_is_byte_identical_with_and_without_caching() {
+    let make = || {
+        rsir::designs::llama2::generate(&Default::default())
+            .unwrap()
+            .design
+    };
+    let run = |caching: bool| {
+        let mut d = make();
+        let mut ctx = PassContext::new();
+        ctx.drc_after_each = false;
+        ctx.index.set_caching(caching);
+        flow::analyze_structure(&mut d, &mut ctx).unwrap();
+        (design_to_json(&d).pretty(), ctx)
+    };
+    let (json_cached, ctx_cached) = run(true);
+    let (json_uncached, ctx_uncached) = run(false);
+    assert_eq!(json_cached, json_uncached, "IR JSON must not depend on caching");
+    assert_eq!(ctx_cached.log, ctx_uncached.log);
+    assert_eq!(ctx_cached.namemap.len(), ctx_uncached.namemap.len());
+    // The cached run actually exercised the cache.
+    let (hits, misses) = ctx_cached.index.cache_stats();
+    assert!(hits > 0, "expected cache hits, got {hits}/{misses}");
+    assert_eq!(ctx_uncached.index.cache_stats().0, 0);
+}
+
+#[test]
+fn full_flow_through_index_is_byte_deterministic() {
+    let dev = rsir::device::builtin::by_name("u280").unwrap();
+    let cfg = flow::FlowConfig {
+        sa_refine: false,
+        ..Default::default()
+    };
+    let run = || {
+        let mut d = rsir::designs::llama2::generate(&Default::default())
+            .unwrap()
+            .design;
+        flow::run_hlps(&mut d, &dev, &cfg).unwrap();
+        design_to_json(&d).pretty()
+    };
+    assert_eq!(run(), run(), "optimized IR JSON must be byte-identical");
+
+    // Table 2 rendering of one row, byte-for-byte.
+    let render = || {
+        let row = report::run_row("CNN 4x4", "cnn:4x4", "u250", &cfg).unwrap();
+        report::render_table2(&[row]).to_string()
+    };
+    assert_eq!(render(), render(), "Table 2 bytes must be identical");
+}
