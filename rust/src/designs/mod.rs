@@ -1,6 +1,8 @@
 //! Benchmark design generators (§4.1/§4.4): real Verilog/VHDL/manifest
 //! artifacts imported through the standard plugins, reproducing the
-//! structure of the paper's evaluation designs.
+//! structure of the paper's evaluation designs — plus [`synthetic`], the
+//! seeded generator of arbitrary valid designs that feeds the
+//! differential fuzzing harness (`testing::oracle`).
 
 pub mod catapult;
 pub mod cnn;
@@ -10,5 +12,6 @@ pub mod intel_hls;
 pub mod knn;
 pub mod llama2;
 pub mod minimap2;
+pub mod synthetic;
 
 pub use common::Generated;

@@ -1,0 +1,921 @@
+//! `designs::synthetic` — a seeded, shrinkable generator of arbitrary
+//! *valid* [`Design`]s, for the differential fuzzing harness
+//! (`testing::oracle`, `tests/fuzz_pipeline.rs`, `rsir fuzz`).
+//!
+//! The seven hand-written benchmark families exercise seven points of the
+//! design space; this module samples the open space the paper actually
+//! targets: random module hierarchies at mixed depth, fan-out/fan-in
+//! block topologies, feedback edges, mixed interface protocols
+//! (handshake / feedforward / non-pipeline), leaf-top and empty-module
+//! edge shapes, and optional floorplan hints.
+//!
+//! ## Plans, not designs
+//!
+//! The generator does not mutate a [`Design`] directly. It produces a
+//! [`DesignPlan`] — a small declarative description (leaf shapes, grouped
+//! levels, channel pairings) — and [`materialize`] turns any plan into a
+//! `Design` that is **DRC-valid by construction**:
+//!
+//! * every channel pairs an output bundle with an input bundle of equal
+//!   kind and width, so nets have exactly two endpoints and widths match;
+//! * every unmatched bundle of a child is exported through parent ports
+//!   covered by a mirrored interface, so pipelinable interfaces are never
+//!   partially connected and no net dangles after flattening;
+//! * clock/reset are broadcast from each grouped module's own
+//!   `ap_clk`/`ap_rst_n` ports (the fan-out exemption of the DRC).
+//!
+//! Shrinking operates on the plan (drop a group, a child, a channel, a
+//! bundle…), and every shrunken plan still materializes to a valid
+//! design, so counterexample minimization never wanders out of the
+//! precondition of the properties under test.
+//!
+//! Materialization is a pure function of the plan and generation is a
+//! pure function of the [`Rng`] stream, so a `(seed, case)` pair replays
+//! to the identical design on any platform (pinned by the seed-digest
+//! test in `tests/fuzz_pipeline.rs`).
+
+use crate::ir::builder::LeafBuilder;
+use crate::ir::core::*;
+use crate::util::json::Json;
+use crate::util::quickcheck::Gen;
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Interface protocol of one generated port bundle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BundleKind {
+    /// data + `_vld` + `_rdy` triple with a handshake interface.
+    Handshake,
+    /// single data port with a feedforward interface.
+    Feedforward,
+    /// single data port with a non-pipeline (latency-sensitive) interface.
+    NonPipeline,
+}
+
+/// Shape of one external bundle of a module: protocol, data-flow
+/// direction, and data width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BundleSpec {
+    pub kind: BundleKind,
+    pub dir: Dir,
+    pub width: u32,
+}
+
+/// Shape of one generated leaf module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeafPlan {
+    pub bundles: Vec<BundleSpec>,
+    /// Pre-attach resource/timing metadata (otherwise `platform-analyze`
+    /// fills it in — both shapes appear in real imports).
+    pub with_resource: bool,
+}
+
+/// What a grouped level instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChildRef {
+    /// `leaves[i]`.
+    Leaf(usize),
+    /// `groups[i]` — always a *lower* level, so hierarchies are acyclic.
+    Group(usize),
+    /// The shared empty grouped module (no ports, no instances).
+    Empty,
+}
+
+/// One planned point-to-point connection inside a grouped module:
+/// `children[src]`'s bundle `src_bundle` (an output) feeds
+/// `children[dst]`'s bundle `dst_bundle` (an input). `dst <= src` yields
+/// a feedback edge; `dst == src` a self-loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelPlan {
+    pub src: usize,
+    pub src_bundle: usize,
+    pub dst: usize,
+    pub dst_bundle: usize,
+}
+
+/// One grouped hierarchy level.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupPlan {
+    pub children: Vec<ChildRef>,
+    pub channels: Vec<ChannelPlan>,
+    /// Attach a `floorplan` metadata hint to the first instance.
+    pub hint: bool,
+}
+
+/// Which module is the design top.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopShape {
+    /// The last grouped level (the usual shape).
+    Group,
+    /// `leaf0` — a design whose top is a leaf (degraded-path edge shape).
+    LeafTop,
+    /// The empty grouped module.
+    EmptyTop,
+}
+
+/// A complete declarative description of one synthetic design.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DesignPlan {
+    pub leaves: Vec<LeafPlan>,
+    pub groups: Vec<GroupPlan>,
+    pub with_empty: bool,
+    pub top: TopShape,
+}
+
+/// Tuning knobs for [`DesignGen`]. Defaults keep designs small enough
+/// that the tier-1 fuzz run (64 cases × full oracle suite) stays cheap.
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    pub max_leaves: usize,
+    pub max_bundles: usize,
+    pub max_groups: usize,
+    pub max_children: usize,
+    pub widths: Vec<u32>,
+    /// Probability that an output bundle gets matched to an input bundle
+    /// (unmatched bundles are exported to parent ports).
+    pub channel_p: f64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            max_leaves: 4,
+            max_bundles: 3,
+            max_groups: 3,
+            max_children: 4,
+            widths: vec![1, 8, 32, 64],
+            channel_p: 0.7,
+        }
+    }
+}
+
+/// The [`Gen`] implementation: generates and shrinks [`DesignPlan`]s.
+#[derive(Debug, Clone, Default)]
+pub struct DesignGen {
+    pub cfg: SyntheticConfig,
+}
+
+impl Gen for DesignGen {
+    type Item = DesignPlan;
+
+    fn generate(&self, rng: &mut Rng) -> DesignPlan {
+        let cfg = &self.cfg;
+        let n_leaves = rng.range(1, cfg.max_leaves.max(1));
+        let leaves: Vec<LeafPlan> = (0..n_leaves)
+            .map(|_| LeafPlan {
+                bundles: (0..rng.range(1, cfg.max_bundles.max(1)))
+                    .map(|_| BundleSpec {
+                        kind: {
+                            let r = rng.f64();
+                            if r < 0.6 {
+                                BundleKind::Handshake
+                            } else if r < 0.9 {
+                                BundleKind::Feedforward
+                            } else {
+                                BundleKind::NonPipeline
+                            }
+                        },
+                        dir: if rng.chance(0.5) { Dir::In } else { Dir::Out },
+                        width: *rng.pick(&cfg.widths),
+                    })
+                    .collect(),
+                with_resource: rng.chance(0.5),
+            })
+            .collect();
+        let mut with_empty = rng.chance(0.25);
+
+        let n_groups = rng.range(1, cfg.max_groups.max(1));
+        let mut groups: Vec<GroupPlan> = Vec::with_capacity(n_groups);
+        let mut group_shapes: Vec<Vec<BundleSpec>> = Vec::with_capacity(n_groups);
+        for gi in 0..n_groups {
+            let n_children = rng.range(1, cfg.max_children.max(1));
+            let children: Vec<ChildRef> = (0..n_children)
+                .map(|_| {
+                    if gi > 0 && rng.chance(0.35) {
+                        ChildRef::Group(rng.below(gi))
+                    } else if with_empty && rng.chance(0.15) {
+                        ChildRef::Empty
+                    } else {
+                        ChildRef::Leaf(rng.below(n_leaves))
+                    }
+                })
+                .collect();
+            let child_shapes: Vec<Vec<BundleSpec>> = children
+                .iter()
+                .map(|c| match c {
+                    ChildRef::Leaf(i) => leaves[*i].bundles.clone(),
+                    ChildRef::Group(h) => group_shapes[*h].clone(),
+                    ChildRef::Empty => Vec::new(),
+                })
+                .collect();
+
+            // Match output slots to input slots of equal (kind, width).
+            let mut out_slots: Vec<(usize, usize, BundleKind, u32)> = Vec::new();
+            let mut in_buckets: BTreeMap<(BundleKind, u32), Vec<(usize, usize)>> = BTreeMap::new();
+            for (k, shape) in child_shapes.iter().enumerate() {
+                for (bi, b) in shape.iter().enumerate() {
+                    match b.dir {
+                        Dir::Out => out_slots.push((k, bi, b.kind, b.width)),
+                        Dir::In => in_buckets
+                            .entry((b.kind, b.width))
+                            .or_default()
+                            .push((k, bi)),
+                        Dir::InOut => {}
+                    }
+                }
+            }
+            rng.shuffle(&mut out_slots);
+            let mut channels = Vec::new();
+            for (k, bi, kind, width) in out_slots {
+                if !rng.chance(cfg.channel_p) {
+                    continue;
+                }
+                let Some(bucket) = in_buckets.get_mut(&(kind, width)) else {
+                    continue;
+                };
+                if bucket.is_empty() {
+                    continue;
+                }
+                let (dk, dbi) = bucket.swap_remove(rng.below(bucket.len()));
+                channels.push(ChannelPlan {
+                    src: k,
+                    src_bundle: bi,
+                    dst: dk,
+                    dst_bundle: dbi,
+                });
+            }
+
+            let plan = GroupPlan {
+                children,
+                channels,
+                hint: rng.chance(0.3),
+            };
+            group_shapes.push(group_shape(&child_shapes, &plan.channels));
+            groups.push(plan);
+        }
+
+        let top = if rng.f64() < 0.8 {
+            TopShape::Group
+        } else if rng.chance(0.5) {
+            TopShape::LeafTop
+        } else {
+            with_empty = true;
+            TopShape::EmptyTop
+        };
+        DesignPlan {
+            leaves,
+            groups,
+            with_empty,
+            top,
+        }
+    }
+
+    fn shrink(&self, p: &DesignPlan) -> Vec<DesignPlan> {
+        let mut out = Vec::new();
+        // Re-root to the previous grouped level.
+        if p.top == TopShape::Group && p.groups.len() > 1 {
+            let mut q = p.clone();
+            q.groups.pop();
+            out.push(q);
+        }
+        // Collapse to a leaf-top design (drops all grouping structure).
+        if p.top == TopShape::Group && !p.groups.is_empty() && !p.leaves.is_empty() {
+            let mut q = p.clone();
+            q.top = TopShape::LeafTop;
+            q.groups.clear();
+            out.push(q);
+        }
+        // Drop the last child of each group (and its channels).
+        for (gi, g) in p.groups.iter().enumerate() {
+            if g.children.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            let g = &mut q.groups[gi];
+            let k = g.children.len() - 1;
+            g.children.pop();
+            g.channels.retain(|c| c.src != k && c.dst != k);
+            out.push(q);
+        }
+        // Drop the last channel of each group that has one.
+        for (gi, g) in p.groups.iter().enumerate() {
+            if g.channels.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            q.groups[gi].channels.pop();
+            out.push(q);
+        }
+        // Drop the last leaf when nothing references it.
+        if p.leaves.len() > 1 {
+            let li = p.leaves.len() - 1;
+            let referenced = p
+                .groups
+                .iter()
+                .any(|g| g.children.contains(&ChildRef::Leaf(li)));
+            if !referenced {
+                let mut q = p.clone();
+                q.leaves.pop();
+                out.push(q);
+            }
+        }
+        // Drop the last bundle of the last leaf when no channel names it.
+        if let Some(lp) = p.leaves.last() {
+            if lp.bundles.len() > 1 {
+                let li = p.leaves.len() - 1;
+                let bi = lp.bundles.len() - 1;
+                let referenced = p.groups.iter().any(|g| {
+                    g.channels.iter().any(|c| {
+                        (g.children.get(c.src) == Some(&ChildRef::Leaf(li)) && c.src_bundle == bi)
+                            || (g.children.get(c.dst) == Some(&ChildRef::Leaf(li))
+                                && c.dst_bundle == bi)
+                    })
+                });
+                if !referenced {
+                    let mut q = p.clone();
+                    q.leaves.last_mut().unwrap().bundles.pop();
+                    out.push(q);
+                }
+            }
+        }
+        // Clear cosmetic features.
+        if p.groups.iter().any(|g| g.hint) {
+            let mut q = p.clone();
+            for g in &mut q.groups {
+                g.hint = false;
+            }
+            out.push(q);
+        }
+        if p.with_empty
+            && p.top != TopShape::EmptyTop
+            && !p
+                .groups
+                .iter()
+                .any(|g| g.children.contains(&ChildRef::Empty))
+        {
+            let mut q = p.clone();
+            q.with_empty = false;
+            out.push(q);
+        }
+        out
+    }
+}
+
+/// External bundle signature of a grouped level: every child bundle not
+/// consumed by a valid channel, in (child, bundle) declaration order.
+/// Shared by the generator (planning) and [`materialize`] (export ports),
+/// so the two always agree on a group's external shape.
+pub fn group_shape(child_shapes: &[Vec<BundleSpec>], channels: &[ChannelPlan]) -> Vec<BundleSpec> {
+    let (_accepted, used) = validate_channels(child_shapes, channels);
+    let mut out = Vec::new();
+    for (k, shape) in child_shapes.iter().enumerate() {
+        for (bi, b) in shape.iter().enumerate() {
+            if !used.contains(&(k, bi)) {
+                out.push(*b);
+            }
+        }
+    }
+    out
+}
+
+/// First-come channel validation against the given child shapes:
+/// returns the indices of the accepted channels plus the set of
+/// (child, bundle) endpoints they consume. Invalid channels (dangling
+/// references, mismatched shapes, already-taken endpoints — possible
+/// after sloppy shrinking or in hand-written plans) are skipped, never
+/// an error, and only channels in the accepted set are ever wired — an
+/// endpoint claimed by an accepted channel can't also admit an earlier
+/// mismatched one.
+fn validate_channels(
+    child_shapes: &[Vec<BundleSpec>],
+    channels: &[ChannelPlan],
+) -> (BTreeSet<usize>, BTreeSet<(usize, usize)>) {
+    let mut accepted = BTreeSet::new();
+    let mut used = BTreeSet::new();
+    for (ci, c) in channels.iter().enumerate() {
+        let (Some(ss), Some(ds)) = (child_shapes.get(c.src), child_shapes.get(c.dst)) else {
+            continue;
+        };
+        let (Some(sb), Some(db)) = (ss.get(c.src_bundle), ds.get(c.dst_bundle)) else {
+            continue;
+        };
+        if sb.dir != Dir::Out
+            || db.dir != Dir::In
+            || sb.kind != db.kind
+            || sb.width != db.width
+            || used.contains(&(c.src, c.src_bundle))
+            || used.contains(&(c.dst, c.dst_bundle))
+        {
+            continue;
+        }
+        accepted.insert(ci);
+        used.insert((c.src, c.src_bundle));
+        used.insert((c.dst, c.dst_bundle));
+    }
+    (accepted, used)
+}
+
+/// Names + shape of one externally visible bundle of a built module.
+#[derive(Debug, Clone)]
+struct ExtBundle {
+    spec: BundleSpec,
+    data: String,
+    valid: String,
+    ready: String,
+}
+
+/// Turn any plan into a valid [`Design`]. Total: structurally impossible
+/// references (dangling child/bundle indices, mismatched channel shapes)
+/// are skipped rather than rejected, so every shrink candidate
+/// materializes. Pure: the same plan always yields the identical design.
+pub fn materialize(plan: &DesignPlan) -> Design {
+    let mut d = Design::new("placeholder");
+    let need_empty = plan.with_empty
+        || plan.top == TopShape::EmptyTop
+        || plan
+            .groups
+            .iter()
+            .any(|g| g.children.contains(&ChildRef::Empty));
+    if need_empty {
+        d.add(Module::grouped("empty0"));
+    }
+
+    // Leaves.
+    let mut leaf_sigs: Vec<Vec<ExtBundle>> = Vec::with_capacity(plan.leaves.len());
+    for (i, lp) in plan.leaves.iter().enumerate() {
+        let mut b = LeafBuilder::verilog_stub(format!("leaf{i}")).clk_rst();
+        let mut sig = Vec::with_capacity(lp.bundles.len());
+        for (j, bs) in lp.bundles.iter().enumerate() {
+            let name = format!("b{j}");
+            match bs.kind {
+                BundleKind::Handshake => {
+                    b = b.handshake(&name, bs.dir, bs.width);
+                    sig.push(ExtBundle {
+                        spec: *bs,
+                        data: name.clone(),
+                        valid: format!("{name}_vld"),
+                        ready: format!("{name}_rdy"),
+                    });
+                }
+                BundleKind::Feedforward => {
+                    b = b.port(&name, bs.dir, bs.width).iface(Interface::Feedforward {
+                        name: name.clone(),
+                        ports: vec![name.clone()],
+                    });
+                    sig.push(ExtBundle {
+                        spec: *bs,
+                        data: name.clone(),
+                        valid: String::new(),
+                        ready: String::new(),
+                    });
+                }
+                BundleKind::NonPipeline => {
+                    b = b.port(&name, bs.dir, bs.width).iface(Interface::NonPipeline {
+                        name: name.clone(),
+                        ports: vec![name.clone()],
+                    });
+                    sig.push(ExtBundle {
+                        spec: *bs,
+                        data: name.clone(),
+                        valid: String::new(),
+                        ready: String::new(),
+                    });
+                }
+            }
+        }
+        if lp.with_resource {
+            b = b
+                .resource(Resources::new(
+                    100.0 * (i + 1) as f64,
+                    80.0 * (i + 1) as f64,
+                    1.0,
+                    2.0,
+                    0.0,
+                ))
+                .meta(
+                    "timing",
+                    Json::parse(r#"{"internal_ns": 2.0}"#).expect("static json"),
+                );
+        }
+        d.add(b.build());
+        leaf_sigs.push(sig);
+    }
+
+    // Grouped levels, bottom-up.
+    let mut group_sigs: Vec<Vec<ExtBundle>> = Vec::with_capacity(plan.groups.len());
+    for (gi, gp) in plan.groups.iter().enumerate() {
+        let gname = format!("grp{gi}");
+        let mut m = Module::grouped(&gname);
+        m.ports = vec![
+            Port::new("ap_clk", Dir::In, 1),
+            Port::new("ap_rst_n", Dir::In, 1),
+        ];
+        m.interfaces = vec![
+            Interface::Clock {
+                port: "ap_clk".into(),
+            },
+            Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            },
+        ];
+
+        // Resolve children; None = unmaterializable reference (skipped,
+        // but the slot is kept so channel indices stay aligned).
+        struct Child {
+            inst: Instance,
+            sig: Vec<ExtBundle>,
+        }
+        let mut kids: Vec<Option<Child>> = Vec::with_capacity(gp.children.len());
+        for (k, cr) in gp.children.iter().enumerate() {
+            let resolved = match cr {
+                ChildRef::Leaf(i) if *i < plan.leaves.len() => {
+                    Some((format!("leaf{i}"), leaf_sigs[*i].clone(), true))
+                }
+                ChildRef::Group(h) if *h < gi => {
+                    Some((format!("grp{h}"), group_sigs[*h].clone(), true))
+                }
+                ChildRef::Empty if need_empty => Some(("empty0".to_string(), Vec::new(), false)),
+                _ => None,
+            };
+            kids.push(resolved.map(|(module, sig, has_clk)| {
+                let mut inst = Instance::new(format!("c{k}"), module);
+                if has_clk {
+                    inst.connect("ap_clk", ConnExpr::id("ap_clk"));
+                    inst.connect("ap_rst_n", ConnExpr::id("ap_rst_n"));
+                }
+                Child { inst, sig }
+            }));
+        }
+
+        let child_shapes: Vec<Vec<BundleSpec>> = kids
+            .iter()
+            .map(|c| {
+                c.as_ref()
+                    .map(|c| c.sig.iter().map(|b| b.spec).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        let (accepted, used) = validate_channels(&child_shapes, &gp.channels);
+
+        // Channels: wires joining a matched (out, in) bundle pair. Only
+        // channels the validator accepted are wired — acceptance is by
+        // channel index, so a mismatched channel can never ride on
+        // endpoints claimed by a valid one.
+        let mut wires: Vec<Wire> = Vec::new();
+        for (ci, ch) in gp.channels.iter().enumerate() {
+            if !accepted.contains(&ci) {
+                continue;
+            }
+            let sb = kids[ch.src].as_ref().unwrap().sig[ch.src_bundle].clone();
+            let db = kids[ch.dst].as_ref().unwrap().sig[ch.dst_bundle].clone();
+            let w = format!("ch{ci}");
+            wires.push(Wire {
+                name: w.clone(),
+                width: sb.spec.width,
+            });
+            kids[ch.src]
+                .as_mut()
+                .unwrap()
+                .inst
+                .connect(&sb.data, ConnExpr::id(&w));
+            kids[ch.dst]
+                .as_mut()
+                .unwrap()
+                .inst
+                .connect(&db.data, ConnExpr::id(&w));
+            if sb.spec.kind == BundleKind::Handshake {
+                for (suffix, sp, dp) in [("vld", &sb.valid, &db.valid), ("rdy", &sb.ready, &db.ready)]
+                {
+                    let wn = format!("{w}_{suffix}");
+                    wires.push(Wire {
+                        name: wn.clone(),
+                        width: 1,
+                    });
+                    kids[ch.src].as_mut().unwrap().inst.connect(sp, ConnExpr::id(&wn));
+                    kids[ch.dst].as_mut().unwrap().inst.connect(dp, ConnExpr::id(&wn));
+                }
+            }
+        }
+
+        // Exports: every unmatched bundle becomes parent ports + a
+        // mirrored interface, keeping the child's interface fully wired.
+        let mut sig_out: Vec<ExtBundle> = Vec::new();
+        #[allow(clippy::needless_range_loop)] // index needed for the later &mut access
+        for k in 0..kids.len() {
+            let Some(child) = kids[k].as_ref() else {
+                continue;
+            };
+            let bundles: Vec<(usize, ExtBundle)> = child
+                .sig
+                .iter()
+                .enumerate()
+                .filter(|(bi, _)| !used.contains(&(k, *bi)))
+                .map(|(bi, b)| (bi, b.clone()))
+                .collect();
+            for (_bi, b) in bundles {
+                let base = format!("x{k}_{}", b.data);
+                m.ports.push(Port::new(&base, b.spec.dir, b.spec.width));
+                let kid = kids[k].as_mut().unwrap();
+                kid.inst.connect(&b.data, ConnExpr::id(&base));
+                match b.spec.kind {
+                    BundleKind::Handshake => {
+                        let (vld, rdy) = (format!("{base}_vld"), format!("{base}_rdy"));
+                        m.ports.push(Port::new(&vld, b.spec.dir, 1));
+                        m.ports.push(Port::new(&rdy, b.spec.dir.flipped(), 1));
+                        kid.inst.connect(&b.valid, ConnExpr::id(&vld));
+                        kid.inst.connect(&b.ready, ConnExpr::id(&rdy));
+                        m.interfaces.push(Interface::Handshake {
+                            name: base.clone(),
+                            data: vec![base.clone()],
+                            valid: vld.clone(),
+                            ready: rdy.clone(),
+                            clk: Some("ap_clk".into()),
+                        });
+                        sig_out.push(ExtBundle {
+                            spec: b.spec,
+                            data: base,
+                            valid: vld,
+                            ready: rdy,
+                        });
+                    }
+                    BundleKind::Feedforward => {
+                        m.interfaces.push(Interface::Feedforward {
+                            name: base.clone(),
+                            ports: vec![base.clone()],
+                        });
+                        sig_out.push(ExtBundle {
+                            spec: b.spec,
+                            data: base,
+                            valid: String::new(),
+                            ready: String::new(),
+                        });
+                    }
+                    BundleKind::NonPipeline => {
+                        m.interfaces.push(Interface::NonPipeline {
+                            name: base.clone(),
+                            ports: vec![base.clone()],
+                        });
+                        sig_out.push(ExtBundle {
+                            spec: b.spec,
+                            data: base,
+                            valid: String::new(),
+                            ready: String::new(),
+                        });
+                    }
+                }
+            }
+        }
+
+        *m.wires_mut() = wires;
+        let mut first = true;
+        for kid in kids.into_iter().flatten() {
+            let mut inst = kid.inst;
+            if gp.hint && first {
+                inst.metadata
+                    .insert("floorplan", Json::str("SLOT_X0Y0"));
+                first = false;
+            }
+            m.instances_mut().push(inst);
+        }
+        d.add(m);
+        group_sigs.push(sig_out);
+    }
+
+    // Top selection (with fallbacks so materialize is total).
+    d.top = match plan.top {
+        TopShape::Group if !plan.groups.is_empty() => format!("grp{}", plan.groups.len() - 1),
+        TopShape::LeafTop if !plan.leaves.is_empty() => "leaf0".to_string(),
+        TopShape::EmptyTop => "empty0".to_string(),
+        _ if !plan.groups.is_empty() => format!("grp{}", plan.groups.len() - 1),
+        _ if !plan.leaves.is_empty() => "leaf0".to_string(),
+        _ => {
+            if d.module("empty0").is_none() {
+                d.add(Module::grouped("empty0"));
+            }
+            "empty0".to_string()
+        }
+    };
+    d
+}
+
+/// FNV-1a 64-bit over a byte string: tiny, dependency-free, and
+/// platform-independent — the digest that pins seed-stability.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Canonical digest of a design: FNV-1a over its compact IR JSON.
+pub fn digest(d: &Design) -> u64 {
+    fnv1a64(crate::ir::schema::design_to_json(d).dump().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::validate;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn plans_materialize_to_drc_clean_designs() {
+        forall(101, 40, &DesignGen::default(), |p| {
+            validate::check(&materialize(p)).is_empty()
+        });
+    }
+
+    #[test]
+    fn materialize_is_pure() {
+        let gen = DesignGen::default();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let p = gen.generate(&mut rng);
+            let a = materialize(&p);
+            let b = materialize(&p);
+            assert_eq!(a, b);
+            assert_eq!(digest(&a), digest(&b));
+        }
+    }
+
+    #[test]
+    fn shrink_candidates_stay_valid() {
+        let gen = DesignGen::default();
+        let mut rng = Rng::new(17);
+        for _ in 0..20 {
+            let p = gen.generate(&mut rng);
+            for cand in gen.shrink(&p) {
+                let v = validate::check(&materialize(&cand));
+                assert!(v.is_empty(), "shrunk plan {cand:#?} violates DRC: {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn generator_reaches_edge_shapes() {
+        let gen = DesignGen::default();
+        let mut rng = Rng::new(2024);
+        let (mut leaf_top, mut empty_top, mut feedback, mut nested, mut empty_child) =
+            (false, false, false, false, false);
+        let (mut channels, mut hints, mut mixed) = (false, false, false);
+        for _ in 0..300 {
+            let p = gen.generate(&mut rng);
+            leaf_top |= p.top == TopShape::LeafTop;
+            empty_top |= p.top == TopShape::EmptyTop;
+            feedback |= p
+                .groups
+                .iter()
+                .any(|g| g.channels.iter().any(|c| c.dst <= c.src));
+            nested |= p
+                .groups
+                .iter()
+                .any(|g| g.children.iter().any(|c| matches!(c, ChildRef::Group(_))));
+            empty_child |= p
+                .groups
+                .iter()
+                .any(|g| g.children.contains(&ChildRef::Empty));
+            channels |= p.groups.iter().any(|g| !g.channels.is_empty());
+            hints |= p.groups.iter().any(|g| g.hint);
+            mixed |= p.leaves.iter().any(|l| {
+                l.bundles.iter().any(|b| b.kind == BundleKind::Handshake)
+            }) && p.leaves.iter().any(|l| {
+                l.bundles.iter().any(|b| b.kind != BundleKind::Handshake)
+            });
+        }
+        assert!(leaf_top, "no leaf-top design in 300 samples");
+        assert!(empty_top, "no empty-top design in 300 samples");
+        assert!(feedback, "no feedback channel in 300 samples");
+        assert!(nested, "no nested grouped level in 300 samples");
+        assert!(empty_child, "no empty-module instance in 300 samples");
+        assert!(channels, "no channels at all in 300 samples");
+        assert!(hints, "no floorplan hints in 300 samples");
+        assert!(mixed, "no mixed interface protocols in 300 samples");
+    }
+
+    #[test]
+    fn group_shape_matches_materialized_exports() {
+        // The planning-side shape and the materialized export ports must
+        // describe the same bundles, or cross-level channels would
+        // silently vanish.
+        let gen = DesignGen::default();
+        let mut rng = Rng::new(55);
+        for _ in 0..20 {
+            let p = gen.generate(&mut rng);
+            let d = materialize(&p);
+            for (gi, gp) in p.groups.iter().enumerate() {
+                // Only validate leaf-only groups precisely (group children
+                // would need the transitive shape, covered by DRC anyway).
+                if gp
+                    .children
+                    .iter()
+                    .any(|c| !matches!(c, ChildRef::Leaf(_)))
+                {
+                    continue;
+                }
+                let child_shapes: Vec<Vec<BundleSpec>> = gp
+                    .children
+                    .iter()
+                    .map(|c| match c {
+                        ChildRef::Leaf(i) => p.leaves[*i].bundles.clone(),
+                        _ => unreachable!("filtered above"),
+                    })
+                    .collect();
+                let shape = group_shape(&child_shapes, &gp.channels);
+                let m = d.module(&format!("grp{gi}")).unwrap();
+                let exported = m
+                    .interfaces
+                    .iter()
+                    .filter(|i| !matches!(i, Interface::Clock { .. } | Interface::Reset { .. }))
+                    .count();
+                assert_eq!(shape.len(), exported, "group grp{gi} shape drift");
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_channel_before_valid_ones_is_skipped_not_wired() {
+        // Regression for the totality contract: a kind-mismatched channel
+        // listed BEFORE the valid channels that claim its endpoints must
+        // be skipped (acceptance is per channel index), and every
+        // endpoint it touched must still end up wired or exported.
+        let hs = |dir| BundleSpec {
+            kind: BundleKind::Handshake,
+            dir,
+            width: 32,
+        };
+        let ff = |dir| BundleSpec {
+            kind: BundleKind::Feedforward,
+            dir,
+            width: 32,
+        };
+        let plan = DesignPlan {
+            leaves: vec![
+                LeafPlan {
+                    // A: hs out, B-feeder: hs out
+                    bundles: vec![hs(Dir::Out), hs(Dir::Out)],
+                    with_resource: false,
+                },
+                LeafPlan {
+                    // consumers: hs in, ff in
+                    bundles: vec![hs(Dir::In), ff(Dir::In)],
+                    with_resource: false,
+                },
+            ],
+            groups: vec![GroupPlan {
+                children: vec![ChildRef::Leaf(0), ChildRef::Leaf(1)],
+                channels: vec![
+                    // Mismatched (hs out -> ff in), listed first.
+                    ChannelPlan {
+                        src: 0,
+                        src_bundle: 0,
+                        dst: 1,
+                        dst_bundle: 1,
+                    },
+                    // Valid channel claiming the mismatched one's src.
+                    ChannelPlan {
+                        src: 0,
+                        src_bundle: 0,
+                        dst: 1,
+                        dst_bundle: 0,
+                    },
+                ],
+                hint: false,
+            }],
+            with_empty: false,
+            top: TopShape::Group,
+        };
+        let d = materialize(&plan);
+        let v = validate::check(&d);
+        assert!(v.is_empty(), "materialize broke totality: {v:?}");
+        // The valid channel is wired under its own index (ch1), and the
+        // remaining bundles (leaf0.b1, leaf1.b1) are exported.
+        let top = d.module("grp0").unwrap();
+        assert!(top.wires().iter().any(|w| w.name == "ch1"));
+        assert!(top.wires().iter().all(|w| !w.name.starts_with("ch0")));
+        assert!(top.port("x0_b1").is_some(), "unused src bundle must export");
+        assert!(top.port("x1_b1").is_some(), "mismatched dst must export");
+    }
+
+    #[test]
+    fn digest_is_stable_within_process() {
+        let gen = DesignGen::default();
+        let one = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            digest(&materialize(&gen.generate(&mut rng)))
+        };
+        for seed in 0..5 {
+            assert_eq!(one(seed), one(seed));
+        }
+    }
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_35c9_fd85_9e3f);
+    }
+}

@@ -22,7 +22,9 @@
 //!   almost-full FIFO, FF chains);
 //! * [`designs`] — benchmark design generators (CNN systolic arrays,
 //!   LLaMA2 hybrid accelerator, Minimap2, KNN, Dynamatic / Catapult /
-//!   Intel-HLS style RTL);
+//!   Intel-HLS style RTL) plus the seeded synthetic-design generator;
+//! * [`testing`] — the differential oracle suite and the seeded fuzz
+//!   driver behind `rsir fuzz` and the scheduled CI fuzz job;
 //! * [`coordinator`] — the four-stage HLPS flow of §3.4 and the parallel
 //!   synthesis driver of §4.3;
 //! * [`runtime`] — the PJRT loader executing AOT-compiled JAX/Pallas
@@ -39,6 +41,7 @@ pub mod ir;
 pub mod passes;
 pub mod plugins;
 pub mod runtime;
+pub mod testing;
 pub mod timing;
 pub mod util;
 pub mod verilog;

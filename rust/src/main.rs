@@ -11,6 +11,10 @@
 //! rsir fig13                           Figure 13: parallel synthesis
 //! rsir import <top> <file.v>...        import Verilog into IR JSON
 //! rsir export <ir.json> <outdir>       export IR to Verilog + XDC
+//! rsir fuzz [--seed N] [--cases M] [--out f.json] [--digests]
+//!                                      run generated designs through the
+//!                                      differential oracle suite; shrink
+//!                                      and write counterexamples
 //! ```
 //!
 //! The global `--workers N` flag (or the `RSIR_WORKERS` environment
@@ -32,7 +36,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
         &argv,
-        &["bench", "device", "util", "only", "out", "seed", "workers", "ir"],
+        &["bench", "device", "util", "only", "out", "seed", "workers", "ir", "cases"],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     if let Err(e) = dispatch(cmd, &args) {
@@ -154,6 +158,47 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 println!("wrote transformed IR to {path}");
             }
         }
+        "fuzz" => {
+            let cfg = rsir::designs::synthetic::SyntheticConfig::default();
+            if args.has_flag("digests") {
+                // Pinnable seed digests (see tests/golden/): fuzz failures
+                // stay replayable only if seeds regenerate identically.
+                let mut t = Table::new(&["Seed", "Digest"]);
+                for (seed, h) in rsir::testing::fuzz::seed_digests(0..5, &cfg) {
+                    t.row(&[seed.to_string(), format!("{h:016x}")]);
+                }
+                t.print();
+                return Ok(());
+            }
+            let seed = args.get_usize("seed", 0) as u64;
+            let cases = args.get_usize("cases", 64);
+            let t0 = Instant::now();
+            let rep = rsir::testing::fuzz::run(seed, cases, &cfg);
+            match rep.failure {
+                None => println!(
+                    "fuzz: {cases} designs from seed {seed} passed the oracle suite in {:.2?}",
+                    t0.elapsed()
+                ),
+                Some(f) => {
+                    let out = args.get_or("out", "fuzz_counterexample.json");
+                    std::fs::write(out, &f.minimal_json)?;
+                    eprintln!(
+                        "fuzz: case {} (seed {seed}) violated: {}",
+                        f.case,
+                        f.violations.join(", ")
+                    );
+                    eprintln!(
+                        "minimal counterexample violates: {}",
+                        f.minimal_violations.join(", ")
+                    );
+                    eprintln!("minimal plan:\n{:#?}", f.minimal_plan);
+                    bail!(
+                        "oracle invariant violated; minimal counterexample IR written to {out} \
+                         (replay: rsir fuzz --seed {seed} --cases {cases})"
+                    );
+                }
+            }
+        }
         "table1" => report::table1().print(),
         "table2" => {
             let t0 = Instant::now();
@@ -256,9 +301,10 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "help" | "--help" => {
             println!("rsir — RapidStream IR (ICCAD'24 reproduction)");
-            println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 import export");
+            println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 import export fuzz");
             println!("global: --workers N (or RSIR_WORKERS) sizes the evaluation pool");
             println!("pass registry: `rsir passes` lists it; `rsir pipeline <spec>` runs one");
+            println!("fuzzing: `rsir fuzz --seed N --cases M` replays/shrinks oracle failures");
         }
         other => bail!("unknown command '{other}' (try 'rsir help')"),
     }

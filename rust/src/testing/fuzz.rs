@@ -1,0 +1,106 @@
+//! Seeded fuzz driver over [`designs::synthetic`](crate::designs::synthetic):
+//! generate `cases` plans from `seed`, run every materialized design
+//! through the full [`oracle`](crate::testing::oracle) suite, and on the
+//! first failure greedily shrink the plan to a minimal counterexample
+//! (via [`quickcheck::minimize`](crate::util::quickcheck::minimize)).
+//!
+//! Shared by `tests/fuzz_pipeline.rs` and the `rsir fuzz --seed N
+//! --cases M` CLI, so a CI failure is replayed locally with the exact
+//! same command line.
+
+use crate::designs::synthetic::{digest, materialize, DesignGen, DesignPlan, SyntheticConfig};
+use crate::ir::schema::design_to_json;
+use crate::testing::oracle;
+use crate::util::quickcheck::{minimize, Gen};
+use crate::util::rng::Rng;
+
+/// A minimized oracle failure.
+#[derive(Debug, Clone)]
+pub struct FuzzFailure {
+    /// 0-based case index within the run (replay: same seed, same case).
+    pub case: usize,
+    /// Invariants violated by the original (unshrunk) design.
+    pub violations: Vec<&'static str>,
+    /// The shrunken plan (the replayable, human-readable form).
+    pub minimal_plan: DesignPlan,
+    /// Invariants violated by the minimal design.
+    pub minimal_violations: Vec<&'static str>,
+    /// Pretty IR JSON of the minimal design (the CI artifact).
+    pub minimal_json: String,
+}
+
+/// Outcome of one fuzz run.
+#[derive(Debug, Clone)]
+pub struct FuzzReport {
+    pub seed: u64,
+    pub cases: usize,
+    pub failure: Option<FuzzFailure>,
+}
+
+/// Run `cases` generated designs through the oracle suite. Stops at (and
+/// minimizes) the first failure; returns a structured report instead of
+/// panicking, so the CLI can write artifacts.
+pub fn run(seed: u64, cases: usize, cfg: &SyntheticConfig) -> FuzzReport {
+    let gen = DesignGen { cfg: cfg.clone() };
+    let mut rng = Rng::new(seed);
+    let prop = |p: &DesignPlan| oracle::check_pipeline(&materialize(p)).is_clean();
+    for case in 0..cases {
+        let plan = gen.generate(&mut rng);
+        // One oracle run per clean case; its outcome is reused on the
+        // failure path instead of re-running the whole suite.
+        let outcome = oracle::check_pipeline(&materialize(&plan));
+        if outcome.is_clean() {
+            continue;
+        }
+        let violations = outcome.violated();
+        let minimal_plan = minimize(&gen, plan, &prop);
+        let minimal = materialize(&minimal_plan);
+        let minimal_violations = oracle::check_pipeline(&minimal).violated();
+        return FuzzReport {
+            seed,
+            cases,
+            failure: Some(FuzzFailure {
+                case,
+                violations,
+                minimal_plan,
+                minimal_violations,
+                minimal_json: design_to_json(&minimal).pretty(),
+            }),
+        };
+    }
+    FuzzReport {
+        seed,
+        cases,
+        failure: None,
+    }
+}
+
+/// Digest of the first design generated from each seed — the values the
+/// seed-stability test pins, and what `rsir fuzz --digests` prints.
+pub fn seed_digests(seeds: std::ops::Range<u64>, cfg: &SyntheticConfig) -> Vec<(u64, u64)> {
+    let gen = DesignGen { cfg: cfg.clone() };
+    seeds
+        .map(|seed| {
+            let mut rng = Rng::new(seed);
+            (seed, digest(&materialize(&gen.generate(&mut rng))))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_run_reports_no_failure() {
+        let rep = run(11, 4, &SyntheticConfig::default());
+        assert_eq!(rep.cases, 4);
+        assert!(rep.failure.is_none(), "{:?}", rep.failure);
+    }
+
+    #[test]
+    fn seed_digests_are_reproducible() {
+        let cfg = SyntheticConfig::default();
+        assert_eq!(seed_digests(0..5, &cfg), seed_digests(0..5, &cfg));
+    }
+}

@@ -1,0 +1,10 @@
+//! Test infrastructure shipped with the crate: the differential oracle
+//! suite ([`oracle`]) and the seeded fuzz driver ([`fuzz`]) that replays
+//! and shrinks counterexamples.
+//!
+//! This lives in `src/` (not `tests/`) deliberately: the `rsir fuzz` CLI,
+//! the tier-1 integration tests and the scheduled CI job all share one
+//! implementation, so a counterexample found anywhere replays everywhere.
+
+pub mod fuzz;
+pub mod oracle;

@@ -1,0 +1,527 @@
+//! Differential oracles for the pass pipeline: invariants that any run
+//! of the `analyze-structure` pipeline (stages 1–2 of the HLPS flow)
+//! must preserve on *any* valid input design, checked against
+//! independent reference implementations:
+//!
+//! * **input-drc** — the precondition: the input design is DRC-clean
+//!   (the synthetic generator guarantees this by construction).
+//! * **pipeline-runs** — the pipeline must not error on valid input.
+//! * **drc-preserved** — DRC-clean in ⇒ DRC-clean out.
+//! * **bisimulation** — the multiset of leaf-level channels (nets between
+//!   leaf-module ports, resolved through arbitrary hierarchy depth by an
+//!   independent reference elaborator, [`leaf_channels`]) is identical
+//!   before and after the pipeline: restructuring may move boundaries,
+//!   never connectivity.
+//! * **index-coherence** — the pipeline's warm
+//!   [`DesignIndex`](crate::ir::index::DesignIndex) view of
+//!   every grouped module equals an independent string-keyed rebuild
+//!   ([`reference_block_graph`], the pre-index `BlockGraph::build`
+//!   semantics kept verbatim).
+//! * **roundtrip-fixpoint** — serializing the output IR, parsing it back
+//!   and serializing again is byte-identical (and value-identical).
+//! * **determinism** — running the pipeline twice from the same input
+//!   yields byte-identical IR JSON and identical logs.
+//!
+//! [`check_workers_equivalence`] additionally runs a batch of designs on
+//! a 1-worker and an 8-worker [`Pool`] (what `RSIR_WORKERS=1` vs `8`
+//! resolve to) and requires byte-identical results.
+//!
+//! A deliberately broken pass must trip at least one oracle — proven by
+//! the mutation smoke tests in `tests/fuzz_pipeline.rs`.
+
+use crate::ir::core::*;
+use crate::ir::graph::{BlockGraph, Endpoint, NetInfo};
+use crate::ir::schema::{design_from_json, design_to_json};
+use crate::ir::validate;
+use crate::passes::{registry, PassContext};
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One violated invariant, with a human-readable detail.
+#[derive(Debug, Clone)]
+pub struct OracleViolation {
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for OracleViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// Result of one oracle run. Empty violations = every invariant held.
+#[derive(Debug, Clone, Default)]
+pub struct OracleOutcome {
+    pub violations: Vec<OracleViolation>,
+}
+
+impl OracleOutcome {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Names of the violated invariants, in order.
+    pub fn violated(&self) -> Vec<&'static str> {
+        self.violations.iter().map(|v| v.invariant).collect()
+    }
+
+    pub fn render(&self) -> String {
+        if self.is_clean() {
+            return "all oracle invariants held".to_string();
+        }
+        self.violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    fn push(&mut self, invariant: &'static str, detail: impl Into<String>) {
+        self.violations.push(OracleViolation {
+            invariant,
+            detail: detail.into(),
+        });
+    }
+}
+
+/// The transformation under test by default: the registered
+/// `analyze-structure` pipeline, DRC hooks off (matching how
+/// `run_baseline`/`run_hlps` invoke it — mid-pipeline states may be
+/// transiently inconsistent; the oracles judge the final state).
+pub fn analyze_pipeline(design: &mut Design, ctx: &mut PassContext) -> anyhow::Result<()> {
+    ctx.drc_after_each = false;
+    registry::named(registry::ANALYZE_STRUCTURE)?.run(design, ctx)?;
+    Ok(())
+}
+
+/// Run the full oracle suite over the default pipeline.
+pub fn check_pipeline(design: &Design) -> OracleOutcome {
+    check_pipeline_with(design, analyze_pipeline)
+}
+
+/// Run the full oracle suite over an arbitrary transformation — the hook
+/// the mutation smoke tests use to prove a broken pass is caught. `run`
+/// must announce its mutations through `ctx.index` (as any well-formed
+/// pass would) or debug builds panic on the stale cache instead of
+/// reporting a violation.
+pub fn check_pipeline_with<F>(design: &Design, run: F) -> OracleOutcome
+where
+    F: Fn(&mut Design, &mut PassContext) -> anyhow::Result<()>,
+{
+    let mut out = OracleOutcome::default();
+
+    let pre = validate::check(design);
+    if !pre.is_empty() {
+        out.push(
+            "input-drc",
+            format!("input design violates DRC ({} violations): {}", pre.len(), pre[0]),
+        );
+        return out; // downstream invariants are meaningless
+    }
+    let pre_channels = leaf_channels(design);
+
+    let mut d1 = design.clone();
+    let mut ctx1 = PassContext::new();
+    ctx1.drc_after_each = false;
+    if let Err(e) = run(&mut d1, &mut ctx1) {
+        out.push("pipeline-runs", format!("pipeline failed on valid input: {e:#}"));
+        return out;
+    }
+
+    // DRC-clean in ⇒ DRC-clean out.
+    let post = validate::check(&d1);
+    if !post.is_empty() {
+        out.push(
+            "drc-preserved",
+            format!(
+                "{} violations after pipeline; first: {}",
+                post.len(),
+                post[0]
+            ),
+        );
+    }
+
+    // Connectivity bisimulation at the leaf level.
+    let post_channels = leaf_channels(&d1);
+    if pre_channels != post_channels {
+        out.push(
+            "bisimulation",
+            channel_diff(&pre_channels, &post_channels),
+        );
+    }
+
+    // The warm index view must match the reference rebuild.
+    for name in d1
+        .modules
+        .values()
+        .filter(|m| m.is_grouped())
+        .map(|m| m.name.clone())
+        .collect::<Vec<_>>()
+    {
+        match ctx1.index.conn(&d1, &name) {
+            Ok((conn, interner)) => {
+                let view = conn.to_block_graph(interner);
+                let reference = reference_block_graph(d1.module(&name).unwrap());
+                if view != reference {
+                    out.push(
+                        "index-coherence",
+                        format!("indexed view of '{name}' diverges from reference rebuild"),
+                    );
+                }
+            }
+            Err(e) => out.push(
+                "index-coherence",
+                format!("index query failed for grouped module '{name}': {e}"),
+            ),
+        }
+    }
+
+    // Serialized-IR round-trip fixpoint.
+    let j1 = design_to_json(&d1).pretty();
+    match Json::parse(&j1).map_err(anyhow::Error::from).and_then(|j| design_from_json(&j)) {
+        Ok(d2) => {
+            if d2 != d1 {
+                out.push("roundtrip-fixpoint", "parsed design differs from original");
+            } else if design_to_json(&d2).pretty() != j1 {
+                out.push("roundtrip-fixpoint", "re-serialized JSON differs byte-wise");
+            }
+        }
+        Err(e) => out.push(
+            "roundtrip-fixpoint",
+            format!("output IR JSON failed to parse back: {e:#}"),
+        ),
+    }
+
+    // Determinism: a second run from the same input is byte-identical.
+    let mut d2 = design.clone();
+    let mut ctx2 = PassContext::new();
+    ctx2.drc_after_each = false;
+    match run(&mut d2, &mut ctx2) {
+        Ok(()) => {
+            if design_to_json(&d2).pretty() != j1 {
+                out.push("determinism", "second run produced different IR JSON");
+            }
+            if ctx2.log != ctx1.log {
+                out.push("determinism", "second run produced a different log");
+            }
+        }
+        Err(e) => out.push("determinism", format!("second run failed: {e:#}")),
+    }
+
+    out
+}
+
+/// Run the default pipeline over a batch of designs on a 1-worker and an
+/// 8-worker pool and require byte-identical outputs (the `RSIR_WORKERS=1`
+/// vs `8` determinism contract, exercised without mutating process-global
+/// environment).
+pub fn check_workers_equivalence(designs: &[Design]) -> OracleOutcome {
+    let mut out = OracleOutcome::default();
+    let job = |d: Design| -> String {
+        let mut d = d;
+        let mut ctx = PassContext::new();
+        match analyze_pipeline(&mut d, &mut ctx) {
+            Ok(()) => design_to_json(&d).pretty(),
+            Err(e) => format!("error: {e:#}"),
+        }
+    };
+    let serial = Pool::new(1).par_map(designs.to_vec(), job);
+    let parallel = Pool::new(8).par_map(designs.to_vec(), job);
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        if a != b {
+            out.push(
+                "workers-determinism",
+                format!("design {i}: 1-worker and 8-worker outputs differ"),
+            );
+        }
+    }
+    out
+}
+
+/// Canonical multiset of leaf-level channels of a design: every net,
+/// resolved through the grouped-module hierarchy from the top, rendered
+/// as the sorted set of its leaf-port (and top-boundary) endpoints.
+///
+/// This is an independent reference elaboration — it never consults
+/// `BlockGraph`/`DesignIndex` — so it can adjudicate whether a pipeline
+/// preserved connectivity. Clock/reset ports (per the owning module's
+/// interfaces) are excluded, like everywhere else in the flow.
+///
+/// Endpoints deliberately name the leaf *module* and port, not the
+/// instance: flatten renames instances (`mid/l1` → `mid__l1`), so the
+/// invariant is bisimulation **up to leaf-instance renaming**. The flip
+/// side is that rewirings which merely permute two indistinguishable
+/// instances of the same leaf module (isomorphic designs) are treated
+/// as equivalent — which is the intended equivalence, not a gap: such a
+/// permutation is exactly what a restructuring pass is allowed to do.
+pub fn leaf_channels(d: &Design) -> BTreeMap<String, usize> {
+    let mut nets: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    let Some(top) = d.module(&d.top) else {
+        return BTreeMap::new();
+    };
+    for p in &top.ports {
+        if is_clockish(top, &p.name) {
+            continue;
+        }
+        nets.entry(format!("/{}", p.name))
+            .or_default()
+            .push(format!("@top.{}#{}", p.name, p.width));
+    }
+    walk(d, top, "", &BTreeMap::new(), &mut nets, 0);
+    let mut out: BTreeMap<String, usize> = BTreeMap::new();
+    for (_key, mut endpoints) in nets {
+        if endpoints.is_empty() {
+            continue;
+        }
+        endpoints.sort();
+        *out.entry(endpoints.join(" + ")).or_default() += 1;
+    }
+    out
+}
+
+fn is_clockish(m: &Module, port: &str) -> bool {
+    matches!(
+        m.interface_of(port),
+        Some(Interface::Clock { .. }) | Some(Interface::Reset { .. })
+    )
+}
+
+fn walk(
+    d: &Design,
+    m: &Module,
+    path: &str,
+    bind: &BTreeMap<String, String>,
+    nets: &mut BTreeMap<String, Vec<String>>,
+    depth: usize,
+) {
+    if depth > 64 {
+        return; // recursion guard: DRC permits (degenerate) deep nesting
+    }
+    let key = |id: &str| {
+        bind.get(id)
+            .cloned()
+            .unwrap_or_else(|| format!("{path}/{id}"))
+    };
+    for inst in m.instances() {
+        let Some(child) = d.module(&inst.module_name) else {
+            continue;
+        };
+        if child.is_grouped() {
+            let mut child_bind = BTreeMap::new();
+            for c in &inst.connections {
+                if let ConnExpr::Id(id) = &c.value {
+                    child_bind.insert(c.port.clone(), key(id));
+                }
+            }
+            walk(
+                d,
+                child,
+                &format!("{path}/{}", inst.instance_name),
+                &child_bind,
+                nets,
+                depth + 1,
+            );
+        } else {
+            for c in &inst.connections {
+                let ConnExpr::Id(id) = &c.value else { continue };
+                if is_clockish(child, &c.port) {
+                    continue;
+                }
+                let width = child.port(&c.port).map(|p| p.width).unwrap_or(0);
+                nets.entry(key(id))
+                    .or_default()
+                    .push(format!("{}.{}#{}", child.name, c.port, width));
+            }
+        }
+    }
+}
+
+fn channel_diff(pre: &BTreeMap<String, usize>, post: &BTreeMap<String, usize>) -> String {
+    let missing: Vec<&str> = pre
+        .iter()
+        .filter(|(k, n)| post.get(k.as_str()) != Some(*n))
+        .map(|(k, _)| k.as_str())
+        .take(3)
+        .collect();
+    let added: Vec<&str> = post
+        .iter()
+        .filter(|(k, n)| pre.get(k.as_str()) != Some(*n))
+        .map(|(k, _)| k.as_str())
+        .take(3)
+        .collect();
+    format!(
+        "leaf channels changed: {} pre vs {} post; lost/changed: [{}]; gained/changed: [{}]",
+        pre.len(),
+        post.len(),
+        missing.join("; "),
+        added.join("; ")
+    )
+}
+
+/// The legacy string-keyed block-graph construction, kept verbatim as
+/// reference semantics: the in-tree `BlockGraph::build` is a view over
+/// the interned `ModuleConn`, so coherence must be judged against an
+/// implementation that shares no code with it (mirrors the gate in
+/// `tests/ir_index.rs`).
+pub fn reference_block_graph(m: &Module) -> BlockGraph {
+    let mut nets: BTreeMap<String, NetInfo> = BTreeMap::new();
+    for w in m.wires() {
+        nets.entry(w.name.clone()).or_default().width = w.width;
+    }
+    for p in &m.ports {
+        let e = nets.entry(p.name.clone()).or_default();
+        e.width = p.width;
+        e.endpoints.push(Endpoint::Parent {
+            port: p.name.clone(),
+        });
+    }
+    let mut instances = Vec::new();
+    for inst in m.instances() {
+        instances.push(inst.instance_name.clone());
+        for conn in &inst.connections {
+            if let ConnExpr::Id(id) = &conn.value {
+                nets.entry(id.clone())
+                    .or_default()
+                    .endpoints
+                    .push(Endpoint::Inst {
+                        inst: inst.instance_name.clone(),
+                        port: conn.port.clone(),
+                    });
+            }
+        }
+    }
+    BlockGraph { nets, instances }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{GroupedBuilder, LeafBuilder};
+
+    /// a0:A --hs--> mid(m0:M) --hs--> (exported), nested one level.
+    fn nested_sample() -> Design {
+        let mut d = Design::new("Top");
+        d.add(
+            LeafBuilder::verilog_stub("A")
+                .clk_rst()
+                .handshake("o", Dir::Out, 8)
+                .build(),
+        );
+        d.add(
+            LeafBuilder::verilog_stub("M")
+                .clk_rst()
+                .handshake("i", Dir::In, 8)
+                .build(),
+        );
+        let mid = GroupedBuilder::new("Mid")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .iface(Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            })
+            .port("s", Dir::In, 8)
+            .port("s_vld", Dir::In, 1)
+            .port("s_rdy", Dir::Out, 1)
+            .iface(Interface::Handshake {
+                name: "s".into(),
+                data: vec!["s".into()],
+                valid: "s_vld".into(),
+                ready: "s_rdy".into(),
+                clk: Some("ap_clk".into()),
+            })
+            .inst(
+                "m0",
+                "M",
+                &[
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                    ("i", "s"),
+                    ("i_vld", "s_vld"),
+                    ("i_rdy", "s_rdy"),
+                ],
+            )
+            .build();
+        d.add(mid);
+        let top = GroupedBuilder::new("Top")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .iface(Interface::Clock {
+                port: "ap_clk".into(),
+            })
+            .iface(Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            })
+            .wire("w", 8)
+            .wire("w_vld", 1)
+            .wire("w_rdy", 1)
+            .inst(
+                "a0",
+                "A",
+                &[
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                    ("o", "w"),
+                    ("o_vld", "w_vld"),
+                    ("o_rdy", "w_rdy"),
+                ],
+            )
+            .inst(
+                "mid",
+                "Mid",
+                &[
+                    ("ap_clk", "ap_clk"),
+                    ("ap_rst_n", "ap_rst_n"),
+                    ("s", "w"),
+                    ("s_vld", "w_vld"),
+                    ("s_rdy", "w_rdy"),
+                ],
+            )
+            .build();
+        d.add(top);
+        d
+    }
+
+    #[test]
+    fn leaf_channels_resolve_through_hierarchy() {
+        let d = nested_sample();
+        let ch = leaf_channels(&d);
+        // The a0.o -> (mid) m0.i handshake resolves to direct leaf pairs.
+        assert_eq!(ch.get("A.o#8 + M.i#8"), Some(&1), "{ch:?}");
+        assert_eq!(ch.get("A.o_vld#1 + M.i_vld#1"), Some(&1));
+        assert_eq!(ch.get("A.o_rdy#1 + M.i_rdy#1"), Some(&1));
+        // Clock/reset broadcast is excluded.
+        assert!(ch.keys().all(|k| !k.contains("ap_clk")), "{ch:?}");
+    }
+
+    #[test]
+    fn pipeline_preserves_nested_sample() {
+        let out = check_pipeline(&nested_sample());
+        assert!(out.is_clean(), "{}", out.render());
+    }
+
+    #[test]
+    fn dirty_input_reports_precondition() {
+        let mut d = nested_sample();
+        d.module_mut("Top")
+            .unwrap()
+            .instances_mut()
+            .push(Instance::new("ghost", "NoSuchModule"));
+        let out = check_pipeline(&d);
+        assert_eq!(out.violated(), vec!["input-drc"]);
+    }
+
+    #[test]
+    fn workers_equivalence_on_samples() {
+        let designs = vec![nested_sample(), nested_sample()];
+        let out = check_workers_equivalence(&designs);
+        assert!(out.is_clean(), "{}", out.render());
+    }
+}

@@ -23,7 +23,7 @@ pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Item) 
     for case in 0..cases {
         let input = gen.generate(&mut rng);
         if !prop(&input) {
-            let minimal = shrink_loop(gen, input, &prop);
+            let minimal = minimize(gen, input, &prop);
             panic!(
                 "property failed (seed={seed}, case={case});\nminimal counterexample: {minimal:#?}"
             );
@@ -31,8 +31,12 @@ pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Item) 
     }
 }
 
-fn shrink_loop<G: Gen>(gen: &G, mut failing: G::Item, prop: &impl Fn(&G::Item) -> bool) -> G::Item {
-    // Greedy descent: accept the first shrunken candidate that still fails.
+/// Greedily shrink a failing input: accept the first shrunken candidate
+/// that still fails the property, until no candidate fails (or a bounded
+/// number of descent steps is exhausted, which guarantees termination
+/// even for shrinkers that never converge). Shared by [`forall`] and the
+/// `rsir fuzz` counterexample minimizer.
+pub fn minimize<G: Gen>(gen: &G, mut failing: G::Item, prop: &impl Fn(&G::Item) -> bool) -> G::Item {
     'outer: for _ in 0..1000 {
         for cand in gen.shrink(&failing) {
             if !prop(&cand) {
@@ -139,5 +143,80 @@ mod tests {
             max_len: 5,
         };
         forall(4, 100, &g, |v| (2..=5).contains(&v.len()));
+    }
+
+    #[test]
+    fn minimize_is_greedy_to_exact_boundary() {
+        // From any failing start, the greedy descent must land exactly on
+        // the smallest failing value (90), not a mid-chain stop.
+        let g = UsizeGen { lo: 0, hi: 1000 };
+        let prop = |x: &usize| *x < 90;
+        for start in [90usize, 91, 250, 999] {
+            assert_eq!(minimize(&g, start, &prop), 90, "from {start}");
+        }
+    }
+
+    /// A shrinker that always proposes the unchanged item: the descent
+    /// must still terminate (bounded steps), returning the original.
+    struct Stubborn;
+    impl Gen for Stubborn {
+        type Item = usize;
+        fn generate(&self, rng: &mut Rng) -> usize {
+            rng.below(100)
+        }
+        fn shrink(&self, item: &usize) -> Vec<usize> {
+            vec![*item]
+        }
+    }
+
+    #[test]
+    fn minimize_terminates_on_non_converging_shrinker() {
+        assert_eq!(minimize(&Stubborn, 42, &|_| false), 42);
+    }
+
+    #[test]
+    fn generation_is_reproducible_from_seed() {
+        let g = VecGen {
+            inner: UsizeGen { lo: 0, hi: 999 },
+            min_len: 0,
+            max_len: 8,
+        };
+        let sample = |seed: u64| -> Vec<Vec<usize>> {
+            let mut rng = Rng::new(seed);
+            (0..20).map(|_| g.generate(&mut rng)).collect()
+        };
+        assert_eq!(sample(5), sample(5));
+        assert_ne!(sample(5), sample(6));
+    }
+
+    #[test]
+    fn vec_gen_shrink_candidates_respect_min_len() {
+        let g = VecGen {
+            inner: UsizeGen { lo: 0, hi: 9 },
+            min_len: 2,
+            max_len: 6,
+        };
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            for cand in g.shrink(&v) {
+                assert!(cand.len() >= 2, "candidate {cand:?} below min_len");
+            }
+        }
+    }
+
+    #[test]
+    fn forall_runs_are_deterministic() {
+        use std::cell::RefCell;
+        let record = |seed: u64| {
+            let seen = RefCell::new(Vec::new());
+            forall(seed, 50, &UsizeGen { lo: 0, hi: 500 }, |x| {
+                seen.borrow_mut().push(*x);
+                true
+            });
+            seen.into_inner()
+        };
+        assert_eq!(record(12), record(12));
+        assert_ne!(record(12), record(13));
     }
 }

@@ -4,7 +4,10 @@
 
 use rsir::coordinator::flow::{run_hlps, FlowConfig};
 use rsir::device::builtin;
+use rsir::ir::builder::LeafBuilder;
+use rsir::ir::core::{Design, Dir, Resources};
 use rsir::ir::validate;
+use rsir::passes::registry;
 
 fn quick() -> FlowConfig {
     FlowConfig {
@@ -88,6 +91,64 @@ fn flow_deterministic() {
         (r.optimized.fmax_mhz(), r.relay_stations, r.partitions)
     };
     assert_eq!(run(), run());
+}
+
+#[test]
+fn leaf_top_flow_degrades_with_typed_diagnostic_instead_of_panicking() {
+    // A design whose top is a leaf has no block graph: stage 4 must skip
+    // interconnect synthesis with a typed GraphError-backed diagnostic
+    // (this used to panic), and the rest of the flow must complete.
+    let mut d = Design::new("Solo");
+    d.add(
+        LeafBuilder::verilog_stub("Solo")
+            .clk_rst()
+            .handshake("i", Dir::In, 32)
+            .resource(Resources::new(500.0, 400.0, 1.0, 2.0, 0.0))
+            .build(),
+    );
+    let dev = builtin::by_name("u250").unwrap();
+    let report = run_hlps(&mut d, &dev, &quick()).expect("leaf-top flow must not fail");
+    assert_eq!(report.relay_stations, 0);
+    assert_eq!(report.partitions, 0);
+    let diag = report
+        .log
+        .iter()
+        .find(|l| l.contains("interconnect synthesis skipped"))
+        .expect("degraded-path diagnostic missing from flow log");
+    // The diagnostic is typed Error severity and carries the GraphError.
+    assert!(diag.starts_with("error:"), "{diag}");
+    assert!(diag.contains("leaf module 'Solo'"), "{diag}");
+    // The design is untouched structurally and still valid.
+    validate::assert_clean(&d);
+}
+
+#[test]
+fn pipeline_spec_errors_are_reported_with_context() {
+    // The `rsir pipeline <spec>` surface: every malformed spec must fail
+    // with an actionable message, never a panic or a late mystery error.
+    let msg = |spec: &str| registry::build(spec).unwrap_err().to_string();
+
+    let unknown = msg("definitely-not-a-pass");
+    assert!(unknown.contains("unknown pass 'definitely-not-a-pass'"), "{unknown}");
+    assert!(unknown.contains("registered:"), "{unknown}");
+
+    let no_arg = msg("flatten=x");
+    assert!(no_arg.contains("takes no argument"), "{no_arg}");
+
+    let missing_arg = msg("rebuild-module");
+    assert!(missing_arg.contains("requires an argument"), "{missing_arg}");
+
+    let bad_shape = msg("group=oops");
+    assert!(bad_shape.contains("PARENT/NAME"), "{bad_shape}");
+
+    let empty_name = msg("flatten,,rebuild");
+    assert!(empty_name.contains("empty pass name"), "{empty_name}");
+
+    let empty_arg = msg("rebuild-module=");
+    assert!(empty_arg.contains("empty argument"), "{empty_arg}");
+
+    // And a well-formed spec still builds.
+    assert_eq!(registry::build("flatten,iface-infer").unwrap().len(), 2);
 }
 
 #[test]
