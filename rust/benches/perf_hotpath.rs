@@ -8,16 +8,25 @@
 //! * `pjrt`       — the AOT-compiled Pallas kernel through the PJRT
 //!                  runtime (requires `make artifacts`).
 //!
-//! Also times the SA explorer end-to-end with CPU vs PJRT scoring, and a
-//! full `run_hlps` flow (the L3 hot path the coordinator actually runs).
+//! Also times the SA explorer: the incremental delta lane vs the
+//! full-rescoring baseline (same seed, asserted identical results,
+//! ≥ 5x speedup gate — the `BENCH_floorplan_sa.json` CI artifact), 1 vs
+//! N parallel chains, CPU vs PJRT scoring, and a full `run_hlps` flow
+//! (the L3 hot path the coordinator actually runs).
+//!
+//! `--sa-only` runs just the SA comparison; `--smoke` shrinks iteration
+//! counts for CI; `--out FILE` writes the SA stats as JSON.
 
 use rsir::coordinator::flow::{run_hlps, FlowConfig};
 use rsir::device::builtin;
-use rsir::floorplan::cost::{BatchEvaluator, CostModel, CpuEvaluator, DenseCpuEvaluator};
+use rsir::floorplan::cost::{
+    BatchEvaluator, CostModel, CpuEvaluator, DenseCpuEvaluator, FullRescore,
+};
 use rsir::floorplan::problem::{Problem, Unit, UnitEdge};
-use rsir::floorplan::sa::{anneal, SaConfig};
+use rsir::floorplan::sa::{anneal, SaConfig, SaResult};
 use rsir::ir::core::Resources;
 use rsir::util::bench::bench;
+use rsir::util::json::{Json, JsonObj};
 use rsir::util::rng::Rng;
 
 fn synth_problem(n: usize, seed: u64) -> Problem {
@@ -60,10 +69,114 @@ fn synth_problem(n: usize, seed: u64) -> Problem {
     }
 }
 
+/// The incremental-vs-full-rescore SA comparison: identical seeds and
+/// therefore (asserted) identical results, wall-clock compared, 1 vs N
+/// workers, results written to `out` and gated at ≥ 5x.
+fn sa_delta_section(smoke: bool, out: Option<&str>) {
+    let dev = builtin::by_name("u280").unwrap();
+    let m = 240usize;
+    let steps = if smoke { 40 } else { 120 };
+    let runs = if smoke { 3 } else { 5 };
+    let par_workers = 4usize;
+    println!("== SA scoring: full re-score vs incremental delta (M={m}, {steps} steps) ==");
+    let p = synth_problem(m, 17);
+    let model = CostModel::build(&p, &dev, 0.7, 1e-4);
+    let sa_cfg = SaConfig {
+        steps,
+        ..Default::default()
+    };
+
+    let mut full = FullRescore(CpuEvaluator {
+        model: model.clone(),
+    });
+    let mut inc = CpuEvaluator {
+        model: model.clone(),
+    };
+    // Same seed ⇒ the two lanes must agree exactly before we time them.
+    let r_full = anneal(&p, &dev, &mut full, None, &sa_cfg);
+    let r_inc = anneal(&p, &dev, &mut inc, None, &sa_cfg);
+    assert_results_identical(&r_full, &r_inc, "incremental vs full-rescore");
+    let par_cfg = SaConfig {
+        workers: par_workers,
+        ..sa_cfg.clone()
+    };
+    let r_par = anneal(&p, &dev, &mut inc, None, &par_cfg);
+    assert_results_identical(&r_inc, &r_par, "1 vs N workers");
+
+    let full_stats = bench(&format!("sa full-rescore   M={m}"), 1, runs, || {
+        anneal(&p, &dev, &mut full, None, &sa_cfg).best_cost
+    });
+    let inc_stats = bench(&format!("sa incremental    M={m}"), 1, runs, || {
+        anneal(&p, &dev, &mut inc, None, &sa_cfg).best_cost
+    });
+    let par_stats = bench(&format!("sa incremental w={par_workers}"), 1, runs, || {
+        anneal(&p, &dev, &mut inc, None, &par_cfg).best_cost
+    });
+    let speedup = full_stats.median.as_secs_f64() / inc_stats.median.as_secs_f64().max(1e-12);
+    println!("speedup (full-rescore median / incremental median): {speedup:.1}x");
+
+    if let Some(path) = out {
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::str("floorplan_sa"));
+        o.insert("units", Json::num(m as f64));
+        o.insert("edges", Json::num(p.edges.len() as f64));
+        o.insert("steps", Json::num(steps as f64));
+        o.insert("population", Json::num(sa_cfg.population as f64));
+        o.insert("proposals", Json::num(sa_cfg.proposals as f64));
+        o.insert("runs", Json::num(runs as f64));
+        o.insert("smoke", Json::Bool(smoke));
+        o.insert(
+            "full_rescore_median_ns",
+            Json::num(full_stats.median.as_nanos() as f64),
+        );
+        o.insert(
+            "incremental_median_ns",
+            Json::num(inc_stats.median.as_nanos() as f64),
+        );
+        o.insert("parallel_workers", Json::num(par_workers as f64));
+        o.insert(
+            "parallel_median_ns",
+            Json::num(par_stats.median.as_nanos() as f64),
+        );
+        o.insert("speedup", Json::num(speedup));
+        std::fs::write(path, Json::Obj(o).pretty()).unwrap();
+        println!("wrote {path}");
+    }
+    assert!(
+        speedup >= 5.0,
+        "incremental SA must beat full re-scoring >=5x (got {speedup:.2}x)"
+    );
+}
+
+fn assert_results_identical(a: &SaResult, b: &SaResult, what: &str) {
+    assert_eq!(a.best, b.best, "{what}: best diverged");
+    assert_eq!(
+        a.best_cost.to_bits(),
+        b.best_cost.to_bits(),
+        "{what}: best_cost diverged"
+    );
+    assert_eq!(a.trace, b.trace, "{what}: trace diverged");
+    assert_eq!(a.evaluated, b.evaluated, "{what}: evaluated diverged");
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let sa_only = args.iter().any(|a| a == "--sa-only");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    sa_delta_section(smoke, out.as_deref());
+    if sa_only {
+        println!("\nperf_hotpath bench complete (SA section only)");
+        return;
+    }
+
     let dev = builtin::by_name("u280").unwrap();
     let have_artifacts = rsir::runtime::artifacts_dir().join("manifest.json").exists();
-    println!("== batched candidate scoring (B = 1024) ==");
+    println!("\n== batched candidate scoring (B = 1024) ==");
     for n in [24usize, 60, 120] {
         let p = synth_problem(n, 7);
         let model = CostModel::build(&p, &dev, 0.7, 1e-4);

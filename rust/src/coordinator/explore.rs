@@ -24,6 +24,13 @@ pub struct ExploreRow {
 /// Run the HLPS flow once per utilization limit — one pool job per sweep
 /// point, each on a fresh clone of the design — and collect the Pareto
 /// trade-off rows of Figure 12 in sweep order.
+///
+/// `base_cfg` is cloned per point with only `util_limit` overridden, so
+/// the SA knobs (`base_cfg.sa`, including the `workers` parallel-chains
+/// width) apply to every point's refinement identically. Note the two
+/// parallelism levels compose: `pool` fans out sweep points while
+/// `base_cfg.sa.workers` fans out chains *within* each point — both are
+/// pure wall-clock knobs that never change any row.
 pub fn explore(
     design: &Design,
     dev: &VirtualDevice,

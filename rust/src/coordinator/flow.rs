@@ -35,6 +35,10 @@ pub struct FlowConfig {
     pub ilp: IlpFpConfig,
     /// Refine the ILP floorplan with batched SA.
     pub sa_refine: bool,
+    /// SA knobs, including `SaConfig::workers` — the incremental lane's
+    /// parallel-chains width (CLI `--sa-workers`; results are identical
+    /// for any value). Flows through `coordinator::explore` untouched,
+    /// so every Figure-12 sweep point anneals with the same settings.
     pub sa: SaConfig,
     /// Use the PJRT-compiled Pallas kernel for SA scoring (falls back to
     /// the CPU oracle when artifacts are missing).
@@ -241,6 +245,13 @@ pub fn run_hlps(
             &mut cpu_holder
         };
         evaluator_used = evaluator.name();
+        // `workers` only applies to the incremental lane; batch-only
+        // evaluators (PJRT) anneal through the single-launch lane.
+        let sa_lane = if evaluator.cost_model().is_some() {
+            format!("{} sa worker(s)", cfg.sa.workers.max(1))
+        } else {
+            "batched lane".to_string()
+        };
         let sa_res = sa::anneal(&problem, dev, evaluator, Some(&unit_slots), &cfg.sa);
         // Accept SA only if it beats the ILP solution on the same metric
         // and stays feasible per-slot.
@@ -250,8 +261,8 @@ pub fn run_hlps(
         let ilp_cost = chk.evaluate(&[unit_slots.clone()])[0];
         if sa_res.best_cost < ilp_cost && feasible(&problem, &sa_res.best, dev, cfg.util_limit) {
             ctx.log(format!(
-                "sa refine: {} -> {} ({} candidates via {})",
-                ilp_cost, sa_res.best_cost, sa_res.evaluated, evaluator_used
+                "sa refine: {} -> {} ({} candidates via {}, {})",
+                ilp_cost, sa_res.best_cost, sa_res.evaluated, evaluator_used, sa_lane
             ));
             unit_slots = sa_res.best;
         }

@@ -15,6 +15,14 @@
 //! The wirelength term uses the identity
 //! `Σᵢⱼ C[i,j]·(A D Aᵀ)[i,j] = Σ (C@A) ⊙ (A@D)` — two MXU matmuls per
 //! candidate instead of a gather.
+//!
+//! Besides the dense/batched form (the Pallas kernel's math) and the
+//! sparse scalar form (`cost_scalar`), the model carries a per-unit CSR
+//! adjacency that powers [`ScoredState`]: a candidate plus its cached
+//! wirelength, per-slot resource usage and per-slot penalty terms, on
+//! which a move/swap costs O(deg(u) + S·K) instead of a full re-score.
+//! This is the SA explorer's fast lane; see the module docs on
+//! [`ScoredState`] for the exactness contract.
 
 use crate::device::model::VirtualDevice;
 use crate::floorplan::problem::Problem;
@@ -38,6 +46,13 @@ pub struct CostModel {
     pub lambda: f32,
     /// Sparse (i, j, weight) upper-triangle edges — the CPU fast path.
     pub edges_sparse: Vec<(u32, u32, f32)>,
+    /// CSR row offsets of the per-unit adjacency (`m_real + 1` entries).
+    pub adj_off: Vec<u32>,
+    /// CSR neighbor unit per adjacency entry (each undirected edge
+    /// appears in both endpoints' rows).
+    pub adj_unit: Vec<u32>,
+    /// CSR edge weight per adjacency entry (same order as `adj_unit`).
+    pub adj_w: Vec<f32>,
 }
 
 impl CostModel {
@@ -87,6 +102,32 @@ impl CostModel {
                 }
             }
         }
+        // CSR adjacency over the same aggregated edges: the delta
+        // evaluator walks one unit's row per move.
+        let mut deg = vec![0u32; m_real];
+        for &(a, b, _) in &edges_sparse {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut adj_off = Vec::with_capacity(m_real + 1);
+        let mut acc = 0u32;
+        adj_off.push(0);
+        for d in &deg {
+            acc += d;
+            adj_off.push(acc);
+        }
+        let mut cursor: Vec<u32> = adj_off[..m_real].to_vec();
+        let mut adj_unit = vec![0u32; acc as usize];
+        let mut adj_w = vec![0f32; acc as usize];
+        for &(a, b, c) in &edges_sparse {
+            let (ai, bi) = (a as usize, b as usize);
+            adj_unit[cursor[ai] as usize] = b;
+            adj_w[cursor[ai] as usize] = c;
+            cursor[ai] += 1;
+            adj_unit[cursor[bi] as usize] = a;
+            adj_w[cursor[bi] as usize] = c;
+            cursor[bi] += 1;
+        }
         CostModel {
             m,
             m_real,
@@ -97,6 +138,9 @@ impl CostModel {
             caps,
             lambda,
             edges_sparse,
+            adj_off,
+            adj_unit,
+            adj_w,
         }
     }
 
@@ -135,6 +179,27 @@ impl CostModel {
             pen += over * over;
         }
         wl + self.lambda * pen
+    }
+
+    /// Clone everything the sparse/delta scoring paths read, leaving the
+    /// dense `conn` matrix empty: `cost_scalar` and [`ScoredState`]
+    /// never touch it, so the SA lanes avoid an O(m²) copy per anneal.
+    /// Not suitable for `onehot`/`cost_batch` (the dense oracle).
+    pub(crate) fn sparse_clone(&self) -> CostModel {
+        CostModel {
+            m: self.m,
+            m_real: self.m_real,
+            s: self.s,
+            conn: Vec::new(),
+            dist: self.dist.clone(),
+            res: self.res.clone(),
+            caps: self.caps.clone(),
+            lambda: self.lambda,
+            edges_sparse: self.edges_sparse.clone(),
+            adj_off: self.adj_off.clone(),
+            adj_unit: self.adj_unit.clone(),
+            adj_w: self.adj_w.clone(),
+        }
     }
 
     /// Batched cost via the matmul identity — numerically the same
@@ -196,10 +261,276 @@ fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     }
 }
 
+/// Max (unit, slot) writes one SA proposal can carry: two mutation
+/// rounds, each at worst a swap (two writes).
+pub const PROPOSAL_MAX_MOVES: usize = 4;
+
+/// One SA proposal relative to some base assignment: a short ordered
+/// list of `(unit, new_slot)` writes. Later writes to the same unit win,
+/// exactly as if they were applied to a mutable candidate in sequence.
+///
+/// `Copy` and fixed-size on purpose: a step's proposals live in one flat
+/// scratch buffer that is reused across steps — no per-proposal `Vec`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Proposal {
+    moves: [(u32, u32); PROPOSAL_MAX_MOVES],
+    len: u8,
+}
+
+impl Proposal {
+    /// Append a `(unit, new_slot)` write.
+    pub fn push(&mut self, unit: u32, slot: u32) {
+        assert!(
+            (self.len as usize) < PROPOSAL_MAX_MOVES,
+            "proposal overflow"
+        );
+        self.moves[self.len as usize] = (unit, slot);
+        self.len += 1;
+    }
+
+    /// The writes recorded so far, in application order.
+    pub fn moves(&self) -> &[(u32, u32)] {
+        &self.moves[..self.len as usize]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Effective slot of `unit` once this proposal is applied over `base`
+    /// (the view mutation generators use to stack moves).
+    pub fn slot_of(&self, unit: usize, base: &[usize]) -> usize {
+        self.moves()
+            .iter()
+            .rev()
+            .find(|(u, _)| *u as usize == unit)
+            .map(|(_, s)| *s as usize)
+            .unwrap_or(base[unit])
+    }
+
+    /// Expand to a full candidate over `base` (the slow-lane form fed to
+    /// batch evaluators).
+    pub fn materialize(&self, base: &[usize]) -> Vec<usize> {
+        let mut cand = base.to_vec();
+        for &(u, s) in self.moves() {
+            cand[u as usize] = s as usize;
+        }
+        cand
+    }
+}
+
+/// A candidate assignment plus the cached terms of its cost: wirelength,
+/// per-slot resource usage `[S×K]` and per-slot relu² penalty terms.
+/// `apply_move`/`apply_swap` update the caches in O(deg(u) + S·K) — the
+/// CSR row of the moved unit, the two affected slots' K resource kinds
+/// and penalty terms, and one flat re-fold of the S·K penalty terms —
+/// instead of the O(edges + units·K) full re-score.
+///
+/// §Exactness contract. `ScoredState::new(model, a).cost(model)` is
+/// **bit-identical** to `model.cost_scalar(&a)` for any assignment: the
+/// wirelength fold iterates `edges_sparse` in the same order and the
+/// penalty folds the S·K term array flat, associating exactly like
+/// `cost_scalar`'s loop. After incremental updates the costs stay
+/// bit-identical whenever the inputs are "exact-friendly" — integral
+/// resource values, widths and die weights whose intermediate sums stay
+/// below 2²⁴ (every in-tree problem and generator qualifies), because
+/// then every f32 add/subtract is exact and order-independent. For
+/// arbitrary real-valued inputs the cached cost can drift by f32
+/// rounding; the property tests pin it within relative 1e-3 of
+/// `cost_scalar` under arbitrary move/swap/revert sequences.
+///
+/// Uncommitted changes are journaled: `revert` undoes everything since
+/// the last `commit` (or construction), which is how the SA fast lane
+/// scores a proposal and puts the chain back, in O(moves · deg).
+#[derive(Debug, Clone)]
+pub struct ScoredState {
+    assign: Vec<usize>,
+    wl: f32,
+    /// Per-slot resource usage, row-major `[S×K]`.
+    usage: Vec<f32>,
+    /// Per-slot-per-kind relu² penalty terms, flat `[S×K]` — kept as
+    /// terms (not a per-slot scalar) so the total re-folds in the exact
+    /// order `cost_scalar` uses.
+    pen_terms: Vec<f32>,
+    pen_sum: f32,
+    /// (unit, previous slot) undo log since the last commit.
+    journal: Vec<(u32, u32)>,
+}
+
+impl ScoredState {
+    /// Full O(edges + units·K) scoring of `assign` — done once per chain;
+    /// everything after is incremental.
+    pub fn new(model: &CostModel, assign: Vec<usize>) -> ScoredState {
+        assert_eq!(assign.len(), model.m_real, "assignment arity");
+        let mut wl = 0f32;
+        for &(i, j, c) in &model.edges_sparse {
+            wl += c * model.dist[assign[i as usize] * model.s + assign[j as usize]];
+        }
+        let mut usage = vec![0f32; model.s * NUM_KINDS];
+        for (i, &slot) in assign.iter().enumerate() {
+            for k in 0..NUM_KINDS {
+                usage[slot * NUM_KINDS + k] += model.res[i * NUM_KINDS + k];
+            }
+        }
+        let mut pen_terms = vec![0f32; model.s * NUM_KINDS];
+        for ((t, u), c) in pen_terms.iter_mut().zip(&usage).zip(&model.caps) {
+            let over = (u - c).max(0.0);
+            *t = over * over;
+        }
+        let pen_sum = pen_terms.iter().sum();
+        ScoredState {
+            assign,
+            wl,
+            usage,
+            pen_terms,
+            pen_sum,
+            journal: Vec::new(),
+        }
+    }
+
+    /// The candidate this state scores.
+    pub fn assignment(&self) -> &[usize] {
+        &self.assign
+    }
+
+    /// Cached cost — the same `wl + λ·pen` expression as `cost_scalar`.
+    pub fn cost(&self, model: &CostModel) -> f32 {
+        self.wl + model.lambda * self.pen_sum
+    }
+
+    /// Move `unit` to `new_slot`, journaling the old slot for `revert`.
+    pub fn apply_move(&mut self, model: &CostModel, unit: usize, new_slot: usize) {
+        let old = self.assign[unit];
+        self.journal.push((unit as u32, old as u32));
+        if old != new_slot {
+            self.shift(model, unit, old, new_slot);
+        }
+    }
+
+    /// Swap the slots of `a` and `b` (two journaled moves).
+    pub fn apply_swap(&mut self, model: &CostModel, a: usize, b: usize) {
+        let (sa, sb) = (self.assign[a], self.assign[b]);
+        self.apply_move(model, a, sb);
+        self.apply_move(model, b, sa);
+    }
+
+    /// Apply every write of `proposal` in order.
+    pub fn apply(&mut self, model: &CostModel, proposal: &Proposal) {
+        for &(u, s) in proposal.moves() {
+            self.apply_move(model, u as usize, s as usize);
+        }
+    }
+
+    /// Keep the applied changes: clears the undo journal.
+    pub fn commit(&mut self) {
+        self.journal.clear();
+    }
+
+    /// Undo everything since the last `commit` (inverse moves, newest
+    /// first), restoring assignment and cached terms.
+    pub fn revert(&mut self, model: &CostModel) {
+        while let Some((u, old)) = self.journal.pop() {
+            let (u, old) = (u as usize, old as usize);
+            let cur = self.assign[u];
+            if cur != old {
+                self.shift(model, u, cur, old);
+            }
+        }
+    }
+
+    /// The O(deg + S·K) cache update for one unit changing slot.
+    fn shift(&mut self, model: &CostModel, unit: usize, from: usize, to: usize) {
+        let s = model.s;
+        // Wirelength: only edges incident to `unit` change; each term is
+        // removed at the old distance and re-added at the new one.
+        for e in model.adj_off[unit] as usize..model.adj_off[unit + 1] as usize {
+            let v = model.adj_unit[e] as usize;
+            let w = model.adj_w[e];
+            let sv = self.assign[v];
+            self.wl -= w * model.dist[from * s + sv];
+            self.wl += w * model.dist[to * s + sv];
+        }
+        self.assign[unit] = to;
+        // Usage and penalty terms: only the two affected slots.
+        for k in 0..NUM_KINDS {
+            self.usage[from * NUM_KINDS + k] -= model.res[unit * NUM_KINDS + k];
+            self.usage[to * NUM_KINDS + k] += model.res[unit * NUM_KINDS + k];
+        }
+        for slot in [from, to] {
+            for k in 0..NUM_KINDS {
+                let i = slot * NUM_KINDS + k;
+                let over = (self.usage[i] - model.caps[i]).max(0.0);
+                self.pen_terms[i] = over * over;
+            }
+        }
+        // Re-fold flat so the sum associates exactly like cost_scalar's
+        // sequential loop (bit-parity; see the exactness contract above).
+        self.pen_sum = self.pen_terms.iter().sum();
+    }
+}
+
+/// Score each proposal against `state` via the delta path — apply, read,
+/// revert — leaving `state` (which must have no uncommitted changes)
+/// as it was. Shared by `CpuEvaluator`'s `evaluate_deltas` override and
+/// the parallel annealing lane; `out` is a reusable scratch buffer.
+pub fn score_deltas_into(
+    model: &CostModel,
+    state: &mut ScoredState,
+    proposals: &[Proposal],
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    for p in proposals {
+        state.apply(model, p);
+        out.push(state.cost(model));
+        state.revert(model);
+    }
+}
+
 /// Batch evaluator abstraction: CPU oracle or the PJRT executable.
 pub trait BatchEvaluator {
     /// Evaluate a batch of candidates (slot id per real unit each).
     fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32>;
+
+    /// Score `proposals`, each a small move-set on top of `state`'s
+    /// current assignment, into the reusable `out` buffer, without
+    /// committing any of them. The default materializes full candidates
+    /// and defers to [`evaluate`] in one batched call; CPU
+    /// implementations override this with the O(deg + K) delta path.
+    ///
+    /// This is the annealer's scoring entry point whenever
+    /// [`cost_model`] returns `Some` and `SaConfig::workers <= 1` (the
+    /// default). With `workers > 1` chains are scored across the pool
+    /// through the shared [`score_deltas_into`] routine instead —
+    /// overrides are bypassed there, so an override must agree with the
+    /// delta path over the exposed model (within f32 tolerance).
+    ///
+    /// [`evaluate`]: BatchEvaluator::evaluate
+    /// [`cost_model`]: BatchEvaluator::cost_model
+    fn evaluate_deltas(
+        &mut self,
+        state: &mut ScoredState,
+        proposals: &[Proposal],
+        out: &mut Vec<f32>,
+    ) {
+        let batch: Vec<Vec<usize>> = proposals
+            .iter()
+            .map(|p| p.materialize(state.assignment()))
+            .collect();
+        *out = self.evaluate(&batch);
+    }
+
+    /// The CPU-resident cost model, when scoring is a pure function of
+    /// it. `Some` opts the SA explorer into the incremental lane:
+    /// persistent per-chain [`ScoredState`]s, scored through
+    /// `evaluate_deltas` serially or across the pool when
+    /// `SaConfig::workers > 1`. `None` (the default, and the dense/PJRT
+    /// answer) keeps the batched lane — one `evaluate` launch per
+    /// step — untouched.
+    fn cost_model(&self) -> Option<&CostModel> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -219,8 +550,41 @@ impl BatchEvaluator for CpuEvaluator {
     fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32> {
         batch.iter().map(|c| self.model.cost_scalar(c)).collect()
     }
+
+    /// The fast lane: O(deg + K) per proposal instead of a full
+    /// re-score. `state` must have been built against `self.model` (or
+    /// a value-identical clone of it).
+    fn evaluate_deltas(
+        &mut self,
+        state: &mut ScoredState,
+        proposals: &[Proposal],
+        out: &mut Vec<f32>,
+    ) {
+        score_deltas_into(&self.model, state, proposals, out);
+    }
+
+    fn cost_model(&self) -> Option<&CostModel> {
+        Some(&self.model)
+    }
+
     fn name(&self) -> &'static str {
         "cpu"
+    }
+}
+
+/// Forces any evaluator through the batched full-rescore lane by hiding
+/// its cost model and delta path: every proposal is materialized and
+/// scored from scratch. This is the differential baseline the
+/// incremental path is asserted bit-identical against (tests and the
+/// `perf_hotpath` SA bench), never the flow's default.
+pub struct FullRescore<E: BatchEvaluator>(pub E);
+
+impl<E: BatchEvaluator> BatchEvaluator for FullRescore<E> {
+    fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32> {
+        self.0.evaluate(batch)
+    }
+    fn name(&self) -> &'static str {
+        "full-rescore"
     }
 }
 
@@ -332,6 +696,141 @@ mod tests {
         let batched = cm.cost_batch(&a, 1)[0];
         let scalar = cm.cost_scalar(&cand);
         assert!((batched - scalar).abs() <= 1e-3 * scalar.max(1.0));
+    }
+
+    #[test]
+    fn csr_adjacency_mirrors_sparse_edges() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = problem(13);
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        assert_eq!(cm.adj_off.len(), cm.m_real + 1);
+        assert_eq!(*cm.adj_off.last().unwrap() as usize, 2 * cm.edges_sparse.len());
+        // Every undirected edge appears in both endpoints' rows with the
+        // same weight.
+        for &(a, b, c) in &cm.edges_sparse {
+            for (u, v) in [(a, b), (b, a)] {
+                let row = cm.adj_off[u as usize] as usize..cm.adj_off[u as usize + 1] as usize;
+                let hit = row
+                    .clone()
+                    .any(|e| cm.adj_unit[e] == v && cm.adj_w[e] == c);
+                assert!(hit, "edge ({a},{b},{c}) missing from row of {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn scored_state_initial_cost_is_bitwise_cost_scalar() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = problem(13);
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let mut rng = Rng::new(21);
+        for _ in 0..32 {
+            let cand: Vec<usize> = (0..13).map(|_| rng.below(cm.s)).collect();
+            let st = ScoredState::new(&cm, cand.clone());
+            assert_eq!(st.cost(&cm).to_bits(), cm.cost_scalar(&cand).to_bits());
+        }
+    }
+
+    #[test]
+    fn scored_state_tracks_moves_swaps_and_reverts() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = problem(16);
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let mut rng = Rng::new(33);
+        let mut st = ScoredState::new(&cm, vec![0; 16]);
+        let mut committed: Vec<usize> = st.assignment().to_vec();
+        for round in 0..300 {
+            match rng.below(4) {
+                0 => {
+                    let u = rng.below(16);
+                    st.apply_move(&cm, u, rng.below(cm.s));
+                }
+                1 => {
+                    let a = rng.below(16);
+                    let b = (a + 1 + rng.below(15)) % 16;
+                    st.apply_swap(&cm, a, b);
+                }
+                2 => {
+                    st.commit();
+                    committed = st.assignment().to_vec();
+                }
+                _ => {
+                    st.revert(&cm);
+                    assert_eq!(st.assignment(), &committed[..], "revert at {round}");
+                }
+            }
+            let want = cm.cost_scalar(st.assignment());
+            let got = st.cost(&cm);
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "round {round}: cached {got} vs rescored {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn evaluate_deltas_override_matches_default_full_rescore() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = problem(12);
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let mut rng = Rng::new(9);
+        let base: Vec<usize> = (0..12).map(|_| rng.below(cm.s)).collect();
+        let mut proposals = Vec::new();
+        for _ in 0..64 {
+            let mut pr = Proposal::default();
+            for _ in 0..1 + rng.below(2) {
+                pr.push(rng.below(12) as u32, rng.below(cm.s) as u32);
+            }
+            proposals.push(pr);
+        }
+        let mut fast = CpuEvaluator { model: cm.clone() };
+        let mut slow = FullRescore(CpuEvaluator { model: cm.clone() });
+        let mut st_fast = ScoredState::new(&cm, base.clone());
+        let mut st_slow = ScoredState::new(&cm, base.clone());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        fast.evaluate_deltas(&mut st_fast, &proposals, &mut a);
+        slow.evaluate_deltas(&mut st_slow, &proposals, &mut b);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() <= 1e-3 * y.abs().max(1.0),
+                "delta {x} vs full {y}"
+            );
+        }
+        // Scoring must leave the states untouched.
+        assert_eq!(st_fast.assignment(), &base[..]);
+        assert_eq!(st_fast.cost(&cm).to_bits(), cm.cost_scalar(&base).to_bits());
+    }
+
+    #[test]
+    fn sparse_clone_scores_identically_without_dense_matrix() {
+        let dev = builtin::by_name("u280").unwrap();
+        let p = problem(13);
+        let cm = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let sc = cm.sparse_clone();
+        assert!(sc.conn.is_empty());
+        let mut rng = Rng::new(2);
+        for _ in 0..16 {
+            let cand: Vec<usize> = (0..13).map(|_| rng.below(cm.s)).collect();
+            let want = cm.cost_scalar(&cand);
+            assert_eq!(sc.cost_scalar(&cand).to_bits(), want.to_bits());
+            let st = ScoredState::new(&sc, cand);
+            assert_eq!(st.cost(&sc).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn proposal_view_and_materialize_agree() {
+        let base = vec![3usize, 1, 4, 1, 5];
+        let mut p = Proposal::default();
+        assert!(p.is_empty());
+        p.push(0, 7);
+        p.push(2, 2);
+        p.push(0, 6); // later write to unit 0 wins
+        assert_eq!(p.slot_of(0, &base), 6);
+        assert_eq!(p.slot_of(2, &base), 2);
+        assert_eq!(p.slot_of(4, &base), 5);
+        assert_eq!(p.materialize(&base), vec![6, 1, 2, 1, 5]);
     }
 
     #[test]

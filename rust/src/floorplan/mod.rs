@@ -1,5 +1,6 @@
 //! Floorplanning: the AutoBridge ILP formulation, the batched cost model
-//! (CPU oracle of the Pallas kernel), and the simulated-annealing
+//! (CPU oracle of the Pallas kernel) with its incremental delta
+//! evaluator ([`cost::ScoredState`]), and the simulated-annealing
 //! explorer used for design-space exploration (Fig 12).
 
 pub mod autobridge;
@@ -8,6 +9,8 @@ pub mod problem;
 pub mod sa;
 
 pub use autobridge::{solve, FloorplanResult, IlpFpConfig};
-pub use cost::{BatchEvaluator, CostModel, CpuEvaluator};
+pub use cost::{
+    BatchEvaluator, CostModel, CpuEvaluator, DenseCpuEvaluator, FullRescore, Proposal, ScoredState,
+};
 pub use problem::{Problem, Unit, UnitEdge};
 pub use sa::{anneal, SaConfig, SaResult};

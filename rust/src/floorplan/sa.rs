@@ -1,27 +1,47 @@
-//! Batched simulated-annealing floorplan explorer.
+//! Simulated-annealing floorplan explorer with an incremental fast lane.
 //!
 //! Used by the Figure-12 design-space exploration and as a refinement /
-//! fallback around the ILP: a population of candidate assignments is
-//! mutated and re-scored *in batches* through a [`BatchEvaluator`] — the
-//! CPU oracle or the AOT-compiled Pallas kernel via PJRT. Batching is
-//! what makes the accelerator offload worthwhile: one `evaluate` call
-//! scores `population × proposals` candidates in a single device launch.
+//! fallback around the ILP. Chains are persistent [`ScoredState`]s
+//! mutated in place; each proposal changes 1–2 unit assignments and is
+//! scored in O(deg + K) through the delta path (`apply` → `cost` →
+//! `revert`) instead of a full O(edges + units×kinds) re-score.
+//!
+//! Two scoring lanes, selected by [`BatchEvaluator::cost_model`]:
+//!
+//! * **Incremental** (CPU): every chain is an independent job — its own
+//!   seeded RNG stream ([`Rng::stream`]), its own `ScoredState` — run
+//!   start-to-finish on the `util::pool` work-stealing executor.
+//!   Results are byte-identical for any `SaConfig::workers` value.
+//! * **Batched** (dense oracle / PJRT): the historical contract — one
+//!   `evaluate` launch scores `population × proposals` materialized
+//!   candidates per step, which is what makes the accelerator offload
+//!   worthwhile. Chains draw from the same per-chain RNG streams, so
+//!   with a bit-exact evaluator both lanes produce identical results
+//!   (asserted by `tests/floorplan_sa.rs`).
 
 use crate::device::model::VirtualDevice;
-use crate::floorplan::cost::BatchEvaluator;
+use crate::floorplan::cost::{score_deltas_into, BatchEvaluator, CostModel, Proposal, ScoredState};
 use crate::floorplan::problem::Problem;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
+use std::cmp::Ordering;
 
 #[derive(Debug, Clone)]
 pub struct SaConfig {
     pub seed: u64,
     /// Parallel annealing chains.
     pub population: usize,
-    /// Proposals per chain per step (all scored in one batch).
+    /// Proposals per chain per step (all scored per chain, best picked).
     pub proposals: usize,
     pub steps: usize,
     pub t0: f64,
     pub cooling: f64,
+    /// Pool workers the incremental lane spreads chains across (clamped
+    /// to ≥ 1). Purely a wall-clock knob: chains own independent RNG
+    /// streams, so results are byte-identical for any value. Defaults to
+    /// 1 because the coordinator already parallelizes across flows
+    /// (Table 2 rows, Figure 12 sweep points).
+    pub workers: usize,
 }
 
 impl Default for SaConfig {
@@ -33,6 +53,7 @@ impl Default for SaConfig {
             steps: 300,
             t0: 2_000.0,
             cooling: 0.97,
+            workers: 1,
         }
     }
 }
@@ -47,8 +68,31 @@ pub struct SaResult {
     pub trace: Vec<f32>,
 }
 
-/// Run batched SA. `initial` seeds chain 0 (e.g. the ILP solution);
-/// remaining chains start random. Pinned units never move.
+/// Everything one chain learned, merged deterministically afterwards.
+struct ChainOut {
+    best: Vec<usize>,
+    best_cost: f32,
+    /// Step at which `best_cost` was first reached (0 = the initial
+    /// assignment) — the merge tie-breaker that keeps the winner
+    /// independent of execution order.
+    best_step: usize,
+    trace: Vec<f32>,
+    evaluated: usize,
+}
+
+/// Shared read-only context of the incremental lanes.
+struct ChainCtx<'a> {
+    problem: &'a Problem,
+    model: &'a CostModel,
+    movable: &'a [usize],
+    cfg: &'a SaConfig,
+    ns: usize,
+}
+
+/// Run SA. `initial` seeds chain 0 (e.g. the ILP solution); remaining
+/// chains start random. Pinned units never move. Deterministic for a
+/// given `cfg.seed` regardless of `cfg.workers` or the evaluator lane
+/// (given a bit-exact evaluator).
 pub fn anneal(
     problem: &Problem,
     dev: &VirtualDevice,
@@ -56,108 +100,302 @@ pub fn anneal(
     initial: Option<&[usize]>,
     cfg: &SaConfig,
 ) -> SaResult {
-    let nu = problem.units.len();
     let ns = dev.num_slots();
-    let mut rng = Rng::new(cfg.seed);
-    let movable: Vec<usize> = (0..nu)
+    let movable: Vec<usize> = (0..problem.units.len())
         .filter(|&u| problem.units[u].fixed_slot.is_none())
         .collect();
+    // Clone the sparse scoring view out of the evaluator so it stays
+    // callable (the serial delta lane keeps scoring through
+    // `evaluate_deltas` on it) — O(m + E), the dense matrix is skipped.
+    let model = evaluator.cost_model().map(CostModel::sparse_clone);
+    if let Some(model) = model {
+        debug_assert_eq!(model.m_real, problem.units.len(), "model/problem mismatch");
+        let ctx = ChainCtx {
+            problem,
+            model: &model,
+            movable: &movable,
+            cfg,
+            ns,
+        };
+        if cfg.workers.max(1) > 1 {
+            return anneal_incremental(&ctx, initial);
+        }
+        return anneal_delta_serial(&ctx, evaluator, initial);
+    }
+    anneal_batched(problem, evaluator, &movable, initial, cfg, ns)
+}
 
-    // Initial population.
-    let mut chains: Vec<Vec<usize>> = (0..cfg.population)
-        .map(|c| {
+/// The parallel fast lane (`workers > 1`): chains are independent pool
+/// jobs scored through the shared [`score_deltas_into`] delta routine —
+/// per-evaluator `evaluate_deltas` overrides are bypassed here, which is
+/// sound exactly because `cost_model()` promises scoring is a pure
+/// function of the model (the 1-vs-N determinism test pins it).
+fn anneal_incremental(ctx: &ChainCtx, initial: Option<&[usize]>) -> SaResult {
+    let population = ctx.cfg.population.max(1);
+    let pool = Pool::new(ctx.cfg.workers.max(1));
+    let outs = pool.par_map((0..population).collect::<Vec<usize>>(), |chain| {
+        let init = if chain == 0 { initial } else { None };
+        let mut score = |st: &mut ScoredState, props: &[Proposal], out: &mut Vec<f32>| {
+            score_deltas_into(ctx.model, st, props, out);
+        };
+        run_chain(ctx, init, chain, &mut score)
+    });
+    merge(outs)
+}
+
+/// The serial fast lane (the default, `workers <= 1`): same per-chain
+/// run, but every scoring round goes through the evaluator's
+/// [`BatchEvaluator::evaluate_deltas`] — the trait's incremental entry
+/// point — so evaluator overrides stay on the hot path.
+fn anneal_delta_serial(
+    ctx: &ChainCtx,
+    evaluator: &mut dyn BatchEvaluator,
+    initial: Option<&[usize]>,
+) -> SaResult {
+    let population = ctx.cfg.population.max(1);
+    let outs: Vec<ChainOut> = (0..population)
+        .map(|chain| {
+            let init = if chain == 0 { initial } else { None };
+            let mut score = |st: &mut ScoredState, props: &[Proposal], out: &mut Vec<f32>| {
+                evaluator.evaluate_deltas(st, props, out);
+            };
+            run_chain(ctx, init, chain, &mut score)
+        })
+        .collect();
+    merge(outs)
+}
+
+/// One chain, start to finish: seeded stream, persistent state, proposal
+/// scoring through `score` (a delta-path scorer) with one reusable flat
+/// scratch buffer.
+fn run_chain(
+    ctx: &ChainCtx,
+    initial: Option<&[usize]>,
+    chain: usize,
+    score: &mut dyn FnMut(&mut ScoredState, &[Proposal], &mut Vec<f32>),
+) -> ChainOut {
+    let (cfg, model, ns) = (ctx.cfg, ctx.model, ctx.ns);
+    let mut rng = Rng::stream(cfg.seed, chain as u64);
+    let assign: Vec<usize> = match initial {
+        Some(init) => init.to_vec(),
+        None => (0..ctx.problem.units.len())
+            .map(|u| ctx.problem.units[u].fixed_slot.unwrap_or_else(|| rng.below(ns)))
+            .collect(),
+    };
+    let mut state = ScoredState::new(model, assign);
+    let mut cost = state.cost(model);
+    let mut out = ChainOut {
+        best: state.assignment().to_vec(),
+        best_cost: cost,
+        best_step: 0,
+        trace: Vec::with_capacity(cfg.steps),
+        evaluated: 1,
+    };
+    if ctx.movable.is_empty() || cfg.proposals == 0 {
+        return out;
+    }
+    let mut temp = cfg.t0;
+    let mut scratch: Vec<Proposal> = Vec::with_capacity(cfg.proposals);
+    let mut costs: Vec<f32> = Vec::with_capacity(cfg.proposals);
+    for step in 0..cfg.steps {
+        scratch.clear();
+        for _ in 0..cfg.proposals {
+            scratch.push(propose(&mut rng, state.assignment(), ctx.movable, ns));
+        }
+        score(&mut state, &scratch, &mut costs);
+        out.evaluated += costs.len();
+        let pick = pick_first_min(&costs, 0, costs.len());
+        let delta = (costs[pick] - cost) as f64;
+        if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
+            state.apply(model, &scratch[pick]);
+            state.commit();
+            cost = costs[pick];
+            if cost < out.best_cost {
+                out.best_cost = cost;
+                out.best.copy_from_slice(state.assignment());
+                out.best_step = step + 1;
+            }
+        }
+        temp *= cfg.cooling;
+        out.trace.push(out.best_cost);
+    }
+    out
+}
+
+/// The batched lane (dense oracle / PJRT): one `evaluate` launch per
+/// step over all chains' materialized proposals — the exact historical
+/// device contract. Same per-chain RNG streams as the fast lane.
+fn anneal_batched(
+    problem: &Problem,
+    evaluator: &mut dyn BatchEvaluator,
+    movable: &[usize],
+    initial: Option<&[usize]>,
+    cfg: &SaConfig,
+    ns: usize,
+) -> SaResult {
+    let population = cfg.population.max(1);
+    let mut rngs: Vec<Rng> = (0..population)
+        .map(|c| Rng::stream(cfg.seed, c as u64))
+        .collect();
+    let chains: Vec<Vec<usize>> = rngs
+        .iter_mut()
+        .enumerate()
+        .map(|(c, rng)| {
             if c == 0 {
                 if let Some(init) = initial {
                     return init.to_vec();
                 }
             }
-            (0..nu)
+            (0..problem.units.len())
                 .map(|u| problem.units[u].fixed_slot.unwrap_or_else(|| rng.below(ns)))
                 .collect()
         })
         .collect();
-    let mut chain_costs = evaluator.evaluate(&chains);
-    let mut evaluated = chains.len();
-
-    let mut best_idx = argmin(&chain_costs);
-    let mut best = chains[best_idx].clone();
-    let mut best_cost = chain_costs[best_idx];
-
-    let mut temp = cfg.t0;
-    let mut trace = Vec::with_capacity(cfg.steps);
-    if movable.is_empty() {
-        return SaResult {
-            best,
-            best_cost,
-            evaluated,
-            trace,
-        };
+    let init_costs = evaluator.evaluate(&chains);
+    let mut chains = chains;
+    let mut cur_costs = init_costs.clone();
+    let mut outs: Vec<ChainOut> = chains
+        .iter()
+        .zip(&init_costs)
+        .map(|(c, &cost)| ChainOut {
+            best: c.clone(),
+            best_cost: cost,
+            best_step: 0,
+            trace: Vec::with_capacity(cfg.steps),
+            evaluated: 1,
+        })
+        .collect();
+    if movable.is_empty() || cfg.proposals == 0 {
+        return merge(outs);
     }
-
-    for _ in 0..cfg.steps {
-        // Propose: population × proposals mutated candidates.
-        let mut batch: Vec<Vec<usize>> = Vec::with_capacity(cfg.population * cfg.proposals);
-        for chain in &chains {
+    let mut temp = cfg.t0;
+    let mut scratch: Vec<Proposal> = Vec::with_capacity(population * cfg.proposals);
+    for step in 0..cfg.steps {
+        scratch.clear();
+        for (c, rng) in rngs.iter_mut().enumerate() {
             for _ in 0..cfg.proposals {
-                let mut cand = chain.clone();
-                // 1–2 random moves (or a swap).
-                let moves = 1 + rng.below(2);
-                for _ in 0..moves {
-                    if rng.chance(0.3) && movable.len() >= 2 {
-                        // swap two movable units
-                        let a = *rng.pick(&movable);
-                        let b = *rng.pick(&movable);
-                        cand.swap(a, b);
-                    } else {
-                        let u = *rng.pick(&movable);
-                        cand[u] = rng.below(ns);
-                    }
-                }
-                batch.push(cand);
+                scratch.push(propose(rng, &chains[c], movable, ns));
             }
         }
+        let mut batch: Vec<Vec<usize>> = scratch
+            .iter()
+            .enumerate()
+            .map(|(i, p)| p.materialize(&chains[i / cfg.proposals]))
+            .collect();
         let costs = evaluator.evaluate(&batch);
-        evaluated += batch.len();
-
-        // Per-chain: pick best proposal; Metropolis accept.
-        for c in 0..cfg.population {
+        for c in 0..population {
             let base = c * cfg.proposals;
-            let mut pick = base;
-            for k in base..base + cfg.proposals {
-                if costs[k] < costs[pick] {
-                    pick = k;
+            let pick = pick_first_min(&costs, base, base + cfg.proposals);
+            let delta = (costs[pick] - cur_costs[c]) as f64;
+            if delta <= 0.0 || rngs[c].f64() < (-delta / temp).exp() {
+                chains[c] = std::mem::take(&mut batch[pick]);
+                cur_costs[c] = costs[pick];
+                if cur_costs[c] < outs[c].best_cost {
+                    outs[c].best_cost = cur_costs[c];
+                    outs[c].best.copy_from_slice(&chains[c]);
+                    outs[c].best_step = step + 1;
                 }
             }
-            let delta = (costs[pick] - chain_costs[c]) as f64;
-            if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
-                chains[c] = batch[pick].clone();
-                chain_costs[c] = costs[pick];
-                if chain_costs[c] < best_cost {
-                    best_cost = chain_costs[c];
-                    best = chains[c].clone();
-                }
-            }
+            outs[c].evaluated += cfg.proposals;
+            outs[c].trace.push(outs[c].best_cost);
         }
         temp *= cfg.cooling;
-        trace.push(best_cost);
-        let _ = best_idx;
-        best_idx = argmin(&chain_costs);
     }
+    merge(outs)
+}
 
-    SaResult {
-        best,
-        best_cost,
-        evaluated,
-        trace,
+/// Draw one proposal: 1–2 mutations, each a random move or (30 % of the
+/// time, given ≥ 2 movable units) a swap of two *distinct* movable
+/// units — a self-swap would silently waste a mutation. Later mutations
+/// see earlier ones through the proposal's overlay view.
+fn propose(rng: &mut Rng, base: &[usize], movable: &[usize], ns: usize) -> Proposal {
+    let mut p = Proposal::default();
+    let moves = 1 + rng.below(2);
+    for _ in 0..moves {
+        if rng.chance(0.3) && movable.len() >= 2 {
+            let (ai, bi) = distinct_pair(rng, movable.len());
+            let (a, b) = (movable[ai], movable[bi]);
+            let (sa, sb) = (p.slot_of(a, base), p.slot_of(b, base));
+            p.push(a as u32, sb as u32);
+            p.push(b as u32, sa as u32);
+        } else {
+            let u = *rng.pick(movable);
+            p.push(u as u32, rng.below(ns) as u32);
+        }
+    }
+    p
+}
+
+/// Two distinct indices in `[0, n)`, uniform over ordered pairs `a ≠ b`.
+fn distinct_pair(rng: &mut Rng, n: usize) -> (usize, usize) {
+    debug_assert!(n >= 2);
+    let a = rng.below(n);
+    let mut b = rng.below(n - 1);
+    if b >= a {
+        b += 1;
+    }
+    (a, b)
+}
+
+/// Total cost order: finite costs by value, every NaN after every
+/// finite cost (and NaNs equal to each other), so a poisoned evaluator
+/// row can neither panic the explorer nor win a comparison.
+fn cmp_cost(a: f32, b: f32) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (false, false) => a.partial_cmp(&b).unwrap(),
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
     }
 }
 
-fn argmin(v: &[f32]) -> usize {
-    v.iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+/// Index of the first strict minimum of `costs[lo..hi]` under
+/// [`cmp_cost`] (first-wins on ties, matching the historical pick).
+fn pick_first_min(costs: &[f32], lo: usize, hi: usize) -> usize {
+    let mut pick = lo;
+    for k in lo + 1..hi {
+        if cmp_cost(costs[k], costs[pick]) == Ordering::Less {
+            pick = k;
+        }
+    }
+    pick
+}
+
+/// Deterministic cross-chain merge: the winner minimizes
+/// (cost, step first reached, chain index) under the total cost order;
+/// the global trace is the per-step minimum over chain traces. Both are
+/// independent of execution order, which is what makes `workers` a pure
+/// wall-clock knob.
+fn merge(mut outs: Vec<ChainOut>) -> SaResult {
+    let mut win = 0usize;
+    for c in 1..outs.len() {
+        let better = match cmp_cost(outs[c].best_cost, outs[win].best_cost) {
+            Ordering::Less => true,
+            Ordering::Equal => outs[c].best_step < outs[win].best_step,
+            Ordering::Greater => false,
+        };
+        if better {
+            win = c;
+        }
+    }
+    let steps = outs[0].trace.len();
+    let trace: Vec<f32> = (0..steps)
+        .map(|t| {
+            let mut m = outs[0].trace[t];
+            for o in &outs[1..] {
+                if cmp_cost(o.trace[t], m) == Ordering::Less {
+                    m = o.trace[t];
+                }
+            }
+            m
+        })
+        .collect();
+    SaResult {
+        best: std::mem::take(&mut outs[win].best),
+        best_cost: outs[win].best_cost,
+        evaluated: outs.iter().map(|o| o.evaluated).sum(),
+        trace,
+    }
 }
 
 #[cfg(test)]
@@ -216,6 +454,7 @@ mod tests {
         assert!(r.best_cost < bad_cost * 0.5, "{} vs {}", r.best_cost, bad_cost);
         // trace monotone non-increasing
         assert!(r.trace.windows(2).all(|w| w[1] <= w[0]));
+        assert_eq!(r.trace.len(), SaConfig::default().steps);
     }
 
     #[test]
@@ -230,6 +469,20 @@ mod tests {
     }
 
     #[test]
+    fn all_pinned_returns_initial_population_best() {
+        let dev = builtin::by_name("u280").unwrap();
+        let mut p = chain_problem(4);
+        for (i, u) in p.units.iter_mut().enumerate() {
+            u.fixed_slot = Some(i % 2);
+        }
+        let mut ev = evaluator(&p, &dev);
+        let r = anneal(&p, &dev, &mut ev, None, &SaConfig::default());
+        assert!(r.trace.is_empty());
+        assert_eq!(r.evaluated, SaConfig::default().population);
+        assert_eq!(r.best, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
     fn deterministic_for_seed() {
         let dev = builtin::by_name("u280").unwrap();
         let p = chain_problem(8);
@@ -239,5 +492,54 @@ mod tests {
         let r2 = anneal(&p, &dev, &mut e2, None, &SaConfig::default());
         assert_eq!(r1.best, r2.best);
         assert_eq!(r1.best_cost, r2.best_cost);
+        assert_eq!(r1.trace, r2.trace);
+    }
+
+    #[test]
+    fn distinct_pair_never_self_and_covers_all_pairs() {
+        let mut rng = Rng::new(123);
+        let n = 5;
+        let mut seen = [[false; 5]; 5];
+        for _ in 0..2000 {
+            let (a, b) = distinct_pair(&mut rng, n);
+            assert_ne!(a, b, "self-swap drawn");
+            assert!(a < n && b < n);
+            seen[a][b] = true;
+        }
+        for a in 0..n {
+            for b in 0..n {
+                assert_eq!(seen[a][b], a != b, "pair ({a},{b}) coverage");
+            }
+        }
+    }
+
+    #[test]
+    fn cmp_cost_ranks_nan_last_and_is_total() {
+        assert_eq!(cmp_cost(1.0, 2.0), Ordering::Less);
+        assert_eq!(cmp_cost(2.0, 1.0), Ordering::Greater);
+        assert_eq!(cmp_cost(1.0, 1.0), Ordering::Equal);
+        assert_eq!(cmp_cost(f32::NAN, 1.0), Ordering::Greater);
+        assert_eq!(cmp_cost(1.0, f32::NAN), Ordering::Less);
+        assert_eq!(cmp_cost(f32::NAN, f32::NAN), Ordering::Equal);
+        assert_eq!(cmp_cost(f32::NEG_INFINITY, f32::NAN), Ordering::Less);
+        // pick_first_min never selects a NaN over a finite cost and is
+        // first-wins on exact ties.
+        assert_eq!(pick_first_min(&[f32::NAN, 3.0, 2.0, 2.0], 0, 4), 2);
+        assert_eq!(pick_first_min(&[f32::NAN, f32::NAN], 0, 2), 0);
+    }
+
+    #[test]
+    fn proposals_respect_movable_set() {
+        let mut rng = Rng::new(7);
+        let base = vec![0usize; 10];
+        let movable = vec![1usize, 3, 5, 7];
+        for _ in 0..500 {
+            let p = propose(&mut rng, &base, &movable, 8);
+            assert!(!p.is_empty());
+            for &(u, s) in p.moves() {
+                assert!(movable.contains(&(u as usize)), "pinned unit {u} moved");
+                assert!((s as usize) < 8);
+            }
+        }
     }
 }

@@ -3,6 +3,7 @@
 //! ```text
 //! rsir devices                         list built-in virtual devices
 //! rsir flow --bench llama2 --device u280 [--util 0.7] [--pjrt]
+//!           [--sa-workers N]           parallel SA chains (deterministic)
 //! rsir passes                          list registered passes + pipelines
 //! rsir pipeline <spec> [--bench id]    run a pass composition by name
 //! rsir table1                          Table 1: HLS-frontend LoC
@@ -15,6 +16,8 @@
 //!                                      run generated designs through the
 //!                                      differential oracle suite; shrink
 //!                                      and write counterexamples
+//!                                      (--digests --out f.txt writes the
+//!                                      pinnable golden-digest file)
 //! ```
 //!
 //! The global `--workers N` flag (or the `RSIR_WORKERS` environment
@@ -36,7 +39,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
         &argv,
-        &["bench", "device", "util", "only", "out", "seed", "workers", "ir", "cases"],
+        &["bench", "device", "util", "only", "out", "seed", "workers", "ir", "cases", "sa-workers"],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     if let Err(e) = dispatch(cmd, &args) {
@@ -53,6 +56,9 @@ fn flow_config(args: &Args) -> flow::FlowConfig {
     };
     cfg.util_limit = args.get_f64("util", cfg.util_limit);
     cfg.sa.seed = args.get_usize("seed", cfg.sa.seed as usize) as u64;
+    // Parallel-chains width of the incremental SA lane. A wall-clock
+    // knob only: annealing results are identical for any value.
+    cfg.sa.workers = args.get_usize("sa-workers", cfg.sa.workers);
     cfg
 }
 
@@ -163,11 +169,23 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             if args.has_flag("digests") {
                 // Pinnable seed digests (see tests/golden/): fuzz failures
                 // stay replayable only if seeds regenerate identically.
+                let pairs = rsir::testing::fuzz::seed_digests(0..5, &cfg);
                 let mut t = Table::new(&["Seed", "Digest"]);
-                for (seed, h) in rsir::testing::fuzz::seed_digests(0..5, &cfg) {
+                for (seed, h) in &pairs {
                     t.row(&[seed.to_string(), format!("{h:016x}")]);
                 }
                 t.print();
+                if let Some(path) = args.get("out") {
+                    // Golden-file format (`<seed> <hex-digest>` per line):
+                    // drop the output straight into
+                    // rust/tests/golden/synthetic_digests.txt to pin it.
+                    let text: String = pairs
+                        .iter()
+                        .map(|(s, h)| format!("{s} {h:016x}\n"))
+                        .collect();
+                    std::fs::write(path, text)?;
+                    println!("wrote {path}");
+                }
                 return Ok(());
             }
             let seed = args.get_usize("seed", 0) as u64;
@@ -303,6 +321,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             println!("rsir — RapidStream IR (ICCAD'24 reproduction)");
             println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 import export fuzz");
             println!("global: --workers N (or RSIR_WORKERS) sizes the evaluation pool");
+            println!("SA: --sa-workers N parallelizes annealing chains (same results for any N)");
             println!("pass registry: `rsir passes` lists it; `rsir pipeline <spec>` runs one");
             println!("fuzzing: `rsir fuzz --seed N --cases M` replays/shrinks oracle failures");
         }

@@ -1,0 +1,315 @@
+//! Differential and property gates for the incremental SA path (the PR-4
+//! fuzzer pattern applied to floorplan scoring):
+//!
+//! * `ScoredState` stays in sync with `cost_scalar` under arbitrary
+//!   move/swap/revert sequences on generated `Problem`s;
+//! * a full `anneal` over the incremental evaluator is **identical**
+//!   (best / best_cost / trace / evaluated) to the full-rescoring
+//!   baseline for the same seed;
+//! * results are byte-identical for 1 vs 8 SA workers (the PR-1 Table-2
+//!   determinism pattern);
+//! * NaN-poisoned evaluators can neither panic the explorer nor win.
+
+use rsir::device::builtin;
+use rsir::floorplan::cost::{BatchEvaluator, CostModel, CpuEvaluator, FullRescore, ScoredState};
+use rsir::floorplan::problem::{Problem, Unit, UnitEdge};
+use rsir::floorplan::sa::{anneal, SaConfig, SaResult};
+use rsir::ir::core::Resources;
+use rsir::util::quickcheck::{forall, Gen};
+use rsir::util::rng::Rng;
+
+/// Generator of floorplanning `Problem`s: a connected chain plus random
+/// chords, integral resource vectors (the exact-friendly regime every
+/// in-tree problem lives in — see the `ScoredState` exactness contract),
+/// and occasional pinned units. Shrinks by dropping the last unit (with
+/// its edges) or the last edge.
+struct ProblemGen {
+    max_units: usize,
+}
+
+impl Gen for ProblemGen {
+    type Item = Problem;
+
+    fn generate(&self, rng: &mut Rng) -> Problem {
+        let n = rng.range(2, self.max_units);
+        let units = (0..n)
+            .map(|i| Unit {
+                nodes: vec![i],
+                resources: Resources::new(
+                    (500 + rng.below(40_000)) as f64,
+                    rng.below(30_000) as f64,
+                    rng.below(48) as f64,
+                    rng.below(128) as f64,
+                    rng.below(8) as f64,
+                ),
+                // Every built-in device has >= 6 slots; pin within 4.
+                fixed_slot: if rng.chance(0.1) {
+                    Some(rng.below(4))
+                } else {
+                    None
+                },
+                name: format!("u{i}"),
+            })
+            .collect();
+        let mut edges = Vec::new();
+        for i in 0..n - 1 {
+            edges.push(UnitEdge {
+                a: i,
+                b: i + 1,
+                width: 16 * (1 + rng.below(16) as u64),
+            });
+            if rng.chance(0.3) {
+                let j = rng.below(n);
+                if j != i {
+                    edges.push(UnitEdge {
+                        a: i.min(j),
+                        b: i.max(j),
+                        width: 8 * (1 + rng.below(8) as u64),
+                    });
+                }
+            }
+        }
+        Problem {
+            units,
+            edges,
+            die_weight: 3.0,
+        }
+    }
+
+    fn shrink(&self, p: &Problem) -> Vec<Problem> {
+        let mut out = Vec::new();
+        if p.units.len() > 2 {
+            let n = p.units.len() - 1;
+            let edges = p
+                .edges
+                .iter()
+                .filter(|e| e.a < n && e.b < n)
+                .cloned()
+                .collect();
+            out.push(Problem {
+                units: p.units[..n].to_vec(),
+                edges,
+                die_weight: p.die_weight,
+            });
+        }
+        if !p.edges.is_empty() {
+            out.push(Problem {
+                units: p.units.clone(),
+                edges: p.edges[..p.edges.len() - 1].to_vec(),
+                die_weight: p.die_weight,
+            });
+        }
+        out
+    }
+}
+
+fn results_identical(a: &SaResult, b: &SaResult) -> bool {
+    a.best == b.best
+        && a.best_cost.to_bits() == b.best_cost.to_bits()
+        && a.trace == b.trace
+        && a.evaluated == b.evaluated
+}
+
+#[test]
+fn scored_state_tracks_cost_scalar_under_random_op_sequences() {
+    let dev = builtin::by_name("u280").unwrap();
+    let gen = ProblemGen { max_units: 24 };
+    forall(0xF1, 48, &gen, |p| {
+        let model = CostModel::build(p, &dev, 0.7, 1e-4);
+        let n = p.units.len();
+        let mut rng = Rng::new(99);
+        let assign: Vec<usize> = (0..n).map(|_| rng.below(model.s)).collect();
+        let mut st = ScoredState::new(&model, assign);
+        let mut committed: Vec<usize> = st.assignment().to_vec();
+        for _ in 0..120 {
+            match rng.below(4) {
+                0 => {
+                    let u = rng.below(n);
+                    let s = rng.below(model.s);
+                    st.apply_move(&model, u, s);
+                }
+                1 if n >= 2 => {
+                    let a = rng.below(n);
+                    let b = (a + 1 + rng.below(n - 1)) % n;
+                    st.apply_swap(&model, a, b);
+                }
+                2 => {
+                    st.commit();
+                    committed = st.assignment().to_vec();
+                }
+                _ => {
+                    st.revert(&model);
+                    if st.assignment() != &committed[..] {
+                        return false;
+                    }
+                }
+            }
+            let want = model.cost_scalar(st.assignment());
+            let got = st.cost(&model);
+            if (got - want).abs() > 1e-3 * want.abs().max(1.0) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// The differential oracle of the tentpole: the incremental lane must
+/// reproduce the full-rescoring baseline *exactly* — same best, same
+/// best_cost bits, same trace, same evaluation count — on generated
+/// problems, with and without an ILP-style initial seed.
+#[test]
+fn incremental_anneal_identical_to_full_rescore() {
+    let dev = builtin::by_name("u280").unwrap();
+    let gen = ProblemGen { max_units: 16 };
+    forall(0xD1F, 10, &gen, |p| {
+        let model = CostModel::build(p, &dev, 0.7, 1e-4);
+        let cfg = SaConfig {
+            population: 6,
+            proposals: 4,
+            steps: 40,
+            seed: 0xBEEF ^ p.units.len() as u64,
+            ..Default::default()
+        };
+        let mut inc = CpuEvaluator {
+            model: model.clone(),
+        };
+        let mut full = FullRescore(CpuEvaluator {
+            model: model.clone(),
+        });
+        let a = anneal(p, &dev, &mut inc, None, &cfg);
+        let b = anneal(p, &dev, &mut full, None, &cfg);
+        if !results_identical(&a, &b) {
+            return false;
+        }
+        // Seeded variant (chain 0 starts from a degenerate assignment).
+        let init = vec![0usize; p.units.len()];
+        let a = anneal(p, &dev, &mut inc, Some(&init), &cfg);
+        let b = anneal(p, &dev, &mut full, Some(&init), &cfg);
+        results_identical(&a, &b)
+    });
+}
+
+/// PR-1 Table-2 pattern: the parallel-chains knob is wall-clock only.
+#[test]
+fn anneal_byte_identical_for_1_vs_8_workers() {
+    let dev = builtin::by_name("u250").unwrap();
+    let gen = ProblemGen { max_units: 20 };
+    forall(0xCAFE, 6, &gen, |p| {
+        let model = CostModel::build(p, &dev, 0.7, 1e-4);
+        let mut results = Vec::new();
+        for workers in [1usize, 8] {
+            let cfg = SaConfig {
+                steps: 60,
+                workers,
+                ..Default::default()
+            };
+            let mut ev = CpuEvaluator {
+                model: model.clone(),
+            };
+            results.push(anneal(p, &dev, &mut ev, None, &cfg));
+        }
+        results_identical(&results[0], &results[1])
+    });
+}
+
+/// An evaluator that poisons every 7th cost with NaN (and keeps no cost
+/// model, forcing the batched lane — the lane that consumes raw
+/// evaluator output). The explorer must stay total: no panic, and NaN
+/// never beats a finite cost.
+struct PoisonEvaluator {
+    model: CostModel,
+    count: usize,
+}
+
+impl BatchEvaluator for PoisonEvaluator {
+    fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32> {
+        batch
+            .iter()
+            .map(|c| {
+                self.count += 1;
+                if self.count % 7 == 0 {
+                    f32::NAN
+                } else {
+                    self.model.cost_scalar(c)
+                }
+            })
+            .collect()
+    }
+    fn name(&self) -> &'static str {
+        "poison"
+    }
+}
+
+#[test]
+fn nan_costs_never_panic_and_never_win() {
+    let dev = builtin::by_name("u280").unwrap();
+    let gen = ProblemGen { max_units: 12 };
+    forall(0xAB, 8, &gen, |p| {
+        let model = CostModel::build(p, &dev, 0.7, 1e-4);
+        let mut ev = PoisonEvaluator {
+            model: model.clone(),
+            count: 0,
+        };
+        let cfg = SaConfig {
+            population: 4,
+            proposals: 3,
+            steps: 25,
+            ..Default::default()
+        };
+        let r = anneal(p, &dev, &mut ev, None, &cfg);
+        // With 4 chains only ~1 in 7 costs is NaN, so a finite best
+        // exists; it must also genuinely score its assignment.
+        r.best_cost.is_finite() && model.cost_scalar(&r.best).is_finite()
+    });
+}
+
+#[test]
+fn all_nan_evaluator_is_still_total() {
+    struct AllNan;
+    impl BatchEvaluator for AllNan {
+        fn evaluate(&mut self, batch: &[Vec<usize>]) -> Vec<f32> {
+            vec![f32::NAN; batch.len()]
+        }
+        fn name(&self) -> &'static str {
+            "all-nan"
+        }
+    }
+    let dev = builtin::by_name("u250").unwrap();
+    let mut rng = Rng::new(4);
+    let gen = ProblemGen { max_units: 8 };
+    let p = gen.generate(&mut rng);
+    let cfg = SaConfig {
+        population: 3,
+        proposals: 2,
+        steps: 10,
+        ..Default::default()
+    };
+    // Must terminate without panicking even though every cost is NaN.
+    let r = anneal(&p, &dev, &mut AllNan, None, &cfg);
+    assert!(r.best_cost.is_nan());
+    assert_eq!(r.best.len(), p.units.len());
+}
+
+/// Pinned units survive the parallel incremental lane, and the merged
+/// trace stays monotone non-increasing.
+#[test]
+fn parallel_lane_respects_pins_and_trace_monotonicity() {
+    let dev = builtin::by_name("u280").unwrap();
+    let mut rng = Rng::new(31);
+    let gen = ProblemGen { max_units: 18 };
+    for _ in 0..4 {
+        let mut p = gen.generate(&mut rng);
+        p.units[0].fixed_slot = Some(2);
+        let model = CostModel::build(&p, &dev, 0.7, 1e-4);
+        let mut ev = CpuEvaluator { model };
+        let cfg = SaConfig {
+            steps: 50,
+            workers: 4,
+            ..Default::default()
+        };
+        let r = anneal(&p, &dev, &mut ev, None, &cfg);
+        assert_eq!(r.best[0], 2, "pinned unit moved");
+        assert!(r.trace.windows(2).all(|w| w[1] <= w[0]), "trace not monotone");
+    }
+}
