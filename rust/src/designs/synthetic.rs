@@ -61,6 +61,19 @@ pub struct BundleSpec {
     pub width: u32,
 }
 
+/// Source surrogate a leaf is materialized as on the text path
+/// ([`materialize_sources`]): plain Verilog, or one of the vendor-IP
+/// container formats the importer supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeafSource {
+    /// Signature-only Verilog module with pragma comments.
+    Verilog,
+    /// Vivado IP surrogate: a `.xci` JSON manifest (vendor black box).
+    Xci,
+    /// Vitis kernel surrogate: a `.xo` JSON manifest wrapping Verilog.
+    Xo,
+}
+
 /// Shape of one generated leaf module.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LeafPlan {
@@ -68,6 +81,29 @@ pub struct LeafPlan {
     /// Pre-attach resource/timing metadata (otherwise `platform-analyze`
     /// fills it in — both shapes appear in real imports).
     pub with_resource: bool,
+    /// Add a second clock port `ap_clk2` + clock interface (multi-clock
+    /// leaves are a real-import edge shape; parents broadcast `ap_clk`
+    /// onto it, covered by the clock fan-out DRC exemption).
+    pub multi_clock: bool,
+    /// Preferred text-path surrogate; [`effective_source`] downgrades it
+    /// when the protocol does not fit the container format.
+    pub source: LeafSource,
+}
+
+/// The source surrogate a leaf actually materializes as. `.xci`
+/// manifests only describe clock/reset/handshake bus interfaces, so
+/// leaves with feedforward/non-pipeline bundles or a second clock
+/// downgrade to plain Verilog (mirroring how real vendor IP is only
+/// wrapped when the protocol fits the container).
+pub fn effective_source(lp: &LeafPlan) -> LeafSource {
+    match lp.source {
+        LeafSource::Xci
+            if lp.multi_clock || lp.bundles.iter().any(|b| b.kind != BundleKind::Handshake) =>
+        {
+            LeafSource::Verilog
+        }
+        s => s,
+    }
 }
 
 /// What a grouped level instantiates.
@@ -180,6 +216,17 @@ impl Gen for DesignGen {
                     })
                     .collect(),
                 with_resource: rng.chance(0.5),
+                multi_clock: rng.chance(0.15),
+                source: {
+                    let r = rng.f64();
+                    if r < 0.7 {
+                        LeafSource::Verilog
+                    } else if r < 0.85 {
+                        LeafSource::Xci
+                    } else {
+                        LeafSource::Xo
+                    }
+                },
             })
             .collect();
         let mut with_empty = rng.chance(0.25);
@@ -338,6 +385,22 @@ impl Gen for DesignGen {
                 }
             }
         }
+        // Simplify every leaf back to the plain-Verilog surrogate.
+        if p.leaves.iter().any(|l| l.source != LeafSource::Verilog) {
+            let mut q = p.clone();
+            for l in &mut q.leaves {
+                l.source = LeafSource::Verilog;
+            }
+            out.push(q);
+        }
+        // Drop secondary clocks.
+        if p.leaves.iter().any(|l| l.multi_clock) {
+            let mut q = p.clone();
+            for l in &mut q.leaves {
+                l.multi_clock = false;
+            }
+            out.push(q);
+        }
         // Clear cosmetic features.
         if p.groups.iter().any(|g| g.hint) {
             let mut q = p.clone();
@@ -444,6 +507,11 @@ pub fn materialize(plan: &DesignPlan) -> Design {
     let mut leaf_sigs: Vec<Vec<ExtBundle>> = Vec::with_capacity(plan.leaves.len());
     for (i, lp) in plan.leaves.iter().enumerate() {
         let mut b = LeafBuilder::verilog_stub(format!("leaf{i}")).clk_rst();
+        if lp.multi_clock {
+            b = b.port("ap_clk2", Dir::In, 1).iface(Interface::Clock {
+                port: "ap_clk2".into(),
+            });
+        }
         let mut sig = Vec::with_capacity(lp.bundles.len());
         for (j, bs) in lp.bundles.iter().enumerate() {
             let name = format!("b{j}");
@@ -529,20 +597,30 @@ pub fn materialize(plan: &DesignPlan) -> Design {
         let mut kids: Vec<Option<Child>> = Vec::with_capacity(gp.children.len());
         for (k, cr) in gp.children.iter().enumerate() {
             let resolved = match cr {
-                ChildRef::Leaf(i) if *i < plan.leaves.len() => {
-                    Some((format!("leaf{i}"), leaf_sigs[*i].clone(), true))
-                }
+                ChildRef::Leaf(i) if *i < plan.leaves.len() => Some((
+                    format!("leaf{i}"),
+                    leaf_sigs[*i].clone(),
+                    true,
+                    plan.leaves[*i].multi_clock,
+                )),
                 ChildRef::Group(h) if *h < gi => {
-                    Some((format!("grp{h}"), group_sigs[*h].clone(), true))
+                    Some((format!("grp{h}"), group_sigs[*h].clone(), true, false))
                 }
-                ChildRef::Empty if need_empty => Some(("empty0".to_string(), Vec::new(), false)),
+                ChildRef::Empty if need_empty => {
+                    Some(("empty0".to_string(), Vec::new(), false, false))
+                }
                 _ => None,
             };
-            kids.push(resolved.map(|(module, sig, has_clk)| {
+            kids.push(resolved.map(|(module, sig, has_clk, has_clk2)| {
                 let mut inst = Instance::new(format!("c{k}"), module);
                 if has_clk {
                     inst.connect("ap_clk", ConnExpr::id("ap_clk"));
                     inst.connect("ap_rst_n", ConnExpr::id("ap_rst_n"));
+                }
+                if has_clk2 {
+                    // Secondary clock broadcast off the same source clock
+                    // (the clock fan-out DRC exemption covers this net).
+                    inst.connect("ap_clk2", ConnExpr::id("ap_clk"));
                 }
                 Child { inst, sig }
             }));
@@ -699,6 +777,85 @@ pub fn materialize(plan: &DesignPlan) -> Design {
     d
 }
 
+/// The text-path twin of [`materialize`]: every module of the plan
+/// rendered as source text — Verilog, `.xci` manifest, or `.xo`
+/// manifest, per [`effective_source`]. Derived *from* the materialized
+/// design, so signatures and interfaces agree with the IR by
+/// construction; pragma comments (and `.xci` bus interfaces) carry the
+/// interface declarations so `plugins::importer::import_mixed`
+/// reconstructs them on the way back in.
+#[derive(Debug, Clone, Default)]
+pub struct MaterializedSources {
+    /// Top module name (same as `materialize(plan).top`).
+    pub top: String,
+    /// Verilog sources: surrogate leaves in plan order, then every
+    /// grouped module (incl. `empty0`) in name order.
+    pub verilog: Vec<String>,
+    /// `.xci` JSON manifests for vendor-IP surrogate leaves.
+    pub xci: Vec<String>,
+    /// `.xo` JSON manifests for kernel surrogate leaves.
+    pub xo: Vec<String>,
+}
+
+/// Render a plan as importable source text (see [`MaterializedSources`]).
+/// Like [`materialize`] this is total and pure: any plan yields a source
+/// set, and the same plan always yields the identical text.
+pub fn materialize_sources(plan: &DesignPlan) -> MaterializedSources {
+    let d = materialize(plan);
+    let mut out = MaterializedSources {
+        top: d.top.clone(),
+        ..Default::default()
+    };
+    for (i, lp) in plan.leaves.iter().enumerate() {
+        let m = d
+            .module(&format!("leaf{i}"))
+            .expect("materialize builds every planned leaf");
+        match effective_source(lp) {
+            LeafSource::Verilog => out.verilog.push(leaf_verilog(m)),
+            LeafSource::Xci => out.xci.push(crate::plugins::xci::module_manifest(m)),
+            LeafSource::Xo => {
+                let mut o = crate::util::json::JsonObj::new();
+                o.insert("kernel", Json::str(&m.name));
+                o.insert("sources", Json::Arr(vec![Json::str(&leaf_verilog(m))]));
+                out.xo.push(Json::Obj(o).pretty());
+            }
+        }
+    }
+    for m in d.modules.values() {
+        if matches!(m.body, Body::Grouped { .. }) {
+            out.verilog.push(
+                crate::plugins::exporter::grouped_to_verilog(&d, m)
+                    .expect("materialized groups reference only materialized modules"),
+            );
+        }
+    }
+    out
+}
+
+/// Signature-only Verilog text for a leaf module: the IR port list plus
+/// pragma comments reconstructing its interfaces on re-import.
+fn leaf_verilog(m: &Module) -> String {
+    let mut s = format!("module {} (\n", m.name);
+    for (i, p) in m.ports.iter().enumerate() {
+        let dir = match p.dir {
+            Dir::In => "input",
+            Dir::Out => "output",
+            Dir::InOut => "inout",
+        };
+        let range = if p.width > 1 {
+            format!("[{}:0] ", p.width - 1)
+        } else {
+            String::new()
+        };
+        let comma = if i + 1 < m.ports.len() { "," } else { "" };
+        s.push_str(&format!("  {dir} wire {range}{}{comma}\n", p.name));
+    }
+    s.push_str(");\n");
+    s.push_str(&crate::plugins::pragma::pragma_comments(m));
+    s.push_str("endmodule\n");
+    s
+}
+
 /// FNV-1a 64-bit over a byte string: tiny, dependency-free, and
 /// platform-independent — the digest that pins seed-stability.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -761,8 +918,21 @@ mod tests {
         let (mut leaf_top, mut empty_top, mut feedback, mut nested, mut empty_child) =
             (false, false, false, false, false);
         let (mut channels, mut hints, mut mixed) = (false, false, false);
+        let (mut multi_clock, mut xci, mut xo, mut xci_downgrade) = (false, false, false, false);
         for _ in 0..300 {
             let p = gen.generate(&mut rng);
+            multi_clock |= p.leaves.iter().any(|l| l.multi_clock);
+            xci |= p
+                .leaves
+                .iter()
+                .any(|l| effective_source(l) == LeafSource::Xci);
+            xo |= p
+                .leaves
+                .iter()
+                .any(|l| effective_source(l) == LeafSource::Xo);
+            xci_downgrade |= p.leaves.iter().any(|l| {
+                l.source == LeafSource::Xci && effective_source(l) == LeafSource::Verilog
+            });
             leaf_top |= p.top == TopShape::LeafTop;
             empty_top |= p.top == TopShape::EmptyTop;
             feedback |= p
@@ -793,6 +963,31 @@ mod tests {
         assert!(channels, "no channels at all in 300 samples");
         assert!(hints, "no floorplan hints in 300 samples");
         assert!(mixed, "no mixed interface protocols in 300 samples");
+        assert!(multi_clock, "no multi-clock leaf in 300 samples");
+        assert!(xci, "no effective xci surrogate in 300 samples");
+        assert!(xo, "no xo surrogate in 300 samples");
+        assert!(xci_downgrade, "no xci→verilog downgrade in 300 samples");
+    }
+
+    #[test]
+    fn sources_are_pure_and_cover_every_module() {
+        let gen = DesignGen::default();
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let p = gen.generate(&mut rng);
+            let a = materialize_sources(&p);
+            let b = materialize_sources(&p);
+            assert_eq!(a.top, b.top);
+            assert_eq!(a.verilog, b.verilog);
+            assert_eq!(a.xci, b.xci);
+            assert_eq!(a.xo, b.xo);
+            let d = materialize(&p);
+            assert_eq!(
+                a.verilog.len() + a.xci.len() + a.xo.len(),
+                d.modules.len(),
+                "one source per module"
+            );
+        }
     }
 
     #[test]
@@ -857,11 +1052,15 @@ mod tests {
                     // A: hs out, B-feeder: hs out
                     bundles: vec![hs(Dir::Out), hs(Dir::Out)],
                     with_resource: false,
+                    multi_clock: false,
+                    source: LeafSource::Verilog,
                 },
                 LeafPlan {
                     // consumers: hs in, ff in
                     bundles: vec![hs(Dir::In), ff(Dir::In)],
                     with_resource: false,
+                    multi_clock: false,
+                    source: LeafSource::Verilog,
                 },
             ],
             groups: vec![GroupPlan {

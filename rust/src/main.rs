@@ -18,6 +18,12 @@
 //!                                      and write counterexamples
 //!                                      (--digests --out f.txt writes the
 //!                                      pinnable golden-digest file)
+//! rsir fuzz --verilog [--seed N] [--cases M] [--out f.v]
+//!                                      Verilog round-trip lane: each plan
+//!                                      is materialized as source text,
+//!                                      imported, analyzed, exported and
+//!                                      re-imported; failures shrink to a
+//!                                      minimal .v counterexample
 //! ```
 //!
 //! The global `--workers N` flag (or the `RSIR_WORKERS` environment
@@ -191,6 +197,37 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             let seed = args.get_usize("seed", 0) as u64;
             let cases = args.get_usize("cases", 64);
             let t0 = Instant::now();
+            if args.has_flag("verilog") {
+                // Verilog round-trip lane: materialized source text →
+                // import → pipeline → export → re-import, per case.
+                let rep = rsir::testing::fuzz::run_verilog(seed, cases, &cfg);
+                match rep.failure {
+                    None => println!(
+                        "fuzz --verilog: {cases} designs from seed {seed} passed the \
+                         round-trip oracle in {:.2?}",
+                        t0.elapsed()
+                    ),
+                    Some(f) => {
+                        let out = args.get_or("out", "fuzz_counterexample.v");
+                        std::fs::write(out, &f.minimal_source)?;
+                        eprintln!(
+                            "fuzz --verilog: case {} (seed {seed}) violated: {}",
+                            f.case,
+                            f.violations.join(", ")
+                        );
+                        eprintln!(
+                            "minimal counterexample violates: {}",
+                            f.minimal_violations.join(", ")
+                        );
+                        eprintln!("minimal plan:\n{:#?}", f.minimal_plan);
+                        bail!(
+                            "round-trip invariant violated; minimal Verilog source written \
+                             to {out} (replay: rsir fuzz --verilog --seed {seed} --cases {cases})"
+                        );
+                    }
+                }
+                return Ok(());
+            }
             let rep = rsir::testing::fuzz::run(seed, cases, &cfg);
             match rep.failure {
                 None => println!(

@@ -220,11 +220,6 @@ pub fn partition_aux(
         let root = uf.find(interner.get(&p.name).unwrap().as_usize());
         comp_ports.entry(root).or_default().push(p.name.clone());
     }
-    if comp_ports.len() <= 1 {
-        ctx.log(format!("partition {}: single component, no split", aux.name));
-        return Ok(1);
-    }
-
     // Identify pure-passthrough components: no non-alias logic touches the
     // component, and every output port resolves through the alias chain to
     // an input port.
@@ -270,6 +265,37 @@ pub fn partition_aux(
         if let Some(pairs) = pairs {
             pass_pairs_by_root.insert(root, pairs);
         }
+    }
+
+    if comp_ports.len() <= 1 {
+        // A lone component still matters when it is a pure feed-through:
+        // splitting it off would just rename the aux, but leaving it
+        // untagged would let a wire-only module survive the passthrough
+        // pass (imported single-channel hierarchies rebuild into exactly
+        // this shape). Tag the aux itself so passthrough can bypass it.
+        if let Some((root, ports)) = comp_ports.iter().next() {
+            if let Some(pairs) = pass_pairs_by_root.get(root) {
+                let covered: BTreeSet<&str> = pairs
+                    .iter()
+                    .flat_map(|(a, b)| [a.as_str(), b.as_str()])
+                    .collect();
+                if ports.iter().all(|p| covered.contains(p.as_str())) {
+                    let arr = pairs_json(pairs);
+                    ctx.index
+                        .edit(design, &aux.name)
+                        .ok_or_else(|| anyhow!("missing module '{}'", aux.name))?
+                        .metadata
+                        .insert("passthrough_pairs", arr);
+                    ctx.log(format!(
+                        "partition {}: single pure component, tagged for passthrough",
+                        aux.name
+                    ));
+                    return Ok(1);
+                }
+            }
+        }
+        ctx.log(format!("partition {}: single component, no split", aux.name));
+        return Ok(1);
     }
 
     let total_bits: f64 = aux
@@ -327,18 +353,7 @@ pub fn partition_aux(
                 .flat_map(|(a, b)| [a.as_str(), b.as_str()])
                 .collect();
             if ports.iter().all(|p| covered.contains(p.as_str())) {
-                let arr = Json::Arr(
-                    pairs
-                        .iter()
-                        .map(|(a, b)| {
-                            let mut o = JsonObj::new();
-                            o.insert("out", Json::str(a));
-                            o.insert("in", Json::str(b));
-                            Json::Obj(o)
-                        })
-                        .collect(),
-                );
-                sm.metadata.insert("passthrough_pairs", arr);
+                sm.metadata.insert("passthrough_pairs", pairs_json(pairs));
             }
         }
 
@@ -382,6 +397,21 @@ pub fn partition_aux(
         split_names.join(", ")
     ));
     Ok(n)
+}
+
+/// `passthrough_pairs` metadata: `[{"out": o, "in": i}, ...]`.
+fn pairs_json(pairs: &[(String, String)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|(a, b)| {
+                let mut o = JsonObj::new();
+                o.insert("out", Json::str(a));
+                o.insert("in", Json::str(b));
+                Json::Obj(o)
+            })
+            .collect(),
+    )
 }
 
 /// Wrapper Verilog: instantiate the original aux, connect only this
@@ -603,5 +633,37 @@ endmodule
         let n = partition_aux(&mut d, "T", "aux0", &mut PassContext::new()).unwrap();
         assert_eq!(n, 1);
         assert!(d.module("T").unwrap().instance("aux0").is_some());
+    }
+
+    #[test]
+    fn single_pure_component_tagged_on_aux() {
+        // A wire-only aux (the shape a single-channel imported hierarchy
+        // rebuilds into) keeps its lone component, but the aux itself is
+        // tagged so the passthrough pass can bypass it.
+        let mut d = Design::new("T");
+        let mut aux = Module::leaf(
+            "T_aux",
+            SourceFormat::Verilog,
+            "module T_aux(input [7:0] a, output [7:0] b);\nassign b = a;\nendmodule",
+        );
+        aux.ports = vec![Port::new("a", Dir::In, 8), Port::new("b", Dir::Out, 8)];
+        aux.metadata.insert("aux_of", Json::str("T"));
+        d.add(aux);
+        let top = GroupedBuilder::new("T")
+            .port("x", Dir::In, 8)
+            .port("y", Dir::Out, 8)
+            .inst("aux0", "T_aux", &[("a", "x"), ("b", "y")])
+            .build();
+        d.add(top);
+        let n = partition_aux(&mut d, "T", "aux0", &mut PassContext::new()).unwrap();
+        assert_eq!(n, 1);
+        let aux = d.module("T_aux").unwrap();
+        assert!(aux.metadata.contains_key("passthrough_pairs"), "{aux:?}");
+        // The logic-bearing single component above stays untagged; this
+        // one is picked up by the passthrough pass end to end.
+        crate::passes::passthrough::Passthrough
+            .run(&mut d, &mut PassContext::new())
+            .unwrap();
+        assert!(d.module("T_aux").is_none(), "aux should be bypassed + gc'd");
     }
 }

@@ -205,6 +205,22 @@ pub fn rebuild(design: &mut Design, target: &str, ctx: &mut PassContext) -> Resu
         .collect();
     split.aux.ports.retain(|p| !direct_ports.contains(&p.name));
 
+    // A split whose aux holds no residual items and whose remaining
+    // ports are all clock/reset broadcasts carries no logic: every
+    // extracted connection is direct. Skip the aux entirely — an empty
+    // aux that survives downstream passes would lose its interface-less
+    // clock/reset declarations on a later export/import round trip.
+    let skip_aux = split.aux.items.is_empty()
+        && split
+            .extracted
+            .iter()
+            .all(|e| e.bindings.iter().all(|b| b.aux_port.is_empty()))
+        && split
+            .aux
+            .ports
+            .iter()
+            .all(|p| clockish.iter().any(|c| c == &p.name));
+
     // Build the aux leaf module.
     let mut aux = Module::leaf(&aux_name, SourceFormat::Verilog, print_module(&split.aux));
     aux.ports = split
@@ -285,19 +301,25 @@ pub fn rebuild(design: &mut Design, target: &str, ctx: &mut PassContext) -> Resu
         }
         grouped.instances_mut().push(inst);
     }
-    grouped.instances_mut().push(aux_inst);
+    if skip_aux {
+        ctx.log(format!(
+            "rebuild {target}: extracted {} instances into grouped module (no aux needed)",
+            split.extracted.len()
+        ));
+    } else {
+        grouped.instances_mut().push(aux_inst);
+        ctx.namemap.record("hierarchy-rebuild", target, &aux_name);
+        ctx.log(format!(
+            "rebuild {target}: extracted {} instances into grouped module + {aux_name}",
+            split.extracted.len()
+        ));
+        ctx.index.touch(&aux_name);
+        design.add(aux);
+    }
 
-    ctx.namemap.record("hierarchy-rebuild", target, &aux_name);
-    ctx.log(format!(
-        "rebuild {target}: extracted {} instances into grouped module + {aux_name}",
-        split.extracted.len()
-    ));
-
-    // Both adds announce themselves to the connectivity index: the aux is
-    // new, and the grouped module replaces the leaf under the same name.
-    ctx.index.touch(&aux_name);
+    // The add announces itself to the connectivity index: the grouped
+    // module replaces the leaf under the same name.
     ctx.index.touch(target);
-    design.add(aux);
     design.add(grouped); // replaces the leaf under the same name
     Ok(())
 }
@@ -446,6 +468,65 @@ endmodule
         let before = d.clone();
         RebuildAll.run(&mut d, &mut ctx).unwrap();
         assert_eq!(d, before);
+    }
+
+    #[test]
+    fn all_direct_connections_skip_the_aux() {
+        // A parent whose child connections are all clock broadcasts or
+        // single-use parent ports needs no aux at all.
+        let mut d = Design::new("Wrap");
+        let child = LeafBuilder::verilog_stub("Child")
+            .clk_rst()
+            .handshake("i", Dir::In, 8)
+            .build();
+        d.add(child);
+        let src = r#"
+module Wrap (
+  input wire ap_clk,
+  input wire ap_rst_n,
+  input wire [7:0] x_i,
+  input wire x_i_vld,
+  output wire x_i_rdy
+);
+  Child c0 (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n),
+            .i(x_i), .i_vld(x_i_vld), .i_rdy(x_i_rdy));
+endmodule
+"#;
+        let mut top = Module::leaf("Wrap", SourceFormat::Verilog, src);
+        top.ports = vec![
+            Port::new("ap_clk", Dir::In, 1),
+            Port::new("ap_rst_n", Dir::In, 1),
+            Port::new("x_i", Dir::In, 8),
+            Port::new("x_i_vld", Dir::In, 1),
+            Port::new("x_i_rdy", Dir::Out, 1),
+        ];
+        top.interfaces = vec![
+            Interface::Clock {
+                port: "ap_clk".into(),
+            },
+            Interface::Reset {
+                port: "ap_rst_n".into(),
+                active_high: false,
+            },
+            Interface::Handshake {
+                name: "x_i".into(),
+                data: vec!["x_i".into()],
+                valid: "x_i_vld".into(),
+                ready: "x_i_rdy".into(),
+                clk: Some("ap_clk".into()),
+            },
+        ];
+        d.add(top);
+        rebuild(&mut d, "Wrap", &mut PassContext::new()).unwrap();
+        let top = d.module("Wrap").unwrap();
+        assert!(top.is_grouped());
+        assert_eq!(top.instances().len(), 1, "no aux instance expected");
+        assert!(d.module("Wrap_aux").is_none(), "no aux module expected");
+        assert_eq!(
+            top.instance("c0").unwrap().connection("i"),
+            Some(&ConnExpr::id("x_i"))
+        );
+        validate::assert_clean(&d);
     }
 
     #[test]

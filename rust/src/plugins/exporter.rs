@@ -127,6 +127,10 @@ pub fn grouped_to_verilog(design: &Design, m: &Module) -> Result<String> {
         }
         s.push_str("  );\n");
     }
+    // Interface pragmas so a re-import of the structural Verilog
+    // reconstructs the module's interface declarations (round-trip
+    // oracle: export → import must not lose interface information).
+    s.push_str(&crate::plugins::pragma::pragma_comments(m));
     s.push_str("endmodule\n");
     Ok(s)
 }
@@ -248,6 +252,21 @@ mod tests {
         let s = grouped_to_verilog(&d, d.module("Top").unwrap()).unwrap();
         assert!(s.contains(".dbg()"));
         assert!(s.contains(".cfg(4'd5)"));
+    }
+
+    #[test]
+    fn grouped_pragmas_reconstruct_interfaces_on_reimport() {
+        let mut d = sample();
+        let top = d.module_mut("Top").unwrap();
+        top.ports.push(Port::new("ap_clk", Dir::In, 1));
+        top.interfaces.push(Interface::Clock {
+            port: "ap_clk".into(),
+        });
+        let s = grouped_to_verilog(&d, d.module("Top").unwrap()).unwrap();
+        assert!(s.contains("// pragma clock port=ap_clk module=Top"), "{s}");
+        let mut ms = crate::plugins::importer::import_verilog(&s).unwrap();
+        crate::plugins::pragma::apply_pragmas(&mut ms[0], &s).unwrap();
+        assert_eq!(ms[0].interface_of("ap_clk").unwrap().kind(), "clock");
     }
 
     #[test]

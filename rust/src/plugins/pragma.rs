@@ -78,6 +78,13 @@ pub fn extract_pragmas(source: &str) -> Vec<Pragma> {
 pub fn apply_pragmas(m: &mut Module, source: &str) -> Result<usize> {
     let mut created = 0;
     for p in extract_pragmas(source) {
+        // `module=` scopes a pragma to one module of a multi-module file
+        // (the exporter concatenates leaf sources into design_leaves.v).
+        if let Some(scope) = p.args.get("module") {
+            if scope != &m.name {
+                continue;
+            }
+        }
         match p.kind.as_str() {
             "clock" => {
                 let port = req(&p, "port")?;
@@ -128,6 +135,61 @@ pub fn apply_pragmas(m: &mut Module, source: &str) -> Result<usize> {
         }
     }
     Ok(created)
+}
+
+/// Emit `// pragma ...` comment lines that reconstruct `m`'s interfaces
+/// on re-import — the inverse of [`apply_pragmas`]. Every line carries a
+/// `module=` scope so concatenated multi-module files don't cross-apply.
+///
+/// Exact-port pragmas (clock/reset/nonpipeline/feedforward) come first;
+/// handshake bundles are folded into one trailing pattern pragma relying
+/// on the repo-wide `_vld`/`_rdy` suffix convention. Because pragma
+/// application only ever claims *uncovered* ports, this ordering keeps
+/// the broad handshake pattern from swallowing exactly-named ports.
+pub fn pragma_comments(m: &Module) -> String {
+    let mut lines: Vec<String> = Vec::new();
+    let scope = format!("module={}", m.name);
+    let mut has_handshake = false;
+    for iface in &m.interfaces {
+        match iface {
+            Interface::Clock { port } => {
+                lines.push(format!("// pragma clock port={} {scope}", regex::escape(port)));
+            }
+            Interface::Reset { port, active_high } => lines.push(format!(
+                "// pragma reset port={} active={} {scope}",
+                regex::escape(port),
+                if *active_high { "high" } else { "low" }
+            )),
+            Interface::NonPipeline { ports, .. } => {
+                for p in ports {
+                    lines.push(format!(
+                        "// pragma nonpipeline port={} {scope}",
+                        regex::escape(p)
+                    ));
+                }
+            }
+            Interface::Feedforward { ports, .. } => {
+                for p in ports {
+                    lines.push(format!(
+                        "// pragma feedforward port={} {scope}",
+                        regex::escape(p)
+                    ));
+                }
+            }
+            Interface::Handshake { .. } => has_handshake = true,
+        }
+    }
+    if has_handshake {
+        lines.push(format!(
+            "// pragma handshake pattern={{bundle}}{{role}} \
+             role.valid=_vld role.ready=_rdy role.data=.* {scope}"
+        ));
+    }
+    if lines.is_empty() {
+        String::new()
+    } else {
+        lines.join("\n") + "\n"
+    }
 }
 
 fn req<'a>(p: &'a Pragma, key: &str) -> Result<&'a str> {
@@ -221,5 +283,81 @@ endmodule
     #[test]
     fn non_pragma_comments_skipped() {
         assert!(extract_pragmas("// just a comment\n/* pragma x */").is_empty());
+    }
+
+    #[test]
+    fn module_scope_limits_application() {
+        let src = "// pragma clock port=clk module=A\n// pragma clock port=clk module=B\n";
+        let mut a = LeafBuilder::verilog_stub("A").port("clk", Dir::In, 1).build();
+        let mut c = LeafBuilder::verilog_stub("C").port("clk", Dir::In, 1).build();
+        assert_eq!(apply_pragmas(&mut a, src).unwrap(), 1);
+        assert_eq!(apply_pragmas(&mut c, src).unwrap(), 0);
+    }
+
+    #[test]
+    fn pragma_comments_roundtrip_interfaces() {
+        let mut m = LeafBuilder::verilog_stub("M")
+            .port("ap_clk", Dir::In, 1)
+            .port("ap_rst_n", Dir::In, 1)
+            .port("b0", Dir::Out, 32)
+            .port("b0_vld", Dir::Out, 1)
+            .port("b0_rdy", Dir::In, 1)
+            .port("b1", Dir::In, 16)
+            .port("cfg", Dir::In, 8)
+            .build();
+        m.interfaces.push(Interface::Clock {
+            port: "ap_clk".into(),
+        });
+        m.interfaces.push(Interface::Reset {
+            port: "ap_rst_n".into(),
+            active_high: false,
+        });
+        m.interfaces.push(Interface::Handshake {
+            name: "b0".into(),
+            data: vec!["b0".into()],
+            valid: "b0_vld".into(),
+            ready: "b0_rdy".into(),
+            clk: Some("ap_clk".into()),
+        });
+        m.interfaces.push(Interface::Feedforward {
+            name: "b1".into(),
+            ports: vec!["b1".into()],
+        });
+        m.interfaces.push(Interface::NonPipeline {
+            name: "cfg".into(),
+            ports: vec!["cfg".into()],
+        });
+        let text = pragma_comments(&m);
+        // Re-apply onto a bare copy of the module: every port must end up
+        // covered by an interface of the same kind.
+        let mut fresh = m.clone();
+        fresh.interfaces.clear();
+        apply_pragmas(&mut fresh, &text).unwrap();
+        assert!(fresh.uncovered_ports().is_empty(), "pragmas: {text}");
+        for (port, kind) in [
+            ("ap_clk", "clock"),
+            ("ap_rst_n", "reset"),
+            ("b0", "handshake"),
+            ("b0_vld", "handshake"),
+            ("b1", "feedforward"),
+            ("cfg", "nonpipeline"),
+        ] {
+            assert_eq!(
+                fresh.interface_of(port).map(|i| i.kind()),
+                Some(kind),
+                "port {port}"
+            );
+        }
+        // Scoped: the same text does nothing to a differently-named module.
+        let mut other = m.clone();
+        other.name = "Other".into();
+        other.interfaces.clear();
+        assert_eq!(apply_pragmas(&mut other, &text).unwrap(), 0);
+    }
+
+    #[test]
+    fn pragma_comments_empty_without_interfaces() {
+        let m = LeafBuilder::verilog_stub("M").port("a", Dir::In, 1).build();
+        assert_eq!(pragma_comments(&m), "");
     }
 }

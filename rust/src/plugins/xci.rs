@@ -138,6 +138,83 @@ pub fn manifest_for(
     Json::Obj(o).pretty()
 }
 
+/// Build an XCI manifest from an IR module — the inverse of
+/// [`import_xci`], used by `designs::synthetic` to materialize vendor-IP
+/// surrogate leaves on the text path. Ports, clock/reset/handshake bus
+/// interfaces, and resource metadata all survive a round trip through
+/// [`import_xci`]; feedforward/non-pipeline interfaces have no XCI bus
+/// type (callers qualify with `designs::synthetic::effective_source`).
+pub fn module_manifest(m: &Module) -> String {
+    use crate::util::json::JsonObj;
+    let mut o = JsonObj::new();
+    o.insert("ip_name", Json::str(&m.name));
+    o.insert("vlnv", Json::str(format!("rsir:ip:{}:1.0", m.name)));
+    o.insert(
+        "ports",
+        Json::Arr(
+            m.ports
+                .iter()
+                .map(|p| {
+                    let mut po = JsonObj::new();
+                    po.insert("name", Json::str(&p.name));
+                    po.insert("direction", Json::str(p.dir.as_str()));
+                    po.insert("width", Json::num(p.width as f64));
+                    Json::Obj(po)
+                })
+                .collect(),
+        ),
+    );
+    let mut ifaces = Vec::new();
+    for iface in &m.interfaces {
+        match iface {
+            Interface::Clock { port } => {
+                let mut io = JsonObj::new();
+                io.insert("name", Json::str(port));
+                io.insert("type", Json::str("clock"));
+                io.insert("port", Json::str(port));
+                ifaces.push(Json::Obj(io));
+            }
+            Interface::Reset { port, active_high } => {
+                let mut io = JsonObj::new();
+                io.insert("name", Json::str(port));
+                io.insert("type", Json::str("reset"));
+                io.insert("port", Json::str(port));
+                io.insert("active_high", Json::Bool(*active_high));
+                ifaces.push(Json::Obj(io));
+            }
+            Interface::Handshake {
+                name,
+                data,
+                valid,
+                ready,
+                clk,
+            } => {
+                let mut io = JsonObj::new();
+                io.insert("name", Json::str(name));
+                io.insert("type", Json::str("handshake"));
+                io.insert(
+                    "data",
+                    Json::Arr(data.iter().map(Json::str).collect()),
+                );
+                io.insert("valid", Json::str(valid));
+                io.insert("ready", Json::str(ready));
+                if let Some(c) = clk {
+                    io.insert("clk", Json::str(c));
+                }
+                ifaces.push(Json::Obj(io));
+            }
+            Interface::Feedforward { .. } | Interface::NonPipeline { .. } => {}
+        }
+    }
+    if !ifaces.is_empty() {
+        o.insert("bus_interfaces", Json::Arr(ifaces));
+    }
+    if let Some(r) = m.metadata.get("resource") {
+        o.insert("resource", r.clone());
+    }
+    Json::Obj(o).pretty()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +276,32 @@ mod tests {
     fn rejects_bad_manifest() {
         assert!(import_xci("not json").is_err());
         assert!(import_xci(r#"{"ports": []}"#).is_err());
+    }
+
+    #[test]
+    fn module_manifest_roundtrips_interfaces_and_resource() {
+        let m = crate::ir::builder::LeafBuilder::verilog_stub("ip0")
+            .clk_rst()
+            .handshake("b0", Dir::In, 32)
+            .handshake("b1", Dir::Out, 8)
+            .resource(Resources::new(10.0, 20.0, 1.0, 2.0, 0.0))
+            .build();
+        let man = module_manifest(&m);
+        let re = import_xci(&man).unwrap();
+        assert_eq!(re.name, "ip0");
+        assert_eq!(re.ports, m.ports);
+        assert_eq!(re.interfaces, m.interfaces);
+        let r = crate::ir::builder::module_resources(&re).unwrap();
+        assert_eq!((r.lut, r.ff), (10.0, 20.0));
+        // The re-imported module embeds the manifest verbatim, so a
+        // second round trip is textually stable.
+        let Body::Leaf {
+            source,
+            format: SourceFormat::Xci,
+        } = &re.body
+        else {
+            panic!("expected xci leaf body")
+        };
+        assert_eq!(*source, man);
     }
 }

@@ -26,16 +26,33 @@
 //! a 1-worker and an 8-worker [`Pool`] (what `RSIR_WORKERS=1` vs `8`
 //! resolve to) and requires byte-identical results.
 //!
+//! [`check_verilog_roundtrip`] drives the *text* path instead of the IR
+//! path: it materializes a plan as Verilog/manifest source text
+//! ([`synthetic::materialize_sources`]) and checks three invariants —
+//!
+//! * **verilog-fixpoint** — printing every parsed module with
+//!   [`crate::verilog::printer`] and reparsing yields a structurally
+//!   identical AST.
+//! * **import-bisimulation** — running the pipeline over the *imported
+//!   text* reconstructs exactly the leaf-channel multiset of the
+//!   directly-materialized IR.
+//! * **export-reimport** — exporting the analyzed design and importing
+//!   the export again converges: same leaf-channel multiset, and the
+//!   same [`digest_class`] (IR digest quotiented by cosmetic naming).
+//!
 //! A deliberately broken pass must trip at least one oracle — proven by
 //! the mutation smoke tests in `tests/fuzz_pipeline.rs`.
 
+use crate::designs::synthetic::{self, DesignPlan};
 use crate::ir::core::*;
 use crate::ir::graph::{BlockGraph, Endpoint, NetInfo};
 use crate::ir::schema::{design_from_json, design_to_json};
 use crate::ir::validate;
 use crate::passes::{registry, PassContext};
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonObj};
 use crate::util::pool::Pool;
+use crate::verilog::ast::VModule;
+use crate::verilog::parser::parse_file;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -396,6 +413,288 @@ pub fn reference_block_graph(m: &Module) -> BlockGraph {
     BlockGraph { nets, instances }
 }
 
+/// Print→parse AST fixpoint for one Verilog source, with an injectable
+/// printer (the hook the printer-mutation smoke test uses): parse the
+/// source, print every module through `print`, reparse the printed text,
+/// and require structural AST equality (spans are ignored by
+/// [`VModule`]'s equality).
+pub fn check_verilog_fixpoint_with<F>(source: &str, print: F) -> Result<(), String>
+where
+    F: Fn(&VModule) -> String,
+{
+    let f1 = parse_file(source).map_err(|e| format!("source failed to parse: {e:#}"))?;
+    let printed = f1
+        .modules
+        .iter()
+        .map(&print)
+        .collect::<Vec<_>>()
+        .join("\n");
+    let f2 = parse_file(&printed)
+        .map_err(|e| format!("printed text failed to reparse: {e:#}"))?;
+    if f1.modules != f2.modules {
+        let name = f1
+            .modules
+            .iter()
+            .zip(&f2.modules)
+            .find(|(a, b)| a != b)
+            .map(|(a, _)| a.name.clone())
+            .unwrap_or_else(|| {
+                format!(
+                    "<module count {} vs {}>",
+                    f1.modules.len(),
+                    f2.modules.len()
+                )
+            });
+        return Err(format!(
+            "print→parse AST fixpoint broken at module '{name}'"
+        ));
+    }
+    Ok(())
+}
+
+/// Digest of a design quotiented by cosmetic naming: metadata (design,
+/// module, instance) is stripped, interface cosmetic names / clock
+/// associations are normalized and interfaces sorted, and every wire of
+/// every grouped module is renamed to a canonical name derived from its
+/// endpoint signature (sorted `instance.port` endpoints plus width).
+///
+/// Two pipeline outputs that differ only in wire names (`flatten` mints
+/// `{inst}__{wire}`, `rebuild` mints `w_{inst}_{port}`), instance
+/// metadata, or interface labels land in the same class; any structural
+/// difference — a port, a width, a connection, a leaf source byte —
+/// changes it.
+pub fn digest_class(d: &Design) -> u64 {
+    let mut d = d.clone();
+    d.metadata = JsonObj::new();
+    for m in d.modules.values_mut() {
+        m.metadata = JsonObj::new();
+        canon_interfaces(m);
+        if m.is_grouped() {
+            canon_grouped(m);
+        }
+    }
+    synthetic::digest(&d)
+}
+
+/// Normalize interface cosmetic fields: handshake/feedforward/
+/// non-pipeline names are derived from their ports (iface-infer mints
+/// `{port}_inferred`, pragma patterns mint the bundle name — same
+/// structure, different label), handshake clock association is an
+/// annotation not a connection, and list order is canonicalized.
+fn canon_interfaces(m: &mut Module) {
+    for i in &mut m.interfaces {
+        match i {
+            Interface::Handshake {
+                name,
+                data,
+                valid,
+                clk,
+                ..
+            } => {
+                data.sort();
+                *name = valid.clone();
+                *clk = None;
+            }
+            Interface::Feedforward { name, ports } | Interface::NonPipeline { name, ports } => {
+                ports.sort();
+                *name = ports.first().cloned().unwrap_or_default();
+            }
+            Interface::Clock { .. } | Interface::Reset { .. } => {}
+        }
+    }
+    m.interfaces.sort_by_key(|i| format!("{i:?}"));
+}
+
+/// Canonically rename the wires of a grouped module and sort its
+/// instances/connections. In a DRC-clean design every wire has exactly
+/// two instance endpoints, so the endpoint signature is unique per wire
+/// (the dup-connection rule forbids ties) and the renaming is a
+/// bijection independent of the incoming names.
+fn canon_grouped(m: &mut Module) {
+    let mut sig: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    for inst in m.instances() {
+        for c in &inst.connections {
+            if let ConnExpr::Id(id) = &c.value {
+                sig.entry(id.clone())
+                    .or_default()
+                    .push(format!("{}.{}", inst.instance_name, c.port));
+            }
+        }
+    }
+    let mut keyed: Vec<(String, String, u32)> = m
+        .wires()
+        .iter()
+        .map(|w| {
+            let mut eps = sig.remove(&w.name).unwrap_or_default();
+            eps.sort();
+            (
+                format!("{}#{}", eps.join(" + "), w.width),
+                w.name.clone(),
+                w.width,
+            )
+        })
+        .collect();
+    keyed.sort();
+    let rename: BTreeMap<&str, String> = keyed
+        .iter()
+        .enumerate()
+        .map(|(i, (_, old, _))| (old.as_str(), format!("__rsw{i}")))
+        .collect();
+    let new_wires: Vec<Wire> = keyed
+        .iter()
+        .enumerate()
+        .map(|(i, (_, _, w))| Wire {
+            name: format!("__rsw{i}"),
+            width: *w,
+        })
+        .collect();
+    let renamed: BTreeMap<String, String> = rename
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect();
+    *m.wires_mut() = new_wires;
+    for inst in m.instances_mut() {
+        inst.metadata = JsonObj::new();
+        for c in &mut inst.connections {
+            if let ConnExpr::Id(id) = &mut c.value {
+                if let Some(nn) = renamed.get(id) {
+                    *id = nn.clone();
+                }
+            }
+        }
+        inst.connections.sort_by(|a, b| a.port.cmp(&b.port));
+    }
+    m.instances_mut()
+        .sort_by(|a, b| a.instance_name.cmp(&b.instance_name));
+}
+
+/// Run the Verilog round-trip oracle over a plan with the production
+/// printer. See [`check_verilog_roundtrip_with`].
+pub fn check_verilog_roundtrip(plan: &DesignPlan) -> OracleOutcome {
+    check_verilog_roundtrip_with(plan, crate::verilog::printer::print_module)
+}
+
+/// The Verilog round-trip oracle: materialize `plan` as source text, then
+/// require —
+///
+/// 1. **verilog-fixpoint** — each Verilog source survives a print→parse
+///    round trip through `print` with an identical AST;
+/// 2. **import-bisimulation** — importing the text
+///    ([`crate::plugins::importer::import_mixed`]) and running the
+///    analyze pipeline reconstructs the leaf-channel multiset of the
+///    directly-materialized design;
+/// 3. **export-reimport** — exporting that result and importing the
+///    export converges to the same leaf-channel multiset and the same
+///    [`digest_class`].
+///
+/// `print` is only used for invariant 1 (injectable so a deliberately
+/// broken printer is provably caught); invariants 2–3 exercise the real
+/// importer/exporter.
+pub fn check_verilog_roundtrip_with<F>(plan: &DesignPlan, print: F) -> OracleOutcome
+where
+    F: Fn(&VModule) -> String,
+{
+    let mut out = OracleOutcome::default();
+    let srcs = synthetic::materialize_sources(plan);
+
+    for (i, src) in srcs.verilog.iter().enumerate() {
+        if let Err(e) = check_verilog_fixpoint_with(src, &print) {
+            out.push("verilog-fixpoint", format!("verilog source {i}: {e}"));
+        }
+    }
+    if !out.is_clean() {
+        return out; // the text layer is broken; downstream noise helps nobody
+    }
+
+    let direct = synthetic::materialize(plan);
+    let ref_channels = leaf_channels(&direct);
+
+    let mut run1 = match crate::plugins::importer::import_mixed(
+        &srcs.top,
+        &srcs.verilog,
+        &srcs.xci,
+        &srcs.xo,
+    ) {
+        Ok(d) => d,
+        Err(e) => {
+            out.push(
+                "import-bisimulation",
+                format!("materialized sources failed to import: {e:#}"),
+            );
+            return out;
+        }
+    };
+    let mut ctx1 = PassContext::new();
+    if let Err(e) = analyze_pipeline(&mut run1, &mut ctx1) {
+        out.push(
+            "pipeline-runs",
+            format!("pipeline failed on imported text: {e:#}"),
+        );
+        return out;
+    }
+    let ch1 = leaf_channels(&run1);
+    if ch1 != ref_channels {
+        out.push("import-bisimulation", channel_diff(&ref_channels, &ch1));
+    }
+
+    let bundle = match crate::plugins::exporter::export(&run1) {
+        Ok(b) => b,
+        Err(e) => {
+            out.push("export-reimport", format!("export failed: {e:#}"));
+            return out;
+        }
+    };
+    let mut verilog2 = Vec::new();
+    let mut xci2 = Vec::new();
+    for (name, content) in &bundle.files {
+        if name.ends_with(".v") {
+            // Drop files carrying no modules (e.g. an empty design_top.v
+            // for a leaf-only design); keep unparsable ones so the
+            // importer surfaces the error as a violation.
+            if parse_file(content)
+                .map(|f| f.modules.is_empty())
+                .unwrap_or(false)
+            {
+                continue;
+            }
+            verilog2.push(content.clone());
+        } else if name.ends_with(".xci") {
+            xci2.push(content.clone());
+        }
+    }
+    let mut run2 =
+        match crate::plugins::importer::import_mixed(&run1.top, &verilog2, &xci2, &[]) {
+            Ok(d) => d,
+            Err(e) => {
+                out.push(
+                    "export-reimport",
+                    format!("exported sources failed to re-import: {e:#}"),
+                );
+                return out;
+            }
+        };
+    let mut ctx2 = PassContext::new();
+    if let Err(e) = analyze_pipeline(&mut run2, &mut ctx2) {
+        out.push(
+            "export-reimport",
+            format!("pipeline failed on re-imported export: {e:#}"),
+        );
+        return out;
+    }
+    let ch2 = leaf_channels(&run2);
+    if ch2 != ref_channels {
+        out.push("export-reimport", channel_diff(&ref_channels, &ch2));
+    }
+    let (c1, c2) = (digest_class(&run1), digest_class(&run2));
+    if c1 != c2 {
+        out.push(
+            "export-reimport",
+            format!("digest class diverges after export→re-import: {c1:#018x} vs {c2:#018x}"),
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -523,5 +822,90 @@ mod tests {
         let designs = vec![nested_sample(), nested_sample()];
         let out = check_workers_equivalence(&designs);
         assert!(out.is_clean(), "{}", out.render());
+    }
+
+    #[test]
+    fn digest_class_quotients_wire_names_and_metadata() {
+        let a = nested_sample();
+        let mut b = nested_sample();
+        // Rename Top's wires (flatten-style) and decorate with metadata:
+        // both are cosmetic, so the class must not move.
+        let top = b.module_mut("Top").unwrap();
+        for w in top.wires_mut() {
+            w.name = format!("mid__{}", w.name);
+        }
+        for inst in top.instances_mut() {
+            inst.metadata.insert("floorplan", Json::str("SLOT_X0Y0"));
+            for c in &mut inst.connections {
+                if let ConnExpr::Id(id) = &mut c.value {
+                    if id.starts_with('w') {
+                        *id = format!("mid__{id}");
+                    }
+                }
+            }
+        }
+        assert_ne!(synthetic::digest(&a), synthetic::digest(&b));
+        assert_eq!(digest_class(&a), digest_class(&b));
+        // A structural change (an extra wire) does move the class.
+        let mut c = nested_sample();
+        c.module_mut("Top")
+            .unwrap()
+            .wires_mut()
+            .push(Wire {
+                name: "dangling".into(),
+                width: 4,
+            });
+        assert_ne!(digest_class(&a), digest_class(&c));
+    }
+
+    #[test]
+    fn fixpoint_holds_for_printer_and_catches_mutations() {
+        let src = "module M (\n  input wire a,\n  output wire [7:0] y\n);\n  wire t;\n  sub s0 (\n    .i(a),\n    .o(t)\n  );\nendmodule\n";
+        check_verilog_fixpoint_with(src, crate::verilog::printer::print_module)
+            .expect("production printer is a fixpoint");
+        // A printer that drops the last port must be caught.
+        let broken = |m: &VModule| {
+            let mut m2 = m.clone();
+            m2.ports.pop();
+            crate::verilog::printer::print_module(&m2)
+        };
+        assert!(check_verilog_fixpoint_with(src, broken).is_err());
+    }
+
+    #[test]
+    fn verilog_roundtrip_clean_on_generated_plans() {
+        use crate::designs::synthetic::{DesignGen, SyntheticConfig};
+        use crate::util::rng::Rng;
+        let gen = DesignGen {
+            cfg: SyntheticConfig::default(),
+        };
+        let mut rng = Rng::new(7);
+        for case in 0..6 {
+            let plan = gen.generate(&mut rng);
+            let out = check_verilog_roundtrip(&plan);
+            assert!(out.is_clean(), "case {case}: {}", out.render());
+        }
+    }
+
+    #[test]
+    fn broken_printer_trips_verilog_fixpoint() {
+        use crate::designs::synthetic::{DesignGen, SyntheticConfig};
+        use crate::util::rng::Rng;
+        let gen = DesignGen {
+            cfg: SyntheticConfig::default(),
+        };
+        let mut rng = Rng::new(7);
+        let plan = gen.generate(&mut rng);
+        let broken = |m: &VModule| {
+            let mut m2 = m.clone();
+            m2.ports.pop();
+            crate::verilog::printer::print_module(&m2)
+        };
+        let out = check_verilog_roundtrip_with(&plan, broken);
+        assert!(
+            out.violated().contains(&"verilog-fixpoint"),
+            "{}",
+            out.render()
+        );
     }
 }

@@ -78,13 +78,29 @@ pub enum VItem {
 }
 
 /// A parsed Verilog module.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone)]
 pub struct VModule {
     pub name: String,
     pub params: Vec<VParam>,
     pub ports: Vec<VPort>,
     pub items: Vec<VItem>,
+    /// Byte span `[start, end)` of this module in the original source,
+    /// from the `module` keyword through `endmodule` inclusive. `(0, 0)`
+    /// for synthesized (non-parsed) modules. Ignored by equality so that
+    /// print→parse round trips compare structurally.
+    pub span: (usize, usize),
 }
+
+impl PartialEq for VModule {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+            && self.params == other.params
+            && self.ports == other.ports
+            && self.items == other.items
+    }
+}
+
+impl Eq for VModule {}
 
 impl VModule {
     pub fn new(name: impl Into<String>) -> VModule {
@@ -93,6 +109,19 @@ impl VModule {
             params: Vec::new(),
             ports: Vec::new(),
             items: Vec::new(),
+            span: (0, 0),
+        }
+    }
+
+    /// The module's own source text: the `span` slice of `src` when the
+    /// module was parsed from it, or the whole string as a fallback for
+    /// spans that are absent or out of bounds.
+    pub fn source_slice<'s>(&self, src: &'s str) -> &'s str {
+        let (a, b) = self.span;
+        if a < b && b <= src.len() && src.is_char_boundary(a) && src.is_char_boundary(b) {
+            &src[a..b]
+        } else {
+            src
         }
     }
 

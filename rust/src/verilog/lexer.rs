@@ -52,6 +52,8 @@ pub struct SpannedTok {
     pub start: usize,
     pub end: usize,
     pub line: usize,
+    /// 1-based column of the token's first character on `line`.
+    pub col: usize,
 }
 
 /// Lexer error (unterminated string/comment).
@@ -59,11 +61,13 @@ pub struct SpannedTok {
 pub struct LexError {
     pub msg: String,
     pub line: usize,
+    /// 1-based column where the offending construct starts.
+    pub col: usize,
 }
 
 impl fmt::Display for LexError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "lex error at line {}: {}", self.line, self.msg)
+        write!(f, "lex error at line {}:{}: {}", self.line, self.col, self.msg)
     }
 }
 
@@ -77,13 +81,16 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
     let mut out = Vec::new();
     let mut i = 0;
     let mut line = 1;
+    let mut line_start = 0usize;
     let n = b.len();
     while i < n {
         let c = b[i];
+        let col = i - line_start + 1;
         match c {
             b'\n' => {
                 line += 1;
                 i += 1;
+                line_start = i;
             }
             c if c.is_ascii_whitespace() => i += 1,
             b'/' if i + 1 < n && b[i + 1] == b'/' => {
@@ -99,10 +106,12 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                         return Err(LexError {
                             msg: "unterminated block comment".into(),
                             line: start_line,
+                            col,
                         });
                     }
                     if b[i] == b'\n' {
                         line += 1;
+                        line_start = i + 1;
                     }
                     if b[i] == b'*' && b[i + 1] == b'/' {
                         i += 2;
@@ -121,6 +130,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     }
                     if i < n && b[i] == b'\n' {
                         line += 1;
+                        line_start = i + 1;
                     }
                     i += 1;
                 }
@@ -128,6 +138,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     return Err(LexError {
                         msg: "unterminated string".into(),
                         line: start_line,
+                        col,
                     });
                 }
                 i += 1; // closing quote
@@ -136,6 +147,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     start,
                     end: i,
                     line: start_line,
+                    col,
                 });
             }
             c if c.is_ascii_alphabetic() || c == b'_' || c == b'\\' => {
@@ -156,6 +168,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     start,
                     end: i,
                     line,
+                    col,
                 });
             }
             c if c.is_ascii_digit() => {
@@ -175,6 +188,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     start,
                     end: i,
                     line,
+                    col,
                 });
             }
             b'\'' => {
@@ -189,6 +203,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     start,
                     end: i,
                     line,
+                    col,
                 });
             }
             b'`' => {
@@ -202,6 +217,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     start,
                     end: i,
                     line,
+                    col,
                 });
             }
             _ => {
@@ -224,6 +240,7 @@ pub fn lex(src: &str) -> Result<Vec<SpannedTok>, LexError> {
                     start,
                     end: i,
                     line,
+                    col,
                 });
             }
         }
@@ -288,6 +305,19 @@ mod tests {
     fn lex_errors() {
         assert!(lex("\"unterminated").is_err());
         assert!(lex("/* unterminated").is_err());
+    }
+
+    #[test]
+    fn columns_tracked_per_line() {
+        let st = lex("ab cd\n  efg \"s\" hi").unwrap();
+        assert_eq!((st[0].line, st[0].col), (1, 1)); // ab
+        assert_eq!((st[1].line, st[1].col), (1, 4)); // cd
+        assert_eq!((st[2].line, st[2].col), (2, 3)); // efg
+        assert_eq!((st[3].line, st[3].col), (2, 7)); // "s"
+        assert_eq!((st[4].line, st[4].col), (2, 11)); // hi
+        let e = lex("x\n  \"oops").unwrap_err();
+        assert_eq!((e.line, e.col), (2, 3));
+        assert!(e.to_string().contains("2:3"));
     }
 
     #[test]

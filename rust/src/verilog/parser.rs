@@ -79,16 +79,26 @@ impl<'a> P<'a> {
         if t.tok.is_sym(s) {
             Ok(())
         } else {
-            bail!("line {}: expected '{}', found '{}'", t.line, s, t.tok)
+            bail!(
+                "line {}:{}: expected '{}', found '{}'",
+                t.line,
+                t.col,
+                s,
+                t.tok
+            )
         }
     }
 
     fn expect_id(&mut self) -> Result<String> {
         let t = self.bump()?;
-        t.tok
-            .id()
-            .map(|s| s.to_string())
-            .ok_or_else(|| anyhow!("line {}: expected identifier, found '{}'", t.line, t.tok))
+        t.tok.id().map(|s| s.to_string()).ok_or_else(|| {
+            anyhow!(
+                "line {}:{}: expected identifier, found '{}'",
+                t.line,
+                t.col,
+                t.tok
+            )
+        })
     }
 
     /// Raw source text between token indices [from, to).
@@ -119,7 +129,8 @@ impl<'a> P<'a> {
     }
 
     fn module(&mut self) -> Result<VModule> {
-        self.bump()?; // module
+        let kw = self.bump()?; // module
+        let span_start = kw.start;
         let name = self.expect_id()?;
         let mut m = VModule::new(&name);
         self.params.clear();
@@ -142,7 +153,8 @@ impl<'a> P<'a> {
             }
             self.item(&mut m)?;
         }
-        self.bump()?; // endmodule
+        let end = self.bump()?; // endmodule
+        m.span = (span_start, end.end);
         Ok(m)
     }
 
@@ -172,9 +184,10 @@ impl<'a> P<'a> {
                 while !self.eof() {
                     match self.peek() {
                         Some(t) if t.is_sym("(") || t.is_sym("[") || t.is_sym("{") => depth += 1,
-                        Some(t) if t.is_sym("[") => depth += 1,
                         Some(t) if t.is_sym(")") && depth == 0 => break,
-                        Some(t) if (t.is_sym(")") || t.is_sym("]") || t.is_sym("}")) => depth -= 1,
+                        Some(t) if (t.is_sym(")") || t.is_sym("]") || t.is_sym("}")) => {
+                            depth = depth.saturating_sub(1)
+                        }
                         Some(t) if t.is_sym(",") && depth == 0 => break,
                         _ => {}
                     }
@@ -237,10 +250,16 @@ impl<'a> P<'a> {
             if cur_dir.is_none() {
                 m.ports.last_mut().unwrap().net = "undeclared".into();
             }
-            match self.bump()?.tok.clone() {
+            let t = self.bump()?;
+            match &t.tok {
                 Tok::Sym(s) if s == "," => continue,
                 Tok::Sym(s) if s == ")" => break,
-                t => bail!("port list: unexpected '{t}'"),
+                tok => bail!(
+                    "line {}:{}: port list: unexpected '{}'",
+                    t.line,
+                    t.col,
+                    tok
+                ),
             }
         }
         Ok(())
@@ -256,7 +275,7 @@ impl<'a> P<'a> {
             match self.peek() {
                 Some(t) if t.is_sym("[") || t.is_sym("(") => depth += 1,
                 Some(t) if t.is_sym("]") && depth == 0 => break,
-                Some(t) if t.is_sym("]") || t.is_sym(")") => depth -= 1,
+                Some(t) if t.is_sym("]") || t.is_sym(")") => depth = depth.saturating_sub(1),
                 Some(t) if t.is_sym(":") && depth == 0 && colon.is_none() => colon = Some(self.i),
                 _ => {}
             }
@@ -431,7 +450,15 @@ impl<'a> P<'a> {
     }
 
     fn nonansi_port_decl(&mut self, m: &mut VModule) -> Result<()> {
-        let dir = Dir::parse(&self.expect_id()?).unwrap();
+        let t = self.bump()?;
+        let dir = t.tok.id().and_then(Dir::parse).ok_or_else(|| {
+            anyhow!(
+                "line {}:{}: expected port direction, found '{}'",
+                t.line,
+                t.col,
+                t.tok
+            )
+        })?;
         let mut net = "wire".to_string();
         if self.peek_id("wire") || self.peek_id("reg") || self.peek_id("logic") {
             net = self.expect_id()?;
@@ -457,10 +484,16 @@ impl<'a> P<'a> {
                     net: net.clone(),
                 });
             }
-            match self.bump()?.tok.clone() {
+            let t = self.bump()?;
+            match &t.tok {
                 Tok::Sym(s) if s == "," => continue,
                 Tok::Sym(s) if s == ";" => break,
-                t => bail!("port decl: unexpected '{t}'"),
+                tok => bail!(
+                    "line {}:{}: port decl: unexpected '{}'",
+                    t.line,
+                    t.col,
+                    tok
+                ),
             }
         }
         Ok(())
@@ -478,7 +511,9 @@ impl<'a> P<'a> {
         while !self.eof() {
             match self.peek() {
                 Some(t) if t.is_sym("{") || t.is_sym("[") || t.is_sym("(") => depth += 1,
-                Some(t) if t.is_sym("}") || t.is_sym("]") || t.is_sym(")") => depth -= 1,
+                Some(t) if t.is_sym("}") || t.is_sym("]") || t.is_sym(")") => {
+                    depth = depth.saturating_sub(1)
+                }
                 Some(t) if t.is_sym("=") && depth == 0 => break,
                 _ => {}
             }
@@ -491,7 +526,9 @@ impl<'a> P<'a> {
         while !self.eof() {
             match self.peek() {
                 Some(t) if t.is_sym("{") || t.is_sym("[") || t.is_sym("(") => depth += 1,
-                Some(t) if t.is_sym("}") || t.is_sym("]") || t.is_sym(")") => depth -= 1,
+                Some(t) if t.is_sym("}") || t.is_sym("]") || t.is_sym(")") => {
+                    depth = depth.saturating_sub(1)
+                }
                 Some(t) if t.is_sym(";") && depth == 0 => break,
                 _ => {}
             }
@@ -583,7 +620,7 @@ impl<'a> P<'a> {
                     if t.is_sym("(") || t.is_sym("[") || t.is_sym("{") {
                         depth += 1;
                     } else if t.is_sym(")") || t.is_sym("]") || t.is_sym("}") {
-                        depth -= 1;
+                        depth = depth.saturating_sub(1);
                     } else if t.is_sym(",") && depth == 0 {
                         break;
                     }
@@ -686,7 +723,9 @@ impl<'a> P<'a> {
                     let t = self.bump()?;
                     match &t.tok {
                         Tok::Sym(s) if s == "(" || s == "[" || s == "{" => depth += 1,
-                        Tok::Sym(s) if s == ")" || s == "]" || s == "}" => depth -= 1,
+                        Tok::Sym(s) if s == ")" || s == "]" || s == "}" => {
+                            depth = depth.saturating_sub(1)
+                        }
                         Tok::Sym(s) if s == ";" && depth == 0 => return Ok(()),
                         _ => {}
                     }
@@ -954,6 +993,44 @@ endmodule
     #[test]
     fn errors_on_missing_endmodule() {
         assert!(parse_module("module X(input a);").is_err());
+    }
+
+    #[test]
+    fn module_spans_slice_own_source() {
+        let src = "// banner\nmodule A(); endmodule\nmodule B(input x); endmodule\n// tail";
+        let f = parse_file(src).unwrap();
+        assert_eq!(f.module("A").unwrap().source_slice(src), "module A(); endmodule");
+        assert_eq!(
+            f.module("B").unwrap().source_slice(src),
+            "module B(input x); endmodule"
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_and_column() {
+        let err = parse_module("module M(\n  input 4);\nendmodule").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("expected identifier"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_inputs_error_without_panic() {
+        // Each of these previously risked an unwrap or usize underflow;
+        // all must return (Ok or Err), never panic.
+        for src in [
+            "module M(a; endmodule",
+            "module M(); input; endmodule",
+            "module M(); assign ) = 1; endmodule",
+            "module M(); wire ]]] ; endmodule",
+            "module M(input 4); endmodule",
+            "module",
+            "module M #(parameter ) (); endmodule",
+            "module M(); sub s0 (.p(x))",
+            "module M(); output }; endmodule",
+        ] {
+            let _ = parse_file(src);
+        }
     }
 
     #[test]

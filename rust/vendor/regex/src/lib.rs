@@ -1,0 +1,832 @@
+//! Minimal in-tree regex engine.
+//!
+//! Implements the subset of the `regex` crate API that rsir uses
+//! (`Regex::new`, `is_match`, `captures`, named groups, `escape`) so the
+//! repository builds without any external dependency. The engine is a
+//! straightforward parse-to-AST, compile-to-bytecode, backtracking matcher.
+//!
+//! Supported syntax: literals, `\`-escapes (incl. `\d \D \w \W \s \S`),
+//! `.`, `|`, `*`, `+`, `?` (each with a lazy `?` suffix), `{m}`/`{m,}`/
+//! `{m,n}` counted repeats, `^`, `$`, `(...)`, `(?:...)`, `(?P<name>...)`,
+//! and `[...]` classes with ranges and negation. A bare `{` that does not
+//! start a valid counted repeat is a literal, matching the real crate's
+//! lenient behaviour for patterns like `m_axi_{bundle}{role}` before
+//! placeholder substitution.
+//!
+//! Backtracking is bounded by a step budget; pathological patterns fail to
+//! match rather than hang.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Pattern compilation error.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex parse error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, Error> {
+    Err(Error { msg: msg.into() })
+}
+
+/// Escape all regex metacharacters in `s` so it matches literally.
+/// Word characters (`[A-Za-z0-9_]`) pass through unchanged; everything
+/// else gets a backslash prefix (so `escape("{b}_{r}") == r"\{b\}_\{r\}"`).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() * 2);
+    for c in s.chars() {
+        if !(c.is_ascii_alphanumeric() || c == '_') {
+            out.push('\\');
+        }
+        out.push(c);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// AST
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum ClassItem {
+    Ch(char),
+    Range(char, char),
+    Digit,
+    NotDigit,
+    Word,
+    NotWord,
+    Space,
+    NotSpace,
+}
+
+impl ClassItem {
+    fn matches(&self, c: char) -> bool {
+        match self {
+            ClassItem::Ch(x) => c == *x,
+            ClassItem::Range(a, b) => *a <= c && c <= *b,
+            ClassItem::Digit => c.is_ascii_digit(),
+            ClassItem::NotDigit => !c.is_ascii_digit(),
+            ClassItem::Word => c.is_ascii_alphanumeric() || c == '_',
+            ClassItem::NotWord => !(c.is_ascii_alphanumeric() || c == '_'),
+            ClassItem::Space => c.is_whitespace(),
+            ClassItem::NotSpace => !c.is_whitespace(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Ast {
+    Empty,
+    Char(char),
+    Any,
+    Start,
+    End,
+    Class { neg: bool, items: Vec<ClassItem> },
+    Concat(Vec<Ast>),
+    Alt(Vec<Ast>),
+    Repeat { inner: Box<Ast>, min: u32, max: Option<u32>, greedy: bool },
+    Group { slot: Option<usize>, inner: Box<Ast> },
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+    n_groups: usize,
+    names: HashMap<String, usize>,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn alt(&mut self) -> Result<Ast, Error> {
+        let mut arms = vec![self.concat()?];
+        while self.eat('|') {
+            arms.push(self.concat()?);
+        }
+        if arms.len() == 1 {
+            Ok(arms.pop().unwrap())
+        } else {
+            Ok(Ast::Alt(arms))
+        }
+    }
+
+    fn concat(&mut self) -> Result<Ast, Error> {
+        let mut seq = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            seq.push(self.repeat()?);
+        }
+        Ok(match seq.len() {
+            0 => Ast::Empty,
+            1 => seq.pop().unwrap(),
+            _ => Ast::Concat(seq),
+        })
+    }
+
+    fn repeat(&mut self) -> Result<Ast, Error> {
+        let mut node = self.atom()?;
+        loop {
+            let (min, max) = match self.peek() {
+                Some('*') => {
+                    self.pos += 1;
+                    (0, None)
+                }
+                Some('+') => {
+                    self.pos += 1;
+                    (1, None)
+                }
+                Some('?') => {
+                    self.pos += 1;
+                    (0, Some(1))
+                }
+                Some('{') => match self.counted_repeat() {
+                    Some(r) => r,
+                    None => break, // literal `{`, handled by the next atom()
+                },
+                _ => break,
+            };
+            if matches!(node, Ast::Start | Ast::End | Ast::Empty) {
+                return err("repetition operator applied to an anchor");
+            }
+            let greedy = !self.eat('?');
+            node = Ast::Repeat { inner: Box::new(node), min, max, greedy };
+        }
+        Ok(node)
+    }
+
+    /// Try to parse `{m}`, `{m,}` or `{m,n}` at the current `{`. Returns
+    /// `None` (without consuming) when the braces are not a valid counted
+    /// repeat, so the `{` falls through as a literal character.
+    fn counted_repeat(&mut self) -> Option<(u32, Option<u32>)> {
+        let save = self.pos;
+        self.pos += 1; // `{`
+        let mut num = |p: &mut Self| -> Option<u32> {
+            let start = p.pos;
+            while matches!(p.peek(), Some(c) if c.is_ascii_digit()) {
+                p.pos += 1;
+            }
+            if p.pos == start {
+                return None;
+            }
+            p.chars[start..p.pos].iter().collect::<String>().parse().ok()
+        };
+        let min = match num(self) {
+            Some(m) if m <= 1000 => m,
+            _ => {
+                self.pos = save;
+                return None;
+            }
+        };
+        let max = if self.eat(',') {
+            match self.peek() {
+                Some('}') => None,
+                _ => match num(self) {
+                    Some(m) if m >= min && m <= 1000 => Some(m),
+                    _ => {
+                        self.pos = save;
+                        return None;
+                    }
+                },
+            }
+        } else {
+            Some(min)
+        };
+        if !self.eat('}') {
+            self.pos = save;
+            return None;
+        }
+        Some((min, max))
+    }
+
+    fn atom(&mut self) -> Result<Ast, Error> {
+        match self.bump() {
+            None => err("unexpected end of pattern"),
+            Some('(') => self.group(),
+            Some(')') => err("unmatched `)`"),
+            Some('[') => self.class(),
+            Some(']') => Ok(Ast::Char(']')),
+            Some('.') => Ok(Ast::Any),
+            Some('^') => Ok(Ast::Start),
+            Some('$') => Ok(Ast::End),
+            Some('*') | Some('+') => err("repetition operator with nothing to repeat"),
+            Some('?') => err("`?` with nothing to repeat"),
+            Some('\\') => self.escape_atom(),
+            Some(c) => Ok(Ast::Char(c)),
+        }
+    }
+
+    fn group(&mut self) -> Result<Ast, Error> {
+        let mut slot = None;
+        if self.eat('?') {
+            if self.eat(':') {
+                // non-capturing
+            } else if self.eat('P') || self.peek() == Some('<') {
+                if !self.eat('<') {
+                    return err("expected `<` after `(?P`");
+                }
+                let mut name = String::new();
+                loop {
+                    match self.bump() {
+                        Some('>') => break,
+                        Some(c) if c.is_ascii_alphanumeric() || c == '_' => name.push(c),
+                        Some(c) => return err(format!("bad character `{c}` in group name")),
+                        None => return err("unterminated group name"),
+                    }
+                }
+                if name.is_empty() {
+                    return err("empty group name");
+                }
+                self.n_groups += 1;
+                let idx = self.n_groups;
+                if self.names.insert(name.clone(), idx).is_some() {
+                    return err(format!("duplicate group name `{name}`"));
+                }
+                slot = Some(idx);
+            } else {
+                return err("unsupported group modifier after `(?`");
+            }
+        } else {
+            self.n_groups += 1;
+            slot = Some(self.n_groups);
+        }
+        let inner = self.alt()?;
+        if !self.eat(')') {
+            return err("unclosed group");
+        }
+        Ok(Ast::Group { slot, inner: Box::new(inner) })
+    }
+
+    fn class(&mut self) -> Result<Ast, Error> {
+        let neg = self.eat('^');
+        let mut items = Vec::new();
+        if self.eat(']') {
+            items.push(ClassItem::Ch(']'));
+        }
+        loop {
+            let c = match self.bump() {
+                None => return err("unterminated character class"),
+                Some(']') => break,
+                Some('\\') => match self.bump() {
+                    None => return err("trailing backslash in class"),
+                    Some('d') => {
+                        items.push(ClassItem::Digit);
+                        continue;
+                    }
+                    Some('D') => {
+                        items.push(ClassItem::NotDigit);
+                        continue;
+                    }
+                    Some('w') => {
+                        items.push(ClassItem::Word);
+                        continue;
+                    }
+                    Some('W') => {
+                        items.push(ClassItem::NotWord);
+                        continue;
+                    }
+                    Some('s') => {
+                        items.push(ClassItem::Space);
+                        continue;
+                    }
+                    Some('S') => {
+                        items.push(ClassItem::NotSpace);
+                        continue;
+                    }
+                    Some('n') => '\n',
+                    Some('t') => '\t',
+                    Some('r') => '\r',
+                    Some(c) => c,
+                },
+                Some(c) => c,
+            };
+            if self.peek() == Some('-') && self.chars.get(self.pos + 1) != Some(&']') {
+                self.pos += 1; // `-`
+                let hi = match self.bump() {
+                    None => return err("unterminated character class"),
+                    Some('\\') => match self.bump() {
+                        Some('n') => '\n',
+                        Some('t') => '\t',
+                        Some('r') => '\r',
+                        Some(c) => c,
+                        None => return err("trailing backslash in class"),
+                    },
+                    Some(c) => c,
+                };
+                if hi < c {
+                    return err(format!("invalid class range `{c}-{hi}`"));
+                }
+                items.push(ClassItem::Range(c, hi));
+            } else {
+                items.push(ClassItem::Ch(c));
+            }
+        }
+        Ok(Ast::Class { neg, items })
+    }
+
+    fn escape_atom(&mut self) -> Result<Ast, Error> {
+        match self.bump() {
+            None => err("trailing backslash"),
+            Some('d') => Ok(Ast::Class { neg: false, items: vec![ClassItem::Digit] }),
+            Some('D') => Ok(Ast::Class { neg: false, items: vec![ClassItem::NotDigit] }),
+            Some('w') => Ok(Ast::Class { neg: false, items: vec![ClassItem::Word] }),
+            Some('W') => Ok(Ast::Class { neg: false, items: vec![ClassItem::NotWord] }),
+            Some('s') => Ok(Ast::Class { neg: false, items: vec![ClassItem::Space] }),
+            Some('S') => Ok(Ast::Class { neg: false, items: vec![ClassItem::NotSpace] }),
+            Some('n') => Ok(Ast::Char('\n')),
+            Some('t') => Ok(Ast::Char('\t')),
+            Some('r') => Ok(Ast::Char('\r')),
+            Some('0') => Ok(Ast::Char('\0')),
+            Some(c) if c.is_ascii_alphanumeric() => {
+                err(format!("unsupported escape sequence `\\{c}`"))
+            }
+            Some(c) => Ok(Ast::Char(c)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiler (AST -> backtracking bytecode)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Inst {
+    Char(char),
+    Any,
+    Class { neg: bool, items: Vec<ClassItem> },
+    Start,
+    End,
+    Save(usize),
+    /// Try the first target before the second.
+    Split(usize, usize),
+    Jump(usize),
+    Match,
+}
+
+fn compile(ast: &Ast, prog: &mut Vec<Inst>) {
+    match ast {
+        Ast::Empty => {}
+        Ast::Char(c) => prog.push(Inst::Char(*c)),
+        Ast::Any => prog.push(Inst::Any),
+        Ast::Start => prog.push(Inst::Start),
+        Ast::End => prog.push(Inst::End),
+        Ast::Class { neg, items } => {
+            prog.push(Inst::Class { neg: *neg, items: items.clone() })
+        }
+        Ast::Concat(seq) => {
+            for a in seq {
+                compile(a, prog);
+            }
+        }
+        Ast::Alt(arms) => {
+            // split a1, (split a2, (... an)), each arm jumps to the common end
+            let mut jump_fixups = Vec::new();
+            let mut split_fixups = Vec::new();
+            for (k, arm) in arms.iter().enumerate() {
+                if k + 1 < arms.len() {
+                    let sp = prog.len();
+                    prog.push(Inst::Split(sp + 1, 0)); // second target patched
+                    split_fixups.push(sp);
+                }
+                compile(arm, prog);
+                if k + 1 < arms.len() {
+                    let jp = prog.len();
+                    prog.push(Inst::Jump(0)); // patched to end
+                    jump_fixups.push(jp);
+                    let next = prog.len();
+                    if let Inst::Split(_, b) = &mut prog[split_fixups[k]] {
+                        *b = next;
+                    }
+                }
+            }
+            let end = prog.len();
+            for jp in jump_fixups {
+                if let Inst::Jump(t) = &mut prog[jp] {
+                    *t = end;
+                }
+            }
+        }
+        Ast::Repeat { inner, min, max, greedy } => {
+            for _ in 0..*min {
+                compile(inner, prog);
+            }
+            match max {
+                None => {
+                    // star loop over the remaining (unbounded) part
+                    let l1 = prog.len();
+                    prog.push(Inst::Split(0, 0)); // patched below
+                    let body = prog.len();
+                    compile(inner, prog);
+                    prog.push(Inst::Jump(l1));
+                    let out = prog.len();
+                    prog[l1] = if *greedy {
+                        Inst::Split(body, out)
+                    } else {
+                        Inst::Split(out, body)
+                    };
+                }
+                Some(max) => {
+                    // (max - min) nested optionals; failing out of any one
+                    // jumps straight past the rest.
+                    let mut fixups = Vec::new();
+                    for _ in *min..*max {
+                        let sp = prog.len();
+                        prog.push(Inst::Split(0, 0));
+                        fixups.push(sp);
+                        compile(inner, prog);
+                    }
+                    let out = prog.len();
+                    for sp in fixups {
+                        let body = sp + 1;
+                        prog[sp] = if *greedy {
+                            Inst::Split(body, out)
+                        } else {
+                            Inst::Split(out, body)
+                        };
+                    }
+                }
+            }
+        }
+        Ast::Group { slot, inner } => {
+            if let Some(i) = slot {
+                prog.push(Inst::Save(2 * i));
+                compile(inner, prog);
+                prog.push(Inst::Save(2 * i + 1));
+            } else {
+                compile(inner, prog);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// Backtracking step budget: generous for the small patterns rsir compiles,
+/// but bounds pathological blowup (the engine then reports "no match").
+const STEP_LIMIT: usize = 1_000_000;
+
+struct Input<'t> {
+    /// (byte offset, char) for each char of the haystack.
+    chars: Vec<(usize, char)>,
+    /// Total byte length of the haystack.
+    len: usize,
+}
+
+impl<'t> Input<'t> {
+    fn new(text: &'t str) -> Self {
+        Input { chars: text.char_indices().collect(), len: text.len() }
+    }
+
+    fn byte_at(&self, sp: usize) -> usize {
+        self.chars.get(sp).map(|(b, _)| *b).unwrap_or(self.len)
+    }
+}
+
+fn exec(
+    prog: &[Inst],
+    input: &Input,
+    mut pc: usize,
+    mut sp: usize,
+    saves: &mut Vec<Option<usize>>,
+    steps: &mut usize,
+) -> bool {
+    loop {
+        *steps += 1;
+        if *steps > STEP_LIMIT {
+            return false;
+        }
+        match &prog[pc] {
+            Inst::Char(c) => {
+                if sp < input.chars.len() && input.chars[sp].1 == *c {
+                    sp += 1;
+                    pc += 1;
+                } else {
+                    return false;
+                }
+            }
+            Inst::Any => {
+                if sp < input.chars.len() && input.chars[sp].1 != '\n' {
+                    sp += 1;
+                    pc += 1;
+                } else {
+                    return false;
+                }
+            }
+            Inst::Class { neg, items } => {
+                if sp < input.chars.len() {
+                    let c = input.chars[sp].1;
+                    let hit = items.iter().any(|it| it.matches(c));
+                    if hit != *neg {
+                        sp += 1;
+                        pc += 1;
+                        continue;
+                    }
+                }
+                return false;
+            }
+            Inst::Start => {
+                if sp == 0 {
+                    pc += 1;
+                } else {
+                    return false;
+                }
+            }
+            Inst::End => {
+                if sp == input.chars.len() {
+                    pc += 1;
+                } else {
+                    return false;
+                }
+            }
+            Inst::Save(i) => {
+                if saves.len() <= *i {
+                    saves.resize(*i + 1, None);
+                }
+                saves[*i] = Some(input.byte_at(sp));
+                pc += 1;
+            }
+            Inst::Split(a, b) => {
+                let snapshot = saves.clone();
+                if exec(prog, input, *a, sp, saves, steps) {
+                    return true;
+                }
+                *saves = snapshot;
+                pc = *b;
+            }
+            Inst::Jump(t) => pc = *t,
+            Inst::Match => return true,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// A compiled regular expression.
+#[derive(Debug, Clone)]
+pub struct Regex {
+    pattern: String,
+    prog: Vec<Inst>,
+    n_groups: usize,
+    names: HashMap<String, usize>,
+}
+
+impl Regex {
+    pub fn new(pattern: &str) -> Result<Regex, Error> {
+        let mut p = Parser {
+            chars: pattern.chars().collect(),
+            pos: 0,
+            n_groups: 0,
+            names: HashMap::new(),
+        };
+        let ast = p.alt()?;
+        if p.pos != p.chars.len() {
+            // the only way alt() stops early is an unmatched `)`
+            return err("unmatched `)`");
+        }
+        let mut prog = vec![Inst::Save(0)];
+        compile(&ast, &mut prog);
+        prog.push(Inst::Save(1));
+        prog.push(Inst::Match);
+        Ok(Regex { pattern: pattern.to_string(), prog, n_groups: p.n_groups, names: p.names })
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.pattern
+    }
+
+    fn exec_at<'t>(&self, input: &Input<'t>, start: usize) -> Option<Vec<Option<usize>>> {
+        let mut saves = vec![None; 2 * (self.n_groups + 1)];
+        let mut steps = 0usize;
+        if exec(&self.prog, input, 0, start, &mut saves, &mut steps) {
+            Some(saves)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_match(&self, text: &str) -> bool {
+        let input = Input::new(text);
+        (0..=input.chars.len()).any(|s| self.exec_at(&input, s).is_some())
+    }
+
+    /// Leftmost match with capture groups, or `None`.
+    pub fn captures<'t>(&self, text: &'t str) -> Option<Captures<'t>> {
+        let input = Input::new(text);
+        for s in 0..=input.chars.len() {
+            if let Some(saves) = self.exec_at(&input, s) {
+                return Some(Captures { text, saves, names: self.names.clone() });
+            }
+        }
+        None
+    }
+
+    /// Leftmost whole-pattern match, or `None`.
+    pub fn find<'t>(&self, text: &'t str) -> Option<Match<'t>> {
+        self.captures(text).and_then(|c| c.get(0))
+    }
+}
+
+/// Capture groups of a single match. Group 0 is the whole match.
+pub struct Captures<'t> {
+    text: &'t str,
+    saves: Vec<Option<usize>>,
+    names: HashMap<String, usize>,
+}
+
+impl<'t> Captures<'t> {
+    pub fn get(&self, i: usize) -> Option<Match<'t>> {
+        let start = *self.saves.get(2 * i)?;
+        let end = *self.saves.get(2 * i + 1)?;
+        match (start, end) {
+            (Some(s), Some(e)) if s <= e => {
+                Some(Match { text: &self.text[s..e], start: s, end: e })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self, name: &str) -> Option<Match<'t>> {
+        self.get(*self.names.get(name)?)
+    }
+}
+
+/// A single matched region of the haystack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Match<'t> {
+    text: &'t str,
+    start: usize,
+    end: usize,
+}
+
+impl<'t> Match<'t> {
+    pub fn as_str(&self) -> &'t str {
+        self.text
+    }
+
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    pub fn end(&self) -> usize {
+        self.end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_and_alternation() {
+        let re = Regex::new("^(?:clk|clock)$").unwrap();
+        assert!(re.is_match("clk"));
+        assert!(re.is_match("clock"));
+        assert!(!re.is_match("clk2"));
+        assert!(!re.is_match("aclk"));
+    }
+
+    #[test]
+    fn bad_patterns_error() {
+        assert!(Regex::new("(").is_err());
+        assert!(Regex::new(")").is_err());
+        assert!(Regex::new("a)b").is_err());
+        assert!(Regex::new("[abc").is_err());
+        assert!(Regex::new("*a").is_err());
+        assert!(Regex::new("(?P<x").is_err());
+        assert!(Regex::new("(?=look)").is_err());
+    }
+
+    #[test]
+    fn escape_matches_real_crate_shape() {
+        assert_eq!(escape("{bundle}_{role}"), r"\{bundle\}_\{role\}");
+        assert_eq!(escape("m_axi_x"), "m_axi_x");
+        assert_eq!(escape("a.b*c"), r"a\.b\*c");
+    }
+
+    #[test]
+    fn named_lazy_groups_like_iface_rules() {
+        // The exact shape apply_handshake_pattern builds after substitution.
+        let re =
+            Regex::new(r"^m_axi_(?P<bundle>.*?)(?P<role>(?:AWVALID|WVALID|ARVALID))$").unwrap();
+        let c = re.captures("m_axi_gmem0AWVALID").unwrap();
+        assert_eq!(c.name("bundle").unwrap().as_str(), "gmem0");
+        assert_eq!(c.name("role").unwrap().as_str(), "AWVALID");
+        assert!(re.captures("m_axi_gmem0BOGUS").is_none());
+    }
+
+    #[test]
+    fn lazy_vs_greedy() {
+        let re = Regex::new("^(?P<b>.*?)(?P<r>_vld|_rdy|)$").unwrap();
+        let c = re.captures("b0_vld").unwrap();
+        assert_eq!(c.name("b").unwrap().as_str(), "b0");
+        assert_eq!(c.name("r").unwrap().as_str(), "_vld");
+        let g = Regex::new("^(?P<b>.*)(?P<r>_vld|)$").unwrap();
+        let c = g.captures("b0_vld").unwrap();
+        // greedy .* swallows everything; the empty alternative then matches
+        assert_eq!(c.name("b").unwrap().as_str(), "b0_vld");
+    }
+
+    #[test]
+    fn escaped_braces_are_literal() {
+        let re = Regex::new(r"^\{bundle\}_\{role\}$").unwrap();
+        assert!(re.is_match("{bundle}_{role}"));
+        // bare braces that are not counted repeats stay literal
+        let re2 = Regex::new("^a{bundle}$").unwrap();
+        assert!(re2.is_match("a{bundle}"));
+    }
+
+    #[test]
+    fn counted_repeats() {
+        let re = Regex::new("^a{2,3}$").unwrap();
+        assert!(!re.is_match("a"));
+        assert!(re.is_match("aa"));
+        assert!(re.is_match("aaa"));
+        assert!(!re.is_match("aaaa"));
+        let re = Regex::new(r"^\d{2}$").unwrap();
+        assert!(re.is_match("42"));
+        assert!(!re.is_match("4"));
+    }
+
+    #[test]
+    fn classes_and_predefined() {
+        let re = Regex::new("^[a-z_][a-z0-9_]*$").unwrap();
+        assert!(re.is_match("ap_clk"));
+        assert!(!re.is_match("0bad"));
+        let re = Regex::new(r"^\w+$").unwrap();
+        assert!(re.is_match("wide_word_7"));
+        assert!(!re.is_match("no space"));
+        let re = Regex::new("^[^0-9]+$").unwrap();
+        assert!(re.is_match("abc"));
+        assert!(!re.is_match("a1"));
+    }
+
+    #[test]
+    fn unanchored_search_finds_leftmost() {
+        let re = Regex::new("b+").unwrap();
+        let m = re.find("aabbbcc").unwrap();
+        assert_eq!(m.as_str(), "bbb");
+        assert_eq!((m.start(), m.end()), (2, 5));
+    }
+
+    #[test]
+    fn plain_star_and_dot() {
+        let re = Regex::new("^scalar_.*$").unwrap();
+        assert!(re.is_match("scalar_in0"));
+        assert!(!re.is_match("vector_in0"));
+        let re = Regex::new("^.*_mc$").unwrap();
+        assert!(re.is_match("leaf0_mc"));
+        assert!(!re.is_match("leaf0"));
+    }
+
+    #[test]
+    fn dot_does_not_match_newline() {
+        let re = Regex::new("^a.b$").unwrap();
+        assert!(re.is_match("axb"));
+        assert!(!re.is_match("a\nb"));
+    }
+
+    #[test]
+    fn unnamed_groups_capture() {
+        let re = Regex::new("^(in|out)(\\d+)$").unwrap();
+        let c = re.captures("in42").unwrap();
+        assert_eq!(c.get(1).unwrap().as_str(), "in");
+        assert_eq!(c.get(2).unwrap().as_str(), "42");
+        assert_eq!(c.get(0).unwrap().as_str(), "in42");
+    }
+}
