@@ -1,0 +1,115 @@
+//! Bench: the `rsir serve` warm-cache path — a cold `flow` job against a
+//! freshly booted daemon vs an identical resubmit on the same (now warm)
+//! daemon, where the result memo answers without recompiling. Every
+//! response is also checked byte-identical to the one-shot
+//! `run_batch_local` lane, so the speedup being measured is provably
+//! "same bytes, less work".
+//!
+//! `--smoke` shrinks the design and run count for CI; `--out FILE` writes
+//! the stats as JSON (uploaded as the `BENCH_serve.json` CI artifact).
+//! CI asserts the warm resubmit is at least 2x faster than the cold run.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use rsir::server::client::{run_batch_local, run_batch_remote};
+use rsir::server::{scratch_socket, Bind, ServeConfig, Server};
+use rsir::util::bench::fmt_dur;
+use rsir::util::json::{Json, JsonObj};
+
+fn median(mut v: Vec<Duration>) -> Duration {
+    v.sort();
+    v[v.len() / 2]
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let bench_name = if smoke { "cnn:6x4" } else { "cnn:13x8" };
+    let runs = if smoke { 3 } else { 5 };
+    let cold_line = format!(
+        r#"{{"id":"c","type":"flow","params":{{"bench":"{bench_name}","device":"u250","sa_refine":false,"seed":7}}}}"#
+    );
+    // Identical params, different id: a result-memo hit on a warm daemon.
+    let warm_line = cold_line.replacen(r#""id":"c""#, r#""id":"w""#, 1);
+    let timeout = Duration::from_secs(600);
+
+    // The one-shot lane's verdict on the same two requests — the byte
+    // baseline every daemon response must match exactly.
+    let local = run_batch_local(&[cold_line.clone(), warm_line.clone()]);
+    assert!(local[0].contains(r#""ok":true"#), "{}", local[0]);
+
+    println!("== rsir serve warm-cache path ({bench_name}, {runs} cold/warm pairs) ==");
+    let (mut cold_times, mut warm_times) = (Vec::new(), Vec::new());
+    for run in 0..runs {
+        // A fresh daemon per run keeps the cold measurement honest: no
+        // cache state survives from the previous pair.
+        let mut cfg = ServeConfig::new(Bind::Unix(scratch_socket("bench")));
+        cfg.workers = 2;
+        cfg.quiet = true;
+        let server = Server::bind(cfg).unwrap();
+        let endpoint = server.endpoint();
+        let handle = thread::spawn(move || server.run());
+
+        let t0 = Instant::now();
+        let cold = run_batch_remote(&endpoint, &[cold_line.clone()], timeout).unwrap();
+        let cold_t = t0.elapsed();
+        let t1 = Instant::now();
+        let warm = run_batch_remote(&endpoint, &[warm_line.clone()], timeout).unwrap();
+        let warm_t = t1.elapsed();
+
+        assert_eq!(cold[0], local[0], "cold daemon response drifted from one-shot");
+        assert_eq!(warm[0], local[1], "warm daemon response drifted from one-shot");
+
+        let ack = run_batch_remote(
+            &endpoint,
+            &[r#"{"id":"q","type":"shutdown"}"#.to_string()],
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        assert!(ack[0].contains("shutting_down"), "{}", ack[0]);
+        handle.join().unwrap().unwrap();
+
+        println!(
+            "run {run}: cold={:>10} warm={:>10}",
+            fmt_dur(cold_t),
+            fmt_dur(warm_t)
+        );
+        cold_times.push(cold_t);
+        warm_times.push(warm_t);
+    }
+
+    let cold_med = median(cold_times);
+    let warm_med = median(warm_times);
+    let speedup = cold_med.as_secs_f64() / warm_med.as_secs_f64().max(1e-12);
+    println!(
+        "cold median={} warm median={} speedup={speedup:.1}x",
+        fmt_dur(cold_med),
+        fmt_dur(warm_med)
+    );
+
+    if let Some(path) = &out {
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::str("serve"));
+        o.insert("design", Json::str(bench_name));
+        o.insert("runs", Json::num(runs as f64));
+        o.insert("smoke", Json::Bool(smoke));
+        o.insert("cold_median_ns", Json::num(cold_med.as_nanos() as f64));
+        o.insert("warm_median_ns", Json::num(warm_med.as_nanos() as f64));
+        o.insert("speedup", Json::num(speedup));
+        o.insert("byte_identical", Json::Bool(true));
+        std::fs::write(path, Json::Obj(o).pretty()).unwrap();
+        println!("wrote {path}");
+    }
+    assert!(
+        speedup >= 2.0,
+        "warm resubmit must beat the cold run >=2x (got {speedup:.2}x)"
+    );
+    println!("\nserve bench complete");
+}

@@ -4,11 +4,12 @@
 //! frequency. "This automation is implemented as a standalone RIR
 //! plugin … that can be reused across different designs."
 
-use crate::coordinator::flow::{run_hlps, FlowConfig};
+use crate::coordinator::flow::{run_hlps_warm, AnalyzedDesign, FlowConfig, FlowWarm};
 use crate::device::model::VirtualDevice;
 use crate::ir::core::Design;
 use crate::util::pool::Pool;
 use anyhow::Result;
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct ExploreRow {
@@ -38,14 +39,35 @@ pub fn explore(
     base_cfg: &FlowConfig,
     pool: &Pool,
 ) -> Result<Vec<ExploreRow>> {
+    explore_warm(design, dev, limits, base_cfg, pool, None)
+}
+
+/// [`explore`] with an optional pre-analyzed snapshot of `design`. Every
+/// sweep point runs the same stage-1–2 result regardless of its
+/// `util_limit` (analysis is utilization-independent), so a daemon hands
+/// its cached [`AnalyzedDesign`] to the whole sweep — a per-point
+/// wall-time win that, per the flow's warm-state contract, never changes
+/// a row.
+pub fn explore_warm(
+    design: &Design,
+    dev: &VirtualDevice,
+    limits: &[f64],
+    base_cfg: &FlowConfig,
+    pool: &Pool,
+    analyzed: Option<Arc<AnalyzedDesign>>,
+) -> Result<Vec<ExploreRow>> {
     let rows = pool.par_map(limits.to_vec(), |limit| {
         let mut d = design.clone();
         let mut cfg = base_cfg.clone();
         cfg.util_limit = limit;
+        let mut warm = FlowWarm {
+            analyzed: analyzed.clone(),
+            ..Default::default()
+        };
         // The sweep wants the exact limit, not the auto-relaxed one; an
         // infeasible point is itself a data point, recorded as an
         // unroutable row rather than aborting the sweep.
-        match run_hlps(&mut d, dev, &cfg) {
+        match run_hlps_warm(&mut d, dev, &cfg, &mut warm) {
             Ok(report) => ExploreRow {
                 util_limit: limit,
                 max_slot_util: report.optimized.timing.max_util,
@@ -124,6 +146,28 @@ mod tests {
             wl.windows(2).all(|w| w[1] <= w[0] + 1e-6),
             "wirelength not monotone: {wl:?}"
         );
+    }
+
+    #[test]
+    fn warm_sweep_matches_cold() {
+        let dev = builtin::by_name("u250").unwrap();
+        let g = cnn::generate(&CnnConfig { rows: 4, cols: 3 }).unwrap();
+        let cfg = FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        };
+        let pool = Pool::new(1);
+        let limits = [0.55, 0.85];
+        let cold = explore(&g.design, &dev, &limits, &cfg, &pool).unwrap();
+        let snap = Arc::new(crate::coordinator::flow::analyze_design(&g.design).unwrap());
+        let warm = explore_warm(&g.design, &dev, &limits, &cfg, &pool, Some(snap)).unwrap();
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.util_limit, b.util_limit);
+            assert!(a.max_slot_util == b.max_slot_util || (a.max_slot_util.is_nan() && b.max_slot_util.is_nan()));
+            assert!(a.wirelength == b.wirelength || (a.wirelength.is_nan() && b.wirelength.is_nan()));
+            assert_eq!(a.fmax_mhz, b.fmax_mhz);
+            assert_eq!(a.routable, b.routable);
+        }
     }
 
     #[test]

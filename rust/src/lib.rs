@@ -27,6 +27,10 @@
 //!   driver behind `rsir fuzz` and the scheduled CI fuzz job;
 //! * [`coordinator`] — the four-stage HLPS flow of §3.4 and the parallel
 //!   synthesis driver of §4.3;
+//! * [`server`] — `rsir serve`, the resident compilation daemon: a
+//!   line-delimited JSON protocol, a bounded deterministic job queue,
+//!   and warm cross-request caches whose results are byte-identical to
+//!   the one-shot CLI;
 //! * [`runtime`] — the PJRT loader executing AOT-compiled JAX/Pallas
 //!   artifacts from the floorplan hot path.
 
@@ -41,6 +45,7 @@ pub mod ir;
 pub mod passes;
 pub mod plugins;
 pub mod runtime;
+pub mod server;
 pub mod testing;
 pub mod timing;
 pub mod util;

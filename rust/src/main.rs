@@ -24,6 +24,28 @@
 //!                                      imported, analyzed, exported and
 //!                                      re-imported; failures shrink to a
 //!                                      minimal .v counterexample
+//! rsir fuzz --daemon [--seed N] [--cases M] [--out f.json]
+//!                                      daemon-equivalence lane: boot a
+//!                                      real `rsir serve`, submit every
+//!                                      generated design over concurrent
+//!                                      connections (with warm-cache
+//!                                      resubmits and a mid-flight
+//!                                      cancellation) and require every
+//!                                      response byte-identical to the
+//!                                      one-shot lane
+//! rsir serve (--socket p | --port n) [--workers N] [--cache N]
+//!           [--max-queue N] [--quiet]  resident compilation daemon:
+//!                                      line-delimited JSON jobs over a
+//!                                      unix socket or loopback TCP, warm
+//!                                      cross-request caches
+//! rsir submit (--socket p | --port n | --local) [--file reqs.jsonl]
+//!           [--timeout-ms N]           ship request lines (stdin or
+//!                                      --file) to a daemon and print one
+//!                                      response line per request;
+//!                                      --local runs the identical
+//!                                      one-shot lane without a daemon
+//! rsir version                         print the crate version (also
+//!                                      reported in the daemon `hello`)
 //! ```
 //!
 //! The global `--workers N` flag (or the `RSIR_WORKERS` environment
@@ -45,9 +67,15 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
         &argv,
-        &["bench", "device", "util", "only", "out", "seed", "workers", "ir", "cases", "sa-workers"],
+        &[
+            "bench", "device", "util", "only", "out", "seed", "workers", "ir", "cases",
+            "sa-workers", "socket", "port", "cache", "max-queue", "file", "timeout-ms",
+        ],
     );
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let mut cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if args.has_flag("version") {
+        cmd = "version";
+    }
     if let Err(e) = dispatch(cmd, &args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -71,6 +99,18 @@ fn flow_config(args: &Args) -> flow::FlowConfig {
 /// Effective worker-count override: `--workers N` when given and parseable.
 fn workers_cli(args: &Args) -> Option<usize> {
     args.get("workers").and_then(|v| v.parse::<usize>().ok())
+}
+
+/// Daemon endpoint from `--socket <path>` or `--port <n>` (exactly one).
+fn bind_from_args(args: &Args) -> Result<rsir::server::Bind> {
+    match (args.get("socket"), args.get("port")) {
+        (Some(path), None) => Ok(rsir::server::Bind::Unix(std::path::PathBuf::from(path))),
+        (None, Some(port)) => Ok(rsir::server::Bind::Tcp(
+            port.parse()
+                .map_err(|_| anyhow::anyhow!("--port must be a number, got '{port}'"))?,
+        )),
+        _ => bail!("exactly one of --socket <path> or --port <n> is required"),
+    }
 }
 
 fn dispatch(cmd: &str, args: &Args) -> Result<()> {
@@ -195,6 +235,34 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 return Ok(());
             }
             let seed = args.get_usize("seed", 0) as u64;
+            if args.has_flag("daemon") {
+                // Daemon-equivalence lane: every daemon response byte must
+                // match the one-shot CLI's (see server module docs).
+                let cases = args.get_usize("cases", 32);
+                let t0 = Instant::now();
+                let rep = rsir::testing::fuzz::run_daemon(seed, cases, &cfg);
+                if rep.is_clean() {
+                    println!(
+                        "fuzz --daemon: {cases} designs from seed {seed} byte-identical \
+                         between daemon and one-shot lanes in {:.2?}",
+                        t0.elapsed()
+                    );
+                    return Ok(());
+                }
+                for v in &rep.violations {
+                    eprintln!("  {v}");
+                }
+                if let Some(json) = &rep.minimal_json {
+                    let out = args.get_or("out", "fuzz_daemon_counterexample.json");
+                    std::fs::write(out, json)?;
+                    eprintln!("minimal counterexample IR written to {out}");
+                }
+                bail!(
+                    "daemon-equivalence violated ({} violation(s); replay: rsir fuzz \
+                     --daemon --seed {seed} --cases {cases})",
+                    rep.violations.len()
+                );
+            }
             let cases = args.get_usize("cases", 64);
             let t0 = Instant::now();
             if args.has_flag("verilog") {
@@ -354,13 +422,54 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             bundle.write_to_dir(std::path::Path::new(outdir))?;
             println!("wrote {} files to {outdir}", bundle.files.len());
         }
+        "serve" => {
+            let mut cfg = rsir::server::ServeConfig::new(bind_from_args(args)?);
+            if let Some(w) = workers_cli(args) {
+                cfg.workers = w;
+            }
+            cfg.cache_cap = args.get_usize("cache", cfg.cache_cap);
+            cfg.max_queue = args.get_usize("max-queue", cfg.max_queue);
+            cfg.quiet = args.has_flag("quiet");
+            rsir::server::serve(cfg)?;
+        }
+        "submit" => {
+            let text = match args.get("file") {
+                Some(path) => std::fs::read_to_string(path)?,
+                None => {
+                    let mut buf = String::new();
+                    std::io::Read::read_to_string(&mut std::io::stdin(), &mut buf)?;
+                    buf
+                }
+            };
+            let lines: Vec<String> = text.lines().map(str::to_string).collect();
+            let responses = if args.has_flag("local") {
+                // The one-shot lane: same requests, same bytes, no daemon.
+                rsir::server::client::run_batch_local(&lines)
+            } else {
+                let timeout = std::time::Duration::from_millis(
+                    args.get_usize("timeout-ms", 300_000) as u64,
+                );
+                rsir::server::client::run_batch_remote(&bind_from_args(args)?, &lines, timeout)?
+            };
+            for line in responses {
+                println!("{line}");
+            }
+        }
+        "version" => {
+            println!(
+                "rsir {} (daemon protocol {})",
+                rsir::server::protocol::VERSION,
+                rsir::server::protocol::PROTOCOL_VERSION
+            );
+        }
         "help" | "--help" => {
             println!("rsir — RapidStream IR (ICCAD'24 reproduction)");
-            println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 import export fuzz");
+            println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 import export fuzz serve submit version");
             println!("global: --workers N (or RSIR_WORKERS) sizes the evaluation pool");
             println!("SA: --sa-workers N parallelizes annealing chains (same results for any N)");
             println!("pass registry: `rsir passes` lists it; `rsir pipeline <spec>` runs one");
             println!("fuzzing: `rsir fuzz --seed N --cases M` replays/shrinks oracle failures");
+            println!("daemon: `rsir serve --socket /tmp/rsir.sock` + `rsir submit --socket ... --file reqs.jsonl`");
         }
         other => bail!("unknown command '{other}' (try 'rsir help')"),
     }

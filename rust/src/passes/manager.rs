@@ -33,7 +33,12 @@ pub struct Diagnostic {
 }
 
 /// Shared state threaded through a pass pipeline.
-#[derive(Debug)]
+///
+/// `Clone` is deliberate: the flow snapshots the context after the
+/// analysis stage ([`crate::coordinator::flow::AnalyzedDesign`]) so a
+/// daemon can resume stages 3–4 from warm state — the clone carries the
+/// log, name map, and the warm connectivity index.
+#[derive(Debug, Clone)]
 pub struct PassContext {
     pub namemap: NameMap,
     /// Run DRC after each pass and fail on violations.

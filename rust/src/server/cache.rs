@@ -1,0 +1,270 @@
+//! Warm cross-request state for the daemon: a deterministic LRU map and
+//! the three caches `rsir serve` keeps across jobs.
+//!
+//! The cache-key design enforces the determinism contract structurally:
+//! every cached value is a **pure function of its key**, so cache state
+//! can change wall time but never a single result byte.
+//!
+//! | cache         | key                                                    | value |
+//! |---------------|--------------------------------------------------------|-------|
+//! | `analyzed`    | FNV-1a digest of the *input* IR                        | [`AnalyzedDesign`] (stage-1–2 snapshot) |
+//! | `cost_models` | (digest, device, `util_limit` bits, `die_weight` bits) | [`CostModel`] |
+//! | `results`     | FNV-1a of the canonical request JSON (type + params)   | canonical result payload |
+//!
+//! Floats enter keys as their IEEE bit patterns (`f64::to_bits`), so two
+//! requests share a model only when the configuration is bit-identical.
+//! Only *completed* computations are inserted — a canceled job can never
+//! poison a cache — and concurrent misses on the same key both compute
+//! (idempotent by the purity argument above; the last insert wins).
+
+use crate::coordinator::flow::AnalyzedDesign;
+use crate::floorplan::cost::CostModel;
+use crate::util::json::{Json, JsonObj};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// A small deterministic LRU map: recency is a monotone tick, eviction
+/// removes the smallest tick (an O(n) scan — caps are small and the scan
+/// order over a `BTreeMap` is deterministic). `cap == 0` disables the
+/// cache entirely (every `get` misses, `put` is a no-op) — that is what
+/// the one-shot lane runs with.
+#[derive(Debug)]
+pub struct Lru<K: Ord + Clone, V> {
+    cap: usize,
+    map: BTreeMap<K, (u64, V)>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Ord + Clone, V: Clone> Lru<K, V> {
+    pub fn new(cap: usize) -> Self {
+        Lru {
+            cap,
+            map: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some((t, v)) => {
+                *t = self.tick;
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, key: K, value: V) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        self.map.insert(key, (self.tick, value));
+        if self.map.len() > self.cap {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = oldest {
+                self.map.remove(&k);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            len: self.map.len(),
+            cap: self.cap,
+        }
+    }
+}
+
+/// Snapshot of one cache's counters, rendered by the `stats` request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+    pub cap: usize,
+}
+
+impl CacheStats {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("hits", Json::num(self.hits as f64));
+        o.insert("misses", Json::num(self.misses as f64));
+        o.insert("len", Json::num(self.len as f64));
+        o.insert("cap", Json::num(self.cap as f64));
+        Json::Obj(o)
+    }
+}
+
+/// Everything a memoized [`CostModel`] depends on: the analyzed design
+/// (via its input digest), the device, and the two floats that shape the
+/// floorplan problem and model (`util_limit`, `die_weight`), keyed by
+/// bit pattern.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CostKey {
+    pub digest: u64,
+    pub device: String,
+    pub util_bits: u64,
+    pub die_weight_bits: u64,
+}
+
+impl CostKey {
+    pub fn new(digest: u64, device: &str, util_limit: f64, die_weight: f64) -> Self {
+        CostKey {
+            digest,
+            device: device.to_string(),
+            util_bits: util_limit.to_bits(),
+            die_weight_bits: die_weight.to_bits(),
+        }
+    }
+}
+
+/// The daemon's warm state: three independently locked LRUs. All methods
+/// take `&self`; lock scope is a single get/put (never held across a
+/// computation), so slow jobs don't serialize cache access.
+#[derive(Debug)]
+pub struct CacheSet {
+    analyzed: Mutex<Lru<u64, Arc<AnalyzedDesign>>>,
+    cost: Mutex<Lru<CostKey, Arc<CostModel>>>,
+    results: Mutex<Lru<u64, Json>>,
+}
+
+/// A panicking job must not wedge every later cache access: recover the
+/// guard from a poisoned lock (the data is a cache — worst case we serve
+/// a stale-but-pure entry, which by the key contract is still correct).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl CacheSet {
+    pub fn new(cap: usize) -> Self {
+        CacheSet {
+            analyzed: Mutex::new(Lru::new(cap)),
+            cost: Mutex::new(Lru::new(cap)),
+            results: Mutex::new(Lru::new(cap)),
+        }
+    }
+
+    /// The disabled cache set the one-shot lane (`rsir submit --local`,
+    /// the differential oracle's reference side) runs with.
+    pub fn disabled() -> Self {
+        CacheSet::new(0)
+    }
+
+    pub fn analyzed(&self, digest: u64) -> Option<Arc<AnalyzedDesign>> {
+        lock(&self.analyzed).get(&digest)
+    }
+
+    pub fn put_analyzed(&self, digest: u64, a: Arc<AnalyzedDesign>) {
+        lock(&self.analyzed).put(digest, a);
+    }
+
+    pub fn cost(&self, key: &CostKey) -> Option<Arc<CostModel>> {
+        lock(&self.cost).get(key)
+    }
+
+    pub fn put_cost(&self, key: CostKey, m: Arc<CostModel>) {
+        lock(&self.cost).put(key, m);
+    }
+
+    pub fn result(&self, key: u64) -> Option<Json> {
+        lock(&self.results).get(&key)
+    }
+
+    pub fn put_result(&self, key: u64, v: Json) {
+        lock(&self.results).put(key, v);
+    }
+
+    /// Per-cache counter snapshots, in a stable order for the `stats`
+    /// payload.
+    pub fn stats(&self) -> Vec<(&'static str, CacheStats)> {
+        vec![
+            ("results", lock(&self.results).stats()),
+            ("analyzed", lock(&self.analyzed).stats()),
+            ("cost_models", lock(&self.cost).stats()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut lru: Lru<u32, u32> = Lru::new(2);
+        lru.put(1, 10);
+        lru.put(2, 20);
+        assert_eq!(lru.get(&1), Some(10)); // 1 is now most recent
+        lru.put(3, 30); // evicts 2
+        assert_eq!(lru.get(&2), None);
+        assert_eq!(lru.get(&1), Some(10));
+        assert_eq!(lru.get(&3), Some(30));
+        assert_eq!(lru.len(), 2);
+    }
+
+    #[test]
+    fn lru_counts_hits_and_misses() {
+        let mut lru: Lru<u32, u32> = Lru::new(4);
+        lru.put(1, 1);
+        lru.get(&1);
+        lru.get(&9);
+        let s = lru.stats();
+        assert_eq!((s.hits, s.misses, s.len, s.cap), (1, 1, 1, 4));
+    }
+
+    #[test]
+    fn zero_cap_disables() {
+        let mut lru: Lru<u32, u32> = Lru::new(0);
+        lru.put(1, 1);
+        assert_eq!(lru.get(&1), None);
+        assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn cost_key_distinguishes_bit_patterns() {
+        let a = CostKey::new(1, "u250", 0.70, 3.0);
+        let b = CostKey::new(1, "u250", 0.70 + 1e-16, 3.0);
+        assert_eq!(a, CostKey::new(1, "u250", 0.70, 3.0));
+        // 0.70 + 1e-16 rounds to the same f64; a genuinely different
+        // float must differ.
+        assert_eq!(a, b);
+        assert_ne!(a, CostKey::new(1, "u250", 0.71, 3.0));
+        assert_ne!(a, CostKey::new(1, "u280", 0.70, 3.0));
+    }
+
+    #[test]
+    fn cache_set_round_trips_results() {
+        let c = CacheSet::new(8);
+        assert!(c.result(42).is_none());
+        c.put_result(42, Json::str("hello"));
+        assert_eq!(c.result(42), Some(Json::str("hello")));
+        let stats = c.stats();
+        assert_eq!(stats[0].0, "results");
+        assert_eq!(stats[0].1.hits, 1);
+        assert_eq!(stats[0].1.misses, 1);
+    }
+}

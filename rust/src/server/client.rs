@@ -1,0 +1,212 @@
+//! The `rsir submit` client: ship a batch of request lines to a running
+//! daemon (or run them through the identical one-shot lane with
+//! `--local`) and print one response line per request, in request order.
+//!
+//! The two lanes are the two sides of the daemon's determinism contract:
+//! for any job line, `run_batch_local` and `run_batch_remote` must emit
+//! byte-identical responses. The differential oracle fuzzes exactly this
+//! equivalence.
+
+use crate::server::cache::CacheSet;
+use crate::server::jobs::CancelToken;
+use crate::server::ops;
+use crate::server::protocol::{
+    err_line, hello_result, job_id_string, ok_line, parse_line, shutdown_result, ErrorCode,
+    LineEvent, LineReader, Request, DEFAULT_MAX_LINE, VERSION,
+};
+use crate::server::{connect, Bind, Stream};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+/// Run a batch through the one-shot lane: no daemon, no warm state
+/// ([`CacheSet::disabled`]), jobs executed sequentially in request
+/// order. `timeout_ms` is ignored here — a one-shot run has no queue to
+/// time out of — but every *semantic* check (job-id requirement,
+/// duplicate ids, cancel targets) mirrors the daemon so responses match
+/// byte for byte.
+pub fn run_batch_local(lines: &[String]) -> Vec<String> {
+    let caches = CacheSet::disabled();
+    let mut seen_jobs: BTreeSet<String> = BTreeSet::new();
+    let mut out = Vec::new();
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let env = parse_line(line);
+        let resp = match env.request {
+            Err(e) => err_line(&env.id, e.code, &e.message),
+            Ok(Request::Hello) => ok_line(&env.id, hello_result(0)),
+            Ok(Request::Stats) => err_line(
+                &env.id,
+                ErrorCode::BadRequest,
+                "stats is only available from a running daemon",
+            ),
+            Ok(Request::Cancel { job }) => {
+                // Sequential execution: every earlier job already
+                // completed, so a known target is "already completed" and
+                // anything else is unknown — same bytes as a daemon that
+                // processed the batch serially.
+                if seen_jobs.contains(&job) {
+                    err_line(
+                        &env.id,
+                        ErrorCode::UnknownJob,
+                        &format!("job '{job}' already completed"),
+                    )
+                } else {
+                    err_line(
+                        &env.id,
+                        ErrorCode::UnknownJob,
+                        &format!("no such job '{job}'"),
+                    )
+                }
+            }
+            Ok(Request::Shutdown) => ok_line(&env.id, shutdown_result()),
+            Ok(Request::Job(req)) => match job_id_string(&env.id) {
+                None => err_line(
+                    &env.id,
+                    ErrorCode::BadRequest,
+                    "job requests require a string or numeric id",
+                ),
+                Some(id) if seen_jobs.contains(&id) => err_line(
+                    &env.id,
+                    ErrorCode::DuplicateJob,
+                    &format!("job id '{id}' already used on this connection"),
+                ),
+                Some(id) => {
+                    seen_jobs.insert(id);
+                    match ops::execute(&req, &caches, &CancelToken::default()) {
+                        Ok(result) => ok_line(&env.id, result),
+                        Err(e) => err_line(&env.id, e.code, &e.message),
+                    }
+                }
+            },
+        };
+        out.push(resp);
+    }
+    out
+}
+
+/// Read one response line, polling through read timeouts until
+/// `deadline`.
+fn read_response(reader: &mut LineReader<Stream>, deadline: Instant) -> Result<String> {
+    loop {
+        match reader.poll_line()? {
+            LineEvent::Line(l) if l.trim().is_empty() => continue,
+            LineEvent::Line(l) => return Ok(l),
+            LineEvent::Idle => {
+                if Instant::now() >= deadline {
+                    bail!("timed out waiting for a daemon response");
+                }
+            }
+            LineEvent::Eof => bail!("daemon closed the connection"),
+            LineEvent::Oversized => bail!("daemon response exceeded the line cap"),
+        }
+    }
+}
+
+/// The `id` key a response line files under (its dumped form).
+fn response_id_key(line: &str) -> String {
+    crate::util::json::Json::parse(line)
+        .ok()
+        .and_then(|j| j.as_obj().and_then(|o| o.get("id").cloned()))
+        .unwrap_or(crate::util::json::Json::Null)
+        .dump()
+}
+
+/// Ship a batch to a running daemon and return one response per
+/// non-empty request line, **in request order** (the daemon may answer
+/// jobs out of order; responses are re-matched by id). Performs a
+/// `hello` handshake first and warns on version skew.
+pub fn run_batch_remote(bind: &Bind, lines: &[String], timeout: Duration) -> Result<Vec<String>> {
+    let stream = connect(bind).with_context(|| format!("connecting to {bind}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .context("setting read timeout")?;
+    let mut write_half = stream.try_clone().context("cloning stream")?;
+    let mut reader = LineReader::new(stream, DEFAULT_MAX_LINE);
+    let deadline = Instant::now() + timeout;
+
+    // Handshake: sent before anything else, so the first response line
+    // is unambiguously the hello.
+    write_half.write_all(b"{\"type\":\"hello\"}\n")?;
+    write_half.flush()?;
+    let hello = read_response(&mut reader, deadline)?;
+    if let Ok(j) = crate::util::json::Json::parse(&hello) {
+        let server_version = j
+            .as_obj()
+            .and_then(|o| o.get("result"))
+            .and_then(|r| r.as_obj())
+            .and_then(|r| r.get("version"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("?")
+            .to_string();
+        if server_version != VERSION {
+            eprintln!(
+                "warning: daemon version {server_version} differs from client {VERSION}"
+            );
+        }
+    }
+
+    let requests: Vec<&String> = lines.iter().filter(|l| !l.trim().is_empty()).collect();
+    for line in &requests {
+        write_half.write_all(line.as_bytes())?;
+        write_half.write_all(b"\n")?;
+    }
+    write_half.flush()?;
+
+    // Collect exactly one response per request, then restore request
+    // order. Same-id responses (e.g. a duplicate-id rejection) queue up
+    // and are consumed in arrival order.
+    let mut by_id: BTreeMap<String, VecDeque<String>> = BTreeMap::new();
+    for _ in 0..requests.len() {
+        let resp = read_response(&mut reader, deadline)?;
+        by_id.entry(response_id_key(&resp)).or_default().push_back(resp);
+    }
+    let mut out = Vec::with_capacity(requests.len());
+    for line in &requests {
+        let key = parse_line(line).id.dump();
+        match by_id.get_mut(&key).and_then(|q| q.pop_front()) {
+            Some(resp) => out.push(resp),
+            None => bail!("daemon sent no response for request id {key}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_lane_handles_every_request_type() {
+        let lines: Vec<String> = [
+            r#"{"type":"hello"}"#,
+            r#"{"id":"s","type":"stats"}"#,
+            r#"{"id":"c","type":"cancel","params":{"job":"nope"}}"#,
+            r#"{"type":"flow","params":{"bench":"cnn:2x2"}}"#,
+            "not json",
+            "",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let out = run_batch_local(&lines);
+        assert_eq!(out.len(), 5); // blank line skipped
+        assert!(out[0].contains("\"ok\":true") && out[0].contains("\"version\""));
+        assert!(out[1].contains("bad-request"));
+        assert!(out[2].contains("unknown-job"));
+        // Job without an id is rejected, same as on the daemon.
+        assert!(out[3].contains("job requests require"));
+        assert!(out[4].contains("bad-json"));
+    }
+
+    #[test]
+    fn local_lane_rejects_duplicate_job_ids() {
+        let job = r#"{"id":"j1","type":"pipeline","params":{"bench":"cnn:2x2"}}"#.to_string();
+        let out = run_batch_local(&[job.clone(), job]);
+        assert!(out[0].contains("\"ok\":true"));
+        assert!(out[1].contains("duplicate-job"));
+    }
+}

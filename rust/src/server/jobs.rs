@@ -1,0 +1,222 @@
+//! The daemon's deterministic job queue: a bounded FIFO multiplexed onto
+//! [`util::pool`](crate::util::pool) workers, with per-job cooperative
+//! cancellation and deadlines.
+//!
+//! Determinism note: the *scheduling* is not what makes daemon results
+//! reproducible (workers race freely) — the purity of each job is. The
+//! queue's job is back-pressure (bounded depth, typed `queue-full`
+//! rejection) and orderly shutdown (`close` drains what was accepted).
+
+use crate::server::ops::JobRequest;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Cooperative cancellation handle, shared between the connection that
+/// owns a job and the worker running it. Cheap to clone; polled by the
+/// flow at stage boundaries.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    pub fn new(deadline: Option<Instant>) -> Self {
+        CancelToken {
+            flag: Arc::new(AtomicBool::new(false)),
+            deadline,
+        }
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Explicitly canceled (as opposed to timed out).
+    pub fn canceled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    pub fn expired(&self) -> bool {
+        matches!(self.deadline, Some(d) if Instant::now() >= d)
+    }
+
+    /// The single predicate jobs poll: stop for either reason.
+    pub fn stopped(&self) -> bool {
+        self.canceled() || self.expired()
+    }
+}
+
+/// One queued unit of work, carrying everything a worker needs to run it
+/// and deliver the response line back to its connection.
+#[derive(Debug)]
+pub struct Job {
+    /// Canonical string form of the id (registry key on the connection).
+    pub id: String,
+    /// The id as submitted, echoed verbatim in the response envelope.
+    pub raw_id: Json,
+    pub request: JobRequest,
+    pub token: CancelToken,
+    /// Set by the worker the moment the job finishes; a later `cancel`
+    /// for this id is then `unknown-job`.
+    pub done: Arc<AtomicBool>,
+    /// Channel to the submitting connection's writer thread.
+    pub respond: Sender<String>,
+}
+
+struct State {
+    q: VecDeque<Job>,
+    open: bool,
+    running: usize,
+}
+
+/// Bounded MPMC FIFO. `push` never blocks (full or closed → the job is
+/// handed back for a typed rejection); `pop` blocks until work arrives
+/// or the queue is closed *and* drained.
+pub struct JobQueue {
+    state: Mutex<State>,
+    cond: Condvar,
+    cap: usize,
+}
+
+impl JobQueue {
+    pub fn new(cap: usize) -> Self {
+        JobQueue {
+            state: Mutex::new(State {
+                q: VecDeque::new(),
+                open: true,
+                running: 0,
+            }),
+            cond: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Enqueue; on a full or closed queue the job comes back so the
+    /// caller can answer `queue-full` with the job's own response channel.
+    pub fn push(&self, job: Job) -> Result<(), Job> {
+        let mut s = self.lock();
+        if !s.open || s.q.len() >= self.cap {
+            return Err(job);
+        }
+        s.q.push_back(job);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue. `None` means the queue is closed and fully
+    /// drained — the worker should exit. Increments the running count;
+    /// pair every `Some` with a [`JobQueue::finished`] call.
+    pub fn pop(&self) -> Option<Job> {
+        let mut s = self.lock();
+        loop {
+            if let Some(job) = s.q.pop_front() {
+                s.running += 1;
+                return Some(job);
+            }
+            if !s.open {
+                return None;
+            }
+            s = self
+                .cond
+                .wait(s)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    pub fn finished(&self) {
+        let mut s = self.lock();
+        s.running = s.running.saturating_sub(1);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.lock().q.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.lock().running
+    }
+
+    /// Stop accepting work and wake every blocked worker; already-queued
+    /// jobs still drain.
+    pub fn close(&self) {
+        self.lock().open = false;
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::ops::{DesignInput, JobRequest, PipelineParams};
+    use std::sync::mpsc;
+    use std::thread;
+    use std::time::Duration;
+
+    fn dummy_job(id: &str, tx: &Sender<String>) -> Job {
+        Job {
+            id: id.to_string(),
+            raw_id: Json::str(id),
+            request: JobRequest::Pipeline(PipelineParams {
+                input: DesignInput::Bench("cnn:2x2".to_string()),
+                spec: "analyze-structure".to_string(),
+                drc: false,
+            }),
+            token: CancelToken::default(),
+            done: Arc::new(AtomicBool::new(false)),
+            respond: tx.clone(),
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_bound() {
+        let (tx, _rx) = mpsc::channel();
+        let q = JobQueue::new(2);
+        assert!(q.push(dummy_job("a", &tx)).is_ok());
+        assert!(q.push(dummy_job("b", &tx)).is_ok());
+        let rejected = q.push(dummy_job("c", &tx)).unwrap_err();
+        assert_eq!(rejected.id, "c");
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop().unwrap().id, "a");
+        assert_eq!(q.running(), 1);
+        q.finished();
+        assert_eq!(q.pop().unwrap().id, "b");
+    }
+
+    #[test]
+    fn close_drains_then_releases_workers() {
+        let (tx, _rx) = mpsc::channel();
+        let q = Arc::new(JobQueue::new(4));
+        q.push(dummy_job("a", &tx)).unwrap();
+        q.close();
+        assert!(q.push(dummy_job("b", &tx)).is_err());
+        // The queued job still comes out; then pop returns None.
+        assert_eq!(q.pop().unwrap().id, "a");
+        assert!(q.pop().is_none());
+        // A worker blocked in pop() is woken by close.
+        let q2 = Arc::new(JobQueue::new(4));
+        let qc = q2.clone();
+        let h = thread::spawn(move || qc.pop().is_none());
+        thread::sleep(Duration::from_millis(20));
+        q2.close();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn cancel_token_states() {
+        let t = CancelToken::default();
+        assert!(!t.stopped());
+        t.cancel();
+        assert!(t.canceled() && t.stopped() && !t.expired());
+        let expired = CancelToken::new(Some(Instant::now() - Duration::from_millis(1)));
+        assert!(expired.expired() && expired.stopped() && !expired.canceled());
+    }
+}

@@ -1,0 +1,623 @@
+//! `rsir serve` — a resident HLPS compilation daemon (§5 "infrastructure
+//! for high-level physical synthesis" as a service).
+//!
+//! One process keeps the expensive cross-request state warm — analyzed
+//! design snapshots, memoized cost models, canonical result payloads
+//! (see [`cache`]) — while a bounded deterministic job queue ([`jobs`])
+//! multiplexes flow/pipeline/fuzz/explore jobs ([`ops`]) onto a
+//! [`util::pool`](crate::util::pool) worker set. Clients speak
+//! line-delimited JSON ([`protocol`]) over a unix socket or local TCP.
+//!
+//! The non-negotiable invariant: **every byte a daemon returns is
+//! identical to the one-shot CLI's** ([`client::run_batch_local`]).
+//! Warm caches change wall time, never results — enforced structurally
+//! (every cache value is a pure function of its key) and checked by the
+//! fuzzed differential oracle
+//! ([`testing::oracle::check_daemon_equivalence`](crate::testing::oracle::check_daemon_equivalence)).
+
+pub mod cache;
+pub mod client;
+pub mod jobs;
+pub mod ops;
+pub mod protocol;
+
+use crate::server::cache::CacheSet;
+use crate::server::jobs::{CancelToken, Job, JobQueue};
+use crate::server::protocol::{
+    err_line, hello_result, job_id_string, ok_line, parse_line, shutdown_result, ErrorCode,
+    LineEvent, LineReader, Request, DEFAULT_MAX_LINE, PROTOCOL_VERSION, VERSION,
+};
+use crate::util::json::{Json, JsonObj};
+use crate::util::pool::Pool;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::io::{self, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Where the daemon listens (and where clients connect).
+#[derive(Debug, Clone)]
+pub enum Bind {
+    /// A unix-domain socket path (stale files are replaced on bind).
+    Unix(PathBuf),
+    /// Loopback TCP; port 0 picks a free port (see [`Server::port`]).
+    Tcp(u16),
+}
+
+impl fmt::Display for Bind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Bind::Unix(p) => write!(f, "unix:{}", p.display()),
+            Bind::Tcp(port) => write!(f, "tcp:127.0.0.1:{port}"),
+        }
+    }
+}
+
+/// Daemon configuration, defaulted by [`ServeConfig::new`] and
+/// overridden from the CLI.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub bind: Bind,
+    /// Job-queue worker count (also reported in `hello`).
+    pub workers: usize,
+    /// Capacity of each warm cache (0 disables warm state entirely).
+    pub cache_cap: usize,
+    /// Bound on queued (not yet running) jobs.
+    pub max_queue: usize,
+    /// Per-request-line byte cap.
+    pub max_line: usize,
+    /// Suppress the startup banner (tests, CI).
+    pub quiet: bool,
+}
+
+impl ServeConfig {
+    pub fn new(bind: Bind) -> Self {
+        ServeConfig {
+            bind,
+            workers: 2,
+            cache_cap: 64,
+            max_queue: 256,
+            max_line: DEFAULT_MAX_LINE,
+            quiet: false,
+        }
+    }
+}
+
+/// A connected client stream, unix or TCP.
+#[derive(Debug)]
+pub enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    pub fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(d),
+            Stream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Connect to a daemon at `bind` (for `Tcp`, the *actual* port — pass
+/// [`Server::port`]'s value when the server bound port 0).
+pub fn connect(bind: &Bind) -> io::Result<Stream> {
+    match bind {
+        Bind::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
+        Bind::Tcp(port) => TcpStream::connect(("127.0.0.1", *port)).map(Stream::Tcp),
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Stream> {
+        let stream = match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s))?,
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s))?,
+        };
+        // The accept loop is nonblocking; accepted connections must not be.
+        match &stream {
+            Stream::Unix(s) => s.set_nonblocking(false)?,
+            Stream::Tcp(s) => s.set_nonblocking(false)?,
+        }
+        Ok(stream)
+    }
+}
+
+/// A unique scratch socket path for tests and benches (pid + counter —
+/// collision-free within and across concurrent test processes).
+pub fn scratch_socket(tag: &str) -> PathBuf {
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::SeqCst);
+    std::env::temp_dir().join(format!("rsir-{tag}-{}-{n}.sock", std::process::id()))
+}
+
+/// Lifetime job counters plus a short ring of recent per-job wall times,
+/// rendered by the `stats` request. Wall times are observational —
+/// `stats` is introspection, not a job, so it is exempt from the
+/// canonical-payload rule.
+#[derive(Default)]
+struct ServerStats {
+    enqueued: AtomicU64,
+    completed: AtomicU64,
+    canceled: AtomicU64,
+    failed: AtomicU64,
+    recent: Mutex<VecDeque<(String, u64)>>,
+}
+
+impl ServerStats {
+    fn record(&self, id: &str, wall: Duration, code: Option<ErrorCode>) {
+        match code {
+            None => &self.completed,
+            Some(ErrorCode::Canceled) | Some(ErrorCode::Timeout) => &self.canceled,
+            Some(_) => &self.failed,
+        }
+        .fetch_add(1, Ordering::SeqCst);
+        let mut recent = self.recent.lock().unwrap_or_else(|p| p.into_inner());
+        recent.push_back((id.to_string(), wall.as_millis() as u64));
+        while recent.len() > 32 {
+            recent.pop_front();
+        }
+    }
+}
+
+/// Everything the worker pool and every connection share.
+struct Shared {
+    queue: JobQueue,
+    caches: CacheSet,
+    stats: ServerStats,
+    shutdown: AtomicBool,
+    workers: usize,
+    max_line: usize,
+}
+
+fn stats_payload(shared: &Shared) -> Json {
+    let mut jobs = JsonObj::new();
+    jobs.insert(
+        "enqueued",
+        Json::num(shared.stats.enqueued.load(Ordering::SeqCst) as f64),
+    );
+    jobs.insert(
+        "completed",
+        Json::num(shared.stats.completed.load(Ordering::SeqCst) as f64),
+    );
+    jobs.insert(
+        "canceled",
+        Json::num(shared.stats.canceled.load(Ordering::SeqCst) as f64),
+    );
+    jobs.insert(
+        "failed",
+        Json::num(shared.stats.failed.load(Ordering::SeqCst) as f64),
+    );
+    let mut caches = JsonObj::new();
+    for (name, s) in shared.caches.stats() {
+        caches.insert(name, s.to_json());
+    }
+    let recent: Vec<Json> = {
+        let r = shared.stats.recent.lock().unwrap_or_else(|p| p.into_inner());
+        r.iter()
+            .map(|(id, ms)| {
+                let mut o = JsonObj::new();
+                o.insert("id", Json::str(id));
+                o.insert("wall_ms", Json::num(*ms as f64));
+                Json::Obj(o)
+            })
+            .collect()
+    };
+    let mut o = JsonObj::new();
+    o.insert("version", Json::str(VERSION));
+    o.insert("protocol", Json::num(PROTOCOL_VERSION as f64));
+    o.insert("workers", Json::num(shared.workers as f64));
+    o.insert("queue_depth", Json::num(shared.queue.depth() as f64));
+    o.insert("running", Json::num(shared.queue.running() as f64));
+    o.insert("jobs", Json::Obj(jobs));
+    o.insert("caches", Json::Obj(caches));
+    o.insert("recent_jobs", Json::Arr(recent));
+    Json::Obj(o)
+}
+
+/// One queue worker: pop, execute against the warm caches, mark done,
+/// deliver. Runs until the queue is closed and drained.
+fn worker_loop(shared: &Shared) {
+    while let Some(job) = shared.queue.pop() {
+        let t = Instant::now();
+        let (line, code) = match ops::execute(&job.request, &shared.caches, &job.token) {
+            Ok(result) => (ok_line(&job.raw_id, result), None),
+            Err(e) => (err_line(&job.raw_id, e.code, &e.message), Some(e.code)),
+        };
+        // Order matters: once `done` is set, a cancel for this id answers
+        // `unknown-job` — so set it only after the result line is final.
+        job.done.store(true, Ordering::SeqCst);
+        shared.stats.record(&job.id, t.elapsed(), code);
+        let _ = job.respond.send(line);
+        shared.queue.finished();
+    }
+}
+
+/// Drain response lines to the client. On a write failure (client went
+/// away) it keeps draining without writing, so in-flight jobs for a dead
+/// connection can still complete and drop their senders.
+fn writer_loop(stream: Stream, rx: Receiver<String>) {
+    let mut w = BufWriter::new(stream);
+    let mut dead = false;
+    while let Ok(line) = rx.recv() {
+        if dead {
+            continue;
+        }
+        let wrote = w
+            .write_all(line.as_bytes())
+            .and_then(|_| w.write_all(b"\n"))
+            .and_then(|_| w.flush());
+        if wrote.is_err() {
+            dead = true;
+        }
+    }
+}
+
+/// What a dispatched request asks the connection loop to do next.
+enum Flow {
+    Continue,
+    /// A `shutdown` was acknowledged: stop reading from this connection.
+    Stop,
+}
+
+/// Handle one parsed request line. `registry` holds this connection's
+/// jobs (cancel scope is per-connection, like the ids themselves).
+fn dispatch_line(
+    line: &str,
+    shared: &Shared,
+    tx: &Sender<String>,
+    registry: &mut BTreeMap<String, (CancelToken, Arc<AtomicBool>)>,
+) -> Flow {
+    let env = parse_line(line);
+    let resp = match env.request {
+        Err(e) => err_line(&env.id, e.code, &e.message),
+        Ok(Request::Hello) => ok_line(&env.id, hello_result(shared.workers)),
+        Ok(Request::Stats) => ok_line(&env.id, stats_payload(shared)),
+        Ok(Request::Shutdown) => {
+            let _ = tx.send(ok_line(&env.id, shutdown_result()));
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.queue.close();
+            return Flow::Stop;
+        }
+        Ok(Request::Cancel { job }) => match registry.get(&job) {
+            Some((token, done)) if !done.load(Ordering::SeqCst) => {
+                token.cancel();
+                let mut o = JsonObj::new();
+                o.insert("canceled", Json::str(&job));
+                ok_line(&env.id, Json::Obj(o))
+            }
+            Some(_) => err_line(
+                &env.id,
+                ErrorCode::UnknownJob,
+                &format!("job '{job}' already completed"),
+            ),
+            None => err_line(
+                &env.id,
+                ErrorCode::UnknownJob,
+                &format!("no such job '{job}'"),
+            ),
+        },
+        Ok(Request::Job(req)) => {
+            let Some(id) = job_id_string(&env.id) else {
+                let _ = tx.send(err_line(
+                    &env.id,
+                    ErrorCode::BadRequest,
+                    "job requests require a string or numeric id",
+                ));
+                return Flow::Continue;
+            };
+            if registry.contains_key(&id) {
+                let _ = tx.send(err_line(
+                    &env.id,
+                    ErrorCode::DuplicateJob,
+                    &format!("job id '{id}' already used on this connection"),
+                ));
+                return Flow::Continue;
+            }
+            let deadline = env
+                .timeout_ms
+                .map(|ms| Instant::now() + Duration::from_millis(ms));
+            let token = CancelToken::new(deadline);
+            let done = Arc::new(AtomicBool::new(false));
+            let job = Job {
+                id: id.clone(),
+                raw_id: env.id.clone(),
+                request: req,
+                token: token.clone(),
+                done: done.clone(),
+                respond: tx.clone(),
+            };
+            match shared.queue.push(job) {
+                Ok(()) => {
+                    shared.stats.enqueued.fetch_add(1, Ordering::SeqCst);
+                    registry.insert(id, (token, done));
+                    return Flow::Continue; // response comes from the worker
+                }
+                Err(_) => err_line(&env.id, ErrorCode::QueueFull, "job queue is full"),
+            }
+        }
+    };
+    let _ = tx.send(resp);
+    Flow::Continue
+}
+
+/// Serve one client connection: a reader loop dispatching lines and a
+/// writer thread draining the response channel (workers send into it
+/// concurrently, so job responses interleave with inline ones).
+fn handle_conn(stream: Stream, shared: &Shared) {
+    // Short read timeouts let the reader poll the shutdown flag.
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .is_err()
+    {
+        return;
+    }
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx) = mpsc::channel::<String>();
+    thread::scope(|s| {
+        s.spawn(move || writer_loop(write_half, rx));
+        let mut reader = LineReader::new(stream, shared.max_line);
+        let mut registry: BTreeMap<String, (CancelToken, Arc<AtomicBool>)> = BTreeMap::new();
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match reader.poll_line() {
+                Ok(LineEvent::Line(line)) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match dispatch_line(&line, shared, &tx, &mut registry) {
+                        Flow::Continue => {}
+                        Flow::Stop => break,
+                    }
+                }
+                Ok(LineEvent::Oversized) => {
+                    let _ = tx.send(err_line(
+                        &Json::Null,
+                        ErrorCode::Oversized,
+                        &format!("request line exceeds {} bytes", shared.max_line),
+                    ));
+                }
+                Ok(LineEvent::Idle) => continue,
+                Ok(LineEvent::Eof) | Err(_) => break,
+            }
+        }
+        // A vanished client abandons its jobs: cancel whatever is still
+        // in flight so workers free up (responses drain to the dead
+        // writer harmlessly).
+        for (token, done) in registry.values() {
+            if !done.load(Ordering::SeqCst) {
+                token.cancel();
+            }
+        }
+        drop(tx); // writer exits once in-flight jobs drop their senders too
+    });
+}
+
+/// A bound, not-yet-running daemon. Splitting bind from run lets tests
+/// and the bench learn the actual port/socket before spawning `run` on
+/// its own thread.
+pub struct Server {
+    listener: Listener,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    pub fn bind(mut cfg: ServeConfig) -> Result<Server> {
+        cfg.workers = cfg.workers.max(1);
+        let listener = match &cfg.bind {
+            Bind::Unix(path) => {
+                // A stale socket file from a dead daemon would fail the
+                // bind; a *live* daemon's file is replaced too — callers
+                // own their socket paths.
+                if path.exists() {
+                    let _ = std::fs::remove_file(path);
+                }
+                Listener::Unix(
+                    UnixListener::bind(path)
+                        .with_context(|| format!("binding unix socket {}", path.display()))?,
+                )
+            }
+            Bind::Tcp(port) => {
+                let l = TcpListener::bind(("127.0.0.1", *port))
+                    .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+                // Record the real port when 0 was requested.
+                if *port == 0 {
+                    let actual = l.local_addr()?.port();
+                    cfg.bind = Bind::Tcp(actual);
+                }
+                Listener::Tcp(l)
+            }
+        };
+        Ok(Server { listener, cfg })
+    }
+
+    /// Where this server actually listens (real port for `Tcp(0)`).
+    pub fn endpoint(&self) -> Bind {
+        self.cfg.bind.clone()
+    }
+
+    /// The actual TCP port, when TCP-bound.
+    pub fn port(&self) -> Option<u16> {
+        match self.cfg.bind {
+            Bind::Tcp(p) => Some(p),
+            Bind::Unix(_) => None,
+        }
+    }
+
+    /// Run until a `shutdown` request: accept connections, spawn one
+    /// handler per connection, multiplex jobs onto the worker pool.
+    /// Returns after all workers and connections have wound down.
+    pub fn run(self) -> Result<()> {
+        let cfg = &self.cfg;
+        if !cfg.quiet {
+            eprintln!(
+                "rsir serve v{VERSION} (protocol {PROTOCOL_VERSION}) listening on {} — {} worker(s), cache cap {}",
+                cfg.bind, cfg.workers, cfg.cache_cap
+            );
+        }
+        let shared = Shared {
+            queue: JobQueue::new(cfg.max_queue),
+            caches: CacheSet::new(cfg.cache_cap),
+            stats: ServerStats::default(),
+            shutdown: AtomicBool::new(false),
+            workers: cfg.workers,
+            max_line: cfg.max_line,
+        };
+        let shared = &shared;
+        self.listener
+            .set_nonblocking(true)
+            .context("nonblocking accept loop")?;
+        thread::scope(|s| {
+            s.spawn(move || {
+                let pool = Pool::new(shared.workers);
+                let loops: Vec<_> = (0..shared.workers)
+                    .map(|_| move || worker_loop(shared))
+                    .collect();
+                pool.run(loops);
+            });
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok(stream) => {
+                        s.spawn(move || handle_conn(stream, shared));
+                    }
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut =>
+                    {
+                        thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(25)),
+                }
+            }
+            // Belt and braces: shutdown sets this in dispatch, but close
+            // here too in case the loop exits another way.
+            shared.queue.close();
+        });
+        if let Bind::Unix(path) = &cfg.bind {
+            let _ = std::fs::remove_file(path);
+        }
+        Ok(())
+    }
+}
+
+/// Bind and run a daemon with `cfg` (the `rsir serve` entry point).
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    Server::bind(cfg)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::client::{run_batch_local, run_batch_remote};
+
+    fn batch(lines: &[&str]) -> Vec<String> {
+        lines.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Boot a real daemon on a scratch unix socket, run a mixed batch
+    /// remotely and locally, and require byte-identical responses.
+    #[test]
+    fn daemon_matches_one_shot_lane() {
+        let path = scratch_socket("unit");
+        let mut cfg = ServeConfig::new(Bind::Unix(path.clone()));
+        cfg.workers = 2;
+        cfg.quiet = true;
+        let server = Server::bind(cfg).unwrap();
+        let endpoint = server.endpoint();
+        let handle = thread::spawn(move || server.run());
+
+        let lines = batch(&[
+            r#"{"id":"p1","type":"pipeline","params":{"bench":"cnn:2x2"}}"#,
+            r#"{"id":"f1","type":"flow","params":{"bench":"cnn:2x2","device":"u250","sa_refine":false}}"#,
+            r#"{"id":"bad","type":"wat"}"#,
+        ]);
+        let remote =
+            run_batch_remote(&endpoint, &lines, Duration::from_secs(60)).unwrap();
+        let local = run_batch_local(&lines);
+        assert_eq!(remote, local);
+
+        let shutdown = batch(&[r#"{"id":"q","type":"shutdown"}"#]);
+        let ack = run_batch_remote(&endpoint, &shutdown, Duration::from_secs(10)).unwrap();
+        assert!(ack[0].contains("shutting_down"));
+        handle.join().unwrap().unwrap();
+        assert!(!path.exists(), "socket file not cleaned up");
+    }
+
+    /// TCP on port 0: the server reports its real port and serves there.
+    #[test]
+    fn tcp_port_zero_binds_and_serves() {
+        let mut cfg = ServeConfig::new(Bind::Tcp(0));
+        cfg.quiet = true;
+        let server = Server::bind(cfg).unwrap();
+        let port = server.port().unwrap();
+        assert_ne!(port, 0);
+        let endpoint = server.endpoint();
+        let handle = thread::spawn(move || server.run());
+        let out = run_batch_remote(
+            &endpoint,
+            &batch(&[r#"{"id":"h","type":"hello"}"#, r#"{"type":"shutdown"}"#]),
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        assert!(out[0].contains(&format!("\"workers\":{}", 2)));
+        handle.join().unwrap().unwrap();
+    }
+}

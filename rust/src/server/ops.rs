@@ -1,0 +1,752 @@
+//! Job execution: the typed job requests the daemon queues, their
+//! canonical (cache-key) form, and the dispatcher that runs them against
+//! a [`CacheSet`].
+//!
+//! The same `execute` serves both lanes: the daemon calls it with warm
+//! caches, the one-shot path (`rsir submit --local`, the differential
+//! oracle's reference side) with [`CacheSet::disabled`]. Result payloads
+//! are *canonical* — they carry no wall times or other nondeterminism —
+//! so the two lanes are byte-identical by construction, and the memoized
+//! `results` cache can replay them verbatim.
+
+use crate::coordinator::explore;
+use crate::coordinator::flow::{self, FlowCanceled, FlowConfig, FlowWarm};
+use crate::coordinator::report::generate_by_id;
+use crate::designs::synthetic::{self, SyntheticConfig};
+use crate::device::builtin;
+use crate::ir::core::Design;
+use crate::ir::schema::{design_from_json, design_to_json};
+use crate::passes::manager::{DrcOutcome, PassContext};
+use crate::passes::registry;
+use crate::server::cache::{CacheSet, CostKey};
+use crate::server::jobs::CancelToken;
+use crate::server::protocol::{ErrorCode, ProtocolError};
+use crate::testing::fuzz;
+use crate::util::json::{Json, JsonObj};
+use crate::util::pool::Pool;
+use std::sync::Arc;
+
+/// Upper bound on `cases` for daemon-submitted fuzz jobs; a bigger run
+/// belongs in the standalone `rsir fuzz` CLI, not a shared job queue.
+pub const MAX_FUZZ_CASES: usize = 1024;
+
+/// A job that failed (deterministically — the message is part of the
+/// byte-identity contract, so it must not embed times or paths).
+#[derive(Debug, Clone)]
+pub struct JobError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl JobError {
+    fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        JobError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    fn bad(message: impl Into<String>) -> Self {
+        JobError::new(ErrorCode::BadRequest, message)
+    }
+}
+
+/// The design a job operates on: a named builtin benchmark or an inline
+/// IR document shipped in the request line.
+#[derive(Debug, Clone)]
+pub enum DesignInput {
+    /// A benchmark id for [`generate_by_id`] (`cnn:RxC`, `llama2`, ...).
+    Bench(String),
+    /// A full design, already validated at parse time.
+    Inline(Box<Design>),
+}
+
+#[derive(Debug, Clone)]
+pub struct FlowParams {
+    pub input: DesignInput,
+    pub device: String,
+    pub util: Option<f64>,
+    pub sa_refine: bool,
+    pub seed: Option<u64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineParams {
+    pub input: DesignInput,
+    pub spec: String,
+    pub drc: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuzzLane {
+    Ir,
+    Verilog,
+}
+
+#[derive(Debug, Clone)]
+pub struct FuzzParams {
+    pub seed: u64,
+    pub cases: usize,
+    pub lane: FuzzLane,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExploreParams {
+    pub input: DesignInput,
+    pub device: String,
+    pub limits: Vec<f64>,
+}
+
+/// A validated, queueable job.
+#[derive(Debug, Clone)]
+pub enum JobRequest {
+    Flow(FlowParams),
+    Pipeline(PipelineParams),
+    Fuzz(FuzzParams),
+    Explore(ExploreParams),
+}
+
+fn bad(message: impl Into<String>) -> ProtocolError {
+    ProtocolError::new(ErrorCode::BadRequest, message)
+}
+
+/// Reject unknown params so typos fail loudly instead of silently
+/// running with defaults.
+fn check_keys(params: &JsonObj, allowed: &[&str]) -> Result<(), ProtocolError> {
+    for k in params.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(bad(format!(
+                "unknown param '{k}' (allowed: {})",
+                allowed.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn parse_input(params: &JsonObj) -> Result<DesignInput, ProtocolError> {
+    match (params.get("bench"), params.get("design")) {
+        (Some(b), None) => match b.as_str() {
+            Some(s) => Ok(DesignInput::Bench(s.to_string())),
+            None => Err(bad("'bench' must be a string")),
+        },
+        (None, Some(d)) => match design_from_json(d) {
+            Ok(design) => Ok(DesignInput::Inline(Box::new(design))),
+            Err(e) => Err(bad(format!("invalid inline design: {e:#}"))),
+        },
+        _ => Err(bad("exactly one of 'bench' or 'design' is required")),
+    }
+}
+
+fn opt_str(params: &JsonObj, key: &str, default: &str) -> Result<String, ProtocolError> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(default.to_string()),
+        Some(v) => match v.as_str() {
+            Some(s) => Ok(s.to_string()),
+            None => Err(bad(format!("'{key}' must be a string"))),
+        },
+    }
+}
+
+fn opt_bool(params: &JsonObj, key: &str, default: bool) -> Result<bool, ProtocolError> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => match v.as_bool() {
+            Some(b) => Ok(b),
+            None => Err(bad(format!("'{key}' must be a boolean"))),
+        },
+    }
+}
+
+fn opt_u64(params: &JsonObj, key: &str) -> Result<Option<u64>, ProtocolError> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => match v.as_u64() {
+            Some(n) => Ok(Some(n)),
+            None => Err(bad(format!("'{key}' must be a non-negative integer"))),
+        },
+    }
+}
+
+fn opt_f64(params: &JsonObj, key: &str) -> Result<Option<f64>, ProtocolError> {
+    match params.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(n) if n.is_finite() => Ok(Some(n)),
+            _ => Err(bad(format!("'{key}' must be a finite number"))),
+        },
+    }
+}
+
+impl JobRequest {
+    /// Validate the `params` object of a job request line. Strict: every
+    /// structural problem is a typed `bad-request` before anything is
+    /// queued.
+    pub fn parse(kind: &str, params: &JsonObj) -> Result<JobRequest, ProtocolError> {
+        match kind {
+            "flow" => {
+                check_keys(
+                    params,
+                    &["bench", "design", "device", "util", "sa_refine", "seed"],
+                )?;
+                Ok(JobRequest::Flow(FlowParams {
+                    input: parse_input(params)?,
+                    device: opt_str(params, "device", "u280")?,
+                    util: opt_f64(params, "util")?,
+                    sa_refine: opt_bool(params, "sa_refine", true)?,
+                    seed: opt_u64(params, "seed")?,
+                }))
+            }
+            "pipeline" => {
+                check_keys(params, &["bench", "design", "spec", "drc"])?;
+                Ok(JobRequest::Pipeline(PipelineParams {
+                    input: parse_input(params)?,
+                    spec: opt_str(params, "spec", registry::ANALYZE_STRUCTURE)?,
+                    drc: opt_bool(params, "drc", false)?,
+                }))
+            }
+            "fuzz" => {
+                check_keys(params, &["seed", "cases", "lane"])?;
+                let cases = opt_u64(params, "cases")?.unwrap_or(64) as usize;
+                if cases == 0 || cases > MAX_FUZZ_CASES {
+                    return Err(bad(format!("'cases' must be in 1..={MAX_FUZZ_CASES}")));
+                }
+                let lane = match opt_str(params, "lane", "ir")?.as_str() {
+                    "ir" => FuzzLane::Ir,
+                    "verilog" => FuzzLane::Verilog,
+                    other => return Err(bad(format!("unknown fuzz lane '{other}'"))),
+                };
+                Ok(JobRequest::Fuzz(FuzzParams {
+                    seed: opt_u64(params, "seed")?.unwrap_or(0),
+                    cases,
+                    lane,
+                }))
+            }
+            "explore" => {
+                check_keys(params, &["bench", "design", "device", "limits"])?;
+                let limits = match params.get("limits") {
+                    None | Some(Json::Null) => explore::default_limits(),
+                    Some(v) => {
+                        let Some(arr) = v.as_arr() else {
+                            return Err(bad("'limits' must be an array of numbers"));
+                        };
+                        let mut out = Vec::with_capacity(arr.len());
+                        for item in arr {
+                            match item.as_f64() {
+                                Some(f) if f.is_finite() && f > 0.0 && f <= 1.0 => out.push(f),
+                                _ => {
+                                    return Err(bad(
+                                        "'limits' entries must be numbers in (0, 1]",
+                                    ))
+                                }
+                            }
+                        }
+                        if out.is_empty() || out.len() > 64 {
+                            return Err(bad("'limits' must have 1..=64 entries"));
+                        }
+                        out
+                    }
+                };
+                Ok(JobRequest::Explore(ExploreParams {
+                    input: parse_input(params)?,
+                    device: opt_str(params, "device", "vhk158")?,
+                    limits,
+                }))
+            }
+            other => Err(ProtocolError::new(
+                ErrorCode::UnknownType,
+                format!("unknown request type '{other}'"),
+            )),
+        }
+    }
+
+    /// Canonical JSON of this request: fixed key order, absent options as
+    /// `null`, inline designs reduced to their digest. Two requests that
+    /// must produce the same bytes canonicalize identically — this is the
+    /// `results` cache key material.
+    pub fn canonical(&self) -> Json {
+        fn input_keys(o: &mut JsonObj, input: &DesignInput) {
+            match input {
+                DesignInput::Bench(b) => o.insert("bench", Json::str(b)),
+                DesignInput::Inline(d) => o.insert(
+                    "design_digest",
+                    Json::str(format!("{:016x}", synthetic::digest(d))),
+                ),
+            }
+        }
+        let mut o = JsonObj::new();
+        match self {
+            JobRequest::Flow(p) => {
+                o.insert("type", Json::str("flow"));
+                input_keys(&mut o, &p.input);
+                o.insert("device", Json::str(&p.device));
+                o.insert("util", p.util.map(Json::num).unwrap_or(Json::Null));
+                o.insert("sa_refine", Json::Bool(p.sa_refine));
+                o.insert(
+                    "seed",
+                    p.seed.map(|s| Json::num(s as f64)).unwrap_or(Json::Null),
+                );
+            }
+            JobRequest::Pipeline(p) => {
+                o.insert("type", Json::str("pipeline"));
+                input_keys(&mut o, &p.input);
+                o.insert("spec", Json::str(&p.spec));
+                o.insert("drc", Json::Bool(p.drc));
+            }
+            JobRequest::Fuzz(p) => {
+                o.insert("type", Json::str("fuzz"));
+                o.insert("seed", Json::num(p.seed as f64));
+                o.insert("cases", Json::num(p.cases as f64));
+                o.insert(
+                    "lane",
+                    Json::str(match p.lane {
+                        FuzzLane::Ir => "ir",
+                        FuzzLane::Verilog => "verilog",
+                    }),
+                );
+            }
+            JobRequest::Explore(p) => {
+                o.insert("type", Json::str("explore"));
+                input_keys(&mut o, &p.input);
+                o.insert("device", Json::str(&p.device));
+                o.insert(
+                    "limits",
+                    Json::Arr(p.limits.iter().map(|&l| Json::num(l)).collect()),
+                );
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// The `results`-cache key: FNV-1a of the canonical request text.
+    pub fn result_key(&self) -> u64 {
+        synthetic::fnv1a64(self.canonical().dump().as_bytes())
+    }
+
+    /// The wire name of this job's kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobRequest::Flow(_) => "flow",
+            JobRequest::Pipeline(_) => "pipeline",
+            JobRequest::Fuzz(_) => "fuzz",
+            JobRequest::Explore(_) => "explore",
+        }
+    }
+}
+
+/// Encode a float that may be NaN/inf: `Json::Num(NaN)` would dump
+/// invalid JSON, so non-finite values become `null` on the wire.
+pub fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Cancellation/deadline pre-check, also used between coarse steps.
+fn check(token: &CancelToken) -> Result<(), JobError> {
+    if token.canceled() {
+        return Err(JobError::new(ErrorCode::Canceled, "job canceled"));
+    }
+    if token.expired() {
+        return Err(JobError::new(ErrorCode::Timeout, "job deadline exceeded"));
+    }
+    Ok(())
+}
+
+/// Resolve a job's design input to (design, input digest, bench name).
+fn resolve_input(input: &DesignInput) -> Result<(Design, u64, Option<String>), JobError> {
+    match input {
+        DesignInput::Bench(id) => {
+            let g = generate_by_id(id)
+                .map_err(|e| JobError::bad(format!("unknown benchmark '{id}': {e:#}")))?;
+            let digest = synthetic::digest(&g.design);
+            Ok((g.design, digest, Some(id.clone())))
+        }
+        DesignInput::Inline(d) => {
+            let digest = synthetic::digest(d);
+            Ok(((**d).clone(), digest, None))
+        }
+    }
+}
+
+/// Run one job to a canonical result payload. The single dispatcher both
+/// lanes share: memo probe → run → memo insert (success only, so a
+/// canceled or failed job can never poison the cache).
+pub fn execute(req: &JobRequest, caches: &CacheSet, token: &CancelToken) -> Result<Json, JobError> {
+    let key = req.result_key();
+    if let Some(hit) = caches.result(key) {
+        return Ok(hit);
+    }
+    check(token)?;
+    let result = match req {
+        JobRequest::Flow(p) => run_flow(p, caches, token),
+        JobRequest::Pipeline(p) => run_pipeline(p, caches, token),
+        JobRequest::Fuzz(p) => run_fuzz(p, token),
+        JobRequest::Explore(p) => run_explore(p, caches, token),
+    }?;
+    caches.put_result(key, result.clone());
+    Ok(result)
+}
+
+/// Map a flow failure to a typed job error, distinguishing the
+/// cancellation marker (explicit cancel vs deadline) from real failures.
+fn flow_error(e: anyhow::Error, token: &CancelToken) -> JobError {
+    if e.downcast_ref::<FlowCanceled>().is_some() {
+        if token.canceled() {
+            JobError::new(ErrorCode::Canceled, "job canceled")
+        } else {
+            JobError::new(ErrorCode::Timeout, "job deadline exceeded")
+        }
+    } else {
+        JobError::new(ErrorCode::Internal, format!("flow failed: {e:#}"))
+    }
+}
+
+fn run_flow(p: &FlowParams, caches: &CacheSet, token: &CancelToken) -> Result<Json, JobError> {
+    let (mut design, digest, bench) = resolve_input(&p.input)?;
+    let dev = builtin::by_name(&p.device)
+        .map_err(|e| JobError::bad(format!("unknown device '{}': {e:#}", p.device)))?;
+    let mut cfg = FlowConfig {
+        sa_refine: p.sa_refine,
+        ..Default::default()
+    };
+    if let Some(u) = p.util {
+        cfg.util_limit = u;
+    }
+    if let Some(s) = p.seed {
+        cfg.sa.seed = s;
+    }
+    let cost_key = CostKey::new(digest, &p.device, cfg.util_limit, cfg.die_weight);
+    let stop = || token.stopped();
+    let mut warm = FlowWarm {
+        analyzed: caches.analyzed(digest),
+        cost_model: caches.cost(&cost_key),
+        cancel: Some(&stop),
+        ..Default::default()
+    };
+    let report = flow::run_hlps_warm(&mut design, &dev, &cfg, &mut warm);
+    if let Some(a) = warm.harvest_analyzed.take() {
+        caches.put_analyzed(digest, a);
+    }
+    if let Some(m) = warm.harvest_cost.take() {
+        caches.put_cost(cost_key, m);
+    }
+    let report = report.map_err(|e| flow_error(e, token))?;
+
+    let mut o = JsonObj::new();
+    o.insert("design_digest", Json::str(format!("{digest:016x}")));
+    if let Some(b) = bench {
+        o.insert("bench", Json::str(b));
+    }
+    o.insert("device", Json::str(&p.device));
+    o.insert("partitions", Json::num(report.partitions as f64));
+    o.insert("relay_stations", Json::num(report.relay_stations as f64));
+    o.insert(
+        "floorplan_wirelength",
+        num_or_null(report.floorplan_wirelength),
+    );
+    o.insert("evaluator", Json::str(report.evaluator_used));
+    o.insert("optimized_mhz", num_or_null(report.optimized.fmax_mhz()));
+    o.insert("routable", Json::Bool(report.optimized.routable()));
+    o.insert(
+        "baseline_mhz",
+        report.baseline_fmax().map(num_or_null).unwrap_or(Json::Null),
+    );
+    o.insert(
+        "improvement_pct",
+        report
+            .improvement_pct()
+            .map(num_or_null)
+            .unwrap_or(Json::Null),
+    );
+    o.insert(
+        "util_pct",
+        Json::Arr(
+            report
+                .optimized
+                .util_pct
+                .iter()
+                .map(|&u| num_or_null(u))
+                .collect(),
+        ),
+    );
+    o.insert(
+        "log",
+        Json::Arr(report.log.iter().map(Json::str).collect()),
+    );
+    Ok(Json::Obj(o))
+}
+
+fn run_pipeline(
+    p: &PipelineParams,
+    caches: &CacheSet,
+    _token: &CancelToken,
+) -> Result<Json, JobError> {
+    let (design, digest_in, _bench) = resolve_input(&p.input)?;
+    // The analyze-structure/no-DRC combination is exactly what the flow's
+    // stage-1–2 snapshot holds, so pipeline jobs share the flow's warm
+    // cache in both directions.
+    let (out_design, report, log) = if p.spec == registry::ANALYZE_STRUCTURE && !p.drc {
+        let analyzed = match caches.analyzed(digest_in) {
+            Some(a) => a,
+            None => {
+                let a = Arc::new(flow::analyze_design(&design).map_err(|e| {
+                    JobError::new(ErrorCode::Internal, format!("pipeline failed: {e:#}"))
+                })?);
+                caches.put_analyzed(digest_in, a.clone());
+                a
+            }
+        };
+        (
+            analyzed.design.clone(),
+            analyzed.report.clone(),
+            analyzed.ctx.log.clone(),
+        )
+    } else {
+        let pipeline = registry::build(&p.spec)
+            .map_err(|e| JobError::bad(format!("invalid pipeline spec: {e:#}")))?;
+        let mut d = design.clone();
+        let mut ctx = PassContext::new();
+        ctx.drc_after_each = p.drc;
+        let report = pipeline.run(&mut d, &mut ctx).map_err(|e| {
+            JobError::new(ErrorCode::Internal, format!("pipeline failed: {e:#}"))
+        })?;
+        (d, report, ctx.log)
+    };
+
+    let mut o = JsonObj::new();
+    o.insert("design_digest_in", Json::str(format!("{digest_in:016x}")));
+    o.insert("spec", Json::str(&p.spec));
+    o.insert(
+        "passes",
+        Json::Arr(
+            report
+                .passes
+                .iter()
+                .map(|rec| {
+                    let mut po = JsonObj::new();
+                    po.insert("name", Json::str(&rec.name));
+                    po.insert(
+                        "drc",
+                        Json::str(match rec.drc {
+                            DrcOutcome::Clean => "clean",
+                            DrcOutcome::Skipped => "-",
+                        }),
+                    );
+                    Json::Obj(po)
+                })
+                .collect(),
+        ),
+    );
+    o.insert("log", Json::Arr(log.iter().map(Json::str).collect()));
+    o.insert(
+        "design_digest_out",
+        Json::str(format!("{:016x}", synthetic::digest(&out_design))),
+    );
+    o.insert("design", design_to_json(&out_design));
+    Ok(Json::Obj(o))
+}
+
+fn run_fuzz(p: &FuzzParams, token: &CancelToken) -> Result<Json, JobError> {
+    check(token)?;
+    let cfg = SyntheticConfig::default();
+    let mut o = JsonObj::new();
+    o.insert(
+        "lane",
+        Json::str(match p.lane {
+            FuzzLane::Ir => "ir",
+            FuzzLane::Verilog => "verilog",
+        }),
+    );
+    o.insert("seed", Json::num(p.seed as f64));
+    o.insert("cases", Json::num(p.cases as f64));
+    let failure = match p.lane {
+        FuzzLane::Ir => {
+            let report = fuzz::run(p.seed, p.cases, &cfg);
+            report.failure.map(|f| {
+                let mut fo = JsonObj::new();
+                fo.insert("case", Json::num(f.case as f64));
+                fo.insert(
+                    "violations",
+                    Json::Arr(f.violations.iter().map(|v| Json::str(*v)).collect()),
+                );
+                fo.insert("minimal_json", Json::str(f.minimal_json));
+                Json::Obj(fo)
+            })
+        }
+        FuzzLane::Verilog => {
+            let report = fuzz::run_verilog(p.seed, p.cases, &cfg);
+            report.failure.map(|f| {
+                let mut fo = JsonObj::new();
+                fo.insert("case", Json::num(f.case as f64));
+                fo.insert(
+                    "violations",
+                    Json::Arr(f.violations.iter().map(|v| Json::str(*v)).collect()),
+                );
+                fo.insert("minimal_source", Json::str(f.minimal_source));
+                Json::Obj(fo)
+            })
+        }
+    };
+    o.insert("ok", Json::Bool(failure.is_none()));
+    o.insert("failure", failure.unwrap_or(Json::Null));
+    Ok(Json::Obj(o))
+}
+
+fn run_explore(
+    p: &ExploreParams,
+    caches: &CacheSet,
+    token: &CancelToken,
+) -> Result<Json, JobError> {
+    let (design, digest, _bench) = resolve_input(&p.input)?;
+    let dev = builtin::by_name(&p.device)
+        .map_err(|e| JobError::bad(format!("unknown device '{}': {e:#}", p.device)))?;
+    check(token)?;
+    // Warm the whole sweep from one snapshot. If analysis fails we pass
+    // None so every point reproduces the identical per-point failure the
+    // cold lane reports (NaN rows), instead of erroring the job.
+    let analyzed = match caches.analyzed(digest) {
+        Some(a) => Some(a),
+        None => match flow::analyze_design(&design) {
+            Ok(a) => {
+                let a = Arc::new(a);
+                caches.put_analyzed(digest, a.clone());
+                Some(a)
+            }
+            Err(_) => None,
+        },
+    };
+    let cfg = FlowConfig::default();
+    let pool = Pool::new(1);
+    let rows = explore::explore_warm(&design, &dev, &p.limits, &cfg, &pool, analyzed)
+        .map_err(|e| JobError::new(ErrorCode::Internal, format!("explore failed: {e:#}")))?;
+
+    let mut o = JsonObj::new();
+    o.insert("design_digest", Json::str(format!("{digest:016x}")));
+    o.insert("device", Json::str(&p.device));
+    o.insert(
+        "rows",
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    let mut ro = JsonObj::new();
+                    ro.insert("util_limit", num_or_null(r.util_limit));
+                    ro.insert("max_slot_util", num_or_null(r.max_slot_util));
+                    ro.insert("wirelength", num_or_null(r.wirelength));
+                    ro.insert("fmax_mhz", num_or_null(r.fmax_mhz));
+                    ro.insert("routable", Json::Bool(r.routable));
+                    Json::Obj(ro)
+                })
+                .collect(),
+        ),
+    );
+    Ok(Json::Obj(o))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(text: &str) -> JsonObj {
+        Json::parse(text).unwrap().as_obj().unwrap().clone()
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_shapes() {
+        assert!(JobRequest::parse("flow", &params(r#"{"bench":"cnn:2x2","oops":1}"#)).is_err());
+        assert!(JobRequest::parse("flow", &params(r#"{}"#)).is_err());
+        assert!(JobRequest::parse(
+            "flow",
+            &params(r#"{"bench":"cnn:2x2","design":{"top":"T","modules":[]}}"#)
+        )
+        .is_err());
+        assert!(JobRequest::parse("fuzz", &params(r#"{"cases":0}"#)).is_err());
+        assert!(JobRequest::parse("fuzz", &params(r#"{"cases":99999}"#)).is_err());
+        assert!(JobRequest::parse("fuzz", &params(r#"{"lane":"vhdl"}"#)).is_err());
+        assert!(JobRequest::parse("explore", &params(r#"{"bench":"x","limits":[2.0]}"#)).is_err());
+        assert!(JobRequest::parse("nope", &params(r#"{}"#)).is_err());
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let JobRequest::Flow(f) =
+            JobRequest::parse("flow", &params(r#"{"bench":"cnn:2x2"}"#)).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(f.device, "u280");
+        assert!(f.sa_refine && f.util.is_none() && f.seed.is_none());
+        let JobRequest::Fuzz(z) = JobRequest::parse("fuzz", &params(r#"{}"#)).unwrap() else {
+            panic!()
+        };
+        assert_eq!((z.seed, z.cases, z.lane), (0, 64, FuzzLane::Ir));
+        let JobRequest::Explore(e) =
+            JobRequest::parse("explore", &params(r#"{"bench":"cnn:2x2"}"#)).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(e.limits, explore::default_limits());
+    }
+
+    #[test]
+    fn canonical_is_stable_and_distinguishes_params() {
+        let a = JobRequest::parse("flow", &params(r#"{"bench":"cnn:2x2"}"#)).unwrap();
+        let b = JobRequest::parse("flow", &params(r#"{"bench":"cnn:2x2","sa_refine":true}"#))
+            .unwrap();
+        // Defaulted and explicit-default params canonicalize identically.
+        assert_eq!(a.canonical().dump(), b.canonical().dump());
+        assert_eq!(a.result_key(), b.result_key());
+        let c = JobRequest::parse("flow", &params(r#"{"bench":"cnn:2x2","util":0.6}"#)).unwrap();
+        assert_ne!(a.result_key(), c.result_key());
+        let d = JobRequest::parse("pipeline", &params(r#"{"bench":"cnn:2x2"}"#)).unwrap();
+        assert_ne!(a.result_key(), d.result_key());
+    }
+
+    #[test]
+    fn execute_memoizes_and_warm_equals_cold() {
+        let req = JobRequest::parse(
+            "flow",
+            &params(r#"{"bench":"cnn:3x2","device":"u250","sa_refine":false}"#),
+        )
+        .unwrap();
+        let token = CancelToken::default();
+        let cold = execute(&req, &CacheSet::disabled(), &token).unwrap();
+        let warm_caches = CacheSet::new(8);
+        let first = execute(&req, &warm_caches, &token).unwrap();
+        let second = execute(&req, &warm_caches, &token).unwrap();
+        assert_eq!(cold.dump(), first.dump());
+        assert_eq!(first.dump(), second.dump());
+        let stats = warm_caches.stats();
+        assert_eq!(stats[0].0, "results");
+        assert!(stats[0].1.hits >= 1, "resubmit did not hit the memo");
+    }
+
+    #[test]
+    fn pipeline_and_flow_share_the_analyzed_cache() {
+        let caches = CacheSet::new(8);
+        let token = CancelToken::default();
+        let pipe = JobRequest::parse("pipeline", &params(r#"{"bench":"cnn:3x2"}"#)).unwrap();
+        execute(&pipe, &caches, &token).unwrap();
+        let analyzed_misses = caches.stats()[1].1.misses;
+        let flow = JobRequest::parse(
+            "flow",
+            &params(r#"{"bench":"cnn:3x2","device":"u250","sa_refine":false}"#),
+        )
+        .unwrap();
+        execute(&flow, &caches, &token).unwrap();
+        let s = caches.stats()[1].1;
+        assert!(s.hits >= 1, "flow did not reuse the pipeline's analysis");
+        assert_eq!(s.misses, analyzed_misses, "flow re-analyzed a cached design");
+    }
+
+    #[test]
+    fn canceled_token_yields_typed_error() {
+        let req = JobRequest::parse("flow", &params(r#"{"bench":"cnn:2x2"}"#)).unwrap();
+        let token = CancelToken::default();
+        token.cancel();
+        let err = execute(&req, &CacheSet::disabled(), &token).unwrap_err();
+        assert_eq!(err.code, ErrorCode::Canceled);
+    }
+}

@@ -1,0 +1,539 @@
+//! The daemon's wire protocol: line-delimited JSON over a unix socket or
+//! TCP, framed on [`util::json`](crate::util::json).
+//!
+//! Requests are single-line JSON objects with at most four keys:
+//!
+//! ```text
+//! {"id": "f1", "type": "flow", "params": {...}, "timeout_ms": 60000}
+//! ```
+//!
+//! * `id` — string or number, echoed verbatim on the response. Optional
+//!   for introspection requests, required for jobs (a job response would
+//!   otherwise be unmatchable).
+//! * `type` — `hello` | `stats` | `cancel` | `shutdown` (handled inline)
+//!   or a job kind: `flow` | `pipeline` | `fuzz` | `explore` (queued).
+//! * `params` — object; kind-specific, strictly validated (unknown keys
+//!   are rejected so typos fail loudly instead of silently defaulting).
+//! * `timeout_ms` — optional cooperative deadline for job requests.
+//!
+//! Every request line gets exactly one response line (blank lines are
+//! skipped):
+//!
+//! ```text
+//! {"id": "f1", "ok": true,  "result": {...}}
+//! {"id": "f1", "ok": false, "error": {"code": "canceled", "message": "..."}}
+//! ```
+//!
+//! Malformed input — bad JSON, a non-object, an oversized line — is
+//! answered with a typed error envelope (`id` is `null` when it could
+//! not be recovered) and never kills the connection, let alone the
+//! daemon.
+
+use crate::server::ops::JobRequest;
+use crate::util::json::{Json, JsonObj};
+use std::io::{self, ErrorKind, Read};
+
+/// Protocol revision, reported in `hello`. Bump on breaking envelope
+/// changes.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// The crate version, reported in `hello` (and by `rsir version`) so
+/// clients can detect server/CLI skew.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default per-line byte cap. Inline designs ride inside request lines,
+/// so the cap is generous; `ServeConfig::max_line` overrides it (tests
+/// use tiny caps to exercise the oversize path).
+pub const DEFAULT_MAX_LINE: usize = 16 * 1024 * 1024;
+
+/// Typed error codes, stable wire strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line was not valid JSON (or not valid UTF-8).
+    BadJson,
+    /// Structurally valid JSON that violates the envelope or params
+    /// schema.
+    BadRequest,
+    /// Unknown `type`.
+    UnknownType,
+    /// The line exceeded the server's byte cap.
+    Oversized,
+    /// `cancel` for a job this connection never submitted (or already
+    /// completed).
+    UnknownJob,
+    /// A job id reused on the same connection.
+    DuplicateJob,
+    /// The job was canceled before completing.
+    Canceled,
+    /// The job's `timeout_ms` deadline passed before completion.
+    Timeout,
+    /// The bounded job queue rejected the submission.
+    QueueFull,
+    /// The job itself failed (deterministically — the message is part of
+    /// the byte-identity contract).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadJson => "bad-json",
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::UnknownType => "unknown-type",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::UnknownJob => "unknown-job",
+            ErrorCode::DuplicateJob => "duplicate-job",
+            ErrorCode::Canceled => "canceled",
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::QueueFull => "queue-full",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// A request that failed validation before reaching the queue.
+#[derive(Debug, Clone)]
+pub struct ProtocolError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ProtocolError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        ProtocolError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    fn bad(message: impl Into<String>) -> Self {
+        ProtocolError::new(ErrorCode::BadRequest, message)
+    }
+}
+
+/// A parsed request.
+#[derive(Debug)]
+pub enum Request {
+    Hello,
+    Stats,
+    Cancel { job: String },
+    Shutdown,
+    Job(JobRequest),
+}
+
+/// One parsed request line: the echoable id survives even when the
+/// request itself failed validation, so errors stay attributable.
+#[derive(Debug)]
+pub struct Envelope {
+    /// `Json::Null` when absent or unrecoverable.
+    pub id: Json,
+    /// Cooperative job deadline.
+    pub timeout_ms: Option<u64>,
+    pub request: Result<Request, ProtocolError>,
+}
+
+impl Envelope {
+    fn err(id: Json, e: ProtocolError) -> Envelope {
+        Envelope {
+            id,
+            timeout_ms: None,
+            request: Err(e),
+        }
+    }
+}
+
+/// Parse one request line into an [`Envelope`]. Total: every input maps
+/// to either a request or a typed error — nothing panics, nothing is
+/// silently dropped.
+pub fn parse_line(line: &str) -> Envelope {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            return Envelope::err(
+                Json::Null,
+                ProtocolError::new(ErrorCode::BadJson, format!("invalid JSON: {e}")),
+            )
+        }
+    };
+    let Some(obj) = j.as_obj() else {
+        return Envelope::err(
+            Json::Null,
+            ProtocolError::bad("request must be a JSON object"),
+        );
+    };
+    let id = match obj.get("id") {
+        None | Some(Json::Null) => Json::Null,
+        Some(v @ (Json::Str(_) | Json::Num(_))) => v.clone(),
+        Some(_) => {
+            return Envelope::err(
+                Json::Null,
+                ProtocolError::bad("'id' must be a string or a number"),
+            )
+        }
+    };
+    for key in obj.keys() {
+        if !matches!(key.as_str(), "id" | "type" | "params" | "timeout_ms") {
+            return Envelope::err(
+                id,
+                ProtocolError::bad(format!("unknown envelope key '{key}'")),
+            );
+        }
+    }
+    let timeout_ms = match obj.get("timeout_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => match v.as_u64() {
+            Some(ms) => Some(ms),
+            None => {
+                return Envelope::err(
+                    id,
+                    ProtocolError::bad("'timeout_ms' must be a non-negative integer"),
+                )
+            }
+        },
+    };
+    let ty = match obj.get("type").map(|t| (t, t.as_str())) {
+        Some((_, Some(t))) => t,
+        Some((_, None)) => return Envelope::err(id, ProtocolError::bad("'type' must be a string")),
+        None => return Envelope::err(id, ProtocolError::bad("missing 'type'")),
+    };
+    let empty = JsonObj::new();
+    let params = match obj.get("params") {
+        None | Some(Json::Null) => &empty,
+        Some(p) => match p.as_obj() {
+            Some(p) => p,
+            None => return Envelope::err(id, ProtocolError::bad("'params' must be an object")),
+        },
+    };
+    let request = match ty {
+        "hello" => Ok(Request::Hello),
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        "cancel" => match params.get("job").and_then(|j| j.as_str()) {
+            Some(job) => Ok(Request::Cancel {
+                job: job.to_string(),
+            }),
+            None => Err(ProtocolError::bad("cancel requires string 'params.job'")),
+        },
+        "flow" | "pipeline" | "fuzz" | "explore" => {
+            JobRequest::parse(ty, params).map(Request::Job)
+        }
+        other => Err(ProtocolError::new(
+            ErrorCode::UnknownType,
+            format!("unknown request type '{other}'"),
+        )),
+    };
+    Envelope {
+        id,
+        timeout_ms,
+        request,
+    }
+}
+
+/// Render a success response line (no trailing newline). `id` leads so
+/// responses grep cleanly in CI logs.
+pub fn ok_line(id: &Json, result: Json) -> String {
+    let mut o = JsonObj::new();
+    o.insert("id", id.clone());
+    o.insert("ok", Json::Bool(true));
+    o.insert("result", result);
+    Json::Obj(o).dump()
+}
+
+/// Render an error response line (no trailing newline).
+pub fn err_line(id: &Json, code: ErrorCode, message: &str) -> String {
+    let mut e = JsonObj::new();
+    e.insert("code", Json::str(code.as_str()));
+    e.insert("message", Json::str(message));
+    let mut o = JsonObj::new();
+    o.insert("id", id.clone());
+    o.insert("ok", Json::Bool(false));
+    o.insert("error", Json::Obj(e));
+    Json::Obj(o).dump()
+}
+
+/// The `hello` result payload: what a client needs to detect skew.
+pub fn hello_result(workers: usize) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("server", Json::str("rsir"));
+    o.insert("version", Json::str(VERSION));
+    o.insert("protocol", Json::num(PROTOCOL_VERSION as f64));
+    o.insert("workers", Json::num(workers as f64));
+    Json::Obj(o)
+}
+
+/// The `shutdown` acknowledgement payload.
+pub fn shutdown_result() -> Json {
+    let mut o = JsonObj::new();
+    o.insert("shutting_down", Json::Bool(true));
+    Json::Obj(o)
+}
+
+/// Canonical string form of a *job* id: the registry/cancel key. `None`
+/// for anything but a string or number — job requests without a usable
+/// id are rejected (their response would be unmatchable), and both the
+/// daemon and the one-shot lane use this same predicate so the rejection
+/// bytes agree.
+pub fn job_id_string(id: &Json) -> Option<String> {
+    match id {
+        Json::Str(s) => Some(s.clone()),
+        Json::Num(_) => Some(id.dump()),
+        _ => None,
+    }
+}
+
+/// One framing event from a [`LineReader`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineEvent {
+    /// A complete line (without the terminator).
+    Line(String),
+    /// The current line exceeded the byte cap; its remainder is being
+    /// discarded up to the next newline. Reported once per long line.
+    Oversized,
+    /// No data available right now (read timed out / would block).
+    Idle,
+    /// Peer closed the connection. A trailing partial line (no newline
+    /// before EOF) is dropped — half a request is not a request.
+    Eof,
+}
+
+/// Incremental, byte-capped line framer over any [`Read`]. Handles
+/// partial lines across reads, treats `WouldBlock`/`TimedOut` as
+/// [`LineEvent::Idle`] (the daemon polls its shutdown flag between
+/// reads), and recovers from oversized lines by discarding through the
+/// next newline.
+pub struct LineReader<R> {
+    inner: R,
+    buf: Vec<u8>,
+    max: usize,
+    discarding: bool,
+}
+
+impl<R: Read> LineReader<R> {
+    pub fn new(inner: R, max: usize) -> Self {
+        LineReader {
+            inner,
+            buf: Vec::new(),
+            max,
+            discarding: false,
+        }
+    }
+
+    /// Advance the framer by at most one `read`.
+    pub fn poll_line(&mut self) -> io::Result<LineEvent> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop(); // the newline itself
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return Ok(LineEvent::Line(
+                    String::from_utf8_lossy(&line).into_owned(),
+                ));
+            }
+            if !self.discarding && self.buf.len() > self.max {
+                self.buf.clear();
+                self.discarding = true;
+                return Ok(LineEvent::Oversized);
+            }
+            let mut chunk = [0u8; 4096];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => return Ok(LineEvent::Eof),
+                Ok(n) => {
+                    let mut data = &chunk[..n];
+                    if self.discarding {
+                        // Drop bytes up to and including the newline that
+                        // ends the oversized line, then resume framing.
+                        match data.iter().position(|&b| b == b'\n') {
+                            Some(p) => {
+                                data = &data[p + 1..];
+                                self.discarding = false;
+                            }
+                            None => continue,
+                        }
+                    }
+                    self.buf.extend_from_slice(data);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    return Ok(LineEvent::Idle)
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(line: &str) -> Request {
+        parse_line(line).request.expect("expected valid request")
+    }
+
+    fn parse_err(line: &str) -> ProtocolError {
+        parse_line(line).request.expect_err("expected error")
+    }
+
+    #[test]
+    fn parses_introspection_requests() {
+        assert!(matches!(parse_ok(r#"{"type":"hello"}"#), Request::Hello));
+        assert!(matches!(
+            parse_ok(r#"{"id":7,"type":"stats"}"#),
+            Request::Stats
+        ));
+        assert!(matches!(
+            parse_ok(r#"{"id":"x","type":"shutdown"}"#),
+            Request::Shutdown
+        ));
+        let Request::Cancel { job } =
+            parse_ok(r#"{"id":"c1","type":"cancel","params":{"job":"f1"}}"#)
+        else {
+            panic!("expected cancel")
+        };
+        assert_eq!(job, "f1");
+    }
+
+    #[test]
+    fn id_is_echoed_even_on_errors() {
+        let env = parse_line(r#"{"id":"e1","type":"nope"}"#);
+        assert_eq!(env.id, Json::str("e1"));
+        assert_eq!(env.request.unwrap_err().code, ErrorCode::UnknownType);
+        let env = parse_line(r#"{"id":42,"type":"stats"}"#);
+        assert_eq!(env.id, Json::Num(42.0));
+    }
+
+    #[test]
+    fn malformed_inputs_get_typed_errors() {
+        assert_eq!(parse_err("not json at all").code, ErrorCode::BadJson);
+        assert_eq!(parse_err("[1,2,3]").code, ErrorCode::BadRequest);
+        assert_eq!(parse_err(r#"{"type":7}"#).code, ErrorCode::BadRequest);
+        assert_eq!(parse_err(r#"{"id":"x"}"#).code, ErrorCode::BadRequest);
+        assert_eq!(
+            parse_err(r#"{"type":"hello","surprise":1}"#).code,
+            ErrorCode::BadRequest
+        );
+        assert_eq!(
+            parse_err(r#"{"id":[1],"type":"hello"}"#).code,
+            ErrorCode::BadRequest
+        );
+        assert_eq!(
+            parse_err(r#"{"type":"cancel","params":{}}"#).code,
+            ErrorCode::BadRequest
+        );
+        assert_eq!(
+            parse_err(r#"{"type":"hello","timeout_ms":-5}"#).code,
+            ErrorCode::BadRequest
+        );
+    }
+
+    #[test]
+    fn response_lines_are_stable() {
+        assert_eq!(
+            ok_line(&Json::str("a"), Json::Bool(true)),
+            r#"{"id":"a","ok":true,"result":true}"#
+        );
+        assert_eq!(
+            err_line(&Json::Null, ErrorCode::Oversized, "too big"),
+            r#"{"id":null,"ok":false,"error":{"code":"oversized","message":"too big"}}"#
+        );
+    }
+
+    #[test]
+    fn hello_reports_version_and_protocol() {
+        let h = hello_result(3);
+        let o = h.as_obj().unwrap();
+        assert_eq!(o.get("version").unwrap().as_str(), Some(VERSION));
+        assert_eq!(o.get("protocol").unwrap().as_u64(), Some(PROTOCOL_VERSION));
+        assert_eq!(o.get("workers").unwrap().as_u64(), Some(3));
+    }
+
+    /// A `Read` that feeds predefined chunks, then `WouldBlock`, then EOF.
+    struct Feed {
+        chunks: Vec<Vec<u8>>,
+        blocks: usize,
+    }
+
+    impl Read for Feed {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if let Some(c) = self.chunks.first() {
+                let n = c.len().min(buf.len());
+                buf[..n].copy_from_slice(&c[..n]);
+                if n == c.len() {
+                    self.chunks.remove(0);
+                } else {
+                    self.chunks[0] = c[n..].to_vec();
+                }
+                return Ok(n);
+            }
+            if self.blocks > 0 {
+                self.blocks -= 1;
+                return Err(io::Error::new(ErrorKind::WouldBlock, "would block"));
+            }
+            Ok(0)
+        }
+    }
+
+    #[test]
+    fn linereader_reassembles_partial_lines() {
+        let feed = Feed {
+            chunks: vec![b"{\"a\":".to_vec(), b"1}\n{\"b\":2}\n".to_vec()],
+            blocks: 1,
+        };
+        let mut r = LineReader::new(feed, 1024);
+        assert_eq!(
+            r.poll_line().unwrap(),
+            LineEvent::Line("{\"a\":1}".to_string())
+        );
+        assert_eq!(
+            r.poll_line().unwrap(),
+            LineEvent::Line("{\"b\":2}".to_string())
+        );
+        assert_eq!(r.poll_line().unwrap(), LineEvent::Idle);
+        assert_eq!(r.poll_line().unwrap(), LineEvent::Eof);
+    }
+
+    #[test]
+    fn linereader_reports_oversize_once_and_recovers() {
+        let mut long = vec![b'x'; 64];
+        long.extend_from_slice(b" tail\nok\n");
+        let feed = Feed {
+            chunks: vec![long],
+            blocks: 0,
+        };
+        let mut r = LineReader::new(feed, 16);
+        assert_eq!(r.poll_line().unwrap(), LineEvent::Oversized);
+        assert_eq!(r.poll_line().unwrap(), LineEvent::Line("ok".to_string()));
+        assert_eq!(r.poll_line().unwrap(), LineEvent::Eof);
+    }
+
+    #[test]
+    fn linereader_drops_partial_line_at_eof() {
+        let feed = Feed {
+            chunks: vec![b"complete\nhalf".to_vec()],
+            blocks: 0,
+        };
+        let mut r = LineReader::new(feed, 1024);
+        assert_eq!(
+            r.poll_line().unwrap(),
+            LineEvent::Line("complete".to_string())
+        );
+        assert_eq!(r.poll_line().unwrap(), LineEvent::Eof);
+    }
+
+    #[test]
+    fn linereader_strips_carriage_return() {
+        let feed = Feed {
+            chunks: vec![b"{\"x\":1}\r\n".to_vec()],
+            blocks: 0,
+        };
+        let mut r = LineReader::new(feed, 1024);
+        assert_eq!(
+            r.poll_line().unwrap(),
+            LineEvent::Line("{\"x\":1}".to_string())
+        );
+    }
+}

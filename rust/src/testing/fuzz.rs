@@ -172,6 +172,67 @@ pub fn seed_digests(seeds: std::ops::Range<u64>, cfg: &SyntheticConfig) -> Vec<(
         .collect()
 }
 
+/// Outcome of one daemon-equivalence fuzz run (`rsir fuzz --daemon`).
+#[derive(Debug, Clone)]
+pub struct DaemonFuzzReport {
+    pub seed: u64,
+    pub cases: usize,
+    /// Rendered oracle violations from the failing batch (empty = clean).
+    pub violations: Vec<String>,
+    /// Pretty IR JSON of a minimized single-design counterexample, when
+    /// the failure reproduces on one design alone. Batch-only failures
+    /// (concurrency/cancellation races) report violations without one.
+    pub minimal_json: Option<String>,
+}
+
+impl DaemonFuzzReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Fuzz the daemon's determinism contract: generate `cases` plans from
+/// `seed`, materialize them, and run the whole batch through
+/// [`oracle::check_daemon_equivalence`] (one daemon, two concurrent
+/// connections, warm-cache resubmits, mid-flight cancellation). On
+/// failure, attribute it to the first plan that also fails as a
+/// single-design batch and shrink that plan; failures that only
+/// reproduce with the full batch are reported unminimized.
+pub fn run_daemon(seed: u64, cases: usize, cfg: &SyntheticConfig) -> DaemonFuzzReport {
+    let gen = DesignGen { cfg: cfg.clone() };
+    let mut rng = Rng::new(seed);
+    let plans: Vec<DesignPlan> = (0..cases).map(|_| gen.generate(&mut rng)).collect();
+    let designs: Vec<_> = plans.iter().map(materialize).collect();
+    let outcome = oracle::check_daemon_equivalence(&designs);
+    if outcome.is_clean() {
+        return DaemonFuzzReport {
+            seed,
+            cases,
+            violations: Vec::new(),
+            minimal_json: None,
+        };
+    }
+    let violations: Vec<String> = outcome.violations.iter().map(|v| v.to_string()).collect();
+    let prop = |p: &DesignPlan| oracle::check_daemon_equivalence(&[materialize(p)]).is_clean();
+    for plan in plans {
+        if !prop(&plan) {
+            let minimal_plan = minimize(&gen, plan, &prop);
+            return DaemonFuzzReport {
+                seed,
+                cases,
+                violations,
+                minimal_json: Some(design_to_json(&materialize(&minimal_plan)).pretty()),
+            };
+        }
+    }
+    DaemonFuzzReport {
+        seed,
+        cases,
+        violations,
+        minimal_json: None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

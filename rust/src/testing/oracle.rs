@@ -695,6 +695,184 @@ where
     out
 }
 
+/// The daemon's determinism invariant, checked differentially: boot a
+/// real `rsir serve` daemon (unix socket, 4 workers, warm caches on) and
+/// require that every response byte matches the one-shot lane
+/// ([`client::run_batch_local`](crate::server::client::run_batch_local),
+/// which runs with caches disabled).
+///
+/// Per input design the batch submits a `pipeline` job and a `flow` job
+/// (devices and SA settings varied by index, inline IR payloads), plus
+/// warm-path resubmits of the first design (exercising the `results`
+/// memo) — split across **two concurrent connections**, so job
+/// completion order races freely while the bytes may not. A deliberately
+/// slow `flow` job is canceled mid-flight and then resubmitted; the
+/// canceled response may be either the typed `canceled` error or (if the
+/// job won the race) the full canonical result, but the *resubmit* must
+/// again match the one-shot lane exactly — a canceled job must never
+/// poison the caches.
+///
+/// Violations: **daemon-equivalence** (byte mismatch) and
+/// **daemon-protocol** (connection/response-shape failures).
+pub fn check_daemon_equivalence(designs: &[Design]) -> OracleOutcome {
+    use crate::server::client::{run_batch_local, run_batch_remote};
+    use crate::server::protocol::{err_line, parse_line, ErrorCode};
+    use crate::server::{scratch_socket, Bind, ServeConfig, Server};
+    use std::time::Duration;
+
+    let mut out = OracleOutcome::default();
+    if designs.is_empty() {
+        return out;
+    }
+
+    // Two request batches, one per connection: pipelines + the cancel
+    // scenario on A, flows + warm resubmits on B.
+    let mut lines_a: Vec<String> = Vec::new();
+    let mut lines_b: Vec<String> = Vec::new();
+    let flow_line = |id: &str, dj: &str, i: usize| {
+        let device = if i % 2 == 0 { "u250" } else { "u280" };
+        let sa = i % 3 != 0;
+        format!(
+            r#"{{"id":"{id}","type":"flow","params":{{"design":{dj},"device":"{device}","sa_refine":{sa},"seed":7}}}}"#
+        )
+    };
+    for (i, d) in designs.iter().enumerate() {
+        let dj = design_to_json(d).dump();
+        lines_a.push(format!(
+            r#"{{"id":"p{i}","type":"pipeline","params":{{"design":{dj}}}}}"#
+        ));
+        lines_b.push(flow_line(&format!("f{i}"), &dj, i));
+    }
+    // Warm-path resubmits of design 0: identical params, new ids — the
+    // daemon answers from its results memo, the one-shot lane recomputes.
+    let dj0 = design_to_json(&designs[0]).dump();
+    lines_b.push(format!(
+        r#"{{"id":"p0r","type":"pipeline","params":{{"design":{dj0}}}}}"#
+    ));
+    lines_b.push(flow_line("f0r", &dj0, 0));
+    // Mid-flight cancellation: a deliberately heavy flow, a cancel racing
+    // it on the same connection, and a resubmit that must be unpoisoned.
+    // Skipped for single-design batches so the fuzz minimizer's per-plan
+    // property stays cheap (the scenario is batch-level, not per-design).
+    if designs.len() >= 2 {
+        let slow = r#"{"id":"slow","type":"flow","params":{"bench":"cnn:13x8","seed":7}}"#;
+        let slow_resubmit =
+            r#"{"id":"slowr","type":"flow","params":{"bench":"cnn:13x8","seed":7}}"#;
+        lines_a.push(slow.to_string());
+        lines_a.push(r#"{"id":"c-slow","type":"cancel","params":{"job":"slow"}}"#.to_string());
+        lines_a.push(slow_resubmit.to_string());
+    }
+
+    // Reference side: the one-shot lane, sequential, caches disabled.
+    let expect_a = run_batch_local(&lines_a);
+    let expect_b = run_batch_local(&lines_b);
+
+    // Daemon side.
+    let mut cfg = ServeConfig::new(Bind::Unix(scratch_socket("oracle")));
+    cfg.workers = 4;
+    cfg.quiet = true;
+    let server = match Server::bind(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            out.push("daemon-protocol", format!("server failed to bind: {e:#}"));
+            return out;
+        }
+    };
+    let endpoint = server.endpoint();
+    let server_thread = std::thread::spawn(move || server.run());
+    let timeout = Duration::from_secs(300);
+    let (got_a, got_b) = std::thread::scope(|s| {
+        let ep_a = endpoint.clone();
+        let la = &lines_a;
+        let a = s.spawn(move || run_batch_remote(&ep_a, la, timeout));
+        let ep_b = endpoint.clone();
+        let lb = &lines_b;
+        let b = s.spawn(move || run_batch_remote(&ep_b, lb, timeout));
+        (a.join(), b.join())
+    });
+
+    let compare = |requests: &[String],
+                       expected: &[String],
+                       got: std::thread::Result<anyhow::Result<Vec<String>>>,
+                       out: &mut OracleOutcome| {
+        let got = match got {
+            Ok(Ok(g)) => g,
+            Ok(Err(e)) => {
+                out.push("daemon-protocol", format!("client batch failed: {e:#}"));
+                return;
+            }
+            Err(_) => {
+                out.push("daemon-protocol", "client thread panicked".to_string());
+                return;
+            }
+        };
+        if got.len() != expected.len() {
+            out.push(
+                "daemon-protocol",
+                format!("{} responses for {} requests", got.len(), expected.len()),
+            );
+            return;
+        }
+        for ((req, want), have) in requests.iter().zip(expected).zip(&got) {
+            let id = parse_line(req).id;
+            let id_str = id.dump();
+            if id_str == "\"slow\"" {
+                // Raced by the cancel: either outcome is legal, but it
+                // must be one of exactly these two byte strings.
+                let canceled = err_line(&id, ErrorCode::Canceled, "job canceled");
+                if have != want && *have != canceled {
+                    out.push(
+                        "daemon-equivalence",
+                        format!("job {id_str}: neither completed nor canceled bytes: {have}"),
+                    );
+                }
+                continue;
+            }
+            if id_str == "\"c-slow\"" {
+                // Legal answers depend on the race: acknowledged cancel,
+                // or unknown-job if `slow` already finished.
+                let acked = r#"{"id":"c-slow","ok":true,"result":{"canceled":"slow"}}"#;
+                let done = err_line(&id, ErrorCode::UnknownJob, "job 'slow' already completed");
+                if have != acked && *have != done {
+                    out.push(
+                        "daemon-equivalence",
+                        format!("cancel {id_str}: unexpected response: {have}"),
+                    );
+                }
+                continue;
+            }
+            if have != want {
+                out.push(
+                    "daemon-equivalence",
+                    format!("job {id_str}: daemon bytes differ from one-shot\n  one-shot: {want}\n  daemon:   {have}"),
+                );
+            }
+        }
+    };
+    compare(&lines_a, &expect_a, got_a, &mut out);
+    compare(&lines_b, &expect_b, got_b, &mut out);
+
+    // Orderly shutdown: ack received and the server thread exits clean.
+    match run_batch_remote(
+        &endpoint,
+        &[r#"{"id":"down","type":"shutdown"}"#.to_string()],
+        Duration::from_secs(30),
+    ) {
+        Ok(ack) if ack.first().map(|l| l.contains("shutting_down")) == Some(true) => {}
+        Ok(ack) => out.push(
+            "daemon-protocol",
+            format!("unexpected shutdown ack: {ack:?}"),
+        ),
+        Err(e) => out.push("daemon-protocol", format!("shutdown failed: {e:#}")),
+    }
+    match server_thread.join() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => out.push("daemon-protocol", format!("server exited with error: {e:#}")),
+        Err(_) => out.push("daemon-protocol", "server thread panicked".to_string()),
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,311 @@
+//! Integration tests for the `rsir serve` daemon:
+//!
+//! * the tier-1 daemon-vs-one-shot differential gate (32 fuzzed designs
+//!   through `testing::fuzz::run_daemon`, i.e. one live daemon, two
+//!   concurrent connections, warm resubmits, mid-flight cancellation);
+//! * protocol framing edge cases against a *live* daemon over raw socket
+//!   writes (partial lines, malformed JSON, unknown types, oversized
+//!   payloads, cancel-unknown-job, duplicate ids, deadline expiry);
+//! * a seeded never-panic property: hundreds of mutated request lines
+//!   must each produce a typed response (or nothing), never kill the
+//!   server;
+//! * warm-cache behaviour observable through `stats` (memoized resubmits,
+//!   per-job wall times) and version skew data in `hello`.
+
+use std::io::Write;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use rsir::designs::synthetic::SyntheticConfig;
+use rsir::server::client::{run_batch_local, run_batch_remote};
+use rsir::server::protocol::{LineEvent, LineReader, DEFAULT_MAX_LINE, PROTOCOL_VERSION, VERSION};
+use rsir::server::{connect, scratch_socket, Bind, ServeConfig, Server, Stream};
+use rsir::testing::fuzz;
+use rsir::util::rng::Rng;
+
+/// Boot a quiet daemon on a scratch unix socket. Returns its endpoint and
+/// the join handle for the server thread (joined after `shutdown`).
+fn boot(
+    tag: &str,
+    tweak: impl FnOnce(&mut ServeConfig),
+) -> (Bind, thread::JoinHandle<anyhow::Result<()>>) {
+    let mut cfg = ServeConfig::new(Bind::Unix(scratch_socket(tag)));
+    cfg.workers = 2;
+    cfg.quiet = true;
+    tweak(&mut cfg);
+    let server = Server::bind(cfg).unwrap();
+    let endpoint = server.endpoint();
+    (endpoint, thread::spawn(move || server.run()))
+}
+
+fn shutdown(endpoint: &Bind, handle: thread::JoinHandle<anyhow::Result<()>>) {
+    let ack = run_batch_remote(
+        endpoint,
+        &[r#"{"id":"down","type":"shutdown"}"#.to_string()],
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    assert!(ack[0].contains("shutting_down"), "{}", ack[0]);
+    handle.join().unwrap().unwrap();
+}
+
+/// A raw client connection: byte-level writes (so tests control framing
+/// exactly) and line-at-a-time reads through the same `LineReader` the
+/// daemon uses.
+struct Raw {
+    stream: Stream,
+    reader: LineReader<Stream>,
+}
+
+impl Raw {
+    fn open(endpoint: &Bind) -> Raw {
+        let stream = connect(endpoint).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .unwrap();
+        let reader = LineReader::new(stream.try_clone().unwrap(), DEFAULT_MAX_LINE);
+        Raw { stream, reader }
+    }
+
+    fn send(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    /// Next response line, polling through idle reads until `deadline`.
+    fn recv(&mut self, deadline: Duration) -> String {
+        let end = Instant::now() + deadline;
+        loop {
+            match self.reader.poll_line().unwrap() {
+                LineEvent::Line(l) => return l,
+                LineEvent::Idle => {
+                    assert!(Instant::now() < end, "timed out waiting for a response");
+                }
+                other => panic!("connection ended early: {other:?}"),
+            }
+        }
+    }
+
+    /// Send one request line (newline appended) and return the response.
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(format!("{line}\n").as_bytes());
+        self.recv(Duration::from_secs(120))
+    }
+}
+
+/// The acceptance gate: 32 fuzzed designs, every daemon response byte
+/// (including warm-cache resubmits and the post-cancellation resubmit)
+/// identical to the one-shot `run_batch_local` lane. Replay any failure
+/// with `rsir fuzz --daemon --seed 2026 --cases 32`.
+#[test]
+fn daemon_equivalence_over_32_fuzzed_designs() {
+    let rep = fuzz::run_daemon(2026, 32, &SyntheticConfig::default());
+    assert!(
+        rep.is_clean(),
+        "daemon-equivalence violations:\n{}\nminimal counterexample:\n{}",
+        rep.violations.join("\n"),
+        rep.minimal_json.as_deref().unwrap_or("(batch-only failure)")
+    );
+}
+
+#[test]
+fn framing_edge_cases_yield_typed_errors_and_the_connection_survives() {
+    let (endpoint, handle) = boot("frame", |cfg| cfg.max_line = 512);
+    let mut c = Raw::open(&endpoint);
+
+    // Malformed JSON: typed bad-json error, null id (nothing to echo).
+    let r = c.roundtrip("this is not json");
+    assert!(r.starts_with(r#"{"id":null,"ok":false"#), "{r}");
+    assert!(r.contains(r#""code":"bad-json""#), "{r}");
+
+    // Valid JSON, wrong shape: bad-request.
+    let r = c.roundtrip("[1,2,3]");
+    assert!(r.contains(r#""code":"bad-request""#), "{r}");
+    assert!(r.contains("must be a JSON object"), "{r}");
+
+    // Unknown request type: the id still comes back.
+    let r = c.roundtrip(r#"{"id":"u1","type":"wat"}"#);
+    assert_eq!(
+        r,
+        r#"{"id":"u1","ok":false,"error":{"code":"unknown-type","message":"unknown request type 'wat'"}}"#
+    );
+
+    // Unknown envelope key: rejected rather than silently ignored.
+    let r = c.roundtrip(r#"{"id":"u2","type":"hello","extra":1}"#);
+    assert!(r.contains(r#""code":"bad-request""#), "{r}");
+    assert!(r.contains("unknown envelope key 'extra'"), "{r}");
+
+    // Oversized line (max_line = 512): one typed error, then the stream
+    // recovers at the next newline and keeps serving.
+    let huge = format!("{{\"id\":\"big\",\"type\":\"hello\",\"params\":{{\"x\":\"{}\"}}}}\n", "y".repeat(1024));
+    c.send(huge.as_bytes());
+    let r = c.recv(Duration::from_secs(10));
+    assert_eq!(
+        r,
+        r#"{"id":null,"ok":false,"error":{"code":"oversized","message":"request line exceeds 512 bytes"}}"#
+    );
+    let r = c.roundtrip(r#"{"id":"after","type":"hello"}"#);
+    assert!(r.contains(r#""id":"after","ok":true"#), "{r}");
+
+    // Partial line split across writes (with a pause longer than the
+    // server's read timeout): reassembled into one request.
+    c.send(br#"{"id":"sp","ty"#);
+    thread::sleep(Duration::from_millis(250));
+    c.send(b"pe\":\"hello\"}\n");
+    let r = c.recv(Duration::from_secs(10));
+    assert!(r.starts_with(r#"{"id":"sp","ok":true"#), "{r}");
+
+    // Cancel for a job this connection never submitted.
+    let r = c.roundtrip(r#"{"id":"c1","type":"cancel","params":{"job":"nope"}}"#);
+    assert_eq!(
+        r,
+        r#"{"id":"c1","ok":false,"error":{"code":"unknown-job","message":"no such job 'nope'"}}"#
+    );
+
+    // Job without a usable id: rejected up front (its response would be
+    // unmatchable), same bytes as the one-shot lane.
+    let r = c.roundtrip(r#"{"type":"pipeline","params":{"bench":"cnn:2x2"}}"#);
+    assert_eq!(
+        r,
+        r#"{"id":null,"ok":false,"error":{"code":"bad-request","message":"job requests require a string or numeric id"}}"#
+    );
+
+    // Duplicate job id on one connection: first runs, second is rejected.
+    let r = c.roundtrip(r#"{"id":"j1","type":"pipeline","params":{"bench":"cnn:2x2"}}"#);
+    assert!(r.starts_with(r#"{"id":"j1","ok":true"#), "{r}");
+    let r = c.roundtrip(r#"{"id":"j1","type":"pipeline","params":{"bench":"cnn:2x2"}}"#);
+    assert_eq!(
+        r,
+        r#"{"id":"j1","ok":false,"error":{"code":"duplicate-job","message":"job id 'j1' already used on this connection"}}"#
+    );
+
+    // timeout_ms: 0 — the deadline is already past at the first
+    // cancellation checkpoint, so the job dies with the typed error.
+    let r = c.roundtrip(r#"{"id":"t0","type":"flow","params":{"bench":"cnn:2x2"},"timeout_ms":0}"#);
+    assert_eq!(
+        r,
+        r#"{"id":"t0","ok":false,"error":{"code":"timeout","message":"job deadline exceeded"}}"#
+    );
+
+    shutdown(&endpoint, handle);
+}
+
+/// Every framing-edge-case response above must be byte-identical to the
+/// one-shot lane's verdict on the same lines (the determinism contract
+/// covers errors too). Raw-byte cases (oversized/partial) are framing
+/// concerns with no one-shot analogue and are exercised above.
+#[test]
+fn error_responses_match_the_one_shot_lane() {
+    let lines: Vec<String> = [
+        "this is not json",
+        "[1,2,3]",
+        r#"{"id":"u1","type":"wat"}"#,
+        r#"{"id":"u2","type":"hello","extra":1}"#,
+        r#"{"id":"c1","type":"cancel","params":{"job":"nope"}}"#,
+        r#"{"type":"pipeline","params":{"bench":"cnn:2x2"}}"#,
+        r#"{"id":"j1","type":"pipeline","params":{"bench":"nosuchbench"}}"#,
+        r#"{"id":"j2","type":"fuzz","params":{"cases":0}}"#,
+        r#"{"id":"j3","type":"explore","params":{"bench":"cnn:2x2","limits":[2.0]}}"#,
+        r#"{"id":"j4","type":"flow","params":{"bench":"cnn:2x2","bogus":1}}"#,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let (endpoint, handle) = boot("errs", |_| {});
+    let remote = run_batch_remote(&endpoint, &lines, Duration::from_secs(60)).unwrap();
+    let local = run_batch_local(&lines);
+    assert_eq!(remote, local);
+    // And they really are typed errors, not accidental successes.
+    for (line, resp) in lines.iter().zip(&remote) {
+        assert!(resp.contains(r#""ok":false"#), "{line} -> {resp}");
+    }
+    shutdown(&endpoint, handle);
+}
+
+/// Never-panic property: seeded byte-level mutations of a valid request
+/// line (truncations, flips, span deletions — the same operators as the
+/// Verilog frontend fuzz) are thrown at a live daemon. The server must
+/// stay up and answer a fresh `hello` afterwards.
+#[test]
+fn mutated_request_lines_never_kill_the_daemon() {
+    let (endpoint, handle) = boot("mutate", |cfg| cfg.max_line = 4096);
+    let base = r#"{"id":"m","type":"hello","params":{}}"#.as_bytes().to_vec();
+    let mut rng = Rng::new(2026);
+    let mut c = Raw::open(&endpoint);
+    for _ in 0..300 {
+        let mut bytes = base.clone();
+        match rng.below(4) {
+            0 => {
+                let cut = rng.below(bytes.len());
+                bytes.truncate(cut);
+            }
+            1 => {
+                let at = rng.below(bytes.len());
+                bytes[at] = 0x20 + rng.below(0x5f) as u8;
+            }
+            2 => {
+                let at = rng.below(bytes.len());
+                let len = (rng.below(8) + 1).min(bytes.len() - at);
+                bytes.drain(at..at + len);
+            }
+            _ => {
+                // pure noise line
+                bytes = (0..rng.below(64)).map(|_| 0x20 + rng.below(0x5f) as u8).collect();
+            }
+        }
+        bytes.push(b'\n');
+        c.send(&bytes);
+    }
+    // Drain whatever typed responses the garbage produced, then prove the
+    // daemon is still alive: a tagged hello must come back.
+    c.send(b"{\"id\":\"alive\",\"type\":\"hello\"}\n");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        assert!(Instant::now() < deadline, "daemon stopped answering");
+        let line = c.recv(Duration::from_secs(60));
+        if line.contains(r#""id":"alive""#) {
+            assert!(line.contains(r#""ok":true"#), "{line}");
+            break;
+        }
+    }
+    shutdown(&endpoint, handle);
+}
+
+/// Warm-cache behaviour through the protocol: an identical resubmit is a
+/// result-memo hit (same bytes, different id), and `stats` reports cache
+/// hits, queue state, and per-job wall times.
+#[test]
+fn stats_reports_cache_hits_and_wall_times() {
+    let (endpoint, handle) = boot("stats", |_| {});
+    let mut c = Raw::open(&endpoint);
+
+    let hello = c.roundtrip(r#"{"id":"h","type":"hello"}"#);
+    assert!(hello.contains(&format!(r#""version":"{VERSION}""#)), "{hello}");
+    assert!(hello.contains(&format!(r#""protocol":{PROTOCOL_VERSION}"#)), "{hello}");
+
+    let params = r#"{"bench":"cnn:3x2","device":"u250","sa_refine":false}"#;
+    let cold = c.roundtrip(&format!(r#"{{"id":"f1","type":"flow","params":{params}}}"#));
+    let warm = c.roundtrip(&format!(r#"{{"id":"f2","type":"flow","params":{params}}}"#));
+    assert!(cold.starts_with(r#"{"id":"f1","ok":true"#), "{cold}");
+    // Identical payload bytes after the id: the memoized result is the
+    // same Json value, re-rendered.
+    assert_eq!(
+        cold.strip_prefix(r#"{"id":"f1","#).unwrap(),
+        warm.strip_prefix(r#"{"id":"f2","#).unwrap()
+    );
+
+    let stats = c.roundtrip(r#"{"id":"s","type":"stats"}"#);
+    for needle in [
+        r#""queue_depth":"#,
+        r#""running":"#,
+        r#""enqueued":2"#,
+        r#""completed":2"#,
+        r#""results":{"hits":1,"misses":1"#,
+        r#""recent_jobs":"#,
+        r#""id":"f1","wall_ms":"#,
+        r#""id":"f2","wall_ms":"#,
+    ] {
+        assert!(stats.contains(needle), "missing {needle} in {stats}");
+    }
+    shutdown(&endpoint, handle);
+}
