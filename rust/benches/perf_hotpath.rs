@@ -14,8 +14,15 @@
 //! N parallel chains, CPU vs PJRT scoring, and a full `run_hlps` flow
 //! (the L3 hot path the coordinator actually runs).
 //!
-//! `--sa-only` runs just the SA comparison; `--smoke` shrinks iteration
-//! counts for CI; `--out FILE` writes the SA stats as JSON.
+//! Also times the incremental re-flow engine (`--reflow`): the HLPS
+//! flow re-run after a one-leaf timing edit, memoized through a shared
+//! [`StageMemo`](rsir::coordinator::memo::StageMemo) vs from-scratch
+//! (byte-identity asserted first, ≥ 5x speedup gate — the
+//! `BENCH_reflow.json` CI artifact).
+//!
+//! `--sa-only` runs just the SA comparison; `--reflow` runs just the
+//! re-flow comparison; `--smoke` shrinks iteration counts for CI;
+//! `--out FILE` writes the section's stats as JSON.
 
 use rsir::coordinator::flow::{run_hlps, FlowConfig};
 use rsir::device::builtin;
@@ -148,6 +155,110 @@ fn sa_delta_section(smoke: bool, out: Option<&str>) {
     );
 }
 
+/// The incremental re-flow comparison (`--reflow`): prime a
+/// [`StageMemo`] with one pristine flow, then re-flow after fresh
+/// one-leaf timing edits — memoized vs from-scratch. Byte-identity is
+/// asserted (via [`oracle::flow_fingerprint`]) before anything is timed,
+/// and the wall-clock gate is ≥ 5x.
+///
+/// Every timed invocation applies a *new* monotone edit, so the
+/// whole-request tier can never answer — the memoized lane wins only
+/// through per-stage reuse (placements, floorplan, flatten fragments,
+/// characterization, delta STA), the honest incremental path.
+fn reflow_section(smoke: bool, out: Option<&str>) {
+    use rsir::coordinator::flow::{run_hlps_warm, FlowWarm};
+    use rsir::coordinator::memo::StageMemo;
+    use rsir::designs::cnn::{self, CnnConfig};
+    use rsir::ir::core::Design;
+    use rsir::testing::oracle;
+    use std::sync::Arc;
+
+    let dev = builtin::by_name("u250").unwrap();
+    let cfg = FlowConfig {
+        sa_refine: false,
+        ..Default::default()
+    };
+    let (rows, cols) = if smoke { (4usize, 4usize) } else { (6, 6) };
+    let runs = if smoke { 3 } else { 5 };
+    let pristine = cnn::generate(&CnnConfig { rows, cols }).unwrap().design;
+    let leaf = pristine
+        .modules
+        .values()
+        .find(|m| !m.is_grouped())
+        .map(|m| m.name.clone())
+        .unwrap();
+    println!("== incremental re-flow: one-leaf edit, memoized vs from-scratch (cnn {rows}x{cols}) ==");
+
+    let edited = |delta: f64| -> Design {
+        let mut d = pristine.clone();
+        let m = d.module_mut(&leaf).unwrap();
+        let mut t = JsonObj::new();
+        t.insert("internal_ns", Json::num(2.0 + delta));
+        m.metadata.insert("timing", Json::Obj(t));
+        d
+    };
+    let fp = |d: &Design, stage: Option<Arc<StageMemo>>| -> u64 {
+        let mut d = d.clone();
+        let mut warm = FlowWarm {
+            stage,
+            ..Default::default()
+        };
+        let rep = run_hlps_warm(&mut d, &dev, &cfg, &mut warm).unwrap();
+        oracle::flow_fingerprint(&d, &rep)
+    };
+
+    // Prime the memo, then require bit-identity on three distinct edits
+    // before timing anything: a fast wrong answer is worthless.
+    let memo = Arc::new(StageMemo::new(64));
+    fp(&pristine, Some(memo.clone()));
+    for i in 0..3 {
+        let d = edited(0.1 + 0.01 * i as f64);
+        assert_eq!(
+            fp(&d, Some(memo.clone())),
+            fp(&d, None),
+            "memoized re-flow diverged from from-scratch on edit {i}"
+        );
+    }
+
+    let mut n = 0f64;
+    let cold_stats = bench(&format!("reflow from-scratch cnn {rows}x{cols}"), 1, runs, || {
+        n += 0.01;
+        fp(&edited(1.0 + n), None)
+    });
+    let mut k = 0f64;
+    let warm_memo = memo.clone();
+    let warm_stats = bench(&format!("reflow memoized     cnn {rows}x{cols}"), 1, runs, || {
+        k += 0.01;
+        fp(&edited(2.0 + k), Some(warm_memo.clone()))
+    });
+    let speedup = cold_stats.median.as_secs_f64() / warm_stats.median.as_secs_f64().max(1e-12);
+    println!("speedup (from-scratch median / memoized median): {speedup:.1}x");
+
+    if let Some(path) = out {
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::str("reflow"));
+        o.insert("design", Json::str(format!("cnn:{rows}x{cols}")));
+        o.insert("modules", Json::num(pristine.modules.len() as f64));
+        o.insert("runs", Json::num(runs as f64));
+        o.insert("smoke", Json::Bool(smoke));
+        o.insert(
+            "from_scratch_median_ns",
+            Json::num(cold_stats.median.as_nanos() as f64),
+        );
+        o.insert(
+            "memoized_median_ns",
+            Json::num(warm_stats.median.as_nanos() as f64),
+        );
+        o.insert("speedup", Json::num(speedup));
+        std::fs::write(path, Json::Obj(o).pretty()).unwrap();
+        println!("wrote {path}");
+    }
+    assert!(
+        speedup >= 5.0,
+        "memoized re-flow must beat from-scratch >=5x (got {speedup:.2}x)"
+    );
+}
+
 fn assert_results_identical(a: &SaResult, b: &SaResult, what: &str) {
     assert_eq!(a.best, b.best, "{what}: best diverged");
     assert_eq!(
@@ -163,11 +274,17 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let sa_only = args.iter().any(|a| a == "--sa-only");
+    let reflow_only = args.iter().any(|a| a == "--reflow");
     let out = args
         .iter()
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    if reflow_only {
+        reflow_section(smoke, out.as_deref());
+        println!("\nperf_hotpath bench complete (re-flow section only)");
+        return;
+    }
     sa_delta_section(smoke, out.as_deref());
     if sa_only {
         println!("\nperf_hotpath bench complete (SA section only)");

@@ -56,12 +56,33 @@ pub fn explore_warm(
     pool: &Pool,
     analyzed: Option<Arc<AnalyzedDesign>>,
 ) -> Result<Vec<ExploreRow>> {
+    explore_warm_staged(design, dev, limits, base_cfg, pool, analyzed, None)
+}
+
+/// [`explore_warm`] with an optional shared
+/// [`StageMemo`](crate::coordinator::memo::StageMemo): every sweep
+/// point runs through the same per-stage caches, so work independent of
+/// `util_limit` (elaboration fragments, the baseline placement, module
+/// characterization) is done once for the whole sweep instead of once
+/// per point. Per the memo's determinism contract this never changes a
+/// row — the memo is safe to share across the pool's worker threads.
+#[allow(clippy::too_many_arguments)]
+pub fn explore_warm_staged(
+    design: &Design,
+    dev: &VirtualDevice,
+    limits: &[f64],
+    base_cfg: &FlowConfig,
+    pool: &Pool,
+    analyzed: Option<Arc<AnalyzedDesign>>,
+    stage: Option<Arc<crate::coordinator::memo::StageMemo>>,
+) -> Result<Vec<ExploreRow>> {
     let rows = pool.par_map(limits.to_vec(), |limit| {
         let mut d = design.clone();
         let mut cfg = base_cfg.clone();
         cfg.util_limit = limit;
         let mut warm = FlowWarm {
             analyzed: analyzed.clone(),
+            stage: stage.clone(),
             ..Default::default()
         };
         // The sweep wants the exact limit, not the auto-relaxed one; an
@@ -168,6 +189,39 @@ mod tests {
             assert_eq!(a.fmax_mhz, b.fmax_mhz);
             assert_eq!(a.routable, b.routable);
         }
+    }
+
+    #[test]
+    fn staged_sweep_matches_cold() {
+        let dev = builtin::by_name("u250").unwrap();
+        let g = cnn::generate(&CnnConfig { rows: 4, cols: 3 }).unwrap();
+        let cfg = FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        };
+        let pool = Pool::new(2);
+        let limits = [0.55, 0.85];
+        let cold = explore(&g.design, &dev, &limits, &cfg, &pool).unwrap();
+        let memo = Arc::new(crate::coordinator::memo::StageMemo::new(32));
+        let staged = explore_warm_staged(
+            &g.design,
+            &dev,
+            &limits,
+            &cfg,
+            &pool,
+            None,
+            Some(memo.clone()),
+        )
+        .unwrap();
+        for (a, b) in cold.iter().zip(&staged) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+        // The sweep points share elaboration work through the memo: both
+        // points elaborate the same analyzed design and the same final
+        // netlist comes up again within each flow.
+        let stats = memo.stats();
+        let netlists = stats.iter().find(|(k, _)| *k == "flat_netlists").unwrap().1;
+        assert!(netlists.hits >= 1, "{stats:?}");
     }
 
     #[test]

@@ -199,6 +199,12 @@ pub struct FlowWarm<'a> {
     pub analyzed: Option<Arc<AnalyzedDesign>>,
     /// Memoized SA cost model (skips `CostModel::build`).
     pub cost_model: Option<Arc<CostModel>>,
+    /// Per-stage incremental caches (characterization, elaboration,
+    /// placement, floorplan, delta STA). `None` runs the classic
+    /// non-memoized path; `Some` routes every stage through
+    /// [`StageMemo`](crate::coordinator::memo::StageMemo) — byte-identical
+    /// either way, per the determinism contract.
+    pub stage: Option<Arc<crate::coordinator::memo::StageMemo>>,
     /// Cooperative cancellation hook, polled between stages; returning
     /// `true` aborts the flow with a [`FlowCanceled`] error.
     pub cancel: Option<&'a (dyn Fn() -> bool + Sync)>,
@@ -229,12 +235,24 @@ impl std::error::Error for FlowCanceled {}
 /// single producer of [`AnalyzedDesign`]s — both the cold flow path and
 /// the daemon's cache-miss path go through here.
 pub fn analyze_design(design: &Design) -> Result<AnalyzedDesign> {
+    analyze_design_with(design, None)
+}
+
+/// [`analyze_design`] with an optional shared characterization memo
+/// threaded into the pass context (the incremental re-flow path).
+/// Annotated values are identical with or without the memo, so cache
+/// state never changes an output byte.
+pub fn analyze_design_with(
+    design: &Design,
+    chars: Option<Arc<crate::eda::synth::CharMemo>>,
+) -> Result<AnalyzedDesign> {
     let mut d = design.clone();
     let mut ctx = PassContext::new();
     // The flow has never DRC-checked between stage-1 passes (mid-rebuild
     // states may be transiently inconsistent); the optimized result is
     // validated end-to-end by the e2e tests instead.
     ctx.drc_after_each = false;
+    ctx.chars = chars;
     let report = analyze_structure(&mut d, &mut ctx)?;
     Ok(AnalyzedDesign {
         design: d,
@@ -252,7 +270,22 @@ pub fn implement_baseline(
     dev: &VirtualDevice,
     dm: &DelayModel,
 ) -> Result<ImplReport> {
-    let mut nl = vivado::elaborate(analyzed);
+    implement_baseline_staged(analyzed, dev, dm, None)
+}
+
+/// [`implement_baseline`] routed through an optional [`StageMemo`]
+/// (elaboration fragments, placement cache, delta STA) — byte-identical
+/// to the plain path by the memo's determinism contract.
+fn implement_baseline_staged(
+    analyzed: &Design,
+    dev: &VirtualDevice,
+    dm: &DelayModel,
+    stage: Option<&crate::coordinator::memo::StageMemo>,
+) -> Result<ImplReport> {
+    let mut nl = match stage {
+        Some(m) => m.elaborate(analyzed),
+        None => vivado::elaborate(analyzed),
+    };
     for node in &mut nl.nodes {
         node.fixed_slot = None; // vendor flow ignores floorplan hints
     }
@@ -261,13 +294,11 @@ pub fn implement_baseline(
         capacity_limit: 0.72,
         ..Default::default()
     };
-    vivado::implement_netlist_with(
-        &nl,
-        dev,
-        &placer,
-        dm,
-        crate::timing::sta::StaOptions { unguided: true },
-    )
+    let opts = crate::timing::sta::StaOptions { unguided: true };
+    match stage {
+        Some(m) => m.implement(&nl, dev, &placer, dm, opts, "baseline"),
+        None => vivado::implement_netlist_with(&nl, dev, &placer, dm, opts),
+    }
 }
 
 /// Run the baseline (vendor-only) flow: no HLPS, wirelength placer.
@@ -316,13 +347,19 @@ pub fn run_hlps_warm(
     let t = Instant::now();
     let analyzed = match warm.analyzed.clone() {
         Some(a) => a,
-        None => Arc::new(analyze_design(design)?),
+        None => Arc::new(analyze_design_with(
+            design,
+            warm.stage.as_ref().map(|m| m.chars()),
+        )?),
     };
     warm.harvest_analyzed = Some(analyzed.clone());
     *design = analyzed.design.clone();
     let mut ctx = analyzed.ctx.clone();
     let analysis = analyzed.report.clone();
-    let nl = vivado::elaborate(design);
+    let nl = match warm.stage.as_deref() {
+        Some(m) => m.elaborate(design),
+        None => vivado::elaborate(design),
+    };
     let mut problem = Problem::from_netlist(&nl, dev, cfg.die_weight);
     merge_nonpipelinable(&mut problem, &nl);
     let partitions = problem.units.len();
@@ -333,72 +370,25 @@ pub fn run_hlps_warm(
     // historically re-analyzed from scratch; sharing the snapshot is a
     // pure wall-time win — analysis is deterministic).
     let t = Instant::now();
-    let baseline = implement_baseline(&analyzed.design, dev, &cfg.delay);
+    let baseline =
+        implement_baseline_staged(&analyzed.design, dev, &cfg.delay, warm.stage.as_deref());
     let stat_baseline = t.elapsed();
     checkpoint("baseline")?;
 
     // ---- Stage 3: coarse-grained floorplanning ---------------------------
     let t = Instant::now();
-    let mut ilp_cfg = cfg.ilp.clone();
-    ilp_cfg.util_limit = cfg.util_limit;
-    let ilp = autobridge::solve(&problem, dev, &ilp_cfg).context("floorplan ILP")?;
-    let mut unit_slots = ilp.unit_slots.clone();
-    let mut evaluator_used: &'static str = "ilp-only";
-    if cfg.sa_refine {
-        // Built once and cloned where needed (historically built twice,
-        // identically — `CostModel::build` is deterministic).
-        let model = match warm.cost_model.clone() {
-            Some(m) => m,
-            None => Arc::new(CostModel::build(&problem, dev, cfg.util_limit, 1e-4)),
-        };
-        warm.harvest_cost = Some(model.clone());
-        let mut cpu_holder;
-        let mut pjrt_holder;
-        let evaluator: &mut dyn BatchEvaluator = if cfg.use_pjrt {
-            match crate::runtime::Manifest::load(&crate::runtime::artifacts_dir())
-                .and_then(|man| crate::runtime::PjrtEvaluator::new((*model).clone(), &man))
-            {
-                Ok(ev) => {
-                    pjrt_holder = ev;
-                    &mut pjrt_holder
-                }
-                Err(e) => {
-                    ctx.log(format!("pjrt unavailable ({e}); using cpu oracle"));
-                    cpu_holder = CpuEvaluator {
-                        model: (*model).clone(),
-                    };
-                    &mut cpu_holder
-                }
-            }
-        } else {
-            cpu_holder = CpuEvaluator {
-                model: (*model).clone(),
-            };
-            &mut cpu_holder
-        };
-        evaluator_used = evaluator.name();
-        // `workers` only applies to the incremental lane; batch-only
-        // evaluators (PJRT) anneal through the single-launch lane.
-        let sa_lane = if evaluator.cost_model().is_some() {
-            format!("{} sa worker(s)", cfg.sa.workers.max(1))
-        } else {
-            "batched lane".to_string()
-        };
-        let sa_res = sa::anneal(&problem, dev, evaluator, Some(&unit_slots), &cfg.sa);
-        // Accept SA only if it beats the ILP solution on the same metric
-        // and stays feasible per-slot.
-        let mut chk = CpuEvaluator {
-            model: (*model).clone(),
-        };
-        let ilp_cost = chk.evaluate(&[unit_slots.clone()])[0];
-        if sa_res.best_cost < ilp_cost && feasible(&problem, &sa_res.best, dev, cfg.util_limit) {
-            ctx.log(format!(
-                "sa refine: {} -> {} ({} candidates via {}, {})",
-                ilp_cost, sa_res.best_cost, sa_res.evaluated, evaluator_used, sa_lane
-            ));
-            unit_slots = sa_res.best;
+    let fp = match warm.stage.clone() {
+        Some(memo) => {
+            let key = crate::coordinator::memo::floorplan_key(&problem, dev, cfg);
+            memo.floorplan(key, || floorplan_stage(&problem, dev, cfg, warm))?
         }
+        None => floorplan_stage(&problem, dev, cfg, warm)?,
+    };
+    for line in &fp.log {
+        ctx.log(line.clone());
     }
+    let unit_slots = fp.unit_slots;
+    let evaluator_used = fp.evaluator_used;
     let floorplan_wirelength = problem.wirelength(&unit_slots, dev);
 
     // Write floorplan metadata onto the flat top's instances.
@@ -429,13 +419,21 @@ pub fn run_hlps_warm(
 
     // Final implementation with fixed placement.
     let t = Instant::now();
-    let final_nl = vivado::elaborate(design);
-    let optimized = vivado::implement_netlist(
-        &final_nl,
-        dev,
-        &PlacerConfig::default(),
-        &cfg.delay,
-    )?;
+    let final_nl = match warm.stage.as_deref() {
+        Some(m) => m.elaborate(design),
+        None => vivado::elaborate(design),
+    };
+    let optimized = match warm.stage.as_deref() {
+        Some(m) => m.implement(
+            &final_nl,
+            dev,
+            &PlacerConfig::default(),
+            &cfg.delay,
+            crate::timing::sta::StaOptions::default(),
+            "optimized",
+        )?,
+        None => vivado::implement_netlist(&final_nl, dev, &PlacerConfig::default(), &cfg.delay)?,
+    };
     let stat_implement = t.elapsed();
 
     let mut log = std::mem::take(&mut ctx.log);
@@ -460,6 +458,85 @@ pub fn run_hlps_warm(
             pass_times: analysis.timings(),
         },
         analysis,
+    })
+}
+
+/// The stage-3 floorplanning block (ILP solve + optional SA refinement),
+/// extracted so the memoized and plain paths share one body. Log lines
+/// are collected into the returned entry — the caller replays them into
+/// the pass context — which is what makes a floorplan-cache hit
+/// byte-identical to a recompute, log included.
+fn floorplan_stage(
+    problem: &Problem,
+    dev: &VirtualDevice,
+    cfg: &FlowConfig,
+    warm: &mut FlowWarm,
+) -> Result<crate::coordinator::memo::FloorplanEntry> {
+    let mut log: Vec<String> = Vec::new();
+    let mut ilp_cfg = cfg.ilp.clone();
+    ilp_cfg.util_limit = cfg.util_limit;
+    let ilp = autobridge::solve(problem, dev, &ilp_cfg).context("floorplan ILP")?;
+    let mut unit_slots = ilp.unit_slots.clone();
+    let mut evaluator_used: &'static str = "ilp-only";
+    if cfg.sa_refine {
+        // Built once and cloned where needed (historically built twice,
+        // identically — `CostModel::build` is deterministic).
+        let model = match warm.cost_model.clone() {
+            Some(m) => m,
+            None => Arc::new(CostModel::build(problem, dev, cfg.util_limit, 1e-4)),
+        };
+        warm.harvest_cost = Some(model.clone());
+        let mut cpu_holder;
+        let mut pjrt_holder;
+        let evaluator: &mut dyn BatchEvaluator = if cfg.use_pjrt {
+            match crate::runtime::Manifest::load(&crate::runtime::artifacts_dir())
+                .and_then(|man| crate::runtime::PjrtEvaluator::new((*model).clone(), &man))
+            {
+                Ok(ev) => {
+                    pjrt_holder = ev;
+                    &mut pjrt_holder
+                }
+                Err(e) => {
+                    log.push(format!("pjrt unavailable ({e}); using cpu oracle"));
+                    cpu_holder = CpuEvaluator {
+                        model: (*model).clone(),
+                    };
+                    &mut cpu_holder
+                }
+            }
+        } else {
+            cpu_holder = CpuEvaluator {
+                model: (*model).clone(),
+            };
+            &mut cpu_holder
+        };
+        evaluator_used = evaluator.name();
+        // `workers` only applies to the incremental lane; batch-only
+        // evaluators (PJRT) anneal through the single-launch lane.
+        let sa_lane = if evaluator.cost_model().is_some() {
+            format!("{} sa worker(s)", cfg.sa.workers.max(1))
+        } else {
+            "batched lane".to_string()
+        };
+        let sa_res = sa::anneal(problem, dev, evaluator, Some(&unit_slots), &cfg.sa);
+        // Accept SA only if it beats the ILP solution on the same metric
+        // and stays feasible per-slot.
+        let mut chk = CpuEvaluator {
+            model: (*model).clone(),
+        };
+        let ilp_cost = chk.evaluate(&[unit_slots.clone()])[0];
+        if sa_res.best_cost < ilp_cost && feasible(problem, &sa_res.best, dev, cfg.util_limit) {
+            log.push(format!(
+                "sa refine: {} -> {} ({} candidates via {}, {})",
+                ilp_cost, sa_res.best_cost, sa_res.evaluated, evaluator_used, sa_lane
+            ));
+            unit_slots = sa_res.best;
+        }
+    }
+    Ok(crate::coordinator::memo::FloorplanEntry {
+        unit_slots,
+        evaluator_used,
+        log,
     })
 }
 
@@ -757,6 +834,55 @@ mod tests {
         assert_eq!(cold.optimized.fmax_mhz(), hot.optimized.fmax_mhz());
         assert_eq!(cold.log, hot.log);
         assert_eq!(cold.evaluator_used, hot.evaluator_used);
+    }
+
+    /// The stage memo must change wall time only: a cold run and two
+    /// consecutive runs through one shared memo are byte-identical.
+    #[test]
+    fn stage_memo_changes_nothing() {
+        let dev = builtin::by_name("u280").unwrap();
+        let cfg = FlowConfig::default();
+
+        let mut cold_d = heavy_chain(&dev, 6, 0.40);
+        let cold = run_hlps(&mut cold_d, &dev, &cfg).unwrap();
+
+        let memo = Arc::new(crate::coordinator::memo::StageMemo::new(32));
+        for pass in 0..2 {
+            let mut d = heavy_chain(&dev, 6, 0.40);
+            let mut warm = FlowWarm {
+                stage: Some(memo.clone()),
+                ..Default::default()
+            };
+            let hot = run_hlps_warm(&mut d, &dev, &cfg, &mut warm).unwrap();
+            assert_eq!(
+                crate::ir::schema::design_to_json(&cold_d).dump(),
+                crate::ir::schema::design_to_json(&d).dump(),
+                "pass {pass}: memoized run produced different IR"
+            );
+            assert_eq!(cold.log, hot.log, "pass {pass}");
+            assert_eq!(cold.partitions, hot.partitions);
+            assert_eq!(cold.relay_stations, hot.relay_stations);
+            assert_eq!(cold.floorplan_wirelength, hot.floorplan_wirelength);
+            assert_eq!(cold.evaluator_used, hot.evaluator_used);
+            assert_eq!(
+                format!("{:?}", cold.optimized),
+                format!("{:?}", hot.optimized),
+                "pass {pass}"
+            );
+            assert_eq!(
+                format!("{:?}", cold.baseline),
+                format!("{:?}", hot.baseline),
+                "pass {pass}"
+            );
+        }
+        // The second run must have hit the big caches; the delta-STA
+        // lane must have taken over after the first full computes.
+        let stats = memo.stats();
+        let get = |k: &str| stats.iter().find(|(n, _)| *n == k).unwrap().1;
+        assert!(get("flat_netlists").hits >= 1, "{stats:?}");
+        assert!(get("floorplans").hits >= 1, "{stats:?}");
+        assert!(get("placements").hits >= 1, "{stats:?}");
+        assert!(get("sta_delta").hits >= 1, "{stats:?}");
     }
 
     /// A firing cancel hook aborts with a downcastable [`FlowCanceled`].

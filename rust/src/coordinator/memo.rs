@@ -1,0 +1,469 @@
+//! Digest-keyed stage memoization: the incremental re-flow engine.
+//!
+//! One [`StageMemo`] holds every per-stage cache the flow can reuse when
+//! a design is re-run after a small edit:
+//!
+//! * **characterization** ([`CharMemo`]) — per-module resource/timing
+//!   estimation, keyed by the module's own JSON digest;
+//! * **elaboration** ([`FlattenMemo`]) — per-module flat fragments and
+//!   whole netlists, keyed by IR subtree digests (dirty-slot
+//!   re-elaboration: only modules on the edited path re-flatten);
+//! * **placement** — keyed by exactly the placer's inputs (node
+//!   resources + pins, edge topology, device, config — *not*
+//!   `internal_ns`, which the placer never reads, so a pure timing edit
+//!   reuses the placement verbatim);
+//! * **floorplanning** — the whole stage-3 ILP + SA block, keyed by the
+//!   partitioning problem and every floorplan knob;
+//! * **STA terms** ([`StaTerms`]) — the delta-STA lane: prior per-slot /
+//!   per-edge terms are patched instead of recomputed when the edit's
+//!   cone allows it.
+//!
+//! The contract everywhere is the daemon's determinism invariant: memo
+//! state changes wall time only, never a single output byte. Placement
+//! and floorplan entries are exact-key lookups of deterministic
+//! functions; the delta-STA lane self-validates (it falls back to a full
+//! recompute whenever its fingerprints disagree), so even a coarse STA
+//! key can never change a result. All caches are interior-mutable
+//! behind poison-recovering locks: a panicking job cannot wedge a
+//! shared memo (same policy as the daemon's request caches).
+//!
+//! Caveat, documented rather than keyed-around: a cached floorplan entry
+//! replays the stage-3 log lines recorded when it was computed. With
+//! `use_pjrt` those lines mention runtime-artifact availability, so the
+//! cache assumes a stable artifact environment within one process — true
+//! for the daemon, which is the only long-lived holder.
+
+use crate::device::model::VirtualDevice;
+use crate::eda::place::PlacerConfig;
+use crate::eda::synth::CharMemo;
+use crate::eda::vivado::{self, ImplReport};
+use crate::floorplan::problem::Problem;
+use crate::ir::digest::Fnv;
+use crate::timing::delay::DelayModel;
+use crate::timing::netlist::{FlatNetlist, FlattenMemo};
+use crate::timing::sta::{analyze_delta, Placement, StaOptions, StaTerms, TimingReport};
+use crate::util::lru::{CacheStats, Lru};
+use anyhow::{anyhow, Result};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// The memoized result of the whole stage-3 floorplanning block (ILP
+/// solve + optional SA refinement), including the log lines the block
+/// emitted so a cache hit replays them byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct FloorplanEntry {
+    /// Slot index per partitioning unit.
+    pub unit_slots: Vec<usize>,
+    /// `BatchEvaluator::name()` of the evaluator that scored SA (or
+    /// `"ilp-only"` when refinement was off) — `&'static str` because
+    /// every evaluator's name is.
+    pub evaluator_used: &'static str,
+    /// Log lines the block pushed, in order.
+    pub log: Vec<String>,
+}
+
+/// Shared per-stage caches for incremental re-flow. Cheap to construct;
+/// wrap in an [`Arc`] to share across flows / daemon jobs.
+pub struct StageMemo {
+    chars: Arc<CharMemo>,
+    flatten: Mutex<FlattenMemo>,
+    placements: Mutex<Lru<u64, Placement>>,
+    floorplans: Mutex<Lru<u64, FloorplanEntry>>,
+    sta: Mutex<Lru<u64, StaTerms>>,
+    /// STA runs that reused patched terms (the delta lane).
+    sta_delta: AtomicU64,
+    /// STA runs that recomputed from scratch (cold or fallback).
+    sta_full: AtomicU64,
+}
+
+impl fmt::Debug for StageMemo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("StageMemo").field("stats", &self.stats()).finish()
+    }
+}
+
+impl StageMemo {
+    pub fn new(cap: usize) -> Self {
+        StageMemo {
+            chars: Arc::new(CharMemo::new(cap.max(1) * 64)),
+            flatten: Mutex::new(FlattenMemo::new(cap.max(1) * 16)),
+            placements: Mutex::new(Lru::new(cap)),
+            floorplans: Mutex::new(Lru::new(cap)),
+            sta: Mutex::new(Lru::new(cap)),
+            sta_delta: AtomicU64::new(0),
+            sta_full: AtomicU64::new(0),
+        }
+    }
+
+    /// A memo whose caches never retain anything (`cap == 0`): every
+    /// lookup misses, so the incremental code paths are exercised with
+    /// cold-run results — the one-shot lane runs with this.
+    pub fn disabled() -> Self {
+        let mut m = StageMemo::new(0);
+        m.chars = Arc::new(CharMemo::new(0));
+        m.flatten = Mutex::new(FlattenMemo::new(0));
+        m
+    }
+
+    /// The shared characterization memo, for threading into a
+    /// [`PassContext`](crate::passes::manager::PassContext).
+    pub fn chars(&self) -> Arc<CharMemo> {
+        self.chars.clone()
+    }
+
+    /// Elaborate via the fragment cache: byte-identical to
+    /// [`vivado::elaborate`], but only modules whose subtree digest is
+    /// new get re-flattened.
+    pub fn elaborate(&self, design: &crate::ir::core::Design) -> FlatNetlist {
+        let chars = self.chars.clone();
+        crate::timing::netlist::flatten_incremental(design, &*chars, &mut lock(&self.flatten))
+    }
+
+    /// Place via the placement cache. Returns `None` exactly when the
+    /// underlying placer does.
+    pub fn place(
+        &self,
+        nl: &FlatNetlist,
+        dev: &VirtualDevice,
+        cfg: &PlacerConfig,
+    ) -> Option<Placement> {
+        let key = place_key(nl, dev, cfg);
+        if let Some(p) = lock(&self.placements).get(&key) {
+            return Some(p);
+        }
+        let p = crate::eda::place::place(nl, dev, cfg)?;
+        lock(&self.placements).put(key, p.clone());
+        Some(p)
+    }
+
+    /// STA via the delta lane: the previous run's terms for the same
+    /// `role` are patched when their fingerprints prove it safe, else a
+    /// full recompute runs. Either way the report is bit-identical to
+    /// [`crate::timing::sta::analyze_with`].
+    pub fn analyze(
+        &self,
+        nl: &FlatNetlist,
+        placement: &Placement,
+        dev: &VirtualDevice,
+        dm: &DelayModel,
+        opts: StaOptions,
+        role: &'static str,
+    ) -> TimingReport {
+        let key = sta_key(nl, dev, opts, role);
+        let prev = lock(&self.sta).get(&key);
+        let (report, terms, used_delta) =
+            analyze_delta(nl, placement, dev, dm, opts, prev.as_ref());
+        if used_delta {
+            self.sta_delta.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.sta_full.fetch_add(1, Ordering::Relaxed);
+        }
+        lock(&self.sta).put(key, terms);
+        report
+    }
+
+    /// The memoized backend: place (cached) + STA (delta lane) +
+    /// [`vivado::assemble_report`]. Identical bytes to
+    /// [`vivado::implement_netlist_with`], including the error message.
+    pub fn implement(
+        &self,
+        nl: &FlatNetlist,
+        dev: &VirtualDevice,
+        placer: &PlacerConfig,
+        dm: &DelayModel,
+        opts: StaOptions,
+        role: &'static str,
+    ) -> Result<ImplReport> {
+        let placement = self
+            .place(nl, dev, placer)
+            .ok_or_else(|| anyhow!("placement failed: design does not fit"))?;
+        let timing = self.analyze(nl, &placement, dev, dm, opts, role);
+        Ok(vivado::assemble_report(nl, dev, placement, timing))
+    }
+
+    /// Memoize one stage-3 floorplanning block under `key` (from
+    /// [`floorplan_key`]). On a miss, `compute` runs and its result is
+    /// retained; errors are returned uncached.
+    pub fn floorplan<F>(&self, key: u64, compute: F) -> Result<FloorplanEntry>
+    where
+        F: FnOnce() -> Result<FloorplanEntry>,
+    {
+        if let Some(hit) = lock(&self.floorplans).get(&key) {
+            return Ok(hit);
+        }
+        let entry = compute()?;
+        lock(&self.floorplans).put(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Per-stage counter snapshots, in a stable render order. The
+    /// `sta_delta` entry abuses the hit/miss pair as delta-run /
+    /// full-run counters (its `len`/`cap` are the terms cache's).
+    pub fn stats(&self) -> Vec<(&'static str, CacheStats)> {
+        let (fragments, netlists) = lock(&self.flatten).stats();
+        let terms = lock(&self.sta).stats();
+        vec![
+            ("module_chars", self.chars.stats()),
+            ("flat_fragments", fragments),
+            ("flat_netlists", netlists),
+            ("placements", lock(&self.placements).stats()),
+            ("floorplans", lock(&self.floorplans).stats()),
+            (
+                "sta_delta",
+                CacheStats {
+                    hits: self.sta_delta.load(Ordering::Relaxed),
+                    misses: self.sta_full.load(Ordering::Relaxed),
+                    len: terms.len,
+                    cap: terms.cap,
+                },
+            ),
+        ]
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Fingerprint of exactly the inputs [`crate::eda::place::place`] reads:
+/// per-node resources and fixed-slot pin, edge topology and widths, the
+/// device, and every [`PlacerConfig`] knob. Deliberately excludes
+/// `internal_ns`, `is_pipeline`, node paths, and edge pipelinability —
+/// the placer never looks at them, so a pure timing edit keys to the
+/// same placement.
+fn place_key(nl: &FlatNetlist, dev: &VirtualDevice, cfg: &PlacerConfig) -> u64 {
+    let mut f = Fnv::new();
+    f.write_u64(dev.fingerprint());
+    f.write_u64(cfg.seed)
+        .write_usize(cfg.iterations)
+        .write_f64(cfg.t0_frac)
+        .write_f64(cfg.capacity_limit)
+        .write_f64(cfg.die_weight);
+    f.write_usize(nl.nodes.len());
+    for n in &nl.nodes {
+        f.write_f64(n.resources.lut)
+            .write_f64(n.resources.ff)
+            .write_f64(n.resources.bram)
+            .write_f64(n.resources.dsp)
+            .write_f64(n.resources.uram);
+        match &n.fixed_slot {
+            Some(pb) => {
+                f.write_bool(true);
+                f.write_str(pb);
+            }
+            None => {
+                f.write_bool(false);
+            }
+        }
+    }
+    f.write_usize(nl.edges.len());
+    for e in &nl.edges {
+        f.write_usize(e.src).write_usize(e.dst).write_u64(e.width);
+    }
+    f.finish()
+}
+
+/// Coarse key for the STA terms cache: role + device + options + node
+/// count. Coarseness is safe — [`StaTerms`] carries full fingerprints
+/// and `analyze_delta` falls back to a from-scratch compute on any
+/// mismatch — it only trades hit rate, never correctness.
+fn sta_key(nl: &FlatNetlist, dev: &VirtualDevice, opts: StaOptions, role: &'static str) -> u64 {
+    let mut f = Fnv::new();
+    f.write_str(role);
+    f.write_u64(dev.fingerprint());
+    f.write_bool(opts.unguided);
+    f.write_usize(nl.nodes.len());
+    f.finish()
+}
+
+/// Fingerprint of one stage-3 floorplanning instance: the partitioning
+/// problem (units, pins, edges), the device, and every knob the block
+/// reads (`util_limit`, ILP config, SA refinement + full SA config,
+/// evaluator selection).
+pub fn floorplan_key(problem: &Problem, dev: &VirtualDevice, cfg: &super::flow::FlowConfig) -> u64 {
+    let mut f = Fnv::new();
+    f.write_u64(dev.fingerprint());
+    f.write_f64(problem.die_weight);
+    f.write_usize(problem.units.len());
+    for u in &problem.units {
+        f.write_f64(u.resources.lut)
+            .write_f64(u.resources.ff)
+            .write_f64(u.resources.bram)
+            .write_f64(u.resources.dsp)
+            .write_f64(u.resources.uram);
+        match u.fixed_slot {
+            Some(s) => {
+                f.write_bool(true);
+                f.write_usize(s);
+            }
+            None => {
+                f.write_bool(false);
+            }
+        }
+        f.write_usize(u.nodes.len());
+        for &n in &u.nodes {
+            f.write_usize(n);
+        }
+    }
+    f.write_usize(problem.edges.len());
+    for e in &problem.edges {
+        f.write_usize(e.a).write_usize(e.b).write_u64(e.width);
+    }
+    f.write_f64(cfg.util_limit);
+    f.write_f64(cfg.ilp.util_limit)
+        .write_usize(cfg.ilp.max_nodes)
+        .write_usize(cfg.ilp.max_units)
+        .write_f64(cfg.ilp.sll_budget_frac);
+    f.write_bool(cfg.sa_refine);
+    f.write_u64(cfg.sa.seed)
+        .write_usize(cfg.sa.population)
+        .write_usize(cfg.sa.proposals)
+        .write_usize(cfg.sa.steps)
+        .write_f64(cfg.sa.t0)
+        .write_f64(cfg.sa.cooling)
+        .write_usize(cfg.sa.workers);
+    f.write_bool(cfg.use_pjrt);
+    f.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::builtin;
+    use crate::ir::core::Resources;
+    use crate::timing::netlist::{FlatEdge, FlatNode};
+
+    fn netlist(n: usize) -> FlatNetlist {
+        FlatNetlist {
+            nodes: (0..n)
+                .map(|i| FlatNode {
+                    path: format!("n{i}"),
+                    module: "M".into(),
+                    resources: Resources::new(1000.0, 1000.0, 0.0, 0.0, 0.0),
+                    internal_ns: 2.0,
+                    is_pipeline: false,
+                    fixed_slot: None,
+                })
+                .collect(),
+            edges: (0..n.saturating_sub(1))
+                .map(|i| FlatEdge {
+                    src: i,
+                    dst: i + 1,
+                    width: 64,
+                    pipelinable: true,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn placement_cache_ignores_internal_ns() {
+        let dev = builtin::by_name("u250").unwrap();
+        let memo = StageMemo::new(8);
+        let nl = netlist(6);
+        let p1 = memo.place(&nl, &dev, &PlacerConfig::default()).unwrap();
+        let mut edited = nl.clone();
+        for node in &mut edited.nodes {
+            node.internal_ns = 3.7;
+        }
+        let p2 = memo.place(&edited, &dev, &PlacerConfig::default()).unwrap();
+        assert_eq!(p1, p2);
+        let stats = memo.stats();
+        let placements = stats.iter().find(|(k, _)| *k == "placements").unwrap().1;
+        assert_eq!((placements.hits, placements.misses), (1, 1), "{placements:?}");
+    }
+
+    #[test]
+    fn placement_key_sees_resource_edits() {
+        let dev = builtin::by_name("u250").unwrap();
+        let nl = netlist(6);
+        let base = place_key(&nl, &dev, &PlacerConfig::default());
+        let mut edited = nl.clone();
+        edited.nodes[2].resources.lut += 1.0;
+        assert_ne!(base, place_key(&edited, &dev, &PlacerConfig::default()));
+        let mut pinned = nl.clone();
+        pinned.nodes[0].fixed_slot = Some("SLOT_X0Y0".into());
+        assert_ne!(base, place_key(&pinned, &dev, &PlacerConfig::default()));
+    }
+
+    #[test]
+    fn memoized_implement_matches_plain_backend() {
+        let dev = builtin::by_name("u250").unwrap();
+        let memo = StageMemo::new(8);
+        let nl = netlist(6);
+        let plain = vivado::implement_netlist(
+            &nl,
+            &dev,
+            &PlacerConfig::default(),
+            &DelayModel::default(),
+        )
+        .unwrap();
+        for _ in 0..2 {
+            let memoized = memo
+                .implement(
+                    &nl,
+                    &dev,
+                    &PlacerConfig::default(),
+                    &DelayModel::default(),
+                    StaOptions::default(),
+                    "test",
+                )
+                .unwrap();
+            assert_eq!(format!("{plain:?}"), format!("{memoized:?}"));
+        }
+        let stats = memo.stats();
+        let sta = stats.iter().find(|(k, _)| *k == "sta_delta").unwrap().1;
+        assert_eq!((sta.hits, sta.misses), (1, 1), "{sta:?}");
+    }
+
+    #[test]
+    fn floorplan_block_memoizes_by_key() {
+        let memo = StageMemo::new(8);
+        let entry = FloorplanEntry {
+            unit_slots: vec![0, 1, 2],
+            evaluator_used: "ilp-only",
+            log: vec!["hello".into()],
+        };
+        let mut computed = 0;
+        for _ in 0..3 {
+            let got = memo
+                .floorplan(42, || {
+                    computed += 1;
+                    Ok(entry.clone())
+                })
+                .unwrap();
+            assert_eq!(got.unit_slots, entry.unit_slots);
+            assert_eq!(got.log, entry.log);
+        }
+        assert_eq!(computed, 1);
+    }
+
+    #[test]
+    fn disabled_memo_still_produces_identical_results() {
+        let dev = builtin::by_name("u250").unwrap();
+        let memo = StageMemo::disabled();
+        let nl = netlist(5);
+        let plain = vivado::implement_netlist(
+            &nl,
+            &dev,
+            &PlacerConfig::default(),
+            &DelayModel::default(),
+        )
+        .unwrap();
+        let memoized = memo
+            .implement(
+                &nl,
+                &dev,
+                &PlacerConfig::default(),
+                &DelayModel::default(),
+                StaOptions::default(),
+                "test",
+            )
+            .unwrap();
+        assert_eq!(format!("{plain:?}"), format!("{memoized:?}"));
+        let stats = memo.stats();
+        let placements = stats.iter().find(|(k, _)| *k == "placements").unwrap().1;
+        assert_eq!(placements.hits, 0);
+    }
+}

@@ -11,6 +11,7 @@
 
 pub mod explore;
 pub mod flow;
+pub mod memo;
 pub mod parallel_synth;
 pub mod report;
 

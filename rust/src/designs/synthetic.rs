@@ -857,19 +857,15 @@ fn leaf_verilog(m: &Module) -> String {
 }
 
 /// FNV-1a 64-bit over a byte string: tiny, dependency-free, and
-/// platform-independent — the digest that pins seed-stability.
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in bytes {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x1_0000_0000_01b3);
-    }
-    h
-}
+/// platform-independent — the digest that pins seed-stability. The
+/// implementation moved to [`crate::ir::digest`] (the incremental
+/// re-flow engine keys on it); this re-export keeps the historical
+/// call sites.
+pub use crate::ir::digest::fnv1a64;
 
 /// Canonical digest of a design: FNV-1a over its compact IR JSON.
 pub fn digest(d: &Design) -> u64 {
-    fnv1a64(crate::ir::schema::design_to_json(d).dump().as_bytes())
+    crate::ir::digest::design_digest(d)
 }
 
 #[cfg(test)]

@@ -84,6 +84,31 @@ impl VirtualDevice {
             .fold(Resources::ZERO, |acc, s| acc.add(&s.capacity))
     }
 
+    /// FNV-1a fingerprint over every field that influences placement,
+    /// timing, or routability — the device component of the incremental
+    /// re-flow memo keys. Floats enter by bit pattern.
+    pub fn fingerprint(&self) -> u64 {
+        let mut f = crate::ir::digest::Fnv::new();
+        f.write_str(&self.name).write_str(&self.part);
+        f.write_usize(self.cols).write_usize(self.rows);
+        for s in &self.slots {
+            f.write_usize(s.x).write_usize(s.y).write_str(&s.pblock);
+            f.write_f64(s.capacity.lut)
+                .write_f64(s.capacity.ff)
+                .write_f64(s.capacity.bram)
+                .write_f64(s.capacity.dsp)
+                .write_f64(s.capacity.uram);
+            f.write_usize(s.die);
+        }
+        for &r in &self.die_rows {
+            f.write_usize(r);
+        }
+        f.write_u64(self.sll_per_column)
+            .write_u64(self.hwire_capacity)
+            .write_u64(self.vwire_capacity);
+        f.finish()
+    }
+
     /// Flattened f32 distance matrix (S×S) in row-major order, where
     /// dist = manhattan + `die_weight` × die_crossings. Fed to the
     /// PJRT-compiled floorplan-cost kernel.

@@ -9,8 +9,11 @@
 
 use crate::ir::core::*;
 use crate::timing::netlist::ModuleCharacteristics;
+use crate::util::lru::{CacheStats, Lru};
 use crate::verilog::ast::{VItem, VModule};
 use crate::verilog::parser::parse_file;
+use std::fmt;
+use std::sync::Mutex;
 
 /// Characteristics provider: metadata first, AST estimation fallback.
 pub struct SynthEstimator {
@@ -55,6 +58,64 @@ impl ModuleCharacteristics for SynthEstimator {
         // 1.6 ns base + ~0.09 ns per doubling of LUT count beyond 100.
         let depth = (lut / 100.0).max(1.0).log2();
         (1.6 + 0.09 * depth).min(3.4).max(0.8)
+    }
+}
+
+/// Digest-keyed memo over [`SynthEstimator`] characterization — the
+/// stage-1 tier of the incremental re-flow engine. Keyed by the FNV-1a
+/// digest of the module's own JSON (characterization never looks at
+/// children), so re-analyzing a design after a one-leaf edit recomputes
+/// exactly one entry. Interior-mutable: a shared memo serves concurrent
+/// flows, and a panicking job cannot wedge it (poison recovery, same
+/// policy as the daemon caches).
+pub struct CharMemo {
+    est: SynthEstimator,
+    inner: Mutex<Lru<u64, (Resources, f64)>>,
+}
+
+impl fmt::Debug for CharMemo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CharMemo").field("stats", &self.stats()).finish()
+    }
+}
+
+impl CharMemo {
+    pub fn new(cap: usize) -> Self {
+        CharMemo {
+            est: SynthEstimator::default(),
+            inner: Mutex::new(Lru::new(cap)),
+        }
+    }
+
+    /// `(resources, internal_ns)` of `m`, memoized by module digest.
+    pub fn characterize(&self, m: &Module) -> (Resources, f64) {
+        let key = crate::ir::digest::fnv1a64(
+            crate::ir::schema::module_to_json(m).dump().as_bytes(),
+        );
+        if let Some(hit) = self.lock().get(&key) {
+            return hit;
+        }
+        let value = (self.est.resources(m), self.est.internal_ns(m));
+        self.lock().put(key, value);
+        value
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.lock().stats()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Lru<u64, (Resources, f64)>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl ModuleCharacteristics for CharMemo {
+    fn resources(&self, m: &Module) -> Resources {
+        self.characterize(m).0
+    }
+
+    fn internal_ns(&self, m: &Module) -> f64 {
+        self.characterize(m).1
     }
 }
 
@@ -199,6 +260,22 @@ mod tests {
             .build();
         assert!(est.internal_ns(&big) > est.internal_ns(&small));
         assert!(est.internal_ns(&big) <= 3.4);
+    }
+
+    #[test]
+    fn char_memo_matches_estimator_and_counts_hits() {
+        let est = SynthEstimator::default();
+        let memo = CharMemo::new(8);
+        let m = LeafBuilder::verilog_stub("M")
+            .port("a", Dir::In, 64)
+            .resource(Resources::new(1234.0, 10.0, 1.0, 2.0, 3.0))
+            .build();
+        use crate::timing::netlist::ModuleCharacteristics;
+        assert_eq!(memo.resources(&m).lut, est.resources(&m).lut);
+        assert_eq!(memo.internal_ns(&m), est.internal_ns(&m));
+        let s = memo.stats();
+        assert_eq!(s.misses, 1, "{s:?}");
+        assert!(s.hits >= 1, "{s:?}");
     }
 
     #[test]

@@ -63,10 +63,23 @@ pub fn implement_netlist_with(
     let placement =
         place(nl, dev, placer).ok_or_else(|| anyhow!("placement failed: design does not fit"))?;
     let timing = crate::timing::sta::analyze_with(nl, &placement, dev, dm, opts);
+    Ok(assemble_report(nl, dev, placement, timing))
+}
+
+/// Assemble an [`ImplReport`] from an already-computed placement and
+/// timing report — the shared tail of [`implement_netlist_with`] and the
+/// memoized backend (`coordinator::memo::StageMemo::implement`), so both
+/// paths produce identical bytes by construction.
+pub fn assemble_report(
+    nl: &FlatNetlist,
+    dev: &VirtualDevice,
+    placement: Placement,
+    timing: TimingReport,
+) -> ImplReport {
     let total = nl.total_resources();
     let cap = dev.total_capacity();
     let pct = |x: f64, c: f64| if c > 0.0 { 100.0 * x / c } else { 0.0 };
-    Ok(ImplReport {
+    ImplReport {
         util_pct: [
             pct(total.lut, cap.lut),
             pct(total.ff, cap.ff),
@@ -78,7 +91,7 @@ pub fn implement_netlist_with(
         netlist_edges: nl.edges.len(),
         placement,
         timing,
-    })
+    }
 }
 
 /// One-call flow: elaborate + place + analyze.

@@ -1,0 +1,241 @@
+//! Content digests of IR subtrees — the cache keys of the incremental
+//! re-flow engine.
+//!
+//! Two granularities:
+//!
+//! * [`design_digest`] — FNV-1a over the whole design's compact IR JSON
+//!   (the key the daemon's whole-request memo has used since the serve
+//!   PR; `designs::synthetic::digest` delegates here).
+//! * [`module_subtree_digests`] — one digest per module, folding the
+//!   module's own JSON with the subtree digests of every instantiated
+//!   child **in instance order**. Two modules with byte-identical JSON
+//!   and byte-identical reachable children share a digest, so the
+//!   digest is a sound memo key for anything computed from a module's
+//!   subtree alone (characterization, flattening, per-module pipeline
+//!   results): an edit to one leaf changes only the digests on the path
+//!   from that leaf to the top.
+//!
+//! Missing children (dangling `module_name`) and instantiation cycles
+//! fold a distinct marker instead of recursing, so the map is total on
+//! arbitrary (even DRC-dirty) designs and never diverges.
+
+use crate::ir::core::{Design, Module};
+use crate::ir::schema::module_to_json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// 64-bit FNV-1a. The canonical home; `designs::synthetic::fnv1a64`
+/// re-exports it.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Incremental FNV-1a hasher for composite keys.
+#[derive(Debug, Clone)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) -> &mut Self {
+        for b in bytes {
+            self.0 ^= *b as u64;
+            self.0 = self.0.wrapping_mul(0x1_0000_0000_01b3);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, v: u64) -> &mut Self {
+        self.write(&v.to_le_bytes())
+    }
+
+    pub fn write_u32(&mut self, v: u32) -> &mut Self {
+        self.write(&v.to_le_bytes())
+    }
+
+    pub fn write_usize(&mut self, v: usize) -> &mut Self {
+        self.write_u64(v as u64)
+    }
+
+    pub fn write_bool(&mut self, v: bool) -> &mut Self {
+        self.write(&[v as u8])
+    }
+
+    /// Hashes the exact bit pattern — distinguishes `-0.0` from `0.0`
+    /// and every NaN payload, which is what a byte-identity cache wants.
+    pub fn write_f64(&mut self, v: f64) -> &mut Self {
+        self.write_u64(v.to_bits())
+    }
+
+    /// Length-prefixed string write, so `("ab","c")` ≠ `("a","bc")`.
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write_usize(s.len());
+        self.write(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Digest of a design: FNV-1a over its compact IR JSON.
+pub fn design_digest(d: &Design) -> u64 {
+    fnv1a64(crate::ir::schema::design_to_json(d).dump().as_bytes())
+}
+
+/// Per-module subtree digests for every module in `d` (see module docs).
+pub fn module_subtree_digests(d: &Design) -> BTreeMap<String, u64> {
+    let mut memo = BTreeMap::new();
+    let mut stack = BTreeSet::new();
+    for name in d.modules.keys() {
+        subtree(d, name, &mut memo, &mut stack);
+    }
+    memo
+}
+
+/// Subtree digest of one module by name (memoized in `memo`).
+fn subtree(
+    d: &Design,
+    name: &str,
+    memo: &mut BTreeMap<String, u64>,
+    stack: &mut BTreeSet<String>,
+) -> u64 {
+    if let Some(&h) = memo.get(name) {
+        return h;
+    }
+    let Some(m) = d.module(name) else {
+        return fnv1a64(b"<missing-module>");
+    };
+    if !stack.insert(name.to_string()) {
+        // Instantiation cycle: fold a marker for the back-edge. The
+        // entry module of the cycle still digests deterministically.
+        return fnv1a64(b"<module-cycle>");
+    }
+    let h = subtree_of(d, m, memo, stack);
+    stack.remove(name);
+    memo.insert(name.to_string(), h);
+    h
+}
+
+fn subtree_of(
+    d: &Design,
+    m: &Module,
+    memo: &mut BTreeMap<String, u64>,
+    stack: &mut BTreeSet<String>,
+) -> u64 {
+    let mut f = Fnv::new();
+    f.write(module_to_json(m).dump().as_bytes());
+    if m.is_grouped() {
+        for inst in m.instances() {
+            f.write_u64(subtree(d, &inst.module_name, memo, stack));
+        }
+    }
+    f.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::designs::cnn::{self, CnnConfig};
+    use crate::designs::synthetic;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_fnv_matches_oneshot() {
+        let mut f = Fnv::new();
+        f.write(b"foo").write(b"bar");
+        assert_eq!(f.finish(), fnv1a64(b"foobar"));
+    }
+
+    #[test]
+    fn design_digest_matches_legacy_synthetic_digest() {
+        let d = cnn::generate(&CnnConfig { rows: 2, cols: 2 }).unwrap().design;
+        assert_eq!(design_digest(&d), synthetic::digest(&d));
+    }
+
+    #[test]
+    fn leaf_edit_dirties_exactly_the_path_to_top() {
+        let a = cnn::generate(&CnnConfig { rows: 2, cols: 2 }).unwrap().design;
+        let mut b = a.clone();
+        // Perturb one leaf's timing metadata.
+        let leaf = b
+            .modules
+            .values()
+            .find(|m| !m.is_grouped())
+            .map(|m| m.name.clone())
+            .expect("cnn has leaf modules");
+        {
+            let m = b.module_mut(&leaf).unwrap();
+            let mut t = crate::util::json::JsonObj::new();
+            t.insert("internal_ns", crate::util::json::Json::Num(9.87));
+            m.metadata.insert("timing", crate::util::json::Json::Obj(t));
+        }
+        let da = module_subtree_digests(&a);
+        let db = module_subtree_digests(&b);
+        assert_eq!(da.len(), db.len());
+        let mut changed: Vec<&str> = da
+            .iter()
+            .filter(|(k, v)| db.get(*k) != Some(v))
+            .map(|(k, _)| k.as_str())
+            .collect();
+        changed.sort_unstable();
+        // The edited leaf changed, the top changed (it reaches the leaf),
+        // and nothing changed that does not reach the leaf.
+        assert!(changed.contains(&leaf.as_str()), "edited leaf must be dirty");
+        assert!(
+            changed.contains(&b.top.as_str()),
+            "top reaches every leaf in cnn"
+        );
+        for name in &changed {
+            assert!(
+                reaches(&b, name, &leaf),
+                "{name} changed but does not reach {leaf}"
+            );
+        }
+    }
+
+    fn reaches(d: &crate::ir::core::Design, from: &str, to: &str) -> bool {
+        if from == to {
+            return true;
+        }
+        let Some(m) = d.module(from) else { return false };
+        if !m.is_grouped() {
+            return false;
+        }
+        m.instances().iter().any(|i| reaches(d, &i.module_name, to))
+    }
+
+    #[test]
+    fn digests_are_total_on_dangling_refs() {
+        let mut d = cnn::generate(&CnnConfig { rows: 2, cols: 2 }).unwrap().design;
+        let top = d.top.clone();
+        if let Some(m) = d.module_mut(&top) {
+            if m.is_grouped() {
+                if let Some(inst) = m.instances_mut().first_mut() {
+                    inst.module_name = "no_such_module".into();
+                }
+            }
+        }
+        // Must not panic or diverge.
+        let _ = module_subtree_digests(&d);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod builder;
 pub mod core;
+pub mod digest;
 pub mod graph;
 pub mod index;
 pub mod intern;

@@ -24,6 +24,13 @@
 //!                                      imported, analyzed, exported and
 //!                                      re-imported; failures shrink to a
 //!                                      minimal .v counterexample
+//! rsir fuzz --reflow [--seed N] [--cases M] [--out f.json]
+//!                                      incremental re-flow lane: each
+//!                                      design runs the HLPS flow through
+//!                                      a shared stage memo (cold, after
+//!                                      a leaf edit, after pollution) and
+//!                                      every outcome must be bit-for-bit
+//!                                      identical to a from-scratch run
 //! rsir fuzz --daemon [--seed N] [--cases M] [--out f.json]
 //!                                      daemon-equivalence lane: boot a
 //!                                      real `rsir serve`, submit every
@@ -263,6 +270,39 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                     rep.violations.len()
                 );
             }
+            if args.has_flag("reflow") {
+                // Incremental re-flow lane: byte-identity of memoized
+                // flows against from-scratch runs (see testing::oracle).
+                let cases = args.get_usize("cases", 16);
+                let t0 = Instant::now();
+                let rep = rsir::testing::fuzz::run_reflow(seed, cases, &cfg);
+                match rep.failure {
+                    None => println!(
+                        "fuzz --reflow: {cases} designs from seed {seed} re-flowed \
+                         byte-identically in {:.2?}",
+                        t0.elapsed()
+                    ),
+                    Some(f) => {
+                        let out = args.get_or("out", "fuzz_reflow_counterexample.json");
+                        std::fs::write(out, &f.minimal_json)?;
+                        eprintln!(
+                            "fuzz --reflow: case {} (seed {seed}) violated: {}",
+                            f.case,
+                            f.violations.join(", ")
+                        );
+                        eprintln!(
+                            "minimal counterexample violates: {}",
+                            f.minimal_violations.join(", ")
+                        );
+                        eprintln!("minimal plan:\n{:#?}", f.minimal_plan);
+                        bail!(
+                            "re-flow identity violated; minimal counterexample IR written to \
+                             {out} (replay: rsir fuzz --reflow --seed {seed} --cases {cases})"
+                        );
+                    }
+                }
+                return Ok(());
+            }
             let cases = args.get_usize("cases", 64);
             let t0 = Instant::now();
             if args.has_flag("verilog") {
@@ -469,6 +509,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             println!("SA: --sa-workers N parallelizes annealing chains (same results for any N)");
             println!("pass registry: `rsir passes` lists it; `rsir pipeline <spec>` runs one");
             println!("fuzzing: `rsir fuzz --seed N --cases M` replays/shrinks oracle failures");
+            println!("         `rsir fuzz --reflow` checks memoized re-flows stay byte-identical");
             println!("daemon: `rsir serve --socket /tmp/rsir.sock` + `rsir submit --socket ... --file reqs.jsonl`");
         }
         other => bail!("unknown command '{other}' (try 'rsir help')"),

@@ -53,6 +53,11 @@ pub struct PassContext {
     /// modules through `ctx.index.edit` / announce adds with
     /// `ctx.index.touch` (see `ir::index` for the invalidation contract).
     pub index: DesignIndex,
+    /// Shared module-characterization memo (the incremental re-flow
+    /// engine's stage-1 cache). `None` — the default — recomputes from
+    /// scratch; memo-aware passes (`platform-analyze`) produce identical
+    /// bytes either way, the memo only changes wall time.
+    pub chars: Option<std::sync::Arc<crate::eda::synth::CharMemo>>,
     /// Name of the pass currently running (set by [`Pipeline::run`]).
     current_pass: String,
 }
@@ -74,6 +79,7 @@ impl PassContext {
             log: Vec::new(),
             diagnostics: Vec::new(),
             index: DesignIndex::new(),
+            chars: None,
             current_pass: String::new(),
         }
     }

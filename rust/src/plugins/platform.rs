@@ -4,7 +4,7 @@
 //! missing a `resource` entry and writes the result into metadata, so the
 //! floorplanner and the EDA simulator agree on one characterization.
 
-use crate::eda::synth::SynthEstimator;
+use crate::eda::synth::{CharMemo, SynthEstimator};
 use crate::ir::core::*;
 use crate::passes::manager::{IndexPolicy, Pass, PassContext};
 use crate::timing::netlist::ModuleCharacteristics;
@@ -30,7 +30,7 @@ impl Pass for PlatformAnalyze {
     }
 
     fn run(&self, design: &mut Design, ctx: &mut PassContext) -> anyhow::Result<()> {
-        let n = analyze(design);
+        let n = analyze_with(design, ctx.chars.as_deref());
         if n > 0 {
             ctx.log(format!("platform-analyze: annotated {n} modules"));
         }
@@ -41,6 +41,15 @@ impl Pass for PlatformAnalyze {
 /// Annotate every leaf module lacking resource/timing metadata.
 /// Returns the number of modules annotated.
 pub fn analyze(design: &mut Design) -> usize {
+    analyze_with(design, None)
+}
+
+/// [`analyze`] with an optional characterization memo (the incremental
+/// re-flow path): annotated values are identical with or without the
+/// memo — `internal_ns` is a pure function of the characterized
+/// resources whether those come from metadata, source, or the cache —
+/// so cache state can never change an output byte.
+pub fn analyze_with(design: &mut Design, memo: Option<&CharMemo>) -> usize {
     let est = SynthEstimator::default();
     let mut annotated = 0;
     let names: Vec<String> = design.modules.keys().cloned().collect();
@@ -49,23 +58,26 @@ pub fn analyze(design: &mut Design) -> usize {
         if !m.is_leaf() {
             continue;
         }
-        let mut touched = false;
-        if !m.metadata.contains_key("resource") {
-            let r = est.resources(m);
+        let need_r = !m.metadata.contains_key("resource");
+        let need_t = !m.metadata.contains_key("timing");
+        if !need_r && !need_t {
+            continue;
+        }
+        // One characterization serves both annotations.
+        let (r, t) = match memo {
+            Some(c) => c.characterize(m),
+            None => (est.resources(m), est.internal_ns(m)),
+        };
+        if need_r {
             m.metadata
                 .insert("resource", crate::ir::builder::resources_to_json(&r));
-            touched = true;
         }
-        if !m.metadata.contains_key("timing") {
-            let t = est.internal_ns(m);
+        if need_t {
             let mut to = JsonObj::new();
             to.insert("internal_ns", Json::num(t));
             m.metadata.insert("timing", Json::Obj(to));
-            touched = true;
         }
-        if touched {
-            annotated += 1;
-        }
+        annotated += 1;
     }
     annotated
 }
@@ -107,6 +119,43 @@ mod tests {
         let b = d.module("B").unwrap();
         assert_eq!(crate::ir::builder::module_resources(b).unwrap().lut, 7.0);
         assert!(b.metadata.contains_key("timing"));
+    }
+
+    #[test]
+    fn memoized_analyze_is_byte_identical() {
+        let mk = || {
+            let mut d = Design::new("T");
+            d.add(
+                LeafBuilder::new(
+                    "A",
+                    SourceFormat::Verilog,
+                    "module A(input clk);\nreg [31:0] x;\nalways @(posedge clk) x <= x + 1;\nendmodule",
+                )
+                .port("clk", Dir::In, 1)
+                .build(),
+            );
+            d.add(
+                LeafBuilder::verilog_stub("B")
+                    .resource(Resources::new(7.0, 7.0, 0.0, 0.0, 0.0))
+                    .build(),
+            );
+            d.add(Module::grouped("T"));
+            d
+        };
+        let mut plain = mk();
+        let n_plain = analyze(&mut plain);
+        let memo = CharMemo::new(16);
+        let mut memoized = mk();
+        let n_memo = analyze_with(&mut memoized, Some(&memo));
+        assert_eq!(n_plain, n_memo);
+        let dump = |d: &Design| crate::ir::schema::design_to_json(d).dump();
+        assert_eq!(dump(&plain), dump(&memoized));
+        // A second design through the same memo hits the cache and still
+        // produces identical bytes.
+        let mut warm = mk();
+        analyze_with(&mut warm, Some(&memo));
+        assert_eq!(dump(&plain), dump(&warm));
+        assert!(memo.stats().hits >= 1, "{:?}", memo.stats());
     }
 
     #[test]

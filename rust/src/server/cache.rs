@@ -1,5 +1,7 @@
-//! Warm cross-request state for the daemon: a deterministic LRU map and
-//! the three caches `rsir serve` keeps across jobs.
+//! Warm cross-request state for the daemon: the three whole-request
+//! caches `rsir serve` keeps across jobs, plus the per-stage incremental
+//! memo ([`StageMemo`]) that serves requests whose whole-request keys
+//! miss.
 //!
 //! The cache-key design enforces the determinism contract structurally:
 //! every cached value is a **pure function of its key**, so cache state
@@ -18,106 +20,15 @@
 //! (idempotent by the purity argument above; the last insert wins).
 
 use crate::coordinator::flow::AnalyzedDesign;
+use crate::coordinator::memo::StageMemo;
 use crate::floorplan::cost::CostModel;
-use crate::util::json::{Json, JsonObj};
-use std::collections::BTreeMap;
+use crate::util::json::Json;
 use std::sync::{Arc, Mutex, MutexGuard};
 
-/// A small deterministic LRU map: recency is a monotone tick, eviction
-/// removes the smallest tick (an O(n) scan — caps are small and the scan
-/// order over a `BTreeMap` is deterministic). `cap == 0` disables the
-/// cache entirely (every `get` misses, `put` is a no-op) — that is what
-/// the one-shot lane runs with.
-#[derive(Debug)]
-pub struct Lru<K: Ord + Clone, V> {
-    cap: usize,
-    map: BTreeMap<K, (u64, V)>,
-    tick: u64,
-    hits: u64,
-    misses: u64,
-}
-
-impl<K: Ord + Clone, V: Clone> Lru<K, V> {
-    pub fn new(cap: usize) -> Self {
-        Lru {
-            cap,
-            map: BTreeMap::new(),
-            tick: 0,
-            hits: 0,
-            misses: 0,
-        }
-    }
-
-    pub fn get(&mut self, key: &K) -> Option<V> {
-        self.tick += 1;
-        match self.map.get_mut(key) {
-            Some((t, v)) => {
-                *t = self.tick;
-                self.hits += 1;
-                Some(v.clone())
-            }
-            None => {
-                self.misses += 1;
-                None
-            }
-        }
-    }
-
-    pub fn put(&mut self, key: K, value: V) {
-        if self.cap == 0 {
-            return;
-        }
-        self.tick += 1;
-        self.map.insert(key, (self.tick, value));
-        if self.map.len() > self.cap {
-            let oldest = self
-                .map
-                .iter()
-                .min_by_key(|(_, (t, _))| *t)
-                .map(|(k, _)| k.clone());
-            if let Some(k) = oldest {
-                self.map.remove(&k);
-            }
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.map.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
-    }
-
-    pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits,
-            misses: self.misses,
-            len: self.map.len(),
-            cap: self.cap,
-        }
-    }
-}
-
-/// Snapshot of one cache's counters, rendered by the `stats` request.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct CacheStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub len: usize,
-    pub cap: usize,
-}
-
-impl CacheStats {
-    pub fn to_json(&self) -> Json {
-        let mut o = JsonObj::new();
-        o.insert("hits", Json::num(self.hits as f64));
-        o.insert("misses", Json::num(self.misses as f64));
-        o.insert("len", Json::num(self.len as f64));
-        o.insert("cap", Json::num(self.cap as f64));
-        Json::Obj(o)
-    }
-}
+// The LRU substrate grew up here and was promoted to `util::lru` when the
+// incremental re-flow engine needed it below the server layer; re-exported
+// so existing daemon call sites keep compiling unchanged.
+pub use crate::util::lru::{CacheStats, Lru};
 
 /// Everything a memoized [`CostModel`] depends on: the analyzed design
 /// (via its input digest), the device, and the two floats that shape the
@@ -150,6 +61,12 @@ pub struct CacheSet {
     analyzed: Mutex<Lru<u64, Arc<AnalyzedDesign>>>,
     cost: Mutex<Lru<CostKey, Arc<CostModel>>>,
     results: Mutex<Lru<u64, Json>>,
+    /// Per-stage incremental caches (characterization, elaboration,
+    /// placement, floorplan, delta STA) — the finer tier below the
+    /// whole-request caches above: when a request digest misses (the
+    /// design changed), the stage memo still reuses everything the edit
+    /// didn't touch.
+    stage: Arc<StageMemo>,
 }
 
 /// A panicking job must not wedge every later cache access: recover the
@@ -165,7 +82,18 @@ impl CacheSet {
             analyzed: Mutex::new(Lru::new(cap)),
             cost: Mutex::new(Lru::new(cap)),
             results: Mutex::new(Lru::new(cap)),
+            stage: Arc::new(if cap == 0 {
+                StageMemo::disabled()
+            } else {
+                StageMemo::new(cap)
+            }),
         }
+    }
+
+    /// The shared per-stage memo, for threading into
+    /// [`FlowWarm::stage`](crate::coordinator::flow::FlowWarm).
+    pub fn stage(&self) -> Arc<StageMemo> {
+        self.stage.clone()
     }
 
     /// The disabled cache set the one-shot lane (`rsir submit --local`,
@@ -199,50 +127,22 @@ impl CacheSet {
     }
 
     /// Per-cache counter snapshots, in a stable order for the `stats`
-    /// payload.
+    /// payload. The three whole-request caches come first (existing
+    /// consumers index them); the per-stage memo's entries are appended.
     pub fn stats(&self) -> Vec<(&'static str, CacheStats)> {
-        vec![
+        let mut out = vec![
             ("results", lock(&self.results).stats()),
             ("analyzed", lock(&self.analyzed).stats()),
             ("cost_models", lock(&self.cost).stats()),
-        ]
+        ];
+        out.extend(self.stage.stats());
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn lru_evicts_least_recently_used() {
-        let mut lru: Lru<u32, u32> = Lru::new(2);
-        lru.put(1, 10);
-        lru.put(2, 20);
-        assert_eq!(lru.get(&1), Some(10)); // 1 is now most recent
-        lru.put(3, 30); // evicts 2
-        assert_eq!(lru.get(&2), None);
-        assert_eq!(lru.get(&1), Some(10));
-        assert_eq!(lru.get(&3), Some(30));
-        assert_eq!(lru.len(), 2);
-    }
-
-    #[test]
-    fn lru_counts_hits_and_misses() {
-        let mut lru: Lru<u32, u32> = Lru::new(4);
-        lru.put(1, 1);
-        lru.get(&1);
-        lru.get(&9);
-        let s = lru.stats();
-        assert_eq!((s.hits, s.misses, s.len, s.cap), (1, 1, 1, 4));
-    }
-
-    #[test]
-    fn zero_cap_disables() {
-        let mut lru: Lru<u32, u32> = Lru::new(0);
-        lru.put(1, 1);
-        assert_eq!(lru.get(&1), None);
-        assert!(lru.is_empty());
-    }
 
     #[test]
     fn cost_key_distinguishes_bit_patterns() {

@@ -424,6 +424,7 @@ fn run_flow(p: &FlowParams, caches: &CacheSet, token: &CancelToken) -> Result<Js
         analyzed: caches.analyzed(digest),
         cost_model: caches.cost(&cost_key),
         cancel: Some(&stop),
+        stage: Some(caches.stage()),
         ..Default::default()
     };
     let report = flow::run_hlps_warm(&mut design, &dev, &cfg, &mut warm);
@@ -620,8 +621,16 @@ fn run_explore(
     };
     let cfg = FlowConfig::default();
     let pool = Pool::new(1);
-    let rows = explore::explore_warm(&design, &dev, &p.limits, &cfg, &pool, analyzed)
-        .map_err(|e| JobError::new(ErrorCode::Internal, format!("explore failed: {e:#}")))?;
+    let rows = explore::explore_warm_staged(
+        &design,
+        &dev,
+        &p.limits,
+        &cfg,
+        &pool,
+        analyzed,
+        Some(caches.stage()),
+    )
+    .map_err(|e| JobError::new(ErrorCode::Internal, format!("explore failed: {e:#}")))?;
 
     let mut o = JsonObj::new();
     o.insert("design_digest", Json::str(format!("{digest:016x}")));

@@ -78,6 +78,46 @@ pub fn run(seed: u64, cases: usize, cfg: &SyntheticConfig) -> FuzzReport {
     }
 }
 
+/// Fuzz the incremental re-flow engine (`rsir fuzz --reflow`): run
+/// `cases` generated designs through
+/// [`oracle::check_incremental_reflow`] — flow through a shared
+/// [`StageMemo`](crate::coordinator::memo::StageMemo) cold, after a leaf
+/// edit, and after pollution, each compared bit-for-bit against a
+/// from-scratch run. Same report shape as [`run`], so the CLI and CI
+/// artifacts are shared.
+pub fn run_reflow(seed: u64, cases: usize, cfg: &SyntheticConfig) -> FuzzReport {
+    let gen = DesignGen { cfg: cfg.clone() };
+    let mut rng = Rng::new(seed);
+    let prop = |p: &DesignPlan| oracle::check_incremental_reflow(&materialize(p)).is_clean();
+    for case in 0..cases {
+        let plan = gen.generate(&mut rng);
+        let outcome = oracle::check_incremental_reflow(&materialize(&plan));
+        if outcome.is_clean() {
+            continue;
+        }
+        let violations = outcome.violated();
+        let minimal_plan = minimize(&gen, plan, &prop);
+        let minimal = materialize(&minimal_plan);
+        let minimal_violations = oracle::check_incremental_reflow(&minimal).violated();
+        return FuzzReport {
+            seed,
+            cases,
+            failure: Some(FuzzFailure {
+                case,
+                violations,
+                minimal_plan,
+                minimal_violations,
+                minimal_json: design_to_json(&minimal).pretty(),
+            }),
+        };
+    }
+    FuzzReport {
+        seed,
+        cases,
+        failure: None,
+    }
+}
+
 /// A minimized Verilog round-trip failure (`rsir fuzz --verilog`).
 #[derive(Debug, Clone)]
 pub struct VerilogFuzzFailure {
@@ -241,6 +281,13 @@ mod tests {
     fn clean_run_reports_no_failure() {
         let rep = run(11, 4, &SyntheticConfig::default());
         assert_eq!(rep.cases, 4);
+        assert!(rep.failure.is_none(), "{:?}", rep.failure);
+    }
+
+    #[test]
+    fn clean_reflow_run_reports_no_failure() {
+        let rep = run_reflow(11, 2, &SyntheticConfig::default());
+        assert_eq!(rep.cases, 2);
         assert!(rep.failure.is_none(), "{:?}", rep.failure);
     }
 

@@ -15,7 +15,10 @@
 //! byte-identical to the historical string-keyed elaboration.
 
 use crate::ir::core::*;
+use crate::ir::digest::module_subtree_digests;
+use crate::util::lru::{CacheStats, Lru};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// A leaf instance in the flattened design.
 #[derive(Debug, Clone)]
@@ -252,6 +255,247 @@ impl<'a> Flattener<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Incremental flatten: per-module fragments memoized by subtree digest.
+// ---------------------------------------------------------------------------
+
+/// One leaf-port attachment inside a [`FlatFragment`] (node index is
+/// fragment-local).
+#[derive(Debug, Clone)]
+struct FragPin {
+    node: usize,
+    dir: Dir,
+    width: u32,
+    pipelinable: bool,
+    clockish: bool,
+}
+
+/// The flattened interior of one grouped module, expressed relative to
+/// the module itself so it can be spliced into any instantiation site:
+/// node paths are fragment-relative, and every net that reaches the
+/// fragment root is kept *open* under its root-scope identifier — the
+/// parent decides at splice time which of those its connections alias
+/// onto parent nets (matching `Flattener::walk`, which aliases purely by
+/// the parent's `conn.port` strings) and the rest become closed local
+/// nets, exactly as an unaliased identifier mints a fresh key in `walk`.
+#[derive(Debug, Clone, Default)]
+struct FlatFragment {
+    /// Leaf nodes in DFS instance order, paths relative to the fragment
+    /// root.
+    nodes: Vec<FlatNode>,
+    /// Pins of nets open at the fragment root, keyed by root-scope
+    /// identifier.
+    open: BTreeMap<String, Vec<FragPin>>,
+    /// Pins of nets fully internal to the fragment.
+    closed: Vec<Vec<FragPin>>,
+}
+
+/// Warm state for [`flatten_incremental`]: fragments per module-subtree
+/// digest plus whole netlists per top-subtree digest.
+///
+/// Keys cover the IR subtree only, **not** the characteristics provider —
+/// a memo must always be driven with the same (pure) provider, which is
+/// how `coordinator::memo::StageMemo` uses it.
+#[derive(Debug)]
+pub struct FlattenMemo {
+    fragments: Lru<u64, Arc<FlatFragment>>,
+    netlists: Lru<u64, Arc<FlatNetlist>>,
+}
+
+impl FlattenMemo {
+    pub fn new(cap: usize) -> Self {
+        FlattenMemo {
+            fragments: Lru::new(cap),
+            netlists: Lru::new(cap),
+        }
+    }
+
+    /// (fragment cache, whole-netlist cache) counter snapshots.
+    pub fn stats(&self) -> (CacheStats, CacheStats) {
+        (self.fragments.stats(), self.netlists.stats())
+    }
+}
+
+/// Flatten `design` from its top module, reusing fragments of any module
+/// whose IR subtree digest is already in `memo`. Byte-identical to
+/// [`flatten`] with the same provider: fragment splicing preserves the
+/// DFS node order, and edge aggregation is commutative over nets, so the
+/// assembled node and edge lists match element for element.
+pub fn flatten_incremental(
+    design: &Design,
+    chars: &dyn ModuleCharacteristics,
+    memo: &mut FlattenMemo,
+) -> FlatNetlist {
+    let digests = module_subtree_digests(design);
+    let top_key = digests.get(&design.top).copied().unwrap_or(0);
+    if let Some(nl) = memo.netlists.get(&top_key) {
+        return (*nl).clone();
+    }
+    let frag = fragment_of(design, design.top_module(), &digests, chars, memo);
+    let nl = netlist_of(&frag);
+    memo.netlists.put(top_key, Arc::new(nl.clone()));
+    nl
+}
+
+/// Memoized fragment of one module (leaf-top designs yield an empty
+/// fragment: `instances()` is empty on leaves, as in `walk`).
+fn fragment_of(
+    design: &Design,
+    m: &Module,
+    digests: &BTreeMap<String, u64>,
+    chars: &dyn ModuleCharacteristics,
+    memo: &mut FlattenMemo,
+) -> Arc<FlatFragment> {
+    let key = digests.get(&m.name).copied().unwrap_or(0);
+    if let Some(f) = memo.fragments.get(&key) {
+        return f;
+    }
+    let mut frag = FlatFragment::default();
+    for inst in m.instances() {
+        let Some(child) = design.module(&inst.module_name) else {
+            continue;
+        };
+        if child.is_grouped() {
+            let cf = fragment_of(design, child, digests, chars, memo);
+            splice(&mut frag, inst, &cf);
+        } else {
+            leaf_into(&mut frag, inst, child, chars);
+        }
+    }
+    let frag = Arc::new(frag);
+    memo.fragments.put(key, frag.clone());
+    frag
+}
+
+/// Splice a child fragment into `frag` at instance `inst`: offset node
+/// indices, prefix paths with the instance name, route the child's open
+/// nets through the instance connections (last `Id` connection per port
+/// wins, matching `child_aliases` insertion order in `walk`), and close
+/// whatever the parent leaves unconnected.
+fn splice(frag: &mut FlatFragment, inst: &Instance, child: &FlatFragment) {
+    let off = frag.nodes.len();
+    for n in &child.nodes {
+        let mut n = n.clone();
+        n.path = format!("{}/{}", inst.instance_name, n.path);
+        frag.nodes.push(n);
+    }
+    let mut alias: BTreeMap<&str, &str> = BTreeMap::new();
+    for conn in &inst.connections {
+        if let ConnExpr::Id(id) = &conn.value {
+            alias.insert(conn.port.as_str(), id.as_str());
+        }
+    }
+    let shift = |pins: &[FragPin]| -> Vec<FragPin> {
+        pins.iter()
+            .map(|p| FragPin {
+                node: p.node + off,
+                ..p.clone()
+            })
+            .collect()
+    };
+    for (id, pins) in &child.open {
+        match alias.get(id.as_str()) {
+            Some(&parent_id) => frag
+                .open
+                .entry(parent_id.to_string())
+                .or_default()
+                .extend(shift(pins)),
+            None => frag.closed.push(shift(pins)),
+        }
+    }
+    for pins in &child.closed {
+        frag.closed.push(shift(pins));
+    }
+}
+
+/// Add one leaf instance to `frag` — the leaf arm of `walk` with an
+/// empty scope.
+fn leaf_into(
+    frag: &mut FlatFragment,
+    inst: &Instance,
+    child: &Module,
+    chars: &dyn ModuleCharacteristics,
+) {
+    let fixed_slot = inst
+        .metadata
+        .get("floorplan")
+        .and_then(|f| f.as_str())
+        .map(|s| s.to_string())
+        .or_else(|| {
+            child
+                .metadata
+                .get("floorplan")
+                .and_then(|f| f.as_str())
+                .map(|s| s.to_string())
+        });
+    let node_idx = frag.nodes.len();
+    frag.nodes.push(FlatNode {
+        path: inst.instance_name.clone(),
+        module: child.name.clone(),
+        resources: chars.resources(child),
+        internal_ns: chars.internal_ns(child),
+        is_pipeline: child
+            .metadata
+            .get("pipeline_element")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false),
+        fixed_slot,
+    });
+    for conn in &inst.connections {
+        let Some(port) = child.port(&conn.port) else {
+            continue;
+        };
+        if let ConnExpr::Id(id) = &conn.value {
+            let iface = child.interface_of(&port.name);
+            frag.open.entry(id.clone()).or_default().push(FragPin {
+                node: node_idx,
+                dir: port.dir,
+                width: port.width,
+                pipelinable: iface.map(|i| i.pipelinable()).unwrap_or(false),
+                clockish: matches!(
+                    iface,
+                    Some(Interface::Clock { .. }) | Some(Interface::Reset { .. })
+                ),
+            });
+        }
+    }
+}
+
+/// Aggregate a fragment's nets into a [`FlatNetlist`] — the same
+/// commutative fold as `Flattener::finish`, so net iteration order is
+/// output-irrelevant.
+fn netlist_of(frag: &FlatFragment) -> FlatNetlist {
+    let mut agg: BTreeMap<(usize, usize), (u64, bool)> = BTreeMap::new();
+    for pins in frag.open.values().chain(frag.closed.iter()) {
+        if pins.iter().any(|p| p.clockish) {
+            continue;
+        }
+        for d in pins.iter().filter(|p| p.dir == Dir::Out) {
+            for s in pins.iter().filter(|p| p.dir == Dir::In) {
+                if d.node == s.node {
+                    continue;
+                }
+                let e = agg.entry((d.node, s.node)).or_insert((0, true));
+                e.0 += d.width as u64;
+                e.1 &= d.pipelinable && s.pipelinable;
+            }
+        }
+    }
+    let edges = agg
+        .into_iter()
+        .map(|((src, dst), (width, pipelinable))| FlatEdge {
+            src,
+            dst,
+            width,
+            pipelinable,
+        })
+        .collect();
+    FlatNetlist {
+        nodes: frag.nodes.clone(),
+        edges,
+    }
+}
+
 #[cfg(test)]
 pub mod test_support {
     use super::*;
@@ -391,6 +635,53 @@ mod tests {
         let a = &nl.nodes[nl.node_index("a0").unwrap()];
         assert_eq!(a.resources.lut, 1000.0);
         assert_eq!(nl.total_resources().lut, 1100.0);
+    }
+
+    #[test]
+    fn incremental_matches_full_on_hierarchy() {
+        let d = hierarchical_design();
+        let full = flatten(&d, &MetaChars);
+        let mut memo = FlattenMemo::new(16);
+        let inc = flatten_incremental(&d, &MetaChars, &mut memo);
+        assert_eq!(format!("{full:?}"), format!("{inc:?}"));
+        // A second run must hit the whole-netlist memo and stay identical.
+        let again = flatten_incremental(&d, &MetaChars, &mut memo);
+        assert_eq!(format!("{full:?}"), format!("{again:?}"));
+        assert!(memo.stats().1.hits >= 1, "netlist memo should hit on rerun");
+    }
+
+    #[test]
+    fn incremental_after_edit_matches_full() {
+        let mut d = hierarchical_design();
+        let mut memo = FlattenMemo::new(16);
+        let _ = flatten_incremental(&d, &MetaChars, &mut memo);
+        // Edit one leaf: the B fragment goes stale, Mid and Top follow,
+        // but the warm A fragment is reused.
+        let b = d.module_mut("B").unwrap();
+        set_module_resources(b, Resources::new(777.0, 3.0, 0.0, 0.0, 0.0));
+        let full = flatten(&d, &MetaChars);
+        let inc = flatten_incremental(&d, &MetaChars, &mut memo);
+        assert_eq!(format!("{full:?}"), format!("{inc:?}"));
+    }
+
+    #[test]
+    fn incremental_matches_full_on_synthetic_designs() {
+        use crate::designs::synthetic::{materialize, DesignGen};
+        use crate::util::quickcheck::Gen;
+        use crate::util::rng::Rng;
+        let gen = DesignGen::default();
+        for seed in 0..12 {
+            let mut rng = Rng::new(seed);
+            let d = materialize(&gen.generate(&mut rng));
+            let full = flatten(&d, &MetaChars);
+            let mut memo = FlattenMemo::new(32);
+            let inc = flatten_incremental(&d, &MetaChars, &mut memo);
+            assert_eq!(
+                format!("{full:?}"),
+                format!("{inc:?}"),
+                "seed {seed} diverged"
+            );
+        }
     }
 
     #[test]

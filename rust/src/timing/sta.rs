@@ -59,6 +59,61 @@ pub struct StaOptions {
     pub unguided: bool,
 }
 
+/// Per-slot resource sums and (non-pipeline) member counts — the one
+/// O(nodes) scan everything utilization-shaped derives from. Callers
+/// that already hold per-slot usage (an explore sweep point, the delta
+/// lane) compute utilization from an existing `SlotAggregates` via
+/// [`SlotAggregates::effective`] instead of rescanning the netlist.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotAggregates {
+    pub used: Vec<Resources>,
+    pub count: Vec<usize>,
+}
+
+impl SlotAggregates {
+    /// Collect aggregates with one pass over the nodes (in node order —
+    /// the accumulation order is part of the bit-exactness contract the
+    /// delta lane relies on).
+    pub fn collect(nl: &FlatNetlist, placement: &Placement, dev: &VirtualDevice) -> Self {
+        let mut used = vec![Resources::ZERO; dev.num_slots()];
+        let mut count = vec![0usize; dev.num_slots()];
+        for (n, node) in nl.nodes.iter().enumerate() {
+            let s = placement.slot_of_node[n];
+            used[s] = used[s].add(&node.resources);
+            if !node.is_pipeline {
+                count[s] += 1;
+            }
+        }
+        SlotAggregates { used, count }
+    }
+
+    /// Per-slot effective utilization from precomputed aggregates — a
+    /// pure per-slot map, so patching one slot's aggregate and re-mapping
+    /// that slot is exact.
+    pub fn effective(&self, dev: &VirtualDevice, opts: StaOptions) -> Vec<f64> {
+        self.used
+            .iter()
+            .zip(&dev.slots)
+            .zip(&self.count)
+            .map(|((u, s), &c)| Self::effective_one(u, s, c, opts))
+            .collect()
+    }
+
+    fn effective_one(
+        used: &Resources,
+        slot: &crate::device::model::Slot,
+        count: usize,
+        opts: StaOptions,
+    ) -> f64 {
+        let base = used.max_util(&slot.capacity);
+        if opts.unguided && base > 0.0 && count > 1 {
+            base + (0.015 * (count as f64 - 1.0)).min(0.18)
+        } else {
+            base
+        }
+    }
+}
+
 /// Per-slot utilization of the binding resource.
 pub fn slot_utilization(
     nl: &FlatNetlist,
@@ -77,27 +132,7 @@ pub fn effective_utilization(
     dev: &VirtualDevice,
     opts: StaOptions,
 ) -> Vec<f64> {
-    let mut used = vec![Resources::ZERO; dev.num_slots()];
-    let mut count = vec![0usize; dev.num_slots()];
-    for (n, node) in nl.nodes.iter().enumerate() {
-        let s = placement.slot_of_node[n];
-        used[s] = used[s].add(&node.resources);
-        if !node.is_pipeline {
-            count[s] += 1;
-        }
-    }
-    used.iter()
-        .zip(&dev.slots)
-        .zip(&count)
-        .map(|((u, s), &c)| {
-            let base = u.max_util(&s.capacity);
-            if opts.unguided && base > 0.0 && c > 1 {
-                base + (0.015 * (c as f64 - 1.0)).min(0.18)
-            } else {
-                base
-            }
-        })
-        .collect()
+    SlotAggregates::collect(nl, placement, dev).effective(dev, opts)
 }
 
 /// Demand on each die-boundary (boundary_index × column) in wires, as a
@@ -136,6 +171,200 @@ pub fn analyze(
     analyze_with(nl, placement, dev, dm, StaOptions::default())
 }
 
+/// The expensive per-element intermediates of one STA run, cached by the
+/// delta lane: per-slot aggregates and utilization, per-edge path delay,
+/// per-node internal delay — plus fingerprints of everything they were
+/// computed from, so [`analyze_delta`] can prove which entries survive
+/// an edit. Assembling a [`TimingReport`] from terms (`fold_report`)
+/// is cheap and recomputed every run; the terms are what delta reuse
+/// buys.
+#[derive(Debug, Clone)]
+pub struct StaTerms {
+    /// Device + delay model + options fingerprint; any mismatch forces a
+    /// full recompute.
+    env_fp: u64,
+    /// FNV over (src, dst, width, pipelinable) per edge in order.
+    edges_fp: u64,
+    /// Per-node content signature (resources, internal_ns, is_pipeline —
+    /// exactly the node fields the terms depend on).
+    node_sig: Vec<u64>,
+    /// Slot of each node when the terms were computed.
+    slots: Vec<usize>,
+    agg: SlotAggregates,
+    util: Vec<f64>,
+    edge_delay: Vec<f64>,
+    node_delay: Vec<f64>,
+}
+
+fn env_fingerprint(dev: &VirtualDevice, dm: &DelayModel, opts: StaOptions) -> u64 {
+    let mut f = crate::ir::digest::Fnv::new();
+    f.write_u64(dev.fingerprint());
+    f.write_f64(dm.clk2q_ns)
+        .write_f64(dm.setup_ns)
+        .write_f64(dm.local_ns)
+        .write_f64(dm.hop_ns)
+        .write_f64(dm.die_ns)
+        .write_f64(dm.die_reg_ns)
+        .write_f64(dm.cong_threshold)
+        .write_f64(dm.cong_alpha)
+        .write_f64(dm.route_fail_util)
+        .write_f64(dm.min_clock_ns);
+    f.write_bool(opts.unguided);
+    f.finish()
+}
+
+fn edges_fingerprint(nl: &FlatNetlist) -> u64 {
+    let mut f = crate::ir::digest::Fnv::new();
+    for e in &nl.edges {
+        f.write_usize(e.src)
+            .write_usize(e.dst)
+            .write_u64(e.width)
+            .write_bool(e.pipelinable);
+    }
+    f.finish()
+}
+
+fn node_signatures(nl: &FlatNetlist) -> Vec<u64> {
+    nl.nodes
+        .iter()
+        .map(|n| {
+            let mut f = crate::ir::digest::Fnv::new();
+            f.write_f64(n.resources.lut)
+                .write_f64(n.resources.ff)
+                .write_f64(n.resources.bram)
+                .write_f64(n.resources.dsp)
+                .write_f64(n.resources.uram)
+                .write_f64(n.internal_ns)
+                .write_bool(n.is_pipeline);
+            f.finish()
+        })
+        .collect()
+}
+
+impl StaTerms {
+    /// Compute every term from scratch.
+    pub fn compute(
+        nl: &FlatNetlist,
+        placement: &Placement,
+        dev: &VirtualDevice,
+        dm: &DelayModel,
+        opts: StaOptions,
+    ) -> StaTerms {
+        let agg = SlotAggregates::collect(nl, placement, dev);
+        let util = agg.effective(dev, opts);
+        let edge_delay = nl
+            .edges
+            .iter()
+            .map(|e| {
+                let (sa, sb) = (placement.slot_of_node[e.src], placement.slot_of_node[e.dst]);
+                let registered = nl.nodes[e.src].is_pipeline || nl.nodes[e.dst].is_pipeline;
+                dm.path_ns(dev, sa, sb, &util, registered)
+            })
+            .collect();
+        let node_delay = nl
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(n, node)| dm.internal_ns(node.internal_ns, util[placement.slot_of_node[n]]))
+            .collect();
+        StaTerms {
+            env_fp: env_fingerprint(dev, dm, opts),
+            edges_fp: edges_fingerprint(nl),
+            node_sig: node_signatures(nl),
+            slots: placement.slot_of_node.clone(),
+            agg,
+            util,
+            edge_delay,
+            node_delay,
+        }
+    }
+
+    /// Patch `prev` for the current inputs, recomputing only terms in
+    /// *dirty slots* (slots a changed/moved node left or entered).
+    /// Returns `None` when the delta preconditions fail (different
+    /// environment, node count, or edge list) — the caller falls back to
+    /// [`StaTerms::compute`]. Bit-exact: dirty-slot aggregates re-fold in
+    /// node order, utilization is a pure per-slot map, and delays are
+    /// pure functions of (slots, util, node content).
+    pub fn patched(
+        prev: &StaTerms,
+        nl: &FlatNetlist,
+        placement: &Placement,
+        dev: &VirtualDevice,
+        dm: &DelayModel,
+        opts: StaOptions,
+    ) -> Option<StaTerms> {
+        if prev.env_fp != env_fingerprint(dev, dm, opts)
+            || prev.node_sig.len() != nl.nodes.len()
+            || prev.util.len() != dev.num_slots()
+            || prev.edges_fp != edges_fingerprint(nl)
+        {
+            return None;
+        }
+        let node_sig = node_signatures(nl);
+        let mut dirty_slot = vec![false; dev.num_slots()];
+        let mut any = false;
+        for n in 0..node_sig.len() {
+            if node_sig[n] != prev.node_sig[n] || placement.slot_of_node[n] != prev.slots[n] {
+                any = true;
+                dirty_slot[prev.slots[n]] = true;
+                dirty_slot[placement.slot_of_node[n]] = true;
+            }
+        }
+        if !any {
+            return Some(prev.clone());
+        }
+        let mut agg = prev.agg.clone();
+        for (s, dirty) in dirty_slot.iter().enumerate() {
+            if *dirty {
+                agg.used[s] = Resources::ZERO;
+                agg.count[s] = 0;
+            }
+        }
+        for (n, node) in nl.nodes.iter().enumerate() {
+            let s = placement.slot_of_node[n];
+            if dirty_slot[s] {
+                agg.used[s] = agg.used[s].add(&node.resources);
+                if !node.is_pipeline {
+                    agg.count[s] += 1;
+                }
+            }
+        }
+        let mut util = prev.util.clone();
+        for (s, dirty) in dirty_slot.iter().enumerate() {
+            if *dirty {
+                util[s] =
+                    SlotAggregates::effective_one(&agg.used[s], &dev.slots[s], agg.count[s], opts);
+            }
+        }
+        let mut edge_delay = prev.edge_delay.clone();
+        for (i, e) in nl.edges.iter().enumerate() {
+            let (sa, sb) = (placement.slot_of_node[e.src], placement.slot_of_node[e.dst]);
+            if dirty_slot[sa] || dirty_slot[sb] {
+                let registered = nl.nodes[e.src].is_pipeline || nl.nodes[e.dst].is_pipeline;
+                edge_delay[i] = dm.path_ns(dev, sa, sb, &util, registered);
+            }
+        }
+        let mut node_delay = prev.node_delay.clone();
+        for (n, node) in nl.nodes.iter().enumerate() {
+            let s = placement.slot_of_node[n];
+            if dirty_slot[s] {
+                node_delay[n] = dm.internal_ns(node.internal_ns, util[s]);
+            }
+        }
+        Some(StaTerms {
+            env_fp: prev.env_fp,
+            edges_fp: prev.edges_fp,
+            node_sig,
+            slots: placement.slot_of_node.clone(),
+            agg,
+            util,
+            edge_delay,
+            node_delay,
+        })
+    }
+}
+
 /// Analyze with explicit [`StaOptions`].
 pub fn analyze_with(
     nl: &FlatNetlist,
@@ -145,8 +374,44 @@ pub fn analyze_with(
     opts: StaOptions,
 ) -> TimingReport {
     assert_eq!(nl.nodes.len(), placement.slot_of_node.len());
-    let util = effective_utilization(nl, placement, dev, opts);
+    let terms = StaTerms::compute(nl, placement, dev, dm, opts);
+    fold_report(nl, placement, dev, dm, opts, &terms)
+}
 
+/// Delta lane: re-time only the cone touched since `prev` was computed.
+/// Returns the report, the terms to cache for the next run, and whether
+/// the delta path was actually taken (false = full recompute). The
+/// report is byte-identical to [`analyze_with`] either way.
+pub fn analyze_delta(
+    nl: &FlatNetlist,
+    placement: &Placement,
+    dev: &VirtualDevice,
+    dm: &DelayModel,
+    opts: StaOptions,
+    prev: Option<&StaTerms>,
+) -> (TimingReport, StaTerms, bool) {
+    assert_eq!(nl.nodes.len(), placement.slot_of_node.len());
+    let (terms, delta) =
+        match prev.and_then(|p| StaTerms::patched(p, nl, placement, dev, dm, opts)) {
+            Some(t) => (t, true),
+            None => (StaTerms::compute(nl, placement, dev, dm, opts), false),
+        };
+    let report = fold_report(nl, placement, dev, dm, opts, &terms);
+    (report, terms, delta)
+}
+
+/// Assemble a [`TimingReport`] from precomputed terms — the exact fold
+/// the monolithic `analyze_with` used to run inline, so full and delta
+/// lanes share one report path.
+fn fold_report(
+    nl: &FlatNetlist,
+    placement: &Placement,
+    dev: &VirtualDevice,
+    dm: &DelayModel,
+    opts: StaOptions,
+    terms: &StaTerms,
+) -> TimingReport {
+    let util = &terms.util;
     let mut critical = PathInfo {
         description: "(clock floor)".into(),
         delay_ns: dm.min_clock_ns,
@@ -154,10 +419,9 @@ pub fn analyze_with(
     let mut wirelength = 0.0f64;
 
     // Net paths.
-    for e in &nl.edges {
+    for (i, e) in nl.edges.iter().enumerate() {
         let (sa, sb) = (placement.slot_of_node[e.src], placement.slot_of_node[e.dst]);
-        let registered = nl.nodes[e.src].is_pipeline || nl.nodes[e.dst].is_pipeline;
-        let d = dm.path_ns(dev, sa, sb, &util, registered);
+        let d = terms.edge_delay[i];
         let (man, dies) = dev.slot_dist(sa, sb);
         wirelength += e.width as f64 * (man + dies) as f64;
         if d > critical.delay_ns {
@@ -174,7 +438,7 @@ pub fn analyze_with(
     // Module-internal paths.
     for (n, node) in nl.nodes.iter().enumerate() {
         let u = util[placement.slot_of_node[n]];
-        let d = dm.internal_ns(node.internal_ns, u);
+        let d = terms.node_delay[n];
         if d > critical.delay_ns {
             critical = PathInfo {
                 description: format!(
@@ -233,7 +497,7 @@ pub fn analyze_with(
         fmax_mhz: dm.fmax_mhz(critical.delay_ns),
         critical_ns: critical.delay_ns.max(dm.min_clock_ns),
         critical_path: critical,
-        slot_util: util,
+        slot_util: util.clone(),
         max_util,
         wirelength,
         boundary_load: bload,
@@ -333,6 +597,98 @@ mod tests {
         let r = analyze(&nl, &p, &dev, &DelayModel::default());
         assert!(!r.routable);
         assert!(r.unroutable_reason.as_ref().unwrap().contains("SLL"));
+    }
+
+    /// Random netlist + placement pair for the delta differential.
+    fn random_case(
+        rng: &mut crate::util::rng::Rng,
+        dev: &VirtualDevice,
+    ) -> (FlatNetlist, Placement) {
+        let n = 3 + rng.below(8);
+        let nodes: Vec<FlatNode> = (0..n)
+            .map(|i| {
+                let mut nd = node(&format!("n{i}"), 1e3 + rng.f64() * 50e3, 1.5 + rng.f64() * 2.0);
+                nd.is_pipeline = rng.below(5) == 0;
+                nd
+            })
+            .collect();
+        let edges = (0..n.saturating_sub(1))
+            .map(|i| FlatEdge {
+                src: i,
+                dst: i + 1,
+                width: 8 + rng.below(200) as u64,
+                pipelinable: rng.below(2) == 0,
+            })
+            .collect();
+        let slots = (0..n).map(|_| rng.below(dev.num_slots())).collect();
+        (FlatNetlist { nodes, edges }, Placement::new(slots))
+    }
+
+    #[test]
+    fn delta_matches_full_under_random_edits() {
+        let dev = builtin::by_name("u280").unwrap();
+        let dm = DelayModel::default();
+        let mut rng = crate::util::rng::Rng::new(0xD1F7);
+        for case in 0..24 {
+            let (mut nl, mut p) = random_case(&mut rng, &dev);
+            let opts = StaOptions {
+                unguided: case % 2 == 0,
+            };
+            let (_, mut terms, _) = analyze_delta(&nl, &p, &dev, &dm, opts, None);
+            for _ in 0..6 {
+                // Random edit: move a node, retune a node, or no-op.
+                match rng.below(3) {
+                    0 => {
+                        let i = rng.below(nl.nodes.len());
+                        p.slot_of_node[i] = rng.below(dev.num_slots());
+                    }
+                    1 => {
+                        let i = rng.below(nl.nodes.len());
+                        nl.nodes[i].internal_ns += 0.25;
+                        nl.nodes[i].resources.lut *= 1.1;
+                    }
+                    _ => {}
+                }
+                let full = analyze_with(&nl, &p, &dev, &dm, opts);
+                let (delta, next, used_delta) =
+                    analyze_delta(&nl, &p, &dev, &dm, opts, Some(&terms));
+                assert!(used_delta, "delta preconditions should hold here");
+                assert_eq!(format!("{full:?}"), format!("{delta:?}"), "case {case}");
+                terms = next;
+            }
+        }
+    }
+
+    #[test]
+    fn delta_falls_back_on_environment_change() {
+        let dev = builtin::by_name("u280").unwrap();
+        let dm = DelayModel::default();
+        let nl = two_node_netlist();
+        let p = Placement::new(vec![0, 1]);
+        let (_, terms, _) = analyze_delta(&nl, &p, &dev, &dm, StaOptions::default(), None);
+        // Different delay model → full recompute, still correct.
+        let dm2 = DelayModel {
+            hop_ns: 0.9,
+            ..DelayModel::default()
+        };
+        let (rep, _, used_delta) =
+            analyze_delta(&nl, &p, &dev, &dm2, StaOptions::default(), Some(&terms));
+        assert!(!used_delta);
+        let full = analyze_with(&nl, &p, &dev, &dm2, StaOptions::default());
+        assert_eq!(format!("{full:?}"), format!("{rep:?}"));
+    }
+
+    #[test]
+    fn delta_reuses_terms_on_identical_rerun() {
+        let dev = builtin::by_name("u280").unwrap();
+        let dm = DelayModel::default();
+        let nl = two_node_netlist();
+        let p = Placement::new(vec![0, 1]);
+        let (first, terms, _) = analyze_delta(&nl, &p, &dev, &dm, StaOptions::default(), None);
+        let (again, _, used_delta) =
+            analyze_delta(&nl, &p, &dev, &dm, StaOptions::default(), Some(&terms));
+        assert!(used_delta);
+        assert_eq!(format!("{first:?}"), format!("{again:?}"));
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! A small deterministic LRU map and its counter snapshot. Grown in the
+//! daemon PR inside `server::cache`; promoted here when the incremental
+//! re-flow engine (`coordinator::memo`, `timing::netlist`, `eda::synth`)
+//! needed the same substrate below the server layer.
+
+use crate::util::json::{Json, JsonObj};
+use std::collections::BTreeMap;
+
+/// A small deterministic LRU map: recency is a monotone tick, eviction
+/// removes the smallest tick (an O(n) scan — caps are small and the scan
+/// order over a `BTreeMap` is deterministic). `cap == 0` disables the
+/// cache entirely (every `get` misses, `put` is a no-op) — that is what
+/// the one-shot lane runs with.
+#[derive(Debug)]
+pub struct Lru<K: Ord + Clone, V> {
+    cap: usize,
+    map: BTreeMap<K, (u64, V)>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Ord + Clone, V: Clone> Lru<K, V> {
+    pub fn new(cap: usize) -> Self {
+        Lru {
+            cap,
+            map: BTreeMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some((t, v)) => {
+                *t = self.tick;
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, key: K, value: V) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        self.map.insert(key, (self.tick, value));
+        if self.map.len() > self.cap {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = oldest {
+                self.map.remove(&k);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            len: self.map.len(),
+            cap: self.cap,
+        }
+    }
+}
+
+/// Snapshot of one cache's counters, rendered by the `stats` request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+    pub cap: usize,
+}
+
+impl CacheStats {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("hits", Json::num(self.hits as f64));
+        o.insert("misses", Json::num(self.misses as f64));
+        o.insert("len", Json::num(self.len as f64));
+        o.insert("cap", Json::num(self.cap as f64));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut lru: Lru<u32, u32> = Lru::new(2);
+        lru.put(1, 10);
+        lru.put(2, 20);
+        assert_eq!(lru.get(&1), Some(10)); // 1 is now most recent
+        lru.put(3, 30); // evicts 2
+        assert_eq!(lru.get(&2), None);
+        assert_eq!(lru.get(&1), Some(10));
+        assert_eq!(lru.get(&3), Some(30));
+        assert_eq!(lru.len(), 2);
+    }
+
+    #[test]
+    fn lru_counts_hits_and_misses() {
+        let mut lru: Lru<u32, u32> = Lru::new(4);
+        lru.put(1, 1);
+        lru.get(&1);
+        lru.get(&9);
+        let s = lru.stats();
+        assert_eq!((s.hits, s.misses, s.len, s.cap), (1, 1, 1, 4));
+    }
+
+    #[test]
+    fn zero_cap_disables() {
+        let mut lru: Lru<u32, u32> = Lru::new(0);
+        lru.put(1, 1);
+        assert_eq!(lru.get(&1), None);
+        assert!(lru.is_empty());
+    }
+}

@@ -307,5 +307,44 @@ fn stats_reports_cache_hits_and_wall_times() {
     ] {
         assert!(stats.contains(needle), "missing {needle} in {stats}");
     }
+
+    // A third flow with a different util limit misses every whole-request
+    // cache (new result key, new floorplan) but reuses per-stage work
+    // through the stage memo: the baseline netlist, its placement, and
+    // its STA terms are identical to f1's, so the flatten/placement
+    // caches hit and the delta-STA lane takes over.
+    let p3 = r#"{"bench":"cnn:3x2","device":"u250","sa_refine":false,"util":0.6}"#;
+    let third = c.roundtrip(&format!(r#"{{"id":"f3","type":"flow","params":{p3}}}"#));
+    assert!(third.starts_with(r#"{"id":"f3","ok":true"#), "{third}");
+    let stats = c.roundtrip(r#"{"id":"s2","type":"stats"}"#);
+    let parsed = rsir::util::json::Json::parse(&stats).unwrap();
+    let caches = parsed
+        .at("result")
+        .and_then(|r| r.at("caches"))
+        .expect("stats payload has a caches object")
+        .clone();
+    for name in [
+        "module_chars",
+        "flat_fragments",
+        "flat_netlists",
+        "placements",
+        "floorplans",
+        "sta_delta",
+    ] {
+        assert!(
+            caches.at(name).is_some(),
+            "missing per-stage cache '{name}' in {stats}"
+        );
+    }
+    let hits = |name: &str| {
+        caches
+            .at(name)
+            .and_then(|s| s.at("hits"))
+            .and_then(|h| h.as_f64())
+            .unwrap_or(-1.0)
+    };
+    assert!(hits("flat_netlists") >= 1.0, "no netlist reuse: {stats}");
+    assert!(hits("placements") >= 1.0, "no placement reuse: {stats}");
+    assert!(hits("sta_delta") >= 1.0, "delta STA never ran: {stats}");
     shutdown(&endpoint, handle);
 }

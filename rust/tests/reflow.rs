@@ -1,0 +1,147 @@
+//! Incremental re-flow gates: the stage-memoization engine must never
+//! change a single output byte, adjudicated differentially against
+//! from-scratch runs.
+//!
+//! * [`seven_families_reflow_byte_identical`] — every design family runs
+//!   the full [`oracle::check_incremental_reflow`] triple (cold through
+//!   an empty memo, after a leaf edit through the polluted memo, and the
+//!   original again through the doubly-polluted memo).
+//! * [`fuzzed_reflow_smoke`] / [`fuzzed_reflow_deep`] — generated plans
+//!   through the same oracle; the deep 64-case lane is `#[ignore]`d for
+//!   the scheduled CI job (`rsir fuzz --reflow --cases 64` is the
+//!   replayable equivalent).
+//! * [`edit_script_reflow_matches_from_scratch`] — the property the
+//!   engine exists for: a *sequence* of random leaf edits replayed
+//!   through one long-lived memo, every step byte-identical to a
+//!   from-scratch run, including the empty-edit and everything-dirty
+//!   corners.
+
+use rsir::coordinator::flow::{run_hlps_warm, FlowConfig, FlowWarm};
+use rsir::coordinator::memo::StageMemo;
+use rsir::designs::cnn::{self, CnnConfig};
+use rsir::designs::{catapult, dynamatic, intel_hls, knn, llama2, minimap2};
+use rsir::device::builtin;
+use rsir::device::model::VirtualDevice;
+use rsir::ir::core::Design;
+use rsir::testing::{fuzz, oracle};
+use rsir::util::json::{Json, JsonObj};
+use rsir::util::rng::Rng;
+use std::sync::Arc;
+
+fn families() -> Vec<(&'static str, Design)> {
+    vec![
+        ("cnn", cnn::generate(&CnnConfig { rows: 4, cols: 4 }).unwrap().design),
+        ("llama2", llama2::generate(&Default::default()).unwrap().design),
+        ("minimap2", minimap2::generate().unwrap().design),
+        ("knn", knn::generate(&Default::default()).unwrap().design),
+        ("catapult", catapult::generate().unwrap().design),
+        ("dynamatic", dynamatic::generate(dynamatic::EXAMPLES[0]).unwrap().design),
+        ("intel_hls", intel_hls::generate(intel_hls::CHSTONE[0]).unwrap().design),
+    ]
+}
+
+#[test]
+fn seven_families_reflow_byte_identical() {
+    for (name, design) in families() {
+        let out = oracle::check_incremental_reflow(&design);
+        assert!(out.is_clean(), "{name}: {}", out.render());
+    }
+}
+
+#[test]
+fn fuzzed_reflow_smoke() {
+    let rep = fuzz::run_reflow(1, 8, &Default::default());
+    assert!(rep.failure.is_none(), "{:?}", rep.failure);
+}
+
+/// The scheduled-CI depth (`rsir fuzz --reflow --seed 1 --cases 64`);
+/// run locally with `cargo test -q --test reflow -- --ignored`.
+#[test]
+#[ignore]
+fn fuzzed_reflow_deep() {
+    let rep = fuzz::run_reflow(1, 64, &Default::default());
+    assert!(rep.failure.is_none(), "{:?}", rep.failure);
+}
+
+/// Run the flow on a clone of `design`, optionally through `stage`, and
+/// fingerprint the outcome (errors fold their rendered message, mirroring
+/// the oracle's comparison).
+fn flow_fp(
+    design: &Design,
+    dev: &VirtualDevice,
+    cfg: &FlowConfig,
+    stage: Option<Arc<StageMemo>>,
+) -> Result<u64, String> {
+    let mut d = design.clone();
+    let mut warm = FlowWarm {
+        stage,
+        ..Default::default()
+    };
+    match run_hlps_warm(&mut d, dev, cfg, &mut warm) {
+        Ok(report) => Ok(oracle::flow_fingerprint(&d, &report)),
+        Err(e) => Err(format!("{e:#}")),
+    }
+}
+
+/// Bump `timing.internal_ns` of one named leaf by `delta`.
+fn bump_leaf(d: &mut Design, name: &str, delta: f64) {
+    let m = d.module_mut(name).unwrap();
+    let old = m
+        .metadata
+        .get("timing")
+        .and_then(|t| t.at("internal_ns"))
+        .and_then(|j| j.as_f64())
+        .unwrap_or(2.2);
+    let mut t = JsonObj::new();
+    t.insert("internal_ns", Json::num(old + delta));
+    m.metadata.insert("timing", Json::Obj(t));
+}
+
+#[test]
+fn edit_script_reflow_matches_from_scratch() {
+    let dev = builtin::by_name("u250").unwrap();
+    let cfg = FlowConfig {
+        sa_refine: false,
+        ..Default::default()
+    };
+    let mut design = cnn::generate(&CnnConfig { rows: 3, cols: 3 }).unwrap().design;
+    let leaves: Vec<String> = design
+        .modules
+        .values()
+        .filter(|m| !m.is_grouped())
+        .map(|m| m.name.clone())
+        .collect();
+    assert!(!leaves.is_empty());
+
+    let memo = Arc::new(StageMemo::new(64));
+    let mut rng = Rng::new(17);
+    for step in 0..6 {
+        match step {
+            // Step 0 primes the memo; step 1 is the empty edit — the
+            // re-run of an unchanged design is the all-hit corner.
+            0 | 1 => {}
+            // Final step is the everything-dirty corner: every leaf
+            // re-characterizes, every fragment rebuilds.
+            5 => {
+                for name in leaves.clone() {
+                    bump_leaf(&mut design, &name, 0.05 + 0.9 * rng.f64());
+                }
+            }
+            // Middle steps: one random leaf each.
+            _ => {
+                let name = leaves[rng.below(leaves.len())].clone();
+                bump_leaf(&mut design, &name, 0.05 + 0.9 * rng.f64());
+            }
+        }
+        let scratch = flow_fp(&design, &dev, &cfg, None);
+        let warm = flow_fp(&design, &dev, &cfg, Some(memo.clone()));
+        assert_eq!(warm, scratch, "step {step} diverged from from-scratch");
+    }
+    // The script actually exercised the incremental machinery: the
+    // empty-edit step reused placements and delta STA at minimum.
+    let stats = memo.stats();
+    let get = |k: &str| stats.iter().find(|(n, _)| *n == k).unwrap().1;
+    assert!(get("placements").hits >= 1, "{stats:?}");
+    assert!(get("flat_netlists").hits >= 1, "{stats:?}");
+    assert!(get("sta_delta").hits >= 1, "no delta STA run: {stats:?}");
+}
