@@ -52,11 +52,13 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
-    let corr = explore::tradeoff_correlation(&rows);
-    println!(
-        "util_limit vs wirelength correlation: {corr:.2} \
-         (negative = packing tighter shortens wires, the Fig 12 trade-off)"
-    );
+    match explore::tradeoff_correlation(&rows) {
+        Some(corr) => println!(
+            "util_limit vs wirelength correlation: {corr:.2} \
+             (negative = packing tighter shortens wires, the Fig 12 trade-off)"
+        ),
+        None => println!("util_limit vs wirelength correlation: undefined (degenerate sweep)"),
+    }
     let best = rows
         .iter()
         .filter(|r| r.routable)

@@ -1,0 +1,186 @@
+//! Bench: the DSE warm-start machinery — identity first, then speed.
+//!
+//! Two gated measurements:
+//!
+//! 1. **SA resume microbench** — annealing the last 20% of a budget from
+//!    an 80% checkpoint vs annealing the full budget cold. The resumed
+//!    result is asserted bit-identical (best assignment, cost bits,
+//!    candidate count, full trace) *before* any clock is read, so the
+//!    speedup being gated is provably "same bytes, less work".
+//! 2. **Sweep warm-vs-cold** — `run_dse` over one group with budgets
+//!    ascending, SA warm-starting on vs off. Rows and front asserted
+//!    bit-identical first; the wall-clock win comes from each point
+//!    re-annealing only the budget delta instead of from step zero.
+//!
+//! Also asserts the worker-count determinism contract (1 vs 4 pool
+//! workers produce byte-identical reports).
+//!
+//! `--smoke` shrinks sizes for CI; `--out FILE` writes the stats as JSON
+//! (uploaded as the `BENCH_dse.json` CI artifact).
+
+use rsir::coordinator::dse::{run_dse, DseConfig};
+use rsir::coordinator::flow::{FlowConfig, PipelineStrategy};
+use rsir::designs::cnn::{self, CnnConfig};
+use rsir::device::builtin;
+use rsir::floorplan::cost::{CostModel, CpuEvaluator};
+use rsir::floorplan::problem::Problem;
+use rsir::floorplan::sa::{anneal_resumable, SaConfig};
+use rsir::util::bench::bench;
+use rsir::util::json::{Json, JsonObj};
+use rsir::util::pool::Pool;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let dev = builtin::by_name("u250").unwrap();
+    let (design_id, cnn_cfg) = if smoke {
+        ("cnn:4x3", CnnConfig { rows: 4, cols: 3 })
+    } else {
+        ("cnn:8x6", CnnConfig { rows: 8, cols: 6 })
+    };
+    let g = cnn::generate(&cnn_cfg).unwrap();
+    let runs = 3;
+
+    // ---- 1. SA resume microbench ---------------------------------------
+    let nl = rsir::eda::vivado::elaborate(&g.design);
+    let problem = Problem::from_netlist(&nl, &dev, 3.0);
+    let model = CostModel::build(&problem, &dev, 0.7, 1e-4);
+    let full_steps = if smoke { 400 } else { 1500 };
+    let prefix_steps = full_steps * 4 / 5;
+    let full_cfg = SaConfig {
+        steps: full_steps,
+        ..Default::default()
+    };
+    let prefix_cfg = SaConfig {
+        steps: prefix_steps,
+        ..full_cfg.clone()
+    };
+    let mut ev = CpuEvaluator { model };
+    let (cold_res, _) = anneal_resumable(&problem, &dev, &mut ev, None, &full_cfg, None);
+    let (_, ck) = anneal_resumable(&problem, &dev, &mut ev, None, &prefix_cfg, None);
+    let ck = ck.expect("incremental lane yields a checkpoint");
+    let (resumed, _) = anneal_resumable(&problem, &dev, &mut ev, None, &full_cfg, Some(&ck));
+
+    // Identity before any timing: the resumed anneal is the cold one.
+    assert_eq!(cold_res.best, resumed.best, "resume diverged from cold");
+    assert_eq!(cold_res.best_cost.to_bits(), resumed.best_cost.to_bits());
+    assert_eq!(cold_res.evaluated, resumed.evaluated);
+    assert_eq!(cold_res.trace.len(), resumed.trace.len());
+    for (a, b) in cold_res.trace.iter().zip(&resumed.trace) {
+        assert_eq!(a.to_bits(), b.to_bits(), "trace drifted");
+    }
+    println!("== sa resume ({design_id}, {prefix_steps}/{full_steps} steps checkpointed) ==");
+    let cold_stats = bench("sa cold (full budget)", 1, runs, || {
+        anneal_resumable(&problem, &dev, &mut ev, None, &full_cfg, None).0
+    });
+    let resume_stats = bench("sa resumed (last 20%)", 1, runs, || {
+        anneal_resumable(&problem, &dev, &mut ev, None, &full_cfg, Some(&ck)).0
+    });
+    let resume_speedup =
+        cold_stats.median.as_secs_f64() / resume_stats.median.as_secs_f64().max(1e-12);
+    println!("resume speedup: {resume_speedup:.2}x (identical bits)");
+
+    // ---- 2. Sweep warm-vs-cold -----------------------------------------
+    let budgets: Vec<usize> = if smoke {
+        vec![100, 200, 300, 400]
+    } else {
+        vec![300, 600, 900, 1200]
+    };
+    let base = FlowConfig::default();
+    let warm_cfg = DseConfig {
+        utils: vec![0.7],
+        grids: vec![1],
+        sa_steps: budgets.clone(),
+        strategies: vec![PipelineStrategy::Full],
+        base: base.clone(),
+        warm_sa: true,
+    };
+    let cold_cfg = DseConfig {
+        warm_sa: false,
+        ..warm_cfg.clone()
+    };
+    let pool = Pool::new(1);
+
+    // Identity before timing: warm rows/front == cold rows/front, and
+    // the report is byte-identical at a different worker count.
+    let warm_report = run_dse(&g.design, &dev, &warm_cfg, &pool).unwrap();
+    let cold_report = run_dse(&g.design, &dev, &cold_cfg, &pool).unwrap();
+    assert_eq!(warm_report.rows.len(), cold_report.rows.len());
+    for (a, b) in warm_report.rows.iter().zip(&cold_report.rows) {
+        assert!(a.bits_eq(b), "warm row drifted from cold: {a:?} vs {b:?}");
+    }
+    assert_eq!(
+        warm_report.to_json().pretty(),
+        cold_report.to_json().pretty(),
+        "warm report drifted from cold"
+    );
+    let wide_report = run_dse(&g.design, &dev, &warm_cfg, &Pool::new(4)).unwrap();
+    assert_eq!(
+        warm_report.to_json().pretty(),
+        wide_report.to_json().pretty(),
+        "report depends on worker count"
+    );
+    assert!(
+        warm_report.rows.iter().any(|r| r.routable),
+        "sweep produced no routable points: {:?}",
+        warm_report.rows
+    );
+
+    println!("\n== dse sweep ({design_id}, budgets {budgets:?}) ==");
+    let sweep_cold = bench("dse cold starts", 0, runs, || {
+        run_dse(&g.design, &dev, &cold_cfg, &pool).unwrap()
+    });
+    let sweep_warm = bench("dse warm starts", 0, runs, || {
+        run_dse(&g.design, &dev, &warm_cfg, &pool).unwrap()
+    });
+    let sweep_speedup =
+        sweep_cold.median.as_secs_f64() / sweep_warm.median.as_secs_f64().max(1e-12);
+    println!("sweep warm-start speedup: {sweep_speedup:.2}x (identical bits)");
+
+    if let Some(path) = &out {
+        let mut o = JsonObj::new();
+        o.insert("bench", Json::str("dse"));
+        o.insert("design", Json::str(design_id));
+        o.insert("runs", Json::num(runs as f64));
+        o.insert("smoke", Json::Bool(smoke));
+        o.insert("points", Json::num(warm_report.rows.len() as f64));
+        o.insert("front", Json::num(warm_report.front.len() as f64));
+        o.insert("sa_cold_median_ns", Json::num(cold_stats.median.as_nanos() as f64));
+        o.insert(
+            "sa_resume_median_ns",
+            Json::num(resume_stats.median.as_nanos() as f64),
+        );
+        o.insert("resume_speedup", Json::num(resume_speedup));
+        o.insert(
+            "sweep_cold_median_ns",
+            Json::num(sweep_cold.median.as_nanos() as f64),
+        );
+        o.insert(
+            "sweep_warm_median_ns",
+            Json::num(sweep_warm.median.as_nanos() as f64),
+        );
+        o.insert("sweep_speedup", Json::num(sweep_speedup));
+        o.insert("byte_identical", Json::Bool(true));
+        std::fs::write(path, Json::Obj(o).pretty()).unwrap();
+        println!("wrote {path}");
+    }
+
+    // Gates (identity was asserted above; these are pure wall-clock).
+    let (resume_gate, sweep_gate) = if smoke { (1.5, 1.05) } else { (2.0, 1.25) };
+    assert!(
+        resume_speedup >= resume_gate,
+        "resuming the last 20% must beat a cold full anneal >={resume_gate}x \
+         (got {resume_speedup:.2}x)"
+    );
+    assert!(
+        sweep_speedup >= sweep_gate,
+        "warm-started sweep must beat cold starts >={sweep_gate}x (got {sweep_speedup:.2}x)"
+    );
+    println!("\ndse bench complete");
+}

@@ -56,11 +56,19 @@ fn main() {
     let corr = explore::tradeoff_correlation(&rows);
     println!("\n{} of {} floorplans routable", routable.len(), rows.len());
     println!("frequency spread across trade-off points: {spread:.0} MHz (paper: up to ~20 MHz)");
-    println!("util_limit vs wirelength correlation: {corr:.2} (negative = the Fig 12 trade-off)");
+    match corr {
+        Some(c) => println!(
+            "util_limit vs wirelength correlation: {c:.2} (negative = the Fig 12 trade-off)"
+        ),
+        None => println!("util_limit vs wirelength correlation: undefined (degenerate sweep)"),
+    }
     println!("wall time: {elapsed:?} for {} flows", rows.len());
     let check = |cond: bool, msg: &str| {
         println!("[{}] {msg}", if cond { "ok" } else { "MISS" });
     };
     check(routable.len() >= 7, "most trade-off points routable");
-    check(corr < 0.0, "packing tighter shortens wires");
+    check(
+        corr.is_some_and(|c| c < 0.0),
+        "packing tighter shortens wires",
+    );
 }

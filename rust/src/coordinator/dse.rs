@@ -1,0 +1,602 @@
+//! Multi-dimensional design-space exploration (`rsir dse`).
+//!
+//! Where [`explore`](crate::coordinator::explore) sweeps the single
+//! Figure-12 axis (the per-slot utilization ceiling), this module sweeps
+//! the full knob space the paper's infrastructure exposes:
+//!
+//! * **utilization limit** — the Figure-12 congestion/wirelength axis;
+//! * **slot grid** — pblock granularity, via
+//!   [`VirtualDevice::coarsen_columns`] (factor 1 = the device as-is);
+//! * **pipelining strategy** — stage-4 relay-station policy
+//!   ([`PipelineStrategy`]);
+//! * **SA budget** — annealing steps spent refining each floorplan.
+//!
+//! Points stream through the shared work-stealing pool and one shared
+//! [`StageMemo`], so work independent of a knob (elaboration, the
+//! baseline placement, the SA-free ILP solve) is done once per sweep.
+//!
+//! **Warm-started SA.** Within one *group* — a (util, grid, strategy)
+//! coordinate — points differ only in SA budget, and per
+//! [`sa::anneal_resumable`]'s prefix property a shorter anneal is a
+//! bit-exact prefix of a longer one. Each group's points therefore run
+//! serially, budget ascending, each resuming from the nearest completed
+//! point's checkpoint (the largest budget ≤ its own within the group;
+//! cold fallback when none exists — the nearest-neighbor rule restricted
+//! to the one axis along which resumption is sound). Across groups the
+//! problem, device, or cost model differs, so checkpoints don't
+//! transfer; groups fan out in parallel instead. Warm-starting is
+//! therefore a pure wall-time win: every row is byte-identical to its
+//! cold-start twin, at any `--workers` / `--sa-workers` count (the
+//! groups are reassembled in canonical enumeration order).
+//!
+//! **Pareto front.** Routable rows are ranked on four objectives — max
+//! frequency, min wirelength, min peak slot utilization, min SA budget
+//! (the deterministic proxy for refinement wall time; measured wall
+//! time is nondeterministic and never enters the front) — under the SA
+//! NaN-total order ([`cmp_cost_f64`]). Dominated points are pruned
+//! incrementally ([`ParetoFilter`]); a brute-force reference
+//! ([`pareto_front`]) backs the property tests.
+
+use crate::coordinator::explore::{row_for_error, ExploreRow};
+use crate::coordinator::flow::{
+    analyze_design, run_hlps_warm, FlowConfig, FlowWarm, PipelineStrategy,
+};
+use crate::coordinator::memo::StageMemo;
+use crate::device::model::VirtualDevice;
+use crate::floorplan::cmp_cost_f64;
+use crate::floorplan::cost::CostModel;
+use crate::floorplan::sa;
+use crate::ir::core::Design;
+use crate::util::bench::Table;
+use crate::util::json::{Json, JsonObj};
+use crate::util::pool::Pool;
+use anyhow::{Context, Result};
+use std::cmp::Ordering;
+use std::sync::Arc;
+
+/// The knob space of one DSE run. Empty axes default to the base flow
+/// config's value for that knob, so the all-empty config is the
+/// single-point sweep of `base` itself.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    /// Per-slot utilization ceilings (Figure-12 axis).
+    pub utils: Vec<f64>,
+    /// Column-coarsening factors for the slot grid (1 = native).
+    pub grids: Vec<usize>,
+    /// SA refinement budgets (steps); sorted ascending per group so each
+    /// point can resume the previous one's checkpoint.
+    pub sa_steps: Vec<usize>,
+    /// Stage-4 pipelining strategies.
+    pub strategies: Vec<PipelineStrategy>,
+    /// Flow settings shared by every point (each point overrides
+    /// `util_limit`, `pipeline`, and `sa.steps`).
+    pub base: FlowConfig,
+    /// Resume each point's SA from its group predecessor's checkpoint.
+    /// Pure wall-time knob: rows are byte-identical either way.
+    pub warm_sa: bool,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            utils: vec![0.60, 0.70, 0.80],
+            grids: vec![1, 2],
+            sa_steps: vec![60, 120],
+            strategies: vec![PipelineStrategy::Full, PipelineStrategy::DiesOnly],
+            base: FlowConfig::default(),
+            warm_sa: true,
+        }
+    }
+}
+
+/// One coordinate in the knob space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DsePoint {
+    pub util_limit: f64,
+    /// Column-coarsening factor (1 = the device's native grid).
+    pub grid: usize,
+    pub strategy: PipelineStrategy,
+    pub sa_steps: usize,
+}
+
+/// One evaluated point: its knobs plus the flow's quality metrics.
+/// Infeasible points (typed [`Infeasible`](crate::floorplan::Infeasible))
+/// appear as explicit unroutable rows with NaN metrics; internal errors
+/// never become rows — [`run_dse`] propagates them.
+#[derive(Debug, Clone)]
+pub struct DseRow {
+    pub point: DsePoint,
+    /// Utilization of the most congested slot after placement.
+    pub max_slot_util: f64,
+    /// Total weighted wirelength of the floorplan.
+    pub wirelength: f64,
+    pub fmax_mhz: f64,
+    pub routable: bool,
+}
+
+impl DseRow {
+    /// The row's Figure-12 projection — what [`bits_eq`](Self::bits_eq)
+    /// delegates its float comparisons to.
+    pub fn to_explore_row(&self) -> ExploreRow {
+        ExploreRow {
+            util_limit: self.point.util_limit,
+            max_slot_util: self.max_slot_util,
+            wirelength: self.wirelength,
+            fmax_mhz: self.fmax_mhz,
+            routable: self.routable,
+        }
+    }
+
+    /// Canonical bitwise equality: knobs exactly, floats per
+    /// [`ExploreRow::bits_eq`] (the SA NaN-total order). This is the
+    /// dedup/identity predicate the DSE tests and report share.
+    pub fn bits_eq(&self, other: &Self) -> bool {
+        self.point.grid == other.point.grid
+            && self.point.strategy == other.point.strategy
+            && self.point.sa_steps == other.point.sa_steps
+            && self.to_explore_row().bits_eq(&other.to_explore_row())
+    }
+}
+
+/// Everything one DSE run produced: all rows in canonical enumeration
+/// order, and the non-dominated front in the same order. Deterministic —
+/// byte-identical for a given (design, device, config) at any worker
+/// count — which is why no wall-clock figures live here.
+#[derive(Debug, Clone)]
+pub struct DseReport {
+    /// Every evaluated point, canonical order (util, grid, strategy,
+    /// then SA budget ascending).
+    pub rows: Vec<DseRow>,
+    /// The Pareto-optimal subset of the routable rows, canonical order.
+    pub front: Vec<DseRow>,
+}
+
+/// `true` when `a` is at least as good as `b` on every objective and
+/// strictly better on at least one — all float comparisons under
+/// [`cmp_cost_f64`], so a NaN metric can never dominate anything.
+pub fn dominates(a: &DseRow, b: &DseRow) -> bool {
+    // Better-or-equal per objective: fmax maximized, the rest minimized.
+    let cmps = [
+        cmp_cost_f64(b.fmax_mhz, a.fmax_mhz),
+        cmp_cost_f64(a.wirelength, b.wirelength),
+        cmp_cost_f64(a.max_slot_util, b.max_slot_util),
+        a.point.sa_steps.cmp(&b.point.sa_steps),
+    ];
+    cmps.iter().all(|c| *c != Ordering::Greater) && cmps.iter().any(|c| *c == Ordering::Less)
+}
+
+fn objectives_eq(a: &DseRow, b: &DseRow) -> bool {
+    cmp_cost_f64(a.fmax_mhz, b.fmax_mhz) == Ordering::Equal
+        && cmp_cost_f64(a.wirelength, b.wirelength) == Ordering::Equal
+        && cmp_cost_f64(a.max_slot_util, b.max_slot_util) == Ordering::Equal
+        && a.point.sa_steps == b.point.sa_steps
+}
+
+/// Canonical row order for reports: util, then grid, then strategy
+/// (full < dies < off), then SA budget — the enumeration order of
+/// [`run_dse`].
+fn cmp_points(a: &DseRow, b: &DseRow) -> Ordering {
+    let rank = |s: PipelineStrategy| match s {
+        PipelineStrategy::Full => 0u8,
+        PipelineStrategy::DiesOnly => 1,
+        PipelineStrategy::Off => 2,
+    };
+    cmp_cost_f64(a.point.util_limit, b.point.util_limit)
+        .then(a.point.grid.cmp(&b.point.grid))
+        .then(rank(a.point.strategy).cmp(&rank(b.point.strategy)))
+        .then(a.point.sa_steps.cmp(&b.point.sa_steps))
+}
+
+/// Incremental Pareto filter: feed rows as they complete; dominated rows
+/// (and unroutable rows, and objective-duplicates of a present row) are
+/// dropped, and a new non-dominated row evicts whatever it dominates.
+/// Feeding the same rows in any order yields the same
+/// [`front`](Self::front) — equal-objective ties are broken by canonical
+/// point order, not arrival order.
+#[derive(Debug, Default)]
+pub struct ParetoFilter {
+    front: Vec<DseRow>,
+}
+
+impl ParetoFilter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer a row; returns `true` if it joined the front.
+    pub fn insert(&mut self, row: DseRow) -> bool {
+        if !row.routable {
+            return false;
+        }
+        if let Some(twin) = self.front.iter_mut().find(|f| objectives_eq(f, &row)) {
+            // Objective tie: keep whichever comes first canonically.
+            if cmp_points(&row, twin) == Ordering::Less {
+                *twin = row;
+                return true;
+            }
+            return false;
+        }
+        if self.front.iter().any(|f| dominates(f, &row)) {
+            return false;
+        }
+        self.front.retain(|f| !dominates(&row, f));
+        self.front.push(row);
+        true
+    }
+
+    /// The current non-dominated set in canonical point order.
+    pub fn front(&self) -> Vec<DseRow> {
+        let mut f = self.front.clone();
+        f.sort_by(cmp_points);
+        f
+    }
+}
+
+/// Brute-force Pareto reference (O(n²)): a routable row survives iff no
+/// other row dominates it and no canonically-earlier row ties it on
+/// every objective. The property tests pin [`ParetoFilter`] to this.
+pub fn pareto_front(rows: &[DseRow]) -> Vec<DseRow> {
+    let mut sorted: Vec<&DseRow> = rows.iter().filter(|r| r.routable).collect();
+    sorted.sort_by(|a, b| cmp_points(a, b));
+    let mut front: Vec<DseRow> = Vec::new();
+    for (i, r) in sorted.iter().enumerate() {
+        let dominated = sorted.iter().any(|o| dominates(o, r));
+        let tied_earlier = sorted[..i].iter().any(|o| objectives_eq(o, r));
+        if !dominated && !tied_earlier {
+            front.push((*r).clone());
+        }
+    }
+    front
+}
+
+/// An axis with declared values, or the base config's singleton.
+fn axis<T: Clone>(values: &[T], base: T) -> Vec<T> {
+    if values.is_empty() {
+        vec![base]
+    } else {
+        values.to_vec()
+    }
+}
+
+/// Run the full multi-dimensional sweep. One shared stage-1–2 snapshot
+/// (analysis is device-independent) and one shared [`StageMemo`] serve
+/// every point; (util, grid, strategy) groups fan out on `pool` while
+/// each group's budgets run serially, warm-starting SA along the way
+/// (see the module docs). Rows come back in canonical enumeration order
+/// with the Pareto front attached — byte-identical at any worker count.
+///
+/// Typed-infeasible points become explicit unroutable rows; any other
+/// per-point failure aborts the sweep with that error.
+pub fn run_dse(
+    design: &Design,
+    dev: &VirtualDevice,
+    cfg: &DseConfig,
+    pool: &Pool,
+) -> Result<DseReport> {
+    // Canonicalize each axis: sort, dedup (utils by bit pattern — the
+    // report's float order is cmp_cost_f64), defaults from `base`.
+    let mut utils = axis(&cfg.utils, cfg.base.util_limit);
+    utils.sort_by(|a, b| cmp_cost_f64(*a, *b));
+    utils.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    let mut grids = axis(&cfg.grids, 1);
+    grids.sort_unstable();
+    grids.dedup();
+    let mut sa_steps = axis(&cfg.sa_steps, cfg.base.sa.steps);
+    sa_steps.sort_unstable();
+    sa_steps.dedup();
+    let mut strategies: Vec<PipelineStrategy> = Vec::new();
+    for s in axis(&cfg.strategies, cfg.base.pipeline) {
+        if !strategies.contains(&s) {
+            strategies.push(s);
+        }
+    }
+
+    // Coarsened device per grid factor, validated up front.
+    let devs: Vec<VirtualDevice> = grids
+        .iter()
+        .map(|&g| dev.coarsen_columns(g))
+        .collect::<Result<_>>()
+        .with_context(|| format!("dse grid axis on device '{}'", dev.name))?;
+
+    // Shared warm state for the whole sweep.
+    let snap = Arc::new(analyze_design(design).context("dse analysis")?);
+    let points = utils.len() * grids.len() * strategies.len() * sa_steps.len();
+    let memo = Arc::new(StageMemo::new((2 * points).max(64)));
+
+    // Canonical group enumeration; `par_map` preserves input order, so
+    // the reassembled rows are order-identical at any worker count.
+    let mut groups: Vec<(f64, usize, PipelineStrategy)> = Vec::new();
+    for &u in &utils {
+        for gi in 0..grids.len() {
+            for &s in &strategies {
+                groups.push((u, gi, s));
+            }
+        }
+    }
+    let results = pool.par_map(groups, |(util, gi, strategy)| -> Result<Vec<DseRow>> {
+        let gdev = &devs[gi];
+        let mut rows = Vec::with_capacity(sa_steps.len());
+        // Carried across the group's budget-ascending chain: the SA
+        // checkpoint (the prefix-resume warm start) and the cost model
+        // (a pure function of (problem, device, util, die_weight), all
+        // fixed within the group).
+        let mut ck: Option<Arc<sa::SaCheckpoint>> = None;
+        let mut cm: Option<Arc<CostModel>> = None;
+        for &steps in &sa_steps {
+            let mut d = design.clone();
+            let mut fc = cfg.base.clone();
+            fc.util_limit = util;
+            fc.pipeline = strategy;
+            fc.sa.steps = steps;
+            let mut warm = FlowWarm {
+                analyzed: Some(snap.clone()),
+                stage: Some(memo.clone()),
+                cost_model: cm.clone(),
+                sa_resume: if cfg.warm_sa { ck.clone() } else { None },
+                ..Default::default()
+            };
+            let point = DsePoint {
+                util_limit: util,
+                grid: grids[gi],
+                strategy,
+                sa_steps: steps,
+            };
+            let row = match run_hlps_warm(&mut d, gdev, &fc, &mut warm) {
+                Ok(report) => DseRow {
+                    point,
+                    max_slot_util: report.optimized.timing.max_util,
+                    wirelength: report.floorplan_wirelength,
+                    fmax_mhz: report.optimized.fmax_mhz(),
+                    routable: report.optimized.routable(),
+                },
+                Err(e) => {
+                    let er = row_for_error(util, e)?;
+                    DseRow {
+                        point,
+                        max_slot_util: er.max_slot_util,
+                        wirelength: er.wirelength,
+                        fmax_mhz: er.fmax_mhz,
+                        routable: er.routable,
+                    }
+                }
+            };
+            if let Some(h) = warm.harvest_sa.take() {
+                ck = Some(h);
+            }
+            if let Some(h) = warm.harvest_cost.take() {
+                cm = Some(h);
+            }
+            rows.push(row);
+        }
+        Ok(rows)
+    });
+
+    let mut rows: Vec<DseRow> = Vec::with_capacity(points);
+    for group_rows in results {
+        rows.extend(group_rows?);
+    }
+    // Defensive dedup under the canonical predicate (axes are already
+    // unique, so this is a no-op unless a caller builds degenerate rows).
+    let mut unique: Vec<DseRow> = Vec::with_capacity(rows.len());
+    for r in rows {
+        if !unique.iter().any(|u| u.bits_eq(&r)) {
+            unique.push(r);
+        }
+    }
+    let mut filter = ParetoFilter::new();
+    for r in &unique {
+        filter.insert(r.clone());
+    }
+    Ok(DseReport {
+        rows: unique,
+        front: filter.front(),
+    })
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn row_json(r: &DseRow) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("util_limit", Json::num(r.point.util_limit));
+    o.insert("grid", Json::num(r.point.grid as f64));
+    o.insert("strategy", Json::str(r.point.strategy.as_str()));
+    o.insert("sa_steps", Json::num(r.point.sa_steps as f64));
+    o.insert("max_slot_util", num_or_null(r.max_slot_util));
+    o.insert("wirelength", num_or_null(r.wirelength));
+    o.insert("fmax_mhz", num_or_null(r.fmax_mhz));
+    o.insert("routable", Json::Bool(r.routable));
+    Json::Obj(o)
+}
+
+impl DseReport {
+    /// The report as JSON — the `rsir dse --out` artifact. Deterministic
+    /// by construction: knobs and metrics only, no wall-clock figures.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("points", Json::num(self.rows.len() as f64));
+        o.insert(
+            "routable",
+            Json::num(self.rows.iter().filter(|r| r.routable).count() as f64),
+        );
+        o.insert("rows", Json::Arr(self.rows.iter().map(row_json).collect()));
+        o.insert("front", Json::Arr(self.front.iter().map(row_json).collect()));
+        Json::Obj(o)
+    }
+
+    /// Human-readable Pareto-front table (the CLI's stdout artifact).
+    pub fn render_front(&self) -> String {
+        let mut t = Table::new(&[
+            "util",
+            "grid",
+            "strategy",
+            "sa_steps",
+            "Fmax (MHz)",
+            "wirelength",
+            "max_slot_util",
+        ]);
+        for r in &self.front {
+            t.row(&[
+                format!("{:.2}", r.point.util_limit),
+                format!("{}", r.point.grid),
+                r.point.strategy.as_str().to_string(),
+                format!("{}", r.point.sa_steps),
+                format!("{:.0}", r.fmax_mhz),
+                format!("{:.0}", r.wirelength),
+                format!("{:.2}", r.max_slot_util),
+            ]);
+        }
+        format!(
+            "pareto front: {} of {} routable points ({} evaluated)\n{}",
+            self.front.len(),
+            self.rows.iter().filter(|r| r.routable).count(),
+            self.rows.len(),
+            t.to_string()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn row(util: f64, steps: usize, fmax: f64, wl: f64, peak: f64, routable: bool) -> DseRow {
+        DseRow {
+            point: DsePoint {
+                util_limit: util,
+                grid: 1,
+                strategy: PipelineStrategy::Full,
+                sa_steps: steps,
+            },
+            max_slot_util: peak,
+            wirelength: wl,
+            fmax_mhz: fmax,
+            routable,
+        }
+    }
+
+    #[test]
+    fn dominance_basics() {
+        let a = row(0.6, 60, 300.0, 100.0, 0.5, true);
+        let worse = row(0.7, 60, 290.0, 120.0, 0.6, true);
+        let tied = row(0.7, 60, 300.0, 100.0, 0.5, true);
+        let mixed = row(0.7, 60, 310.0, 120.0, 0.5, true);
+        assert!(dominates(&a, &worse));
+        assert!(!dominates(&worse, &a));
+        assert!(!dominates(&a, &tied) && !dominates(&tied, &a));
+        assert!(!dominates(&a, &mixed) && !dominates(&mixed, &a));
+        // A NaN metric can never dominate (NaN is the worst value in the
+        // SA total order).
+        let nan = row(0.7, 60, 310.0, f64::NAN, 0.4, true);
+        assert!(!dominates(&nan, &a));
+    }
+
+    #[test]
+    fn filter_prunes_dominated_and_evicts() {
+        let mut f = ParetoFilter::new();
+        assert!(f.insert(row(0.6, 60, 290.0, 120.0, 0.6, true)));
+        // Strictly better on every axis: evicts the first row.
+        assert!(f.insert(row(0.6, 40, 300.0, 100.0, 0.5, true)));
+        assert_eq!(f.front().len(), 1);
+        // Dominated: rejected.
+        assert!(!f.insert(row(0.7, 80, 280.0, 130.0, 0.7, true)));
+        // Unroutable: never enters.
+        assert!(!f.insert(row(0.5, 40, f64::NAN, f64::NAN, f64::NAN, false)));
+        // Incomparable trade-off joins the front.
+        assert!(f.insert(row(0.7, 40, 320.0, 140.0, 0.8, true)));
+        assert_eq!(f.front().len(), 2);
+    }
+
+    #[test]
+    fn filter_breaks_objective_ties_canonically() {
+        // Same objectives from two different knob points: the
+        // canonically-earlier point wins regardless of arrival order.
+        let early = row(0.5, 60, 300.0, 100.0, 0.5, true);
+        let late = row(0.7, 60, 300.0, 100.0, 0.5, true);
+        for arrival in [[&early, &late], [&late, &early]] {
+            let mut f = ParetoFilter::new();
+            for r in arrival {
+                f.insert(r.clone());
+            }
+            let front = f.front();
+            assert_eq!(front.len(), 1);
+            assert!(front[0].bits_eq(&early));
+        }
+    }
+
+    /// Property test: for random row sets, the incremental filter (fed
+    /// in shuffled order) equals the brute-force reference, and no
+    /// non-dominated row is ever dropped.
+    #[test]
+    fn filter_matches_brute_force_on_random_rows() {
+        let mut rng = Rng::new(0xD5E);
+        for case in 0..50u64 {
+            let n = 1 + rng.below(24);
+            let mut rows: Vec<DseRow> = (0..n)
+                .map(|_| {
+                    // Coarse value grids force plenty of ties and NaNs.
+                    let fmax = [250.0, 275.0, 300.0, f64::NAN][rng.below(4)];
+                    row(
+                        0.5 + 0.1 * rng.below(4) as f64,
+                        [40, 80, 120][rng.below(3)],
+                        fmax,
+                        (10 * (1 + rng.below(5))) as f64,
+                        0.4 + 0.1 * rng.below(4) as f64,
+                        rng.chance(0.8),
+                    )
+                })
+                .collect();
+            let reference = pareto_front(&rows);
+            rng.shuffle(&mut rows);
+            let mut f = ParetoFilter::new();
+            for r in &rows {
+                f.insert(r.clone());
+            }
+            let got = f.front();
+            assert_eq!(got.len(), reference.len(), "case {case}: {rows:?}");
+            for (a, b) in got.iter().zip(&reference) {
+                assert!(a.bits_eq(b), "case {case}: {a:?} vs {b:?}");
+            }
+            // Completeness: every routable row is on the front or
+            // dominated/tied by a front member.
+            for r in rows.iter().filter(|r| r.routable) {
+                assert!(
+                    got.iter()
+                        .any(|f| dominates(f, r) || objectives_eq(f, r) || f.bits_eq(r)),
+                    "case {case}: dropped non-dominated {r:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_have_empty_front() {
+        assert!(pareto_front(&[]).is_empty());
+        assert!(ParetoFilter::new().front().is_empty());
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = DseReport {
+            rows: vec![
+                row(0.6, 60, 300.0, 100.0, 0.5, true),
+                row(0.7, 60, 0.0, f64::NAN, f64::NAN, false),
+            ],
+            front: vec![row(0.6, 60, 300.0, 100.0, 0.5, true)],
+        };
+        let j = report.to_json();
+        assert_eq!(j.at("points").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(j.at("routable").and_then(|v| v.as_u64()), Some(1));
+        let rows = j.at("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        // NaN renders as null, never as a bare NaN token.
+        assert_eq!(rows[1].at("wirelength"), Some(&Json::Null));
+        assert!(report.render_front().contains("pareto front: 1 of 1"));
+    }
+}

@@ -22,6 +22,44 @@ pub struct ExploreRow {
     pub routable: bool,
 }
 
+impl ExploreRow {
+    /// Canonical bitwise equality: every float field compared under the
+    /// SA total order ([`cmp_cost_f64`](crate::floorplan::cmp_cost_f64)),
+    /// so `NaN == NaN` and `-0.0 != 0.0` — two rows are equal exactly
+    /// when they would render identically in a deterministic report.
+    /// This is the one equality the warm-vs-cold tests, the daemon lane,
+    /// and the DSE dedup all share.
+    pub fn bits_eq(&self, other: &Self) -> bool {
+        use crate::floorplan::cmp_cost_f64;
+        use std::cmp::Ordering::Equal;
+        cmp_cost_f64(self.util_limit, other.util_limit) == Equal
+            && cmp_cost_f64(self.max_slot_util, other.max_slot_util) == Equal
+            && cmp_cost_f64(self.wirelength, other.wirelength) == Equal
+            && cmp_cost_f64(self.fmax_mhz, other.fmax_mhz) == Equal
+            && self.routable == other.routable
+    }
+}
+
+/// Classify a flow error for a sweep point: a typed
+/// [`Infeasible`](crate::floorplan::Infeasible) (the design does not fit
+/// at this limit) is itself a data point — an explicit unroutable row —
+/// while anything else (poisoned lock, bad input, logic bug) propagates
+/// as `Err` so the sweep fails loudly instead of dressing an internal
+/// error up as congestion.
+pub fn row_for_error(limit: f64, e: anyhow::Error) -> Result<ExploreRow> {
+    if e.downcast_ref::<crate::floorplan::Infeasible>().is_some() {
+        Ok(ExploreRow {
+            util_limit: limit,
+            max_slot_util: f64::NAN,
+            wirelength: f64::NAN,
+            fmax_mhz: 0.0,
+            routable: false,
+        })
+    } else {
+        Err(e)
+    }
+}
+
 /// Run the HLPS flow once per utilization limit — one pool job per sweep
 /// point, each on a fresh clone of the design — and collect the Pareto
 /// trade-off rows of Figure 12 in sweep order.
@@ -87,25 +125,20 @@ pub fn explore_warm_staged(
         };
         // The sweep wants the exact limit, not the auto-relaxed one; an
         // infeasible point is itself a data point, recorded as an
-        // unroutable row rather than aborting the sweep.
+        // unroutable row — but only a typed infeasibility. Internal
+        // errors propagate (see `row_for_error`).
         match run_hlps_warm(&mut d, dev, &cfg, &mut warm) {
-            Ok(report) => ExploreRow {
+            Ok(report) => Ok(ExploreRow {
                 util_limit: limit,
                 max_slot_util: report.optimized.timing.max_util,
                 wirelength: report.floorplan_wirelength,
                 fmax_mhz: report.optimized.fmax_mhz(),
                 routable: report.optimized.routable(),
-            },
-            Err(_) => ExploreRow {
-                util_limit: limit,
-                max_slot_util: f64::NAN,
-                wirelength: f64::NAN,
-                fmax_mhz: 0.0,
-                routable: false,
-            },
+            }),
+            Err(e) => row_for_error(limit, e),
         }
     });
-    Ok(rows)
+    rows.into_iter().collect()
 }
 
 /// The default sweep of ten limits used by the Fig 12 bench.
@@ -115,15 +148,19 @@ pub fn default_limits() -> Vec<f64> {
 
 /// Expected trade-off shape: tighter limits spread the design (lower
 /// congestion, more wirelength); looser limits pack it. Returns Pearson
-/// correlation between util_limit and wirelength over routable rows.
-pub fn tradeoff_correlation(rows: &[ExploreRow]) -> f64 {
+/// correlation between util_limit and wirelength over routable rows, or
+/// `None` when the correlation is undefined — fewer than two routable
+/// points, or zero variance on either axis. (It used to return `0.0` in
+/// those cases, which read as "measured, no correlation" and let a fully
+/// infeasible sweep sail through a `corr < 0.0`-style check's inverse.)
+pub fn tradeoff_correlation(rows: &[ExploreRow]) -> Option<f64> {
     let pts: Vec<(f64, f64)> = rows
         .iter()
         .filter(|r| r.routable && r.wirelength.is_finite())
         .map(|r| (r.util_limit, r.wirelength))
         .collect();
     if pts.len() < 2 {
-        return 0.0;
+        return None;
     }
     let n = pts.len() as f64;
     let (mx, my) = (
@@ -136,9 +173,9 @@ pub fn tradeoff_correlation(rows: &[ExploreRow]) -> f64 {
         pts.iter().map(|p| (p.1 - my).powi(2)).sum::<f64>().sqrt(),
     );
     if sx == 0.0 || sy == 0.0 {
-        0.0
+        None
     } else {
-        cov / (sx * sy)
+        Some(cov / (sx * sy))
     }
 }
 
@@ -183,11 +220,7 @@ mod tests {
         let snap = Arc::new(crate::coordinator::flow::analyze_design(&g.design).unwrap());
         let warm = explore_warm(&g.design, &dev, &limits, &cfg, &pool, Some(snap)).unwrap();
         for (a, b) in cold.iter().zip(&warm) {
-            assert_eq!(a.util_limit, b.util_limit);
-            assert!(a.max_slot_util == b.max_slot_util || (a.max_slot_util.is_nan() && b.max_slot_util.is_nan()));
-            assert!(a.wirelength == b.wirelength || (a.wirelength.is_nan() && b.wirelength.is_nan()));
-            assert_eq!(a.fmax_mhz, b.fmax_mhz);
-            assert_eq!(a.routable, b.routable);
+            assert!(a.bits_eq(b), "{a:?} vs {b:?}");
         }
     }
 
@@ -214,7 +247,7 @@ mod tests {
         )
         .unwrap();
         for (a, b) in cold.iter().zip(&staged) {
-            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+            assert!(a.bits_eq(b), "{a:?} vs {b:?}");
         }
         // The sweep points share elaboration work through the memo: both
         // points elaborate the same analyzed design and the same final
@@ -229,5 +262,88 @@ mod tests {
         let l = default_limits();
         assert_eq!(l.len(), 10);
         assert!(l[0] >= 0.45 && *l.last().unwrap() <= 0.90);
+    }
+
+    #[test]
+    fn row_for_error_classifies_infeasible_vs_internal() {
+        // A typed infeasibility — even buried under context frames, as
+        // the flow wraps it — becomes an explicit unroutable row.
+        let inf = anyhow::Error::new(crate::floorplan::Infeasible::new(
+            "placement failed: design does not fit",
+        ))
+        .context("floorplan ILP");
+        let row = row_for_error(0.6, inf).unwrap();
+        assert_eq!(row.util_limit, 0.6);
+        assert!(!row.routable);
+        assert!(row.max_slot_util.is_nan() && row.wirelength.is_nan());
+        assert_eq!(row.fmax_mhz, 0.0);
+
+        // Anything else is an internal error and must propagate.
+        let internal = anyhow::anyhow!("lock poisoned");
+        let err = row_for_error(0.6, internal).unwrap_err();
+        assert!(format!("{err}").contains("lock poisoned"));
+    }
+
+    #[test]
+    fn sweep_records_infeasible_point_as_unroutable_row() {
+        // A design whose total resources exceed the device even at the
+        // ILP's 0.90 relaxation ceiling: the flow surfaces a typed
+        // Infeasible, which the sweep records as an explicit unroutable
+        // row instead of erroring.
+        let dev = builtin::by_name("u250").unwrap();
+        let design = crate::testing::oversized_chain(&dev, 12, 0.8);
+        let cfg = FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        };
+        let pool = Pool::new(2);
+        let rows = explore(&design, &dev, &[0.5], &cfg, &pool).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(!rows[0].routable, "{rows:?}");
+        assert!(rows[0].wirelength.is_nan(), "{rows:?}");
+    }
+
+    #[test]
+    fn correlation_is_none_for_degenerate_sweeps() {
+        let row = |util_limit: f64, wirelength: f64, routable: bool| ExploreRow {
+            util_limit,
+            max_slot_util: 0.5,
+            wirelength,
+            fmax_mhz: 300.0,
+            routable,
+        };
+        // Empty, single-point, and all-unroutable sweeps: undefined.
+        assert_eq!(tradeoff_correlation(&[]), None);
+        assert_eq!(tradeoff_correlation(&[row(0.5, 10.0, true)]), None);
+        assert_eq!(
+            tradeoff_correlation(&[row(0.5, f64::NAN, false), row(0.6, f64::NAN, false)]),
+            None
+        );
+        // Zero variance on either axis: undefined, not 0.0.
+        assert_eq!(
+            tradeoff_correlation(&[row(0.5, 10.0, true), row(0.5, 20.0, true)]),
+            None
+        );
+        assert_eq!(
+            tradeoff_correlation(&[row(0.5, 10.0, true), row(0.6, 10.0, true)]),
+            None
+        );
+        // A real anti-correlated sweep still reports a value.
+        let c = tradeoff_correlation(&[row(0.5, 20.0, true), row(0.6, 10.0, true)]).unwrap();
+        assert!(c < 0.0, "{c}");
+    }
+
+    #[test]
+    fn bits_eq_treats_nan_as_equal_and_zero_signs_as_distinct() {
+        let row = |wirelength: f64| ExploreRow {
+            util_limit: 0.5,
+            max_slot_util: f64::NAN,
+            wirelength,
+            fmax_mhz: 0.0,
+            routable: false,
+        };
+        assert!(row(f64::NAN).bits_eq(&row(f64::NAN)));
+        assert!(!row(0.0).bits_eq(&row(-0.0)));
+        assert!(!row(1.0).bits_eq(&row(2.0)));
     }
 }

@@ -30,6 +30,43 @@ use std::fmt;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Stage-4 interconnect-synthesis strategy — one of the DSE knob axes.
+/// A stage-4-only knob: stage 3 never reads it, so floorplan results
+/// (and the floorplan memo key) are shared across strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PipelineStrategy {
+    /// One relay station per die crossing plus one per two plain hops
+    /// (`stages_for_distance`) — the paper's full pipelining.
+    #[default]
+    Full,
+    /// Relay stations only where a channel crosses a die boundary — the
+    /// latency-lean AutoBridge-style policy.
+    DiesOnly,
+    /// Skip stage 4 entirely (floorplan-only flow).
+    Off,
+}
+
+impl PipelineStrategy {
+    /// Canonical CLI / report token.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PipelineStrategy::Full => "full",
+            PipelineStrategy::DiesOnly => "dies",
+            PipelineStrategy::Off => "off",
+        }
+    }
+
+    /// Parse a CLI token (the output of [`Self::as_str`]).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "full" => Ok(PipelineStrategy::Full),
+            "dies" => Ok(PipelineStrategy::DiesOnly),
+            "off" => Ok(PipelineStrategy::Off),
+            other => anyhow::bail!("unknown pipeline strategy '{other}' (full | dies | off)"),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct FlowConfig {
     pub util_limit: f64,
@@ -45,6 +82,8 @@ pub struct FlowConfig {
     /// Use the PJRT-compiled Pallas kernel for SA scoring (falls back to
     /// the CPU oracle when artifacts are missing).
     pub use_pjrt: bool,
+    /// Stage-4 relay-station policy (a DSE axis; default [`PipelineStrategy::Full`]).
+    pub pipeline: PipelineStrategy,
     pub delay: DelayModel,
 }
 
@@ -60,6 +99,7 @@ impl Default for FlowConfig {
                 ..Default::default()
             },
             use_pjrt: false,
+            pipeline: PipelineStrategy::default(),
             delay: DelayModel::default(),
         }
     }
@@ -208,11 +248,19 @@ pub struct FlowWarm<'a> {
     /// Cooperative cancellation hook, polled between stages; returning
     /// `true` aborts the flow with a [`FlowCanceled`] error.
     pub cancel: Option<&'a (dyn Fn() -> bool + Sync)>,
+    /// SA checkpoint from a compatible neighbor (same problem / device /
+    /// util limit, fewer-or-equal steps) to resume refinement from. Per
+    /// [`sa::anneal_resumable`]'s prefix property this changes wall time
+    /// only, never a byte; an incompatible checkpoint falls back cold.
+    pub sa_resume: Option<Arc<sa::SaCheckpoint>>,
     /// The snapshot this run used (computed or passed in) — callers
     /// cache it for the next request on the same design.
     pub harvest_analyzed: Option<Arc<AnalyzedDesign>>,
     /// The cost model this run used, when SA refinement ran.
     pub harvest_cost: Option<Arc<CostModel>>,
+    /// SA checkpoint harvested when refinement actually annealed this
+    /// run (a floorplan-memo hit skips the anneal and leaves this unset).
+    pub harvest_sa: Option<Arc<sa::SaCheckpoint>>,
 }
 
 /// Typed marker error raised when a [`FlowWarm::cancel`] hook fires;
@@ -413,7 +461,8 @@ pub fn run_hlps_warm(
 
     // ---- Stage 4: global interconnect synthesis --------------------------
     let t = Instant::now();
-    let relay_stations = insert_pipelines(design, dev, &nl, &node_slots, &mut ctx)?;
+    let relay_stations =
+        insert_pipelines(design, dev, &nl, &node_slots, cfg.pipeline, &mut ctx)?;
     let stat_pipeline = t.elapsed();
     checkpoint("pipeline")?;
 
@@ -475,7 +524,17 @@ fn floorplan_stage(
     let mut log: Vec<String> = Vec::new();
     let mut ilp_cfg = cfg.ilp.clone();
     ilp_cfg.util_limit = cfg.util_limit;
-    let ilp = autobridge::solve(problem, dev, &ilp_cfg).context("floorplan ILP")?;
+    // The ILP result depends on no SA knob, so it routes through its own
+    // SA-free memo key: DSE points differing only in SA budget miss the
+    // floorplan cache (steps are keyed there) yet share this solve.
+    let ilp = match warm.stage.clone() {
+        Some(memo) => {
+            let key = crate::coordinator::memo::ilp_key(problem, dev, &ilp_cfg);
+            memo.ilp(key, || autobridge::solve(problem, dev, &ilp_cfg))
+                .context("floorplan ILP")?
+        }
+        None => autobridge::solve(problem, dev, &ilp_cfg).context("floorplan ILP")?,
+    };
     let mut unit_slots = ilp.unit_slots.clone();
     let mut evaluator_used: &'static str = "ilp-only";
     if cfg.sa_refine {
@@ -518,7 +577,15 @@ fn floorplan_stage(
         } else {
             "batched lane".to_string()
         };
-        let sa_res = sa::anneal(problem, dev, evaluator, Some(&unit_slots), &cfg.sa);
+        let (sa_res, sa_ck) = sa::anneal_resumable(
+            problem,
+            dev,
+            evaluator,
+            Some(&unit_slots),
+            &cfg.sa,
+            warm.sa_resume.as_deref(),
+        );
+        warm.harvest_sa = sa_ck.map(Arc::new);
         // Accept SA only if it beats the ILP solution on the same metric
         // and stays feasible per-slot.
         let mut chk = CpuEvaluator {
@@ -586,15 +653,21 @@ fn merge_nonpipelinable(problem: &mut Problem, nl: &crate::timing::netlist::Flat
 }
 
 /// Insert relay stations on every pipelinable channel that crosses slots,
-/// one per die crossing plus one per two plain hops, placed along an
-/// L-shaped route.
+/// placed along an L-shaped route. The per-channel stage count follows
+/// `strategy`: [`PipelineStrategy::Full`] adds one per die crossing plus
+/// one per two plain hops, [`PipelineStrategy::DiesOnly`] only the die
+/// crossings, and [`PipelineStrategy::Off`] skips the stage entirely.
 fn insert_pipelines(
     design: &mut Design,
     dev: &VirtualDevice,
     nl: &crate::timing::netlist::FlatNetlist,
     node_slots: &[usize],
+    strategy: PipelineStrategy,
     ctx: &mut PassContext,
 ) -> Result<usize> {
+    if strategy == PipelineStrategy::Off {
+        return Ok(0);
+    }
     let top = design.top.clone();
     let channels = match pipeline_insert::pipelinable_channels(design, &top, &mut ctx.index) {
         Ok(c) => c,
@@ -617,7 +690,11 @@ fn insert_pipelines(
         }
         let route = l_route(dev, s_a, s_b);
         let (man, dies) = dev.slot_dist(s_a, s_b);
-        let stages = pipeline_insert::stages_for_distance(man, dies);
+        let stages = match strategy {
+            PipelineStrategy::Full => pipeline_insert::stages_for_distance(man, dies),
+            PipelineStrategy::DiesOnly => dies as u32,
+            PipelineStrategy::Off => unreachable!("handled above"),
+        };
         if stages == 0 {
             continue;
         }
@@ -900,6 +977,50 @@ mod tests {
             .downcast_ref::<FlowCanceled>()
             .expect("expected FlowCanceled");
         assert_eq!(canceled.stage, "start");
+    }
+
+    /// The pipelining strategy is a stage-4-only knob: stage 3 (and the
+    /// floorplan wirelength) is identical across strategies, while the
+    /// relay-station count shrinks monotonically Full → DiesOnly → Off.
+    #[test]
+    fn pipeline_strategy_scales_relay_stations() {
+        let dev = builtin::by_name("u280").unwrap();
+        let base = FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        };
+        let mut counts = Vec::new();
+        let mut wls = Vec::new();
+        for strategy in [
+            PipelineStrategy::Full,
+            PipelineStrategy::DiesOnly,
+            PipelineStrategy::Off,
+        ] {
+            let mut d = heavy_chain(&dev, 6, 0.40);
+            let cfg = FlowConfig {
+                pipeline: strategy,
+                ..base.clone()
+            };
+            let report = run_hlps(&mut d, &dev, &cfg).unwrap();
+            counts.push(report.relay_stations);
+            wls.push(report.floorplan_wirelength);
+        }
+        assert!(counts[0] > 0, "{counts:?}");
+        assert!(counts[1] <= counts[0], "{counts:?}");
+        assert_eq!(counts[2], 0, "{counts:?}");
+        assert!(wls.iter().all(|&w| w == wls[0]), "{wls:?}");
+    }
+
+    #[test]
+    fn pipeline_strategy_tokens_round_trip() {
+        for s in [
+            PipelineStrategy::Full,
+            PipelineStrategy::DiesOnly,
+            PipelineStrategy::Off,
+        ] {
+            assert_eq!(PipelineStrategy::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(PipelineStrategy::parse("sometimes").is_err());
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //!   reuses the placement verbatim);
 //! * **floorplanning** — the whole stage-3 ILP + SA block, keyed by the
 //!   partitioning problem and every floorplan knob;
+//! * **ILP solves** — an SA-knob-free sub-key of the floorplan block,
+//!   so DSE points that differ only in SA budget share one ILP solve;
 //! * **STA terms** ([`StaTerms`]) — the delta-STA lane: prior per-slot /
 //!   per-edge terms are patched instead of recomputed when the edit's
 //!   cone allows it.
@@ -43,7 +45,7 @@ use crate::timing::delay::DelayModel;
 use crate::timing::netlist::{FlatNetlist, FlattenMemo};
 use crate::timing::sta::{analyze_delta, Placement, StaOptions, StaTerms, TimingReport};
 use crate::util::lru::{CacheStats, Lru};
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -70,6 +72,11 @@ pub struct StageMemo {
     flatten: Mutex<FlattenMemo>,
     placements: Mutex<Lru<u64, Placement>>,
     floorplans: Mutex<Lru<u64, FloorplanEntry>>,
+    /// ILP solves keyed by [`ilp_key`] — a *sub*-key of the floorplan
+    /// block: it excludes every SA knob, so DSE points that differ only
+    /// in SA budget share one ILP solve even though their floorplan
+    /// entries differ.
+    ilps: Mutex<Lru<u64, crate::floorplan::FloorplanResult>>,
     sta: Mutex<Lru<u64, StaTerms>>,
     /// STA runs that reused patched terms (the delta lane).
     sta_delta: AtomicU64,
@@ -90,6 +97,7 @@ impl StageMemo {
             flatten: Mutex::new(FlattenMemo::new(cap.max(1) * 16)),
             placements: Mutex::new(Lru::new(cap)),
             floorplans: Mutex::new(Lru::new(cap)),
+            ilps: Mutex::new(Lru::new(cap)),
             sta: Mutex::new(Lru::new(cap)),
             sta_delta: AtomicU64::new(0),
             sta_full: AtomicU64::new(0),
@@ -175,11 +183,31 @@ impl StageMemo {
         opts: StaOptions,
         role: &'static str,
     ) -> Result<ImplReport> {
-        let placement = self
-            .place(nl, dev, placer)
-            .ok_or_else(|| anyhow!("placement failed: design does not fit"))?;
+        let placement = self.place(nl, dev, placer).ok_or_else(|| {
+            anyhow::Error::new(crate::floorplan::Infeasible::new(
+                "placement failed: design does not fit",
+            ))
+        })?;
         let timing = self.analyze(nl, &placement, dev, dm, opts, role);
         Ok(vivado::assemble_report(nl, dev, placement, timing))
+    }
+
+    /// Memoize one ILP floorplan solve under `key` (from [`ilp_key`]).
+    /// On a miss, `compute` runs and its result is retained; errors are
+    /// returned uncached — in particular a typed
+    /// [`Infeasible`](crate::floorplan::Infeasible) outcome is
+    /// re-derived per call, so every sweep point reports its own exact
+    /// limit in the message.
+    pub fn ilp<F>(&self, key: u64, compute: F) -> Result<crate::floorplan::FloorplanResult>
+    where
+        F: FnOnce() -> Result<crate::floorplan::FloorplanResult>,
+    {
+        if let Some(hit) = lock(&self.ilps).get(&key) {
+            return Ok(hit);
+        }
+        let r = compute()?;
+        lock(&self.ilps).put(key, r.clone());
+        Ok(r)
     }
 
     /// Memoize one stage-3 floorplanning block under `key` (from
@@ -209,6 +237,7 @@ impl StageMemo {
             ("flat_netlists", netlists),
             ("placements", lock(&self.placements).stats()),
             ("floorplans", lock(&self.floorplans).stats()),
+            ("ilps", lock(&self.ilps).stats()),
             (
                 "sta_delta",
                 CacheStats {
@@ -277,13 +306,9 @@ fn sta_key(nl: &FlatNetlist, dev: &VirtualDevice, opts: StaOptions, role: &'stat
     f.finish()
 }
 
-/// Fingerprint of one stage-3 floorplanning instance: the partitioning
-/// problem (units, pins, edges), the device, and every knob the block
-/// reads (`util_limit`, ILP config, SA refinement + full SA config,
-/// evaluator selection).
-pub fn floorplan_key(problem: &Problem, dev: &VirtualDevice, cfg: &super::flow::FlowConfig) -> u64 {
-    let mut f = Fnv::new();
-    f.write_u64(dev.fingerprint());
+/// Hash the partitioning problem (units, pins, node sets, edges,
+/// die weight) — shared by [`floorplan_key`] and [`ilp_key`].
+fn hash_problem(f: &mut Fnv, problem: &Problem) {
     f.write_f64(problem.die_weight);
     f.write_usize(problem.units.len());
     for u in &problem.units {
@@ -310,6 +335,22 @@ pub fn floorplan_key(problem: &Problem, dev: &VirtualDevice, cfg: &super::flow::
     for e in &problem.edges {
         f.write_usize(e.a).write_usize(e.b).write_u64(e.width);
     }
+}
+
+/// Fingerprint of one stage-3 floorplanning instance: the partitioning
+/// problem (units, pins, edges), the device, and every knob the block
+/// reads (`util_limit`, ILP config, SA refinement + full SA config,
+/// evaluator selection).
+///
+/// Deliberately *excludes*
+/// [`PipelineStrategy`](crate::coordinator::flow::PipelineStrategy):
+/// stage 3 never reads it (relay-station strategy is a stage-4 knob), so
+/// DSE points differing only in pipelining strategy share one floorplan
+/// entry.
+pub fn floorplan_key(problem: &Problem, dev: &VirtualDevice, cfg: &super::flow::FlowConfig) -> u64 {
+    let mut f = Fnv::new();
+    f.write_u64(dev.fingerprint());
+    hash_problem(&mut f, problem);
     f.write_f64(cfg.util_limit);
     f.write_f64(cfg.ilp.util_limit)
         .write_usize(cfg.ilp.max_nodes)
@@ -324,6 +365,28 @@ pub fn floorplan_key(problem: &Problem, dev: &VirtualDevice, cfg: &super::flow::
         .write_f64(cfg.sa.cooling)
         .write_usize(cfg.sa.workers);
     f.write_bool(cfg.use_pjrt);
+    f.finish()
+}
+
+/// Fingerprint of one ILP solve: the problem, the device, and exactly
+/// the [`IlpFpConfig`](crate::floorplan::IlpFpConfig) knobs
+/// [`crate::floorplan::autobridge::solve`] reads. No SA knob enters, so
+/// sweep points that differ only in SA budget / seed / population key to
+/// the same ILP result (the ILP never sees SA). A salt separates this
+/// key space from [`floorplan_key`]'s.
+pub fn ilp_key(
+    problem: &Problem,
+    dev: &VirtualDevice,
+    ilp: &crate::floorplan::IlpFpConfig,
+) -> u64 {
+    let mut f = Fnv::new();
+    f.write_str("ilp");
+    f.write_u64(dev.fingerprint());
+    hash_problem(&mut f, problem);
+    f.write_f64(ilp.util_limit)
+        .write_usize(ilp.max_nodes)
+        .write_usize(ilp.max_units)
+        .write_f64(ilp.sll_budget_frac);
     f.finish()
 }
 
@@ -437,6 +500,74 @@ mod tests {
             assert_eq!(got.log, entry.log);
         }
         assert_eq!(computed, 1);
+    }
+
+    #[test]
+    fn ilp_solves_memoize_by_key_and_skip_errors() {
+        let memo = StageMemo::new(8);
+        let res = crate::floorplan::FloorplanResult {
+            unit_slots: vec![0, 1],
+            wirelength: 3.0,
+            optimal: true,
+        };
+        let mut computed = 0;
+        for _ in 0..3 {
+            let got = memo
+                .ilp(7, || {
+                    computed += 1;
+                    Ok(res.clone())
+                })
+                .unwrap();
+            assert_eq!(got.unit_slots, res.unit_slots);
+        }
+        assert_eq!(computed, 1);
+        let mut attempts = 0;
+        for _ in 0..2 {
+            let e = memo.ilp(8, || {
+                attempts += 1;
+                Err(anyhow::anyhow!("infeasible attempt"))
+            });
+            assert!(e.is_err());
+        }
+        assert_eq!(attempts, 2, "errors must never be cached");
+    }
+
+    #[test]
+    fn ilp_key_ignores_sa_knobs_floorplan_key_does_not() {
+        let dev = builtin::by_name("u250").unwrap();
+        let problem = crate::floorplan::Problem {
+            units: vec![crate::floorplan::Unit {
+                nodes: vec![0],
+                resources: Resources::new(1000.0, 1000.0, 0.0, 0.0, 0.0),
+                fixed_slot: None,
+                name: "u0".into(),
+            }],
+            edges: vec![],
+            die_weight: 3.0,
+        };
+        let mut a = crate::coordinator::flow::FlowConfig::default();
+        let mut b = a.clone();
+        b.sa.steps = a.sa.steps + 1;
+        let mut ia = a.ilp.clone();
+        ia.util_limit = a.util_limit;
+        let mut ib = b.ilp.clone();
+        ib.util_limit = b.util_limit;
+        assert_eq!(ilp_key(&problem, &dev, &ia), ilp_key(&problem, &dev, &ib));
+        assert_ne!(
+            floorplan_key(&problem, &dev, &a),
+            floorplan_key(&problem, &dev, &b)
+        );
+        // A util_limit change must miss both caches.
+        b = a.clone();
+        b.util_limit = 0.61;
+        ib = b.ilp.clone();
+        ib.util_limit = b.util_limit;
+        a.ilp.util_limit = a.util_limit;
+        assert_ne!(ilp_key(&problem, &dev, &a.ilp), ilp_key(&problem, &dev, &ib));
+        assert_ne!(
+            floorplan_key(&problem, &dev, &a),
+            floorplan_key(&problem, &dev, &b)
+        );
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! L3 coordination: the integrated four-stage HLPS flow (§3.4), the
-//! floorplan explorer (§4.2), the parallel-synthesis driver (§4.3), and
-//! the evaluation orchestration regenerating the paper's tables/figures.
+//! floorplan explorer (§4.2), the multi-dimensional design-space
+//! explorer ([`dse`]), the parallel-synthesis driver (§4.3), and the
+//! evaluation orchestration regenerating the paper's tables/figures.
 //!
 //! All batch surfaces — the Table 2 row matrix ([`report::table2`]), the
 //! Figure 12 utilization sweep ([`explore::explore`]) and the Figure 13
@@ -9,6 +10,7 @@
 //! input order, so every table and figure is deterministic for a given
 //! seed regardless of the worker count.
 
+pub mod dse;
 pub mod explore;
 pub mod flow;
 pub mod memo;

@@ -109,6 +109,58 @@ impl VirtualDevice {
         f.finish()
     }
 
+    /// Coarsen the slot grid by merging groups of `factor` horizontally
+    /// adjacent columns into one slot each — the DSE's pblock-granularity
+    /// knob. Capacities sum; inter-slot wire capacities scale by `factor`
+    /// (each merged boundary aggregates `factor` old columns' wires).
+    /// Die boundaries are row-based, so column merging never crosses a
+    /// die. `factor == 1` returns the device unchanged (same name, same
+    /// [`fingerprint`](Self::fingerprint)); any coarser grid gets a
+    /// `-g{factor}` name suffix so memo keys never collide across grids.
+    pub fn coarsen_columns(&self, factor: usize) -> Result<VirtualDevice> {
+        if factor == 0 {
+            return Err(anyhow!("grid factor must be >= 1"));
+        }
+        if factor == 1 {
+            return Ok(self.clone());
+        }
+        if self.cols % factor != 0 {
+            return Err(anyhow!(
+                "grid factor {factor} does not divide {} columns of '{}'",
+                self.cols,
+                self.name
+            ));
+        }
+        let cols = self.cols / factor;
+        let mut slots = Vec::with_capacity(cols * self.rows);
+        for y in 0..self.rows {
+            for x in 0..cols {
+                let mut capacity = Resources::ZERO;
+                for dx in 0..factor {
+                    capacity = capacity.add(&self.slot(x * factor + dx, y).capacity);
+                }
+                slots.push(Slot {
+                    x,
+                    y,
+                    pblock: format!("SLOT_X{x}Y{y}"),
+                    capacity,
+                    die: self.slot(x * factor, y).die,
+                });
+            }
+        }
+        Ok(VirtualDevice {
+            name: format!("{}-g{factor}", self.name),
+            part: self.part.clone(),
+            cols,
+            rows: self.rows,
+            slots,
+            die_rows: self.die_rows.clone(),
+            sll_per_column: self.sll_per_column * factor as u64,
+            hwire_capacity: self.hwire_capacity * factor as u64,
+            vwire_capacity: self.vwire_capacity * factor as u64,
+        })
+    }
+
     /// Flattened f32 distance matrix (S×S) in row-major order, where
     /// dist = manhattan + `die_weight` × die_crossings. Fed to the
     /// PJRT-compiled floorplan-cost kernel.
@@ -303,5 +355,38 @@ mod tests {
         let t = d.total_capacity();
         assert_eq!(t.lut, 800e3);
         assert_eq!(t.dsp, 12000.0);
+    }
+
+    #[test]
+    fn coarsen_columns_merges_capacity_and_scales_wires() {
+        let d = dev();
+        let c = d.coarsen_columns(2).unwrap();
+        assert_eq!(c.name, "test-g2");
+        assert_eq!((c.cols, c.rows), (1, 4));
+        assert_eq!(c.num_slots(), 4);
+        assert_eq!(c.slot(0, 3).pblock, "SLOT_X0Y3");
+        // Capacities sum; the device total is preserved exactly.
+        assert_eq!(c.slot(0, 0).capacity.lut, 200e3);
+        assert_eq!(c.total_capacity(), d.total_capacity());
+        // Die structure is row-based and survives column merging.
+        assert_eq!(c.die_rows, d.die_rows);
+        assert_eq!(c.slot(0, 2).die, 1);
+        // Merged boundaries aggregate the old columns' wires.
+        assert_eq!(c.sll_per_column, 2 * d.sll_per_column);
+        assert_eq!(c.hwire_capacity, 2 * d.hwire_capacity);
+        assert_eq!(c.vwire_capacity, 2 * d.vwire_capacity);
+        // Memo keys must never collide across grids.
+        assert_ne!(c.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn coarsen_columns_identity_and_errors() {
+        let d = dev();
+        let same = d.coarsen_columns(1).unwrap();
+        assert_eq!(same, d);
+        assert_eq!(same.fingerprint(), d.fingerprint());
+        assert!(d.coarsen_columns(0).is_err());
+        // 2 columns don't split into groups of 3.
+        assert!(d.coarsen_columns(3).is_err());
     }
 }

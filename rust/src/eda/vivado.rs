@@ -13,7 +13,7 @@ use crate::ir::core::Design;
 use crate::timing::delay::DelayModel;
 use crate::timing::netlist::{flatten, FlatNetlist};
 use crate::timing::sta::{Placement, TimingReport};
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 /// Result of a full implementation run.
 #[derive(Debug, Clone)]
@@ -60,8 +60,13 @@ pub fn implement_netlist_with(
     dm: &DelayModel,
     opts: crate::timing::sta::StaOptions,
 ) -> Result<ImplReport> {
-    let placement =
-        place(nl, dev, placer).ok_or_else(|| anyhow!("placement failed: design does not fit"))?;
+    let placement = place(nl, dev, placer).ok_or_else(|| {
+        // Typed infeasibility (legacy message bytes): the design simply
+        // does not fit, which sweeps record rather than propagate.
+        anyhow::Error::new(crate::floorplan::Infeasible::new(
+            "placement failed: design does not fit",
+        ))
+    })?;
     let timing = crate::timing::sta::analyze_with(nl, &placement, dev, dm, opts);
     Ok(assemble_report(nl, dev, placement, timing))
 }

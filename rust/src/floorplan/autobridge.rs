@@ -64,10 +64,11 @@ pub fn solve(
         attempt.util_limit = limit;
         match solve_at(problem, dev, &attempt) {
             Ok(r) => return Ok(r),
-            Err(e) if limit + 0.05 <= 0.90 + 1e-9 => {
-                log::debug!("floorplan at util {limit:.2} failed ({e}); relaxing");
+            Err(_) if limit + 0.05 <= 0.90 + 1e-9 => {
                 limit += 0.05;
             }
+            // Still failing at the router's give-up point: surface the
+            // last attempt's (typed-infeasible) error.
             Err(e) => return Err(e),
         }
     }
@@ -201,10 +202,13 @@ pub fn solve_at(
         Status::Optimal | Status::Limit if sol.objective.is_finite() => {}
         Status::Unbounded => return Err(anyhow!("floorplan ILP unbounded (bug)")),
         _ => {
-            return Err(anyhow!(
+            // Typed so sweeps can classify "design does not fit at this
+            // limit" (a data point) apart from internal flow errors. The
+            // message bytes are the historical ones.
+            return Err(anyhow::Error::new(super::Infeasible::new(format!(
                 "floorplan ILP infeasible (or budget exhausted with no incumbent) at util_limit {}",
                 cfg.util_limit
-            ))
+            ))))
         }
     }
     let mut coarse_slots = vec![0usize; nu];
@@ -379,7 +383,17 @@ mod tests {
             max_nodes: 2_000,
             ..Default::default()
         };
-        assert!(solve_at(&p, &dev, &cfg).is_err());
+        let err = solve_at(&p, &dev, &cfg).unwrap_err();
+        // Typed as design infeasibility (the legacy message bytes), so
+        // sweeps can classify it as an unroutable data point.
+        assert!(
+            err.downcast_ref::<crate::floorplan::Infeasible>().is_some(),
+            "{err:#}"
+        );
+        assert!(
+            format!("{err}").starts_with("floorplan ILP infeasible"),
+            "{err}"
+        );
     }
 
     #[test]

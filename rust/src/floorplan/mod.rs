@@ -13,4 +13,38 @@ pub use cost::{
     BatchEvaluator, CostModel, CpuEvaluator, DenseCpuEvaluator, FullRescore, Proposal, ScoredState,
 };
 pub use problem::{Problem, Unit, UnitEdge};
-pub use sa::{anneal, SaConfig, SaResult};
+pub use sa::{anneal, anneal_resumable, cmp_cost_f64, SaCheckpoint, SaConfig, SaResult};
+
+use std::fmt;
+
+/// Typed marker for *design infeasibility*: the floorplan ILP proved (or
+/// budget-exhausted into) "this design does not fit this device at this
+/// limit", or the placer could not fit the netlist at all. Sweeps
+/// ([`crate::coordinator::explore`], [`crate::coordinator::dse`])
+/// downcast to this to record an explicit unroutable data point, while
+/// every *other* error — a genuine flow bug — propagates as `Err`.
+///
+/// The `Display` text is byte-identical to the untyped `anyhow!` strings
+/// it replaced, so daemon error-message parity and log goldens are
+/// unchanged.
+#[derive(Debug, Clone)]
+pub struct Infeasible {
+    /// Human-readable reason, rendered verbatim.
+    pub reason: String,
+}
+
+impl Infeasible {
+    pub fn new(reason: impl Into<String>) -> Self {
+        Infeasible {
+            reason: reason.into(),
+        }
+    }
+}
+
+impl fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.reason)
+    }
+}
+
+impl std::error::Error for Infeasible {}

@@ -69,6 +69,7 @@ pub struct SaResult {
 }
 
 /// Everything one chain learned, merged deterministically afterwards.
+#[derive(Debug, Clone)]
 struct ChainOut {
     best: Vec<usize>,
     best_cost: f32,
@@ -78,6 +79,55 @@ struct ChainOut {
     best_step: usize,
     trace: Vec<f32>,
     evaluated: usize,
+}
+
+/// Full per-chain loop state at a step boundary — everything a chain
+/// needs to resume *bit-exactly*: the RNG mid-stream, the incrementally
+/// maintained [`ScoredState`] (stored, never rebuilt from the assignment
+/// — a rebuild is only bit-stable on exact-friendly inputs), the
+/// accepted cost, the cooled temperature (stored, not recomputed — a
+/// `powi` shortcut need not bit-match the iterative `temp *= cooling`
+/// product), and the running [`ChainOut`].
+#[derive(Debug, Clone)]
+struct ChainState {
+    rng: Rng,
+    state: ScoredState,
+    cost: f32,
+    temp: f64,
+    steps_done: usize,
+    out: ChainOut,
+}
+
+/// Resumable snapshot of an incremental-lane anneal at a step boundary.
+///
+/// Chains are pure functions of `(seed, model, initial)`, so a run with
+/// fewer steps is a bit-exact *prefix* of a longer run — which makes
+/// "warm-start from a neighboring sweep point" expressible without
+/// breaking determinism: resuming a checkpoint taken at `T1` steps up to
+/// `T2 > T1` produces byte-identical results to a cold `T2`-step run,
+/// paying only for the `T2 − T1` remainder.
+///
+/// The embedded key covers everything the annealer itself can see
+/// (problem, slot count, initial assignment, every [`SaConfig`] knob
+/// except `steps` and `workers` — both pure wall-clock knobs); an
+/// incompatible checkpoint is silently ignored (cold fallback). The one
+/// thing the key *cannot* cover is the evaluator's cost model, which is
+/// the caller's contract: resume only against the same model (same
+/// design, device, utilization limit) — exactly what a steps-only sweep
+/// axis guarantees.
+#[derive(Debug, Clone)]
+pub struct SaCheckpoint {
+    key: u64,
+    steps_done: usize,
+    chains: Vec<ChainState>,
+}
+
+impl SaCheckpoint {
+    /// Steps the checkpointed run had completed — resumable to any
+    /// target ≥ this.
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
+    }
 }
 
 /// Shared read-only context of the incremental lanes.
@@ -100,6 +150,30 @@ pub fn anneal(
     initial: Option<&[usize]>,
     cfg: &SaConfig,
 ) -> SaResult {
+    anneal_resumable(problem, dev, evaluator, initial, cfg, None).0
+}
+
+/// [`anneal`] with checkpoint/resume along the *steps* axis.
+///
+/// When `resume` is a compatible [`SaCheckpoint`] (same problem, initial
+/// assignment, and every config knob except `steps`/`workers`, taken at
+/// `steps_done ≤ cfg.steps`), every chain picks up exactly where it
+/// left off and runs only the remaining steps — byte-identical to a
+/// cold `cfg.steps` run, by the prefix property of deterministic chains.
+/// An incompatible or absent checkpoint runs cold from step 0.
+///
+/// Returns the result plus a checkpoint at `cfg.steps` for the next
+/// resume. The batched lane (evaluators without [`BatchEvaluator::
+/// cost_model`]) has no mid-run state hand-off: it ignores `resume` and
+/// returns `None`.
+pub fn anneal_resumable(
+    problem: &Problem,
+    dev: &VirtualDevice,
+    evaluator: &mut dyn BatchEvaluator,
+    initial: Option<&[usize]>,
+    cfg: &SaConfig,
+    resume: Option<&SaCheckpoint>,
+) -> (SaResult, Option<SaCheckpoint>) {
     let ns = dev.num_slots();
     let movable: Vec<usize> = (0..problem.units.len())
         .filter(|&u| problem.units[u].fixed_slot.is_none())
@@ -107,73 +181,128 @@ pub fn anneal(
     // Clone the sparse scoring view out of the evaluator so it stays
     // callable (the serial delta lane keeps scoring through
     // `evaluate_deltas` on it) — O(m + E), the dense matrix is skipped.
-    let model = evaluator.cost_model().map(CostModel::sparse_clone);
-    if let Some(model) = model {
-        debug_assert_eq!(model.m_real, problem.units.len(), "model/problem mismatch");
-        let ctx = ChainCtx {
-            problem,
-            model: &model,
-            movable: &movable,
-            cfg,
-            ns,
-        };
-        if cfg.workers.max(1) > 1 {
-            return anneal_incremental(&ctx, initial);
+    let model = match evaluator.cost_model().map(CostModel::sparse_clone) {
+        Some(m) => m,
+        None => {
+            let r = anneal_batched(problem, evaluator, &movable, initial, cfg, ns);
+            return (r, None);
         }
-        return anneal_delta_serial(&ctx, evaluator, initial);
-    }
-    anneal_batched(problem, evaluator, &movable, initial, cfg, ns)
-}
-
-/// The parallel fast lane (`workers > 1`): chains are independent pool
-/// jobs scored through the shared [`score_deltas_into`] delta routine —
-/// per-evaluator `evaluate_deltas` overrides are bypassed here, which is
-/// sound exactly because `cost_model()` promises scoring is a pure
-/// function of the model (the 1-vs-N determinism test pins it).
-fn anneal_incremental(ctx: &ChainCtx, initial: Option<&[usize]>) -> SaResult {
-    let population = ctx.cfg.population.max(1);
-    let pool = Pool::new(ctx.cfg.workers.max(1));
-    let outs = pool.par_map((0..population).collect::<Vec<usize>>(), |chain| {
-        let init = if chain == 0 { initial } else { None };
-        let mut score = |st: &mut ScoredState, props: &[Proposal], out: &mut Vec<f32>| {
-            score_deltas_into(ctx.model, st, props, out);
-        };
-        run_chain(ctx, init, chain, &mut score)
-    });
-    merge(outs)
-}
-
-/// The serial fast lane (the default, `workers <= 1`): same per-chain
-/// run, but every scoring round goes through the evaluator's
-/// [`BatchEvaluator::evaluate_deltas`] — the trait's incremental entry
-/// point — so evaluator overrides stay on the hot path.
-fn anneal_delta_serial(
-    ctx: &ChainCtx,
-    evaluator: &mut dyn BatchEvaluator,
-    initial: Option<&[usize]>,
-) -> SaResult {
-    let population = ctx.cfg.population.max(1);
-    let outs: Vec<ChainOut> = (0..population)
-        .map(|chain| {
-            let init = if chain == 0 { initial } else { None };
-            let mut score = |st: &mut ScoredState, props: &[Proposal], out: &mut Vec<f32>| {
-                evaluator.evaluate_deltas(st, props, out);
-            };
-            run_chain(ctx, init, chain, &mut score)
+    };
+    debug_assert_eq!(model.m_real, problem.units.len(), "model/problem mismatch");
+    let ctx = ChainCtx {
+        problem,
+        model: &model,
+        movable: &movable,
+        cfg,
+        ns,
+    };
+    let population = cfg.population.max(1);
+    let key = resume_key(problem, cfg, initial, ns);
+    let seeds: Option<&[ChainState]> = resume
+        .filter(|ck| {
+            ck.key == key && ck.steps_done <= cfg.steps && ck.chains.len() == population
         })
-        .collect();
-    merge(outs)
+        .map(|ck| ck.chains.as_slice());
+
+    let finals: Vec<ChainState> = if cfg.workers.max(1) > 1 {
+        // The parallel fast lane (`workers > 1`): chains are independent
+        // pool jobs scored through the shared [`score_deltas_into`]
+        // delta routine — per-evaluator `evaluate_deltas` overrides are
+        // bypassed here, which is sound exactly because `cost_model()`
+        // promises scoring is a pure function of the model (the 1-vs-N
+        // determinism test pins it).
+        let pool = Pool::new(cfg.workers.max(1));
+        pool.par_map((0..population).collect::<Vec<usize>>(), |chain| {
+            let mut cs = match seeds {
+                Some(cks) => cks[chain].clone(),
+                None => chain_start(&ctx, if chain == 0 { initial } else { None }, chain),
+            };
+            let mut score = |st: &mut ScoredState, props: &[Proposal], out: &mut Vec<f32>| {
+                score_deltas_into(ctx.model, st, props, out);
+            };
+            chain_run_to(&ctx, &mut cs, cfg.steps, &mut score);
+            cs
+        })
+    } else {
+        // The serial fast lane (the default, `workers <= 1`): same
+        // per-chain run, but every scoring round goes through the
+        // evaluator's [`BatchEvaluator::evaluate_deltas`] — the trait's
+        // incremental entry point — so evaluator overrides stay on the
+        // hot path.
+        (0..population)
+            .map(|chain| {
+                let mut cs = match seeds {
+                    Some(cks) => cks[chain].clone(),
+                    None => chain_start(&ctx, if chain == 0 { initial } else { None }, chain),
+                };
+                let mut score = |st: &mut ScoredState, props: &[Proposal], out: &mut Vec<f32>| {
+                    evaluator.evaluate_deltas(st, props, out);
+                };
+                chain_run_to(&ctx, &mut cs, cfg.steps, &mut score);
+                cs
+            })
+            .collect()
+    };
+    let checkpoint = SaCheckpoint {
+        key,
+        steps_done: cfg.steps,
+        chains: finals.clone(),
+    };
+    let outs: Vec<ChainOut> = finals.into_iter().map(|cs| cs.out).collect();
+    (merge(outs), Some(checkpoint))
 }
 
-/// One chain, start to finish: seeded stream, persistent state, proposal
-/// scoring through `score` (a delta-path scorer) with one reusable flat
-/// scratch buffer.
-fn run_chain(
-    ctx: &ChainCtx,
-    initial: Option<&[usize]>,
-    chain: usize,
-    score: &mut dyn FnMut(&mut ScoredState, &[Proposal], &mut Vec<f32>),
-) -> ChainOut {
+/// Fingerprint of everything a chain's trajectory depends on that the
+/// annealer can see — the [`SaCheckpoint`] validity key. `steps` and
+/// `workers` are deliberately excluded (the resume axis and a pure
+/// wall-clock knob respectively).
+fn resume_key(problem: &Problem, cfg: &SaConfig, initial: Option<&[usize]>, ns: usize) -> u64 {
+    let mut f = crate::ir::digest::Fnv::new();
+    f.write_usize(ns);
+    f.write_u64(cfg.seed)
+        .write_usize(cfg.population)
+        .write_usize(cfg.proposals)
+        .write_f64(cfg.t0)
+        .write_f64(cfg.cooling);
+    f.write_f64(problem.die_weight);
+    f.write_usize(problem.units.len());
+    for u in &problem.units {
+        f.write_f64(u.resources.lut)
+            .write_f64(u.resources.ff)
+            .write_f64(u.resources.bram)
+            .write_f64(u.resources.dsp)
+            .write_f64(u.resources.uram);
+        match u.fixed_slot {
+            Some(s) => {
+                f.write_bool(true);
+                f.write_usize(s);
+            }
+            None => {
+                f.write_bool(false);
+            }
+        }
+    }
+    f.write_usize(problem.edges.len());
+    for e in &problem.edges {
+        f.write_usize(e.a).write_usize(e.b).write_u64(e.width);
+    }
+    match initial {
+        Some(init) => {
+            f.write_bool(true);
+            f.write_usize(init.len());
+            for &s in init {
+                f.write_usize(s);
+            }
+        }
+        None => {
+            f.write_bool(false);
+        }
+    }
+    f.finish()
+}
+
+/// Start one chain: seeded stream, initial assignment, scored state.
+fn chain_start(ctx: &ChainCtx, initial: Option<&[usize]>, chain: usize) -> ChainState {
     let (cfg, model, ns) = (ctx.cfg, ctx.model, ctx.ns);
     let mut rng = Rng::stream(cfg.seed, chain as u64);
     let assign: Vec<usize> = match initial {
@@ -183,43 +312,64 @@ fn run_chain(
             .collect(),
     };
     let mut state = ScoredState::new(model, assign);
-    let mut cost = state.cost(model);
-    let mut out = ChainOut {
+    let cost = state.cost(model);
+    let out = ChainOut {
         best: state.assignment().to_vec(),
         best_cost: cost,
         best_step: 0,
         trace: Vec::with_capacity(cfg.steps),
         evaluated: 1,
     };
-    if ctx.movable.is_empty() || cfg.proposals == 0 {
-        return out;
+    ChainState {
+        rng,
+        state,
+        cost,
+        temp: cfg.t0,
+        steps_done: 0,
+        out,
     }
-    let mut temp = cfg.t0;
+}
+
+/// Advance one chain from `cs.steps_done` to `target`: persistent state,
+/// proposal scoring through `score` (a delta-path scorer) with one
+/// reusable flat scratch buffer. Cold runs and resumed runs share this
+/// single loop body — the structural reason a resumed run is bit-exact.
+fn chain_run_to(
+    ctx: &ChainCtx,
+    cs: &mut ChainState,
+    target: usize,
+    score: &mut dyn FnMut(&mut ScoredState, &[Proposal], &mut Vec<f32>),
+) {
+    let (cfg, model, ns) = (ctx.cfg, ctx.model, ctx.ns);
+    if ctx.movable.is_empty() || cfg.proposals == 0 {
+        cs.steps_done = target;
+        return;
+    }
     let mut scratch: Vec<Proposal> = Vec::with_capacity(cfg.proposals);
     let mut costs: Vec<f32> = Vec::with_capacity(cfg.proposals);
-    for step in 0..cfg.steps {
+    for step in cs.steps_done..target {
         scratch.clear();
         for _ in 0..cfg.proposals {
-            scratch.push(propose(&mut rng, state.assignment(), ctx.movable, ns));
+            scratch.push(propose(&mut cs.rng, cs.state.assignment(), ctx.movable, ns));
         }
-        score(&mut state, &scratch, &mut costs);
-        out.evaluated += costs.len();
+        score(&mut cs.state, &scratch, &mut costs);
+        cs.out.evaluated += costs.len();
         let pick = pick_first_min(&costs, 0, costs.len());
-        let delta = (costs[pick] - cost) as f64;
-        if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
-            state.apply(model, &scratch[pick]);
-            state.commit();
-            cost = costs[pick];
-            if cost < out.best_cost {
-                out.best_cost = cost;
-                out.best.copy_from_slice(state.assignment());
-                out.best_step = step + 1;
+        let delta = (costs[pick] - cs.cost) as f64;
+        if delta <= 0.0 || cs.rng.f64() < (-delta / cs.temp).exp() {
+            cs.state.apply(model, &scratch[pick]);
+            cs.state.commit();
+            cs.cost = costs[pick];
+            if cs.cost < cs.out.best_cost {
+                cs.out.best_cost = cs.cost;
+                cs.out.best.copy_from_slice(cs.state.assignment());
+                cs.out.best_step = step + 1;
             }
         }
-        temp *= cfg.cooling;
-        out.trace.push(out.best_cost);
+        cs.temp *= cfg.cooling;
+        cs.out.trace.push(cs.out.best_cost);
     }
-    out
+    cs.steps_done = target;
 }
 
 /// The batched lane (dense oracle / PJRT): one `evaluate` launch per
@@ -341,6 +491,21 @@ fn distinct_pair(rng: &mut Rng, n: usize) -> (usize, usize) {
 /// finite cost (and NaNs equal to each other), so a poisoned evaluator
 /// row can neither panic the explorer nor win a comparison.
 fn cmp_cost(a: f32, b: f32) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (false, false) => a.partial_cmp(&b).unwrap(),
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+    }
+}
+
+/// `f64` twin of the chain cost order, public because the sweep layers
+/// reuse it: [`crate::coordinator::explore`]'s canonical row equality
+/// and [`crate::coordinator::dse`]'s Pareto dominance both rank every
+/// NaN sentinel after (worse than) every finite metric, with NaNs equal
+/// to each other — the same total order the annealer applies to f32
+/// costs.
+pub fn cmp_cost_f64(a: f64, b: f64) -> Ordering {
     match (a.is_nan(), b.is_nan()) {
         (false, false) => a.partial_cmp(&b).unwrap(),
         (true, true) => Ordering::Equal,
@@ -511,6 +676,146 @@ mod tests {
                 assert_eq!(seen[a][b], a != b, "pair ({a},{b}) coverage");
             }
         }
+    }
+
+    /// A run resumed from a checkpoint at T1 steps must be bit-identical
+    /// to a cold run at T2 > T1 — the prefix property that makes DSE
+    /// warm-starts a pure wall-clock win.
+    #[test]
+    fn resume_matches_cold_bit_for_bit() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = chain_problem(12);
+        let cold_cfg = SaConfig {
+            steps: 200,
+            ..Default::default()
+        };
+        let mut ev = evaluator(&p, &dev);
+        let cold = anneal(&p, &dev, &mut ev, None, &cold_cfg);
+
+        let short_cfg = SaConfig {
+            steps: 80,
+            ..Default::default()
+        };
+        let mut ev1 = evaluator(&p, &dev);
+        let (short, ck) = anneal_resumable(&p, &dev, &mut ev1, None, &short_cfg, None);
+        let ck = ck.expect("incremental lane must checkpoint");
+        assert_eq!(ck.steps_done(), 80);
+        assert_eq!(short.trace.len(), 80);
+        // The short run is itself a bit-exact prefix of the cold run.
+        assert_eq!(short.trace[..], cold.trace[..80]);
+
+        let mut ev2 = evaluator(&p, &dev);
+        let (resumed, ck2) = anneal_resumable(&p, &dev, &mut ev2, None, &cold_cfg, Some(&ck));
+        assert_eq!(resumed.best, cold.best);
+        assert_eq!(resumed.best_cost.to_bits(), cold.best_cost.to_bits());
+        assert_eq!(resumed.evaluated, cold.evaluated);
+        assert_eq!(
+            resumed.trace.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+            cold.trace.iter().map(|c| c.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(ck2.unwrap().steps_done(), 200);
+    }
+
+    /// Worker count is a pure wall-clock knob across a resume boundary
+    /// too: checkpoint serially, resume on 4 workers, equal bytes.
+    #[test]
+    fn resume_across_worker_counts_is_identical() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = chain_problem(10);
+        let cold_cfg = SaConfig {
+            steps: 150,
+            ..Default::default()
+        };
+        let mut ev = evaluator(&p, &dev);
+        let cold = anneal(&p, &dev, &mut ev, None, &cold_cfg);
+
+        let mut ev1 = evaluator(&p, &dev);
+        let (_, ck) = anneal_resumable(
+            &p,
+            &dev,
+            &mut ev1,
+            None,
+            &SaConfig {
+                steps: 60,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut ev2 = evaluator(&p, &dev);
+        let (resumed, _) = anneal_resumable(
+            &p,
+            &dev,
+            &mut ev2,
+            None,
+            &SaConfig {
+                steps: 150,
+                workers: 4,
+                ..Default::default()
+            },
+            ck.as_ref(),
+        );
+        assert_eq!(resumed.best, cold.best);
+        assert_eq!(resumed.best_cost.to_bits(), cold.best_cost.to_bits());
+        assert_eq!(resumed.trace, cold.trace);
+        assert_eq!(resumed.evaluated, cold.evaluated);
+    }
+
+    /// An incompatible checkpoint (different seed / knobs / initial) is
+    /// ignored: the run falls back to a cold start.
+    #[test]
+    fn incompatible_checkpoint_falls_back_cold() {
+        let dev = builtin::by_name("u250").unwrap();
+        let p = chain_problem(8);
+        let mut ev = evaluator(&p, &dev);
+        let cfg = SaConfig {
+            steps: 90,
+            ..Default::default()
+        };
+        let cold = anneal(&p, &dev, &mut ev, None, &cfg);
+
+        let other = SaConfig {
+            steps: 40,
+            seed: 0xBAD,
+            ..Default::default()
+        };
+        let mut ev1 = evaluator(&p, &dev);
+        let (_, foreign) = anneal_resumable(&p, &dev, &mut ev1, None, &other, None);
+        let mut ev2 = evaluator(&p, &dev);
+        let (r, _) = anneal_resumable(&p, &dev, &mut ev2, None, &cfg, foreign.as_ref());
+        assert_eq!(r.best, cold.best);
+        assert_eq!(r.best_cost.to_bits(), cold.best_cost.to_bits());
+        assert_eq!(r.trace, cold.trace);
+
+        // A checkpoint *ahead* of the target (steps_done > steps) is
+        // also rejected; one exactly at the target resumes as a no-op.
+        let mut ev3 = evaluator(&p, &dev);
+        let (ahead, ck90) = anneal_resumable(&p, &dev, &mut ev3, None, &cfg, None);
+        let mut ev4 = evaluator(&p, &dev);
+        let (noop, _) = anneal_resumable(&p, &dev, &mut ev4, None, &cfg, ck90.as_ref());
+        assert_eq!(noop.best, ahead.best);
+        assert_eq!(noop.evaluated, ahead.evaluated);
+        assert_eq!(noop.trace, ahead.trace);
+        let short = SaConfig {
+            steps: 40,
+            ..Default::default()
+        };
+        let mut ev5 = evaluator(&p, &dev);
+        let (back, _) = anneal_resumable(&p, &dev, &mut ev5, None, &short, ck90.as_ref());
+        let mut ev6 = evaluator(&p, &dev);
+        let cold40 = anneal(&p, &dev, &mut ev6, None, &short);
+        assert_eq!(back.best, cold40.best, "rewind must run cold, not truncate");
+        assert_eq!(back.trace, cold40.trace);
+    }
+
+    #[test]
+    fn cmp_cost_f64_matches_f32_total_order() {
+        assert_eq!(cmp_cost_f64(1.0, 2.0), Ordering::Less);
+        assert_eq!(cmp_cost_f64(2.0, 1.0), Ordering::Greater);
+        assert_eq!(cmp_cost_f64(1.0, 1.0), Ordering::Equal);
+        assert_eq!(cmp_cost_f64(f64::NAN, 1.0), Ordering::Greater);
+        assert_eq!(cmp_cost_f64(1.0, f64::NAN), Ordering::Less);
+        assert_eq!(cmp_cost_f64(f64::NAN, f64::NAN), Ordering::Equal);
+        assert_eq!(cmp_cost_f64(f64::NEG_INFINITY, f64::NAN), Ordering::Less);
     }
 
     #[test]

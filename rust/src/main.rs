@@ -10,6 +10,15 @@
 //! rsir table2 [--only <substr>]        Table 2: frequency improvements
 //! rsir fig12 [--device vhk158]         Figure 12: floorplan exploration
 //! rsir fig13                           Figure 13: parallel synthesis
+//! rsir dse [--bench llama2] [--device u280] [--utils 0.6,0.7,0.8]
+//!          [--grids 1,2] [--steps 60,120] [--strategies full,dies]
+//!          [--no-warm] [--out dse.json] multi-dimensional design-space
+//!                                      exploration: sweep utilization ×
+//!                                      slot grid × pipelining × SA
+//!                                      budget, SA warm-started along the
+//!                                      budget axis, and print/write the
+//!                                      Pareto front (byte-identical at
+//!                                      any worker count)
 //! rsir import <top> <file.v>...        import Verilog into IR JSON
 //! rsir export <ir.json> <outdir>       export IR to Verilog + XDC
 //! rsir fuzz [--seed N] [--cases M] [--out f.json] [--digests]
@@ -62,7 +71,7 @@
 //! deterministic for a given seed regardless of the worker count.
 
 use anyhow::{bail, Result};
-use rsir::coordinator::{explore, flow, parallel_synth, report};
+use rsir::coordinator::{dse, explore, flow, parallel_synth, report};
 use rsir::device::builtin;
 use rsir::passes::{registry, DrcOutcome, PassContext};
 use rsir::util::bench::Table;
@@ -77,6 +86,7 @@ fn main() {
         &[
             "bench", "device", "util", "only", "out", "seed", "workers", "ir", "cases",
             "sa-workers", "socket", "port", "cache", "max-queue", "file", "timeout-ms",
+            "utils", "grids", "steps", "strategies",
         ],
     );
     let mut cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -101,6 +111,15 @@ fn flow_config(args: &Args) -> flow::FlowConfig {
     // knob only: annealing results are identical for any value.
     cfg.sa.workers = args.get_usize("sa-workers", cfg.sa.workers);
     cfg
+}
+
+/// Parse a comma-separated CLI list (`--utils 0.6,0.7`), trimming blanks.
+fn parse_list<T>(flag: &str, s: &str, f: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| f(t).map_err(|e| anyhow::anyhow!("--{flag}: bad entry '{t}': {e:#}")))
+        .collect()
 }
 
 /// Effective worker-count override: `--workers N` when given and parseable.
@@ -401,6 +420,42 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             }
             t.print();
         }
+        "dse" => {
+            let device = args.get_or("device", "u280");
+            let dev = builtin::by_name(device)?;
+            let g = report::generate_by_id(args.get_or("bench", "llama2"))?;
+            let mut cfg = dse::DseConfig {
+                base: flow_config(args),
+                warm_sa: !args.has_flag("no-warm"),
+                ..Default::default()
+            };
+            if let Some(v) = args.get("utils") {
+                cfg.utils = parse_list("utils", v, |t| Ok(t.parse::<f64>()?))?;
+            }
+            if let Some(v) = args.get("grids") {
+                cfg.grids = parse_list("grids", v, |t| Ok(t.parse::<usize>()?))?;
+            }
+            if let Some(v) = args.get("steps") {
+                cfg.sa_steps = parse_list("steps", v, |t| Ok(t.parse::<usize>()?))?;
+            }
+            if let Some(v) = args.get("strategies") {
+                cfg.strategies = parse_list("strategies", v, flow::PipelineStrategy::parse)?;
+            }
+            let t0 = Instant::now();
+            let report = dse::run_dse(&g.design, &dev, &cfg, &pool)?;
+            println!("{}", report.render_front());
+            println!(
+                "{} points on {} workers in {:.2?} (SA warm-start {})",
+                report.rows.len(),
+                pool.workers(),
+                t0.elapsed(),
+                if cfg.warm_sa { "on" } else { "off" },
+            );
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, report.to_json().pretty())?;
+                println!("wrote {path}");
+            }
+        }
         "fig13" => {
             let dev = builtin::by_name("u250")?;
             // The worker count doubles as the modeled vendor job-farm
@@ -504,7 +559,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "help" | "--help" => {
             println!("rsir — RapidStream IR (ICCAD'24 reproduction)");
-            println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 import export fuzz serve submit version");
+            println!("commands: devices flow passes pipeline table1 table2 fig12 fig13 dse import export fuzz serve submit version");
+            println!("dse: `rsir dse --utils 0.6,0.7 --grids 1,2 --steps 60,120 --strategies full,dies` sweeps the knob space and prints the Pareto front");
             println!("global: --workers N (or RSIR_WORKERS) sizes the evaluation pool");
             println!("SA: --sa-workers N parallelizes annealing chains (same results for any N)");
             println!("pass registry: `rsir passes` lists it; `rsir pipeline <spec>` runs one");

@@ -606,8 +606,10 @@ fn run_explore(
         .map_err(|e| JobError::bad(format!("unknown device '{}': {e:#}", p.device)))?;
     check(token)?;
     // Warm the whole sweep from one snapshot. If analysis fails we pass
-    // None so every point reproduces the identical per-point failure the
-    // cold lane reports (NaN rows), instead of erroring the job.
+    // None so the first sweep point reproduces the identical per-point
+    // failure the cold lane reports — an internal error that the sweep
+    // now propagates (only typed infeasibility becomes a NaN row), so
+    // the job fails with the cold lane's exact message.
     let analyzed = match caches.analyzed(digest) {
         Some(a) => Some(a),
         None => match flow::analyze_design(&design) {

@@ -8,3 +8,63 @@
 
 pub mod fuzz;
 pub mod oracle;
+
+use crate::device::model::VirtualDevice;
+use crate::ir::builder::*;
+use crate::ir::core::*;
+
+/// A handshake chain of `n` stages, each consuming `frac` of one slot's
+/// LUT/FF capacity on `dev`. With `n * frac` well above the device's
+/// slot count the design cannot fit at any utilization limit — the ILP
+/// stays infeasible even at its 0.90 relaxation ceiling — which is what
+/// the sweep/DSE tests use to exercise the typed-[`Infeasible`]
+/// (unroutable-row) path deterministically.
+///
+/// [`Infeasible`]: crate::floorplan::Infeasible
+pub fn oversized_chain(dev: &VirtualDevice, n: usize, frac: f64) -> Design {
+    let cap = dev.slots[dev.num_slots() - 1].capacity.lut;
+    let mut d = Design::new("Top");
+    let mut top = GroupedBuilder::new("Top")
+        .port("ap_clk", Dir::In, 1)
+        .port("ap_rst_n", Dir::In, 1)
+        .iface(Interface::Clock {
+            port: "ap_clk".into(),
+        })
+        .iface(Interface::Reset {
+            port: "ap_rst_n".into(),
+            active_high: false,
+        });
+    for i in 0..n {
+        let m = LeafBuilder::verilog_stub(format!("Stage{i}"))
+            .clk_rst()
+            .handshake("i", Dir::In, 64)
+            .handshake("o", Dir::Out, 64)
+            .resource(Resources::new(cap * frac, cap * frac, 20.0, 100.0, 4.0))
+            .build();
+        d.add(m);
+    }
+    for i in 0..n.saturating_sub(1) {
+        top = top
+            .wire(&format!("w{i}"), 64)
+            .wire(&format!("w{i}_vld"), 1)
+            .wire(&format!("w{i}_rdy"), 1);
+    }
+    for i in 0..n {
+        let mut inst = Instance::new(format!("s{i}"), format!("Stage{i}"));
+        inst.connect("ap_clk", ConnExpr::id("ap_clk"));
+        inst.connect("ap_rst_n", ConnExpr::id("ap_rst_n"));
+        if i > 0 {
+            inst.connect("i", ConnExpr::id(&format!("w{}", i - 1)));
+            inst.connect("i_vld", ConnExpr::id(&format!("w{}_vld", i - 1)));
+            inst.connect("i_rdy", ConnExpr::id(&format!("w{}_rdy", i - 1)));
+        }
+        if i + 1 < n {
+            inst.connect("o", ConnExpr::id(&format!("w{i}")));
+            inst.connect("o_vld", ConnExpr::id(&format!("w{i}_vld")));
+            inst.connect("o_rdy", ConnExpr::id(&format!("w{i}_rdy")));
+        }
+        top = top.inst_full(inst);
+    }
+    d.add(top.build());
+    d
+}

@@ -1,0 +1,146 @@
+//! Integration tests for the multi-dimensional design-space explorer
+//! (`coordinator::dse`):
+//!
+//! * the determinism contract — rows and Pareto front byte-identical at
+//!   any worker count (1 vs 8), and with SA warm-starting on vs off;
+//! * infeasible-point classification — a design too big for the device
+//!   yields explicit unroutable rows, not an error (and never a fake
+//!   routable row);
+//! * degenerate sweeps — all-empty axes collapse to the single base
+//!   point; a single-point sweep has a front of at most one row.
+
+use rsir::coordinator::dse::{pareto_front, run_dse, DseConfig};
+use rsir::coordinator::flow::{FlowConfig, PipelineStrategy};
+use rsir::designs::cnn::{self, CnnConfig};
+use rsir::device::builtin;
+use rsir::util::pool::Pool;
+
+fn small_cfg() -> DseConfig {
+    DseConfig {
+        utils: vec![0.55, 0.85],
+        grids: vec![1, 2],
+        sa_steps: vec![40, 80],
+        strategies: vec![PipelineStrategy::Full],
+        base: FlowConfig::default(),
+        warm_sa: true,
+    }
+}
+
+#[test]
+fn rows_and_front_identical_at_any_worker_count() {
+    let dev = builtin::by_name("u250").unwrap();
+    let g = cnn::generate(&CnnConfig { rows: 4, cols: 3 }).unwrap();
+    let cfg = small_cfg();
+    let serial = run_dse(&g.design, &dev, &cfg, &Pool::new(1)).unwrap();
+    let wide = run_dse(&g.design, &dev, &cfg, &Pool::new(8)).unwrap();
+    assert_eq!(serial.rows.len(), 8, "2 utils x 2 grids x 2 budgets");
+    assert_eq!(serial.rows.len(), wide.rows.len());
+    for (a, b) in serial.rows.iter().zip(&wide.rows) {
+        assert!(a.bits_eq(b), "{a:?} vs {b:?}");
+    }
+    assert_eq!(serial.front.len(), wide.front.len());
+    for (a, b) in serial.front.iter().zip(&wide.front) {
+        assert!(a.bits_eq(b), "{a:?} vs {b:?}");
+    }
+    // The front is exactly the brute-force reference over the rows.
+    let reference = pareto_front(&serial.rows);
+    assert_eq!(serial.front.len(), reference.len());
+    for (a, b) in serial.front.iter().zip(&reference) {
+        assert!(a.bits_eq(b), "{a:?} vs {b:?}");
+    }
+    // Determinism extends to the rendered artifacts.
+    assert_eq!(serial.render_front(), wide.render_front());
+    assert_eq!(serial.to_json().pretty(), wide.to_json().pretty());
+}
+
+#[test]
+fn warm_started_rows_equal_cold_bit_for_bit() {
+    let dev = builtin::by_name("u250").unwrap();
+    let g = cnn::generate(&CnnConfig { rows: 4, cols: 3 }).unwrap();
+    let warm_cfg = small_cfg();
+    let cold_cfg = DseConfig {
+        warm_sa: false,
+        ..small_cfg()
+    };
+    let pool = Pool::new(2);
+    let warm = run_dse(&g.design, &dev, &warm_cfg, &pool).unwrap();
+    let cold = run_dse(&g.design, &dev, &cold_cfg, &pool).unwrap();
+    assert_eq!(warm.rows.len(), cold.rows.len());
+    for (a, b) in warm.rows.iter().zip(&cold.rows) {
+        assert!(a.bits_eq(b), "{a:?} vs {b:?}");
+    }
+    assert_eq!(warm.to_json().pretty(), cold.to_json().pretty());
+}
+
+#[test]
+fn infeasible_points_become_unroutable_rows() {
+    // Far too big for the device at any limit (even the ILP's 0.90
+    // relaxation ceiling): every point must come back as an explicit
+    // unroutable row — typed infeasibility is a data point — the sweep
+    // itself must succeed, and the front stays empty.
+    let dev = builtin::by_name("u250").unwrap();
+    let design = rsir::testing::oversized_chain(&dev, 12, 0.8);
+    let cfg = DseConfig {
+        utils: vec![0.5, 0.7],
+        grids: vec![1],
+        sa_steps: vec![40],
+        strategies: vec![PipelineStrategy::Full],
+        base: FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        },
+        warm_sa: true,
+    };
+    let report = run_dse(&design, &dev, &cfg, &Pool::new(2)).unwrap();
+    assert_eq!(report.rows.len(), 2);
+    for r in &report.rows {
+        assert!(!r.routable, "{:?}", report.rows);
+        assert!(r.wirelength.is_nan(), "{:?}", report.rows);
+    }
+    assert!(report.front.is_empty(), "{:?}", report.front);
+}
+
+#[test]
+fn empty_axes_collapse_to_the_base_point() {
+    let dev = builtin::by_name("u250").unwrap();
+    let g = cnn::generate(&CnnConfig { rows: 4, cols: 3 }).unwrap();
+    let base = FlowConfig {
+        sa_refine: false,
+        ..Default::default()
+    };
+    let cfg = DseConfig {
+        utils: vec![],
+        grids: vec![],
+        sa_steps: vec![],
+        strategies: vec![],
+        base: base.clone(),
+        warm_sa: true,
+    };
+    let report = run_dse(&g.design, &dev, &cfg, &Pool::new(2)).unwrap();
+    assert_eq!(report.rows.len(), 1);
+    let p = &report.rows[0].point;
+    assert_eq!(p.util_limit, base.util_limit);
+    assert_eq!(p.grid, 1);
+    assert_eq!(p.strategy, base.pipeline);
+    assert_eq!(p.sa_steps, base.sa.steps);
+    assert!(report.front.len() <= 1);
+}
+
+#[test]
+fn duplicate_axis_values_do_not_duplicate_points() {
+    let dev = builtin::by_name("u250").unwrap();
+    let g = cnn::generate(&CnnConfig { rows: 4, cols: 3 }).unwrap();
+    let cfg = DseConfig {
+        utils: vec![0.7, 0.7],
+        grids: vec![1, 1],
+        sa_steps: vec![40, 40],
+        strategies: vec![PipelineStrategy::Full, PipelineStrategy::Full],
+        base: FlowConfig {
+            sa_refine: false,
+            ..Default::default()
+        },
+        warm_sa: true,
+    };
+    let report = run_dse(&g.design, &dev, &cfg, &Pool::new(2)).unwrap();
+    assert_eq!(report.rows.len(), 1, "{:?}", report.rows);
+}
