@@ -384,9 +384,20 @@ pub fn run_hlps_warm(
 ) -> Result<FlowReport> {
     let t_total = Instant::now();
     let checkpoint = |stage: &'static str| -> Result<()> {
-        match warm.cancel {
-            Some(hook) if hook() => Err(anyhow::Error::new(FlowCanceled { stage })),
-            _ => Ok(()),
+        // Fault site `flow.stage.<stage>`: fire *before* polling
+        // cancellation — a Delay then overlaps the cancellation window —
+        // but let cancellation win over an injected error, so a client
+        // that cancels mid-fault still gets its typed `canceled` reply
+        // (and, the stage having never completed, no memo was poisoned).
+        let injected = crate::testing::faults::fire_stage(stage);
+        if let Some(hook) = warm.cancel {
+            if hook() {
+                return Err(anyhow::Error::new(FlowCanceled { stage }));
+            }
+        }
+        match injected {
+            Some(msg) => Err(anyhow::anyhow!("{msg}")),
+            None => Ok(()),
         }
     };
     checkpoint("start")?;

@@ -44,7 +44,7 @@ use crate::ir::digest::Fnv;
 use crate::timing::delay::DelayModel;
 use crate::timing::netlist::{FlatNetlist, FlattenMemo};
 use crate::timing::sta::{analyze_delta, Placement, StaOptions, StaTerms, TimingReport};
-use crate::util::lru::{CacheStats, Lru};
+use crate::util::lru::{fnv1a64, CacheStats, Lru, VerifiedLru};
 use anyhow::Result;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -70,7 +70,11 @@ pub struct FloorplanEntry {
 pub struct StageMemo {
     chars: Arc<CharMemo>,
     flatten: Mutex<FlattenMemo>,
-    placements: Mutex<Lru<u64, Placement>>,
+    /// Placements feed STA and the assembled report directly, so this
+    /// tier is digest-verified: a corrupted entry (injected via the
+    /// `memo.place.insert` fault site, or a real memory fault) is
+    /// evicted on hit and recomputed cold instead of skewing timing.
+    placements: Mutex<VerifiedLru<u64, Placement>>,
     floorplans: Mutex<Lru<u64, FloorplanEntry>>,
     /// ILP solves keyed by [`ilp_key`] — a *sub*-key of the floorplan
     /// block: it excludes every SA knob, so DSE points that differ only
@@ -95,7 +99,7 @@ impl StageMemo {
         StageMemo {
             chars: Arc::new(CharMemo::new(cap.max(1) * 64)),
             flatten: Mutex::new(FlattenMemo::new(cap.max(1) * 16)),
-            placements: Mutex::new(Lru::new(cap)),
+            placements: Mutex::new(VerifiedLru::new(cap, placement_digest)),
             floorplans: Mutex::new(Lru::new(cap)),
             ilps: Mutex::new(Lru::new(cap)),
             sta: Mutex::new(Lru::new(cap)),
@@ -137,11 +141,22 @@ impl StageMemo {
         cfg: &PlacerConfig,
     ) -> Option<Placement> {
         let key = place_key(nl, dev, cfg);
-        if let Some(p) = lock(&self.placements).get(&key) {
+        if let Some(p) = lock(&self.placements).get(&key, false) {
             return Some(p);
         }
         let p = crate::eda::place::place(nl, dev, cfg)?;
-        lock(&self.placements).put(key, p.clone());
+        // Fault site: `Corrupt` stores a flipped digest (the next hit
+        // detects and evicts it), `Skip` drops the insert. Both degrade
+        // to a cold recompute — never a wrong placement.
+        match crate::testing::faults::fire_cache("memo.place.insert") {
+            crate::testing::faults::CacheFault::Skip => {}
+            crate::testing::faults::CacheFault::Corrupt => {
+                lock(&self.placements).put(key, p.clone(), true)
+            }
+            crate::testing::faults::CacheFault::None => {
+                lock(&self.placements).put(key, p.clone(), false)
+            }
+        }
         Some(p)
     }
 
@@ -225,6 +240,12 @@ impl StageMemo {
         Ok(entry)
     }
 
+    /// Entries the placement tier's integrity verification has evicted
+    /// (rolled up into the daemon's `corruptions` diagnostic).
+    pub fn corruptions(&self) -> u64 {
+        lock(&self.placements).corrupt_dropped()
+    }
+
     /// Per-stage counter snapshots, in a stable render order. The
     /// `sta_delta` entry abuses the hit/miss pair as delta-run /
     /// full-run counters (its `len`/`cap` are the terms cache's).
@@ -253,6 +274,14 @@ impl StageMemo {
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Integrity digest for a cached [`Placement`]: FNV over its `Debug`
+/// rendering. `Placement` derives `Debug` structurally, so any field
+/// change alters the rendering — good enough for corruption *detection*
+/// (the [`VerifiedLru`] contract; this is not an adversarial MAC).
+fn placement_digest(p: &Placement) -> u64 {
+    fnv1a64(format!("{p:?}").as_bytes())
 }
 
 /// Fingerprint of exactly the inputs [`crate::eda::place::place`] reads:

@@ -49,17 +49,34 @@
 //!                                      cancellation) and require every
 //!                                      response byte-identical to the
 //!                                      one-shot lane
+//! rsir fuzz --faults [--seed N] [--cases M] [--out f.json]
+//!                                      fault-resilience lane: per case,
+//!                                      arm a seeded fault plan (injected
+//!                                      IO errors/panics/short
+//!                                      reads/delays/cache corruption)
+//!                                      against a real daemon and require
+//!                                      every response to be a typed
+//!                                      error or byte-identical to the
+//!                                      fault-free one-shot lane; shrinks
+//!                                      the (design, fault-plan) pair
 //! rsir serve (--socket p | --port n) [--workers N] [--cache N]
 //!           [--max-queue N] [--quiet]  resident compilation daemon:
 //!                                      line-delimited JSON jobs over a
 //!                                      unix socket or loopback TCP, warm
 //!                                      cross-request caches
 //! rsir submit (--socket p | --port n | --local) [--file reqs.jsonl]
-//!           [--timeout-ms N]           ship request lines (stdin or
+//!           [--timeout-ms N] [--retries N] [--retry-ms N]
+//!                                      ship request lines (stdin or
 //!                                      --file) to a daemon and print one
 //!                                      response line per request;
 //!                                      --local runs the identical
-//!                                      one-shot lane without a daemon
+//!                                      one-shot lane without a daemon.
+//!                                      Transport failures reconnect and
+//!                                      resubmit with capped exponential
+//!                                      backoff: --retries attempts
+//!                                      (default 4) starting at
+//!                                      --retry-ms (default 25, capped at
+//!                                      16x)
 //! rsir version                         print the crate version (also
 //!                                      reported in the daemon `hello`)
 //! ```
@@ -86,7 +103,7 @@ fn main() {
         &[
             "bench", "device", "util", "only", "out", "seed", "workers", "ir", "cases",
             "sa-workers", "socket", "port", "cache", "max-queue", "file", "timeout-ms",
-            "utils", "grids", "steps", "strategies",
+            "utils", "grids", "steps", "strategies", "retries", "retry-ms",
         ],
     );
     let mut cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -322,6 +339,38 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 }
                 return Ok(());
             }
+            if args.has_flag("faults") {
+                // Fault-resilience lane: typed-error-or-identical-bytes
+                // under an armed fault plan (see testing::faults).
+                let cases = args.get_usize("cases", 64);
+                let t0 = Instant::now();
+                let rep = rsir::testing::fuzz::run_faults(seed, cases, &cfg);
+                if rep.is_clean() {
+                    println!(
+                        "fuzz --faults: {cases} (design, fault-plan) pairs from seed {seed} \
+                         resilient in {:.2?} ({} sites covered)",
+                        t0.elapsed(),
+                        rep.covered.len()
+                    );
+                    return Ok(());
+                }
+                for v in &rep.violations {
+                    eprintln!("  {v}");
+                }
+                if let Some(faults) = &rep.minimal_faults {
+                    eprintln!("minimal fault plan: {faults}");
+                }
+                if let Some(json) = &rep.minimal_json {
+                    let out = args.get_or("out", "fuzz_faults_counterexample.json");
+                    std::fs::write(out, json)?;
+                    eprintln!("minimal (design, fault-plan) pair written to {out}");
+                }
+                bail!(
+                    "fault resilience violated ({} violation(s); replay: rsir fuzz \
+                     --faults --seed {seed} --cases {cases})",
+                    rep.violations.len()
+                );
+            }
             let cases = args.get_usize("cases", 64);
             let t0 = Instant::now();
             if args.has_flag("verilog") {
@@ -544,7 +593,18 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 let timeout = std::time::Duration::from_millis(
                     args.get_usize("timeout-ms", 300_000) as u64,
                 );
-                rsir::server::client::run_batch_remote(&bind_from_args(args)?, &lines, timeout)?
+                let mut policy = rsir::server::client::RetryPolicy::default();
+                policy.attempts = args.get_usize("retries", policy.attempts as usize) as u32;
+                let base_ms =
+                    args.get_usize("retry-ms", policy.base_delay.as_millis() as usize) as u64;
+                policy.base_delay = std::time::Duration::from_millis(base_ms);
+                policy.max_delay = std::time::Duration::from_millis(base_ms.saturating_mul(16));
+                rsir::server::client::run_batch_remote_with(
+                    &bind_from_args(args)?,
+                    &lines,
+                    timeout,
+                    &policy,
+                )?
             };
             for line in responses {
                 println!("{line}");
@@ -566,6 +626,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             println!("pass registry: `rsir passes` lists it; `rsir pipeline <spec>` runs one");
             println!("fuzzing: `rsir fuzz --seed N --cases M` replays/shrinks oracle failures");
             println!("         `rsir fuzz --reflow` checks memoized re-flows stay byte-identical");
+            println!("         `rsir fuzz --faults` arms seeded fault plans against a live daemon");
             println!("daemon: `rsir serve --socket /tmp/rsir.sock` + `rsir submit --socket ... --file reqs.jsonl`");
         }
         other => bail!("unknown command '{other}' (try 'rsir help')"),

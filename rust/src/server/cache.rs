@@ -30,6 +30,9 @@ use std::sync::{Arc, Mutex, MutexGuard};
 // so existing daemon call sites keep compiling unchanged.
 pub use crate::util::lru::{CacheStats, Lru};
 
+use crate::testing::faults::{self, CacheFault};
+use crate::util::lru::{fnv1a64, VerifiedLru};
+
 /// Everything a memoized [`CostModel`] depends on: the analyzed design
 /// (via its input digest), the device, and the two floats that shape the
 /// floorplan problem and model (`util_limit`, `die_weight`), keyed by
@@ -60,7 +63,11 @@ impl CostKey {
 pub struct CacheSet {
     analyzed: Mutex<Lru<u64, Arc<AnalyzedDesign>>>,
     cost: Mutex<Lru<CostKey, Arc<CostModel>>>,
-    results: Mutex<Lru<u64, Json>>,
+    /// Result payloads are the cache tier whose corruption would reach
+    /// the wire verbatim, so entries carry an FNV digest of their dumped
+    /// form, verified on every hit: a flipped payload degrades to a cold
+    /// recompute plus a diagnostic, never a wrong answer.
+    results: Mutex<VerifiedLru<u64, Json>>,
     /// Per-stage incremental caches (characterization, elaboration,
     /// placement, floorplan, delta STA) — the finer tier below the
     /// whole-request caches above: when a request digest misses (the
@@ -76,12 +83,19 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// Integrity digest for a cached result payload: FNV over its canonical
+/// dump (results are compared as bytes on the wire, so dump bytes are
+/// exactly what must survive storage).
+fn result_digest(v: &Json) -> u64 {
+    fnv1a64(v.dump().as_bytes())
+}
+
 impl CacheSet {
     pub fn new(cap: usize) -> Self {
         CacheSet {
             analyzed: Mutex::new(Lru::new(cap)),
             cost: Mutex::new(Lru::new(cap)),
-            results: Mutex::new(Lru::new(cap)),
+            results: Mutex::new(VerifiedLru::new(cap, result_digest)),
             stage: Arc::new(if cap == 0 {
                 StageMemo::disabled()
             } else {
@@ -119,11 +133,33 @@ impl CacheSet {
     }
 
     pub fn result(&self, key: u64) -> Option<Json> {
-        lock(&self.results).get(&key)
+        // Fault site: `Skip` models a lost read (treated as a miss —
+        // recompute), `Corrupt` simulates reading back a flipped payload
+        // (verification evicts it). Either way the caller recomputes the
+        // same bytes.
+        match faults::fire_cache("server.cache.get") {
+            CacheFault::Skip => return None,
+            CacheFault::Corrupt => return lock(&self.results).get(&key, true),
+            CacheFault::None => {}
+        }
+        lock(&self.results).get(&key, false)
     }
 
     pub fn put_result(&self, key: u64, v: Json) {
-        lock(&self.results).put(key, v);
+        // Fault site: `Corrupt` stores a flipped digest (the next hit
+        // detects it), `Skip` drops the insert (pure wall-time cost).
+        match faults::fire_cache("server.cache.insert") {
+            CacheFault::Skip => {}
+            CacheFault::Corrupt => lock(&self.results).put(key, v, true),
+            CacheFault::None => lock(&self.results).put(key, v, false),
+        }
+    }
+
+    /// Total entries integrity verification has evicted across the
+    /// verified tiers (results here, placements in the stage memo) — the
+    /// corruption diagnostic `stats` reports.
+    pub fn corruptions(&self) -> u64 {
+        lock(&self.results).corrupt_dropped() + self.stage.corruptions()
     }
 
     /// Per-cache counter snapshots, in a stable order for the `stats`

@@ -76,7 +76,10 @@ pub fn run_batch_local(lines: &[String]) -> Vec<String> {
                 ),
                 Some(id) => {
                     seen_jobs.insert(id);
-                    match ops::execute(&req, &caches, &CancelToken::default()) {
+                    // Same panic barrier as the daemon's workers, so a
+                    // panicking job yields the identical typed
+                    // `internal-panic` envelope from both lanes.
+                    match ops::execute_caught(&req, &caches, &CancelToken::default()) {
                         Ok(result) => ok_line(&env.id, result),
                         Err(e) => err_line(&env.id, e.code, &e.message),
                     }
@@ -115,18 +118,67 @@ fn response_id_key(line: &str) -> String {
         .dump()
 }
 
-/// Ship a batch to a running daemon and return one response per
-/// non-empty request line, **in request order** (the daemon may answer
-/// jobs out of order; responses are re-matched by id). Performs a
-/// `hello` handshake first and warns on version skew.
-pub fn run_batch_remote(bind: &Bind, lines: &[String], timeout: Duration) -> Result<Vec<String>> {
+/// Reconnect/backoff policy for [`run_batch_remote_with`]. Deliberately
+/// jitter-free: the schedule is a pure function of the attempt number,
+/// so a failing fuzz case replays with identical timing.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total connection attempts (clamped to at least 1).
+    pub attempts: u32,
+    /// Backoff before the first retry; doubles per retry.
+    pub base_delay: Duration,
+    /// Backoff cap.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 4,
+            base_delay: Duration::from_millis(25),
+            max_delay: Duration::from_millis(400),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A client that never retries (the pre-hardening behavior, still
+    /// wanted by tests that assert on first-failure semantics).
+    pub fn none() -> Self {
+        RetryPolicy {
+            attempts: 1,
+            ..RetryPolicy::default()
+        }
+    }
+
+    /// The capped exponential delay before retry number `retry` (0-based).
+    pub fn backoff(&self, retry: u32) -> Duration {
+        let mult = 1u32.checked_shl(retry).unwrap_or(u32::MAX);
+        self.base_delay
+            .checked_mul(mult)
+            .map(|d| d.min(self.max_delay))
+            .unwrap_or(self.max_delay)
+    }
+}
+
+/// One connection attempt: connect, handshake, ship the **whole** batch,
+/// and file every response that arrives into its request's slot
+/// (first answer wins). Replaying the full batch — rather than only the
+/// unanswered suffix — preserves within-batch semantics (duplicate-id
+/// rejections, cancel targets) exactly, and is free on the daemon side:
+/// completed jobs replay from the results cache byte-for-byte.
+fn attempt_batch(
+    bind: &Bind,
+    requests: &[&String],
+    answered: &mut [Option<String>],
+    deadline: Instant,
+) -> Result<()> {
     let stream = connect(bind).with_context(|| format!("connecting to {bind}"))?;
     stream
         .set_read_timeout(Some(Duration::from_millis(100)))
         .context("setting read timeout")?;
     let mut write_half = stream.try_clone().context("cloning stream")?;
-    let mut reader = LineReader::new(stream, DEFAULT_MAX_LINE);
-    let deadline = Instant::now() + timeout;
+    let mut reader = LineReader::with_site(stream, DEFAULT_MAX_LINE, "client.io.read");
 
     // Handshake: sent before anything else, so the first response line
     // is unambiguously the hello.
@@ -149,30 +201,103 @@ pub fn run_batch_remote(bind: &Bind, lines: &[String], timeout: Duration) -> Res
         }
     }
 
-    let requests: Vec<&String> = lines.iter().filter(|l| !l.trim().is_empty()).collect();
-    for line in &requests {
+    for line in requests {
         write_half.write_all(line.as_bytes())?;
         write_half.write_all(b"\n")?;
     }
     write_half.flush()?;
 
-    // Collect exactly one response per request, then restore request
-    // order. Same-id responses (e.g. a duplicate-id rejection) queue up
-    // and are consumed in arrival order.
-    let mut by_id: BTreeMap<String, VecDeque<String>> = BTreeMap::new();
+    // Collect up to one response per request. A transport failure
+    // mid-collection still files what already arrived — those answers
+    // are final; only the remainder rides the next attempt.
+    let mut received: Vec<String> = Vec::new();
+    let mut failure: Option<anyhow::Error> = None;
     for _ in 0..requests.len() {
-        let resp = read_response(&mut reader, deadline)?;
-        by_id.entry(response_id_key(&resp)).or_default().push_back(resp);
-    }
-    let mut out = Vec::with_capacity(requests.len());
-    for line in &requests {
-        let key = parse_line(line).id.dump();
-        match by_id.get_mut(&key).and_then(|q| q.pop_front()) {
-            Some(resp) => out.push(resp),
-            None => bail!("daemon sent no response for request id {key}"),
+        match read_response(&mut reader, deadline) {
+            Ok(resp) => received.push(resp),
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
         }
     }
-    Ok(out)
+
+    // Re-match by id in request order. Same-id responses (e.g. a
+    // duplicate-id rejection) queue up and are consumed in arrival
+    // order, as before retries existed.
+    let mut by_id: BTreeMap<String, VecDeque<String>> = BTreeMap::new();
+    for resp in received {
+        by_id.entry(response_id_key(&resp)).or_default().push_back(resp);
+    }
+    for (slot, line) in requests.iter().enumerate() {
+        let key = parse_line(line).id.dump();
+        if let Some(resp) = by_id.get_mut(&key).and_then(|q| q.pop_front()) {
+            if answered[slot].is_none() {
+                answered[slot] = Some(resp);
+            }
+        }
+    }
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Ship a batch to a running daemon and return one response per
+/// non-empty request line, **in request order** (the daemon may answer
+/// jobs out of order; responses are re-matched by id). Performs a
+/// `hello` handshake first and warns on version skew. Retries with the
+/// default [`RetryPolicy`]; see [`run_batch_remote_with`].
+pub fn run_batch_remote(bind: &Bind, lines: &[String], timeout: Duration) -> Result<Vec<String>> {
+    run_batch_remote_with(bind, lines, timeout, &RetryPolicy::default())
+}
+
+/// [`run_batch_remote`] with an explicit reconnect policy. Only
+/// *transport* failures retry (connect refused, EOF, read timeout,
+/// oversized frame); a typed error envelope is a final answer — the
+/// daemon has spoken — and is never re-submitted. The overall `timeout`
+/// is a hard deadline across all attempts.
+pub fn run_batch_remote_with(
+    bind: &Bind,
+    lines: &[String],
+    timeout: Duration,
+    policy: &RetryPolicy,
+) -> Result<Vec<String>> {
+    let requests: Vec<&String> = lines.iter().filter(|l| !l.trim().is_empty()).collect();
+    let deadline = Instant::now() + timeout;
+    let mut answered: Vec<Option<String>> = vec![None; requests.len()];
+    let mut last_err: Option<anyhow::Error> = None;
+    for attempt in 0..policy.attempts.max(1) {
+        if attempt > 0 {
+            let wait = policy.backoff(attempt - 1);
+            if Instant::now() + wait >= deadline {
+                break;
+            }
+            std::thread::sleep(wait);
+        }
+        // An attempt that *panics* (the fault plane's `client.io.read`
+        // Panic action, or a real client bug) is indistinguishable from
+        // a dropped connection to the caller: absorb it and retry.
+        // Answers are only filed after a successful read, so a panicked
+        // attempt cannot leave a half-written slot behind.
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            attempt_batch(bind, &requests, &mut answered, deadline)
+        })) {
+            Ok(Ok(())) => last_err = None,
+            Ok(Err(e)) => last_err = Some(e),
+            Err(_) => last_err = Some(anyhow::anyhow!("client connection attempt panicked")),
+        }
+        if answered.iter().all(|a| a.is_some()) || Instant::now() >= deadline {
+            break;
+        }
+    }
+    if let Some(out) = answered.into_iter().collect::<Option<Vec<String>>>() {
+        return Ok(out);
+    }
+    match last_err {
+        Some(e) => Err(e),
+        None => bail!("daemon sent no response for at least one request id"),
+    }
 }
 
 #[cfg(test)]

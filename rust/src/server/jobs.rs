@@ -103,6 +103,13 @@ impl JobQueue {
     /// Enqueue; on a full or closed queue the job comes back so the
     /// caller can answer `queue-full` with the job's own response channel.
     pub fn push(&self, job: Job) -> Result<(), Job> {
+        // Fault site: an injected admission failure is indistinguishable
+        // from a full queue — the caller's typed `queue-full` rejection
+        // covers both. An injected panic here unwinds the connection
+        // thread, which the accept loop's per-connection barrier absorbs.
+        if crate::testing::faults::fire_job("server.queue.push").is_some() {
+            return Err(job);
+        }
         let mut s = self.lock();
         if !s.open || s.q.len() >= self.cap {
             return Err(job);

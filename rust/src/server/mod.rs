@@ -27,6 +27,7 @@ use crate::server::protocol::{
     err_line, hello_result, job_id_string, ok_line, parse_line, shutdown_result, ErrorCode,
     LineEvent, LineReader, Request, DEFAULT_MAX_LINE, PROTOCOL_VERSION, VERSION,
 };
+use crate::testing::faults::{self, FaultAction};
 use crate::util::json::{Json, JsonObj};
 use crate::util::pool::Pool;
 use anyhow::{Context, Result};
@@ -262,6 +263,13 @@ fn stats_payload(shared: &Shared) -> Json {
     o.insert("running", Json::num(shared.queue.running() as f64));
     o.insert("jobs", Json::Obj(jobs));
     o.insert("caches", Json::Obj(caches));
+    // Entries integrity verification evicted from the digest-verified
+    // cache tiers (results, placements). Nonzero means a corruption was
+    // detected *and contained* — degraded to a cold recompute.
+    o.insert(
+        "corruptions",
+        Json::num(shared.caches.corruptions() as f64),
+    );
     o.insert("recent_jobs", Json::Arr(recent));
     Json::Obj(o)
 }
@@ -271,7 +279,11 @@ fn stats_payload(shared: &Shared) -> Json {
 fn worker_loop(shared: &Shared) {
     while let Some(job) = shared.queue.pop() {
         let t = Instant::now();
-        let (line, code) = match ops::execute(&job.request, &shared.caches, &job.token) {
+        // The panic barrier lives in `execute_caught`: a panicking job
+        // answers a typed `internal-panic` envelope and the worker keeps
+        // serving. (An uncaught panic here would unwind through the
+        // pool's panic transparency onto the server thread itself.)
+        let (line, code) = match ops::execute_caught(&job.request, &shared.caches, &job.token) {
             Ok(result) => (ok_line(&job.raw_id, result), None),
             Err(e) => (err_line(&job.raw_id, e.code, &e.message), Some(e.code)),
         };
@@ -286,20 +298,47 @@ fn worker_loop(shared: &Shared) {
 
 /// Drain response lines to the client. On a write failure (client went
 /// away) it keeps draining without writing, so in-flight jobs for a dead
-/// connection can still complete and drop their senders.
-fn writer_loop(stream: Stream, rx: Receiver<String>) {
+/// connection can still complete and drop their senders. The `dead` flag
+/// is shared with the reader loop: once the write half is gone the
+/// reader closes the connection too, so a retrying client reconnects
+/// promptly instead of waiting out its deadline.
+fn writer_loop(stream: Stream, rx: Receiver<String>, dead: &AtomicBool) {
     let mut w = BufWriter::new(stream);
-    let mut dead = false;
     while let Ok(line) = rx.recv() {
-        if dead {
+        if dead.load(Ordering::SeqCst) {
             continue;
         }
-        let wrote = w
-            .write_all(line.as_bytes())
-            .and_then(|_| w.write_all(b"\n"))
-            .and_then(|_| w.flush());
+        // Fault site `server.io.write`: `Delay` stalls before the write,
+        // `ShortIo` splits it across two flushes (the reader must
+        // reassemble), and every other action — including Panic —
+        // degrades to a dead connection. A real panic on this thread
+        // would only surface when the scope joins, stalling the client
+        // until its deadline; killing the connection instead models the
+        // same loss while keeping the failure promptly observable.
+        let mut split = false;
+        match faults::point("server.io.write") {
+            None => {}
+            Some(FaultAction::Delay) => faults::injected_sleep(),
+            Some(FaultAction::ShortIo) => split = true,
+            Some(_) => {
+                dead.store(true, Ordering::SeqCst);
+                continue;
+            }
+        }
+        let wrote = if split && line.len() > 1 {
+            let (a, b) = line.as_bytes().split_at(line.len() / 2);
+            w.write_all(a)
+                .and_then(|_| w.flush())
+                .and_then(|_| w.write_all(b))
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush())
+        } else {
+            w.write_all(line.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush())
+        };
         if wrote.is_err() {
-            dead = true;
+            dead.store(true, Ordering::SeqCst);
         }
     }
 }
@@ -407,12 +446,19 @@ fn handle_conn(stream: Stream, shared: &Shared) {
         return;
     };
     let (tx, rx) = mpsc::channel::<String>();
+    let writer_dead = AtomicBool::new(false);
+    let writer_dead = &writer_dead;
     thread::scope(|s| {
-        s.spawn(move || writer_loop(write_half, rx));
-        let mut reader = LineReader::new(stream, shared.max_line);
+        s.spawn(move || writer_loop(write_half, rx, writer_dead));
+        let mut reader = LineReader::with_site(stream, shared.max_line, "server.io.read");
         let mut registry: BTreeMap<String, (CancelToken, Arc<AtomicBool>)> = BTreeMap::new();
         loop {
             if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            // The write half died (client gone, or injected): close the
+            // read half too so the client's retry loop reconnects.
+            if writer_dead.load(Ordering::SeqCst) {
                 break;
             }
             match reader.poll_line() {
@@ -536,7 +582,17 @@ impl Server {
                 }
                 match self.listener.accept() {
                     Ok(stream) => {
-                        s.spawn(move || handle_conn(stream, shared));
+                        // Per-connection panic barrier: an unwinding
+                        // handler (injected via `server.queue.push`
+                        // Panic, or a real bug) takes down its own
+                        // connection, never the accept loop. Without it
+                        // the scope would re-raise at join and kill the
+                        // daemon.
+                        s.spawn(move || {
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || handle_conn(stream, shared),
+                            ));
+                        });
                     }
                     Err(e)
                         if e.kind() == io::ErrorKind::WouldBlock

@@ -380,6 +380,13 @@ pub fn execute(req: &JobRequest, caches: &CacheSet, token: &CancelToken) -> Resu
         return Ok(hit);
     }
     check(token)?;
+    // Fault site `pool.job`: the body of a pool-scheduled daemon job.
+    // This is where panic injection belongs — not inside the pool's own
+    // plumbing, whose panic-transparency would re-raise on the server
+    // thread — because [`execute_caught`]'s barrier is what's under test.
+    if let Some(msg) = crate::testing::faults::fire_job("pool.job") {
+        return Err(JobError::new(ErrorCode::Internal, msg));
+    }
     let result = match req {
         JobRequest::Flow(p) => run_flow(p, caches, token),
         JobRequest::Pipeline(p) => run_pipeline(p, caches, token),
@@ -388,6 +395,33 @@ pub fn execute(req: &JobRequest, caches: &CacheSet, token: &CancelToken) -> Resu
     }?;
     caches.put_result(key, result.clone());
     Ok(result)
+}
+
+/// [`execute`] behind a per-job panic barrier: a panicking job — a bug
+/// in a pass, or the fault plane's `pool.job` Panic action — becomes a
+/// typed `internal-panic` envelope instead of unwinding the worker (and,
+/// through the pool's panic transparency, the whole daemon). Both lanes
+/// route through this, so a panic produces identical bytes from the
+/// daemon and from `rsir submit --local`.
+pub fn execute_caught(
+    req: &JobRequest,
+    caches: &CacheSet,
+    token: &CancelToken,
+) -> Result<Json, JobError> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| execute(req, caches, token)))
+        .unwrap_or_else(|payload| {
+            let msg = if let Some(s) = payload.downcast_ref::<&'static str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "opaque panic payload".to_string()
+            };
+            Err(JobError::new(
+                ErrorCode::InternalPanic,
+                format!("job panicked: {msg}"),
+            ))
+        })
 }
 
 /// Map a flow failure to a typed job error, distinguishing the

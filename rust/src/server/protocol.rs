@@ -72,9 +72,30 @@ pub enum ErrorCode {
     /// The job itself failed (deterministically — the message is part of
     /// the byte-identity contract).
     Internal,
+    /// The job body panicked; the worker absorbed the unwind
+    /// (`catch_unwind`) and the connection/queue kept draining. Distinct
+    /// from `internal` so clients can tell a typed failure from a crash
+    /// that was contained.
+    InternalPanic,
 }
 
 impl ErrorCode {
+    /// Every code, in wire order. The resilience oracle uses this to
+    /// decide whether an error envelope is *typed* (vs. garbage).
+    pub const ALL: [ErrorCode; 11] = [
+        ErrorCode::BadJson,
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownType,
+        ErrorCode::Oversized,
+        ErrorCode::UnknownJob,
+        ErrorCode::DuplicateJob,
+        ErrorCode::Canceled,
+        ErrorCode::Timeout,
+        ErrorCode::QueueFull,
+        ErrorCode::Internal,
+        ErrorCode::InternalPanic,
+    ];
+
     pub fn as_str(&self) -> &'static str {
         match self {
             ErrorCode::BadJson => "bad-json",
@@ -87,7 +108,13 @@ impl ErrorCode {
             ErrorCode::Timeout => "timeout",
             ErrorCode::QueueFull => "queue-full",
             ErrorCode::Internal => "internal",
+            ErrorCode::InternalPanic => "internal-panic",
         }
+    }
+
+    /// Parse a wire string back into a code (`None` for unknown strings).
+    pub fn from_wire(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.into_iter().find(|c| c.as_str() == s)
     }
 }
 
@@ -301,11 +328,19 @@ pub enum LineEvent {
 /// [`LineEvent::Idle`] (the daemon polls its shutdown flag between
 /// reads), and recovers from oversized lines by discarding through the
 /// next newline.
+///
+/// A reader built with [`with_site`](LineReader::with_site) is a fault
+/// boundary: the injection plane can shorten its reads, delay them, or
+/// fail them with an `io::Error` — and in every case already-buffered
+/// bytes are preserved, so an injected transport error never loses data
+/// that had arrived (the no-byte-loss property `tests/faults.rs`
+/// verifies).
 pub struct LineReader<R> {
     inner: R,
     buf: Vec<u8>,
     max: usize,
     discarding: bool,
+    site: Option<&'static str>,
 }
 
 impl<R: Read> LineReader<R> {
@@ -315,6 +350,17 @@ impl<R: Read> LineReader<R> {
             buf: Vec::new(),
             max,
             discarding: false,
+            site: None,
+        }
+    }
+
+    /// A reader whose reads pass through the fault site `site`
+    /// (`testing::faults`). Disarmed cost: one relaxed atomic load per
+    /// `read` call.
+    pub fn with_site(inner: R, max: usize, site: &'static str) -> Self {
+        LineReader {
+            site: Some(site),
+            ..LineReader::new(inner, max)
         }
     }
 
@@ -337,7 +383,15 @@ impl<R: Read> LineReader<R> {
                 return Ok(LineEvent::Oversized);
             }
             let mut chunk = [0u8; 4096];
-            match self.inner.read(&mut chunk) {
+            let mut cap = chunk.len();
+            if let Some(site) = self.site {
+                // Injected errors return *before* the read: `buf` is
+                // untouched, so no received byte is lost.
+                if crate::testing::faults::fire_io(site)? {
+                    cap = 1; // injected short read
+                }
+            }
+            match self.inner.read(&mut chunk[..cap]) {
                 Ok(0) => return Ok(LineEvent::Eof),
                 Ok(n) => {
                     let mut data = &chunk[..n];

@@ -1,0 +1,527 @@
+//! The deterministic, seeded fault-injection plane.
+//!
+//! Production code declares named fault *sites* at its fallible
+//! boundaries — [`point`]`("server.io.read")`, `"server.queue.push"`,
+//! `"memo.place.insert"`, … — and a test arms a [`FaultPlan`] against
+//! them. Each armed [`FaultArm`] triggers deterministically on the
+//! (site, hit-count) pair: the n-th time execution reaches the site, the
+//! arm fires **exactly once** and injects its [`FaultAction`] (a typed
+//! error, a panic, a short read/write, an artificial delay, or a
+//! bit-flipped cache payload). Because every arm is one-shot, the total
+//! number of injected events is bounded by the plan size, which is what
+//! lets the retrying client and the [`check_fault_resilience`] oracle
+//! converge.
+//!
+//! **Disarmed cost:** when no plan is armed (every production run), a
+//! fault site costs exactly one relaxed atomic load — see [`point`].
+//!
+//! **Determinism:** arming, triggering and the injected payloads use no
+//! wall clock and no ambient randomness. Within a single-threaded
+//! scenario the hit counters are fully deterministic; under daemon
+//! concurrency the k-th hit of a site is whichever thread arrives k-th,
+//! which the resilience oracle's invariant is deliberately agnostic to
+//! (any interleaving must still produce typed-error-or-identical-bytes).
+//!
+//! **Scoping:** the plane is process-global (fault sites live on hot
+//! paths shared by every thread, including daemon workers), so
+//! [`arm`] serializes scenarios behind a global lock and the returned
+//! [`FaultGuard`] disarms on drop. Tests that arm real production sites
+//! belong in the dedicated `tests/faults.rs` integration binary (its own
+//! process); in-crate unit tests must only arm reserved `test.*` site
+//! names, which no production path ever queries.
+//!
+//! [`check_fault_resilience`]: crate::testing::oracle::check_fault_resilience
+
+use crate::util::json::{Json, JsonObj};
+use crate::util::quickcheck::Gen;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// How long an injected [`FaultAction::Delay`] sleeps. Long enough for a
+/// cancellation to land mid-delay (the cancellation-under-fault tests
+/// depend on that window), short enough for 64-case tier-1 lanes.
+pub const INJECTED_DELAY_MS: u64 = 120;
+
+/// What an armed site injects when it fires.
+///
+/// Not every action is meaningful at every site; sites degrade
+/// inapplicable actions to their closest supported one (documented per
+/// call site, summarized in the ARCHITECTURE.md site table). E.g. an IO
+/// site treats `BitFlip` as `Error`; the pool's scheduling site treats
+/// everything as `Delay`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Return the site's typed error (an `io::Error`, a queue rejection,
+    /// an injected flow-stage failure, …).
+    Error,
+    /// Panic at the site (must be absorbed by a `catch_unwind` layer —
+    /// the daemon's per-job isolation or per-connection barrier).
+    Panic,
+    /// Sleep [`INJECTED_DELAY_MS`] and then proceed normally.
+    Delay,
+    /// Truncate the current read/write to one byte (IO sites only).
+    ShortIo,
+    /// Corrupt a cached payload's integrity digest so verification fails
+    /// on the next hit (cache/memo sites only).
+    BitFlip,
+}
+
+impl FaultAction {
+    pub const ALL: [FaultAction; 5] = [
+        FaultAction::Error,
+        FaultAction::Panic,
+        FaultAction::Delay,
+        FaultAction::ShortIo,
+        FaultAction::BitFlip,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultAction::Error => "error",
+            FaultAction::Panic => "panic",
+            FaultAction::Delay => "delay",
+            FaultAction::ShortIo => "short-io",
+            FaultAction::BitFlip => "bit-flip",
+        }
+    }
+}
+
+/// Every production fault site the fuzzer arms. (Tests may additionally
+/// arm ad-hoc `test.*` names; [`point`] accepts any site string.)
+pub const SITES: &[&str] = &[
+    "server.io.read",     // daemon connection reader (LineReader)
+    "server.io.write",    // daemon response writer
+    "server.queue.push",  // job-queue admission
+    "server.cache.get",   // CacheSet result lookup
+    "server.cache.insert",// CacheSet result insertion
+    "memo.place.insert",  // StageMemo placement insertion
+    "pool.job",           // a job body executing on a pool worker
+    "pool.worker",        // pool scheduling skew (delay-only)
+    "client.io.read",     // client-side response reader
+    "flow.stage.start",
+    "flow.stage.analysis",
+    "flow.stage.baseline",
+    "flow.stage.floorplan",
+    "flow.stage.pipeline",
+];
+
+/// One armed injection: the `hit`-th arrival at `site` fires `action`,
+/// exactly once.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultArm {
+    pub site: String,
+    pub hit: u64,
+    pub action: FaultAction,
+}
+
+impl FaultArm {
+    pub fn new(site: &str, hit: u64, action: FaultAction) -> FaultArm {
+        FaultArm {
+            site: site.to_string(),
+            hit: hit.max(1),
+            action,
+        }
+    }
+}
+
+/// A seeded, shrinkable set of armed faults — the fault-plane analogue
+/// of `DesignPlan`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub arms: Vec<FaultArm>,
+}
+
+impl FaultPlan {
+    /// A plan arming a single site.
+    pub fn one(site: &str, hit: u64, action: FaultAction) -> FaultPlan {
+        FaultPlan {
+            arms: vec![FaultArm::new(site, hit, action)],
+        }
+    }
+
+    /// Stable single-line rendering (`site#hit:action, …`) for reports
+    /// and shrunken-counterexample artifacts.
+    pub fn render(&self) -> String {
+        if self.arms.is_empty() {
+            return "(no faults)".to_string();
+        }
+        self.arms
+            .iter()
+            .map(|a| format!("{}#{}:{}", a.site, a.hit, a.action.name()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// JSON form for the uploaded (design, fault-plan) counterexample.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.arms
+                .iter()
+                .map(|a| {
+                    let mut o = JsonObj::new();
+                    o.insert("site", Json::str(&a.site));
+                    o.insert("hit", Json::num(a.hit as f64));
+                    o.insert("action", Json::str(a.action.name()));
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Generator for [`FaultPlan`]s: 1–3 arms over [`SITES`], hits in 1–3,
+/// any action. Shrinks by dropping arms, pulling hits toward 1, and
+/// weakening actions toward [`FaultAction::Error`] — so a minimized
+/// counterexample is the smallest, tamest plan that still violates.
+#[derive(Debug, Clone, Default)]
+pub struct FaultGen;
+
+impl Gen for FaultGen {
+    type Item = FaultPlan;
+
+    fn generate(&self, rng: &mut Rng) -> FaultPlan {
+        let n = rng.range(1, 3);
+        let arms = (0..n)
+            .map(|_| FaultArm {
+                site: rng.pick(SITES).to_string(),
+                hit: rng.range(1, 3) as u64,
+                action: *rng.pick(&FaultAction::ALL),
+            })
+            .collect();
+        FaultPlan { arms }
+    }
+
+    fn shrink(&self, plan: &FaultPlan) -> Vec<FaultPlan> {
+        let mut out = Vec::new();
+        for i in 0..plan.arms.len() {
+            let mut p = plan.clone();
+            p.arms.remove(i);
+            out.push(p);
+        }
+        for (i, arm) in plan.arms.iter().enumerate() {
+            if arm.hit > 1 {
+                let mut p = plan.clone();
+                p.arms[i].hit = 1;
+                out.push(p);
+            }
+            if arm.action != FaultAction::Error {
+                let mut p = plan.clone();
+                p.arms[i].action = FaultAction::Error;
+                out.push(p);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// The process-global armed state.
+// ---------------------------------------------------------------------
+
+struct ArmState {
+    site: String,
+    hit: u64,
+    action: FaultAction,
+    fired: bool,
+}
+
+#[derive(Default)]
+struct ActiveFaults {
+    arms: Vec<ArmState>,
+    counters: BTreeMap<String, u64>,
+    fired_log: Vec<String>,
+}
+
+/// Count of not-yet-fired arms. `0` is the disarmed fast path: the only
+/// cost a production run ever pays at a fault site.
+static ARMED: AtomicU64 = AtomicU64::new(0);
+static STATE: Mutex<Option<ActiveFaults>> = Mutex::new(None);
+/// Serializes scenarios: the plane is process-global, so only one armed
+/// plan may exist at a time.
+static SCENARIO: Mutex<()> = Mutex::new(());
+
+fn lock_state() -> MutexGuard<'static, Option<ActiveFaults>> {
+    // A panic *is* a supported injection, so the state lock recovers
+    // from poisoning instead of propagating it.
+    STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Disarms the plane (and releases the scenario lock) on drop.
+pub struct FaultGuard {
+    _scenario: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ARMED.store(0, Ordering::SeqCst);
+        *lock_state() = None;
+    }
+}
+
+/// Arm `plan` for the duration of the returned guard. Blocks until any
+/// previously armed scenario disarms; resets all hit counters.
+pub fn arm(plan: &FaultPlan) -> FaultGuard {
+    let scenario = SCENARIO.lock().unwrap_or_else(|p| p.into_inner());
+    *lock_state() = Some(ActiveFaults {
+        arms: plan
+            .arms
+            .iter()
+            .map(|a| ArmState {
+                site: a.site.clone(),
+                hit: a.hit.max(1),
+                action: a.action,
+                fired: false,
+            })
+            .collect(),
+        counters: BTreeMap::new(),
+        fired_log: Vec::new(),
+    });
+    ARMED.store(plan.arms.len() as u64, Ordering::SeqCst);
+    FaultGuard { _scenario: scenario }
+}
+
+/// `true` while any arm is live — exactly one relaxed atomic load.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+/// A fault site. Returns the injected action when an arm fires here,
+/// `None` otherwise. Disarmed cost: one relaxed atomic load.
+#[inline]
+pub fn point(site: &str) -> Option<FaultAction> {
+    if !armed() {
+        return None;
+    }
+    fire(site)
+}
+
+#[cold]
+fn fire(site: &str) -> Option<FaultAction> {
+    let mut g = lock_state();
+    let st = g.as_mut()?;
+    let c = st.counters.entry(site.to_string()).or_insert(0);
+    *c += 1;
+    let n = *c;
+    for arm in st.arms.iter_mut() {
+        if !arm.fired && arm.site == site && arm.hit == n {
+            arm.fired = true;
+            let action = arm.action;
+            st.fired_log.push(format!("{site}#{n}:{}", action.name()));
+            ARMED.fetch_sub(1, Ordering::SeqCst);
+            return Some(action);
+        }
+    }
+    None
+}
+
+/// Which arms have fired so far in the active scenario (empty when
+/// disarmed). Diagnostics for tests and shrunken reports.
+pub fn fired_log() -> Vec<String> {
+    lock_state()
+        .as_ref()
+        .map(|s| s.fired_log.clone())
+        .unwrap_or_default()
+}
+
+/// Sleep the standard injected delay.
+pub fn injected_sleep() {
+    std::thread::sleep(Duration::from_millis(INJECTED_DELAY_MS));
+}
+
+/// The canonical message for an injected typed error at `site`
+/// (deterministic, so shrunken counterexamples replay byte-for-byte).
+pub fn injected_msg(site: &str) -> String {
+    format!("injected fault at {site}")
+}
+
+/// Fire `site` as an IO boundary. `Ok(true)` asks the caller to
+/// truncate the current read/write to one byte; `Error`/`BitFlip`
+/// surface as an `io::Error`; `Panic` panics; `Delay` sleeps first.
+pub fn fire_io(site: &str) -> std::io::Result<bool> {
+    match point(site) {
+        None => Ok(false),
+        Some(FaultAction::ShortIo) => Ok(true),
+        Some(FaultAction::Delay) => {
+            injected_sleep();
+            Ok(false)
+        }
+        Some(FaultAction::Panic) => panic!("injected panic at {site}"),
+        Some(FaultAction::Error) | Some(FaultAction::BitFlip) => Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            injected_msg(site),
+        )),
+    }
+}
+
+/// Fire `site` as a job/queue boundary: `Some(message)` means the caller
+/// must raise its typed error; `Panic` panics (the daemon's per-job or
+/// per-connection `catch_unwind` absorbs it); `Delay` sleeps and
+/// proceeds; `ShortIo`/`BitFlip` degrade to the typed error.
+pub fn fire_job(site: &str) -> Option<String> {
+    match point(site) {
+        None => None,
+        Some(FaultAction::Delay) => {
+            injected_sleep();
+            None
+        }
+        Some(FaultAction::Panic) => panic!("injected panic at {site}"),
+        Some(_) => Some(injected_msg(site)),
+    }
+}
+
+/// Fire the flow-stage site for `stage` (`flow.stage.<stage>`). Same
+/// semantics as [`fire_job`]. The site string is only materialized when
+/// the plane is armed, keeping the disarmed checkpoint at one load.
+pub fn fire_stage(stage: &str) -> Option<String> {
+    if !armed() {
+        return None;
+    }
+    fire_job(&format!("flow.stage.{stage}"))
+}
+
+/// Should a cache/memo insertion corrupt its integrity digest?
+/// (`BitFlip` → yes; `Error` → the caller skips the insert entirely;
+/// `Delay` sleeps; `Panic` panics.)
+pub enum CacheFault {
+    None,
+    Corrupt,
+    Skip,
+}
+
+/// Fire `site` as a cache boundary.
+pub fn fire_cache(site: &str) -> CacheFault {
+    match point(site) {
+        None => CacheFault::None,
+        Some(FaultAction::BitFlip) | Some(FaultAction::ShortIo) => CacheFault::Corrupt,
+        Some(FaultAction::Error) => CacheFault::Skip,
+        Some(FaultAction::Delay) => {
+            injected_sleep();
+            CacheFault::None
+        }
+        Some(FaultAction::Panic) => panic!("injected panic at {site}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests only arm reserved `test.*` sites: the plane is
+    // process-global and these tests share the process with the rest of
+    // the lib suite (including live daemons), so arming a production
+    // site here would inject into innocent tests. `tests/faults.rs` is
+    // the dedicated process for that.
+
+    #[test]
+    fn disarmed_points_return_none() {
+        assert_eq!(point("test.unit.disarmed"), None);
+        assert!(!armed());
+    }
+
+    #[test]
+    fn arms_fire_on_exact_hit_exactly_once() {
+        let plan = FaultPlan {
+            arms: vec![
+                FaultArm::new("test.unit.a", 2, FaultAction::Error),
+                FaultArm::new("test.unit.b", 1, FaultAction::Delay),
+            ],
+        };
+        let _g = arm(&plan);
+        assert_eq!(point("test.unit.a"), None); // hit 1
+        assert_eq!(point("test.unit.b"), Some(FaultAction::Delay));
+        assert_eq!(point("test.unit.a"), Some(FaultAction::Error)); // hit 2
+        assert_eq!(point("test.unit.a"), None); // fired arms stay quiet
+        assert_eq!(point("test.unit.b"), None);
+        assert_eq!(
+            fired_log(),
+            vec!["test.unit.b#1:delay", "test.unit.a#2:error"]
+        );
+        // Both arms fired: back to the single-load fast path.
+        assert!(!armed());
+    }
+
+    #[test]
+    fn guard_drop_disarms() {
+        {
+            let _g = arm(&FaultPlan::one("test.unit.c", 1, FaultAction::Panic));
+            assert!(armed());
+        }
+        assert!(!armed());
+        assert_eq!(point("test.unit.c"), None);
+        assert!(fired_log().is_empty());
+    }
+
+    #[test]
+    fn counters_reset_per_scenario() {
+        let plan = FaultPlan::one("test.unit.d", 1, FaultAction::Error);
+        {
+            let _g = arm(&plan);
+            assert_eq!(point("test.unit.d"), Some(FaultAction::Error));
+        }
+        {
+            let _g = arm(&plan);
+            // Fresh counters: hit 1 fires again in the new scenario.
+            assert_eq!(point("test.unit.d"), Some(FaultAction::Error));
+        }
+    }
+
+    #[test]
+    fn generation_is_seeded_and_shrink_is_sound() {
+        let g = FaultGen;
+        let sample = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..10).map(|_| g.generate(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(sample(7), sample(7));
+        assert_ne!(sample(7), sample(8));
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let plan = g.generate(&mut rng);
+            assert!((1..=3).contains(&plan.arms.len()));
+            for cand in g.shrink(&plan) {
+                assert!(cand.arms.len() <= plan.arms.len());
+                assert_ne!(cand, plan, "shrink must make progress");
+            }
+            // Shrinking terminates at the empty plan.
+            assert!(g.shrink(&FaultPlan::default()).is_empty());
+        }
+    }
+
+    #[test]
+    fn render_and_json_are_stable() {
+        let plan = FaultPlan {
+            arms: vec![
+                FaultArm::new("server.io.read", 2, FaultAction::ShortIo),
+                FaultArm::new("pool.job", 1, FaultAction::Panic),
+            ],
+        };
+        assert_eq!(
+            plan.render(),
+            "server.io.read#2:short-io, pool.job#1:panic"
+        );
+        assert_eq!(
+            plan.to_json().dump(),
+            r#"[{"site":"server.io.read","hit":2,"action":"short-io"},{"site":"pool.job","hit":1,"action":"panic"}]"#
+        );
+        assert_eq!(FaultPlan::default().render(), "(no faults)");
+    }
+
+    #[test]
+    fn fire_io_maps_actions() {
+        let plan = FaultPlan {
+            arms: vec![
+                FaultArm::new("test.unit.io", 1, FaultAction::ShortIo),
+                FaultArm::new("test.unit.io", 2, FaultAction::Error),
+            ],
+        };
+        let _g = arm(&plan);
+        assert!(fire_io("test.unit.io").unwrap()); // short
+        let err = fire_io("test.unit.io").unwrap_err();
+        assert_eq!(err.to_string(), "injected fault at test.unit.io");
+        assert!(!fire_io("test.unit.io").unwrap()); // exhausted
+    }
+}

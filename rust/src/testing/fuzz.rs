@@ -13,9 +13,12 @@ use crate::designs::synthetic::{
     SyntheticConfig,
 };
 use crate::ir::schema::design_to_json;
+use crate::testing::faults::{FaultAction, FaultGen, FaultPlan};
 use crate::testing::oracle;
+use crate::util::json::{Json, JsonObj};
 use crate::util::quickcheck::{minimize, Gen};
 use crate::util::rng::Rng;
+use std::collections::BTreeSet;
 
 /// A minimized oracle failure.
 #[derive(Debug, Clone)]
@@ -270,6 +273,104 @@ pub fn run_daemon(seed: u64, cases: usize, cfg: &SyntheticConfig) -> DaemonFuzzR
         cases,
         violations,
         minimal_json: None,
+    }
+}
+
+/// Outcome of one fault-resilience fuzz run (`rsir fuzz --faults`).
+#[derive(Debug, Clone)]
+pub struct FaultFuzzReport {
+    pub seed: u64,
+    pub cases: usize,
+    /// Rendered oracle violations from the first failing case (empty =
+    /// every case clean).
+    pub violations: Vec<String>,
+    /// Every site armed across the run — the coverage set the tier-1
+    /// gate asserts spans all five fault categories.
+    pub covered: BTreeSet<String>,
+    /// Pretty `{"design":…, "faults":…}` JSON of the minimized
+    /// (design, fault-plan) counterexample pair — the CI artifact.
+    pub minimal_json: Option<String>,
+    /// One-line rendering of the minimized fault plan (for logs).
+    pub minimal_faults: Option<String>,
+}
+
+impl FaultFuzzReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// The deterministic coverage schedule: the first five cases arm one
+/// representative site per fault category — server IO, job-queue
+/// admission, a panicking pool job, stage-memo corruption, and a flow
+/// stage — so even a short run exercises every hardening layer. Later
+/// cases draw seeded random plans over all of
+/// [`SITES`](crate::testing::faults::SITES).
+fn coverage_arm(case: usize) -> Option<FaultPlan> {
+    match case {
+        0 => Some(FaultPlan::one("server.io.read", 1, FaultAction::Error)),
+        1 => Some(FaultPlan::one("server.queue.push", 1, FaultAction::Error)),
+        2 => Some(FaultPlan::one("pool.job", 1, FaultAction::Panic)),
+        3 => Some(FaultPlan::one("memo.place.insert", 1, FaultAction::BitFlip)),
+        4 => Some(FaultPlan::one("flow.stage.floorplan", 1, FaultAction::Error)),
+        _ => None,
+    }
+}
+
+/// Fuzz the daemon's fault resilience (`rsir fuzz --faults`): per case,
+/// generate a (design, fault-plan) pair from an independent seed stream
+/// and run [`oracle::check_fault_resilience`] — a real daemon with the
+/// plan armed must answer every request with a typed error or bytes
+/// identical to the fault-free one-shot lane. On failure the *pair* is
+/// shrunk — fault plan first (the design held fixed), then the design
+/// (the minimal faults held fixed) — and emitted as one JSON artifact.
+pub fn run_faults(seed: u64, cases: usize, cfg: &SyntheticConfig) -> FaultFuzzReport {
+    let dgen = DesignGen { cfg: cfg.clone() };
+    let fgen = FaultGen;
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    for case in 0..cases {
+        // Independent stream per case: a counterexample replays from
+        // (seed, case) alone, without regenerating earlier cases.
+        let mut rng = Rng::stream(seed, case as u64);
+        let dplan = dgen.generate(&mut rng);
+        let fplan = match coverage_arm(case) {
+            Some(p) => p,
+            None => fgen.generate(&mut rng),
+        };
+        for arm in &fplan.arms {
+            covered.insert(arm.site.clone());
+        }
+        let outcome = oracle::check_fault_resilience(&[materialize(&dplan)], &fplan);
+        if outcome.is_clean() {
+            continue;
+        }
+        let violations: Vec<String> = outcome.violations.iter().map(|v| v.to_string()).collect();
+        let fprop =
+            |f: &FaultPlan| oracle::check_fault_resilience(&[materialize(&dplan)], f).is_clean();
+        let minimal_faults = minimize(&fgen, fplan, &fprop);
+        let dprop = |p: &DesignPlan| {
+            oracle::check_fault_resilience(&[materialize(p)], &minimal_faults).is_clean()
+        };
+        let minimal_design = minimize(&dgen, dplan.clone(), &dprop);
+        let mut pair = JsonObj::new();
+        pair.insert("design", design_to_json(&materialize(&minimal_design)));
+        pair.insert("faults", minimal_faults.to_json());
+        return FaultFuzzReport {
+            seed,
+            cases,
+            violations,
+            covered,
+            minimal_json: Some(Json::Obj(pair).pretty()),
+            minimal_faults: Some(minimal_faults.render()),
+        };
+    }
+    FaultFuzzReport {
+        seed,
+        cases,
+        violations: Vec::new(),
+        covered,
+        minimal_json: None,
+        minimal_faults: None,
     }
 }
 

@@ -1,11 +1,16 @@
 //! Test infrastructure shipped with the crate: the differential oracle
-//! suite ([`oracle`]) and the seeded fuzz driver ([`fuzz`]) that replays
-//! and shrinks counterexamples.
+//! suite ([`oracle`]), the seeded fuzz driver ([`fuzz`]) that replays
+//! and shrinks counterexamples, and the deterministic fault-injection
+//! plane ([`faults`]) the robustness lanes arm against production sites.
 //!
 //! This lives in `src/` (not `tests/`) deliberately: the `rsir fuzz` CLI,
 //! the tier-1 integration tests and the scheduled CI job all share one
 //! implementation, so a counterexample found anywhere replays everywhere.
+//! (`faults` in particular *must* live in the crate: its sites are
+//! compiled into server/flow hot paths, costing one relaxed atomic load
+//! when disarmed.)
 
+pub mod faults;
 pub mod fuzz;
 pub mod oracle;
 

@@ -885,6 +885,183 @@ pub fn check_daemon_equivalence(designs: &[Design]) -> OracleOutcome {
     out
 }
 
+/// The fault-resilience invariant: with a [`FaultPlan`] armed against
+/// the daemon's production sites, **every request still terminates
+/// within its deadline with either a typed error envelope or a result
+/// byte-identical to the fault-free one-shot lane** — never a wrong
+/// answer, a hang, or a dead daemon.
+///
+/// Mechanics: the fault-free expectation is computed *before* arming
+/// (the one-shot lane, caches disabled); the plan is then armed for the
+/// daemon scope only and disarmed again before the orderly-shutdown
+/// check, so shutdown itself is fault-free. The client runs with a
+/// generous [`RetryPolicy`] — every arm fires exactly once, so the
+/// bounded injection count guarantees reconnect-and-resubmit converges.
+///
+/// Violations all report as **fault-resilience**, carrying the armed
+/// plan, which arms actually fired, and the offending response bytes.
+///
+/// [`FaultPlan`]: crate::testing::faults::FaultPlan
+/// [`RetryPolicy`]: crate::server::client::RetryPolicy
+pub fn check_fault_resilience(
+    designs: &[Design],
+    plan: &crate::testing::faults::FaultPlan,
+) -> OracleOutcome {
+    use crate::server::client::{run_batch_local, run_batch_remote, run_batch_remote_with, RetryPolicy};
+    use crate::server::protocol::{parse_line, ErrorCode};
+    use crate::server::{scratch_socket, Bind, ServeConfig, Server};
+    use crate::testing::faults;
+    use std::time::Duration;
+
+    let mut out = OracleOutcome::default();
+    if designs.is_empty() {
+        return out;
+    }
+
+    // One pipeline + one flow job per design, plus a warm resubmit of
+    // design 0 (the results-cache path is where corruption faults bite).
+    let mut lines: Vec<String> = Vec::new();
+    for (i, d) in designs.iter().enumerate() {
+        let dj = design_to_json(d).dump();
+        lines.push(format!(
+            r#"{{"id":"p{i}","type":"pipeline","params":{{"design":{dj}}}}}"#
+        ));
+        let device = if i % 2 == 0 { "u250" } else { "u280" };
+        lines.push(format!(
+            r#"{{"id":"f{i}","type":"flow","params":{{"design":{dj},"device":"{device}","sa_refine":false,"seed":7}}}}"#
+        ));
+    }
+    let dj0 = design_to_json(&designs[0]).dump();
+    lines.push(format!(
+        r#"{{"id":"p0r","type":"pipeline","params":{{"design":{dj0}}}}}"#
+    ));
+
+    // Fault-free reference, computed before arming.
+    let expected = run_batch_local(&lines);
+
+    let guard = faults::arm(plan);
+
+    let mut cfg = ServeConfig::new(Bind::Unix(scratch_socket("faults")));
+    cfg.workers = 2;
+    cfg.quiet = true;
+    let server = match Server::bind(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            drop(guard);
+            out.push("fault-resilience", format!("server failed to bind: {e:#}"));
+            return out;
+        }
+    };
+    let endpoint = server.endpoint();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // Generous but finite: enough reconnects to outlast every possible
+    // connection-killing arm in a 3-arm plan, under one hard deadline.
+    let policy = RetryPolicy {
+        attempts: 6,
+        base_delay: Duration::from_millis(10),
+        max_delay: Duration::from_millis(100),
+    };
+    let got = run_batch_remote_with(&endpoint, &lines, Duration::from_secs(300), &policy);
+
+    let fired = faults::fired_log().join(", ");
+    let context = format!(
+        "plan: [{}]; fired: [{fired}]",
+        plan.render()
+    );
+    // Disarm before the shutdown round-trip.
+    drop(guard);
+
+    // Is `have` a well-formed typed error envelope for the request `req`?
+    let typed_error = |req: &str, have: &str| -> std::result::Result<(), String> {
+        let Ok(j) = Json::parse(have) else {
+            return Err("response is not valid JSON".to_string());
+        };
+        let Some(o) = j.as_obj() else {
+            return Err("response is not a JSON object".to_string());
+        };
+        let want_id = parse_line(req).id.dump();
+        let have_id = o.get("id").cloned().unwrap_or(Json::Null).dump();
+        if have_id != want_id {
+            return Err(format!("error envelope id {have_id} != request id {want_id}"));
+        }
+        if o.get("ok") != Some(&Json::Bool(false)) {
+            return Err("non-identical response does not have \"ok\":false".to_string());
+        }
+        let code = o
+            .get("error")
+            .and_then(|e| e.as_obj())
+            .and_then(|e| e.get("code"))
+            .and_then(|c| c.as_str())
+            .unwrap_or("");
+        match ErrorCode::from_wire(code) {
+            Some(_) => Ok(()),
+            None => Err(format!("unknown error code '{code}'")),
+        }
+    };
+
+    match got {
+        Err(e) => out.push(
+            "fault-resilience",
+            format!("client batch did not terminate cleanly: {e:#} ({context})"),
+        ),
+        Ok(got) if got.len() != expected.len() => out.push(
+            "fault-resilience",
+            format!(
+                "{} responses for {} requests ({context})",
+                got.len(),
+                expected.len()
+            ),
+        ),
+        Ok(got) => {
+            for ((req, want), have) in lines.iter().zip(&expected).zip(&got) {
+                if have == want {
+                    continue;
+                }
+                if let Err(why) = typed_error(req, have) {
+                    out.push(
+                        "fault-resilience",
+                        format!(
+                            "request {}: neither byte-identical nor a typed error: {why} ({context})\n  one-shot: {want}\n  daemon:   {have}",
+                            parse_line(req).id.dump()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // The daemon must still be alive and shut down orderly — a
+    // fault-killed process or a wedged queue fails here.
+    match run_batch_remote(
+        &endpoint,
+        &[r#"{"id":"down","type":"shutdown"}"#.to_string()],
+        Duration::from_secs(30),
+    ) {
+        Ok(ack) if ack.first().map(|l| l.contains("shutting_down")) == Some(true) => {}
+        Ok(ack) => out.push(
+            "fault-resilience",
+            format!("unexpected shutdown ack after faults: {ack:?} ({context})"),
+        ),
+        Err(e) => out.push(
+            "fault-resilience",
+            format!("daemon unreachable for shutdown after faults: {e:#} ({context})"),
+        ),
+    }
+    match server_thread.join() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => out.push(
+            "fault-resilience",
+            format!("server exited with error: {e:#} ({context})"),
+        ),
+        Err(_) => out.push(
+            "fault-resilience",
+            format!("server thread panicked ({context})"),
+        ),
+    }
+    out
+}
+
 /// Deterministic fingerprint of one flow outcome: folds the post-flow
 /// design IR (compact JSON bytes) with every deterministic field of the
 /// report — baseline/optimized [`ImplReport`](crate::eda::vivado::ImplReport)

@@ -64,6 +64,12 @@ impl<K: Ord + Clone, V: Clone> Lru<K, V> {
         }
     }
 
+    /// Drop an entry (used by integrity verification to evict a
+    /// corrupted value). Does not touch the hit/miss counters.
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        self.map.remove(key).map(|(_, v)| v)
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -79,6 +85,78 @@ impl<K: Ord + Clone, V: Clone> Lru<K, V> {
             len: self.map.len(),
             cap: self.cap,
         }
+    }
+}
+
+/// FNV-1a over raw bytes: the integrity digest for [`VerifiedLru`]
+/// payloads (cheap, deterministic, and plenty to detect bit flips —
+/// this is corruption *detection*, not an adversarial MAC).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// An [`Lru`] whose entries carry a content digest, verified on every
+/// hit: a corrupted entry (bit-flipped payload or digest — injected by
+/// the fault plane or a real memory fault) is evicted and reported as a
+/// miss, so corruption degrades to a cold recompute plus a diagnostic
+/// counter instead of a wrong answer. Without corruption the hit/miss
+/// accounting is byte-identical to a plain [`Lru`].
+#[derive(Debug)]
+pub struct VerifiedLru<K: Ord + Clone, V: Clone> {
+    inner: Lru<K, (u64, V)>,
+    digest: fn(&V) -> u64,
+    corrupt_dropped: u64,
+}
+
+impl<K: Ord + Clone, V: Clone> VerifiedLru<K, V> {
+    pub fn new(cap: usize, digest: fn(&V) -> u64) -> Self {
+        VerifiedLru {
+            inner: Lru::new(cap),
+            digest,
+            corrupt_dropped: 0,
+        }
+    }
+
+    /// Lookup with verification. `inject_corrupt` is the fault plane's
+    /// hook: it simulates reading back a flipped payload (always `false`
+    /// in production paths).
+    pub fn get(&mut self, key: &K, inject_corrupt: bool) -> Option<V> {
+        let (mut stored, v) = self.inner.get(key)?;
+        if inject_corrupt {
+            stored ^= 1;
+        }
+        if (self.digest)(&v) != stored {
+            self.inner.remove(key);
+            self.corrupt_dropped += 1;
+            eprintln!("rsir: dropped corrupted cache entry (digest mismatch); recomputing cold");
+            return None;
+        }
+        Some(v)
+    }
+
+    /// Insert with a freshly computed digest; `inject_corrupt` stores a
+    /// flipped digest so the *next* hit fails verification.
+    pub fn put(&mut self, key: K, value: V, inject_corrupt: bool) {
+        let mut d = (self.digest)(&value);
+        if inject_corrupt {
+            d ^= 1;
+        }
+        self.inner.put(key, (d, value));
+    }
+
+    /// How many entries verification has evicted (the corruption
+    /// diagnostic surfaced in daemon `stats`).
+    pub fn corrupt_dropped(&self) -> u64 {
+        self.corrupt_dropped
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.stats()
     }
 }
 
@@ -135,5 +213,52 @@ mod tests {
         lru.put(1, 1);
         assert_eq!(lru.get(&1), None);
         assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn remove_drops_entry_without_counting() {
+        let mut lru: Lru<u32, u32> = Lru::new(4);
+        lru.put(1, 10);
+        assert_eq!(lru.remove(&1), Some(10));
+        assert_eq!(lru.remove(&1), None);
+        let s = lru.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+    }
+
+    fn digest_u32(v: &u32) -> u64 {
+        fnv1a64(&v.to_le_bytes())
+    }
+
+    #[test]
+    fn verified_lru_matches_plain_lru_without_corruption() {
+        let mut v: VerifiedLru<u32, u32> = VerifiedLru::new(2, digest_u32);
+        v.put(1, 10, false);
+        assert_eq!(v.get(&1, false), Some(10));
+        assert_eq!(v.get(&9, false), None);
+        let s = v.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+        assert_eq!(v.corrupt_dropped(), 0);
+    }
+
+    #[test]
+    fn verified_lru_evicts_corrupted_entries_as_misses() {
+        let mut v: VerifiedLru<u32, u32> = VerifiedLru::new(4, digest_u32);
+        // Corrupted at insert: the next get detects and evicts.
+        v.put(1, 10, true);
+        assert_eq!(v.get(&1, false), None);
+        assert_eq!(v.corrupt_dropped(), 1);
+        // Entry is gone — a clean re-insert works again.
+        v.put(1, 10, false);
+        assert_eq!(v.get(&1, false), Some(10));
+        // Corrupted read-back of a clean entry: also evicted.
+        assert_eq!(v.get(&1, true), None);
+        assert_eq!(v.corrupt_dropped(), 2);
+        assert_eq!(v.get(&1, false), None, "corrupt entry must not linger");
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
     }
 }

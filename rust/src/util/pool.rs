@@ -118,7 +118,13 @@ impl Pool {
         let nw = self.workers.min(n);
         if nw == 1 {
             // Serial fast path: identical semantics, no thread overhead.
-            return items.into_iter().map(f).collect();
+            return items
+                .into_iter()
+                .map(|item| {
+                    stall_worker();
+                    f(item)
+                })
+                .collect();
         }
 
         // One slot per job for the input (taken exactly once) and the
@@ -142,6 +148,7 @@ impl Pool {
                 let (panics, f) = (&panics, &f);
                 s.spawn(move || {
                     while let Some(i) = pop_or_steal(queues, w) {
+                        stall_worker();
                         let item = inputs[i]
                             .lock()
                             .unwrap()
@@ -184,6 +191,19 @@ impl Pool {
         F: FnOnce() + Send,
     {
         self.par_map(jobs, |job| job());
+    }
+}
+
+/// Fault site `pool.worker`: every action degrades to a delay here. The
+/// pool is panic-transparent by contract — an injected panic in its own
+/// plumbing would resume on the *caller's* thread (for the daemon, the
+/// server thread itself), which is precisely the process death the fault
+/// plane exists to rule out. Panic injection into job *bodies* instead
+/// happens at the `pool.job` site inside `server::ops::execute`, where
+/// the per-job barrier catches it.
+fn stall_worker() {
+    if crate::testing::faults::point("pool.worker").is_some() {
+        crate::testing::faults::injected_sleep();
     }
 }
 
